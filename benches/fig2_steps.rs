@@ -1,0 +1,36 @@
+//! Bench: Figure 2's three stages across reservoir sizes (the paper's
+//! headline O(N²)→O(N) claim as a measured crossover).
+//! Run: `cargo bench --bench fig2_steps [-- --quick]`
+
+use linear_reservoir::experiments::fig2;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let huge = std::env::args().any(|a| a == "--huge");
+    let sizes: Vec<usize> = if quick {
+        vec![100, 400]
+    } else if huge {
+        // the 1600/3000 points make the generation stage minutes-long
+        // (O(N³) eigendecompositions) — opt-in
+        vec![50, 100, 200, 400, 800, 1600, 3000]
+    } else {
+        vec![50, 100, 200, 400, 800]
+    };
+    let rows = fig2::run(&sizes, if quick { 1 } else { 3 }, quick).expect("fig2 run");
+    println!("\n{:>6} {:>16} {:>18} {:>14} {:>10}", "N", "stage", "method", "seconds", "ratio");
+    // ratio: normal/diagonal per size for the reservoir step
+    for r in &rows {
+        let ratio = if r.stage == "reservoir_step" && r.method == "diagonal" {
+            rows.iter()
+                .find(|x| x.n == r.n && x.stage == "reservoir_step" && x.method == "normal")
+                .map(|x| format!("{:.1}x", x.seconds / r.seconds))
+                .unwrap_or_default()
+        } else {
+            String::new()
+        };
+        println!(
+            "{:>6} {:>16} {:>18} {:>14.3e} {:>10}",
+            r.n, r.stage, r.method, r.seconds, ratio
+        );
+    }
+}

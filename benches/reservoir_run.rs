@@ -1,0 +1,53 @@
+//! Bench: full-sequence reservoir runs (T×N trajectories) — standard
+//! dense vs sparse vs diagonal engines, the end-to-end form of Table 2's
+//! compute budget. Run: `cargo bench --bench reservoir_run [-- --quick]`
+
+use linear_reservoir::bench::{bench, BenchConfig};
+use linear_reservoir::linalg::Mat;
+use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn};
+use linear_reservoir::rng::Pcg64;
+use linear_reservoir::spectral::uniform::uniform_spectrum;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+    let t_len = 1000;
+    let sizes: Vec<usize> = if quick {
+        vec![100, 400]
+    } else {
+        vec![100, 200, 400, 800, 1600]
+    };
+    let mut rng = Pcg64::seeded(1);
+    let u = Mat::randn(t_len, 1, &mut rng);
+
+    println!("full-sequence runs, T = {t_len}");
+    for &n in &sizes {
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let dense = StandardEsn::generate(config.with_connectivity(1.0));
+        let sparse = StandardEsn::generate(config.with_connectivity(0.05));
+        let mut gen_rng = Pcg64::new(2, 110);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+
+        let qbasis = QBasisEsn::from_diagonal(&diag);
+
+        let r1 = bench(&format!("dense_N{n}"), cfg, || dense.run(&u));
+        let r2 = bench(&format!("sparse05_N{n}"), cfg, || sparse.run(&u));
+        let r3 = bench(&format!("diagonal_N{n}"), cfg, || diag.run(&u));
+        let r4 = bench(&format!("qbasis_N{n}"), cfg, || qbasis.run(&u));
+        println!("{}", r1.report());
+        println!("{}", r2.report());
+        println!("{}", r3.report());
+        println!("{}", r4.report());
+        println!(
+            "  speedup qbasis vs dense: {:.1}x, vs sparse(5%): {:.1}x, vs split-plane diag: {:.2}x\n",
+            r1.per_iter.median / r4.per_iter.median,
+            r2.per_iter.median / r4.per_iter.median,
+            r3.per_iter.median / r4.per_iter.median
+        );
+    }
+}

@@ -1,0 +1,60 @@
+//! Bench: readout training — direct ridge fit vs Gram-stats reuse (the
+//! grid-search fast path), and the generalized-Tikhonov (EET) variant.
+//! Run: `cargo bench --bench ridge [-- --quick]`
+
+use linear_reservoir::bench::{bench, BenchConfig};
+use linear_reservoir::linalg::Mat;
+use linear_reservoir::readout::{fit, GramStats, Regularizer};
+use linear_reservoir::rng::Pcg64;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+    let t_len = 300;
+    let sizes: Vec<usize> = if quick { vec![100] } else { vec![100, 200, 400] };
+    let mut rng = Pcg64::seeded(3);
+
+    for &f in &sizes {
+        let x = Mat::randn(t_len, f, &mut rng);
+        let y = Mat::randn(t_len, 1, &mut rng);
+        let qtq = {
+            let q = Mat::randn(f, f, &mut rng);
+            q.transpose().matmul(&q)
+        };
+
+        let r1 = bench(&format!("fit_identity_F{f}"), cfg, || {
+            fit(&x, &y, 1e-6, true, Regularizer::Identity).unwrap()
+        });
+        let r2 = bench(&format!("fit_generalized_F{f}"), cfg, || {
+            fit(&x, &y, 1e-6, true, Regularizer::Generalized(&qtq)).unwrap()
+        });
+        let stats = GramStats::new(&x, &y);
+        let r3 = bench(&format!("gram_build_F{f}"), cfg, || GramStats::new(&x, &y));
+        let r4 = bench(&format!("gram_solve36_F{f}"), cfg, || {
+            // the grid-search inner loop: 36 (scale, α) solves on one Gram
+            let mut acc = 0.0;
+            for si in 0..3 {
+                for ai in 0..12 {
+                    let s = [1.0, 0.1, 0.01][si];
+                    let alpha = 10f64.powi(ai - 11);
+                    let r = stats.solve_scaled(alpha, s).unwrap();
+                    acc += r.w[(0, 0)];
+                }
+            }
+            acc
+        });
+        println!("{}", r1.report());
+        println!("{}", r2.report());
+        println!("{}", r3.report());
+        println!("{}", r4.report());
+        println!(
+            "  reuse speedup: 36 fits ≈ {:.2}ms direct vs {:.2}ms via Gram reuse\n",
+            36.0 * r1.per_iter.median * 1e3,
+            (r3.per_iter.median + r4.per_iter.median) * 1e3
+        );
+    }
+}

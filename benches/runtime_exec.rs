@@ -1,0 +1,52 @@
+//! Bench: the compiled-HLO request path (PJRT execute) vs the native Rust
+//! engine — the production serving comparison. Needs `make artifacts`.
+//! Run: `cargo bench --bench runtime_exec [-- --quick]`
+
+use linear_reservoir::bench::{bench, BenchConfig};
+use linear_reservoir::linalg::Mat;
+use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
+use linear_reservoir::rng::Pcg64;
+use linear_reservoir::runtime::{DiagRuntime, Runtime};
+use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
+
+fn main() {
+    if !Runtime::default_dir().join("manifest.json").exists() {
+        println!("SKIP runtime_exec: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = if quick {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+
+    let n = 100;
+    let t_len = 1000;
+    let config = EsnConfig::default().with_n(n).with_seed(6);
+    let mut rng = Pcg64::new(6, 130);
+    let spec = golden_spectrum(n, GoldenParams { sr: 0.9, sigma: 0.2 }, &mut rng);
+    let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+    let u = Mat::randn(t_len, 1, &mut rng);
+
+    let mut drt = DiagRuntime::open_default().expect("open runtime");
+    // compile warm-up
+    let _ = drt.run(&esn, &u, false).expect("hlo run");
+
+    let r_native = bench("native_diag_T1000_N100", cfg, || esn.run(&u));
+    let r_hlo = bench("hlo_diag_T1000_N100", cfg, || {
+        drt.run(&esn, &u, false).unwrap()
+    });
+    let r_hlo_assoc = bench("hlo_assoc_T1000_N100", cfg, || {
+        drt.run(&esn, &u, true).unwrap()
+    });
+    println!("{}", r_native.report());
+    println!("{}", r_hlo.report());
+    println!("{}", r_hlo_assoc.report());
+    println!(
+        "\nthroughput: native {:.0} steps/s, hlo {:.0} steps/s, hlo-assoc {:.0} steps/s",
+        t_len as f64 / r_native.per_iter.median,
+        t_len as f64 / r_hlo.per_iter.median,
+        t_len as f64 / r_hlo_assoc.per_iter.median,
+    );
+}

@@ -1,0 +1,27 @@
+//! END-TO-END DRIVER (DESIGN.md §4): the full three-layer system on a real
+//! workload. The reservoir state computation runs through the **compiled
+//! HLO artifact** (Pallas kernel → JAX graph → PJRT executable) — the
+//! production request path with Python nowhere in sight — cross-checked
+//! against the native Rust engine, trained with ridge regression, and
+//! evaluated on held-out MSO5 data. Also reports the throughput contrast
+//! against the O(N²) dense baseline.
+//!
+//! Prerequisite: `make artifacts`.
+//! Run: `cargo run --release --example e2e_mso_pipeline`
+
+use linear_reservoir::experiments::e2e;
+
+fn main() -> anyhow::Result<()> {
+    let report = e2e::run(5, 100, 0, 1e-8)?;
+    e2e::print_report(&report);
+
+    // hard assertions — this example doubles as the release gate
+    anyhow::ensure!(
+        report.hlo_native_max_diff < 1e-2,
+        "HLO/native disagreement"
+    );
+    anyhow::ensure!(report.test_rmse_hlo < 1e-3, "HLO-path model quality");
+    anyhow::ensure!(report.test_rmse_native < 1e-3, "native-path model quality");
+    println!("\ne2e pipeline OK — all layers compose.");
+    Ok(())
+}

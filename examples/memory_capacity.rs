@@ -1,0 +1,48 @@
+//! Memory-capacity scenario (paper §5.2): compare the short-term memory of
+//! the Normal baseline against the DPG distributions at spectral radius 1,
+//! printing the MC-vs-delay curve and the total capacity.
+//!
+//! Run: `cargo run --release --example memory_capacity -- [N]`
+
+use linear_reservoir::experiments::fig6;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    println!("memory capacity at N={n}, sr=1, no leak (2 seeds)\n");
+    let rows = fig6::run(&[n], 2, 1e-7, false)?;
+
+    // print a compact curve: every ~N/10 delays
+    let step = (n / 10).max(1);
+    println!("{:>7} {:>10} {:>10} {:>10} {:>10}", "delay", "normal", "uniform", "golden", "sim");
+    let mc = |method: &str, k: usize| {
+        rows.iter()
+            .find(|r| r.method == method && r.delay == k)
+            .map(|r| r.mc_mean)
+            .unwrap_or(f64::NAN)
+    };
+    let mut k = 1;
+    while k <= fig6::k_max_for(n) {
+        println!(
+            "{:>7} {:>10.3} {:>10.3} {:>10.3} {:>10.3}",
+            k,
+            mc("normal", k),
+            mc("uniform", k),
+            mc("golden", k),
+            mc("sim", k)
+        );
+        k += step;
+    }
+    println!("\ntotal capacity (Σ MC_k):");
+    for method in fig6::METHODS {
+        let total: f64 = rows
+            .iter()
+            .filter(|r| r.method == method)
+            .map(|r| r.mc_mean)
+            .sum();
+        println!("  {method:<8} {total:.1}  (bound: N = {n})");
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! MSO forecasting scenario — the paper's §5.1 workload end-to-end with
+//! model selection: run the grid search for a chosen task and method,
+//! report the winning configuration and the test RMSE, and contrast the
+//! diagonal methods against the Normal baseline.
+//!
+//! Run: `cargo run --release --example mso_forecast -- [K]`
+
+use linear_reservoir::coordinator::{GridSearch, GridSpec, MethodKind};
+
+fn main() -> anyhow::Result<()> {
+    let k: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+    println!("MSO{k} with validation-selected hyper-parameters (reduced grid)\n");
+
+    let gs = GridSearch {
+        spec: GridSpec::quick(),
+        n: 100,
+        connectivity: 1.0,
+    };
+    let methods = [
+        MethodKind::Normal,
+        MethodKind::Diagonalized,
+        MethodKind::DpgUniform,
+        MethodKind::DpgGolden { sigma: 0.0 },
+        MethodKind::DpgGolden { sigma: 0.2 },
+        MethodKind::DpgSim,
+    ];
+    println!(
+        "{:<16} {:>12} {:>12} {:>6} {:>6} {:>8} {:>9}",
+        "method", "valid RMSE", "test RMSE", "ρ", "lr", "scale", "α"
+    );
+    for method in methods {
+        let r = gs.run_mso(k, method, 0)?;
+        println!(
+            "{:<16} {:>12.3e} {:>12.3e} {:>6.2} {:>6.2} {:>8.2} {:>9.0e}",
+            method.label(),
+            r.valid_rmse,
+            r.test_rmse,
+            r.spectral_radius,
+            r.leak_rate,
+            r.input_scaling,
+            r.alpha
+        );
+    }
+    println!("\n(use `repro table2` for the full Table-1 grid over 10 seeds)");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Serving scenario: spin up the TCP prediction service with a trained
+//! MSO model, fire a batch of client requests at it, and report quality +
+//! latency — the "deploy it" story for the diagonal reservoir.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use std::sync::Arc;
+
+use linear_reservoir::readout::{fit, Regularizer};
+use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
+use linear_reservoir::rng::Pcg64;
+use linear_reservoir::server::{serve, Client, Model};
+use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
+use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
+use linear_reservoir::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    // train
+    let n = 100;
+    let config = EsnConfig::default().with_n(n).with_sr(0.9).with_seed(0);
+    let mut rng = Pcg64::new(0, 140);
+    let spec = golden_spectrum(n, GoldenParams { sr: 0.9, sigma: 0.2 }, &mut rng);
+    let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+    let task = MsoTask::new(5);
+    let splits = MsoTask::splits();
+    let feats = esn.run(&task.input_mat());
+    let x = slice_rows(&feats, splits.train.clone());
+    let y = task.target_mat(splits.train.clone());
+    let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity)?;
+    let model = Arc::new(Model { esn, readout });
+
+    // serve in the background
+    let addr = "127.0.0.1:47901";
+    let server_model = Arc::clone(&model);
+    let handle = std::thread::spawn(move || serve(server_model, addr, Some(1)));
+    std::thread::sleep(std::time::Duration::from_millis(150));
+
+    // client: batch of requests
+    let mut client = Client::connect(addr)?;
+    let requests = 50;
+    let t = Timer::start();
+    let mut last = Vec::new();
+    for _ in 0..requests {
+        last = client.predict(&task.input)?;
+    }
+    let total = t.elapsed_s();
+    println!("served {requests} predict requests of {} steps each", task.input.len());
+    println!("  mean latency : {:.2} ms/request", total / requests as f64 * 1e3);
+    println!(
+        "  throughput   : {:.0} reservoir steps/s through the service",
+        requests as f64 * task.input.len() as f64 / total
+    );
+
+    // quality check on the test span
+    let test = MsoTask::splits().test;
+    let y_test = task.target_mat(test.clone());
+    let mut sse = 0.0;
+    for (i, t_idx) in test.enumerate() {
+        let d = last[t_idx] - y_test[(i, 0)];
+        sse += d * d;
+    }
+    println!("  test RMSE    : {:.3e}", (sse / y_test.rows() as f64).sqrt());
+    drop(client);
+    handle.join().unwrap()?;
+    Ok(())
+}

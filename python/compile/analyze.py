@@ -1,0 +1,111 @@
+"""L2 perf analysis: static inspection of the lowered HLO artifacts.
+
+Reports, per artifact: instruction counts by opcode family, the number of
+fusions, while-loops, transposes/copies (layout red flags), and an analytic
+cost model — FLOPs and HBM bytes per reservoir step — used for the
+DESIGN.md §Perf roofline discussion (interpret=True wall-clock is CPU-numpy
+time, NOT a TPU proxy, so structure is what we optimize).
+
+Usage:  python -m compile.analyze [--dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+
+
+ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+)$")
+OP_RE = re.compile(r"([\w\-]+)\(")
+
+
+def count_ops(hlo_text: str) -> Counter:
+    """Count HLO opcodes: for each `name = <type> op(args…)` line, the
+    opcode is the first `word(` on the right-hand side (types/layout
+    annotations contain parens but never directly after an identifier)."""
+    counts: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = ASSIGN_RE.match(line)
+        if not m:
+            continue
+        op = OP_RE.search(m.group(1))
+        if op:
+            counts[op.group(1)] += 1
+    return counts
+
+
+def step_cost_model(slots: int, d_in: int) -> dict:
+    """Analytic per-step cost of the diagonal update (split-complex):
+
+    FLOPs: complex multiply (4 mul + 2 add) + input add (2) per slot, plus
+    the projection 2·d_in MACs per slot plane.
+    Bytes (f32): read λ (8B/slot) + state (8B) + uproj (8B), write state
+    (8B) — the memory-bound profile that makes this VPU work on TPU.
+    """
+    flops = slots * (6 + 2) + 2 * 2 * d_in * slots
+    bytes_moved = slots * (8 + 8 + 8 + 8)
+    return {
+        "flops_per_step": flops,
+        "bytes_per_step": bytes_moved,
+        "arithmetic_intensity": flops / bytes_moved,
+    }
+
+
+def analyze_dir(art_dir: str) -> list[dict]:
+    manifest = json.load(open(os.path.join(art_dir, "manifest.json")))
+    reports = []
+    for art in manifest["artifacts"]:
+        text = open(os.path.join(art_dir, art["file"])).read()
+        ops = count_ops(text)
+        report = {
+            "file": art["file"],
+            "kind": art["kind"],
+            "total_instructions": sum(ops.values()),
+            "while_loops": ops.get("while", 0),
+            "fusions": ops.get("fusion", 0),
+            "transposes": ops.get("transpose", 0),
+            "copies": ops.get("copy", 0),
+            "dots": ops.get("dot", 0),
+            "custom_calls": ops.get("custom-call", 0),
+        }
+        if art["kind"].startswith("diag_states"):
+            report["cost_model"] = step_cost_model(
+                art["dims"]["slots"], art["dims"]["d_in"]
+            )
+        reports.append(report)
+    return reports
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="../artifacts")
+    args = ap.parse_args()
+    reports = analyze_dir(args.dir)
+    for r in reports:
+        print(f"{r['file']}")
+        print(
+            f"  instrs={r['total_instructions']} while={r['while_loops']} "
+            f"fusion={r['fusions']} transpose={r['transposes']} "
+            f"copy={r['copies']} dot={r['dots']} custom-call={r['custom_calls']}"
+        )
+        if "cost_model" in r:
+            cm = r["cost_model"]
+            print(
+                f"  per-step: {cm['flops_per_step']} FLOPs, "
+                f"{cm['bytes_per_step']} B, AI={cm['arithmetic_intensity']:.2f}"
+            )
+    # red-flag summary
+    bad = [r for r in reports if r["custom_calls"] > 0]
+    if bad:
+        print("\nWARNING: custom-calls present (CPU PJRT cannot run Mosaic):")
+        for r in bad:
+            print(f"  {r['file']}")
+    else:
+        print("\nOK: no custom-calls — every artifact is plain HLO.")
+
+
+if __name__ == "__main__":
+    main()

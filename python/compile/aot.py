@@ -1,0 +1,154 @@
+"""AOT entry point: lower the L2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime loads these
+files via ``HloModuleProto::from_text_file`` and never touches Python.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shape strategy: every graph is lowered for the concrete shapes the Rust
+side needs (one executable per variant, listed in ``manifest.json``). The
+state graphs return raw split-complex state planes ``[T, S]`` with a fixed
+slot count ``S`` (padded with λ=0 slots); the Q-basis feature gather — which
+depends on the per-seed real/complex split — happens in Rust. This keeps a
+single artifact valid for *every* DPG seed of a given reservoir size.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered → XlaComputation → HLO text (return_tuple=True: the Rust
+    side always unwraps a tuple, regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# --------------------------------------------------------------------------
+# Graph catalogue. Each entry: name pattern, lower() given dims.
+# --------------------------------------------------------------------------
+
+
+def lower_diag_states(T, d_in, slots):
+    return jax.jit(model.diag_esn_states_raw).lower(
+        spec(T, d_in), spec(slots), spec(slots),
+        spec(d_in, slots), spec(d_in, slots))
+
+
+def lower_diag_states_assoc(T, d_in, slots):
+    return jax.jit(model.diag_esn_states_raw_assoc).lower(
+        spec(T, d_in), spec(slots), spec(slots),
+        spec(d_in, slots), spec(d_in, slots))
+
+
+def lower_diag_step(d_in, slots):
+    return jax.jit(model.diag_esn_step).lower(
+        spec(slots), spec(slots), spec(d_in), spec(slots), spec(slots),
+        spec(d_in, slots), spec(d_in, slots))
+
+
+def lower_readout_apply(T, n_feat, d_out):
+    fn = lambda x, w: (x @ w,)
+    return jax.jit(fn).lower(spec(T, n_feat), spec(n_feat, d_out))
+
+
+def lower_ridge_stats(T, n_feat, d_out):
+    return jax.jit(model.ridge_stats).lower(spec(T, n_feat), spec(T, d_out))
+
+
+def lower_dense_states(T, d_in, n):
+    return jax.jit(model.dense_esn_states).lower(
+        spec(T, d_in), spec(n, n), spec(d_in, n))
+
+
+CATALOGUE = {
+    "diag_states": (lower_diag_states, ("T", "d_in", "slots")),
+    "diag_states_assoc": (lower_diag_states_assoc, ("T", "d_in", "slots")),
+    "diag_step": (lower_diag_step, ("d_in", "slots")),
+    "readout_apply": (lower_readout_apply, ("T", "n_feat", "d_out")),
+    "ridge_stats": (lower_ridge_stats, ("T", "n_feat", "d_out")),
+    "dense_states": (lower_dense_states, ("T", "d_in", "n")),
+}
+
+# Default variant set: the e2e MSO pipeline (T=1000, N=100, D=1), the
+# serving step, and small shapes for the Rust integration tests.
+DEFAULT_VARIANTS = [
+    ("diag_states", dict(T=1000, d_in=1, slots=100)),
+    ("diag_states_assoc", dict(T=1000, d_in=1, slots=100)),
+    ("diag_step", dict(d_in=1, slots=100)),
+    ("readout_apply", dict(T=300, n_feat=101, d_out=1)),
+    ("ridge_stats", dict(T=300, n_feat=101, d_out=1)),
+    ("dense_states", dict(T=1000, d_in=1, n=100)),
+    # small test shapes
+    ("diag_states", dict(T=32, d_in=2, slots=16)),
+    ("diag_states_assoc", dict(T=32, d_in=2, slots=16)),
+    ("diag_step", dict(d_in=2, slots=16)),
+    ("ridge_stats", dict(T=32, n_feat=17, d_out=2)),
+    ("readout_apply", dict(T=32, n_feat=17, d_out=2)),
+    ("dense_states", dict(T=32, d_in=2, n=16)),
+]
+
+QUICK_VARIANTS = DEFAULT_VARIANTS[6:]  # tests-only set
+
+
+def artifact_name(kind: str, dims: dict) -> str:
+    _, keys = CATALOGUE[kind]
+    suffix = "_".join(f"{k}{dims[k]}" for k in keys)
+    return f"{kind}__{suffix}"
+
+
+def build(out_dir: str, variants) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for kind, dims in variants:
+        lower_fn, keys = CATALOGUE[kind]
+        name = artifact_name(kind, dims)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        lowered = lower_fn(**dims)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"kind": kind, "dims": {k: dims[k] for k in keys},
+             "file": os.path.basename(path)})
+        print(f"  wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the small test-shape artifacts")
+    args = ap.parse_args()
+    build(args.out_dir, QUICK_VARIANTS if args.quick else DEFAULT_VARIANTS)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Layer-1 Pallas kernels for the diagonal linear-reservoir recurrence.
+
+The paper's compute hot-spot (Corollary 2) is
+
+    s(t) = s(t-1) ⊙ Λ + uproj(t),      Λ ∈ ℂ^N,  uproj(t) ∈ ℂ^N
+
+i.e. an elementwise complex affine recurrence — O(N) per step instead of the
+standard reservoir's O(N²) matvec. Two kernels implement it:
+
+``diag_scan_pallas``
+    Grid-parallel over eigenvalue tiles, sequential over T *inside* the
+    tile. Every eigencomponent evolves independently (the whole point of
+    the diagonalization), so the natural TPU decomposition maps eigenvalue
+    slots onto the 128-lane axis and keeps the carried state resident in
+    VMEM while input-projection tiles stream HBM→VMEM.
+
+``assoc_scan_pallas``
+    Appendix-B parallelization across *time*: the affine maps
+    ``(a,b) : s ↦ a⊙s + b`` form a monoid under composition
+    ``(a2,b2)∘(a1,b1) = (a2·a1, a2·b1 + b2)``, so the trajectory is an
+    inclusive prefix scan computed in ⌈log₂ T⌉ Hillis–Steele passes, each
+    fully parallel over T·N.
+
+Complex numbers are split (re, im) f32 planes — Appendix A's "memory view"
+expressed as layout. Kernels MUST run with ``interpret=True``: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+Hardware adaptation (see DESIGN.md §5): the original story is CPU/GPU
+matvec-vs-elementwise; on TPU there is no MXU work left at all — the kernel
+is VPU/bandwidth-bound, which *is* the paper's O(N) claim made physical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile of eigenvalue slots handled by one program instance. 128 = TPU lane
+# width; under interpret=True it just sets the grid decomposition.
+LANE_TILE = 128
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: tile-parallel over N, sequential over T
+# ---------------------------------------------------------------------------
+
+
+def _diag_scan_kernel(lam_re_ref, lam_im_ref, u_re_ref, u_im_ref,
+                      o_re_ref, o_im_ref):
+    """One program scans T steps for a ``[LANE_TILE]`` block of slots.
+
+    The carry lives in registers/VMEM for the whole loop; each step is two
+    complex FMAs per slot. BlockSpec gives this program the full T extent of
+    its slot tile, so the HBM→VMEM streaming of ``u`` is expressed by the
+    index_map below, not inside the kernel body.
+    """
+    lam_re = lam_re_ref[...]
+    lam_im = lam_im_ref[...]
+    T = u_re_ref.shape[0]
+
+    def body(t, carry):
+        s_re, s_im = carry
+        u_re = u_re_ref[t, :]
+        u_im = u_im_ref[t, :]
+        # (s·λ) + u, split-complex
+        new_re = s_re * lam_re - s_im * lam_im + u_re
+        new_im = s_re * lam_im + s_im * lam_re + u_im
+        o_re_ref[t, :] = new_re
+        o_im_ref[t, :] = new_im
+        return new_re, new_im
+
+    zero = jnp.zeros(lam_re.shape, lam_re.dtype)
+    jax.lax.fori_loop(0, T, body, (zero, zero))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def diag_scan_pallas(lam_re, lam_im, u_re, u_im, *, tile: int = LANE_TILE):
+    """Pallas diagonal-recurrence scan. Shapes: λ [N], u [T, N] → s [T, N]².
+
+    N is padded to a multiple of ``tile`` internally; padding slots carry
+    λ=0, u=0 and are stripped before returning.
+    """
+    T, n = u_re.shape
+    n_pad = _ceil_div(n, tile) * tile
+    if n_pad != n:
+        pad = [(0, n_pad - n)]
+        lam_re = jnp.pad(lam_re, pad)
+        lam_im = jnp.pad(lam_im, pad)
+        u_re = jnp.pad(u_re, [(0, 0)] + pad)
+        u_im = jnp.pad(u_im, [(0, 0)] + pad)
+
+    grid = (n_pad // tile,)
+    lam_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    seq_spec = pl.BlockSpec((T, tile), lambda i: (0, i))
+    out_shape = [
+        jax.ShapeDtypeStruct((T, n_pad), u_re.dtype),
+        jax.ShapeDtypeStruct((T, n_pad), u_re.dtype),
+    ]
+    s_re, s_im = pl.pallas_call(
+        _diag_scan_kernel,
+        grid=grid,
+        in_specs=[lam_spec, lam_spec, seq_spec, seq_spec],
+        out_specs=[seq_spec, seq_spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(lam_re, lam_im, u_re, u_im)
+    return s_re[:, :n], s_im[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: Appendix-B parallel prefix over time (Hillis–Steele)
+# ---------------------------------------------------------------------------
+
+
+def _assoc_scan_kernel(lam_re_ref, lam_im_ref, u_re_ref, u_im_ref,
+                       o_re_ref, o_im_ref, *, steps: int):
+    """Inclusive scan over the affine-map monoid, log₂(T) doubling passes.
+
+    Each pass combines element t with element t-2^k:
+        (a, b)[t] ← (a[t]·a[t-d],  a[t]·b[t-d] + b[t])
+    After all passes b[t] = s(t) (since s(0)=0 the 'a' product is never
+    applied to a nonzero initial state) — the standard Hillis–Steele form
+    of Appendix B's "each input's echo evaluated independently".
+    """
+    T = u_re_ref.shape[0]
+    a_re = jnp.broadcast_to(lam_re_ref[...], u_re_ref.shape)
+    a_im = jnp.broadcast_to(lam_im_ref[...], u_im_ref.shape)
+    b_re = u_re_ref[...]
+    b_im = u_im_ref[...]
+
+    def pass_k(k, carry):
+        a_re, a_im, b_re, b_im = carry
+        d = 1 << k
+        idx = jnp.arange(T)
+        src = jnp.maximum(idx - d, 0)
+        valid = (idx >= d)[:, None]
+        pa_re, pa_im = a_re[src, :], a_im[src, :]
+        pb_re, pb_im = b_re[src, :], b_im[src, :]
+        # compose: new_a = a∘pa, new_b = a·pb + b   (elementwise complex)
+        na_re = jnp.where(valid, a_re * pa_re - a_im * pa_im, a_re)
+        na_im = jnp.where(valid, a_re * pa_im + a_im * pa_re, a_im)
+        nb_re = jnp.where(valid, a_re * pb_re - a_im * pb_im + b_re, b_re)
+        nb_im = jnp.where(valid, a_re * pb_im + a_im * pb_re + b_im, b_im)
+        return na_re, na_im, nb_re, nb_im
+
+    a_re, a_im, b_re, b_im = jax.lax.fori_loop(
+        0, steps, pass_k, (a_re, a_im, b_re, b_im))
+    o_re_ref[...] = b_re
+    o_im_ref[...] = b_im
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def assoc_scan_pallas(lam_re, lam_im, u_re, u_im, *, tile: int = LANE_TILE):
+    """Parallel-in-time diagonal scan (Appendix B). Same contract as
+    :func:`diag_scan_pallas`; O(T·N·log T) work, O(log T) depth."""
+    T, n = u_re.shape
+    steps = max(1, (T - 1).bit_length())
+    n_pad = _ceil_div(n, tile) * tile
+    if n_pad != n:
+        pad = [(0, n_pad - n)]
+        lam_re = jnp.pad(lam_re, pad)
+        lam_im = jnp.pad(lam_im, pad)
+        u_re = jnp.pad(u_re, [(0, 0)] + pad)
+        u_im = jnp.pad(u_im, [(0, 0)] + pad)
+
+    grid = (n_pad // tile,)
+    lam_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    seq_spec = pl.BlockSpec((T, tile), lambda i: (0, i))
+    out_shape = [
+        jax.ShapeDtypeStruct((T, n_pad), u_re.dtype),
+        jax.ShapeDtypeStruct((T, n_pad), u_re.dtype),
+    ]
+    s_re, s_im = pl.pallas_call(
+        functools.partial(_assoc_scan_kernel, steps=steps),
+        grid=grid,
+        in_specs=[lam_spec, lam_spec, seq_spec, seq_spec],
+        out_specs=[seq_spec, seq_spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(lam_re, lam_im, u_re, u_im)
+    return s_re[:, :n], s_im[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: single fused reservoir step (for the streaming/serving path)
+# ---------------------------------------------------------------------------
+
+
+def _diag_step_kernel(lam_re_ref, lam_im_ref, s_re_ref, s_im_ref,
+                      u_re_ref, u_im_ref, o_re_ref, o_im_ref):
+    """One O(N) reservoir step: o = s ⊙ λ + u (split-complex)."""
+    s_re, s_im = s_re_ref[...], s_im_ref[...]
+    l_re, l_im = lam_re_ref[...], lam_im_ref[...]
+    o_re_ref[...] = s_re * l_re - s_im * l_im + u_re_ref[...]
+    o_im_ref[...] = s_re * l_im + s_im * l_re + u_im_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def diag_step_pallas(lam_re, lam_im, s_re, s_im, u_re, u_im,
+                     *, tile: int = LANE_TILE):
+    """Single-step kernel used by the streaming engine (one token at a time,
+    e.g. generative/feedback mode where the scan cannot be batched)."""
+    n = lam_re.shape[0]
+    n_pad = _ceil_div(n, tile) * tile
+    args = [lam_re, lam_im, s_re, s_im, u_re, u_im]
+    if n_pad != n:
+        args = [jnp.pad(a, [(0, n_pad - n)]) for a in args]
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    out_shape = [jax.ShapeDtypeStruct((n_pad,), lam_re.dtype)] * 2
+    o_re, o_im = pl.pallas_call(
+        _diag_step_kernel,
+        grid=(n_pad // tile,),
+        in_specs=[spec] * 6,
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(*args)
+    return o_re[:n], o_im[:n]

@@ -1,0 +1,158 @@
+"""Pure-jnp reference oracles for the diagonal-reservoir kernels.
+
+These are the correctness ground truth for the Pallas kernels in
+``diag_scan.py``. Everything here is written in the most direct possible
+style (``jax.lax.scan`` over time) so that it is obviously equivalent to the
+paper's equations:
+
+    Corollary 2 (pointwise reservoir step, P-basis):
+        s(t) = s(t-1) ⊙ Λ + uproj(t)
+
+with complex Λ and complex projected inputs ``uproj(t) = u(t) [W_in]_P``.
+
+Complex numbers are represented as split (re, im) float arrays throughout —
+the same layout the Pallas kernels and the Rust runtime use (Appendix A's
+"memory view" expressed as explicit planes rather than pointer casts).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def complex_mul(ar, ai, br, bi):
+    """Split-complex product: (ar + i·ai) · (br + i·bi) → (re, im)."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def diag_scan_ref(lam_re, lam_im, u_re, u_im, s0_re=None, s0_im=None):
+    """Sequential reference for the diagonal recurrence.
+
+    Args:
+      lam_re, lam_im: ``[N]`` eigenvalue planes.
+      u_re, u_im:     ``[T, N]`` projected-input planes (``u(t) [W_in]_P``).
+      s0_re, s0_im:   optional ``[N]`` initial state (defaults to zero, as in
+                      the paper: ``r(0) = 0``).
+
+    Returns:
+      (s_re, s_im): ``[T, N]`` state trajectory planes, where row ``t`` is
+      the state *after* consuming input ``t`` (i.e. ``r(t+1)`` in paper
+      1-based indexing).
+    """
+    n = lam_re.shape[-1]
+    dtype = u_re.dtype
+    if s0_re is None:
+        s0_re = jnp.zeros((n,), dtype)
+    if s0_im is None:
+        s0_im = jnp.zeros((n,), dtype)
+
+    def step(carry, u_t):
+        sr, si = carry
+        ur, ui = u_t
+        pr, pi = complex_mul(sr, si, lam_re, lam_im)
+        sr, si = pr + ur, pi + ui
+        return (sr, si), (sr, si)
+
+    (_, _), (s_re, s_im) = jax.lax.scan(step, (s0_re, s0_im), (u_re, u_im))
+    return s_re, s_im
+
+
+def diag_scan_closed_form(lam_re, lam_im, u_re, u_im):
+    """Lemma 3 closed form: ``r(t) = Σ_{i≤t} uproj(i) ⊙ Λ^{t-i}``.
+
+    O(T²) — only used in tests as an independent derivation (it exercises a
+    different summation order than the scan, catching order-of-operations
+    bugs that a scan-vs-scan comparison would miss).
+    """
+    lam = (lam_re + 1j * lam_im).astype(jnp.complex64)
+    u = (u_re + 1j * u_im).astype(jnp.complex64)
+    T = u.shape[0]
+    ts = jnp.arange(T)
+    # powers[k] = Λ^k  for k in 0..T-1
+    powers = lam[None, :] ** ts[:, None].astype(jnp.complex64)
+
+    def state_at(t):
+        # Σ_{i=0..t} u[i] * Λ^(t-i)
+        w = jnp.where(ts[:, None] <= t, powers[(t - ts) % T], 0.0)
+        return jnp.sum(u * w, axis=0)
+
+    s = jax.vmap(state_at)(ts)
+    return jnp.real(s), jnp.imag(s)
+
+
+def assoc_scan_ref(lam_re, lam_im, u_re, u_im):
+    """Appendix-B reference: parallel prefix over the affine maps.
+
+    The recurrence ``s ← λ⊙s + u(t)`` composes as elementwise affine maps
+    ``(a, b): s ↦ a⊙s + b`` with combine ``(a2,b2)∘(a1,b1) = (a2a1, a2b1+b2)``
+    — associative, hence ``jax.lax.associative_scan`` applies. Returns the
+    same trajectory as :func:`diag_scan_ref`.
+    """
+    a_re = jnp.broadcast_to(lam_re, u_re.shape)
+    a_im = jnp.broadcast_to(lam_im, u_im.shape)
+
+    def combine(x, y):
+        xar, xai, xbr, xbi = x
+        yar, yai, ybr, ybi = y
+        ar, ai = complex_mul(yar, yai, xar, xai)
+        tr, ti = complex_mul(yar, yai, xbr, xbi)
+        return ar, ai, tr + ybr, ti + ybi
+
+    _, _, s_re, s_im = jax.lax.associative_scan(
+        combine, (a_re, a_im, u_re, u_im), axis=0
+    )
+    return s_re, s_im
+
+
+def project_input_ref(u, win_re, win_im):
+    """``uproj(t) = u(t) [W_in]_P`` as two real matmuls. u: [T, D_in]."""
+    return u @ win_re, u @ win_im
+
+
+def qbasis_features_ref(s_re, s_im, n_real):
+    """Map split-complex P-basis states to the real Q-basis feature layout.
+
+    Slot convention (shared with spectral generators and the Rust side):
+      * slots ``0..n_real``            — real eigenvalues (imag plane ≡ 0),
+      * slots ``n_real..n_real+n_cpx`` — one member of each conjugate pair.
+
+    Q-basis features (Appendix A): ``[s_re(real slots) | re,im interleaved
+    per complex slot]`` — exactly N real numbers for an N-dim reservoir,
+    where ``N = n_real + 2·n_cpx`` and the slot count is ``n_real + n_cpx``.
+    """
+    T = s_re.shape[0]
+    real_part = s_re[:, :n_real]
+    cr = s_re[:, n_real:]
+    ci = s_im[:, n_real:]
+    inter = jnp.stack([cr, ci], axis=-1).reshape(T, -1)
+    return jnp.concatenate([real_part, inter], axis=1)
+
+
+def esn_forward_ref(u, lam_re, lam_im, win_re, win_im, n_real, w_out, bias):
+    """Full L2 reference: project → scan → Q-features → readout.
+
+    ``w_out``: [N, D_out] real (Q-basis readout), ``bias``: [D_out].
+    Returns (y [T, D_out], feats [T, N]).
+    """
+    ur, ui = project_input_ref(u, win_re, win_im)
+    s_re, s_im = diag_scan_ref(lam_re, lam_im, ur, ui)
+    feats = qbasis_features_ref(s_re, s_im, n_real)
+    return feats @ w_out + bias, feats
+
+
+def dense_esn_ref(u, w, w_in):
+    """Standard (un-diagonalized) linear ESN: r(t) = r(t-1)W + u(t)W_in.
+
+    Used by tests to validate that the diagonal path reproduces the
+    standard dynamics when (Λ, P) come from an actual eigendecomposition
+    (the EWT equivalence, Theorem 1).
+    """
+    n = w.shape[0]
+
+    def step(r, u_t):
+        r = r @ w + u_t @ w_in
+        return r, r
+
+    _, rs = jax.lax.scan(step, jnp.zeros((n,), u.dtype), u)
+    return rs

@@ -1,0 +1,130 @@
+"""Layer-2 JAX compute graphs for the diagonal linear reservoir.
+
+Each public function here is a *whole* jit-able graph that ``aot.py`` lowers
+once to HLO text; the Rust runtime (``rust/src/runtime``) loads, compiles
+(PJRT CPU) and executes them on the request path. Python never runs at
+inference time.
+
+Graphs
+------
+``diag_esn_states``   u [T,D_in] → Q-basis features [T,N]
+    input projection (2 real matmuls) → L1 Pallas scan → Q-feature gather.
+``diag_esn_forward``  … plus readout application → (y [T,D_out], feats)
+``diag_esn_states_assoc``  same as states but through the Appendix-B
+    parallel-prefix kernel (ablation artifact).
+``ridge_stats``       features X [T,N'], targets Y [T,D] → (XᵀX, XᵀY)
+    the O(T·N'²) half of ridge training, so the heavy accumulation also
+    runs through XLA; the Rust side does the (tiny) regularized solve.
+``diag_esn_step``     streaming single step for the serving path.
+
+Q-basis feature layout (shared contract with ``kernels/ref.py``, the
+spectral generators in Rust, and the readout): ``n_real`` real-eigenvalue
+components first, then (re, im) interleaved per complex-conjugate pair;
+``N = n_real + 2·n_cpx`` and the kernel scans ``n_slots = n_real + n_cpx``
+complex slots.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import diag_scan as k
+
+
+def _qbasis_features(s_re, s_im, n_real: int):
+    """[T, n_slots]² split-complex states → [T, N] real Q-basis features."""
+    T = s_re.shape[0]
+    real_part = s_re[:, :n_real]
+    cr = s_re[:, n_real:]
+    ci = s_im[:, n_real:]
+    inter = jnp.stack([cr, ci], axis=-1).reshape(T, -1)
+    return jnp.concatenate([real_part, inter], axis=1)
+
+
+def diag_esn_states(u, lam_re, lam_im, win_re, win_im, *, n_real: int,
+                    scan=k.diag_scan_pallas):
+    """Project inputs into the eigenbasis, scan, return Q-basis features.
+
+    Args:
+      u:       [T, D_in] real input sequence.
+      lam_*:   [n_slots] eigenvalue planes (one slot per real eigenvalue or
+               conjugate pair; conjugates implicit).
+      win_*:   [D_in, n_slots] transformed input weights ``[W_in]_P``.
+      n_real:  number of real-eigenvalue slots (static).
+
+    Returns: [T, N] real features, N = n_real + 2·(n_slots - n_real).
+    """
+    u_re = u @ win_re
+    u_im = u @ win_im
+    s_re, s_im = scan(lam_re, lam_im, u_re, u_im)
+    return _qbasis_features(s_re, s_im, n_real)
+
+
+def diag_esn_states_assoc(u, lam_re, lam_im, win_re, win_im, *, n_real: int):
+    """Appendix-B variant: states through the parallel-prefix kernel."""
+    return diag_esn_states(u, lam_re, lam_im, win_re, win_im,
+                           n_real=n_real, scan=k.assoc_scan_pallas)
+
+
+def diag_esn_states_raw(u, lam_re, lam_im, win_re, win_im,
+                        scan=k.diag_scan_pallas):
+    """AOT variant of :func:`diag_esn_states` that returns the raw
+    split-complex planes ``(s_re, s_im)`` [T, S] *without* the Q-feature
+    gather. The gather depends on the per-seed real/complex split
+    (``n_real``); deferring it to Rust lets one HLO artifact serve every
+    DPG seed of a given reservoir size (see aot.py)."""
+    u_re = u @ win_re
+    u_im = u @ win_im
+    return scan(lam_re, lam_im, u_re, u_im)
+
+
+def diag_esn_states_raw_assoc(u, lam_re, lam_im, win_re, win_im):
+    """Appendix-B parallel-prefix version of :func:`diag_esn_states_raw`."""
+    return diag_esn_states_raw(u, lam_re, lam_im, win_re, win_im,
+                               scan=k.assoc_scan_pallas)
+
+
+def diag_esn_forward(u, lam_re, lam_im, win_re, win_im, w_out, b_out,
+                     *, n_real: int):
+    """Full inference graph: states + readout ``y = X·W_out + b``.
+
+    w_out: [N, D_out] real Q-basis readout weights, b_out: [D_out].
+    Returns (y [T, D_out], feats [T, N]).
+    """
+    feats = diag_esn_states(u, lam_re, lam_im, win_re, win_im, n_real=n_real)
+    return feats @ w_out + b_out, feats
+
+
+def ridge_stats(x, y):
+    """Gram accumulation for ridge training: (XᵀX [N',N'], XᵀY [N',D]).
+
+    Accumulates in f32; the Rust side adds the generalized Tikhonov term
+    ``α·diag(I, QᵀQ)`` (Theorem 1 (iv)) and Cholesky-solves.
+    """
+    return x.T @ x, x.T @ y
+
+
+def diag_esn_step(s_re, s_im, u, lam_re, lam_im, win_re, win_im):
+    """Streaming step for serving: one input vector u [D_in] → next state."""
+    u_re = u @ win_re
+    u_im = u @ win_im
+    return k.diag_step_pallas(lam_re, lam_im, s_re, s_im, u_re, u_im)
+
+
+# ---------------------------------------------------------------------------
+# Baseline graph (standard dense linear ESN) — used by the equivalence tests
+# and by the fig2 HLO-path timing comparison.
+# ---------------------------------------------------------------------------
+
+
+def dense_esn_states(u, w, w_in):
+    """Standard linear reservoir r(t) = r(t-1)·W + u(t)·W_in, O(N²)/step."""
+    n = w.shape[0]
+
+    def step(r, u_t):
+        r = r @ w + u_t @ w_in
+        return r, r
+
+    _, rs = jax.lax.scan(step, jnp.zeros((n,), u.dtype), u)
+    return rs

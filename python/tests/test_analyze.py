@@ -1,0 +1,43 @@
+"""Tests for the HLO structure analyzer (compile.analyze)."""
+
+import tempfile
+
+from compile import analyze, aot
+
+
+def test_count_ops_basic():
+    hlo = """HloModule m
+ENTRY main {
+  %p0 = f32[4]{0} parameter(0)
+  %c = f32[4]{0} constant({1, 2, 3, 4})
+  %a = f32[4]{0} add(%p0, %c)
+  ROOT %t = (f32[4]{0}) tuple(%a)
+}
+"""
+    ops = analyze.count_ops(hlo)
+    assert ops["parameter"] == 1
+    assert ops["add"] == 1
+    assert ops["tuple"] == 1
+
+
+def test_cost_model_scaling():
+    small = analyze.step_cost_model(10, 1)
+    big = analyze.step_cost_model(100, 1)
+    # O(N): flops and bytes scale linearly with slots
+    assert big["flops_per_step"] == 10 * small["flops_per_step"]
+    assert big["bytes_per_step"] == 10 * small["bytes_per_step"]
+    # memory-bound: arithmetic intensity well under 1 FLOP/byte × 10
+    assert big["arithmetic_intensity"] < 2.0
+
+
+def test_analyze_dir_on_fresh_artifacts():
+    with tempfile.TemporaryDirectory() as d:
+        aot.build(d, [("diag_states", dict(T=8, d_in=1, slots=4)),
+                      ("readout_apply", dict(T=8, n_feat=5, d_out=1))])
+        reports = analyze.analyze_dir(d)
+        assert len(reports) == 2
+        states = next(r for r in reports if r["kind"] == "diag_states")
+        # interpret-mode Pallas must lower to plain HLO
+        assert states["custom_calls"] == 0
+        assert states["total_instructions"] > 10
+        assert "cost_model" in states

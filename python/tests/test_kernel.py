@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the CORE correctness signal for the compiled hot path: every state
+the Rust runtime ever computes flows through one of these kernels. The
+hypothesis sweeps cover shapes (T, N, D_in), dtype edge magnitudes (|λ|→1),
+degenerate sizes (T=1, N=1), pure-real and pure-imaginary spectra, and
+nonzero initial states for the single-step kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import diag_scan as ds
+from compile.kernels import ref
+
+RNG = np.random.default_rng
+
+
+def make_case(seed, T, n, max_mod=0.99):
+    """Random split-complex λ inside the disk of radius max_mod + inputs."""
+    rng = RNG(seed)
+    mod = rng.uniform(0.0, max_mod, n)
+    ang = rng.uniform(0.0, 2 * np.pi, n)
+    lam_re = (mod * np.cos(ang)).astype(np.float32)
+    lam_im = (mod * np.sin(ang)).astype(np.float32)
+    u_re = rng.normal(size=(T, n)).astype(np.float32)
+    u_im = rng.normal(size=(T, n)).astype(np.float32)
+    return lam_re, lam_im, u_re, u_im
+
+
+def rel_err(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    scale = max(1.0, np.abs(b).max())
+    return np.abs(a - b).max() / scale
+
+
+# ---------------------------------------------------------------------------
+# references agree with each other (sanity of the oracle itself)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,n", [(1, 1), (2, 3), (17, 5), (64, 33)])
+def test_refs_mutually_consistent(T, n):
+    case = make_case(0, T, n)
+    a = ref.diag_scan_ref(*case)
+    b = ref.assoc_scan_ref(*case)
+    c = ref.diag_scan_closed_form(*case)
+    assert rel_err(a[0], b[0]) < 1e-4 and rel_err(a[1], b[1]) < 1e-4
+    assert rel_err(a[0], c[0]) < 1e-3 and rel_err(a[1], c[1]) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Pallas sequential kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    T=st.integers(1, 96),
+    n=st.integers(1, 200),
+)
+def test_diag_scan_pallas_matches_ref(seed, T, n):
+    case = make_case(seed, T, n)
+    want = ref.diag_scan_ref(*case)
+    got = ds.diag_scan_pallas(*case)
+    assert rel_err(got[0], want[0]) < 1e-5
+    assert rel_err(got[1], want[1]) < 1e-5
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128, 256])
+def test_diag_scan_tile_invariance(tile):
+    case = make_case(7, 40, 130)
+    want = ref.diag_scan_ref(*case)
+    got = ds.diag_scan_pallas(*case, tile=tile)
+    assert rel_err(got[0], want[0]) < 1e-5
+
+
+def test_diag_scan_pure_real_spectrum_keeps_zero_imag():
+    rng = RNG(3)
+    n, T = 24, 50
+    lam_re = rng.uniform(-0.9, 0.9, n).astype(np.float32)
+    lam_im = np.zeros(n, np.float32)
+    u_re = rng.normal(size=(T, n)).astype(np.float32)
+    u_im = np.zeros((T, n), np.float32)
+    s_re, s_im = ds.diag_scan_pallas(lam_re, lam_im, u_re, u_im)
+    assert np.abs(np.asarray(s_im)).max() == 0.0
+    # real slots must follow the scalar recurrence exactly
+    want = ref.diag_scan_ref(lam_re, lam_im, u_re, u_im)
+    assert rel_err(s_re, want[0]) < 1e-6
+
+
+def test_diag_scan_unit_modulus_rotation():
+    """|λ|=1 pure rotation: |s(t)| of an impulse response stays 1."""
+    n = 8
+    ang = np.linspace(0.1, 3.0, n)
+    lam_re = np.cos(ang).astype(np.float32)
+    lam_im = np.sin(ang).astype(np.float32)
+    T = 200
+    u_re = np.zeros((T, n), np.float32)
+    u_im = np.zeros((T, n), np.float32)
+    u_re[0] = 1.0
+    s_re, s_im = ds.diag_scan_pallas(lam_re, lam_im, u_re, u_im)
+    mod = np.sqrt(np.asarray(s_re) ** 2 + np.asarray(s_im) ** 2)
+    np.testing.assert_allclose(mod[-1], 1.0, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas associative-scan kernel (Appendix B) vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    T=st.integers(1, 80),
+    n=st.integers(1, 150),
+)
+def test_assoc_scan_pallas_matches_ref(seed, T, n):
+    case = make_case(seed, T, n, max_mod=0.95)
+    want = ref.diag_scan_ref(*case)
+    got = ds.assoc_scan_pallas(*case)
+    assert rel_err(got[0], want[0]) < 1e-4
+    assert rel_err(got[1], want[1]) < 1e-4
+
+
+@pytest.mark.parametrize("T", [1, 2, 3, 4, 7, 8, 9, 31, 32, 33])
+def test_assoc_scan_power_of_two_boundaries(T):
+    case = make_case(11, T, 20)
+    want = ref.diag_scan_ref(*case)
+    got = ds.assoc_scan_pallas(*case)
+    assert rel_err(got[0], want[0]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# single-step kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 300))
+def test_diag_step_pallas(seed, n):
+    rng = RNG(seed)
+    lam_re, lam_im, u_re, u_im = make_case(seed, 1, n)
+    s_re = rng.normal(size=n).astype(np.float32)
+    s_im = rng.normal(size=n).astype(np.float32)
+    o_re, o_im = ds.diag_step_pallas(lam_re, lam_im, s_re, s_im,
+                                     u_re[0], u_im[0])
+    want_re = s_re * lam_re - s_im * lam_im + u_re[0]
+    want_im = s_re * lam_im + s_im * lam_re + u_im[0]
+    assert rel_err(o_re, want_re) < 1e-6
+    assert rel_err(o_im, want_im) < 1e-6
+
+
+def test_step_iterated_equals_scan():
+    """T applications of the step kernel == one scan kernel call."""
+    T, n = 12, 40
+    lam_re, lam_im, u_re, u_im = make_case(21, T, n)
+    s_re = np.zeros(n, np.float32)
+    s_im = np.zeros(n, np.float32)
+    for t in range(T):
+        s_re, s_im = ds.diag_step_pallas(lam_re, lam_im,
+                                         np.asarray(s_re), np.asarray(s_im),
+                                         u_re[t], u_im[t])
+    want = ds.diag_scan_pallas(lam_re, lam_im, u_re, u_im)
+    assert rel_err(s_re, np.asarray(want[0])[-1]) < 1e-5
+    assert rel_err(s_im, np.asarray(want[1])[-1]) < 1e-5

@@ -1,0 +1,135 @@
+//! Timing harness (criterion is not in the offline registry). Used by the
+//! `benches/` targets (`harness = false`) and the Fig-2 experiment driver.
+//!
+//! Protocol per benchmark: warm up for `warmup` iterations, then run
+//! batches until `min_time` elapses (at least `min_samples` batches),
+//! reporting per-iteration summary statistics.
+
+use crate::util::stats::Summary;
+use crate::util::Timer;
+
+/// Configuration for a benchmark run.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warm-up iterations (excluded from stats).
+    pub warmup_iters: usize,
+    /// Minimum total measured wall time in seconds.
+    pub min_time_s: f64,
+    /// Minimum number of recorded samples.
+    pub min_samples: usize,
+    /// Iterations folded into one sample (for very fast bodies).
+    pub batch: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_time_s: 0.25,
+            min_samples: 10,
+            batch: 1,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Quick preset for CI-style runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_time_s: 0.05,
+            min_samples: 5,
+            batch: 1,
+        }
+    }
+}
+
+/// Result of a benchmark: per-iteration seconds.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub per_iter: Summary,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Format like `name  mean ± std  (median, n)`.
+    pub fn report(&self) -> String {
+        use crate::util::fmt_duration as d;
+        format!(
+            "{:<44} {:>12} ± {:>10}  (median {:>12}, n={})",
+            self.name,
+            d(self.per_iter.mean),
+            d(self.per_iter.std),
+            d(self.per_iter.median),
+            self.per_iter.n
+        )
+    }
+}
+
+/// Run a benchmark over `body`. The closure result is black-boxed to keep
+/// the optimizer honest.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut body: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(body());
+    }
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    while samples.len() < cfg.min_samples || total.elapsed_s() < cfg.min_time_s {
+        let t = Timer::start();
+        for _ in 0..cfg.batch {
+            std::hint::black_box(body());
+        }
+        samples.push(t.elapsed_s() / cfg.batch as f64);
+        if samples.len() > 1_000_000 {
+            break; // safety valve
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        per_iter: Summary::of(&samples),
+        samples,
+    }
+}
+
+/// Measure one-shot setup cost (e.g. generation steps that cannot be
+/// repeated cheaply): runs `body` exactly `reps` times, each timed.
+pub fn bench_oneshot<T>(name: &str, reps: usize, mut body: impl FnMut() -> T) -> BenchResult {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        std::hint::black_box(body());
+        samples.push(t.elapsed_s());
+    }
+    BenchResult {
+        name: name.to_string(),
+        per_iter: Summary::of(&samples),
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let r = bench("noop", BenchConfig::quick(), || 1 + 1);
+        assert!(r.per_iter.n >= 5);
+        assert!(r.per_iter.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_oneshot_counts() {
+        let r = bench_oneshot("sleepless", 4, || std::hint::black_box(42));
+        assert_eq!(r.per_iter.n, 4);
+    }
+
+    #[test]
+    fn report_formats() {
+        let r = bench("fmt", BenchConfig::quick(), || ());
+        let line = r.report();
+        assert!(line.contains("fmt"));
+        assert!(line.contains("median"));
+    }
+}

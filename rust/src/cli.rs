@@ -1,0 +1,129 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline registry).
+//!
+//! Grammar: `repro <subcommand> [--key value]... [--flag]...`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it
+            .next()
+            .ok_or_else(|| anyhow!("missing subcommand (try `repro help`)"))?;
+        if subcommand.starts_with("--") {
+            bail!("expected a subcommand before options, got {subcommand:?}");
+        }
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --option, got {tok:?}"))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    opts.insert(key, it.next().unwrap());
+                }
+                _ => flags.push(key),
+            }
+        }
+        Ok(Self {
+            subcommand,
+            opts,
+            flags,
+        })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects a float: {e}")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse("table2 --tasks 1,2,3 --seeds 10 --quick").unwrap();
+        assert_eq!(a.subcommand, "table2");
+        assert_eq!(a.get("tasks"), Some("1,2,3"));
+        assert_eq!(a.get_usize("seeds", 0).unwrap(), 10);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_and_types() {
+        let a = parse("fig6 --alpha 1e-7").unwrap();
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 1e-7);
+        assert_eq!(a.get_usize("n", 100).unwrap(), 100);
+        assert_eq!(a.get_str("out", "results"), "results");
+    }
+
+    #[test]
+    fn rejects_option_without_subcommand() {
+        assert!(parse("--bad first").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --n abc").unwrap();
+        assert!(a.get_usize("n", 1).is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Config-file experiment runner: a declarative JSON description of a
+//! single train-and-evaluate experiment, so downstream users can drive the
+//! framework without writing Rust (`repro run --config exp.json`).
+//!
+//! ```json
+//! {
+//!   "task":      {"kind": "mso", "k": 5},            // | {"kind":"narma","len":2000}
+//!   "method":    {"kind": "dpg_golden", "sigma": 0.2}, // | normal | diagonalized
+//!                                                      // | dpg_uniform | dpg_sim
+//!   "reservoir": {"n": 100, "spectral_radius": 0.9, "leak_rate": 1.0,
+//!                 "input_scaling": 1.0, "connectivity": 1.0},
+//!   "train":     {"alpha": 1e-8, "washout": 100, "train_end": 700},
+//!   "seed": 0
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::metrics::{nrmse, rmse};
+use crate::readout::{fit, Regularizer};
+use crate::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+use crate::rng::Pcg64;
+use crate::spectral::golden::{golden_spectrum, GoldenParams};
+use crate::spectral::sim::sim_spectrum;
+use crate::spectral::uniform::uniform_spectrum;
+use crate::tasks::mso::slice_rows;
+use crate::util::json::{parse, Json};
+
+/// Parsed experiment description.
+pub struct ExperimentSpec {
+    pub task: TaskSpec,
+    pub method: String,
+    pub sigma: f64,
+    pub config: EsnConfig,
+    pub alpha: f64,
+    pub washout: usize,
+    pub train_end: usize,
+}
+
+pub enum TaskSpec {
+    Mso { k: usize },
+    Narma { len: usize },
+}
+
+/// Outcome of a config run.
+pub struct ExperimentResult {
+    pub test_rmse: f64,
+    pub test_nrmse: f64,
+    pub train_rows: usize,
+    pub test_rows: usize,
+}
+
+impl ExperimentSpec {
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = parse(text).context("parsing experiment config")?;
+        let get = |path: &[&str]| -> Option<&Json> {
+            let mut cur = &v;
+            for p in path {
+                cur = cur.get(p)?;
+            }
+            Some(cur)
+        };
+        let num = |path: &[&str], default: f64| -> f64 {
+            get(path).and_then(Json::as_f64).unwrap_or(default)
+        };
+
+        let task = match get(&["task", "kind"]).and_then(Json::as_str) {
+            Some("mso") => TaskSpec::Mso {
+                k: num(&["task", "k"], 5.0) as usize,
+            },
+            Some("narma") => TaskSpec::Narma {
+                len: num(&["task", "len"], 2000.0) as usize,
+            },
+            other => bail!("unknown task kind {other:?}"),
+        };
+        let method = get(&["method", "kind"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing method.kind"))?
+            .to_string();
+        let sigma = num(&["method", "sigma"], 0.0);
+        let config = EsnConfig::default()
+            .with_n(num(&["reservoir", "n"], 100.0) as usize)
+            .with_sr(num(&["reservoir", "spectral_radius"], 0.9))
+            .with_leak(num(&["reservoir", "leak_rate"], 1.0))
+            .with_input_scaling(num(&["reservoir", "input_scaling"], 1.0))
+            .with_connectivity(num(&["reservoir", "connectivity"], 1.0))
+            .with_seed(num(&["seed"], 0.0) as u64);
+        Ok(Self {
+            task,
+            method,
+            sigma,
+            config,
+            alpha: num(&["train", "alpha"], 1e-8),
+            washout: num(&["train", "washout"], 100.0) as usize,
+            train_end: num(&["train", "train_end"], 700.0) as usize,
+        })
+    }
+
+    /// Build, run, train, evaluate.
+    pub fn execute(&self) -> Result<ExperimentResult> {
+        let (input, target): (Vec<f64>, Vec<f64>) = match self.task {
+            TaskSpec::Mso { k } => {
+                let t = crate::tasks::mso::MsoTask::new(k);
+                (t.input, t.target)
+            }
+            TaskSpec::Narma { len } => {
+                let t = crate::tasks::narma::NarmaTask::new(len, self.config.seed);
+                let target = t.target.clone();
+                (t.input, target)
+            }
+        };
+        let t_total = input.len();
+        anyhow::ensure!(
+            self.washout < self.train_end && self.train_end < t_total,
+            "washout < train_end < {t_total} violated"
+        );
+        let u = Mat::from_rows(t_total, 1, &input);
+
+        let states = self.build_states(&u)?;
+        let train = self.washout..self.train_end;
+        let test = self.train_end..t_total;
+        let x_train = slice_rows(&states, train.clone());
+        let y_train = Mat::from_rows(train.len(), 1, &target[train.clone()]);
+        let readout = fit(&x_train, &y_train, self.alpha, true, Regularizer::Identity)?;
+        let x_test = slice_rows(&states, test.clone());
+        let y_test = Mat::from_rows(test.len(), 1, &target[test.clone()]);
+        let pred = readout.predict(&x_test);
+        Ok(ExperimentResult {
+            test_rmse: rmse(&pred, &y_test),
+            test_nrmse: nrmse(&pred, &y_test),
+            train_rows: train.len(),
+            test_rows: test.len(),
+        })
+    }
+
+    fn build_states(&self, u: &Mat) -> Result<Mat> {
+        let cfg = &self.config;
+        let n = cfg.n;
+        Ok(match self.method.as_str() {
+            "normal" => StandardEsn::generate(*cfg).run(u),
+            "diagonalized" => {
+                let esn = StandardEsn::generate(*cfg);
+                DiagonalEsn::from_standard(&esn)?.run(u)
+            }
+            "dpg_uniform" => {
+                let mut rng = Pcg64::new(cfg.seed, 10);
+                let spec = uniform_spectrum(n, cfg.spectral_radius, &mut rng);
+                DiagonalEsn::from_dpg(spec, cfg, &mut rng).run(u)
+            }
+            "dpg_golden" => {
+                let mut rng = Pcg64::new(cfg.seed, 10);
+                let spec = golden_spectrum(
+                    n,
+                    GoldenParams {
+                        sr: cfg.spectral_radius,
+                        sigma: self.sigma,
+                    },
+                    &mut rng,
+                );
+                DiagonalEsn::from_dpg(spec, cfg, &mut rng).run(u)
+            }
+            "dpg_sim" => {
+                let mut rng = Pcg64::new(cfg.seed, 10);
+                let spec =
+                    sim_spectrum(n, cfg.connectivity, cfg.spectral_radius, &mut rng);
+                DiagonalEsn::from_dpg(spec, cfg, &mut rng).run(u)
+            }
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "task": {"kind": "mso", "k": 2},
+      "method": {"kind": "dpg_golden", "sigma": 0.0},
+      "reservoir": {"n": 60, "spectral_radius": 0.9},
+      "train": {"alpha": 1e-9, "washout": 100, "train_end": 700},
+      "seed": 1
+    }"#;
+
+    #[test]
+    fn parses_and_runs() {
+        let spec = ExperimentSpec::from_json_str(SAMPLE).unwrap();
+        assert_eq!(spec.config.n, 60);
+        let r = spec.execute().unwrap();
+        assert!(r.test_rmse < 1e-3, "rmse {}", r.test_rmse);
+        assert_eq!(r.train_rows, 600);
+        assert_eq!(r.test_rows, 300);
+    }
+
+    #[test]
+    fn every_method_runs_from_config() {
+        for method in ["normal", "diagonalized", "dpg_uniform", "dpg_sim"] {
+            let text = SAMPLE.replace("dpg_golden", method);
+            let spec = ExperimentSpec::from_json_str(&text).unwrap();
+            let r = spec.execute().unwrap();
+            assert!(r.test_rmse < 1e-2, "{method}: {}", r.test_rmse);
+        }
+    }
+
+    #[test]
+    fn narma_from_config() {
+        let text = r#"{
+          "task": {"kind": "narma", "len": 1500},
+          "method": {"kind": "normal"},
+          "reservoir": {"n": 80, "spectral_radius": 0.95},
+          "train": {"alpha": 1e-6, "washout": 200, "train_end": 1000},
+          "seed": 2
+        }"#;
+        let r = ExperimentSpec::from_json_str(text).unwrap().execute().unwrap();
+        assert!(r.test_nrmse < 1.0, "nrmse {}", r.test_nrmse);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ExperimentSpec::from_json_str("{}").is_err());
+        let bad_task = SAMPLE.replace("mso", "lorenz");
+        assert!(ExperimentSpec::from_json_str(&bad_task).is_err());
+        let bad_split = SAMPLE.replace("700", "50");
+        let spec = ExperimentSpec::from_json_str(&bad_split).unwrap();
+        assert!(spec.execute().is_err());
+    }
+}

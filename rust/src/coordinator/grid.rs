@@ -1,0 +1,411 @@
+//! Grid-search orchestrator: the paper's model-selection protocol
+//! (Table 1 grid, validation-selected, test-reported — Table 2).
+//!
+//! Scheduling exploits the linear-system structure exactly as §5.1
+//! describes: per (seed, method, ρ, lr) the reservoir trajectory is
+//! computed ONCE at unit input scaling; the input-scaling sweep reuses it
+//! via `X(s·W_in) = s·X(W_in)` (Theorem 5 / D_in = 1 linearity) and the α
+//! sweep reuses the Gram statistics — `|scales|·|alphas|` ridge solves per
+//! trajectory instead of `|scales|·|alphas|` full re-runs (×36 with the
+//! paper grid).
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::metrics::rmse;
+use crate::readout::{predict_scaled, GramStats};
+use crate::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+use crate::rng::Pcg64;
+use crate::spectral::eigvecs::random_eigvecs;
+use crate::spectral::golden::{golden_spectrum, GoldenParams};
+use crate::spectral::sim::sim_spectrum;
+use crate::spectral::uniform::uniform_spectrum;
+use crate::spectral::Spectrum;
+use crate::tasks::mso::{slice_rows, MsoTask};
+
+/// The six Table-2 methods.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MethodKind {
+    /// Standard linear ESN with an explicit `W` (§2).
+    Normal,
+    /// EET: the SAME `W` as Normal, diagonalized; readout trained in the
+    /// eigenbasis (§4.3).
+    Diagonalized,
+    /// DPG with Algorithm-1 eigenvalues.
+    DpgUniform,
+    /// DPG with Algorithm-3 eigenvalues (σ = 0 → deterministic Golden).
+    DpgGolden { sigma: f64 },
+    /// DPG with eigenvalues of a real random matrix + random eigenvectors.
+    DpgSim,
+}
+
+impl MethodKind {
+    pub fn label(&self) -> String {
+        match self {
+            MethodKind::Normal => "normal".into(),
+            MethodKind::Diagonalized => "diagonalized".into(),
+            MethodKind::DpgUniform => "uniform".into(),
+            MethodKind::DpgGolden { sigma } if *sigma == 0.0 => "golden".into(),
+            MethodKind::DpgGolden { sigma } => format!("noisy_golden_{sigma}"),
+            MethodKind::DpgSim => "sim".into(),
+        }
+    }
+
+    /// The paper's Table-2 column set.
+    pub fn table2_set() -> Vec<MethodKind> {
+        vec![
+            MethodKind::Normal,
+            MethodKind::Diagonalized,
+            MethodKind::DpgUniform,
+            MethodKind::DpgGolden { sigma: 0.0 },
+            MethodKind::DpgGolden { sigma: 0.2 },
+            MethodKind::DpgSim,
+        ]
+    }
+}
+
+/// Hyper-parameter grid (Table 1).
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub input_scalings: Vec<f64>,
+    pub leak_rates: Vec<f64>,
+    pub spectral_radii: Vec<f64>,
+    pub alphas: Vec<f64>,
+}
+
+impl GridSpec {
+    /// The exact Table-1 grid (3 × 6 × 6 × 12 = 1296 configurations).
+    pub fn paper_table1() -> Self {
+        Self {
+            input_scalings: vec![0.01, 0.1, 1.0],
+            leak_rates: vec![0.1, 0.3, 0.5, 0.7, 0.9, 1.0],
+            spectral_radii: vec![0.1, 0.3, 0.5, 0.7, 0.9, 1.0],
+            alphas: (0..12).map(|e| 10f64.powi(e - 11)).collect(),
+        }
+    }
+
+    /// Reduced grid for tests / smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            input_scalings: vec![0.1, 1.0],
+            leak_rates: vec![0.5, 1.0],
+            spectral_radii: vec![0.9, 1.0],
+            alphas: vec![1e-8, 1e-4, 1e-1],
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.input_scalings.len()
+            * self.leak_rates.len()
+            * self.spectral_radii.len()
+            * self.alphas.len()
+    }
+}
+
+/// Winning configuration + scores for one (method, seed, task).
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    pub method: MethodKind,
+    pub seed: u64,
+    pub input_scaling: f64,
+    pub leak_rate: f64,
+    pub spectral_radius: f64,
+    pub alpha: f64,
+    pub valid_rmse: f64,
+    pub test_rmse: f64,
+}
+
+/// A reservoir family able to produce unit-scaled feature trajectories for
+/// any (ρ, lr) grid point. Created once per (method, seed): the expensive
+/// parts (matrix generation, eigendecomposition, eigenvector sampling,
+/// input projection) happen here, not per grid point.
+enum Provider {
+    Normal {
+        /// Base `W` scaled to spectral radius 1.
+        w0: Mat,
+        /// Unit-scale `W_in` (input scaling / leak applied later).
+        w_in: Mat,
+    },
+    Diag {
+        /// Base spectrum with radius normalized to 1 (or the generator's
+        /// native radius for Golden with noise — see `regen`).
+        spec0: Spectrum,
+        win_re: Mat,
+        win_im: Mat,
+        /// For Noisy Golden the paper adds UNSCALED noise after setting
+        /// sr = ρ, so the spectrum must be regenerated per ρ.
+        regen: Option<(u64, f64)>, // (seed, sigma)
+    },
+}
+
+impl Provider {
+    fn build(method: MethodKind, n: usize, connectivity: f64, seed: u64) -> Result<Self> {
+        use crate::rng::Distributions;
+        let mut rng = Pcg64::new(seed, 10);
+        match method {
+            MethodKind::Normal | MethodKind::Diagonalized => {
+                // shared generation: Diagonalized IS Normal's reservoir in
+                // the eigenbasis (Theorem 1)
+                let cfg = EsnConfig::default()
+                    .with_n(n)
+                    .with_connectivity(connectivity)
+                    .with_sr(1.0)
+                    .with_seed(seed);
+                let esn = StandardEsn::generate(cfg);
+                match method {
+                    MethodKind::Normal => Ok(Provider::Normal {
+                        w0: esn.w_dense(),
+                        w_in: esn.w_in.clone(),
+                    }),
+                    _ => {
+                        let diag = DiagonalEsn::from_standard(&esn)?;
+                        Ok(Provider::Diag {
+                            spec0: diag.spec.clone(),
+                            win_re: diag.win_re.clone(),
+                            win_im: diag.win_im.clone(),
+                            regen: None,
+                        })
+                    }
+                }
+            }
+            MethodKind::DpgUniform | MethodKind::DpgSim | MethodKind::DpgGolden { .. } => {
+                let spec0 = match method {
+                    MethodKind::DpgUniform => uniform_spectrum(n, 1.0, &mut rng),
+                    MethodKind::DpgSim => sim_spectrum(n, connectivity, 1.0, &mut rng),
+                    MethodKind::DpgGolden { sigma } => golden_spectrum(
+                        n,
+                        GoldenParams { sr: 1.0, sigma },
+                        &mut rng,
+                    ),
+                    _ => unreachable!(),
+                };
+                let basis = random_eigvecs(&spec0, &mut rng);
+                let mut w_in = Mat::from_fn(1, n, |_, _| rng.uniform(-1.0, 1.0));
+                let _ = &mut w_in; // D_in = 1, dense input weights
+                // project W_in into the eigenbasis once
+                let esn = {
+                    let mut re = Mat::zeros(1, spec0.slots());
+                    let mut im = Mat::zeros(1, spec0.slots());
+                    for j in 0..spec0.slots() {
+                        let mut acc = crate::num::c64::ZERO;
+                        for i in 0..n {
+                            acc += basis.cols[(i, j)] * w_in[(0, i)];
+                        }
+                        re[(0, j)] = acc.re;
+                        im[(0, j)] = acc.im;
+                    }
+                    (re, im)
+                };
+                let regen = match method {
+                    MethodKind::DpgGolden { sigma } if sigma > 0.0 => {
+                        Some((seed, sigma))
+                    }
+                    _ => None,
+                };
+                Ok(Provider::Diag {
+                    spec0,
+                    win_re: esn.0,
+                    win_im: esn.1,
+                    regen,
+                })
+            }
+        }
+    }
+
+    /// Feature trajectory at unit input scaling for grid point (ρ, lr).
+    /// Leak enters the spectrum/matrix here; the `lr` factor on `W_in` is
+    /// deferred to the Gram scaling (`s = input_scaling·lr`).
+    fn features(&self, rho: f64, lr: f64, u: &Mat) -> Mat {
+        match self {
+            Provider::Normal { w0, w_in } => {
+                let n = w0.rows();
+                let mut w = w0.clone();
+                w.scale(rho * lr);
+                if lr < 1.0 {
+                    w.add_diag(1.0 - lr);
+                }
+                let esn = StandardEsn::from_parts(
+                    w,
+                    w_in.clone(),
+                    EsnConfig::default().with_n(n),
+                );
+                esn.run(u)
+            }
+            Provider::Diag {
+                spec0,
+                win_re,
+                win_im,
+                regen,
+            } => {
+                let spec = match regen {
+                    Some((seed, sigma)) => {
+                        // paper-faithful Noisy Golden: scale THEN noise
+                        let mut rng = Pcg64::new(*seed, 10);
+                        golden_spectrum(
+                            spec0.n,
+                            GoldenParams {
+                                sr: rho,
+                                sigma: *sigma,
+                            },
+                            &mut rng,
+                        )
+                    }
+                    None => spec0.scaled(rho),
+                }
+                .apply_leak(lr);
+                // interleaved Appendix-A engine: ~1.2× over split planes
+                // (perf pass, EXPERIMENTS.md §Perf)
+                let esn = crate::reservoir::QBasisEsn::from_slot_form(
+                    &spec, win_re, win_im,
+                );
+                esn.run(u)
+            }
+        }
+    }
+}
+
+/// Grid-search runner for the MSO family.
+pub struct GridSearch {
+    pub spec: GridSpec,
+    pub n: usize,
+    pub connectivity: f64,
+}
+
+impl Default for GridSearch {
+    fn default() -> Self {
+        Self {
+            spec: GridSpec::paper_table1(),
+            n: 100,
+            connectivity: 1.0,
+        }
+    }
+}
+
+impl GridSearch {
+    /// Full protocol for one (task K, method, seed): sweep the grid,
+    /// select by validation RMSE, report test RMSE.
+    pub fn run_mso(&self, k: usize, method: MethodKind, seed: u64) -> Result<TrialResult> {
+        let task = MsoTask::new(k);
+        let splits = MsoTask::splits();
+        let u = task.input_mat();
+        let y_train = task.target_mat(splits.train.clone());
+        let y_valid = task.target_mat(splits.valid.clone());
+        let y_test = task.target_mat(splits.test.clone());
+
+        let provider = Provider::build(method, self.n, self.connectivity, seed)?;
+
+        let mut best: Option<TrialResult> = None;
+        for &rho in &self.spec.spectral_radii {
+            for &lr in &self.spec.leak_rates {
+                let states = provider.features(rho, lr, &u);
+                let x_train = slice_rows(&states, splits.train.clone());
+                let x_valid = slice_rows(&states, splits.valid.clone());
+                let x_test = slice_rows(&states, splits.test.clone());
+                let stats = GramStats::new(&x_train, &y_train);
+                for &scale_in in &self.spec.input_scalings {
+                    let s = scale_in * lr;
+                    for &alpha in &self.spec.alphas {
+                        let readout = match stats.solve_scaled(alpha, s) {
+                            Ok(r) => r,
+                            Err(_) => continue,
+                        };
+                        let pv = predict_scaled(&readout, &x_valid, s);
+                        let v = rmse(&pv, &y_valid);
+                        if !v.is_finite() {
+                            continue;
+                        }
+                        let better = best
+                            .as_ref()
+                            .map(|b| v < b.valid_rmse)
+                            .unwrap_or(true);
+                        if better {
+                            let pt = predict_scaled(&readout, &x_test, s);
+                            let t = rmse(&pt, &y_test);
+                            best = Some(TrialResult {
+                                method,
+                                seed,
+                                input_scaling: scale_in,
+                                leak_rate: lr,
+                                spectral_radius: rho,
+                                alpha,
+                                valid_rmse: v,
+                                test_rmse: t,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        best.ok_or_else(|| anyhow::anyhow!("no finite configuration found"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_produces_sane_mso1_scores() {
+        let gs = GridSearch {
+            spec: GridSpec::quick(),
+            n: 40,
+            connectivity: 1.0,
+        };
+        for method in [
+            MethodKind::Normal,
+            MethodKind::DpgUniform,
+            MethodKind::DpgGolden { sigma: 0.0 },
+        ] {
+            let r = gs.run_mso(1, method, 0).unwrap();
+            assert!(
+                r.test_rmse < 1e-2,
+                "{method:?} test rmse {}",
+                r.test_rmse
+            );
+            assert!(r.valid_rmse.is_finite());
+        }
+    }
+
+    #[test]
+    fn diagonalized_close_to_normal_on_mso1() {
+        let gs = GridSearch {
+            spec: GridSpec::quick(),
+            n: 30,
+            connectivity: 1.0,
+        };
+        let a = gs.run_mso(1, MethodKind::Normal, 1).unwrap();
+        let b = gs.run_mso(1, MethodKind::Diagonalized, 1).unwrap();
+        // same reservoir, different training basis: same order of magnitude
+        assert!(b.test_rmse < a.test_rmse.max(1e-6) * 1e4 + 1e-4);
+    }
+
+    #[test]
+    fn table1_grid_has_1296_points() {
+        assert_eq!(GridSpec::paper_table1().size(), 1296);
+    }
+
+    #[test]
+    fn results_deterministic_by_seed() {
+        let gs = GridSearch {
+            spec: GridSpec::quick(),
+            n: 25,
+            connectivity: 1.0,
+        };
+        let a = gs.run_mso(2, MethodKind::DpgUniform, 7).unwrap();
+        let b = gs.run_mso(2, MethodKind::DpgUniform, 7).unwrap();
+        assert_eq!(a.test_rmse, b.test_rmse);
+        assert_eq!(a.alpha, b.alpha);
+    }
+
+    #[test]
+    fn method_labels_unique() {
+        let labels: Vec<String> = MethodKind::table2_set()
+            .iter()
+            .map(|m| m.label())
+            .collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment coordination: a from-scratch worker pool ([`pool`]) and the
+//! grid-search orchestrator ([`grid`]) that drives the paper's model
+//! selection (Table 1 grid → Table 2 scores) with the state-reuse
+//! scheduling the paper describes in §5.1 (states computed once per seed
+//! and shared across the input-scaling and α sweeps).
+
+pub mod experiment;
+pub mod grid;
+pub mod pool;
+
+pub use experiment::{ExperimentResult, ExperimentSpec};
+pub use grid::{GridSearch, GridSpec, MethodKind, TrialResult};
+pub use pool::WorkerPool;

@@ -1,0 +1,145 @@
+//! Minimal work-stealing-ish worker pool over std::thread + channels
+//! (tokio is not in the offline registry). Jobs are `FnOnce` closures;
+//! results come back over a channel in completion order with their job
+//! index, so callers can reassemble deterministic output.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Fixed-size worker pool executing boxed jobs.
+pub struct WorkerPool {
+    workers: Vec<JoinHandle<()>>,
+    sender: Option<mpsc::Sender<Job>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl WorkerPool {
+    /// Spawn `threads` workers (≥ 1; use
+    /// [`suggested_threads`] for a default).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                std::thread::Builder::new()
+                    .name(format!("lr-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            workers,
+            sender: Some(sender),
+        }
+    }
+
+    /// Submit a raw job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("worker pool hung up");
+    }
+
+    /// Map `inputs` through `f` across the pool, preserving input order.
+    pub fn map<I, O, F>(&self, inputs: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send + 'static,
+        O: Send + 'static,
+        F: Fn(I) -> O + Send + Sync + 'static,
+    {
+        let n = inputs.len();
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, O)>();
+        for (idx, input) in inputs.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.submit(move || {
+                let out = f(input);
+                let _ = tx.send((idx, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<O>> = (0..n).map(|_| None).collect();
+        for (idx, out) in rx.iter() {
+            slots[idx] = Some(out);
+        }
+        slots.into_iter().map(|s| s.expect("job lost")).collect()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.sender.take(); // close channel → workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Default parallelism: available cores (this container exposes 1; the
+/// pool still structures the computation for larger hosts).
+pub fn suggested_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = WorkerPool::new(4);
+        let out = pool.map((0..100).collect(), |x: usize| x * x);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn all_jobs_run() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let out = pool.map(vec![(); 50], move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(out.len(), 50);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(2);
+        pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = WorkerPool::new(1);
+        let out = pool.map(vec![1, 2, 3], |x: i32| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

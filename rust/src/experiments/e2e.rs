@@ -1,0 +1,125 @@
+//! End-to-end driver (DESIGN.md §4): the full production pipeline on a
+//! real workload, with the state computation running through the COMPILED
+//! HLO artifact (L1 Pallas kernel + L2 JAX graph via PJRT) — the actual
+//! request path — cross-checked against the native engine, trained, and
+//! evaluated.
+//!
+//! Reported: test RMSE (headline quality metric) and steps/sec for the
+//! HLO path, the native O(N) diagonal path, and the O(N²) dense baseline.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::MethodKind;
+use crate::linalg::Mat;
+use crate::metrics::rmse;
+use crate::readout::{fit, Regularizer};
+use crate::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+use crate::rng::Pcg64;
+use crate::runtime::DiagRuntime;
+use crate::spectral::golden::{golden_spectrum, GoldenParams};
+use crate::tasks::mso::{slice_rows, MsoTask};
+use crate::util::Timer;
+
+/// Everything the e2e run measures.
+pub struct E2eReport {
+    pub task: usize,
+    pub n: usize,
+    pub hlo_native_max_diff: f64,
+    pub test_rmse_hlo: f64,
+    pub test_rmse_native: f64,
+    pub test_rmse_dense_baseline: f64,
+    pub steps_per_sec_hlo: f64,
+    pub steps_per_sec_native: f64,
+    pub steps_per_sec_dense: f64,
+}
+
+/// Run the pipeline for MSO-`k` with an `n`-unit Noisy-Golden DPG
+/// reservoir (the paper's best method), using the artifact set built by
+/// `make artifacts` (needs the T=1000/slots=n shapes).
+pub fn run(k: usize, n: usize, seed: u64, alpha: f64) -> Result<E2eReport> {
+    let task = MsoTask::new(k);
+    let splits = MsoTask::splits();
+    let u = task.input_mat();
+    let t_total = u.rows();
+
+    // --- build the model (DPG: no W ever materialized) -------------------
+    let config = EsnConfig::default().with_n(n).with_sr(0.9).with_seed(seed);
+    let mut rng = Pcg64::new(seed, 70);
+    let mut spec = golden_spectrum(n, GoldenParams { sr: 0.9, sigma: 0.2 }, &mut rng);
+    // fixed-config demo (no validation sweep to reject divergent draws):
+    // keep the spectrum inside the stability region — noise may push |λ|
+    // past 1, which diverges over the 1000-step series
+    let radius = spec.radius();
+    if radius > 0.98 {
+        spec = spec.scaled(0.98 / radius);
+    }
+    let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+
+    // --- states through the compiled HLO artifact ------------------------
+    let mut drt = DiagRuntime::open_default()
+        .context("artifacts not built? run `make artifacts`")?;
+    // warm-up/compile pass
+    let feats_hlo = drt.run(&esn, &u, false)?;
+    let t = Timer::start();
+    let feats_hlo2 = drt.run(&esn, &u, false)?;
+    let hlo_time = t.elapsed_s();
+    drop(feats_hlo2);
+
+    // --- native engine cross-check ---------------------------------------
+    let t = Timer::start();
+    let feats_native = esn.run(&u);
+    let native_time = t.elapsed_s();
+    let max_diff = feats_hlo.max_abs_diff(&feats_native);
+    let scale = feats_native
+        .data()
+        .iter()
+        .fold(1.0f64, |m, x| m.max(x.abs()));
+    anyhow::ensure!(
+        max_diff / scale < 1e-4,
+        "HLO and native states diverge: {max_diff} (scale {scale})"
+    );
+
+    // --- train + evaluate through both paths -------------------------------
+    let y_train = task.target_mat(splits.train.clone());
+    let y_test = task.target_mat(splits.test.clone());
+
+    let eval = |feats: &Mat| -> Result<f64> {
+        let x_train = slice_rows(feats, splits.train.clone());
+        let x_test = slice_rows(feats, splits.test.clone());
+        let readout = fit(&x_train, &y_train, alpha, true, Regularizer::Identity)?;
+        Ok(rmse(&readout.predict(&x_test), &y_test))
+    };
+    let test_rmse_hlo = eval(&feats_hlo)?;
+    let test_rmse_native = eval(&feats_native)?;
+
+    // --- dense O(N²) baseline for the quality + throughput contrast ------
+    let baseline = StandardEsn::generate(config);
+    let t = Timer::start();
+    let states_dense = baseline.run(&u);
+    let dense_time = t.elapsed_s();
+    let test_rmse_dense_baseline = eval(&states_dense)?;
+
+    Ok(E2eReport {
+        task: k,
+        n,
+        hlo_native_max_diff: max_diff,
+        test_rmse_hlo,
+        test_rmse_native,
+        test_rmse_dense_baseline,
+        steps_per_sec_hlo: t_total as f64 / hlo_time.max(1e-12),
+        steps_per_sec_native: t_total as f64 / native_time.max(1e-12),
+        steps_per_sec_dense: t_total as f64 / dense_time.max(1e-12),
+    })
+}
+
+pub fn print_report(r: &E2eReport) {
+    println!("\n=== end-to-end pipeline (MSO{}, N={}) ===", r.task, r.n);
+    println!("  HLO vs native state agreement : {:.3e} (max abs diff)", r.hlo_native_max_diff);
+    println!("  test RMSE  — HLO path         : {:.3e}", r.test_rmse_hlo);
+    println!("  test RMSE  — native path      : {:.3e}", r.test_rmse_native);
+    println!("  test RMSE  — dense baseline   : {:.3e}", r.test_rmse_dense_baseline);
+    println!("  throughput — HLO path         : {:.0} steps/s", r.steps_per_sec_hlo);
+    println!("  throughput — native O(N) path : {:.0} steps/s", r.steps_per_sec_native);
+    println!("  throughput — dense O(N²) path : {:.0} steps/s", r.steps_per_sec_dense);
+    let _ = MethodKind::Normal; // (method enum reserved for future variants)
+}

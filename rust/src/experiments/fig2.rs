@@ -1,0 +1,170 @@
+//! Figure 2 — wall-clock comparison of the three processing stages
+//! (generation / reservoir step / readout step) across reservoir sizes,
+//! for Normal vs Diagonalization(EWT/EET) vs DPG.
+//!
+//! Expected shape (paper): reservoir step O(N²) vs O(N) separation growing
+//! with N; Diagonalization generation ≳ Normal generation (extra eig);
+//! DPG generation ≪ Diagonalization generation; readout identical.
+
+use anyhow::Result;
+
+use crate::bench::{bench, bench_oneshot, BenchConfig};
+use crate::linalg::Mat;
+use crate::readout::Readout;
+use crate::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+use crate::rng::{Distributions, Pcg64};
+use crate::spectral::uniform::uniform_spectrum;
+use crate::util::csv::CsvWriter;
+
+/// One measurement row.
+pub struct Row {
+    pub n: usize,
+    pub stage: &'static str,
+    pub method: &'static str,
+    pub seconds: f64,
+}
+
+/// Run the Figure-2 sweep. `sizes` defaults to the paper-like range.
+pub fn run(sizes: &[usize], gen_reps: usize, quick: bool) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    let cfg = if quick {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    };
+
+    for &n in sizes {
+        let config = EsnConfig::default().with_n(n).with_seed(7);
+
+        // ---- (i) generation -------------------------------------------------
+        let g_normal = bench_oneshot("gen_normal", gen_reps, || {
+            StandardEsn::generate(config)
+        });
+        rows.push(Row {
+            n,
+            stage: "generation",
+            method: "normal",
+            seconds: g_normal.per_iter.median,
+        });
+
+        let base = StandardEsn::generate(config);
+        let g_diag = bench_oneshot("gen_diagonalization", gen_reps, || {
+            // diagonalization applies ON TOP of a generated standard W
+            let esn = StandardEsn::generate(config);
+            DiagonalEsn::from_standard(&esn).ok()
+        });
+        rows.push(Row {
+            n,
+            stage: "generation",
+            method: "diagonalization",
+            seconds: g_diag.per_iter.median,
+        });
+
+        let g_dpg = bench_oneshot("gen_dpg", gen_reps, || {
+            let mut rng = Pcg64::new(7, 20);
+            let spec = uniform_spectrum(n, 0.9, &mut rng);
+            DiagonalEsn::from_dpg(spec, &config, &mut rng)
+        });
+        rows.push(Row {
+            n,
+            stage: "generation",
+            method: "dpg",
+            seconds: g_dpg.per_iter.median,
+        });
+
+        // ---- (ii) reservoir step --------------------------------------------
+        let mut rng = Pcg64::new(7, 21);
+        let u: Vec<f64> = rng.normal_vec(1);
+        let r0: Vec<f64> = rng.normal_vec(n);
+        let mut scratch = vec![0.0; n];
+        let b_std = bench(&format!("step_normal_n{n}"), cfg, || {
+            base.step(&r0, &u, &mut scratch);
+            scratch[0]
+        });
+        rows.push(Row {
+            n,
+            stage: "reservoir_step",
+            method: "normal",
+            seconds: b_std.per_iter.median,
+        });
+
+        let mut rng2 = Pcg64::new(7, 22);
+        let spec = uniform_spectrum(n, 0.9, &mut rng2);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut rng2);
+        let slots = diag.spec.slots();
+        let mut s_re = rng2.normal_vec(slots);
+        let mut s_im = rng2.normal_vec(slots);
+        let b_diag = bench(&format!("step_diagonal_n{n}"), cfg, || {
+            diag.step(&mut s_re, &mut s_im, &u);
+            s_re[0]
+        });
+        rows.push(Row {
+            n,
+            stage: "reservoir_step",
+            method: "diagonal",
+            seconds: b_diag.per_iter.median,
+        });
+
+        // ---- (iii) readout step ---------------------------------------------
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut rng2),
+            b: vec![0.1],
+        };
+        let feat_mat = Mat::randn(1, n, &mut rng2);
+        let b_read = bench(&format!("readout_n{n}"), cfg, || {
+            readout.predict(&feat_mat)
+        });
+        rows.push(Row {
+            n,
+            stage: "readout_step",
+            method: "all",
+            seconds: b_read.per_iter.median,
+        });
+    }
+    Ok(rows)
+}
+
+/// Write the CSV and print the summary table.
+pub fn emit(rows: &[Row], path: &std::path::Path) -> Result<()> {
+    let mut csv = CsvWriter::create(path, &["n", "stage", "method", "seconds"])?;
+    for r in rows {
+        csv.rowv(&[&r.n, &r.stage, &r.method, &r.seconds])?;
+    }
+    csv.flush()?;
+    println!("\nFig 2 — per-stage timings (median seconds)");
+    println!("{:>6} {:>16} {:>18} {:>14}", "N", "stage", "method", "seconds");
+    for r in rows {
+        println!(
+            "{:>6} {:>16} {:>18} {:>14.3e}",
+            r.n, r.stage, r.method, r.seconds
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_has_expected_shape() {
+        let rows = run(&[40, 120], 1, true).unwrap();
+        // 6 rows per size
+        assert_eq!(rows.len(), 12);
+        // O(N) vs O(N²): diagonal step should win at N=120
+        let std_120 = rows
+            .iter()
+            .find(|r| r.n == 120 && r.method == "normal" && r.stage == "reservoir_step")
+            .unwrap();
+        let diag_120 = rows
+            .iter()
+            .find(|r| r.n == 120 && r.method == "diagonal")
+            .unwrap();
+        assert!(
+            diag_120.seconds < std_120.seconds,
+            "diag {} vs std {}",
+            diag_120.seconds,
+            std_120.seconds
+        );
+    }
+}

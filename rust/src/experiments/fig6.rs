@@ -1,0 +1,163 @@
+//! Figure 6 — memory capacity `MC_k` vs delay `k` across reservoir sizes
+//! (paper: N ∈ {100, 300, 600, 1000}) for Normal, DPG-Uniform, DPG-Golden
+//! and DPG-Sim (spectral radius exactly 1, no leak).
+//!
+//! Expected shape (paper): Golden systematically above Normal at every
+//! size; Uniform roughly equivalent to Normal with a more balanced
+//! degradation, crossing near MC ≈ 0.5; Sim closely tracks Normal with a
+//! small consistent deficit.
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+use crate::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+use crate::rng::Pcg64;
+use crate::spectral::golden::{golden_spectrum, GoldenParams};
+use crate::spectral::sim::sim_spectrum;
+use crate::spectral::uniform::uniform_spectrum;
+use crate::tasks::memory::McTask;
+use crate::util::csv::CsvWriter;
+use crate::util::stats::Summary;
+
+/// One curve point: (n, method, delay, mean MC over seeds).
+pub struct Row {
+    pub n: usize,
+    pub method: &'static str,
+    pub delay: usize,
+    pub mc_mean: f64,
+    pub mc_std: f64,
+}
+
+pub const METHODS: [&str; 4] = ["normal", "uniform", "golden", "sim"];
+
+/// States at sr = 1, no leak, for one method/seed.
+fn states_for(method: &str, n: usize, seed: u64, task: &McTask) -> Mat {
+    let config = EsnConfig::default()
+        .with_n(n)
+        .with_sr(1.0)
+        .with_leak(1.0)
+        .with_seed(seed);
+    let u = task.input_mat();
+    match method {
+        "normal" => StandardEsn::generate(config).run(&u),
+        "uniform" => {
+            let mut rng = Pcg64::new(seed, 40);
+            let spec = uniform_spectrum(n, 1.0, &mut rng);
+            DiagonalEsn::from_dpg(spec, &config, &mut rng).run(&u)
+        }
+        "golden" => {
+            let mut rng = Pcg64::new(seed, 41);
+            let spec =
+                golden_spectrum(n, GoldenParams { sr: 1.0, sigma: 0.0 }, &mut rng);
+            DiagonalEsn::from_dpg(spec, &config, &mut rng).run(&u)
+        }
+        "sim" => {
+            let mut rng = Pcg64::new(seed, 42);
+            let spec = sim_spectrum(n, 1.0, 1.0, &mut rng);
+            DiagonalEsn::from_dpg(spec, &config, &mut rng).run(&u)
+        }
+        other => panic!("unknown method {other}"),
+    }
+}
+
+/// Delay budget per size: past ~1.4·N the capacity of a linear reservoir
+/// has fully collapsed (total MC ≤ N).
+pub fn k_max_for(n: usize) -> usize {
+    (n * 7 / 5).max(20)
+}
+
+/// Run the sweep. `sizes` e.g. `[100, 300]`; `seeds` averaged.
+pub fn run(sizes: &[usize], seeds: u64, alpha: f64, progress: bool) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for &n in sizes {
+        let k_max = k_max_for(n);
+        // washout must cover k_max; train/test sized with N
+        let train = (3 * n).max(600);
+        let test = (n).max(300);
+        for method in METHODS {
+            // per-seed curves
+            let mut curves: Vec<Vec<f64>> = Vec::new();
+            for seed in 0..seeds {
+                let mut task = McTask::new(train, test, seed);
+                task.washout = k_max.max(200);
+                // regenerate input with the right total length
+                let mut rng = Pcg64::new(seed, 3);
+                use crate::rng::Distributions;
+                task.input = rng.uniform_vec(task.washout + train + test, -0.8, 0.8);
+                let states = states_for(method, n, seed, &task);
+                curves.push(task.capacities_fast(&states, k_max, alpha));
+            }
+            for k in 1..=k_max {
+                let vals: Vec<f64> = curves.iter().map(|c| c[k - 1]).collect();
+                let s = Summary::of(&vals);
+                rows.push(Row {
+                    n,
+                    method,
+                    delay: k,
+                    mc_mean: s.mean,
+                    mc_std: s.std,
+                });
+            }
+            if progress {
+                let total: f64 = rows
+                    .iter()
+                    .filter(|r| r.n == n && r.method == method)
+                    .map(|r| r.mc_mean)
+                    .sum();
+                println!("  N={n:<5} {method:<8} total MC ≈ {total:.1}");
+            }
+        }
+    }
+    Ok(rows)
+}
+
+pub fn emit(rows: &[Row], path: &std::path::Path) -> Result<()> {
+    let mut csv =
+        CsvWriter::create(path, &["n", "method", "delay", "mc_mean", "mc_std"])?;
+    for r in rows {
+        csv.rowv(&[&r.n, &r.method, &r.delay, &r.mc_mean, &r.mc_std])?;
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Delay at which the mean MC curve crosses 0.5 (used by Fig 7 to pick a
+/// moderate-difficulty delay per size).
+pub fn crossing_delay(rows: &[Row], n: usize, method: &str) -> Option<usize> {
+    let mut curve: Vec<(usize, f64)> = rows
+        .iter()
+        .filter(|r| r.n == n && r.method == method)
+        .map(|r| (r.delay, r.mc_mean))
+        .collect();
+    curve.sort_by_key(|(k, _)| *k);
+    curve
+        .iter()
+        .find(|(_, mc)| *mc < 0.5)
+        .map(|(k, _)| *k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sweep_sane() {
+        let rows = run(&[60], 1, 1e-7, false).unwrap();
+        // MC near-perfect at delay 1 for every method
+        for method in METHODS {
+            let r1 = rows
+                .iter()
+                .find(|r| r.method == method && r.delay == 1)
+                .unwrap();
+            assert!(r1.mc_mean > 0.95, "{method} MC_1 = {}", r1.mc_mean);
+            // collapse by k_max
+            let rk = rows
+                .iter()
+                .find(|r| r.method == method && r.delay == k_max_for(60))
+                .unwrap();
+            assert!(rk.mc_mean < 0.6, "{method} MC_max = {}", rk.mc_mean);
+        }
+        // crossing exists
+        assert!(crossing_delay(&rows, 60, "normal").is_some());
+    }
+}

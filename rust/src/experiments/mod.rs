@@ -1,0 +1,22 @@
+//! One driver per paper table/figure (see DESIGN.md §3 for the index).
+//! Every driver writes a CSV under `results/` and prints a human-readable
+//! summary; the `repro` binary dispatches to these.
+
+pub mod ablation;
+pub mod e2e;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table2;
+
+use std::path::PathBuf;
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}

@@ -1,0 +1,165 @@
+//! Table 2 — MSO1…MSO12 test RMSE for the six methods, grid-searched over
+//! the Table-1 hyper-parameters, averaged over seeds.
+//!
+//! Expected shape (paper): Noisy Golden (σ=0.2) and Normal trade wins
+//! roughly evenly; Diagonalized(EET) tracks Normal within noise; Sim never
+//! takes the top rank but stays close.
+
+use anyhow::Result;
+
+use crate::coordinator::{GridSearch, GridSpec, MethodKind};
+use crate::util::csv::CsvWriter;
+use crate::util::stats::Summary;
+
+/// Aggregated cell: one (task, method).
+pub struct Cell {
+    pub task: usize,
+    pub method: MethodKind,
+    pub mean_rmse: f64,
+    pub std_rmse: f64,
+    pub per_seed: Vec<f64>,
+}
+
+/// Run the full table. `tasks` ⊆ 1..=12, `seeds` = number of seeds.
+pub fn run(
+    tasks: &[usize],
+    methods: &[MethodKind],
+    seeds: u64,
+    spec: GridSpec,
+    n: usize,
+    progress: bool,
+) -> Result<Vec<Cell>> {
+    let gs = GridSearch {
+        spec,
+        n,
+        connectivity: 1.0,
+    };
+    let mut cells = Vec::new();
+    for &k in tasks {
+        for &method in methods {
+            let mut per_seed = Vec::with_capacity(seeds as usize);
+            for seed in 0..seeds {
+                let r = gs.run_mso(k, method, seed)?;
+                per_seed.push(r.test_rmse);
+            }
+            let s = Summary::of(&per_seed);
+            if progress {
+                println!(
+                    "  MSO{k:<2} {:<18} rmse={:.3e} (±{:.1e})",
+                    method.label(),
+                    s.mean,
+                    s.std
+                );
+            }
+            cells.push(Cell {
+                task: k,
+                method,
+                mean_rmse: s.mean,
+                std_rmse: s.std,
+                per_seed,
+            });
+        }
+    }
+    Ok(cells)
+}
+
+/// Emit the CSV + a paper-layout table (methods as columns, bold = best).
+pub fn emit(cells: &[Cell], methods: &[MethodKind], path: &std::path::Path) -> Result<()> {
+    let mut csv = CsvWriter::create(
+        path,
+        &["task", "method", "mean_rmse", "std_rmse", "n_seeds"],
+    )?;
+    for c in cells {
+        csv.rowv(&[
+            &c.task,
+            &c.method.label(),
+            &c.mean_rmse,
+            &c.std_rmse,
+            &c.per_seed.len(),
+        ])?;
+    }
+    csv.flush()?;
+
+    // paper-layout print
+    let tasks: Vec<usize> = {
+        let mut t: Vec<usize> = cells.iter().map(|c| c.task).collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    };
+    print!("\nTable 2 — MSO test RMSE (mean over seeds)\n{:<7}", "Task");
+    for m in methods {
+        print!("{:>16}", m.label());
+    }
+    println!();
+    for &k in &tasks {
+        print!("MSO{k:<4}");
+        let row: Vec<&Cell> = methods
+            .iter()
+            .map(|m| {
+                cells
+                    .iter()
+                    .find(|c| c.task == k && c.method == *m)
+                    .expect("cell")
+            })
+            .collect();
+        let best = row
+            .iter()
+            .map(|c| c.mean_rmse)
+            .fold(f64::INFINITY, f64::min);
+        for c in &row {
+            let mark = if c.mean_rmse == best { "*" } else { " " };
+            print!("{:>15.2e}{mark}", c.mean_rmse);
+        }
+        println!();
+    }
+    println!("(* = best per row)");
+    Ok(())
+}
+
+/// Count wins per method (the paper's tie analysis).
+pub fn wins(cells: &[Cell], methods: &[MethodKind]) -> Vec<(String, usize)> {
+    let mut tasks: Vec<usize> = cells.iter().map(|c| c.task).collect();
+    tasks.sort_unstable();
+    tasks.dedup();
+    let mut counts: Vec<(String, usize)> =
+        methods.iter().map(|m| (m.label(), 0)).collect();
+    for &k in &tasks {
+        let row: Vec<&Cell> = methods
+            .iter()
+            .map(|m| {
+                cells
+                    .iter()
+                    .find(|c| c.task == k && c.method == *m)
+                    .unwrap()
+            })
+            .collect();
+        let best_idx = row
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.mean_rmse.partial_cmp(&b.1.mean_rmse).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        counts[best_idx].1 += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_table_runs_end_to_end() {
+        let methods = vec![MethodKind::Normal, MethodKind::DpgGolden { sigma: 0.0 }];
+        let cells = run(&[1], &methods, 2, GridSpec::quick(), 30, false).unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert!(c.mean_rmse.is_finite());
+            assert!(c.mean_rmse < 0.1, "MSO1 should be easy: {}", c.mean_rmse);
+            assert_eq!(c.per_seed.len(), 2);
+        }
+        let w = wins(&cells, &methods);
+        assert_eq!(w.iter().map(|(_, c)| c).sum::<usize>(), 1);
+    }
+}

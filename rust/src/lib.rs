@@ -1,0 +1,51 @@
+//! # linear-reservoir
+//!
+//! Production reproduction of *“Linear Reservoir: A Diagonalization-Based
+//! Optimization”* (de Coudenhove, Bendi-Ouis, Strock, Hinaut): linear Echo
+//! State Networks whose recurrent update is rewritten in the eigenbasis of
+//! the reservoir matrix, reducing the per-step cost from `O(N²)` to `O(N)`.
+//!
+//! Three deployment methods from the paper are first-class:
+//! * **EWT** — Eigenbasis Weight Transformation: diagonalize a trained
+//!   standard ESN and transform its readout
+//!   ([`reservoir::DiagonalEsn::from_standard`]).
+//! * **EET** — End-to-End Eigenbasis Training: train the readout directly in
+//!   the transformed space with the generalized Tikhonov term of Theorem 1
+//!   ([`readout`]).
+//! * **DPG** — Direct Parameter Generation: skip the matrix entirely and
+//!   sample `(Λ, P)` directly ([`spectral`]): Uniform, Golden, Noisy-Golden
+//!   and Sim distributions.
+//!
+//! Architecture (see `DESIGN.md`): this crate is Layer 3 of a three-layer
+//! stack. Layers 1–2 (Pallas kernel + JAX graph) are compiled **ahead of
+//! time** to HLO-text artifacts which [`runtime`] loads and executes through
+//! the PJRT CPU client (`xla` crate); Python never runs on the request path.
+//! Native Rust engines in [`reservoir`] mirror the compiled graphs and are
+//! used for cross-validation and for shapes that have no artifact.
+//!
+//! The offline build environment provides no general-purpose crates, so the
+//! substrates are all local: [`rng`], [`linalg`] (including a from-scratch
+//! non-symmetric eigensolver), [`sparse`], [`util`] (JSON/CSV), a thread
+//! pool ([`coordinator`]), a bench harness ([`bench`]) and a property-test
+//! harness ([`testing`]).
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod num;
+pub mod readout;
+pub mod reservoir;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod spectral;
+pub mod tasks;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is in the offline dependency closure).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,235 @@
+//! Dense row-major complex matrix (eigenvector bases `P`, `P⁻¹`, and the
+//! transformed weights of Theorem 1).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use crate::num::c64;
+
+use super::Mat;
+
+/// Dense `rows × cols` complex matrix, row-major.
+#[derive(Clone, PartialEq)]
+pub struct CMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<c64>,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![c64::ZERO; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = c64::ONE;
+        }
+        m
+    }
+
+    /// Lift a real matrix.
+    pub fn from_real(a: &Mat) -> Self {
+        let mut m = Self::zeros(a.rows(), a.cols());
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                m[(i, j)] = c64::real(a[(i, j)]);
+            }
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> c64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[c64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [c64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<c64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[c64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> CMat {
+        CMat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Real part as a [`Mat`].
+    pub fn real_part(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |i, j| self[(i, j)].re)
+    }
+
+    /// Imaginary part as a [`Mat`].
+    pub fn imag_part(&self) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |i, j| self[(i, j)].im)
+    }
+
+    pub fn matmul(&self, other: &CMat) -> CMat {
+        assert_eq!(self.cols, other.rows, "cmatmul shape mismatch");
+        let mut out = CMat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a_ik = self[(i, k)];
+                if a_ik == c64::ZERO {
+                    continue;
+                }
+                let b_row = other.row(k);
+                let out_row =
+                    &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    out_row[j] += a_ik * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Row-vector × matrix (`[r]_P = r · P` — the paper's transformation).
+    pub fn vecmat(&self, x: &[c64], y: &mut [c64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(c64::ZERO);
+        for (k, &xk) in x.iter().enumerate() {
+            if xk == c64::ZERO {
+                continue;
+            }
+            let row = self.row(k);
+            for j in 0..self.cols {
+                y[j] += xk * row[j];
+            }
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &CMat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt()
+    }
+}
+
+impl Index<(usize, usize)> for CMat {
+    type Output = c64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &c64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for CMat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut c64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for CMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "CMat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(6) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(6) {
+                write!(f, "{:?} ", self[(i, j)])?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn crandn(rows: usize, cols: usize, seed: u64) -> CMat {
+        use crate::rng::Distributions;
+        let mut rng = Pcg64::seeded(seed);
+        CMat::from_fn(rows, cols, |_, _| c64::new(rng.normal(), rng.normal()))
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = crandn(5, 5, 1);
+        assert!(a.matmul(&CMat::eye(5)).max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn matmul_matches_real_on_real_inputs() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(6, 3, &mut rng);
+        let want = a.matmul(&b);
+        let got = CMat::from_real(&a).matmul(&CMat::from_real(&b));
+        assert!(got.real_part().max_abs_diff(&want) < 1e-12);
+        assert!(got.imag_part().frobenius() < 1e-14);
+    }
+
+    #[test]
+    fn vecmat_row_convention() {
+        let a = crandn(3, 4, 3);
+        let x = [c64::new(1.0, 0.5), c64::new(-2.0, 0.0), c64::new(0.0, 1.0)];
+        let mut y = vec![c64::ZERO; 4];
+        a.vecmat(&x, &mut y);
+        for j in 0..4 {
+            let mut want = c64::ZERO;
+            for i in 0..3 {
+                want += x[i] * a[(i, j)];
+            }
+            assert!((y[j] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn col_roundtrip() {
+        let mut a = CMat::zeros(4, 2);
+        let v: Vec<c64> = (0..4).map(|i| c64::new(i as f64, -1.0)).collect();
+        a.set_col(1, &v);
+        assert_eq!(a.col(1), v);
+        assert_eq!(a.col(0), vec![c64::ZERO; 4]);
+    }
+}

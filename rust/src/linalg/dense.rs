@@ -1,0 +1,332 @@
+//! Dense row-major real matrix.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use crate::rng::{Distributions, Pcg64};
+
+/// Dense `rows × cols` matrix of `f64`, row-major.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from a row-major flat slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self {
+            rows,
+            cols,
+            data: data.to_vec(),
+        }
+    }
+
+    /// i.i.d. standard normal entries (used for random reservoirs / W_in).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Self {
+        let data = rng.normal_vec(rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self · other` with an ikj loop order (cache-friendly row-major).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a_ik) in a_row.iter().enumerate() {
+                if a_ik == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for j in 0..other.cols {
+                    out_row[j] += a_ik * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Row-vector × matrix: `y = x · self` (the reservoir step direction).
+    /// 4-row blocked: each pass reads four rows of `self` and writes `y`
+    /// once, quartering the `y` traffic and exposing ILP (perf pass —
+    /// see EXPERIMENTS.md §Perf).
+    pub fn vecmat(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        let n = self.cols;
+        let mut k = 0;
+        while k + 4 <= self.rows {
+            let (x0, x1, x2, x3) = (x[k], x[k + 1], x[k + 2], x[k + 3]);
+            if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+                let base = k * n;
+                let r0 = &self.data[base..base + n];
+                let r1 = &self.data[base + n..base + 2 * n];
+                let r2 = &self.data[base + 2 * n..base + 3 * n];
+                let r3 = &self.data[base + 3 * n..base + 4 * n];
+                for j in 0..n {
+                    y[j] += x0 * r0[j] + x1 * r1[j] + x2 * r2[j] + x3 * r3[j];
+                }
+            }
+            k += 4;
+        }
+        for kk in k..self.rows {
+            let xk = x[kk];
+            if xk == 0.0 {
+                continue;
+            }
+            let row = self.row(kk);
+            for j in 0..n {
+                y[j] += xk * row[j];
+            }
+        }
+    }
+
+    /// Matrix × column-vector: `y = self · x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self += s·I` (leak-rate mixing, ridge regularization).
+    pub fn add_diag(&mut self, s: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self[(i, i)] += s;
+        }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entry difference (test helper / convergence checks).
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[inline]
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: measurably faster than naive sum on the
+    // hot ridge/Gram paths, and deterministic.
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Mat::randn(5, 5, &mut rng);
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-15);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_rows(3, 2, &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_associative() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::randn(4, 6, &mut rng);
+        let b = Mat::randn(6, 3, &mut rng);
+        let c = Mat::randn(3, 5, &mut rng);
+        let lhs = a.matmul(&b).matmul(&c);
+        let rhs = a.matmul(&b.matmul(&c));
+        assert!(lhs.max_abs_diff(&rhs) < 1e-12);
+    }
+
+    #[test]
+    fn vecmat_matches_matmul() {
+        let mut rng = Pcg64::seeded(3);
+        let w = Mat::randn(7, 4, &mut rng);
+        let x = rng.normal_vec(7);
+        let mut y = vec![0.0; 4];
+        w.vecmat(&x, &mut y);
+        let xm = Mat::from_rows(1, 7, &x);
+        let want = xm.matmul(&w);
+        for j in 0..4 {
+            assert!((y[j] - want[(0, j)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_transpose_duality() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Mat::randn(5, 3, &mut rng);
+        let x = rng.normal_vec(3);
+        let mut y1 = vec![0.0; 5];
+        a.matvec(&x, &mut y1);
+        let mut y2 = vec![0.0; 5];
+        a.transpose().vecmat(&x, &mut y2);
+        for i in 0..5 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Mat::randn(4, 7, &mut rng);
+        assert!(a.transpose().transpose().max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = Pcg64::seeded(6);
+        for n in [0, 1, 3, 4, 5, 17, 100] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-10);
+        }
+    }
+}

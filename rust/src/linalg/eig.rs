@@ -1,0 +1,644 @@
+//! Non-symmetric eigendecomposition, from scratch.
+//!
+//! Pipeline (same family as LAPACK `dgeev` / EISPACK):
+//! 1. [`hessenberg`] — Householder reduction `A = Q·H·Qᵀ`.
+//! 2. [`francis_eigenvalues`] — Francis implicit double-shift QR on `H`
+//!    (adapted from the classic EISPACK `hqr` routine): all eigenvalues of
+//!    a real matrix as real values + complex-conjugate pairs.
+//! 3. Eigenvectors by shifted **inverse iteration** on the *Hessenberg*
+//!    matrix (EISPACK `invit` strategy): each solve is O(N²) thanks to the
+//!    Hessenberg structure, so all N eigenvectors cost O(N³) total; the
+//!    vectors are rotated back through `Q`.
+//!
+//! Degenerate spectra (the extreme-sparsity regime of the paper's Fig 7 —
+//! many repeated eigenvalues, near-defective `W`) do not panic: inverse
+//! iteration perturbs exactly-singular shifts and the caller can inspect
+//! [`Eig::max_residual`] / the basis conditioning to observe the collapse,
+//! which is precisely the phenomenon Fig 7 measures.
+
+use crate::num::c64;
+
+use super::hessenberg::hessenberg;
+use super::{CMat, Mat};
+
+/// Full eigendecomposition `A = P·diag(λ)·P⁻¹` (columns of `p` are right
+/// eigenvectors, unit 2-norm).
+pub struct Eig {
+    /// Eigenvalues, in the order produced by the QR iteration; conjugate
+    /// pairs are adjacent with the `im > 0` member first.
+    pub values: Vec<c64>,
+    /// Right eigenvector matrix (columns match `values`).
+    pub p: CMat,
+    /// Max residual `‖A·v − λ·v‖₂` over all eigenpairs (each `v` unit-norm).
+    pub max_residual: f64,
+}
+
+/// Eigenvalues only (Hessenberg + Francis QR), O(N³), no eigenvectors.
+pub fn eigenvalues(a: &Mat) -> Vec<c64> {
+    let hf = hessenberg(a);
+    let mut h = hf.h;
+    francis_eigenvalues(&mut h)
+}
+
+/// Full eigendecomposition. See module docs for the algorithm.
+pub fn eig(a: &Mat) -> Eig {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let hf = hessenberg(a);
+    let mut h_work = hf.h.clone();
+    let values = francis_eigenvalues(&mut h_work);
+
+    // ---- eigenvectors by inverse iteration on H --------------------------
+    let anorm = hf.h.frobenius().max(1e-300);
+    let mut p = CMat::zeros(n, n);
+    let mut k = 0;
+    while k < n {
+        let lam = values[k];
+        let v_h = inverse_iteration(&hf.h, lam, anorm, k as u64);
+        // rotate back: v = Q · v_h
+        let v = rotate(&hf.q, &v_h);
+        p.set_col(k, &v);
+        if lam.im != 0.0 && k + 1 < n && (values[k + 1] - lam.conj()).abs() < 1e-8 * anorm.max(1.0)
+        {
+            // conjugate partner: v̄ (A real ⇒ A·v̄ = λ̄·v̄)
+            let vbar: Vec<c64> = v.iter().map(|z| z.conj()).collect();
+            p.set_col(k + 1, &vbar);
+            k += 2;
+        } else {
+            k += 1;
+        }
+    }
+
+    // ---- residual check ---------------------------------------------------
+    let ac = CMat::from_real(a);
+    let mut max_residual: f64 = 0.0;
+    for (j, &lam) in values.iter().enumerate() {
+        let v = p.col(j);
+        let mut r: f64 = 0.0;
+        for i in 0..n {
+            let mut av = c64::ZERO;
+            for l in 0..n {
+                av += ac[(i, l)] * v[l];
+            }
+            r += (av - lam * v[i]).norm_sqr();
+        }
+        max_residual = max_residual.max(r.sqrt());
+    }
+
+    Eig {
+        values,
+        p,
+        max_residual,
+    }
+}
+
+/// Rotate a Hessenberg-basis vector back to the original basis (`Q · v`).
+fn rotate(q: &Mat, v: &[c64]) -> Vec<c64> {
+    let n = q.rows();
+    let mut out = vec![c64::ZERO; n];
+    for i in 0..n {
+        let row = q.row(i);
+        let mut s = c64::ZERO;
+        for j in 0..n {
+            s += v[j] * row[j];
+        }
+        out[i] = s;
+    }
+    // normalize to unit 2-norm with a deterministic phase (largest
+    // component real-positive) so results are reproducible.
+    normalize(&mut out);
+    out
+}
+
+fn normalize(v: &mut [c64]) {
+    let norm = v.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt();
+    if norm == 0.0 {
+        return;
+    }
+    // phase fix: rotate so the max-|.| component is real positive
+    let mut best = 0;
+    let mut best_mod = 0.0;
+    for (i, z) in v.iter().enumerate() {
+        if z.abs() > best_mod {
+            best_mod = z.abs();
+            best = i;
+        }
+    }
+    let phase = v[best] / c64::real(v[best].abs());
+    let scale = phase.conj() * (1.0 / norm);
+    for z in v.iter_mut() {
+        *z = *z * scale;
+    }
+}
+
+/// Inverse iteration for one eigenvalue on the Hessenberg matrix.
+fn inverse_iteration(h: &Mat, lam: c64, anorm: f64, seed: u64) -> Vec<c64> {
+    use crate::rng::{Distributions, Pcg64};
+    let n = h.rows();
+    // perturb the shift slightly off the exact eigenvalue so (H - λI) is
+    // merely ill-conditioned, not singular — the classic invit trick.
+    let eps = 1e-10 * anorm.max(1.0);
+    let shift = lam + c64::new(eps, eps * 0.5);
+
+    let mut rng = Pcg64::new(0xE16E_57A7 ^ seed, seed);
+    let mut b: Vec<c64> = (0..n)
+        .map(|_| c64::new(rng.normal(), rng.normal()))
+        .collect();
+    normalize(&mut b);
+
+    let solver = HessShiftSolve::factor(h, shift);
+    let mut v = b.clone();
+    for _ in 0..3 {
+        v = solver.solve(&b);
+        let norm = v.iter().map(|z| z.norm_sqr()).sum::<f64>().sqrt();
+        if !norm.is_finite() || norm == 0.0 {
+            // singular to working precision — keep previous direction
+            v = b.clone();
+            break;
+        }
+        for z in v.iter_mut() {
+            *z = *z * (1.0 / norm);
+        }
+        b = v.clone();
+    }
+    normalize(&mut v);
+    v
+}
+
+/// LU-style factorization of `(H − σI)` exploiting Hessenberg structure:
+/// elimination touches only the single subdiagonal, with adjacent-row
+/// pivoting → O(N²) factor, O(N²) memory (upper triangle + one band).
+struct HessShiftSolve {
+    /// row-major complex storage of the eliminated matrix (upper triangular
+    /// + recorded multipliers on the subdiagonal slots)
+    u: CMat,
+    mult: Vec<c64>,
+    swapped: Vec<bool>,
+}
+
+impl HessShiftSolve {
+    fn factor(h: &Mat, sigma: c64) -> Self {
+        let n = h.rows();
+        let mut u = CMat::from_fn(n, n, |i, j| {
+            let v = c64::real(h[(i, j)]);
+            if i == j {
+                v - sigma
+            } else {
+                v
+            }
+        });
+        let mut mult = vec![c64::ZERO; n];
+        let mut swapped = vec![false; n];
+        for k in 0..n.saturating_sub(1) {
+            let below = u[(k + 1, k)];
+            if below == c64::ZERO {
+                continue;
+            }
+            if below.abs() > u[(k, k)].abs() {
+                // swap rows k, k+1 (adjacent pivoting suffices: only one
+                // nonzero below the diagonal in a Hessenberg matrix)
+                for j in k..n {
+                    let tmp = u[(k, j)];
+                    u[(k, j)] = u[(k + 1, j)];
+                    u[(k + 1, j)] = tmp;
+                }
+                swapped[k] = true;
+            }
+            let pivot = u[(k, k)];
+            let pivot = if pivot.abs() < 1e-300 {
+                c64::new(1e-300, 0.0)
+            } else {
+                pivot
+            };
+            let m = u[(k + 1, k)] / pivot;
+            mult[k] = m;
+            u[(k + 1, k)] = c64::ZERO;
+            if m != c64::ZERO {
+                for j in k + 1..n {
+                    let ukj = u[(k, j)];
+                    u[(k + 1, j)] -= m * ukj;
+                }
+            }
+        }
+        Self { u, mult, swapped }
+    }
+
+    fn solve(&self, b: &[c64]) -> Vec<c64> {
+        let n = b.len();
+        let mut x = b.to_vec();
+        // forward pass replaying swaps + multipliers
+        for k in 0..n.saturating_sub(1) {
+            if self.swapped[k] {
+                x.swap(k, k + 1);
+            }
+            let m = self.mult[k];
+            if m != c64::ZERO {
+                let xk = x[k];
+                x[k + 1] -= m * xk;
+            }
+        }
+        // back substitution
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.u[(i, j)] * x[j];
+            }
+            let d = self.u[(i, i)];
+            let d = if d.abs() < 1e-300 {
+                c64::new(1e-300, 0.0)
+            } else {
+                d
+            };
+            x[i] = s / d;
+        }
+        x
+    }
+}
+
+/// Francis implicit double-shift QR on an upper Hessenberg matrix
+/// (in-place; destroys `h`). Classic EISPACK `hqr`, 0-indexed.
+pub(crate) fn francis_eigenvalues(h: &mut Mat) -> Vec<c64> {
+    let n = h.rows();
+    let mut wr = vec![0.0f64; n];
+    let mut wi = vec![0.0f64; n];
+
+    // overall norm for deflation thresholds
+    let mut anorm = 0.0f64;
+    for i in 0..n {
+        for j in i.saturating_sub(1)..n {
+            anorm += h[(i, j)].abs();
+        }
+    }
+    if anorm == 0.0 {
+        return vec![c64::ZERO; n];
+    }
+
+    let mut nn = n as isize - 1;
+    let mut t = 0.0f64; // accumulated exceptional shift
+    while nn >= 0 {
+        let mut its = 0;
+        loop {
+            // find small subdiagonal: l in 0..=nn with h[l][l-1] negligible
+            let mut l = nn;
+            while l >= 1 {
+                let s = h[(l as usize - 1, l as usize - 1)].abs()
+                    + h[(l as usize, l as usize)].abs();
+                let s = if s == 0.0 { anorm } else { s };
+                if h[(l as usize, l as usize - 1)].abs() <= f64::EPSILON * s {
+                    h[(l as usize, l as usize - 1)] = 0.0;
+                    break;
+                }
+                l -= 1;
+            }
+            let x = h[(nn as usize, nn as usize)];
+            if l == nn {
+                // one real root found
+                wr[nn as usize] = x + t;
+                wi[nn as usize] = 0.0;
+                nn -= 1;
+                break;
+            }
+            let y = h[(nn as usize - 1, nn as usize - 1)];
+            let w = h[(nn as usize, nn as usize - 1)]
+                * h[(nn as usize - 1, nn as usize)];
+            if l == nn - 1 {
+                // 2x2 block: two roots
+                let p = 0.5 * (y - x);
+                let q = p * p + w;
+                let z = q.abs().sqrt();
+                let x_t = x + t;
+                if q >= 0.0 {
+                    // real pair
+                    let z = p + if p >= 0.0 { z } else { -z };
+                    wr[nn as usize] = x_t + z;
+                    wr[nn as usize - 1] = wr[nn as usize];
+                    if z != 0.0 {
+                        wr[nn as usize] = x_t - w / z;
+                    }
+                    wi[nn as usize] = 0.0;
+                    wi[nn as usize - 1] = 0.0;
+                } else {
+                    // complex conjugate pair — store im>0 member FIRST
+                    wr[nn as usize - 1] = x_t + p;
+                    wr[nn as usize] = x_t + p;
+                    wi[nn as usize - 1] = z;
+                    wi[nn as usize] = -z;
+                }
+                nn -= 2;
+                break;
+            }
+            // no convergence yet: QR sweep
+            if its == 30 || its == 20 {
+                // exceptional shift
+                t += x;
+                for i in 0..=nn as usize {
+                    h[(i, i)] -= x;
+                }
+                let s = h[(nn as usize, nn as usize - 1)].abs()
+                    + h[(nn as usize - 1, nn as usize - 2)].abs();
+                let y2 = 0.75 * s;
+                let w2 = -0.4375 * s * s;
+                do_francis_sweep(h, l as usize, nn as usize, y2, y2, w2);
+            } else {
+                if its >= 60 {
+                    // give up on this block: take the diagonal as the root
+                    // (degenerate/defective input — documented behaviour)
+                    wr[nn as usize] = x + t;
+                    wi[nn as usize] = 0.0;
+                    nn -= 1;
+                    break;
+                }
+                do_francis_sweep(h, l as usize, nn as usize, x, y, w);
+            }
+            its += 1;
+        }
+    }
+
+    (0..n).map(|i| c64::new(wr[i], wi[i])).collect()
+}
+
+/// One implicit double-shift QR sweep on rows/cols `l..=nn` with shift data
+/// derived from trailing elements (x = h[nn][nn], y = h[nn-1][nn-1],
+/// w = h[nn][nn-1]*h[nn-1][nn]).
+fn do_francis_sweep(h: &mut Mat, l: usize, nn: usize, x: f64, y: f64, w: f64) {
+    let n = h.rows();
+    // find m: start of the bulge chase
+    let mut m = nn - 2;
+    let (mut p, mut q, mut r);
+    loop {
+        let z = h[(m, m)];
+        let rr = x - z;
+        let ss = y - z;
+        p = (rr * ss - w) / h[(m + 1, m)] + h[(m, m + 1)];
+        q = h[(m + 1, m + 1)] - z - rr - ss;
+        r = h[(m + 2, m + 1)];
+        let s = p.abs() + q.abs() + r.abs();
+        if s != 0.0 {
+            p /= s;
+            q /= s;
+            r /= s;
+        }
+        if m == l {
+            break;
+        }
+        let u = h[(m, m - 1)].abs() * (q.abs() + r.abs());
+        let v = p.abs()
+            * (h[(m - 1, m - 1)].abs() + z.abs() + h[(m + 1, m + 1)].abs());
+        if u <= f64::EPSILON * v {
+            break;
+        }
+        m -= 1;
+    }
+    for i in m + 2..=nn {
+        h[(i, i - 2)] = 0.0;
+        if i != m + 2 {
+            h[(i, i - 3)] = 0.0;
+        }
+    }
+    // double QR step: chase the bulge from m to nn-1
+    for k in m..nn {
+        if k != m {
+            p = h[(k, k - 1)];
+            q = h[(k + 1, k - 1)];
+            r = if k != nn - 1 { h[(k + 2, k - 1)] } else { 0.0 };
+            let x2 = p.abs() + q.abs() + r.abs();
+            if x2 != 0.0 {
+                p /= x2;
+                q /= x2;
+                r /= x2;
+            } else {
+                continue;
+            }
+        }
+        let mut s = (p * p + q * q + r * r).sqrt();
+        if p < 0.0 {
+            s = -s;
+        }
+        if s == 0.0 {
+            continue;
+        }
+        if k == m {
+            if l != m {
+                h[(k, k - 1)] = -h[(k, k - 1)];
+            }
+        } else {
+            h[(k, k - 1)] = -s * {
+                let x2 = h[(k, k - 1)].abs() + h[(k + 1, k - 1)].abs()
+                    + if k != nn - 1 {
+                        h[(k + 2, k - 1)].abs()
+                    } else {
+                        0.0
+                    };
+                x2
+            };
+        }
+        p += s;
+        let x2 = p / s;
+        let y2 = q / s;
+        let z2 = r / s;
+        q /= p;
+        r /= p;
+        // row modification
+        for j in k..n.min(nn + 1) {
+            let mut pp = h[(k, j)] + q * h[(k + 1, j)];
+            if k != nn - 1 {
+                pp += r * h[(k + 2, j)];
+            }
+            h[(k, j)] -= pp * x2;
+            h[(k + 1, j)] -= pp * y2;
+            if k != nn - 1 {
+                h[(k + 2, j)] -= pp * z2;
+            }
+        }
+        // column modification
+        let upper = if nn < k + 3 { nn } else { k + 3 };
+        for i in l..=upper {
+            let mut pp = x2 * h[(i, k)] + y2 * h[(i, k + 1)];
+            if k != nn - 1 {
+                pp += z2 * h[(i, k + 2)];
+            }
+            h[(i, k)] -= pp;
+            h[(i, k + 1)] -= pp * q;
+            if k != nn - 1 {
+                h[(i, k + 2)] -= pp * r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn sorted_reals(mut vals: Vec<f64>) -> Vec<f64> {
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let vals = eigenvalues(&a);
+        let mut re: Vec<f64> = vals.iter().map(|z| z.re).collect();
+        re.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (i, v) in re.iter().enumerate() {
+            assert!((v - (i + 1) as f64).abs() < 1e-10, "{re:?}");
+        }
+        assert!(vals.iter().all(|z| z.im.abs() < 1e-12));
+    }
+
+    #[test]
+    fn rotation_matrix_complex_pair() {
+        let th = 0.7f64;
+        let a = Mat::from_rows(2, 2, &[th.cos(), -th.sin(), th.sin(), th.cos()]);
+        let vals = eigenvalues(&a);
+        assert_eq!(vals.len(), 2);
+        let mut ims: Vec<f64> = vals.iter().map(|z| z.im).collect();
+        ims.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((ims[0] + th.sin()).abs() < 1e-12);
+        assert!((ims[1] - th.sin()).abs() < 1e-12);
+        for v in vals {
+            assert!((v.abs() - 1.0).abs() < 1e-12);
+            assert!((v.re - th.cos()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn companion_matrix_known_roots() {
+        // x³ - 6x² + 11x - 6 = (x-1)(x-2)(x-3)
+        let a = Mat::from_rows(3, 3, &[6.0, -11.0, 6.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0]);
+        let vals = eigenvalues(&a);
+        let re = sorted_reals(vals.iter().map(|z| z.re).collect());
+        for (got, want) in re.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((got - want).abs() < 1e-8, "{re:?}");
+        }
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        let mut rng = Pcg64::seeded(5);
+        for n in [3usize, 8, 17] {
+            let a = Mat::randn(n, n, &mut rng);
+            let vals = eigenvalues(&a);
+            let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+            let sum: c64 = vals.iter().fold(c64::ZERO, |s, &z| s + z);
+            assert!((sum.re - trace).abs() < 1e-8 * n as f64, "n={n}");
+            assert!(sum.im.abs() < 1e-8, "n={n}");
+            let det = super::super::Lu::factor(&a).det();
+            let prod = vals.iter().fold(c64::ONE, |p, &z| p * z);
+            assert!(
+                (prod.re - det).abs() < 1e-6 * det.abs().max(1.0),
+                "n={n} prod={prod:?} det={det}"
+            );
+        }
+    }
+
+    #[test]
+    fn conjugate_pairs_adjacent_and_closed() {
+        let mut rng = Pcg64::seeded(6);
+        let a = Mat::randn(20, 20, &mut rng);
+        let vals = eigenvalues(&a);
+        let mut i = 0;
+        while i < vals.len() {
+            if vals[i].im.abs() > 1e-12 {
+                assert!(i + 1 < vals.len());
+                assert!((vals[i + 1] - vals[i].conj()).abs() < 1e-9);
+                assert!(vals[i].im > 0.0, "im>0 member first");
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn full_eig_residual_small_random() {
+        let mut rng = Pcg64::seeded(7);
+        for n in [5usize, 12, 30] {
+            let mut a = Mat::randn(n, n, &mut rng);
+            a.scale(1.0 / (n as f64).sqrt());
+            let e = eig(&a);
+            assert!(
+                e.max_residual < 1e-6,
+                "n={n} residual={}",
+                e.max_residual
+            );
+        }
+    }
+
+    #[test]
+    fn full_eig_reconstruction() {
+        let mut rng = Pcg64::seeded(8);
+        let n = 16;
+        let mut a = Mat::randn(n, n, &mut rng);
+        a.scale(1.0 / (n as f64).sqrt());
+        let e = eig(&a);
+        // A ≈ P · diag(λ) · P⁻¹
+        let mut pd = e.p.clone();
+        for j in 0..n {
+            for i in 0..n {
+                let v = pd[(i, j)];
+                pd[(i, j)] = v * e.values[j];
+            }
+        }
+        let pinv = super::super::CLu::factor(&e.p).inverse().unwrap();
+        let rec = pd.matmul(&pinv);
+        let rec_err = rec.real_part().max_abs_diff(&a);
+        let imag_leak = rec.imag_part().frobenius();
+        assert!(rec_err < 1e-7, "rec_err={rec_err}");
+        assert!(imag_leak < 1e-7, "imag={imag_leak}");
+    }
+
+    #[test]
+    fn symmetric_matrix_real_spectrum() {
+        let mut rng = Pcg64::seeded(9);
+        let b = Mat::randn(10, 10, &mut rng);
+        let a = {
+            let mut s = b.matmul(&b.transpose());
+            s.scale(0.1);
+            s
+        };
+        let vals = eigenvalues(&a);
+        for v in &vals {
+            assert!(v.im.abs() < 1e-8, "{v:?}");
+            assert!(v.re > -1e-10); // PSD
+        }
+    }
+
+    #[test]
+    fn eigenvalue_count_always_n() {
+        let mut rng = Pcg64::seeded(10);
+        for n in 1..25usize {
+            let a = Mat::randn(n, n, &mut rng);
+            assert_eq!(eigenvalues(&a).len(), n);
+        }
+    }
+
+    #[test]
+    fn handles_degenerate_sparse_matrix_without_panic() {
+        // mostly-zero matrix: heavily repeated zero eigenvalue (Fig 7 regime)
+        let mut a = Mat::zeros(12, 12);
+        a[(0, 1)] = 0.5;
+        a[(3, 7)] = -0.2;
+        let e = eig(&a);
+        assert_eq!(e.values.len(), 12);
+        // spectrum is all zeros (nilpotent)
+        for v in &e.values {
+            assert!(v.abs() < 1e-6, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn spectral_radius_of_scaled_matrix() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 40;
+        let mut a = Mat::randn(n, n, &mut rng);
+        a.scale(1.0 / (n as f64).sqrt()); // circular law: ρ ≈ 1
+        let rho = eigenvalues(&a)
+            .iter()
+            .map(|z| z.abs())
+            .fold(0.0, f64::max);
+        assert!((rho - 1.0).abs() < 0.35, "rho={rho}");
+    }
+}

@@ -1,0 +1,359 @@
+//! LU factorization with partial pivoting — real ([`Lu`]) and complex
+//! ([`CLu`]). Used for `P⁻¹` (EWT weight transformation), determinant-based
+//! conditioning checks, and the shifted Hessenberg solves inside inverse
+//! iteration.
+
+use anyhow::{bail, Result};
+
+use crate::num::c64;
+
+use super::{CMat, Mat};
+
+/// Real LU factorization `P·A = L·U` (P a row permutation).
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    /// Number of row swaps (sign of the permutation).
+    swaps: usize,
+    singular: bool,
+}
+
+impl Lu {
+    /// Factor. Singularity is recorded, not an error — `solve` fails, but
+    /// `is_singular` lets callers degrade gracefully (the paper's Fig 7
+    /// regime *wants* to observe near-singular eigenbases).
+    pub fn factor(a: &Mat) -> Self {
+        assert_eq!(a.rows(), a.cols());
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut swaps = 0;
+        let mut singular = false;
+
+        for k in 0..n {
+            // pivot: largest |entry| in column k at/below diagonal
+            let mut p = k;
+            let mut max = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > max {
+                    max = v;
+                    p = i;
+                }
+            }
+            if max == 0.0 {
+                singular = true;
+                continue;
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+                piv.swap(k, p);
+                swaps += 1;
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    for j in k + 1..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= m * v;
+                    }
+                }
+            }
+        }
+        Self {
+            lu,
+            piv,
+            swaps,
+            singular,
+        }
+    }
+
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    /// Reciprocal condition estimate via |pivot| ratio (cheap; adequate for
+    /// the "is this eigenbasis collapsing" diagnostics of Fig 7).
+    pub fn rcond_estimate(&self) -> f64 {
+        let n = self.lu.rows();
+        let mut min = f64::INFINITY;
+        let mut max: f64 = 0.0;
+        for i in 0..n {
+            let p = self.lu[(i, i)].abs();
+            min = min.min(p);
+            max = max.max(p);
+        }
+        if max == 0.0 {
+            0.0
+        } else {
+            min / max
+        }
+    }
+
+    pub fn det(&self) -> f64 {
+        if self.singular {
+            return 0.0;
+        }
+        let mut d = if self.swaps % 2 == 0 { 1.0 } else { -1.0 };
+        for i in 0..self.lu.rows() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+
+    /// Solve `A·x = b` in place.
+    pub fn solve_vec(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if self.singular {
+            bail!("LU: matrix is singular");
+        }
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // forward: L y = Pb
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s;
+        }
+        // backward: U x = y
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        Ok(x)
+    }
+
+    /// Solve `A·X = B` column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Result<Mat> {
+        let n = self.lu.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = Mat::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve_vec(&col)?;
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn inverse(&self) -> Result<Mat> {
+        self.solve_mat(&Mat::eye(self.lu.rows()))
+    }
+}
+
+/// Complex LU factorization with partial pivoting.
+pub struct CLu {
+    lu: CMat,
+    piv: Vec<usize>,
+    singular: bool,
+}
+
+impl CLu {
+    pub fn factor(a: &CMat) -> Self {
+        assert_eq!(a.rows(), a.cols());
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut singular = false;
+
+        for k in 0..n {
+            let mut p = k;
+            let mut max = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > max {
+                    max = v;
+                    p = i;
+                }
+            }
+            if max == 0.0 {
+                singular = true;
+                continue;
+            }
+            if p != k {
+                for j in 0..n {
+                    let tmp = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = tmp;
+                }
+                piv.swap(k, p);
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != c64::ZERO {
+                    for j in k + 1..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= m * v;
+                    }
+                }
+            }
+        }
+        Self { lu, piv, singular }
+    }
+
+    pub fn is_singular(&self) -> bool {
+        self.singular
+    }
+
+    pub fn rcond_estimate(&self) -> f64 {
+        let n = self.lu.rows();
+        let mut min = f64::INFINITY;
+        let mut max: f64 = 0.0;
+        for i in 0..n {
+            let p = self.lu[(i, i)].abs();
+            min = min.min(p);
+            max = max.max(p);
+        }
+        if max == 0.0 {
+            0.0
+        } else {
+            min / max
+        }
+    }
+
+    pub fn solve_vec(&self, b: &[c64]) -> Result<Vec<c64>> {
+        if self.singular {
+            bail!("CLU: matrix is singular");
+        }
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        let mut x: Vec<c64> = self.piv.iter().map(|&p| b[p]).collect();
+        for i in 1..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s;
+        }
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = s / self.lu[(i, i)];
+        }
+        Ok(x)
+    }
+
+    pub fn solve_mat(&self, b: &CMat) -> Result<CMat> {
+        let n = self.lu.rows();
+        assert_eq!(b.rows(), n);
+        let mut out = CMat::zeros(n, b.cols());
+        let mut col = vec![c64::ZERO; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b[(i, j)];
+            }
+            let x = self.solve_vec(&col)?;
+            for i in 0..n {
+                out[(i, j)] = x[i];
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn inverse(&self) -> Result<CMat> {
+        self.solve_mat(&CMat::eye(self.lu.rows()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distributions, Pcg64};
+
+    #[test]
+    fn solve_recovers_known_solution() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Mat::randn(8, 8, &mut rng);
+        let x_true = rng.normal_vec(8);
+        let mut b = vec![0.0; 8];
+        a.matvec(&x_true, &mut b);
+        let x = Lu::factor(&a).solve_vec(&b).unwrap();
+        for i in 0..8 {
+            assert!((x[i] - x_true[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Mat::randn(10, 10, &mut rng);
+        let inv = Lu::factor(&a).inverse().unwrap();
+        assert!(a.matmul(&inv).max_abs_diff(&Mat::eye(10)) < 1e-9);
+    }
+
+    #[test]
+    fn det_of_triangular() {
+        let a = Mat::from_rows(3, 3, &[2.0, 1.0, 0.0, 0.0, 3.0, 5.0, 0.0, 0.0, 4.0]);
+        assert!((Lu::factor(&a).det() - 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_sign_under_swap() {
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        assert!((Lu::factor(&a).det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        let lu = Lu::factor(&a);
+        assert!(lu.is_singular());
+        assert!(lu.solve_vec(&[1.0, 0.0]).is_err());
+        assert_eq!(lu.det(), 0.0);
+    }
+
+    #[test]
+    fn complex_solve_roundtrip() {
+        let mut rng = Pcg64::seeded(3);
+        let a = CMat::from_fn(6, 6, |_, _| c64::new(rng.normal(), rng.normal()));
+        let x_true: Vec<c64> =
+            (0..6).map(|_| c64::new(rng.normal(), rng.normal())).collect();
+        let mut b = vec![c64::ZERO; 6];
+        for i in 0..6 {
+            for j in 0..6 {
+                b[i] += a[(i, j)] * x_true[j];
+            }
+        }
+        let x = CLu::factor(&a).solve_vec(&b).unwrap();
+        for i in 0..6 {
+            assert!((x[i] - x_true[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn complex_inverse() {
+        let mut rng = Pcg64::seeded(4);
+        let a = CMat::from_fn(7, 7, |_, _| c64::new(rng.normal(), rng.normal()));
+        let inv = CLu::factor(&a).inverse().unwrap();
+        assert!(a.matmul(&inv).max_abs_diff(&CMat::eye(7)) < 1e-9);
+    }
+
+    #[test]
+    fn rcond_sane() {
+        let well = Mat::eye(5);
+        assert!((Lu::factor(&well).rcond_estimate() - 1.0).abs() < 1e-12);
+        let mut ill = Mat::eye(5);
+        ill[(4, 4)] = 1e-14;
+        assert!(Lu::factor(&ill).rcond_estimate() < 1e-10);
+    }
+}

@@ -1,0 +1,25 @@
+//! Dense linear algebra, from scratch (no LAPACK/nalgebra in the offline
+//! registry): real and complex matrices, LU and Cholesky factorizations,
+//! Householder Hessenberg reduction, Francis double-shift QR (eigenvalues)
+//! and shifted-inverse-iteration eigenvectors — everything the paper's
+//! diagonalization pipeline (EWT/EET/Sim) needs.
+//!
+//! Conventions: matrices are row-major; the reservoir equations use **row
+//! vectors** (`r(t) = r(t-1)·W`), matching the paper, so "apply W to state"
+//! is [`Mat::vecmat`]. The eigensolver returns *column* right-eigenvectors
+//! (`W·v = λ·v`), i.e. `W = P·D·P⁻¹` with eigenvector columns in `P` — the
+//! form Theorem 1 transforms with.
+
+pub(crate) mod cdense;
+mod cholesky;
+pub(crate) mod dense;
+mod eig;
+mod hessenberg;
+mod lu;
+
+pub use cdense::CMat;
+pub use cholesky::Cholesky;
+pub use dense::Mat;
+pub use eig::{eig, eigenvalues, Eig};
+pub use hessenberg::hessenberg;
+pub use lu::{CLu, Lu};

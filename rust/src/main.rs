@@ -1,0 +1,298 @@
+//! `repro` — the leader binary: regenerates every table/figure of the
+//! paper, runs the end-to-end pipeline, and serves trained models.
+//!
+//! ```text
+//! repro table2 [--tasks 1,2,…] [--seeds N] [--n N] [--quick]
+//! repro fig2   [--sizes 100,300,…] [--quick]
+//! repro fig3   [--n 500]
+//! repro fig4   [--k 5]
+//! repro fig5   [--k 8] [--n 100]
+//! repro fig6   [--sizes 100,300] [--seeds 3] [--full]
+//! repro fig7   [--sizes 100,300] [--seeds 3] [--full]
+//! repro ablation-noise | ablation-eigvec | ablation-gamma
+//! repro e2e    [--k 5] [--n 100]
+//! repro serve  [--addr 127.0.0.1:7878] [--k 5] [--n 100]
+//! repro all    [--quick]       # every driver with small budgets
+//! ```
+
+use anyhow::Result;
+use linear_reservoir::cli::Args;
+use linear_reservoir::coordinator::{GridSpec, MethodKind};
+use linear_reservoir::experiments::{
+    ablation, e2e, fig2, fig3, fig4, fig5, fig6, fig7, results_dir, table2,
+};
+use linear_reservoir::util::Timer;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            eprintln!("{}", HELP);
+            std::process::exit(2);
+        }
+    };
+    let t = Timer::start();
+    let result = dispatch(&args);
+    match result {
+        Ok(()) => println!("\ndone in {:.1}s", t.elapsed_s()),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+const HELP: &str = "usage: repro <table2|fig2|fig3|fig4|fig5|fig6|fig7|\
+ablation-noise|ablation-eigvec|ablation-gamma|e2e|serve|all|help> [--opts]";
+
+fn parse_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|x| x.trim().parse::<usize>().map_err(Into::into))
+        .collect()
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let out = results_dir();
+    match args.subcommand.as_str() {
+        "help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "table2" => {
+            let tasks = match args.get("tasks") {
+                Some(s) => parse_list(s)?,
+                None => (1..=12).collect(),
+            };
+            let seeds = args.get_u64("seeds", 10)?;
+            let n = args.get_usize("n", 100)?;
+            let spec = if args.flag("quick") {
+                GridSpec::quick()
+            } else {
+                GridSpec::paper_table1()
+            };
+            let methods = MethodKind::table2_set();
+            println!(
+                "Table 2: tasks {tasks:?}, {seeds} seeds, grid size {}",
+                spec.size()
+            );
+            let cells = table2::run(&tasks, &methods, seeds, spec, n, true)?;
+            table2::emit(&cells, &methods, &out.join("table2.csv"))?;
+            println!("\nwins per method:");
+            for (label, count) in table2::wins(&cells, &methods) {
+                println!("  {label:<18} {count}");
+            }
+            Ok(())
+        }
+        "fig2" => {
+            let sizes = match args.get("sizes") {
+                Some(s) => parse_list(s)?,
+                None => vec![50, 100, 200, 400, 800, 1600],
+            };
+            let quick = args.flag("quick");
+            let rows = fig2::run(&sizes, if quick { 1 } else { 3 }, quick)?;
+            fig2::emit(&rows, &out.join("fig2.csv"))
+        }
+        "fig3" => {
+            let n = args.get_usize("n", 500)?;
+            let points = fig3::run(n, args.get_u64("seed", 0)?);
+            fig3::emit(&points, &out.join("fig3.csv"))
+        }
+        "fig4" => {
+            let k = args.get_usize("k", 5)?;
+            let rows = fig4::run(k);
+            fig4::emit(&rows, &out.join("fig4.csv"))
+        }
+        "fig5" => {
+            let k = args.get_usize("k", 8)?;
+            let n = args.get_usize("n", 100)?;
+            let points = fig5::run(k, n, args.get_u64("seed", 0)?, 1e-8)?;
+            fig5::emit(&points, k, &out.join("fig5.csv"))
+        }
+        "fig6" => {
+            let sizes = match args.get("sizes") {
+                Some(s) => parse_list(s)?,
+                None if args.flag("full") => vec![100, 300, 600, 1000],
+                None => vec![100, 300],
+            };
+            let seeds = args.get_u64("seeds", 3)?;
+            let rows = fig6::run(&sizes, seeds, 1e-7, true)?;
+            fig6::emit(&rows, &out.join("fig6.csv"))
+        }
+        "fig7" => {
+            let sizes = match args.get("sizes") {
+                Some(s) => parse_list(s)?,
+                None if args.flag("full") => vec![100, 300, 600, 1000],
+                None => vec![100, 300],
+            };
+            let seeds = args.get_u64("seeds", 3)?;
+            let conns = fig7::connectivity_grid();
+            let mut all = Vec::new();
+            for n in sizes {
+                let delay = match args.get("delay") {
+                    Some(d) => d.parse()?,
+                    None => {
+                        let d = fig7::calibrate_delay(n, seeds.min(2), 1e-7)?;
+                        println!("  N={n}: calibrated delay {d} (MC≈0.5 at conn=1)");
+                        d
+                    }
+                };
+                let rows = fig7::run(n, delay, &conns, seeds, 1e-7, true)?;
+                all.extend(rows);
+            }
+            fig7::emit(&all, &out.join("fig7.csv"))
+        }
+        "ablation-noise" => {
+            let k = args.get_usize("k", 5)?;
+            let seeds = args.get_u64("seeds", 3)?;
+            let spec = if args.flag("full") {
+                GridSpec::paper_table1()
+            } else {
+                GridSpec::quick()
+            };
+            let rows = ablation::noise_sweep(
+                k,
+                &[0.0, 0.05, 0.1, 0.2, 0.4],
+                seeds,
+                spec,
+                args.get_usize("n", 100)?,
+            )?;
+            ablation::emit_noise_sweep(&rows, &out.join("ablation_noise.csv"))
+        }
+        "ablation-eigvec" => {
+            let scores = ablation::eigvec_role(
+                args.get_usize("k", 5)?,
+                args.get_usize("n", 100)?,
+                args.get_u64("resamples", 8)?,
+                1e-8,
+            )?;
+            let s = linear_reservoir::util::stats::Summary::of(&scores);
+            println!(
+                "eigenvector-role ablation: rmse mean={:.3e} min={:.3e} max={:.3e} \
+                 (spread ×{:.1})",
+                s.mean,
+                s.min,
+                s.max,
+                s.max / s.min.max(1e-300)
+            );
+            Ok(())
+        }
+        "ablation-gamma" => {
+            let (std_rmse, gamma_rmse) = ablation::gamma_readout(
+                args.get_usize("k", 5)?,
+                args.get_usize("n", 100)?,
+                args.get_u64("seed", 0)?,
+                1e-9,
+            )?;
+            println!(
+                "Appendix-C γ readout: standard rmse={std_rmse:.3e}, γ rmse={gamma_rmse:.3e}"
+            );
+            Ok(())
+        }
+        "e2e" => {
+            let report = e2e::run(
+                args.get_usize("k", 5)?,
+                args.get_usize("n", 100)?,
+                args.get_u64("seed", 0)?,
+                1e-8,
+            )?;
+            e2e::print_report(&report);
+            Ok(())
+        }
+        "run" => {
+            use linear_reservoir::coordinator::ExperimentSpec;
+            let path = args
+                .get("config")
+                .ok_or_else(|| anyhow::anyhow!("run requires --config <file.json>"))?;
+            let text = std::fs::read_to_string(path)?;
+            let spec = ExperimentSpec::from_json_str(&text)?;
+            let r = spec.execute()?;
+            println!(
+                "config {path}: test RMSE {:.3e}, NRMSE {:.3e} ({} train / {} test rows)",
+                r.test_rmse, r.test_nrmse, r.train_rows, r.test_rows
+            );
+            Ok(())
+        }
+        "serve" => {
+            use linear_reservoir::readout::{fit, Regularizer};
+            use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
+            use linear_reservoir::rng::Pcg64;
+            use linear_reservoir::server::{serve, Model};
+            use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
+            use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
+            use std::sync::Arc;
+
+            let k = args.get_usize("k", 5)?;
+            let n = args.get_usize("n", 100)?;
+            let addr = args.get_str("addr", "127.0.0.1:7878");
+            let config = EsnConfig::default().with_n(n).with_sr(0.9).with_seed(0);
+            let mut rng = Pcg64::new(0, 70);
+            let spec =
+                golden_spectrum(n, GoldenParams { sr: 0.9, sigma: 0.2 }, &mut rng);
+            let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+            let task = MsoTask::new(k);
+            let splits = MsoTask::splits();
+            let feats = esn.run(&task.input_mat());
+            let x = slice_rows(&feats, splits.train.clone());
+            let y = task.target_mat(splits.train.clone());
+            let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity)?;
+            println!("serving MSO{k} model (N={n}) on {addr} …");
+            serve(Arc::new(Model { esn, readout }), addr, None)
+        }
+        "all" => {
+            let quick = args.flag("quick");
+            // quick mode writes *_quick.csv so it never clobbers full runs
+            let sfx = if quick { "_quick" } else { "" };
+            println!("== fig2 ==");
+            let rows = fig2::run(&[50, 100, 200, 400], 1, true)?;
+            fig2::emit(&rows, &out.join(format!("fig2{sfx}.csv")))?;
+            println!("\n== fig3 ==");
+            fig3::emit(&fig3::run(500, 0), &out.join(format!("fig3{sfx}.csv")))?;
+            println!("\n== fig4 ==");
+            fig4::emit(&fig4::run(5), &out.join(format!("fig4{sfx}.csv")))?;
+            println!("\n== fig5 ==");
+            fig5::emit(&fig5::run(8, 100, 0, 1e-8)?, 8, &out.join(format!("fig5{sfx}.csv")))?;
+            println!("\n== table2 ==");
+            let methods = MethodKind::table2_set();
+            let (tasks, seeds, spec): (Vec<usize>, u64, GridSpec) = if quick {
+                (vec![1, 5], 2, GridSpec::quick())
+            } else {
+                ((1..=12).collect(), 10, GridSpec::paper_table1())
+            };
+            let cells = table2::run(&tasks, &methods, seeds, spec, 100, true)?;
+            table2::emit(&cells, &methods, &out.join(format!("table2{sfx}.csv")))?;
+            println!("\n== fig6 ==");
+            let sizes = if quick {
+                vec![100]
+            } else {
+                vec![100, 300, 600, 1000]
+            };
+            let rows6 = fig6::run(&sizes, if quick { 1 } else { 3 }, 1e-7, true)?;
+            fig6::emit(&rows6, &out.join(format!("fig6{sfx}.csv")))?;
+            println!("\n== fig7 ==");
+            let mut all7 = Vec::new();
+            for &n in &sizes {
+                let delay = fig6::crossing_delay(&rows6, n, "normal")
+                    .unwrap_or(fig6::k_max_for(n) / 2);
+                all7.extend(fig7::run(
+                    n,
+                    delay,
+                    &fig7::connectivity_grid(),
+                    if quick { 1 } else { 3 },
+                    1e-7,
+                    true,
+                )?);
+            }
+            fig7::emit(&all7, &out.join(format!("fig7{sfx}.csv")))?;
+            println!("\n== e2e ==");
+            match e2e::run(5, 100, 0, 1e-8) {
+                Ok(r) => e2e::print_report(&r),
+                Err(e) => println!("e2e skipped: {e:#}"),
+            }
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown subcommand {other:?}\n{HELP}")
+        }
+    }
+}

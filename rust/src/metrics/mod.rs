@@ -1,0 +1,140 @@
+//! Evaluation metrics: RMSE (Table 2), the determination coefficient /
+//! k-delay memory capacity (Eq. 23–24, Figs 6–7), NRMSE and R².
+
+use crate::linalg::Mat;
+use crate::util::stats::pearson;
+
+/// Root mean squared error between prediction and target matrices.
+pub fn rmse(pred: &Mat, target: &Mat) -> f64 {
+    assert_eq!((pred.rows(), pred.cols()), (target.rows(), target.cols()));
+    let n = (pred.rows() * pred.cols()) as f64;
+    let mut s = 0.0;
+    for i in 0..pred.rows() {
+        let p = pred.row(i);
+        let t = target.row(i);
+        for j in 0..pred.cols() {
+            let d = p[j] - t[j];
+            s += d * d;
+        }
+    }
+    (s / n).sqrt()
+}
+
+/// RMSE normalized by the target's standard deviation.
+pub fn nrmse(pred: &Mat, target: &Mat) -> f64 {
+    let n = (target.rows() * target.cols()) as f64;
+    let mean: f64 = (0..target.rows())
+        .map(|i| target.row(i).iter().sum::<f64>())
+        .sum::<f64>()
+        / n;
+    let var: f64 = (0..target.rows())
+        .map(|i| {
+            target
+                .row(i)
+                .iter()
+                .map(|x| (x - mean) * (x - mean))
+                .sum::<f64>()
+        })
+        .sum::<f64>()
+        / n;
+    if var == 0.0 {
+        f64::INFINITY
+    } else {
+        rmse(pred, target) / var.sqrt()
+    }
+}
+
+/// Coefficient of determination R² (1 − SSE/SST) over flattened entries.
+pub fn r2(pred: &Mat, target: &Mat) -> f64 {
+    let n = (target.rows() * target.cols()) as f64;
+    let mean: f64 = (0..target.rows())
+        .map(|i| target.row(i).iter().sum::<f64>())
+        .sum::<f64>()
+        / n;
+    let mut sse = 0.0;
+    let mut sst = 0.0;
+    for i in 0..target.rows() {
+        for j in 0..target.cols() {
+            let d = pred[(i, j)] - target[(i, j)];
+            sse += d * d;
+            let dm = target[(i, j)] - mean;
+            sst += dm * dm;
+        }
+    }
+    if sst == 0.0 {
+        if sse == 0.0 {
+            1.0
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        1.0 - sse / sst
+    }
+}
+
+/// Eq. 23: determination coefficient `d(u(t−k), y_k(t))` — the squared
+/// correlation between the delayed input and the readout's reconstruction.
+/// This IS the k-delay memory capacity once the readout is ridge-optimal
+/// (Eq. 24).
+pub fn determination(u_delayed: &[f64], y: &[f64]) -> f64 {
+    let r = pearson(u_delayed, y);
+    let d = r * r;
+    if d.is_finite() {
+        d
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Distributions, Pcg64};
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Mat::randn(10, 2, &mut rng);
+        assert_eq!(rmse(&a, &a), 0.0);
+        assert_eq!(r2(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        let a = Mat::from_rows(2, 1, &[0.0, 0.0]);
+        let b = Mat::from_rows(2, 1, &[3.0, 4.0]);
+        // √((9+16)/2) = √12.5
+        assert!((rmse(&a, &b) - 12.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nrmse_scale_invariant() {
+        let mut rng = Pcg64::seeded(2);
+        let t = Mat::randn(200, 1, &mut rng);
+        let mut p = t.clone();
+        for i in 0..200 {
+            p[(i, 0)] += 0.1 * rng.normal();
+        }
+        let base = nrmse(&p, &t);
+        let mut t2 = t.clone();
+        t2.scale(10.0);
+        let mut p2 = p.clone();
+        p2.scale(10.0);
+        assert!((nrmse(&p2, &t2) - base).abs() < 1e-12);
+    }
+
+    #[test]
+    fn determination_perfect_reconstruction() {
+        let u: Vec<f64> = (0..50).map(|i| (i as f64 * 0.3).sin()).collect();
+        let y: Vec<f64> = u.iter().map(|x| 2.0 * x + 1.0).collect(); // affine
+        assert!((determination(&u, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn determination_independent_signals_near_zero() {
+        let mut rng = Pcg64::seeded(3);
+        let u = rng.normal_vec(5000);
+        let y = rng.normal_vec(5000);
+        assert!(determination(&u, &y) < 0.01);
+    }
+}

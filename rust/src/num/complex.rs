@@ -1,0 +1,265 @@
+//! Complex double-precision scalar (no `num-complex` in the offline
+//! registry). Field and method names follow the usual conventions so the
+//! math modules read like their textbook sources.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Complex number with `f64` components.
+#[allow(non_camel_case_types)]
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct c64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl c64 {
+    pub const ZERO: c64 = c64 { re: 0.0, im: 0.0 };
+    pub const ONE: c64 = c64 { re: 1.0, im: 0.0 };
+    pub const I: c64 = c64 { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub const fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    #[inline]
+    pub const fn real(re: f64) -> Self {
+        Self { re, im: 0.0 }
+    }
+
+    /// From polar form `m·e^{iθ}`.
+    #[inline]
+    pub fn from_polar(modulus: f64, angle: f64) -> Self {
+        Self::new(modulus * angle.cos(), modulus * angle.sin())
+    }
+
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self::new(self.re, -self.im)
+    }
+
+    /// Squared modulus `re² + im²`.
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Modulus `|z|` (hypot: overflow-safe).
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    /// Principal argument in `(-π, π]`.
+    #[inline]
+    pub fn arg(self) -> f64 {
+        self.im.atan2(self.re)
+    }
+
+    /// Multiplicative inverse (scaled to avoid overflow for large |z|).
+    #[inline]
+    pub fn inv(self) -> Self {
+        let d = self.norm_sqr();
+        Self::new(self.re / d, -self.im / d)
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Self {
+        Self::new(self.re * s, self.im * s)
+    }
+
+    /// Complex square root (principal branch).
+    pub fn sqrt(self) -> Self {
+        let m = self.abs();
+        let re = ((m + self.re) * 0.5).max(0.0).sqrt();
+        let im_mag = ((m - self.re) * 0.5).max(0.0).sqrt();
+        Self::new(re, if self.im >= 0.0 { im_mag } else { -im_mag })
+    }
+
+    /// Integer power by repeated squaring.
+    pub fn powi(self, mut k: u32) -> Self {
+        let mut base = self;
+        let mut acc = c64::ONE;
+        while k > 0 {
+            if k & 1 == 1 {
+                acc *= base;
+            }
+            base *= base;
+            k >>= 1;
+        }
+        acc
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.re.is_finite() && self.im.is_finite()
+    }
+}
+
+impl fmt::Debug for c64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.im >= 0.0 {
+            write!(f, "{:.6}+{:.6}i", self.re, self.im)
+        } else {
+            write!(f, "{:.6}-{:.6}i", self.re, -self.im)
+        }
+    }
+}
+
+impl fmt::Display for c64 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl From<f64> for c64 {
+    fn from(x: f64) -> Self {
+        Self::real(x)
+    }
+}
+
+impl Add for c64 {
+    type Output = c64;
+    #[inline]
+    fn add(self, o: c64) -> c64 {
+        c64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for c64 {
+    type Output = c64;
+    #[inline]
+    fn sub(self, o: c64) -> c64 {
+        c64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for c64 {
+    type Output = c64;
+    #[inline]
+    fn mul(self, o: c64) -> c64 {
+        c64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Div for c64 {
+    type Output = c64;
+    #[inline]
+    fn div(self, o: c64) -> c64 {
+        // Smith's algorithm: avoids overflow/underflow of naive norm_sqr.
+        if o.re.abs() >= o.im.abs() {
+            let r = o.im / o.re;
+            let d = o.re + o.im * r;
+            c64::new((self.re + self.im * r) / d, (self.im - self.re * r) / d)
+        } else {
+            let r = o.re / o.im;
+            let d = o.re * r + o.im;
+            c64::new((self.re * r + self.im) / d, (self.im * r - self.re) / d)
+        }
+    }
+}
+
+impl Neg for c64 {
+    type Output = c64;
+    #[inline]
+    fn neg(self) -> c64 {
+        c64::new(-self.re, -self.im)
+    }
+}
+
+impl Mul<f64> for c64 {
+    type Output = c64;
+    #[inline]
+    fn mul(self, s: f64) -> c64 {
+        self.scale(s)
+    }
+}
+
+impl AddAssign for c64 {
+    #[inline]
+    fn add_assign(&mut self, o: c64) {
+        *self = *self + o;
+    }
+}
+impl SubAssign for c64 {
+    #[inline]
+    fn sub_assign(&mut self, o: c64) {
+        *self = *self - o;
+    }
+}
+impl MulAssign for c64 {
+    #[inline]
+    fn mul_assign(&mut self, o: c64) {
+        *self = *self * o;
+    }
+}
+impl DivAssign for c64 {
+    #[inline]
+    fn div_assign(&mut self, o: c64) {
+        *self = *self / o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: c64, b: c64) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn field_identities() {
+        let z = c64::new(3.0, -4.0);
+        assert!(close(z * c64::ONE, z));
+        assert!(close(z + c64::ZERO, z));
+        assert!(close(z * z.inv(), c64::ONE));
+        assert!(close(z / z, c64::ONE));
+    }
+
+    #[test]
+    fn abs_and_conj() {
+        let z = c64::new(3.0, 4.0);
+        assert!((z.abs() - 5.0).abs() < 1e-15);
+        assert!((z * z.conj()).im.abs() < 1e-15);
+        assert!(((z * z.conj()).re - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn polar_roundtrip() {
+        let z = c64::from_polar(2.0, 1.1);
+        assert!((z.abs() - 2.0).abs() < 1e-12);
+        assert!((z.arg() - 1.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        for &(re, im) in &[(4.0, 0.0), (-4.0, 0.0), (1.0, 1.0), (-3.0, -7.0)] {
+            let z = c64::new(re, im);
+            let r = z.sqrt();
+            assert!(close(r * r, z), "sqrt({z:?}) = {r:?}");
+        }
+    }
+
+    #[test]
+    fn powi_matches_repeated_mul() {
+        let z = c64::new(0.9, 0.3);
+        let mut acc = c64::ONE;
+        for k in 0..16u32 {
+            assert!(close(z.powi(k), acc));
+            acc *= z;
+        }
+    }
+
+    #[test]
+    fn division_extreme_magnitudes() {
+        let a = c64::new(1e150, 1e150);
+        let b = c64::new(1e150, -1e150);
+        let q = a / b;
+        assert!(q.is_finite());
+        assert!(close(q * b, a));
+    }
+}

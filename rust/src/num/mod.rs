@@ -1,0 +1,5 @@
+//! Scalar numeric types: split-free complex arithmetic ([`c64`]).
+
+mod complex;
+
+pub use complex::c64;

@@ -1,0 +1,123 @@
+//! Polynomial (nonlinear) readout — the paper's stated future-work
+//! direction ("adapt the methods with non linear readout", citing Gonon &
+//! Ortega 2019: a LINEAR reservoir + polynomial readout is a universal
+//! approximator). The reservoir stays O(N) and diagonal; only the readout
+//! features are expanded:
+//!
+//! ```text
+//! φ(x) = [ x | x⊙x | x_i·x_{i+1} (adjacent pairs) ]     (3N−1 features)
+//! ```
+//!
+//! The adjacent-pair products cover the Q-basis layout's (Re, Im) couples,
+//! so |s|² = Re² + Im² and Re·Im — the natural quadratic invariants of
+//! each eigen-mode — are all in the span. Training is still one ridge
+//! solve (Eq. 9 on φ(X)).
+
+use anyhow::Result;
+
+use crate::linalg::Mat;
+
+use super::{fit, Readout, Regularizer};
+
+/// Quadratic feature expansion of a `[T × N]` state matrix → `[T × (3N−1)]`.
+pub fn quadratic_features(x: &Mat) -> Mat {
+    let t_len = x.rows();
+    let n = x.cols();
+    let out_cols = if n > 0 { 3 * n - 1 } else { 0 };
+    let mut out = Mat::zeros(t_len, out_cols);
+    for t in 0..t_len {
+        let row = x.row(t);
+        let orow = out.row_mut(t);
+        orow[..n].copy_from_slice(row);
+        for j in 0..n {
+            orow[n + j] = row[j] * row[j];
+        }
+        for j in 0..n - 1 {
+            orow[2 * n + j] = row[j] * row[j + 1];
+        }
+    }
+    out
+}
+
+/// Trained polynomial readout: expansion + ridge weights.
+pub struct PolyReadout {
+    pub inner: Readout,
+}
+
+impl PolyReadout {
+    /// Fit on states `x [T × N]`, targets `y [T × D]`.
+    pub fn fit(x: &Mat, y: &Mat, alpha: f64) -> Result<Self> {
+        let phi = quadratic_features(x);
+        Ok(Self {
+            inner: fit(&phi, y, alpha, true, Regularizer::Identity)?,
+        })
+    }
+
+    /// Predict on raw states.
+    pub fn predict(&self, x: &Mat) -> Mat {
+        self.inner.predict(&quadratic_features(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::nrmse;
+    use crate::readout::{fit, Regularizer};
+    use crate::reservoir::{DiagonalEsn, EsnConfig};
+    use crate::rng::{Distributions, Pcg64};
+    use crate::spectral::uniform::uniform_spectrum;
+    use crate::tasks::mso::slice_rows;
+    use crate::tasks::narma::NarmaTask;
+
+    #[test]
+    fn expansion_shape_and_content() {
+        let x = Mat::from_rows(2, 3, &[1.0, 2.0, 3.0, -1.0, 0.5, 2.0]);
+        let phi = quadratic_features(&x);
+        assert_eq!(phi.cols(), 8);
+        // row 0: [1,2,3, 1,4,9, 2,6]
+        assert_eq!(phi.row(0), &[1.0, 2.0, 3.0, 1.0, 4.0, 9.0, 2.0, 6.0]);
+    }
+
+    #[test]
+    fn learns_exact_quadratic_function() {
+        let mut rng = Pcg64::seeded(1);
+        let x = Mat::randn(200, 4, &mut rng);
+        // y = x0² + 2·x1·x2 − x3  (inside the feature span)
+        let y = Mat::from_fn(200, 1, |t, _| {
+            let r = x.row(t);
+            r[0] * r[0] + 2.0 * r[1] * r[2] - r[3]
+        });
+        // note: x1·x2 is an adjacent pair ⇒ representable
+        let ro = PolyReadout::fit(&x, &y, 1e-10).unwrap();
+        let pred = ro.predict(&x);
+        assert!(pred.max_abs_diff(&y) < 1e-6);
+    }
+
+    #[test]
+    fn narma_improves_over_linear_readout() {
+        // the Gonon–Ortega motivation made concrete: same LINEAR diagonal
+        // reservoir, nonlinear readout → strictly better NARMA-10 fit
+        let n = 100;
+        let config = EsnConfig::default().with_n(n).with_sr(0.95).with_seed(2);
+        let mut rng = Pcg64::new(2, 180);
+        let spec = uniform_spectrum(n, 0.95, &mut rng);
+        let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+        let task = NarmaTask::new(2200, 2);
+        let states = esn.run(&task.input_mat());
+        let x_train = slice_rows(&states, 200..1400);
+        let y_train = task.target_mat(200..1400);
+        let x_test = slice_rows(&states, 1400..2200);
+        let y_test = task.target_mat(1400..2200);
+
+        let linear = fit(&x_train, &y_train, 1e-6, true, Regularizer::Identity).unwrap();
+        let e_lin = nrmse(&linear.predict(&x_test), &y_test);
+        let poly = PolyReadout::fit(&x_train, &y_train, 1e-6).unwrap();
+        let e_poly = nrmse(&poly.predict(&x_test), &y_test);
+        assert!(
+            e_poly < 0.8 * e_lin,
+            "poly {e_poly:.3} should clearly beat linear {e_lin:.3}"
+        );
+        let _ = rng.normal(); // keep Distributions import exercised
+    }
+}

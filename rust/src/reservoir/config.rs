@@ -1,0 +1,109 @@
+//! Hyper-parameter record shared by every engine and the grid search —
+//! mirrors the paper's Table 1 rows plus the generation knobs of §2.5.
+
+/// Echo-State-Network hyper-parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EsnConfig {
+    /// Reservoir size `N`.
+    pub n: usize,
+    /// Input dimensionality `D_in`.
+    pub d_in: usize,
+    /// Target spectral radius `ρ` (applied to `W` or to `Λ`).
+    pub spectral_radius: f64,
+    /// Leaking rate `lr ∈ (0, 1]` (Eq. 4 reparametrization).
+    pub leak_rate: f64,
+    /// Input scaling multiplier on `W_in`.
+    pub input_scaling: f64,
+    /// Reservoir connectivity `c_r` (probability an entry of `W` is
+    /// non-zero).
+    pub connectivity: f64,
+    /// Input connectivity `c_in`.
+    pub input_connectivity: f64,
+    /// Base seed for all generation randomness.
+    pub seed: u64,
+}
+
+impl Default for EsnConfig {
+    fn default() -> Self {
+        Self {
+            n: 100,
+            d_in: 1,
+            spectral_radius: 0.9,
+            leak_rate: 1.0,
+            input_scaling: 1.0,
+            connectivity: 1.0,
+            input_connectivity: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+impl EsnConfig {
+    /// Builder-style setters (keeps experiment code terse).
+    pub fn with_n(mut self, n: usize) -> Self {
+        self.n = n;
+        self
+    }
+    pub fn with_d_in(mut self, d: usize) -> Self {
+        self.d_in = d;
+        self
+    }
+    pub fn with_sr(mut self, sr: f64) -> Self {
+        self.spectral_radius = sr;
+        self
+    }
+    pub fn with_leak(mut self, lr: f64) -> Self {
+        self.leak_rate = lr;
+        self
+    }
+    pub fn with_input_scaling(mut self, s: f64) -> Self {
+        self.input_scaling = s;
+        self
+    }
+    pub fn with_connectivity(mut self, c: f64) -> Self {
+        self.connectivity = c;
+        self
+    }
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Validate ranges (panics early with a readable message).
+    pub fn validate(&self) {
+        assert!(self.n > 0, "N must be positive");
+        assert!(self.d_in > 0, "D_in must be positive");
+        assert!(
+            self.leak_rate > 0.0 && self.leak_rate <= 1.0,
+            "leak rate must be in (0, 1]"
+        );
+        assert!(self.spectral_radius >= 0.0);
+        assert!((0.0..=1.0).contains(&self.connectivity));
+        assert!((0.0..=1.0).contains(&self.input_connectivity));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let c = EsnConfig::default()
+            .with_n(300)
+            .with_sr(1.0)
+            .with_leak(0.5)
+            .with_seed(7);
+        assert_eq!(c.n, 300);
+        assert_eq!(c.spectral_radius, 1.0);
+        assert_eq!(c.leak_rate, 0.5);
+        assert_eq!(c.seed, 7);
+        c.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "leak rate")]
+    fn rejects_zero_leak() {
+        EsnConfig::default().with_leak(0.0).validate();
+    }
+}

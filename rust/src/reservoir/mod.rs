@@ -1,0 +1,27 @@
+//! Reservoir engines.
+//!
+//! * [`StandardEsn`] — the paper's §2 baseline: explicit `W` (dense or CSR
+//!   sparse), `O(c_r·N²)` per step.
+//! * [`DiagonalEsn`] — the paper's §3 contribution: slot-form spectrum +
+//!   transformed input weights, `O(N)` per step, producing real Q-basis
+//!   features (Appendix A layout). Constructed either by diagonalizing a
+//!   standard ESN (EWT/EET paths, Theorem 1) or directly from DPG parts.
+//! * [`state_matrix`] — Theorem 5: input-weight-independent state matrix
+//!   `R(t)`, used to share state computations across the input-scaling
+//!   sweep of the grid search and for Appendix C's γ-reparametrization.
+//!
+//! All engines consume a `[T × D_in]` input matrix and produce a
+//! `[T × N]` state/feature matrix whose row `t` is the state after
+//! consuming input row `t` (`r(t+1)` in the paper's 1-based indexing).
+
+mod config;
+mod diagonal;
+pub mod parallel;
+mod qbasis;
+mod standard;
+pub mod state_matrix;
+
+pub use config::EsnConfig;
+pub use diagonal::DiagonalEsn;
+pub use qbasis::QBasisEsn;
+pub use standard::{StandardEsn, WStore};

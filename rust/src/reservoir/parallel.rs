@@ -1,0 +1,234 @@
+//! Appendix B — parallelization of the diagonal recurrence across TIME,
+//! natively in Rust: the affine maps `(a, b): s ↦ a⊙s + b` form a monoid
+//! under composition, so the trajectory is an inclusive prefix scan. This
+//! module implements the classic two-phase chunked scan:
+//!
+//! 1. split the sequence into chunks; scan each chunk independently
+//!    (parallel across the worker pool), also composing the chunk's total
+//!    affine map;
+//! 2. exclusive-scan the chunk summaries sequentially (cheap: one map per
+//!    chunk), then fix up each chunk's states with its prefix map
+//!    (parallel again).
+//!
+//! On this 1-vCPU container the wall-clock win is nil — the value is the
+//! verified ALGORITHM (work O(T·N), depth O(T/C + #chunks)), mirroring the
+//! Pallas `assoc_scan` kernel so both sides of the stack implement
+//! Appendix B.
+
+use crate::coordinator::WorkerPool;
+use crate::linalg::Mat;
+use crate::spectral::Spectrum;
+
+use super::DiagonalEsn;
+
+/// Per-slot affine map `(a, b)` over split-complex planes.
+#[derive(Clone)]
+struct AffineChunk {
+    a_re: Vec<f64>,
+    a_im: Vec<f64>,
+    b_re: Vec<f64>,
+    b_im: Vec<f64>,
+}
+
+impl AffineChunk {
+    fn identity(slots: usize) -> Self {
+        Self {
+            a_re: vec![1.0; slots],
+            a_im: vec![0.0; slots],
+            b_re: vec![0.0; slots],
+            b_im: vec![0.0; slots],
+        }
+    }
+
+    /// `self ∘ prev` (apply `prev` first): `(a₂, b₂)∘(a₁, b₁) =
+    /// (a₂a₁, a₂b₁ + b₂)`.
+    fn compose_after(&self, prev: &AffineChunk) -> AffineChunk {
+        let n = self.a_re.len();
+        let mut out = AffineChunk::identity(n);
+        for j in 0..n {
+            let (ar, ai) = (self.a_re[j], self.a_im[j]);
+            out.a_re[j] = ar * prev.a_re[j] - ai * prev.a_im[j];
+            out.a_im[j] = ar * prev.a_im[j] + ai * prev.a_re[j];
+            out.b_re[j] = ar * prev.b_re[j] - ai * prev.b_im[j] + self.b_re[j];
+            out.b_im[j] = ar * prev.b_im[j] + ai * prev.b_re[j] + self.b_im[j];
+        }
+        out
+    }
+}
+
+/// Time-parallel run of a diagonal reservoir: identical output to
+/// [`DiagonalEsn::run`] (up to f64 rounding), computed as a chunked prefix
+/// scan over `pool`.
+pub fn run_parallel(esn: &DiagonalEsn, u: &Mat, pool: &WorkerPool, chunk: usize) -> Mat {
+    let t_len = u.rows();
+    let slots = esn.spec.slots();
+    let chunk = chunk.max(1);
+    let n_chunks = t_len.div_ceil(chunk);
+
+    // phase 1: independent chunk scans (parallel) —
+    // states-from-zero + the chunk's total affine map
+    struct ChunkOut {
+        s_re: Mat,
+        s_im: Mat,
+        total: AffineChunk,
+    }
+    let spec = esn.spec.clone();
+    let win_re = esn.win_re.clone();
+    let win_im = esn.win_im.clone();
+    let u_owned = u.clone();
+    let chunks: Vec<ChunkOut> = pool.map(
+        (0..n_chunks).collect(),
+        move |ci| {
+            let lo = ci * chunk;
+            let hi = ((ci + 1) * chunk).min(t_len);
+            let len = hi - lo;
+            let mut s_re = Mat::zeros(len, slots);
+            let mut s_im = Mat::zeros(len, slots);
+            let mut cur_re = vec![0.0; slots];
+            let mut cur_im = vec![0.0; slots];
+            // total map: a = λ^len (per slot), b = chunk-scan from zero
+            for (row, t) in (lo..hi).enumerate() {
+                step_planes(&spec, &win_re, &win_im, &mut cur_re, &mut cur_im, u_owned.row(t));
+                s_re.row_mut(row).copy_from_slice(&cur_re);
+                s_im.row_mut(row).copy_from_slice(&cur_im);
+            }
+            let mut total = AffineChunk::identity(slots);
+            for j in 0..slots {
+                let lam = spec.lam[j].powi(len as u32);
+                total.a_re[j] = lam.re;
+                total.a_im[j] = lam.im;
+                total.b_re[j] = cur_re[j];
+                total.b_im[j] = cur_im[j];
+            }
+            ChunkOut { s_re, s_im, total }
+        },
+    );
+
+    // phase 2: exclusive scan of chunk summaries (sequential, cheap)
+    let mut prefixes = Vec::with_capacity(n_chunks);
+    let mut acc = AffineChunk::identity(slots);
+    for c in &chunks {
+        prefixes.push(acc.clone());
+        acc = c.total.compose_after(&acc);
+    }
+
+    // phase 3: fix-up — apply each chunk's prefix map to its local states:
+    // s_global(t) = a_prefix ⊙ s_local(t) … wait, the prefix contributes
+    // `λ^(t−lo+1) ⊙ b_prefix` — the *state entering the chunk* is
+    // b_prefix, so s_global = s_local + λ^(row+1) ⊙ b_prefix.
+    let mut out = Mat::zeros(t_len, esn.n());
+    for (ci, c) in chunks.iter().enumerate() {
+        let pre = &prefixes[ci];
+        let lo = ci * chunk;
+        let len = c.s_re.rows();
+        // running power λ^(row+1)
+        let mut pw_re: Vec<f64> = vec![1.0; slots];
+        let mut pw_im: Vec<f64> = vec![0.0; slots];
+        for row in 0..len {
+            // pw ← pw · λ
+            for j in 0..slots {
+                let l = esn.spec.lam[j];
+                let (re, im) = (pw_re[j], pw_im[j]);
+                pw_re[j] = re * l.re - im * l.im;
+                pw_im[j] = re * l.im + im * l.re;
+            }
+            let feat = out.row_mut(lo + row);
+            let nr = esn.spec.n_real;
+            let mut col = 0;
+            for j in 0..slots {
+                // global state = local + λ^(row+1) ⊙ entering-state
+                let gre = c.s_re[(row, j)]
+                    + pw_re[j] * pre.b_re[j]
+                    - pw_im[j] * pre.b_im[j];
+                let gim = c.s_im[(row, j)]
+                    + pw_re[j] * pre.b_im[j]
+                    + pw_im[j] * pre.b_re[j];
+                if j < nr {
+                    feat[col] = gre;
+                    col += 1;
+                } else {
+                    feat[col] = gre;
+                    feat[col + 1] = gim;
+                    col += 2;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn step_planes(
+    spec: &Spectrum,
+    win_re: &Mat,
+    win_im: &Mat,
+    s_re: &mut [f64],
+    s_im: &mut [f64],
+    u: &[f64],
+) {
+    let slots = spec.slots();
+    for j in 0..slots {
+        let l = spec.lam[j];
+        let (re, im) = (s_re[j], s_im[j]);
+        s_re[j] = re * l.re - im * l.im;
+        s_im[j] = re * l.im + im * l.re;
+    }
+    for (d, &ud) in u.iter().enumerate() {
+        if ud == 0.0 {
+            continue;
+        }
+        let wr = win_re.row(d);
+        let wi = win_im.row(d);
+        for j in 0..slots {
+            s_re[j] += ud * wr[j];
+            s_im[j] += ud * wi[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reservoir::EsnConfig;
+    use crate::rng::Pcg64;
+    use crate::spectral::uniform::uniform_spectrum;
+
+    fn setup(n: usize, seed: u64) -> DiagonalEsn {
+        let config = EsnConfig::default().with_n(n).with_seed(seed);
+        let mut rng = Pcg64::new(seed, 160);
+        let spec = uniform_spectrum(n, 0.9, &mut rng);
+        DiagonalEsn::from_dpg(spec, &config, &mut rng)
+    }
+
+    #[test]
+    fn chunked_scan_equals_sequential() {
+        let esn = setup(20, 1);
+        let mut rng = Pcg64::seeded(2);
+        let u = Mat::randn(103, 1, &mut rng); // deliberately not a multiple
+        let pool = WorkerPool::new(3);
+        let seq = esn.run(&u);
+        for chunk in [1, 7, 16, 50, 103, 200] {
+            let par = run_parallel(&esn, &u, &pool, chunk);
+            let err = par.max_abs_diff(&seq);
+            assert!(err < 1e-9, "chunk={chunk} err={err}");
+        }
+    }
+
+    #[test]
+    fn near_unit_modulus_stability() {
+        // |λ| ≈ 1 is the worst case for λ^len powers in the summaries
+        let esn = setup(12, 3);
+        let esn = DiagonalEsn::from_parts(
+            esn.spec.scaled(1.0 / esn.spec.radius()),
+            esn.win_re.clone(),
+            esn.win_im.clone(),
+            None,
+        );
+        let mut rng = Pcg64::seeded(4);
+        let u = Mat::randn(256, 1, &mut rng);
+        let pool = WorkerPool::new(2);
+        let seq = esn.run(&u);
+        let par = run_parallel(&esn, &u, &pool, 32);
+        let scale = seq.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        assert!(par.max_abs_diff(&seq) / scale < 1e-10);
+    }
+}

@@ -1,0 +1,320 @@
+//! Appendix A — the "memory view" engine: the reservoir state lives in ONE
+//! contiguous real buffer of length `N` laid out as
+//!
+//! ```text
+//! [ x₁ … x_{n_r} | Re μ₁ Im μ₁ | Re μ₂ Im μ₂ | … ]
+//! ```
+//!
+//! and the update walks it in place: the real block gets `x ← x·λ`, each
+//! complex pair gets the 2×2 rotation-scaling `(re,im) ← (re·a − im·b,
+//! re·b + im·a)` — the paper's `view(ℂ)` pointer cast expressed as slice
+//! arithmetic (same memory, no copies, no gather step). The buffer IS the
+//! readout feature row, so `run` writes trajectories directly.
+//!
+//! This is the optimized native hot path; `DiagonalEsn` (split planes +
+//! gather) remains as the reference and the kernel-layout twin. The two
+//! are equivalent (tested below) — the difference is memory traffic:
+//! one interleaved stream instead of two planes plus a feature gather.
+
+use crate::linalg::Mat;
+use crate::spectral::Spectrum;
+
+/// Interleaved-layout diagonal reservoir (Appendix A).
+#[derive(Clone, Debug)]
+pub struct QBasisEsn {
+    /// Number of real-eigenvalue components (prefix of the buffer).
+    n_real: usize,
+    /// Real eigenvalues (length `n_real`).
+    lam_real: Vec<f64>,
+    /// Complex eigenvalues as interleaved `(re, im)` pairs (length `n−n_real`).
+    lam_cpx: Vec<f64>,
+    /// `[W_in]_Q` rows in buffer layout: `d_in × n` (real block then
+    /// interleaved pairs) — accumulated in the real domain, as in the paper.
+    win_q: Mat,
+    n: usize,
+    d_in: usize,
+}
+
+impl QBasisEsn {
+    /// Build from the slot-form parts of a [`DiagonalEsn`]
+    /// (`win_re/win_im`: `d_in × slots` planes of `[W_in]_P`).
+    pub fn from_slot_form(spec: &Spectrum, win_re: &Mat, win_im: &Mat) -> Self {
+        let n = spec.n;
+        let nr = spec.n_real;
+        let slots = spec.slots();
+        let d_in = win_re.rows();
+
+        let lam_real: Vec<f64> = spec.lam[..nr].iter().map(|z| z.re).collect();
+        let mut lam_cpx = Vec::with_capacity(n - nr);
+        for z in &spec.lam[nr..] {
+            lam_cpx.push(z.re);
+            lam_cpx.push(z.im);
+        }
+        // [W_in]_Q row layout == feature layout: real slots keep their re
+        // part (im ≡ 0 for real eigenvalues), complex slots interleave.
+        let mut win_q = Mat::zeros(d_in, n);
+        for d in 0..d_in {
+            for j in 0..nr {
+                win_q[(d, j)] = win_re[(d, j)];
+            }
+            let mut col = nr;
+            for j in nr..slots {
+                win_q[(d, col)] = win_re[(d, j)];
+                win_q[(d, col + 1)] = win_im[(d, j)];
+                col += 2;
+            }
+        }
+        Self {
+            n_real: nr,
+            lam_real,
+            lam_cpx,
+            win_q,
+            n,
+            d_in,
+        }
+    }
+
+    /// Build directly from a [`super::DiagonalEsn`].
+    pub fn from_diagonal(esn: &super::DiagonalEsn) -> Self {
+        Self::from_slot_form(&esn.spec, &esn.win_re, &esn.win_im)
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// One in-place step on the interleaved buffer (Appendix A's
+    /// "Reservoir Update Step"):
+    ///   `[r]_Q^real ← [r]_Q^real ⊙ Λ_real`
+    ///   `[r]_Q^cpx  ← [r]_Q^cpx  ⊙ Λ_cpx`   (complex view)
+    ///   `[r]_Q      ← [r]_Q + u(t)·[W_in]_Q`
+    #[inline]
+    pub fn step(&self, state: &mut [f64], u: &[f64]) {
+        debug_assert_eq!(state.len(), self.n);
+        debug_assert_eq!(u.len(), self.d_in);
+        if self.d_in == 1 {
+            // fused single-input path: one pass over the state buffer
+            // (perf pass: avoids re-streaming `state` for the input add)
+            let ud = u[0];
+            let row = self.win_q.row(0);
+            let nr = self.n_real;
+            let (real, cpx) = state.split_at_mut(nr);
+            for j in 0..nr {
+                real[j] = real[j] * self.lam_real[j] + ud * row[j];
+            }
+            let wrow = &row[nr..];
+            for ((pair, lam), w) in cpx
+                .chunks_exact_mut(2)
+                .zip(self.lam_cpx.chunks_exact(2))
+                .zip(wrow.chunks_exact(2))
+            {
+                let (re, im) = (pair[0], pair[1]);
+                let (a, b) = (lam[0], lam[1]);
+                pair[0] = re * a - im * b + ud * w[0];
+                pair[1] = re * b + im * a + ud * w[1];
+            }
+            return;
+        }
+        // general path
+        let (real, cpx) = state.split_at_mut(self.n_real);
+        for (x, &l) in real.iter_mut().zip(&self.lam_real) {
+            *x *= l;
+        }
+        // complex block: pairs (re, im) × pairs (a, b)
+        for (pair, lam) in cpx.chunks_exact_mut(2).zip(self.lam_cpx.chunks_exact(2)) {
+            let (re, im) = (pair[0], pair[1]);
+            let (a, b) = (lam[0], lam[1]);
+            pair[0] = re * a - im * b;
+            pair[1] = re * b + im * a;
+        }
+        // input accumulation in the real domain
+        for (d, &ud) in u.iter().enumerate() {
+            if ud == 0.0 {
+                continue;
+            }
+            let row = self.win_q.row(d);
+            for j in 0..self.n {
+                state[j] += ud * row[j];
+            }
+        }
+    }
+
+    /// Run a `[T × D_in]` sequence → `[T × N]` Q-basis features. Row `t`
+    /// is literally the state buffer after step `t` (no gather).
+    pub fn run(&self, u: &Mat) -> Mat {
+        assert_eq!(u.cols(), self.d_in);
+        let t_len = u.rows();
+        let mut state = vec![0.0; self.n];
+        let mut out = Mat::zeros(t_len, self.n);
+        for t in 0..t_len {
+            self.step(&mut state, u.row(t));
+            out.row_mut(t).copy_from_slice(&state);
+        }
+        out
+    }
+
+    /// Free-running generative rollout (`D_in = D_out = 1`): teacher-force
+    /// through `warmup`, then feed each prediction back as the next input
+    /// for `horizon` steps — the closed-loop forecasting mode of ESNs
+    /// (the output-feedback `W_fb` path of Eq. 1 with `W_fb = W_in·W_out`
+    /// folded through the readout).
+    pub fn generate(
+        &self,
+        warmup: &[f64],
+        horizon: usize,
+        w: &Mat,
+        b: f64,
+    ) -> Vec<f64> {
+        assert_eq!(self.d_in, 1, "generative mode requires D_in = 1");
+        assert_eq!(w.cols(), 1, "generative mode requires D_out = 1");
+        let mut state = vec![0.0; self.n];
+        let mut last = 0.0;
+        for &u in warmup {
+            self.step(&mut state, &[u]);
+            last = b + (0..self.n).map(|j| state[j] * w[(j, 0)]).sum::<f64>();
+        }
+        let mut out = Vec::with_capacity(horizon);
+        for _ in 0..horizon {
+            out.push(last);
+            self.step(&mut state, &[last]);
+            last = b + (0..self.n).map(|j| state[j] * w[(j, 0)]).sum::<f64>();
+        }
+        out
+    }
+
+    /// Run and fold the readout on the fly (serving hot path — never
+    /// materializes the trajectory): returns `[T × D_out]` predictions for
+    /// `y = feat·w + b`.
+    pub fn run_readout(&self, u: &Mat, w: &Mat, b: &[f64]) -> Mat {
+        assert_eq!(w.rows(), self.n);
+        let d_out = w.cols();
+        let t_len = u.rows();
+        let mut state = vec![0.0; self.n];
+        let mut y = Mat::zeros(t_len, d_out);
+        for t in 0..t_len {
+            self.step(&mut state, u.row(t));
+            let yr = y.row_mut(t);
+            for k in 0..d_out {
+                let mut acc = b[k];
+                for j in 0..self.n {
+                    acc += state[j] * w[(j, k)];
+                }
+                yr[k] = acc;
+            }
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reservoir::{DiagonalEsn, EsnConfig};
+    use crate::rng::Pcg64;
+    use crate::spectral::uniform::uniform_spectrum;
+
+    fn setup(n: usize, d_in: usize, seed: u64) -> (DiagonalEsn, QBasisEsn) {
+        let config = EsnConfig::default()
+            .with_n(n)
+            .with_d_in(d_in)
+            .with_seed(seed);
+        let mut rng = Pcg64::new(seed, 150);
+        let spec = uniform_spectrum(n, 0.9, &mut rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+        let q = QBasisEsn::from_diagonal(&diag);
+        (diag, q)
+    }
+
+    #[test]
+    fn memory_view_equals_split_plane_engine() {
+        let (diag, q) = setup(30, 2, 1);
+        let mut rng = Pcg64::seeded(2);
+        let u = Mat::randn(50, 2, &mut rng);
+        let a = diag.run(&u);
+        let b = q.run(&u);
+        assert!(
+            a.max_abs_diff(&b) < 1e-12,
+            "Appendix-A engine diverges: {}",
+            a.max_abs_diff(&b)
+        );
+    }
+
+    #[test]
+    fn run_readout_matches_run_then_matmul() {
+        let (_, q) = setup(20, 1, 3);
+        let mut rng = Pcg64::seeded(4);
+        let u = Mat::randn(25, 1, &mut rng);
+        let w = Mat::randn(20, 2, &mut rng);
+        let b = vec![0.3, -0.1];
+        let fused = q.run_readout(&u, &w, &b);
+        let feats = q.run(&u);
+        let mut want = feats.matmul(&w);
+        for t in 0..25 {
+            for k in 0..2 {
+                want[(t, k)] += b[k];
+            }
+        }
+        assert!(fused.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn generative_rollout_tracks_sine() {
+        // train on a pure sine, free-run: the rollout must stay close for
+        // a couple of periods
+        use crate::readout::{fit, Regularizer};
+        let (_, q) = setup(60, 1, 7);
+        let t_total = 700;
+        let series: Vec<f64> =
+            (0..=t_total).map(|t| (0.2 * t as f64).sin()).collect();
+        let u = Mat::from_rows(t_total, 1, &series[..t_total]);
+        let feats = q.run(&u);
+        let x = crate::tasks::mso::slice_rows(&feats, 100..600);
+        let y = Mat::from_rows(500, 1, &series[101..601]);
+        let ro = fit(&x, &y, 1e-10, true, Regularizer::Identity).unwrap();
+        let rollout = q.generate(&series[..600], 60, &ro.w, ro.b[0]);
+        for (i, pred) in rollout.iter().enumerate() {
+            let want = (0.2 * (600 + i) as f64).sin();
+            assert!(
+                (pred - want).abs() < 0.05,
+                "step {i}: {pred} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn odd_layouts_all_real_or_all_complex() {
+        // all-real spectrum (n_real == n)
+        use crate::num::c64;
+        use crate::spectral::Spectrum;
+        let spec = Spectrum::new(
+            4,
+            4,
+            vec![
+                c64::real(0.5),
+                c64::real(-0.3),
+                c64::real(0.9),
+                c64::real(0.1),
+            ],
+        );
+        let win_re = Mat::from_rows(1, 4, &[1.0, 2.0, 3.0, 4.0]);
+        let win_im = Mat::zeros(1, 4);
+        let q = QBasisEsn::from_slot_form(&spec, &win_re, &win_im);
+        let mut state = vec![0.0; 4];
+        q.step(&mut state, &[1.0]);
+        assert_eq!(state, vec![1.0, 2.0, 3.0, 4.0]);
+        q.step(&mut state, &[0.0]);
+        assert_eq!(state, vec![0.5, -0.6, 2.7, 0.4]);
+
+        // all-complex spectrum (n_real == 0)
+        let spec = Spectrum::new(4, 0, vec![c64::new(0.0, 1.0), c64::new(0.5, 0.5)]);
+        let win_re = Mat::from_rows(1, 2, &[1.0, 0.0]);
+        let win_im = Mat::from_rows(1, 2, &[0.0, 1.0]);
+        let q = QBasisEsn::from_slot_form(&spec, &win_re, &win_im);
+        let mut state = vec![0.0; 4];
+        q.step(&mut state, &[1.0]);
+        assert_eq!(state, vec![1.0, 0.0, 0.0, 1.0]);
+        // second step: pair1 (1,0)·(0,1) = (0,1); pair2 (0,1)·(0.5,0.5) = (−0.5,0.5)
+        q.step(&mut state, &[0.0]);
+        assert_eq!(state, vec![0.0, 1.0, -0.5, 0.5]);
+    }
+}

@@ -1,0 +1,297 @@
+//! The §2 baseline: a standard linear ESN with an explicit reservoir
+//! matrix. `O(c_r·N²)` per step (sparse) or `O(N²)` (dense).
+
+use crate::linalg::{eigenvalues, Mat};
+use crate::rng::{Distributions, Pcg64};
+use crate::sparse::Csr;
+
+use super::EsnConfig;
+
+/// Reservoir matrix storage. Below `DENSE_THRESHOLD` connectivity the CSR
+/// form wins; above it the dense row-major form does.
+#[derive(Clone, Debug)]
+pub enum WStore {
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+const DENSE_THRESHOLD: f64 = 0.35;
+
+/// Standard linear Echo State Network (fixed `W`, `W_in`, optional
+/// `W_fb`; Eq. 1 dynamics with the leaking-rate reparametrization of
+/// Eq. 4 already folded in).
+#[derive(Clone, Debug)]
+pub struct StandardEsn {
+    pub w: WStore,
+    /// `D_in × N` input weights (input scaling + leak already applied).
+    pub w_in: Mat,
+    /// Optional `D_out × N` output-feedback weights (Eq. 1's
+    /// `y(t−1)·W_fb` term; leak applied).
+    pub w_fb: Option<Mat>,
+    pub config: EsnConfig,
+    /// Spectral radius of the *unleaked* scaled `W` (diagnostics).
+    pub rho0: f64,
+}
+
+impl StandardEsn {
+    /// Generate per §2.5: `W` entries present with prob `connectivity`,
+    /// i.i.d. normal values, scaled so the spectral radius equals
+    /// `config.spectral_radius`; `W_in` entries present with prob
+    /// `input_connectivity`, uniform on `(−1, 1)`, times `input_scaling`.
+    /// Leak (Eq. 4): `W ← lr·W + (1−lr)·I`, `W_in ← lr·W_in`.
+    pub fn generate(config: EsnConfig) -> Self {
+        config.validate();
+        let mut rng = Pcg64::new(config.seed, 1);
+        let n = config.n;
+
+        let mut w = Csr::random(n, n, config.connectivity, &mut rng).to_dense();
+        // spectral-radius scaling (the O(N³) step the paper's §2.5 charges
+        // the baseline for)
+        let rho0 = eigenvalues(&w)
+            .iter()
+            .map(|z| z.abs())
+            .fold(0.0, f64::max);
+        if rho0 > 0.0 {
+            w.scale(config.spectral_radius / rho0);
+        }
+
+        let mut w_in = Mat::from_fn(config.d_in, n, |_, _| {
+            if rng.bernoulli(config.input_connectivity) {
+                rng.uniform(-1.0, 1.0)
+            } else {
+                0.0
+            }
+        });
+        w_in.scale(config.input_scaling * config.leak_rate);
+
+        // leak folding: W ← lr·W + (1−lr)·I
+        let lr = config.leak_rate;
+        if lr < 1.0 {
+            w.scale(lr);
+            w.add_diag(1.0 - lr);
+        }
+
+        let store = if config.connectivity <= DENSE_THRESHOLD && lr >= 1.0 {
+            WStore::Sparse(Csr::from_dense(&w))
+        } else {
+            WStore::Dense(w)
+        };
+        Self {
+            w: store,
+            w_in,
+            w_fb: None,
+            config,
+            rho0: config.spectral_radius,
+        }
+    }
+
+    /// Build directly from parts (tests, EWT round-trips).
+    pub fn from_parts(w: Mat, w_in: Mat, config: EsnConfig) -> Self {
+        assert_eq!(w.rows(), w.cols());
+        assert_eq!(w_in.cols(), w.rows());
+        assert_eq!(w_in.rows(), config.d_in);
+        Self {
+            w: WStore::Dense(w),
+            w_in,
+            w_fb: None,
+            config,
+            rho0: f64::NAN,
+        }
+    }
+
+    /// Dense copy of `W` (for diagonalization / tests).
+    pub fn w_dense(&self) -> Mat {
+        match &self.w {
+            WStore::Dense(m) => m.clone(),
+            WStore::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.config.n
+    }
+
+    /// One reservoir step: `r ← r·W + u·W_in` (Eq. 1, no feedback).
+    /// `scratch` must have length N; on return holds the new state.
+    pub fn step(&self, r: &[f64], u: &[f64], scratch: &mut [f64]) {
+        match &self.w {
+            WStore::Dense(w) => w.vecmat(r, scratch),
+            WStore::Sparse(w) => w.vecmat(r, scratch),
+        }
+        // + u(t)·W_in
+        for (d, &ud) in u.iter().enumerate() {
+            if ud == 0.0 {
+                continue;
+            }
+            let row = self.w_in.row(d);
+            for j in 0..scratch.len() {
+                scratch[j] += ud * row[j];
+            }
+        }
+    }
+
+    /// Attach output-feedback weights (`D_out × N`; Eq. 1's `W_fb`). The
+    /// caller is responsible for leak scaling (`W_fb ← lr·W_fb`) if built
+    /// outside [`StandardEsn::generate`].
+    pub fn with_feedback(mut self, w_fb: Mat) -> Self {
+        assert_eq!(w_fb.cols(), self.config.n);
+        self.w_fb = Some(w_fb);
+        self
+    }
+
+    /// One full Eq.-1 step with output feedback:
+    /// `r ← r·W + u·W_in + y_prev·W_fb`.
+    pub fn step_fb(&self, r: &[f64], u: &[f64], y_prev: &[f64], scratch: &mut [f64]) {
+        self.step(r, u, scratch);
+        if let Some(w_fb) = &self.w_fb {
+            for (d, &yd) in y_prev.iter().enumerate() {
+                if yd == 0.0 {
+                    continue;
+                }
+                let row = w_fb.row(d);
+                for j in 0..scratch.len() {
+                    scratch[j] += yd * row[j];
+                }
+            }
+        }
+    }
+
+    /// Teacher-forced run with feedback: `y(t−1)` is the ground-truth
+    /// target (y(−1) = 0), as in the paper's training protocol.
+    /// `y_teacher: [T × D_out]`. Returns `[T × N]` states.
+    pub fn run_teacher_forced(&self, u: &Mat, y_teacher: &Mat) -> Mat {
+        assert_eq!(u.rows(), y_teacher.rows());
+        let n = self.n();
+        let t_len = u.rows();
+        let mut states = Mat::zeros(t_len, n);
+        let mut r = vec![0.0; n];
+        let mut next = vec![0.0; n];
+        let zero = vec![0.0; y_teacher.cols()];
+        for t in 0..t_len {
+            let y_prev: &[f64] = if t == 0 { &zero } else { y_teacher.row(t - 1) };
+            self.step_fb(&r, u.row(t), y_prev, &mut next);
+            std::mem::swap(&mut r, &mut next);
+            states.row_mut(t).copy_from_slice(&r);
+        }
+        states
+    }
+
+    /// Run over a `[T × D_in]` input, returning `[T × N]` states
+    /// (`r(0) = 0`).
+    pub fn run(&self, u: &Mat) -> Mat {
+        assert_eq!(u.cols(), self.config.d_in);
+        let n = self.n();
+        let t_len = u.rows();
+        let mut states = Mat::zeros(t_len, n);
+        let mut r = vec![0.0; n];
+        let mut next = vec![0.0; n];
+        for t in 0..t_len {
+            self.step(&r, u.row(t), &mut next);
+            std::mem::swap(&mut r, &mut next);
+            states.row_mut(t).copy_from_slice(&r);
+        }
+        states
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize) -> EsnConfig {
+        EsnConfig::default().with_n(n).with_seed(42)
+    }
+
+    #[test]
+    fn generated_spectral_radius_matches() {
+        let esn = StandardEsn::generate(cfg(40).with_sr(0.8));
+        let rho = eigenvalues(&esn.w_dense())
+            .iter()
+            .map(|z| z.abs())
+            .fold(0.0, f64::max);
+        assert!((rho - 0.8).abs() < 1e-8, "rho={rho}");
+    }
+
+    #[test]
+    fn leak_folds_identity() {
+        // lr < 1: W' = lr·W + (1−lr)I ⇒ spectral radius of W' ≤ lr·ρ + (1−lr)
+        let esn = StandardEsn::generate(cfg(30).with_sr(0.5).with_leak(0.3));
+        let rho = eigenvalues(&esn.w_dense())
+            .iter()
+            .map(|z| z.abs())
+            .fold(0.0, f64::max);
+        assert!(rho <= 0.3 * 0.5 + 0.7 + 1e-9, "rho={rho}");
+    }
+
+    #[test]
+    fn sparse_storage_used_at_low_connectivity() {
+        let esn = StandardEsn::generate(cfg(50).with_connectivity(0.05));
+        assert!(matches!(esn.w, WStore::Sparse(_)));
+        let dense_esn = StandardEsn::generate(cfg(50).with_connectivity(0.9));
+        assert!(matches!(dense_esn.w, WStore::Dense(_)));
+    }
+
+    #[test]
+    fn sparse_and_dense_paths_agree() {
+        let config = cfg(25).with_connectivity(0.2);
+        let esn = StandardEsn::generate(config);
+        let dense_twin = StandardEsn {
+            w: WStore::Dense(esn.w_dense()),
+            w_in: esn.w_in.clone(),
+            w_fb: None,
+            config,
+            rho0: esn.rho0,
+        };
+        let mut rng = Pcg64::seeded(1);
+        let u = Mat::randn(30, 1, &mut rng);
+        let a = esn.run(&u);
+        let b = dense_twin.run(&u);
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn run_matches_manual_recurrence() {
+        let esn = StandardEsn::generate(cfg(10));
+        let mut rng = Pcg64::seeded(2);
+        let u = Mat::randn(15, 1, &mut rng);
+        let states = esn.run(&u);
+        // manual
+        let w = esn.w_dense();
+        let mut r = vec![0.0; 10];
+        for t in 0..15 {
+            let mut next = vec![0.0; 10];
+            w.vecmat(&r, &mut next);
+            for j in 0..10 {
+                next[j] += u[(t, 0)] * esn.w_in[(0, j)];
+            }
+            r = next;
+            for j in 0..10 {
+                assert!((states[(t, j)] - r[j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn input_scaling_scales_states_linearly() {
+        // D_in = 1 linear system: states are exactly proportional to the
+        // input scaling (the grid-search reuse trick).
+        let base = StandardEsn::generate(cfg(12).with_input_scaling(1.0));
+        let scaled = StandardEsn::generate(cfg(12).with_input_scaling(0.01));
+        let mut rng = Pcg64::seeded(3);
+        let u = Mat::randn(20, 1, &mut rng);
+        let a = base.run(&u);
+        let mut b = scaled.run(&u);
+        b.scale(100.0);
+        assert!(a.max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn echo_state_property_fades_initial_differences() {
+        // ρ < 1 ⇒ contributions fade: zero input ⇒ state → 0
+        let esn = StandardEsn::generate(cfg(20).with_sr(0.5));
+        let u = Mat::zeros(200, 1);
+        let states = esn.run(&u);
+        let last: f64 = states.row(199).iter().map(|x| x.abs()).sum();
+        assert!(last < 1e-12);
+    }
+}

@@ -1,0 +1,164 @@
+//! Theorem 5 / §3.3: the input-weight-independent state matrix `R(t)`.
+//!
+//! `R(t) ∈ ℂ^{D_in × slots}` evolves as `R(t) = R(t−1) ⊙ Λ + u(t)ᵀ·1ᵀ`
+//! (each row sees the same Λ, each column the same input component), and
+//! the actual reservoir state is recovered afterwards by
+//! `r(t) = 1ᵀ(W_in ⊙ R(t))` — so states for MANY different `W_in` /
+//! input-scaling values can be derived from ONE temporal sweep. The grid
+//! search uses this to divide state-computation cost by the size of the
+//! input-scaling grid (exactly the speedup the paper reports in §5.1).
+//!
+//! Appendix C (Theorem 6): for `D_in = D_out = 1` the readout can even be
+//! trained directly on `R(t)` (`γ = w_inᵀ ⊙ w_out`), bypassing `W_in`
+//! entirely — implemented as [`gamma_features`] + recovery.
+
+use crate::linalg::Mat;
+use crate::spectral::Spectrum;
+
+/// The `R(t)` trajectory for one input dimension (`D_in` of these make the
+/// full Theorem-4 matrix; MSO and MC are `D_in = 1`).
+pub struct StateMatrix {
+    /// `[T × slots]` planes of the unweighted states.
+    pub r_re: Mat,
+    pub r_im: Mat,
+    pub spec: Spectrum,
+}
+
+/// Sweep `R(t)` for a single input dimension: `R ← R ⊙ Λ + u(t)` (the
+/// input enters *unweighted*).
+pub fn state_matrix_1d(spec: &Spectrum, u: &[f64]) -> StateMatrix {
+    let slots = spec.slots();
+    let t_len = u.len();
+    let mut r_re = Mat::zeros(t_len, slots);
+    let mut r_im = Mat::zeros(t_len, slots);
+    let mut s_re = vec![0.0; slots];
+    let mut s_im = vec![0.0; slots];
+    for (t, &ut) in u.iter().enumerate() {
+        for j in 0..slots {
+            let l = spec.lam[j];
+            let (re, im) = (s_re[j], s_im[j]);
+            s_re[j] = re * l.re - im * l.im + ut;
+            s_im[j] = re * l.im + im * l.re;
+        }
+        r_re.row_mut(t).copy_from_slice(&s_re);
+        r_im.row_mut(t).copy_from_slice(&s_im);
+    }
+    StateMatrix {
+        r_re,
+        r_im,
+        spec: spec.clone(),
+    }
+}
+
+impl StateMatrix {
+    /// Theorem 5 recovery: `r(t) = w_in ⊙ R(t)` (1-D case), emitted as
+    /// Q-basis features `[T × N]` for a given complex `[W_in]_P` row
+    /// (split planes of length `slots`).
+    pub fn features_for(&self, win_re: &[f64], win_im: &[f64]) -> Mat {
+        let slots = self.spec.slots();
+        assert_eq!(win_re.len(), slots);
+        let nr = self.spec.n_real;
+        let t_len = self.r_re.rows();
+        let mut out = Mat::zeros(t_len, self.spec.n);
+        for t in 0..t_len {
+            let rr = self.r_re.row(t);
+            let ri = self.r_im.row(t);
+            let row = out.row_mut(t);
+            for j in 0..nr {
+                // real slot: win_im[j] == 0 ⇒ feature = win_re·R_re
+                row[j] = win_re[j] * rr[j] - win_im[j] * ri[j];
+            }
+            let mut col = nr;
+            for j in nr..slots {
+                let fre = win_re[j] * rr[j] - win_im[j] * ri[j];
+                let fim = win_re[j] * ri[j] + win_im[j] * rr[j];
+                row[col] = fre;
+                row[col + 1] = fim;
+                col += 2;
+            }
+        }
+        out
+    }
+
+    /// Appendix C: the raw `R(t)` as Q-layout features (train `γ` on these
+    /// directly; `w_out = γ ⊘ w_in` recovers the usual readout when no
+    /// `w_in` entry is zero).
+    pub fn gamma_features(&self) -> Mat {
+        let slots = self.spec.slots();
+        let ones_re = vec![1.0; slots];
+        let ones_im = vec![0.0; slots];
+        let _ = (&ones_re, &ones_im);
+        let nr = self.spec.n_real;
+        let t_len = self.r_re.rows();
+        let mut out = Mat::zeros(t_len, self.spec.n);
+        for t in 0..t_len {
+            let rr = self.r_re.row(t);
+            let ri = self.r_im.row(t);
+            let row = out.row_mut(t);
+            row[..nr].copy_from_slice(&rr[..nr]);
+            let mut col = nr;
+            for j in nr..slots {
+                row[col] = rr[j];
+                row[col + 1] = ri[j];
+                col += 2;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::reservoir::{DiagonalEsn, EsnConfig};
+    use crate::rng::{Distributions, Pcg64};
+    use crate::spectral::uniform::uniform_spectrum;
+
+    #[test]
+    fn theorem5_matches_direct_run() {
+        let mut rng = Pcg64::seeded(1);
+        let config = EsnConfig::default().with_n(20).with_seed(4);
+        let spec = uniform_spectrum(20, 0.9, &mut rng);
+        let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+
+        let u: Vec<f64> = rng.normal_vec(50);
+        let u_mat = Mat::from_rows(50, 1, &u);
+
+        let direct = esn.run(&u_mat);
+        let sm = state_matrix_1d(&esn.spec, &u);
+        let via_r = sm.features_for(esn.win_re.row(0), esn.win_im.row(0));
+        let err = via_r.max_abs_diff(&direct);
+        assert!(err < 1e-9, "Theorem 5 violated: {err}");
+    }
+
+    #[test]
+    fn input_scaling_reuse() {
+        // features for scaled W_in == scale × features for base W_in
+        let mut rng = Pcg64::seeded(2);
+        let spec = uniform_spectrum(16, 0.8, &mut rng);
+        let u: Vec<f64> = rng.normal_vec(30);
+        let sm = state_matrix_1d(&spec, &u);
+        let wr: Vec<f64> = rng.normal_vec(spec.slots());
+        let wi: Vec<f64> = rng.normal_vec(spec.slots());
+        let base = sm.features_for(&wr, &wi);
+        let scaled_w: Vec<f64> = wr.iter().map(|x| x * 0.01).collect();
+        let scaled_wi: Vec<f64> = wi.iter().map(|x| x * 0.01).collect();
+        let mut scaled = sm.features_for(&scaled_w, &scaled_wi);
+        scaled.scale(100.0);
+        assert!(scaled.max_abs_diff(&base) < 1e-9);
+    }
+
+    #[test]
+    fn gamma_features_equal_unit_win() {
+        let mut rng = Pcg64::seeded(3);
+        let spec = uniform_spectrum(12, 0.7, &mut rng);
+        let u: Vec<f64> = rng.normal_vec(25);
+        let sm = state_matrix_1d(&spec, &u);
+        let ones = vec![1.0; spec.slots()];
+        let zeros = vec![0.0; spec.slots()];
+        let a = sm.gamma_features();
+        let b = sm.features_for(&ones, &zeros);
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+}

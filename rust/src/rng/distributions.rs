@@ -1,0 +1,123 @@
+//! Sampling distributions on top of [`Pcg64`](super::Pcg64): the set needed
+//! by the paper's generators (normal entries for `W`/`W_in`/eigenvectors,
+//! uniform for eigenvalue moduli/angles and MC task inputs, Bernoulli for
+//! connectivity masks).
+
+use super::Pcg64;
+
+/// Extension trait adding distribution sampling to the raw generator.
+pub trait Distributions {
+    /// Uniform in `[lo, hi)`.
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64;
+    /// Standard normal via Box–Muller (pair-cached would add state; the
+    /// single-draw form keeps reproducibility trivially composable).
+    fn normal(&mut self) -> f64;
+    /// Normal with given mean / standard deviation.
+    fn normal_ms(&mut self, mean: f64, std: f64) -> f64;
+    /// Bernoulli with probability `p`.
+    fn bernoulli(&mut self, p: f64) -> bool;
+    /// Fill a vector with i.i.d. uniform draws.
+    fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64>;
+    /// Fill a vector with i.i.d. standard normal draws.
+    fn normal_vec(&mut self, n: usize) -> Vec<f64>;
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]);
+}
+
+impl Distributions for Pcg64 {
+    #[inline]
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    #[inline]
+    fn normal(&mut self) -> f64 {
+        // Box–Muller; guard against log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    #[inline]
+    fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.uniform(lo, hi)).collect()
+    }
+
+    fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn normal_tails_reasonable() {
+        let mut rng = Pcg64::seeded(12);
+        let n = 100_000;
+        let beyond3 = (0..n).filter(|_| rng.normal().abs() > 3.0).count();
+        // P(|Z|>3) ≈ 0.0027
+        assert!((beyond3 as f64 / n as f64 - 0.0027).abs() < 0.002);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut rng = Pcg64::seeded(13);
+        for _ in 0..10_000 {
+            let x = rng.uniform(-2.5, 7.0);
+            assert!((-2.5..7.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg64::seeded(14);
+        let hits = (0..100_000).filter(|_| rng.bernoulli(0.3)).count();
+        assert!((hits as f64 / 100_000.0 - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(15);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

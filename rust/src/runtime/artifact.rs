@@ -1,0 +1,124 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    /// Graph kind (`diag_states`, `ridge_stats`, …).
+    pub kind: String,
+    /// Concrete lowering dimensions (`T`, `slots`, `d_in`, …).
+    pub dims: BTreeMap<String, usize>,
+    /// File name within the artifact directory.
+    pub file: String,
+}
+
+/// The manifest: all artifacts plus the interchange format tag.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse_str(&text)
+    }
+
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let v = parse(text)?;
+        let format = v
+            .get("format")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing 'format'"))?
+            .to_string();
+        if format != "hlo-text" {
+            anyhow::bail!("unsupported artifact format {format:?}");
+        }
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let kind = a
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing 'kind'"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing 'file'"))?
+                .to_string();
+            let mut dims = BTreeMap::new();
+            if let Some(Json::Obj(m)) = a.get("dims") {
+                for (k, v) in m {
+                    dims.insert(
+                        k.clone(),
+                        v.as_usize()
+                            .ok_or_else(|| anyhow!("dim {k} not a number"))?,
+                    );
+                }
+            }
+            artifacts.push(Artifact { kind, dims, file });
+        }
+        Ok(Self { format, artifacts })
+    }
+
+    /// Find an artifact matching kind and ALL given dims.
+    pub fn find(&self, kind: &str, dims: &[(&str, usize)]) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind
+                && dims
+                    .iter()
+                    .all(|(k, v)| a.dims.get(*k).copied() == Some(*v))
+        })
+    }
+
+    /// All artifacts of a kind (e.g. to list available shapes).
+    pub fn of_kind(&self, kind: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": [
+        {"kind": "diag_states", "dims": {"T": 1000, "d_in": 1, "slots": 100},
+         "file": "diag_states__T1000_d_in1_slots100.hlo.txt"},
+        {"kind": "diag_states", "dims": {"T": 32, "d_in": 2, "slots": 16},
+         "file": "diag_states__T32_d_in2_slots16.hlo.txt"},
+        {"kind": "ridge_stats", "dims": {"T": 300, "n_feat": 101, "d_out": 1},
+         "file": "ridge_stats__T300_n_feat101_d_out1.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_finds() {
+        let m = Manifest::parse_str(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.find("diag_states", &[("T", 1000), ("slots", 100)]).unwrap();
+        assert_eq!(a.file, "diag_states__T1000_d_in1_slots100.hlo.txt");
+        assert!(m.find("diag_states", &[("T", 999)]).is_none());
+        assert_eq!(m.of_kind("diag_states").len(), 2);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse_str(&bad).is_err());
+    }
+}

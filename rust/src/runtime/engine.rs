@@ -1,0 +1,174 @@
+//! High-level bridge: run a [`DiagonalEsn`](crate::reservoir::DiagonalEsn)
+//! through the compiled `diag_states` HLO artifact (the L1/L2 stack) and
+//! return the same real Q-basis feature matrix the native engine produces.
+//!
+//! Artifacts are lowered with a fixed slot count `S`; reservoirs whose
+//! actual slot count is smaller are zero-padded (λ = 0, input weights = 0 —
+//! dead slots produce identically-zero states and are dropped in the
+//! feature gather). This is what lets ONE artifact serve every DPG seed of
+//! a given reservoir size (each seed has a different real/complex split).
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Mat;
+use crate::reservoir::DiagonalEsn;
+
+use super::{Runtime, Tensor};
+
+/// Executes diagonal reservoirs through compiled HLO.
+pub struct DiagRuntime {
+    rt: Runtime,
+}
+
+impl DiagRuntime {
+    pub fn new(rt: Runtime) -> Self {
+        Self { rt }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Runtime::open(Runtime::default_dir())?))
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        &mut self.rt
+    }
+
+    /// Pick an artifact slot capacity `S ≥ slots` for the given kind/T/d_in.
+    fn pick_slots(&self, kind: &str, t_len: usize, d_in: usize, slots: usize) -> Result<usize> {
+        self.rt
+            .manifest()
+            .of_kind(kind)
+            .iter()
+            .filter_map(|a| {
+                let s = *a.dims.get("slots")?;
+                (a.dims.get("T") == Some(&t_len)
+                    && a.dims.get("d_in") == Some(&d_in)
+                    && s >= slots)
+                    .then_some(s)
+            })
+            .min()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {kind} artifact for T={t_len}, d_in={d_in}, slots≥{slots} \
+                     (run `make artifacts`)"
+                )
+            })
+    }
+
+    /// Run the reservoir over `[T × D_in]` inputs through the compiled
+    /// graph (`assoc = true` uses the Appendix-B parallel-prefix artifact).
+    /// Returns `[T × N]` Q-basis features, matching
+    /// [`DiagonalEsn::run`] up to f32 precision.
+    pub fn run(&mut self, esn: &DiagonalEsn, u: &Mat, assoc: bool) -> Result<Mat> {
+        let kind = if assoc { "diag_states_assoc" } else { "diag_states" };
+        let t_len = u.rows();
+        let d_in = esn.d_in;
+        let slots = esn.spec.slots();
+        let cap = self.pick_slots(kind, t_len, d_in, slots)?;
+
+        // operands, zero-padded to `cap` slots
+        let (lam_re, lam_im, win_re, win_im) = esn.kernel_operands();
+        let mut lr = vec![0.0f64; cap];
+        let mut li = vec![0.0f64; cap];
+        lr[..slots].copy_from_slice(&lam_re);
+        li[..slots].copy_from_slice(&lam_im);
+        let mut wr = vec![0.0f64; d_in * cap];
+        let mut wi = vec![0.0f64; d_in * cap];
+        for d in 0..d_in {
+            for j in 0..slots {
+                wr[d * cap + j] = win_re[(d, j)];
+                wi[d * cap + j] = win_im[(d, j)];
+            }
+        }
+        let inputs = [
+            Tensor::from_f64(vec![t_len as i64, d_in as i64], u.data()),
+            Tensor::from_f64(vec![cap as i64], &lr),
+            Tensor::from_f64(vec![cap as i64], &li),
+            Tensor::from_f64(vec![d_in as i64, cap as i64], &wr),
+            Tensor::from_f64(vec![d_in as i64, cap as i64], &wi),
+        ];
+
+        let exe = self.rt.load(kind, &[("T", t_len), ("d_in", d_in), ("slots", cap)])?;
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 2, "expected (s_re, s_im), got {}", outs.len());
+        let (s_re, s_im) = (&outs[0], &outs[1]);
+
+        // Q-basis gather from the padded planes
+        let nr = esn.spec.n_real;
+        let n = esn.n();
+        let mut feats = Mat::zeros(t_len, n);
+        for t in 0..t_len {
+            let row = feats.row_mut(t);
+            let base = t * cap;
+            for j in 0..nr {
+                row[j] = s_re[base + j] as f64;
+            }
+            let mut col = nr;
+            for j in nr..slots {
+                row[col] = s_re[base + j] as f64;
+                row[col + 1] = s_im[base + j] as f64;
+                col += 2;
+            }
+        }
+        Ok(feats)
+    }
+
+    /// Gram statistics `(XᵀX, XᵀY)` through the compiled `ridge_stats`
+    /// graph. `x: [T × F]`, `y: [T × D]` — shapes must match an artifact.
+    pub fn ridge_stats(&mut self, x: &Mat, y: &Mat) -> Result<(Mat, Mat)> {
+        let t_len = x.rows();
+        let f = x.cols();
+        let d = y.cols();
+        let exe = self.rt.load(
+            "ridge_stats",
+            &[("T", t_len), ("n_feat", f), ("d_out", d)],
+        )?;
+        let inputs = [
+            Tensor::from_f64(vec![t_len as i64, f as i64], x.data()),
+            Tensor::from_f64(vec![t_len as i64, d as i64], y.data()),
+        ];
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 2, "expected (XtX, XtY)");
+        let xtx = Mat::from_fn(f, f, |i, j| outs[0][i * f + j] as f64);
+        let xty = Mat::from_fn(f, d, |i, j| outs[1][i * d + j] as f64);
+        Ok((xtx, xty))
+    }
+
+    /// Apply a readout through the compiled `readout_apply` graph.
+    pub fn readout_apply(&mut self, x: &Mat, w: &Mat) -> Result<Mat> {
+        let t_len = x.rows();
+        let f = x.cols();
+        let d = w.cols();
+        let exe = self.rt.load(
+            "readout_apply",
+            &[("T", t_len), ("n_feat", f), ("d_out", d)],
+        )?;
+        let inputs = [
+            Tensor::from_f64(vec![t_len as i64, f as i64], x.data()),
+            Tensor::from_f64(vec![f as i64, d as i64], w.data()),
+        ];
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 1, "expected (y,)");
+        Ok(Mat::from_fn(t_len, d, |i, j| outs[0][i * d + j] as f64))
+    }
+
+    /// Run the DENSE baseline graph (`dense_states`): `[T × D_in]` inputs,
+    /// explicit `W [N × N]`, `W_in [D_in × N]` → `[T × N]` states. Used by
+    /// the fig2 HLO-path comparison and integration tests.
+    pub fn dense_states(&mut self, u: &Mat, w: &Mat, w_in: &Mat) -> Result<Mat> {
+        let t_len = u.rows();
+        let d_in = u.cols();
+        let n = w.rows();
+        let exe = self
+            .rt
+            .load("dense_states", &[("T", t_len), ("d_in", d_in), ("n", n)])?;
+        let inputs = [
+            Tensor::from_f64(vec![t_len as i64, d_in as i64], u.data()),
+            Tensor::from_f64(vec![n as i64, n as i64], w.data()),
+            Tensor::from_f64(vec![d_in as i64, n as i64], w_in.data()),
+        ];
+        let outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 1, "expected (states,)");
+        Ok(Mat::from_fn(t_len, n, |i, j| outs[0][i * n + j] as f64))
+    }
+}

@@ -1,0 +1,170 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the request path.
+//!
+//! This is the only place the `xla` crate is touched. Interchange format is
+//! HLO **text** (see aot.py — the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos); `HloModuleProto::from_text_file` reassigns
+//! instruction ids, `XlaComputation::from_proto` + `PjRtClient::compile`
+//! produce a reusable executable. All artifact graphs return tuples.
+
+mod artifact;
+mod engine;
+
+pub use artifact::{Artifact, Manifest};
+pub use engine::DiagRuntime;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded-and-compiled artifact cache over a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory (`$CARGO_MANIFEST_DIR/artifacts` or
+    /// `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        let cand = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if cand.exists() {
+            cand
+        } else {
+            PathBuf::from("artifacts")
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Find an artifact by kind + dims, compile it (cached), and return a
+    /// handle for execution.
+    pub fn load(&mut self, kind: &str, dims: &[(&str, usize)]) -> Result<Executable<'_>> {
+        let art = self
+            .manifest
+            .find(kind, dims)
+            .ok_or_else(|| anyhow!("no artifact {kind} with dims {dims:?} in manifest"))?;
+        let key = art.file.clone();
+        if !self.compiled.contains_key(&key) {
+            let path = self.dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e}"))?;
+            self.compiled.insert(key.clone(), exe);
+        }
+        Ok(Executable {
+            exe: &self.compiled[&key],
+        })
+    }
+}
+
+/// A compiled computation ready to run.
+pub struct Executable<'a> {
+    exe: &'a xla::PjRtLoadedExecutable,
+}
+
+/// An input tensor: shape + f32 row-major data.
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> Self {
+        let n: i64 = dims.iter().product();
+        assert_eq!(n as usize, data.len(), "tensor shape/data mismatch");
+        Self { dims, data }
+    }
+
+    /// From an f64 slice (the native engines are f64; the HLO graphs f32).
+    pub fn from_f64(dims: Vec<i64>, data: &[f64]) -> Self {
+        Self::new(dims, data.iter().map(|&x| x as f32).collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        lit.reshape(&self.dims)
+            .map_err(|e| anyhow!("reshape to {:?}: {e}", self.dims))
+    }
+}
+
+impl Executable<'_> {
+    /// Execute with the given inputs; returns each tuple element as a flat
+    /// f32 vector (row-major).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result: {e}"))?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Runtime::default_dir()
+    }
+
+    #[test]
+    fn manifest_opens_when_artifacts_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(!rt.manifest().artifacts.is_empty());
+    }
+
+    #[test]
+    fn tensor_shape_validation() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn tensor_rejects_bad_shape() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+}

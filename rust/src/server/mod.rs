@@ -1,0 +1,298 @@
+//! Prediction service: a line-delimited JSON protocol over TCP, serving a
+//! trained diagonal reservoir. This is the "request path" of the stack —
+//! pure Rust, Python never involved.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"op": "predict", "input": [u0, u1, …]}     forecast 1-step-ahead for
+//!                                               the whole sequence
+//! → {"op": "stream", "input": [u_t]}            stateful per-connection
+//!                                               streaming step
+//! → {"op": "info"}
+//! ← {"ok": true, "output": […], "steps_per_sec": …}
+//! ```
+//!
+//! Each connection gets its own streaming state (slot planes); `predict`
+//! requests are stateless. The engine is the O(N) diagonal step — the same
+//! arithmetic as the compiled Pallas kernel, cross-validated against it in
+//! the integration tests.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Mat;
+use crate::readout::Readout;
+use crate::reservoir::DiagonalEsn;
+use crate::util::json::{parse, Json};
+use crate::util::Timer;
+
+/// A servable model: reservoir + trained readout.
+pub struct Model {
+    pub esn: DiagonalEsn,
+    pub readout: Readout,
+}
+
+impl Model {
+    /// Stateless sequence prediction: run → features → readout.
+    pub fn predict(&self, input: &[f64]) -> Vec<f64> {
+        let u = Mat::from_rows(input.len(), 1, input);
+        let feats = self.esn.run(&u);
+        let y = self.readout.predict(&feats);
+        (0..y.rows()).map(|t| y[(t, 0)]).collect()
+    }
+}
+
+/// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks; one thread per
+/// connection. `max_requests` bounds the total requests served (tests /
+/// examples); `None` runs forever.
+pub fn serve(model: Arc<Model>, addr: &str, max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            let _ = handle_connection(model, stream);
+        });
+        served += 1;
+        if let Some(max) = max_requests {
+            if served >= max {
+                let _ = handle.join();
+                break;
+            }
+        } else {
+            drop(handle); // detach
+        }
+    }
+    Ok(())
+}
+
+fn handle_connection(model: Arc<Model>, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    // per-connection streaming state
+    let slots = model.esn.spec.slots();
+    let mut s_re = vec![0.0f64; slots];
+    let mut s_im = vec![0.0f64; slots];
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let response = match handle_request(&model, &line, &mut s_re, &mut s_im) {
+            Ok(json) => json,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(format!("{e:#}"))),
+            ]),
+        };
+        out.write_all(response.to_string_compact().as_bytes())?;
+        out.write_all(b"\n")?;
+        let _ = peer;
+    }
+}
+
+fn handle_request(
+    model: &Model,
+    line: &str,
+    s_re: &mut [f64],
+    s_im: &mut [f64],
+) -> Result<Json> {
+    let req = parse(line.trim())?;
+    let op = req
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'op'"))?;
+    match op {
+        "info" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("n", Json::Num(model.esn.n() as f64)),
+            ("slots", Json::Num(model.esn.spec.slots() as f64)),
+            ("n_real", Json::Num(model.esn.spec.n_real as f64)),
+            (
+                "spectral_radius",
+                Json::Num(model.esn.spec.radius()),
+            ),
+        ])),
+        "predict" => {
+            let input = parse_input(&req)?;
+            let t = Timer::start();
+            let output = model.predict(&input);
+            let dt = t.elapsed_s().max(1e-12);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "output",
+                    Json::Arr(output.into_iter().map(Json::Num).collect()),
+                ),
+                (
+                    "steps_per_sec",
+                    Json::Num(input.len() as f64 / dt),
+                ),
+            ]))
+        }
+        "stream" => {
+            let input = parse_input(&req)?;
+            let mut outs = Vec::with_capacity(input.len());
+            let n = model.esn.n();
+            let mut feat = vec![0.0; n];
+            for &u in &input {
+                model.esn.step(s_re, s_im, &[u]);
+                model.esn.write_features(s_re, s_im, &mut feat);
+                // y = feat·w + b
+                let mut y = model.readout.b[0];
+                for (j, &f) in feat.iter().enumerate() {
+                    y += f * model.readout.w[(j, 0)];
+                }
+                outs.push(y);
+            }
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("output", Json::Arr(outs.into_iter().map(Json::Num).collect())),
+            ]))
+        }
+        "reset" => {
+            s_re.fill(0.0);
+            s_im.fill(0.0);
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+fn parse_input(req: &Json) -> Result<Vec<f64>> {
+    req.get("input")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'input' array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric input")))
+        .collect()
+}
+
+/// Minimal client for the examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        self.writer
+            .write_all(req.to_string_compact().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(line.trim())
+    }
+
+    pub fn predict(&mut self, input: &[f64]) -> Result<Vec<f64>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("predict".into())),
+            (
+                "input",
+                Json::Arr(input.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+        ]);
+        let resp = self.request(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        resp.get("output")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing output"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad output")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::readout::{fit, Regularizer};
+    use crate::reservoir::EsnConfig;
+    use crate::rng::Pcg64;
+    use crate::spectral::uniform::uniform_spectrum;
+    use crate::tasks::mso::MsoTask;
+
+    fn make_model() -> Model {
+        let config = EsnConfig::default().with_n(30).with_sr(0.9).with_seed(1);
+        let mut rng = Pcg64::new(1, 2);
+        let spec = uniform_spectrum(30, 0.9, &mut rng);
+        let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+        let task = MsoTask::new(1);
+        let u = task.input_mat();
+        let feats = esn.run(&u);
+        let x = crate::tasks::mso::slice_rows(&feats, 100..400);
+        let y = task.target_mat(100..400);
+        let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity).unwrap();
+        Model { esn, readout }
+    }
+
+    #[test]
+    fn predict_and_stream_agree() {
+        let model = make_model();
+        let task = MsoTask::new(1);
+        let input = &task.input[..50];
+        let batch = model.predict(input);
+        // streaming path
+        let slots = model.esn.spec.slots();
+        let mut s_re = vec![0.0; slots];
+        let mut s_im = vec![0.0; slots];
+        let mut line_out = Vec::new();
+        let mut feat = vec![0.0; model.esn.n()];
+        for &u in input {
+            model.esn.step(&mut s_re, &mut s_im, &[u]);
+            model.esn.write_features(&s_re, &s_im, &mut feat);
+            let mut y = model.readout.b[0];
+            for (j, &f) in feat.iter().enumerate() {
+                y += f * model.readout.w[(j, 0)];
+            }
+            line_out.push(y);
+        }
+        for (a, b) in batch.iter().zip(&line_out) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let model = Arc::new(make_model());
+        let addr = "127.0.0.1:47391";
+        let server_model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve(server_model, addr, Some(1)).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut client = Client::connect(addr).unwrap();
+        let task = MsoTask::new(1);
+        let out = client.predict(&task.input[..40]).unwrap();
+        assert_eq!(out.len(), 40);
+        let direct = model.predict(&task.input[..40]);
+        for (a, b) in out.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // info op
+        let resp = client
+            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("n").unwrap().as_usize(), Some(30));
+        drop(client);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,203 @@
+//! Sparse CSR matrix — the standard reservoir baseline uses connectivity
+//! `c_r` ≪ 1, and the paper's complexity table (§2.5) credits the dense
+//! baseline with sparse matvecs (`O(c_r·N²)`); this module makes that
+//! baseline honest.
+
+use crate::linalg::Mat;
+use crate::rng::{Distributions, Pcg64};
+
+/// Compressed Sparse Row matrix (f64).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// row i occupies indices `indptr[i]..indptr[i+1]`
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, keeping entries with |x| > 0.
+    pub fn from_dense(a: &Mat) -> Self {
+        let mut indptr = Vec::with_capacity(a.rows() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                let v = a[(i, j)];
+                if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self {
+            rows: a.rows(),
+            cols: a.cols(),
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Random sparse matrix: each entry present with probability
+    /// `connectivity`, values i.i.d. standard normal (the paper's reservoir
+    /// generation recipe, §2.5).
+    pub fn random(rows: usize, cols: usize, connectivity: f64, rng: &mut Pcg64) -> Self {
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for _ in 0..rows {
+            for j in 0..cols {
+                if rng.bernoulli(connectivity) {
+                    indices.push(j);
+                    values.push(rng.normal());
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self {
+            rows,
+            cols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Effective connectivity (`nnz / (rows·cols)`).
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Row-vector × matrix: `y = x · self` — the reservoir-step direction
+    /// (`r(t−1)·W`). O(nnz).
+    pub fn vecmat(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            for k in lo..hi {
+                y[self.indices[k]] += xi * self.values[k];
+            }
+        }
+    }
+
+    /// Matrix × column-vector: `y = self · x`. O(nnz).
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            let mut s = 0.0;
+            for k in lo..hi {
+                s += self.values[k] * x[self.indices[k]];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Densify (tests, eigendecomposition of sparse reservoirs).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                m[(i, self.indices[k])] = self.values[k];
+            }
+        }
+        m
+    }
+
+    /// Scale all stored values in place (spectral-radius normalization).
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Csr::random(10, 8, 0.3, &mut rng);
+        let d = a.to_dense();
+        let back = Csr::from_dense(&d);
+        assert_eq!(a.nnz(), back.nnz());
+        assert!(d.max_abs_diff(&back.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn vecmat_matches_dense() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Csr::random(12, 9, 0.4, &mut rng);
+        let d = a.to_dense();
+        let x = rng.normal_vec(12);
+        let mut ys = vec![0.0; 9];
+        let mut yd = vec![0.0; 9];
+        a.vecmat(&x, &mut ys);
+        d.vecmat(&x, &mut yd);
+        for j in 0..9 {
+            assert!((ys[j] - yd[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Pcg64::seeded(3);
+        let a = Csr::random(7, 11, 0.5, &mut rng);
+        let d = a.to_dense();
+        let x = rng.normal_vec(11);
+        let mut ys = vec![0.0; 7];
+        let mut yd = vec![0.0; 7];
+        a.matvec(&x, &mut ys);
+        d.matvec(&x, &mut yd);
+        for j in 0..7 {
+            assert!((ys[j] - yd[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn density_tracks_connectivity() {
+        let mut rng = Pcg64::seeded(4);
+        let a = Csr::random(200, 200, 0.1, &mut rng);
+        assert!((a.density() - 0.1).abs() < 0.01, "{}", a.density());
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Csr::random(5, 5, 0.0, &mut rng);
+        assert_eq!(a.nnz(), 0);
+        let mut y = vec![1.0; 5];
+        a.vecmat(&[1.0; 5], &mut y);
+        assert_eq!(y, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Algorithm 2 — random generation of the eigenvectors.
+//!
+//! For the `n_real` real slots: unit real Gaussian columns. For each
+//! complex slot: a unit complex Gaussian column (its conjugate partner is
+//! implicit in the slot form, materialized by [`full_basis`]). Gaussian
+//! columns are linearly independent with probability 1, so `P ∈ GLₙ(ℂ)`.
+
+use crate::linalg::CMat;
+use crate::num::c64;
+use crate::rng::{Distributions, Pcg64};
+
+use super::Spectrum;
+
+/// Slot-form eigenvector set: one column per slot (`n × slots`).
+#[derive(Clone, Debug)]
+pub struct SlotBasis {
+    /// `n × slots` complex columns; real slots have zero imaginary parts.
+    pub cols: CMat,
+    pub n_real: usize,
+}
+
+/// Generate the slot-form eigenvector basis per Algorithm 2.
+pub fn random_eigvecs(spec: &Spectrum, rng: &mut Pcg64) -> SlotBasis {
+    let n = spec.n;
+    let slots = spec.slots();
+    let mut cols = CMat::zeros(n, slots);
+    // real slots: unit real Gaussian
+    for j in 0..spec.n_real {
+        let v = rng.normal_vec(n);
+        let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for i in 0..n {
+            cols[(i, j)] = c64::real(v[i] / norm);
+        }
+    }
+    // complex slots: unit complex Gaussian
+    for j in spec.n_real..slots {
+        let vr = rng.normal_vec(n);
+        let vi = rng.normal_vec(n);
+        let norm = vr
+            .iter()
+            .zip(&vi)
+            .map(|(a, b)| a * a + b * b)
+            .sum::<f64>()
+            .sqrt();
+        for i in 0..n {
+            cols[(i, j)] = c64::new(vr[i] / norm, vi[i] / norm);
+        }
+    }
+    SlotBasis {
+        cols,
+        n_real: spec.n_real,
+    }
+}
+
+impl SlotBasis {
+    /// Materialize the full `n × n` basis `P` (conjugate columns appended
+    /// after each complex slot, matching [`Spectrum::full`]'s order).
+    pub fn full_basis(&self) -> CMat {
+        let n = self.cols.rows();
+        let slots = self.cols.cols();
+        let mut p = CMat::zeros(n, n);
+        let mut col = 0usize;
+        for j in 0..self.n_real {
+            for i in 0..n {
+                p[(i, col)] = self.cols[(i, j)];
+            }
+            col += 1;
+        }
+        for j in self.n_real..slots {
+            for i in 0..n {
+                p[(i, col)] = self.cols[(i, j)];
+                p[(i, col + 1)] = self.cols[(i, j)].conj();
+            }
+            col += 2;
+        }
+        debug_assert_eq!(col, n);
+        p
+    }
+
+    /// The real `Q` basis of Appendix A: real columns for real slots, then
+    /// `(Re v, Im v)` column pairs per complex slot — an `n × n` REAL
+    /// matrix (returned as real part; imaginary parts are identically 0).
+    pub fn q_basis(&self) -> crate::linalg::Mat {
+        let n = self.cols.rows();
+        let slots = self.cols.cols();
+        let mut q = crate::linalg::Mat::zeros(n, n);
+        let mut col = 0usize;
+        for j in 0..self.n_real {
+            for i in 0..n {
+                q[(i, col)] = self.cols[(i, j)].re;
+            }
+            col += 1;
+        }
+        for j in self.n_real..slots {
+            for i in 0..n {
+                q[(i, col)] = self.cols[(i, j)].re;
+                q[(i, col + 1)] = self.cols[(i, j)].im;
+            }
+            col += 2;
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CLu, Lu};
+    use crate::spectral::uniform::uniform_spectrum;
+
+    fn setup(n: usize, seed: u64) -> (Spectrum, SlotBasis) {
+        let mut rng = Pcg64::seeded(seed);
+        let spec = uniform_spectrum(n, 0.9, &mut rng);
+        let basis = random_eigvecs(&spec, &mut rng);
+        (spec, basis)
+    }
+
+    #[test]
+    fn full_basis_invertible() {
+        let (_, basis) = setup(40, 1);
+        let p = basis.full_basis();
+        let lu = CLu::factor(&p);
+        assert!(!lu.is_singular());
+        assert!(lu.rcond_estimate() > 1e-8);
+    }
+
+    #[test]
+    fn q_basis_invertible_and_real() {
+        let (_, basis) = setup(30, 2);
+        let q = basis.q_basis();
+        let lu = Lu::factor(&q);
+        assert!(!lu.is_singular());
+    }
+
+    #[test]
+    fn columns_unit_norm() {
+        let (_, basis) = setup(25, 3);
+        for j in 0..basis.cols.cols() {
+            let norm: f64 = basis.cols.col(j).iter().map(|z| z.norm_sqr()).sum();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reconstructed_w_is_real_with_correct_spectrum() {
+        // W = P diag(Λ) P⁻¹ must be a REAL matrix whose eigenvalues match.
+        let (spec, basis) = setup(16, 4);
+        let p = basis.full_basis();
+        let full = spec.full();
+        let mut pd = p.clone();
+        for j in 0..16 {
+            for i in 0..16 {
+                let v = pd[(i, j)];
+                pd[(i, j)] = v * full[j];
+            }
+        }
+        let pinv = CLu::factor(&p).inverse().unwrap();
+        let w = pd.matmul(&pinv);
+        assert!(w.imag_part().frobenius() < 1e-9, "W must be real");
+        // eigenvalues of the reconstructed real matrix match the slot set
+        let wr = w.real_part();
+        let got = crate::linalg::eigenvalues(&wr);
+        let mut got_mods: Vec<f64> = got.iter().map(|z| z.abs()).collect();
+        let mut want_mods: Vec<f64> = full.iter().map(|z| z.abs()).collect();
+        got_mods.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want_mods.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (g, w) in got_mods.iter().zip(&want_mods) {
+            assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn q_basis_relates_to_p_via_z_transform() {
+        // Q = P·Z with Z = diag(I, [[.5,.5],[-.5i,.5i]] blocks) — check via
+        // the defining property: col pairs (Re v, Im v).
+        let (spec, basis) = setup(12, 5);
+        let q = basis.q_basis();
+        let mut col = spec.n_real;
+        for j in spec.n_real..spec.slots() {
+            for i in 0..12 {
+                assert_eq!(q[(i, col)], basis.cols[(i, j)].re);
+                assert_eq!(q[(i, col + 1)], basis.cols[(i, j)].im);
+            }
+            col += 2;
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Spectral machinery for Direct Parameter Generation (DPG, paper §4.4)
+//! and the shared *slot* representation of diagonalized reservoirs.
+//!
+//! A real `N×N` reservoir has `n_real` real eigenvalues and `n_cpx`
+//! complex-conjugate pairs with `N = n_real + 2·n_cpx`. Everything
+//! downstream (the Pallas kernel, the Rust engines, the readout layout)
+//! stores ONE member per conjugate pair — the *slot* form:
+//!
+//! ```text
+//! slots:   [ λ₁ … λ_{n_real} | μ₁ … μ_{n_cpx} ]      (μ_k: im > 0)
+//! Q-basis: [ r₁ … r_{n_real} | Re μ₁ Im μ₁ … ]        (N real features)
+//! ```
+//!
+//! Generators: [`uniform`] (Alg 1), [`golden`] (Alg 3, with optional noise),
+//! [`sim`] (eigenvalues of an actual random `W` + random eigenvectors), and
+//! [`eigvecs`] (Alg 2) for the eigenvector basis `P`.
+
+pub mod eigvecs;
+pub mod golden;
+pub mod sim;
+pub mod uniform;
+
+use crate::num::c64;
+
+/// Slot-form spectrum of a real matrix (see module docs).
+#[derive(Clone, Debug)]
+pub struct Spectrum {
+    /// Reservoir dimension `N = n_real + 2·(slots − n_real)`.
+    pub n: usize,
+    /// Number of real-eigenvalue slots (they come first).
+    pub n_real: usize,
+    /// One eigenvalue per slot; `lam[i].im == 0` for `i < n_real`,
+    /// `lam[i].im > 0` for complex slots.
+    pub lam: Vec<c64>,
+}
+
+impl Spectrum {
+    /// Build from a slot vector; validates the layout.
+    pub fn new(n: usize, n_real: usize, lam: Vec<c64>) -> Self {
+        let n_cpx = lam.len() - n_real;
+        assert_eq!(n, n_real + 2 * n_cpx, "slot layout mismatch");
+        debug_assert!(lam[..n_real].iter().all(|z| z.im == 0.0));
+        debug_assert!(lam[n_real..].iter().all(|z| z.im > 0.0));
+        Self { n, n_real, lam }
+    }
+
+    /// Number of slots (`n_real + n_cpx`).
+    pub fn slots(&self) -> usize {
+        self.lam.len()
+    }
+
+    /// Number of complex-conjugate pairs.
+    pub fn n_cpx(&self) -> usize {
+        self.lam.len() - self.n_real
+    }
+
+    /// Expand to the full `N`-element eigenvalue list (conjugates
+    /// materialized, pairs adjacent, `im > 0` first — the eigensolver's
+    /// convention).
+    pub fn full(&self) -> Vec<c64> {
+        let mut out = Vec::with_capacity(self.n);
+        out.extend_from_slice(&self.lam[..self.n_real]);
+        for &z in &self.lam[self.n_real..] {
+            out.push(z);
+            out.push(z.conj());
+        }
+        out
+    }
+
+    /// Spectral radius `max |λ|`.
+    pub fn radius(&self) -> f64 {
+        self.lam.iter().map(|z| z.abs()).fold(0.0, f64::max)
+    }
+
+    /// Leaking-rate reparametrization (paper Eq. 4, spectral form):
+    /// `W ← lr·W + (1−lr)·I` ⇒ `λ ← lr·λ + (1−lr)` (same eigenvectors).
+    ///
+    /// NOTE: mixing with the identity can rotate a complex eigenvalue's
+    /// imaginary part to exactly zero only if it was zero already, so the
+    /// slot layout is preserved.
+    pub fn apply_leak(&self, lr: f64) -> Spectrum {
+        assert!(lr > 0.0 && lr <= 1.0);
+        let lam = self
+            .lam
+            .iter()
+            .map(|&z| z * lr + c64::real(1.0 - lr))
+            .collect();
+        Spectrum {
+            n: self.n,
+            n_real: self.n_real,
+            lam,
+        }
+    }
+
+    /// Scale all eigenvalues (spectral-radius adjustment:
+    /// `W ← ρ·W/ρ₀` ⇒ `λ ← ρ·λ/ρ₀`).
+    pub fn scaled(&self, s: f64) -> Spectrum {
+        Spectrum {
+            n: self.n,
+            n_real: self.n_real,
+            lam: self.lam.iter().map(|&z| z * s).collect(),
+        }
+    }
+
+    /// Split planes for the kernels: `(re, im)` per slot.
+    pub fn planes(&self) -> (Vec<f64>, Vec<f64>) {
+        (
+            self.lam.iter().map(|z| z.re).collect(),
+            self.lam.iter().map(|z| z.im).collect(),
+        )
+    }
+}
+
+/// Expected number of real eigenvalues of an `N×N` i.i.d. Gaussian matrix
+/// (Edelman–Kostlan 1995): `E[N_real] ~ √(2N/π)` — Eq. (21).
+pub fn expected_real_count(n: usize) -> f64 {
+    (2.0 * n as f64 / std::f64::consts::PI).sqrt()
+}
+
+/// The paper's real-count rule shared by Alg 1 and Alg 3: round
+/// `√(2N/π)`, then fix parity so `N − N_real` is even (conjugate pairs).
+pub fn real_count_with_parity(n: usize) -> usize {
+    let mut n_real = expected_real_count(n).round() as usize;
+    if n_real % 2 != n % 2 {
+        n_real += 1;
+    }
+    n_real.min(n)
+}
+
+/// Assemble a [`Spectrum`] from a raw eigenvalue list in the eigensolver's
+/// convention (conjugate pairs adjacent, `im > 0` first). Near-real
+/// eigenvalues (|im| ≤ `tol·|λ|`) are flattened to real.
+pub fn spectrum_from_eigenvalues(values: &[c64], tol: f64) -> Spectrum {
+    let n = values.len();
+    let mut reals = Vec::new();
+    let mut cpx = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let z = values[i];
+        if z.im.abs() <= tol * z.abs().max(1e-300) {
+            reals.push(c64::real(z.re));
+            i += 1;
+        } else {
+            // take the im>0 member; skip its conjugate partner
+            cpx.push(if z.im > 0.0 { z } else { z.conj() });
+            debug_assert!(
+                i + 1 < n,
+                "complex eigenvalue without a conjugate partner"
+            );
+            i += 2;
+        }
+    }
+    let n_real = reals.len();
+    reals.extend(cpx);
+    Spectrum::new(n, n_real, reals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edelman_kostlan_scaling() {
+        assert!((expected_real_count(100) - 7.9788).abs() < 1e-3);
+        // parity: N=100 even → n_real must be even
+        assert_eq!(real_count_with_parity(100) % 2, 0);
+        assert_eq!(real_count_with_parity(101) % 2, 1);
+    }
+
+    #[test]
+    fn full_expansion_conjugate_closed() {
+        let s = Spectrum::new(
+            5,
+            1,
+            vec![c64::real(0.5), c64::new(0.1, 0.2), c64::new(-0.3, 0.4)],
+        );
+        let full = s.full();
+        assert_eq!(full.len(), 5);
+        let sum_im: f64 = full.iter().map(|z| z.im).sum();
+        assert!(sum_im.abs() < 1e-15);
+    }
+
+    #[test]
+    fn leak_shrinks_toward_one() {
+        let s = Spectrum::new(2, 0, vec![c64::new(0.0, 1.0)]);
+        let leaked = s.apply_leak(0.5);
+        assert!((leaked.lam[0] - c64::new(0.5, 0.5)).abs() < 1e-15);
+        // lr = 1 is identity
+        let id = s.apply_leak(1.0);
+        assert_eq!(id.lam[0], s.lam[0]);
+    }
+
+    #[test]
+    fn radius_and_scale() {
+        let s = Spectrum::new(
+            4,
+            2,
+            vec![c64::real(-0.8), c64::real(0.2), c64::new(0.3, 0.4)],
+        );
+        assert!((s.radius() - 0.8).abs() < 1e-15);
+        let t = s.scaled(1.25);
+        assert!((t.radius() - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn from_eigenvalues_roundtrip() {
+        use crate::linalg::{eigenvalues, Mat};
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(1);
+        let n = 30;
+        let mut a = Mat::randn(n, n, &mut rng);
+        a.scale(1.0 / (n as f64).sqrt());
+        let vals = eigenvalues(&a);
+        let s = spectrum_from_eigenvalues(&vals, 1e-12);
+        assert_eq!(s.n, n);
+        assert_eq!(s.full().len(), n);
+        // multiset of |λ| preserved
+        let mut a1: Vec<f64> = vals.iter().map(|z| z.abs()).collect();
+        let mut a2: Vec<f64> = s.full().iter().map(|z| z.abs()).collect();
+        a1.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        a2.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (x, y) in a1.iter().zip(&a2) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn planes_layout() {
+        let s = Spectrum::new(3, 1, vec![c64::real(0.7), c64::new(0.1, 0.6)]);
+        let (re, im) = s.planes();
+        assert_eq!(re, vec![0.7, 0.1]);
+        assert_eq!(im, vec![0.0, 0.6]);
+    }
+}

@@ -1,0 +1,89 @@
+//! Sim Distribution — eigenvalues extracted from an actual random
+//! reservoir matrix `W` (via the from-scratch eigensolver) combined with
+//! randomly generated eigenvectors (Algorithm 2). The paper uses it to
+//! isolate the role of eigen*vectors*: Sim shares the Normal baseline's
+//! spectral density but not its eigenvector structure (Fig 6's
+//! "eigenvectors play a secondary role" finding).
+
+use crate::linalg::{eigenvalues, Mat};
+use crate::rng::Pcg64;
+use crate::sparse::Csr;
+
+use super::{spectrum_from_eigenvalues, Spectrum};
+
+/// Tolerance for flattening numerically-real eigenvalues.
+const REAL_TOL: f64 = 1e-9;
+
+/// Generate a random dense reservoir (i.i.d. normal entries with the given
+/// connectivity), scale it to spectral radius `sr`, and return its
+/// slot-form spectrum. O(N³) — this is the cost DPG's other distributions
+/// avoid, kept here deliberately as the paper's comparison point.
+pub fn sim_spectrum(n: usize, connectivity: f64, sr: f64, rng: &mut Pcg64) -> Spectrum {
+    let w = Csr::random(n, n, connectivity, rng).to_dense();
+    let vals = eigenvalues(&w);
+    let rho = vals.iter().map(|z| z.abs()).fold(0.0, f64::max);
+    let spec = spectrum_from_eigenvalues(&vals, REAL_TOL);
+    if rho > 0.0 {
+        spec.scaled(sr / rho)
+    } else {
+        spec
+    }
+}
+
+/// Same, but from a caller-provided matrix (used by EWT/EET where the
+/// matrix must be *kept* — Sim only keeps its spectrum).
+pub fn spectrum_of(w: &Mat) -> Spectrum {
+    spectrum_from_eigenvalues(&eigenvalues(w), REAL_TOL)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_to_requested_radius() {
+        let mut rng = Pcg64::seeded(1);
+        let s = sim_spectrum(60, 1.0, 0.8, &mut rng);
+        assert!((s.radius() - 0.8).abs() < 1e-9, "radius={}", s.radius());
+        assert_eq!(s.n, 60);
+    }
+
+    #[test]
+    fn real_count_close_to_edelman_kostlan() {
+        // average over seeds: E[N_real] = √(2N/π) ≈ 7.98 for N=100
+        let mut total = 0usize;
+        let runs = 12;
+        for seed in 0..runs {
+            let mut rng = Pcg64::seeded(seed);
+            let s = sim_spectrum(100, 1.0, 1.0, &mut rng);
+            total += s.n_real;
+        }
+        let mean = total as f64 / runs as f64;
+        assert!(
+            (mean - 7.98).abs() < 3.0,
+            "mean real count {mean}, want ≈ 7.98"
+        );
+    }
+
+    #[test]
+    fn sparse_input_lowers_rank_gracefully() {
+        let mut rng = Pcg64::seeded(3);
+        let s = sim_spectrum(40, 0.02, 1.0, &mut rng);
+        assert_eq!(s.n, 40);
+        // extremely sparse ⇒ most eigenvalues ≈ 0 (the Fig 7 collapse)
+        let near_zero = s
+            .full()
+            .iter()
+            .filter(|z| z.abs() < 1e-6)
+            .count();
+        assert!(near_zero > 10, "near_zero={near_zero}");
+    }
+
+    #[test]
+    fn spectrum_of_matches_direct_eigenvalues() {
+        let mut rng = Pcg64::seeded(4);
+        let w = Mat::randn(20, 20, &mut rng);
+        let s = spectrum_of(&w);
+        assert_eq!(s.full().len(), 20);
+    }
+}

@@ -1,0 +1,101 @@
+//! Algorithm 1 — random generation of the eigenvalues (Uniform
+//! Distribution DPG).
+//!
+//! `N_real ≈ √(2N/π)` eigenvalues are real, uniform on `(−sr, sr)`; the
+//! remaining conjugate pairs have modulus `sr·√U` (uniform area density on
+//! the disk) and angle uniform on `[0, π)`.
+
+use crate::num::c64;
+use crate::rng::{Distributions, Pcg64};
+
+use super::{real_count_with_parity, Spectrum};
+
+/// Generate a slot-form spectrum per Algorithm 1.
+pub fn uniform_spectrum(n: usize, sr: f64, rng: &mut Pcg64) -> Spectrum {
+    let n_real = real_count_with_parity(n);
+    let n_cpx = (n - n_real) / 2;
+    let mut lam = Vec::with_capacity(n_real + n_cpx);
+    for _ in 0..n_real {
+        lam.push(c64::real(rng.uniform(-sr, sr)));
+    }
+    for _ in 0..n_cpx {
+        let modulus = sr * rng.next_f64().sqrt();
+        // angle in (0, π): keep im strictly positive so the slot layout
+        // invariant holds (an exactly-real draw has measure zero; nudge).
+        let mut theta = rng.uniform(0.0, std::f64::consts::PI);
+        if theta == 0.0 {
+            theta = f64::EPSILON;
+        }
+        lam.push(c64::from_polar(modulus, theta));
+    }
+    Spectrum::new(n, n_real, lam)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn respects_spectral_radius_bound() {
+        check("uniform radius ≤ sr", 20, |rng| {
+            let n = 50 + (rng.next_below(100) as usize);
+            let sr = rng.uniform(0.1, 1.5);
+            let s = uniform_spectrum(n, sr, rng);
+            if s.radius() <= sr + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("radius {} > sr {}", s.radius(), sr))
+            }
+        });
+    }
+
+    #[test]
+    fn real_count_matches_edelman_kostlan() {
+        let mut rng = Pcg64::seeded(1);
+        let s = uniform_spectrum(100, 1.0, &mut rng);
+        assert_eq!(s.n_real, 8); // √(200/π) ≈ 7.98 → 8 (even, parity ok)
+        assert_eq!(s.n, 100);
+        assert_eq!(s.slots(), 8 + 46);
+    }
+
+    #[test]
+    fn complex_slots_upper_half_plane() {
+        let mut rng = Pcg64::seeded(2);
+        let s = uniform_spectrum(201, 0.9, &mut rng);
+        for z in &s.lam[s.n_real..] {
+            assert!(z.im > 0.0);
+        }
+        // full spectrum is conjugate-closed
+        let sum_im: f64 = s.full().iter().map(|z| z.im).sum();
+        assert!(sum_im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn sqrt_u_gives_uniform_disk_density() {
+        // With modulus ~ sr√U the CDF of |λ| is (r/sr)² — check the median.
+        let mut rng = Pcg64::seeded(3);
+        let mut mods = Vec::new();
+        for _ in 0..200 {
+            let s = uniform_spectrum(100, 1.0, &mut rng);
+            mods.extend(s.lam[s.n_real..].iter().map(|z| z.abs()));
+        }
+        mods.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = mods[mods.len() / 2];
+        assert!(
+            (median - 0.5f64.sqrt()).abs() < 0.02,
+            "median={median} want ≈ {:.3}",
+            0.5f64.sqrt()
+        );
+    }
+
+    #[test]
+    fn tiny_reservoirs() {
+        let mut rng = Pcg64::seeded(4);
+        for n in 1..8usize {
+            let s = uniform_spectrum(n, 1.0, &mut rng);
+            assert_eq!(s.n, n);
+            assert_eq!(s.full().len(), n);
+        }
+    }
+}

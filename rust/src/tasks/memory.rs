@@ -1,0 +1,294 @@
+//! Memory Capacity task — paper §5.2 (Jaeger 2001).
+//!
+//! i.i.d. input `u(t) ~ Uniform(−0.8, 0.8)`; for each delay `k` a readout
+//! `y_k` is trained to reconstruct `u(t−k)` from the current state; the
+//! k-delay capacity is the squared correlation (Eq. 23–24) on held-out
+//! data. The paper evaluates reservoirs with spectral radius exactly 1 and
+//! no leak.
+
+use crate::linalg::Mat;
+use crate::metrics::determination;
+use crate::readout::{fit, Regularizer};
+use crate::rng::{Distributions, Pcg64};
+
+/// Memory-capacity workload: input sequence + split bookkeeping.
+#[derive(Clone, Debug)]
+pub struct McTask {
+    pub input: Vec<f64>,
+    pub washout: usize,
+    pub train: usize,
+    pub test: usize,
+}
+
+impl McTask {
+    /// Standard sizes: 200 washout, `train` and `test` effective steps.
+    pub fn new(train: usize, test: usize, seed: u64) -> Self {
+        let washout = 200;
+        let mut rng = Pcg64::new(seed, 3);
+        let input = rng.uniform_vec(washout + train + test, -0.8, 0.8);
+        Self {
+            input,
+            washout,
+            train,
+            test,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.input.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.input.is_empty()
+    }
+
+    pub fn input_mat(&self) -> Mat {
+        Mat::from_rows(self.len(), 1, &self.input)
+    }
+
+    /// Delayed target `u(t−k)` for state row `t` (rows `< k` have no valid
+    /// target; callers only use rows ≥ washout ≥ max delay).
+    fn delayed(&self, t: usize, k: usize) -> f64 {
+        if t >= k {
+            self.input[t - k]
+        } else {
+            0.0
+        }
+    }
+
+    /// Compute `MC_k` for each `k in 1..=k_max`, given the precomputed
+    /// state/feature matrix `[T × F]` (one row per time step, aligned with
+    /// `input`: row `t` is the state after consuming `u(t)`).
+    ///
+    /// A separate ridge readout is fit per delay on the train split and
+    /// the determination coefficient is evaluated on the test split.
+    pub fn capacities(&self, states: &Mat, k_max: usize, alpha: f64) -> Vec<f64> {
+        assert_eq!(states.rows(), self.len());
+        assert!(self.washout >= k_max, "washout must cover the max delay");
+        let train_range = self.washout..self.washout + self.train;
+        let test_range =
+            self.washout + self.train..self.washout + self.train + self.test;
+
+        let x_train = super::mso::slice_rows(states, train_range.clone());
+        let x_test = super::mso::slice_rows(states, test_range.clone());
+
+        let mut out = Vec::with_capacity(k_max);
+        for k in 1..=k_max {
+            let y_train = Mat::from_rows(
+                train_range.len(),
+                1,
+                &train_range
+                    .clone()
+                    .map(|t| self.delayed(t, k))
+                    .collect::<Vec<_>>(),
+            );
+            let readout = match fit(&x_train, &y_train, alpha, true, Regularizer::Identity)
+            {
+                Ok(r) => r,
+                Err(_) => {
+                    out.push(0.0);
+                    continue;
+                }
+            };
+            let pred = readout.predict(&x_test);
+            let target: Vec<f64> =
+                test_range.clone().map(|t| self.delayed(t, k)).collect();
+            let pred_v: Vec<f64> = (0..pred.rows()).map(|i| pred[(i, 0)]).collect();
+            let d = determination(&target, &pred_v);
+            out.push(if d.is_finite() { d } else { 0.0 });
+        }
+        out
+    }
+
+    /// Total memory capacity `MC = Σ_k MC_k`.
+    pub fn total_capacity(&self, states: &Mat, k_max: usize, alpha: f64) -> f64 {
+        self.capacities(states, k_max, alpha).iter().sum()
+    }
+
+    /// Fast path for large sweeps (Fig 6/7): the Gram matrix `XᵀX + αI` is
+    /// the SAME for every delay — factor it once, then back-substitute one
+    /// rhs per delay. O(F³ + k_max·F²) instead of O(k_max·F³).
+    pub fn capacities_fast(&self, states: &Mat, k_max: usize, alpha: f64) -> Vec<f64> {
+        self.capacities_fast_reg(states, k_max, alpha, None)
+    }
+
+    /// [`capacities_fast`] with an optional generalized Tikhonov matrix
+    /// `R` for the feature block (`G += α·R` instead of `α·I`) — Theorem 1
+    /// (iv): with `R = QᵀQ`, training in the eigenbasis is EXACTLY
+    /// equivalent to plain ridge on the standard states (the paper's Fig-7
+    /// Diagonalization column).
+    pub fn capacities_fast_reg(
+        &self,
+        states: &Mat,
+        k_max: usize,
+        alpha: f64,
+        reg: Option<&Mat>,
+    ) -> Vec<f64> {
+        use crate::linalg::{Cholesky, Lu, Mat as M};
+        assert_eq!(states.rows(), self.len());
+        assert!(self.washout >= k_max, "washout must cover the max delay");
+        let train_range = self.washout..self.washout + self.train;
+        let test_range =
+            self.washout + self.train..self.washout + self.train + self.test;
+        let x_train = super::mso::slice_rows(states, train_range.clone());
+        let x_test = super::mso::slice_rows(states, test_range.clone());
+        let f = x_train.cols();
+        let t_len = x_train.rows();
+        let ext = f + 1; // + bias
+
+        // G = [XᵀX, Xᵀ1; 1ᵀX, T] + αI
+        let mut g = M::zeros(ext, ext);
+        for t in 0..t_len {
+            let row = x_train.row(t);
+            for i in 0..f {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let gi = g.row_mut(i);
+                for j in i..f {
+                    gi[j] += xi * row[j];
+                }
+            }
+        }
+        for i in 0..f {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        for i in 0..f {
+            let s: f64 = (0..t_len).map(|t| x_train[(t, i)]).sum();
+            g[(i, f)] = s;
+            g[(f, i)] = s;
+        }
+        g[(f, f)] = t_len as f64;
+        match reg {
+            None => {
+                for i in 0..ext {
+                    g[(i, i)] += alpha;
+                }
+            }
+            Some(r) => {
+                assert_eq!(r.rows(), f, "Tikhonov matrix must match features");
+                for i in 0..f {
+                    for j in 0..f {
+                        g[(i, j)] += alpha * r[(i, j)];
+                    }
+                }
+                g[(f, f)] += alpha;
+            }
+        }
+
+        enum Factor {
+            Chol(Cholesky),
+            Lu(Lu),
+        }
+        let factor = match Cholesky::factor(&g) {
+            Ok(c) => Factor::Chol(c),
+            Err(_) => Factor::Lu(Lu::factor(&g)),
+        };
+
+        let mut out = Vec::with_capacity(k_max);
+        let mut rhs = vec![0.0; ext];
+        for k in 1..=k_max {
+            rhs.fill(0.0);
+            for (row, t) in train_range.clone().enumerate() {
+                let target = self.delayed(t, k);
+                let xr = x_train.row(row);
+                for i in 0..f {
+                    rhs[i] += xr[i] * target;
+                }
+                rhs[f] += target;
+            }
+            let sol = match &factor {
+                Factor::Chol(c) => c.solve_vec(&rhs),
+                Factor::Lu(lu) => match lu.solve_vec(&rhs) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        out.push(0.0);
+                        continue;
+                    }
+                },
+            };
+            // predictions on test
+            let mut pred = Vec::with_capacity(test_range.len());
+            for row in 0..x_test.rows() {
+                let xr = x_test.row(row);
+                let mut y = sol[f];
+                for i in 0..f {
+                    y += xr[i] * sol[i];
+                }
+                pred.push(y);
+            }
+            let target: Vec<f64> =
+                test_range.clone().map(|t| self.delayed(t, k)).collect();
+            let d = determination(&target, &pred);
+            out.push(if d.is_finite() { d } else { 0.0 });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reservoir::{EsnConfig, StandardEsn};
+
+    #[test]
+    fn input_in_range() {
+        let task = McTask::new(100, 100, 1);
+        assert!(task.input.iter().all(|x| (-0.8..0.8).contains(x)));
+        assert_eq!(task.len(), 400);
+    }
+
+    #[test]
+    fn identity_shift_reservoir_has_perfect_short_memory() {
+        // A hand-built delay-line reservoir: r_j(t) = u(t−j). MC_k must be
+        // ≈1 for k ≤ N and the features trivially linear.
+        let n = 5;
+        let task = McTask::new(150, 150, 2);
+        let t_len = task.len();
+        let mut states = Mat::zeros(t_len, n);
+        for t in 0..t_len {
+            for j in 0..n {
+                if t >= j {
+                    states[(t, j)] = task.input[t - j];
+                }
+            }
+        }
+        let caps = task.capacities(&states, 4, 1e-9);
+        for (k, c) in caps.iter().enumerate() {
+            assert!(*c > 0.999, "MC_{} = {c}", k + 1);
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_slow_path() {
+        let esn = StandardEsn::generate(
+            EsnConfig::default().with_n(20).with_sr(1.0).with_seed(9),
+        );
+        let task = McTask::new(200, 200, 9);
+        let states = esn.run(&task.input_mat());
+        let slow = task.capacities(&states, 15, 1e-7);
+        let fast = task.capacities_fast(&states, 15, 1e-7);
+        for (k, (a, b)) in slow.iter().zip(&fast).enumerate() {
+            assert!((a - b).abs() < 1e-6, "k={} {a} vs {b}", k + 1);
+        }
+    }
+
+    #[test]
+    fn random_reservoir_memory_decays_with_delay() {
+        let esn = StandardEsn::generate(
+            EsnConfig::default().with_n(50).with_sr(1.0).with_seed(3),
+        );
+        let task = McTask::new(300, 300, 4);
+        let states = esn.run(&task.input_mat());
+        let caps = task.capacities(&states, 60, 1e-7);
+        // short delays nearly perfect, long delays collapse
+        assert!(caps[0] > 0.9, "MC_1 = {}", caps[0]);
+        assert!(caps[59] < 0.5, "MC_60 = {}", caps[59]);
+        // total capacity bounded by N (Jaeger's theorem)
+        let total: f64 = caps.iter().sum();
+        assert!(total < 50.0 + 1.0, "MC = {total}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Benchmark workloads from the paper's evaluation: Multiple Superimposed
+//! Oscillators (§5.1), Memory Capacity (§5.2), plus NARMA-10 as an extra
+//! nonlinear-readout stressor (future-work direction of the paper).
+
+pub mod memory;
+pub mod mso;
+pub mod narma;

@@ -1,0 +1,155 @@
+//! Multiple Superimposed Oscillators (MSO) — paper §5.1 / Fig 4.
+//!
+//! `U_K(t) = Σ_{k=1..K} sin(α_k·t)` with the 12 Gallicchio et al. (2017)
+//! frequencies. Task: one-step-ahead prediction with teacher forcing.
+//! Splits follow the paper exactly: 1000 steps = 400 train (first 100 are
+//! washout) + 300 validation + 300 test.
+
+use crate::linalg::Mat;
+
+/// The 12 angular frequencies α₁…α₁₂ (Gallicchio et al. 2017).
+pub const ALPHAS: [f64; 12] = [
+    0.2, 0.331, 0.42, 0.51, 0.63, 0.74, 0.85, 0.97, 1.08, 1.19, 1.27, 1.32,
+];
+
+/// Paper split sizes.
+pub const T_TRAIN: usize = 400;
+pub const T_WASHOUT: usize = 100;
+pub const T_VALID: usize = 300;
+pub const T_TEST: usize = 300;
+pub const T_TOTAL: usize = T_TRAIN + T_VALID + T_TEST;
+
+/// `U_K(t)` for `t = 0..len` (the paper's Eq. 22; t is the integer step).
+pub fn mso_series(k: usize, len: usize) -> Vec<f64> {
+    assert!(
+        (1..=ALPHAS.len()).contains(&k),
+        "K must be in 1..=12, got {k}"
+    );
+    (0..len)
+        .map(|t| {
+            ALPHAS[..k]
+                .iter()
+                .map(|a| (a * t as f64).sin())
+                .sum::<f64>()
+        })
+        .collect()
+}
+
+/// One-step-ahead MSO task with the paper's train/valid/test partition.
+#[derive(Clone, Debug)]
+pub struct MsoTask {
+    pub k: usize,
+    /// Input `u(t) = U_K(t)` for `t = 0..T_TOTAL`.
+    pub input: Vec<f64>,
+    /// Target `y(t) = U_K(t+1)`.
+    pub target: Vec<f64>,
+}
+
+/// Index ranges of each split (into `input` / `target` / state rows).
+pub struct Splits {
+    pub washout: std::ops::Range<usize>,
+    pub train: std::ops::Range<usize>,
+    pub valid: std::ops::Range<usize>,
+    pub test: std::ops::Range<usize>,
+}
+
+impl MsoTask {
+    pub fn new(k: usize) -> Self {
+        let series = mso_series(k, T_TOTAL + 1);
+        let input = series[..T_TOTAL].to_vec();
+        let target = series[1..=T_TOTAL].to_vec();
+        Self { k, input, target }
+    }
+
+    pub fn splits() -> Splits {
+        Splits {
+            washout: 0..T_WASHOUT,
+            train: T_WASHOUT..T_TRAIN,
+            valid: T_TRAIN..T_TRAIN + T_VALID,
+            test: T_TRAIN + T_VALID..T_TOTAL,
+        }
+    }
+
+    /// Input as a `[T × 1]` matrix (the engines' expected shape).
+    pub fn input_mat(&self) -> Mat {
+        Mat::from_rows(self.input.len(), 1, &self.input)
+    }
+
+    /// Target rows for an index range, as `[len × 1]`.
+    pub fn target_mat(&self, range: std::ops::Range<usize>) -> Mat {
+        let slice = &self.target[range];
+        Mat::from_rows(slice.len(), 1, slice)
+    }
+}
+
+/// Row-slice helper shared by the experiment drivers: copy `range` rows of
+/// `m` into a fresh matrix.
+pub fn slice_rows(m: &Mat, range: std::ops::Range<usize>) -> Mat {
+    let mut out = Mat::zeros(range.len(), m.cols());
+    for (dst, src) in range.enumerate() {
+        out.row_mut(dst).copy_from_slice(m.row(src));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_is_sum_of_sines() {
+        let s = mso_series(2, 10);
+        for (t, &v) in s.iter().enumerate() {
+            let want = (0.2 * t as f64).sin() + (0.331 * t as f64).sin();
+            assert!((v - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mso1_bounded_by_one() {
+        let s = mso_series(1, 1000);
+        assert!(s.iter().all(|v| v.abs() <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn mso12_uses_all_frequencies() {
+        let s = mso_series(12, 1000);
+        let max = s.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max > 6.0, "superposition should reach near 12, got {max}");
+    }
+
+    #[test]
+    fn task_target_is_shifted_input() {
+        let task = MsoTask::new(5);
+        for t in 0..T_TOTAL - 1 {
+            assert_eq!(task.target[t], task.input[t + 1]);
+        }
+        assert_eq!(task.input.len(), T_TOTAL);
+        assert_eq!(task.target.len(), T_TOTAL);
+    }
+
+    #[test]
+    fn splits_partition_the_series() {
+        let s = MsoTask::splits();
+        assert_eq!(s.washout.end, s.train.start);
+        assert_eq!(s.train.end, s.valid.start);
+        assert_eq!(s.valid.end, s.test.start);
+        assert_eq!(s.test.end, T_TOTAL);
+        assert_eq!(s.train.len(), 300);
+        assert_eq!(s.valid.len(), 300);
+        assert_eq!(s.test.len(), 300);
+    }
+
+    #[test]
+    fn slice_rows_copies() {
+        let m = Mat::from_rows(4, 2, &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let s = slice_rows(&m, 1..3);
+        assert_eq!(s.data(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "K must be")]
+    fn rejects_k_13() {
+        mso_series(13, 10);
+    }
+}

@@ -1,0 +1,80 @@
+//! Seeded property-test harness (proptest is not in the offline registry).
+//!
+//! [`check`] runs a property over `cases` deterministic random seeds; on
+//! failure it reports the offending seed so the case can be replayed with
+//! `check_one`. Used by the invariant tests across linalg / spectral /
+//! reservoir modules.
+
+use crate::rng::Pcg64;
+
+/// Run `prop` for `cases` seeded generators; panic with the failing seed
+/// and message on the first violation.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Pcg64) -> Result<(), String>) {
+    for seed in 0..cases {
+        let mut rng = Pcg64::new(seed, 0x9e37);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (debugging helper; also used by tests to pin
+/// regressions).
+pub fn check_one(name: &str, seed: u64, mut prop: impl FnMut(&mut Pcg64) -> Result<(), String>) {
+    let mut rng = Pcg64::new(seed, 0x9e37);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assert two slices are elementwise close (absolute + relative blend).
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, ctx: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{ctx}: length {} vs {}", a.len(), b.len()));
+    }
+    let scale = b.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * scale {
+            return Err(format!(
+                "{ctx}: index {i}: {x} vs {y} (scale {scale}, tol {tol})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Distributions;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", 10, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        check("fail-on-3", 10, |rng| {
+            let x = rng.uniform(0.0, 1.0);
+            if x < 0.9 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, "t").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, "t").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, "t").is_err());
+    }
+}

@@ -1,0 +1,76 @@
+//! CSV emission — every figure/table driver writes its series here so the
+//! paper plots can be regenerated from plain files.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (and parent dirs) and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self {
+            out,
+            cols: header.len(),
+        })
+    }
+
+    /// Write a row of string fields (quoted if they contain separators).
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "column count mismatch");
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.out, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: a row of mixed displayable values.
+    pub fn rowv(&mut self, fields: &[&dyn std::fmt::Display]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|f| f.to_string()).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+fn escape(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("lr_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "x,y".into()]).unwrap();
+            w.rowv(&[&2.5, &"plain"]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n2.5,plain\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,50 @@
+//! Small infrastructure substrates: JSON (manifest parsing + result
+//! serialization), CSV emission for every figure/table, summary statistics,
+//! and a timer.
+
+pub mod csv;
+pub mod json;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch returning seconds.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ns(&self) -> u128 {
+        self.0.elapsed().as_nanos()
+    }
+}
+
+/// Format seconds human-readably (`1.23s`, `45.6ms`, `789µs`, `12ns`).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(2.5), "2.500s");
+        assert_eq!(fmt_duration(0.0025), "2.500ms");
+        assert_eq!(fmt_duration(2.5e-6), "2.500µs");
+        assert_eq!(fmt_duration(2.5e-9), "2.5ns");
+    }
+}

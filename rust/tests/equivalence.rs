@@ -1,0 +1,253 @@
+//! Cross-module equivalence properties — the mathematical heart of the
+//! paper, verified end-to-end over the *whole* library (randomized via the
+//! property harness):
+//!
+//! * Theorem 1 / EWT: diagonalized trajectories + transformed readouts ≡
+//!   the standard engine, for dense and sparse `W`, with and without leak.
+//! * EET ≡ EWT: training in the eigenbasis with the generalized Tikhonov
+//!   term produces the SAME predictions as training standard + transform.
+//! * Theorem 5: `R(t)`-recovered features ≡ direct runs for every scaling.
+//! * DPG spectra invariants: conjugate closure, radius bounds, layout.
+
+use linear_reservoir::linalg::Mat;
+use linear_reservoir::readout::{fit, predict_scaled, GramStats, Regularizer};
+use linear_reservoir::reservoir::state_matrix::state_matrix_1d;
+use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+use linear_reservoir::rng::{Distributions, Pcg64};
+use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
+use linear_reservoir::spectral::uniform::uniform_spectrum;
+use linear_reservoir::testing::check;
+
+#[test]
+fn prop_ewt_trajectory_equivalence() {
+    check("EWT trajectory ≡ standard", 8, |rng| {
+        let n = 8 + rng.next_below(20) as usize;
+        let leak = rng.uniform(0.3, 1.0);
+        let sr = rng.uniform(0.3, 1.0);
+        let config = EsnConfig::default()
+            .with_n(n)
+            .with_sr(sr)
+            .with_leak(leak)
+            .with_seed(rng.next_u64());
+        let standard = StandardEsn::generate(config);
+        let diag = match DiagonalEsn::from_standard(&standard) {
+            Ok(d) => d,
+            Err(_) => return Ok(()), // non-diagonalizable draw: skip
+        };
+        let t_len = 30;
+        let u = Mat::randn(t_len, 1, rng);
+        let r = standard.run(&u);
+        let feats = diag.run(&u);
+        let q = diag.q.clone().unwrap();
+        let mapped = r.matmul(&q);
+        let scale = feats.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        let err = mapped.max_abs_diff(&feats) / scale;
+        if err < 1e-7 {
+            Ok(())
+        } else {
+            Err(format!("n={n} leak={leak:.2} sr={sr:.2} err={err:.2e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_eet_equals_ewt_predictions() {
+    check("EET ≡ EWT", 6, |rng| {
+        let n = 10 + rng.next_below(15) as usize;
+        let config = EsnConfig::default()
+            .with_n(n)
+            .with_sr(rng.uniform(0.4, 0.95))
+            .with_seed(rng.next_u64());
+        let standard = StandardEsn::generate(config);
+        let diag = match DiagonalEsn::from_standard(&standard) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let t_len = 120;
+        let u = Mat::randn(t_len, 1, rng);
+        let y = Mat::randn(t_len, 1, rng);
+        let alpha = 10f64.powf(rng.uniform(-8.0, -2.0));
+
+        // EWT: train on standard states, transform weights
+        let x_std = standard.run(&u);
+        let ro_std = fit(&x_std, &y, alpha, false, Regularizer::Identity).unwrap();
+        let w_q = diag.transform_readout(&ro_std.w).unwrap();
+
+        // EET: train directly in the eigenbasis with QᵀQ Tikhonov
+        let x_q = diag.run(&u);
+        let qtq = diag.tikhonov_matrix().unwrap();
+        let ro_eet =
+            fit(&x_q, &y, alpha, false, Regularizer::Generalized(&qtq)).unwrap();
+
+        // both must predict identically
+        let pred_ewt = x_q.matmul(&w_q);
+        let pred_eet = x_q.matmul(&ro_eet.w);
+        let scale = pred_ewt.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        let err = pred_ewt.max_abs_diff(&pred_eet) / scale;
+        if err < 1e-5 {
+            Ok(())
+        } else {
+            Err(format!("n={n} α={alpha:.1e} err={err:.2e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_eet_equals_standard_training() {
+    // the full Theorem 1 (iv) chain: EET predictions == predictions of a
+    // readout trained on the STANDARD states with plain ridge
+    check("EET ≡ standard ridge", 6, |rng| {
+        let n = 10 + rng.next_below(12) as usize;
+        let config = EsnConfig::default()
+            .with_n(n)
+            .with_sr(rng.uniform(0.4, 0.9))
+            .with_seed(rng.next_u64());
+        let standard = StandardEsn::generate(config);
+        let diag = match DiagonalEsn::from_standard(&standard) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let t_len = 100;
+        let u = Mat::randn(t_len, 1, rng);
+        let y = Mat::randn(t_len, 1, rng);
+        let alpha = 1e-5;
+        let x_std = standard.run(&u);
+        let ro_std = fit(&x_std, &y, alpha, false, Regularizer::Identity).unwrap();
+        let pred_std = x_std.matmul(&ro_std.w);
+
+        let x_q = diag.run(&u);
+        let qtq = diag.tikhonov_matrix().unwrap();
+        let ro_eet =
+            fit(&x_q, &y, alpha, false, Regularizer::Generalized(&qtq)).unwrap();
+        let pred_eet = x_q.matmul(&ro_eet.w);
+
+        let scale = pred_std.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        let err = pred_std.max_abs_diff(&pred_eet) / scale;
+        if err < 1e-5 {
+            Ok(())
+        } else {
+            Err(format!("n={n} err={err:.2e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_theorem5_state_matrix_recovery() {
+    check("Theorem 5 recovery", 10, |rng| {
+        let n = 6 + rng.next_below(30) as usize;
+        let config = EsnConfig::default().with_n(n).with_seed(rng.next_u64());
+        let mut gen_rng = Pcg64::new(rng.next_u64(), 90);
+        let spec = uniform_spectrum(n, rng.uniform(0.2, 1.0), &mut gen_rng);
+        let esn = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let t_len = 40;
+        let u: Vec<f64> = rng.normal_vec(t_len);
+        let direct = esn.run(&Mat::from_rows(t_len, 1, &u));
+        let sm = state_matrix_1d(&esn.spec, &u);
+        let rec = sm.features_for(esn.win_re.row(0), esn.win_im.row(0));
+        let scale = direct.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        let err = rec.max_abs_diff(&direct) / scale;
+        if err < 1e-10 {
+            Ok(())
+        } else {
+            Err(format!("n={n} err={err:.2e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_gram_scaling_consistency() {
+    // the grid-search fast path: scaled Gram solve ≡ solve on
+    // explicitly-scaled features, across random scales
+    check("Gram scaling", 10, |rng| {
+        let t_len = 80;
+        let f = 5 + rng.next_below(10) as usize;
+        let x = Mat::randn(t_len, f, rng);
+        let y = Mat::randn(t_len, 1, rng);
+        let s = 10f64.powf(rng.uniform(-2.0, 0.5));
+        let alpha = 10f64.powf(rng.uniform(-8.0, 0.0));
+        let stats = GramStats::new(&x, &y);
+        let fast = stats.solve_scaled(alpha, s).unwrap();
+        let mut xs = x.clone();
+        xs.scale(s);
+        let slow = fit(&xs, &y, alpha, true, Regularizer::Identity).unwrap();
+        let pf = predict_scaled(&fast, &x, s);
+        let ps = slow.predict(&xs);
+        let err = pf.max_abs_diff(&ps);
+        if err < 1e-7 {
+            Ok(())
+        } else {
+            Err(format!("f={f} s={s:.2e} α={alpha:.1e} err={err:.2e}"))
+        }
+    });
+}
+
+#[test]
+fn prop_dpg_spectra_invariants() {
+    check("DPG spectrum invariants", 15, |rng| {
+        let n = 4 + rng.next_below(200) as usize;
+        let sr = rng.uniform(0.1, 1.3);
+        let sigma = if rng.bernoulli(0.5) { 0.0 } else { 0.2 };
+        let spec = if rng.bernoulli(0.5) {
+            uniform_spectrum(n, sr, rng)
+        } else {
+            golden_spectrum(n, GoldenParams { sr, sigma }, rng)
+        };
+        // layout invariants
+        if spec.n != n {
+            return Err(format!("n mismatch {} != {n}", spec.n));
+        }
+        if spec.full().len() != n {
+            return Err("full() length".into());
+        }
+        for (i, z) in spec.lam.iter().enumerate() {
+            if i < spec.n_real && z.im != 0.0 {
+                return Err(format!("real slot {i} has im {}", z.im));
+            }
+            if i >= spec.n_real && z.im <= 0.0 {
+                return Err(format!("cpx slot {i} not upper-half ({z:?})"));
+            }
+        }
+        // conjugate closure of the full spectrum (trace is real)
+        let im_sum: f64 = spec.full().iter().map(|z| z.im).sum();
+        if im_sum.abs() > 1e-9 {
+            return Err(format!("trace imaginary {im_sum}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_leak_commutes_with_diagonalization() {
+    // diagonalize(leaked W) ≡ leak(diagonalized W) — Eq. 4's claim that
+    // the same optimization applies to W^{(lr)}
+    check("leak ∘ diag ≡ diag ∘ leak", 6, |rng| {
+        let n = 8 + rng.next_below(10) as usize;
+        let leak = rng.uniform(0.2, 0.9);
+        let seed = rng.next_u64();
+        let base_cfg = EsnConfig::default().with_n(n).with_sr(0.8).with_seed(seed);
+        // path A: generate with leak folded into W
+        let leaked = StandardEsn::generate(base_cfg.with_leak(leak));
+        // path B: generate without leak, diagonalize, leak the spectrum
+        let plain = StandardEsn::generate(base_cfg.with_leak(1.0));
+        let diag = match DiagonalEsn::from_standard(&plain) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let spec_leaked = diag.spec.apply_leak(leak);
+        // compare spectra as multisets of |λ| (leaked W vs leaked Λ)
+        let mut a: Vec<f64> =
+            linear_reservoir::linalg::eigenvalues(&leaked.w_dense())
+                .iter()
+                .map(|z| z.abs())
+                .collect();
+        let mut b: Vec<f64> = spec_leaked.full().iter().map(|z| z.abs()).collect();
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (x, y) in a.iter().zip(&b) {
+            if (x - y).abs() > 1e-7 {
+                return Err(format!("|λ| mismatch {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
