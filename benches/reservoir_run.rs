@@ -1,21 +1,38 @@
 //! Bench: full-sequence reservoir runs (T×N trajectories) — standard
-//! dense vs sparse vs diagonal engines, the end-to-end form of Table 2's
-//! compute budget. Run: `cargo bench --bench reservoir_run [-- --quick]`
+//! dense vs sparse vs diagonal engines (Table 2's compute budget), plus
+//! the serving-path rows: fused streaming readout vs materialize-then-
+//! matmul, and the batched multi-sequence engine vs the one-sequence-at-
+//! a-time loop (states/sec across the batch).
+//!
+//! Run: `cargo bench --bench reservoir_run [-- --quick] [--json <path>]`
+//! `--json` writes machine-readable results (bench rows + derived
+//! throughputs), e.g. `--json BENCH_reservoir_run.json`.
 
-use linear_reservoir::bench::{bench, BenchConfig};
+use linear_reservoir::bench::{bench, BenchConfig, BenchResult};
 use linear_reservoir::linalg::Mat;
-use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn};
+use linear_reservoir::readout::Readout;
+use linear_reservoir::reservoir::{
+    BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn,
+};
 use linear_reservoir::rng::Pcg64;
 use linear_reservoir::spectral::uniform::uniform_spectrum;
+use linear_reservoir::util::json::Json;
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     let cfg = if quick {
         BenchConfig::quick()
     } else {
         BenchConfig::default()
     };
     let t_len = 1000;
+    let batch_b = 8;
     let sizes: Vec<usize> = if quick {
         vec![100, 400]
     } else {
@@ -23,6 +40,13 @@ fn main() {
     };
     let mut rng = Pcg64::seeded(1);
     let u = Mat::randn(t_len, 1, &mut rng);
+    let u_batch = Mat::randn(t_len, batch_b, &mut rng);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let push = |rows: &mut Vec<Json>, r: &BenchResult| {
+        println!("{}", r.report());
+        rows.push(r.to_json());
+    };
 
     println!("full-sequence runs, T = {t_len}");
     for &n in &sizes {
@@ -32,22 +56,94 @@ fn main() {
         let mut gen_rng = Pcg64::new(2, 110);
         let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
         let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
-
         let qbasis = QBasisEsn::from_diagonal(&diag);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
 
         let r1 = bench(&format!("dense_N{n}"), cfg, || dense.run(&u));
         let r2 = bench(&format!("sparse05_N{n}"), cfg, || sparse.run(&u));
         let r3 = bench(&format!("diagonal_N{n}"), cfg, || diag.run(&u));
         let r4 = bench(&format!("qbasis_N{n}"), cfg, || qbasis.run(&u));
-        println!("{}", r1.report());
-        println!("{}", r2.report());
-        println!("{}", r3.report());
-        println!("{}", r4.report());
+        push(&mut rows, &r1);
+        push(&mut rows, &r2);
+        push(&mut rows, &r3);
+        push(&mut rows, &r4);
         println!(
             "  speedup qbasis vs dense: {:.1}x, vs sparse(5%): {:.1}x, vs split-plane diag: {:.2}x\n",
             r1.per_iter.median / r4.per_iter.median,
             r2.per_iter.median / r4.per_iter.median,
             r3.per_iter.median / r4.per_iter.median
         );
+
+        // --- fused streaming readout vs materialize-then-matmul ---------
+        let r5 = bench(&format!("fused_readout_N{n}"), cfg, || {
+            qbasis.run_readout(&u, &readout)
+        });
+        let r6 = bench(&format!("materialized_readout_N{n}"), cfg, || {
+            readout.predict(&qbasis.run(&u))
+        });
+        push(&mut rows, &r5);
+        push(&mut rows, &r6);
+
+        // --- batched engine vs one-sequence-at-a-time serving loop ------
+        let singles: Vec<Mat> = (0..batch_b)
+            .map(|lane| {
+                let col: Vec<f64> =
+                    (0..t_len).map(|t| u_batch[(t, lane)]).collect();
+                Mat::from_rows(t_len, 1, &col)
+            })
+            .collect();
+        let r7 = bench(&format!("seq_loop_B{batch_b}_N{n}"), cfg, || {
+            for u1 in &singles {
+                std::hint::black_box(qbasis.run_readout(u1, &readout));
+            }
+        });
+        let mut engine = BatchEsn::new(qbasis.clone(), batch_b);
+        let r8 = bench(&format!("batch{batch_b}_N{n}"), cfg, || {
+            engine.reset();
+            engine.run_readout(&u_batch, &readout)
+        });
+        push(&mut rows, &r7);
+        push(&mut rows, &r8);
+
+        let total_states = (batch_b * t_len) as f64;
+        let seq_sps = total_states / r7.per_iter.median;
+        let batch_sps = total_states / r8.per_iter.median;
+        let speedup = r7.per_iter.median / r8.per_iter.median;
+        println!(
+            "  fused vs materialized: {:.2}x | batch{batch_b}: {:.3e} states/s \
+             vs seq-loop {:.3e} states/s → {:.2}x\n",
+            r6.per_iter.median / r5.per_iter.median,
+            batch_sps,
+            seq_sps,
+            speedup
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("derived_batch{batch_b}_N{n}"))),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("batch", Json::Num(batch_b as f64)),
+            ("t", Json::Num(t_len as f64)),
+            ("seq_states_per_sec", Json::Num(seq_sps)),
+            ("batched_states_per_sec", Json::Num(batch_sps)),
+            ("batched_speedup", Json::Num(speedup)),
+            (
+                "fused_vs_materialized_speedup",
+                Json::Num(r6.per_iter.median / r5.per_iter.median),
+            ),
+        ]));
+    }
+
+    if let Some(path) = json_path {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("reservoir_run".into())),
+            ("quick", Json::Bool(quick)),
+            ("t", Json::Num(t_len as f64)),
+            ("results", Json::Arr(rows)),
+        ]);
+        std::fs::write(&path, doc.to_string_pretty())
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
     }
 }

@@ -65,5 +65,16 @@ fn main() -> anyhow::Result<()> {
     for t in 0..5 {
         println!("  ŷ={:+.6}  y={:+.6}", pred[(t, 0)], y_test[(t, 0)]);
     }
+
+    // 7. The serving hot path: the same predictions via the fused
+    //    streaming readout (Appendix-A engine), which folds y = f·W+b
+    //    into each O(N) step — no [T×N] trajectory is ever materialized.
+    let engine = linear_reservoir::reservoir::QBasisEsn::from_diagonal(&esn);
+    let y_stream = engine.run_readout(&u, &readout);
+    let mut max_diff = 0.0f64;
+    for (i, t) in (800..t_total).enumerate() {
+        max_diff = max_diff.max((y_stream[(t, 0)] - pred[(i, 0)]).abs());
+    }
+    println!("fused streaming readout matches batch predictions to {max_diff:.1e}");
     Ok(())
 }

@@ -27,7 +27,9 @@ fn main() -> anyhow::Result<()> {
     let x = slice_rows(&feats, splits.train.clone());
     let y = task.target_mat(splits.train.clone());
     let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity)?;
-    let model = Arc::new(Model { esn, readout });
+    // Model::new derives the fused serving engine; predict requests run
+    // through the server's micro-batching front with zero [T×N] traffic
+    let model = Arc::new(Model::new(esn, readout));
 
     // serve in the background
     let addr = "127.0.0.1:47901";

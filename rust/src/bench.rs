@@ -5,6 +5,7 @@
 //! batches until `min_time` elapses (at least `min_samples` batches),
 //! reporting per-iteration summary statistics.
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::Timer;
 
@@ -53,6 +54,21 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable summary (per-iteration seconds). Raw samples are
+    /// deliberately omitted — the JSON is a perf-trajectory artifact, not
+    /// a trace.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("n", Json::Num(self.per_iter.n as f64)),
+            ("mean_s", Json::Num(self.per_iter.mean)),
+            ("std_s", Json::Num(self.per_iter.std)),
+            ("min_s", Json::Num(self.per_iter.min)),
+            ("median_s", Json::Num(self.per_iter.median)),
+            ("max_s", Json::Num(self.per_iter.max)),
+        ])
+    }
+
     /// Format like `name  mean ± std  (median, n)`.
     pub fn report(&self) -> String {
         use crate::util::fmt_duration as d;
@@ -131,5 +147,22 @@ mod tests {
         let line = r.report();
         assert!(line.contains("fmt"));
         assert!(line.contains("median"));
+    }
+
+    #[test]
+    fn to_json_roundtrips_fields() {
+        let r = bench("json", BenchConfig::quick(), || 2 * 2);
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("json"));
+        assert_eq!(
+            j.get("n").and_then(Json::as_usize),
+            Some(r.per_iter.n)
+        );
+        let parsed =
+            crate::util::json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(
+            parsed.get("median_s").and_then(Json::as_f64),
+            Some(r.per_iter.median)
+        );
     }
 }

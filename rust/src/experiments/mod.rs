@@ -3,6 +3,7 @@
 //! summary; the `repro` binary dispatches to these.
 
 pub mod ablation;
+#[cfg(feature = "xla")]
 pub mod e2e;
 pub mod fig2;
 pub mod fig3;

@@ -18,10 +18,18 @@
 //!
 //! Architecture (see `DESIGN.md`): this crate is Layer 3 of a three-layer
 //! stack. Layers 1–2 (Pallas kernel + JAX graph) are compiled **ahead of
-//! time** to HLO-text artifacts which [`runtime`] loads and executes through
-//! the PJRT CPU client (`xla` crate); Python never runs on the request path.
-//! Native Rust engines in [`reservoir`] mirror the compiled graphs and are
-//! used for cross-validation and for shapes that have no artifact.
+//! time** to HLO-text artifacts which the `runtime` module loads and
+//! executes through the PJRT CPU client (`xla` crate, behind the optional
+//! `xla` feature — the offline default build is fully self-contained);
+//! Python never runs on the request path. Native Rust engines in
+//! [`reservoir`] mirror the compiled graphs and are used for
+//! cross-validation and for shapes that have no artifact.
+//!
+//! The serving path is batched and fused: [`reservoir::BatchEsn`] advances
+//! B independent sequences through one pass over `Λ` per step, and the
+//! `run_readout` family folds `y = f·W_out + b` into the sweep so requests
+//! never materialize a `[T × N]` trajectory ([`server`] builds its
+//! micro-batching front on both).
 //!
 //! The offline build environment provides no general-purpose crates, so the
 //! substrates are all local: [`rng`], [`linalg`] (including a from-scratch
@@ -39,6 +47,7 @@ pub mod num;
 pub mod readout;
 pub mod reservoir;
 pub mod rng;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod server;
 pub mod sparse;

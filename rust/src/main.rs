@@ -19,7 +19,7 @@ use anyhow::Result;
 use linear_reservoir::cli::Args;
 use linear_reservoir::coordinator::{GridSpec, MethodKind};
 use linear_reservoir::experiments::{
-    ablation, e2e, fig2, fig3, fig4, fig5, fig6, fig7, results_dir, table2,
+    ablation, fig2, fig3, fig4, fig5, fig6, fig7, results_dir, table2,
 };
 use linear_reservoir::util::Timer;
 
@@ -189,16 +189,12 @@ fn dispatch(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        "e2e" => {
-            let report = e2e::run(
-                args.get_usize("k", 5)?,
-                args.get_usize("n", 100)?,
-                args.get_u64("seed", 0)?,
-                1e-8,
-            )?;
-            e2e::print_report(&report);
-            Ok(())
-        }
+        "e2e" => run_e2e(
+            args.get_usize("k", 5)?,
+            args.get_usize("n", 100)?,
+            args.get_u64("seed", 0)?,
+            1e-8,
+        ),
         "run" => {
             use linear_reservoir::coordinator::ExperimentSpec;
             let path = args
@@ -237,7 +233,7 @@ fn dispatch(args: &Args) -> Result<()> {
             let y = task.target_mat(splits.train.clone());
             let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity)?;
             println!("serving MSO{k} model (N={n}) on {addr} …");
-            serve(Arc::new(Model { esn, readout }), addr, None)
+            serve(Arc::new(Model::new(esn, readout)), addr, None)
         }
         "all" => {
             let quick = args.flag("quick");
@@ -285,8 +281,8 @@ fn dispatch(args: &Args) -> Result<()> {
             }
             fig7::emit(&all7, &out.join(format!("fig7{sfx}.csv")))?;
             println!("\n== e2e ==");
-            match e2e::run(5, 100, 0, 1e-8) {
-                Ok(r) => e2e::print_report(&r),
+            match run_e2e(5, 100, 0, 1e-8) {
+                Ok(()) => {}
                 Err(e) => println!("e2e skipped: {e:#}"),
             }
             Ok(())
@@ -295,4 +291,21 @@ fn dispatch(args: &Args) -> Result<()> {
             anyhow::bail!("unknown subcommand {other:?}\n{HELP}")
         }
     }
+}
+
+/// The e2e driver needs the PJRT runtime (`xla` feature).
+#[cfg(feature = "xla")]
+fn run_e2e(k: usize, n: usize, seed: u64, alpha: f64) -> Result<()> {
+    use linear_reservoir::experiments::e2e;
+    let report = e2e::run(k, n, seed, alpha)?;
+    e2e::print_report(&report);
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_e2e(_k: usize, _n: usize, _seed: u64, _alpha: f64) -> Result<()> {
+    anyhow::bail!(
+        "the e2e driver runs through the compiled-HLO runtime; \
+         rebuild with `--features xla` (see Cargo.toml)"
+    )
 }

@@ -1,0 +1,559 @@
+//! Batched multi-sequence engine: B independent reservoir states advanced
+//! through ONE pass over Λ per step.
+//!
+//! The diagonal update is memory-bound: each step streams `Λ` and
+//! `[W_in]_Q` past the ALU to touch `N` state words. Serving one sequence
+//! at a time pays that stream once per user; serving B users pays it once
+//! per *step* while the per-lane arithmetic — the inner `for b in 0..B`
+//! loop over a contiguous lane block — autovectorizes across the batch.
+//!
+//! Layout: interleaved Q-layout `[N × B]`, lane-major — buffer position
+//! `j` (Appendix-A feature order: reals first, then `(Re, Im)` pairs)
+//! holds its B lanes contiguously at `state[j·B .. (j+1)·B]`. Per lane the
+//! arithmetic is EXPRESSION-IDENTICAL to [`QBasisEsn::step`]'s fused
+//! `d_in = 1` path, so a batched sweep is bit-identical to B independent
+//! sequential runs — equivalence is exact, not approximate (tested below
+//! and in `rust/tests/equivalence.rs`).
+//!
+//! The fused readout ([`BatchEsn::run_readout`]) folds `y = f·W_out + b`
+//! into the sweep: the request path does `O(N + N·D_out)` work per step
+//! per lane with zero `[T × N]` trajectory materialization. The masked
+//! step ([`BatchEsn::step_masked`] / [`BatchEsn::sweep_streams`]) lets the
+//! server coalesce per-connection streaming states of different lengths
+//! into the same sweep: frozen lanes are skipped, active lanes advance.
+
+use crate::linalg::Mat;
+use crate::readout::Readout;
+
+use super::QBasisEsn;
+
+/// B independent interleaved-layout reservoir states sharing one `(Λ,
+/// [W_in]_Q)` parameter set.
+#[derive(Clone, Debug)]
+pub struct BatchEsn {
+    engine: QBasisEsn,
+    batch: usize,
+    /// Lane-major state: entry `(j, b)` lives at `state[j·batch + b]`.
+    state: Vec<f64>,
+}
+
+impl BatchEsn {
+    /// Build a `batch`-lane engine around (a clone of) `engine`'s
+    /// parameters. All lanes start at the zero state.
+    pub fn new(engine: QBasisEsn, batch: usize) -> Self {
+        assert!(batch >= 1, "batch must be ≥ 1");
+        let n = engine.n();
+        Self {
+            engine,
+            batch,
+            state: vec![0.0; n * batch],
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn n(&self) -> usize {
+        self.engine.n()
+    }
+
+    pub fn engine(&self) -> &QBasisEsn {
+        &self.engine
+    }
+
+    /// Raw lane-major state (layout `[N × B]`, see module docs).
+    pub fn states(&self) -> &[f64] {
+        &self.state
+    }
+
+    /// Zero every lane.
+    pub fn reset(&mut self) {
+        self.state.fill(0.0);
+    }
+
+    /// Zero one lane (new connection adopting a recycled slot).
+    pub fn reset_lane(&mut self, b: usize) {
+        assert!(b < self.batch);
+        let bsz = self.batch;
+        for j in 0..self.engine.n() {
+            self.state[j * bsz + b] = 0.0;
+        }
+    }
+
+    /// Gather lane `b`'s state into `out` (length `N`, Q-basis feature
+    /// layout — the same row [`QBasisEsn::run`] would emit).
+    pub fn lane_state(&self, b: usize, out: &mut [f64]) {
+        assert!(b < self.batch);
+        assert_eq!(out.len(), self.engine.n());
+        let bsz = self.batch;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.state[j * bsz + b];
+        }
+    }
+
+    /// Scatter a sequential state (length `N`, Q-basis layout) into lane
+    /// `b` — adopting an existing per-connection streaming state.
+    pub fn set_lane_state(&mut self, b: usize, s: &[f64]) {
+        assert!(b < self.batch);
+        assert_eq!(s.len(), self.engine.n());
+        let bsz = self.batch;
+        for (j, &v) in s.iter().enumerate() {
+            self.state[j * bsz + b] = v;
+        }
+    }
+
+    /// One step for ALL lanes. `u` is lane-major `[D_in × B]`:
+    /// `u[d·B + b]` is input dimension `d` of lane `b`.
+    #[inline]
+    pub fn step(&mut self, u: &[f64]) {
+        self.step_inner(u, None);
+    }
+
+    /// One step advancing only lanes with `active[b] == true`; frozen
+    /// lanes keep their state bit-for-bit (neither the `Λ` rotation nor
+    /// the input add is applied).
+    #[inline]
+    pub fn step_masked(&mut self, u: &[f64], active: &[bool]) {
+        assert_eq!(active.len(), self.batch);
+        self.step_inner(u, Some(active));
+    }
+
+    fn step_inner(&mut self, u: &[f64], active: Option<&[bool]>) {
+        let bsz = self.batch;
+        let e = &self.engine;
+        let d_in = e.d_in();
+        debug_assert_eq!(u.len(), d_in * bsz);
+        let nr = e.n_real;
+        if d_in == 1 {
+            // fused single-input path — per lane this is exactly
+            // `QBasisEsn::step`'s d_in = 1 expression, so lanes are
+            // bit-identical to sequential runs
+            let row = e.win_q.row(0);
+            // real block
+            for j in 0..nr {
+                let lam = e.lam_real[j];
+                let w = row[j];
+                let s = &mut self.state[j * bsz..(j + 1) * bsz];
+                match active {
+                    None => {
+                        for (sb, &ub) in s.iter_mut().zip(&u[..bsz]) {
+                            *sb = *sb * lam + ub * w;
+                        }
+                    }
+                    Some(mask) => {
+                        for b in 0..bsz {
+                            if mask[b] {
+                                s[b] = s[b] * lam + u[b] * w;
+                            }
+                        }
+                    }
+                }
+            }
+            // complex pairs: buffer columns (nr + 2k, nr + 2k + 1)
+            let n_pairs = e.lam_cpx.len() / 2;
+            for k in 0..n_pairs {
+                let a = e.lam_cpx[2 * k];
+                let bb = e.lam_cpx[2 * k + 1];
+                let w0 = row[nr + 2 * k];
+                let w1 = row[nr + 2 * k + 1];
+                let base = (nr + 2 * k) * bsz;
+                let (res, ims) =
+                    self.state[base..base + 2 * bsz].split_at_mut(bsz);
+                match active {
+                    None => {
+                        for b in 0..bsz {
+                            let (re, im) = (res[b], ims[b]);
+                            let ub = u[b];
+                            res[b] = re * a - im * bb + ub * w0;
+                            ims[b] = re * bb + im * a + ub * w1;
+                        }
+                    }
+                    Some(mask) => {
+                        for b in 0..bsz {
+                            if mask[b] {
+                                let (re, im) = (res[b], ims[b]);
+                                let ub = u[b];
+                                res[b] = re * a - im * bb + ub * w0;
+                                ims[b] = re * bb + im * a + ub * w1;
+                            }
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        // general path: Λ rotation pass, then one accumulation pass per
+        // input dimension (mirrors QBasisEsn::step's general path)
+        for j in 0..nr {
+            let lam = e.lam_real[j];
+            let s = &mut self.state[j * bsz..(j + 1) * bsz];
+            for b in 0..bsz {
+                if active.map_or(true, |m| m[b]) {
+                    s[b] *= lam;
+                }
+            }
+        }
+        let n_pairs = e.lam_cpx.len() / 2;
+        for k in 0..n_pairs {
+            let a = e.lam_cpx[2 * k];
+            let bb = e.lam_cpx[2 * k + 1];
+            let base = (nr + 2 * k) * bsz;
+            let (res, ims) = self.state[base..base + 2 * bsz].split_at_mut(bsz);
+            for b in 0..bsz {
+                if active.map_or(true, |m| m[b]) {
+                    let (re, im) = (res[b], ims[b]);
+                    res[b] = re * a - im * bb;
+                    ims[b] = re * bb + im * a;
+                }
+            }
+        }
+        let n = e.n();
+        for d in 0..d_in {
+            let row = e.win_q.row(d);
+            let ud = &u[d * bsz..(d + 1) * bsz];
+            for (j, &w) in row.iter().enumerate().take(n) {
+                let s = &mut self.state[j * bsz..(j + 1) * bsz];
+                for b in 0..bsz {
+                    if active.map_or(true, |m| m[b]) {
+                        s[b] += ud[b] * w;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Advance all lanes through a `[T × B]` input matrix (one column per
+    /// lane, `D_in = 1`) without recording anything — the raw batched
+    /// sweep, for benchmarking and warm-up.
+    pub fn sweep(&mut self, u: &Mat) {
+        assert_eq!(self.engine.d_in(), 1, "sweep requires D_in = 1");
+        assert_eq!(u.cols(), self.batch);
+        for t in 0..u.rows() {
+            self.step(u.row(t));
+        }
+    }
+
+    /// Run all lanes over a `[T × B]` input (`D_in = 1`) and materialize
+    /// each lane's `[T × N]` trajectory — the equivalence-testing path;
+    /// serving should use [`Self::run_readout`] instead.
+    pub fn run(&mut self, u: &Mat) -> Vec<Mat> {
+        assert_eq!(self.engine.d_in(), 1, "run requires D_in = 1");
+        assert_eq!(u.cols(), self.batch);
+        let t_len = u.rows();
+        let bsz = self.batch;
+        let n = self.engine.n();
+        let mut outs = vec![Mat::zeros(t_len, n); bsz];
+        for t in 0..t_len {
+            self.step(u.row(t));
+            for (b, out) in outs.iter_mut().enumerate() {
+                let row = out.row_mut(t);
+                for (j, r) in row.iter_mut().enumerate() {
+                    *r = self.state[j * bsz + b];
+                }
+            }
+        }
+        outs
+    }
+
+    /// The fused batched serving path: advance all lanes over a `[T × B]`
+    /// input (`D_in = 1`) and fold the readout each step. Returns
+    /// `[T × (B·D_out)]` with lane-major grouping: lane `b`'s output `k`
+    /// at time `t` is `y[(t, b·D_out + k)]`.
+    ///
+    /// Per lane, both the step and the `bias-then-ascending-j`
+    /// accumulation order match [`QBasisEsn::run_readout`] exactly, so
+    /// batched serving is bit-identical to one-at-a-time serving.
+    pub fn run_readout(&mut self, u: &Mat, ro: &Readout) -> Mat {
+        assert_eq!(self.engine.d_in(), 1, "run_readout requires D_in = 1");
+        assert_eq!(u.cols(), self.batch);
+        assert_eq!(ro.w.rows(), self.engine.n());
+        let d_out = ro.w.cols();
+        let t_len = u.rows();
+        let bsz = self.batch;
+        let n = self.engine.n();
+        let mut y = Mat::zeros(t_len, bsz * d_out);
+        for t in 0..t_len {
+            self.step(u.row(t));
+            let yr = y.row_mut(t);
+            for k in 0..d_out {
+                let bias = ro.b[k];
+                for b in 0..bsz {
+                    yr[b * d_out + k] = bias;
+                }
+            }
+            for j in 0..n {
+                let s = &self.state[j * bsz..(j + 1) * bsz];
+                for k in 0..d_out {
+                    let wjk = ro.w[(j, k)];
+                    if d_out == 1 {
+                        // contiguous lane accumulation (the serving case)
+                        for (yb, &sb) in yr.iter_mut().zip(s) {
+                            *yb += sb * wjk;
+                        }
+                    } else {
+                        for b in 0..bsz {
+                            yr[b * d_out + k] += s[b] * wjk;
+                        }
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    /// Coalesced streaming sweep (`D_in = 1`, `D_out = 1`): each request
+    /// pairs a lane with its pending input slice; lengths may differ.
+    /// Lanes advance together — one pass over Λ per time step — and a
+    /// lane freezes (bit-exactly) once its input is exhausted; lanes with
+    /// no request never move. Returns one fused-readout output vector per
+    /// request, identical to stepping that lane alone.
+    ///
+    /// A lane must appear at most once per call (states are stateful;
+    /// callers serialize per-lane requests).
+    pub fn sweep_streams(
+        &mut self,
+        reqs: &[(usize, &[f64])],
+        ro: &Readout,
+    ) -> Vec<Vec<f64>> {
+        assert_eq!(self.engine.d_in(), 1, "sweep_streams requires D_in = 1");
+        assert_eq!(ro.w.cols(), 1, "sweep_streams requires D_out = 1");
+        assert_eq!(ro.w.rows(), self.engine.n());
+        let bsz = self.batch;
+        debug_assert!(
+            {
+                let mut seen = vec![false; bsz];
+                reqs.iter().all(|&(lane, _)| {
+                    let fresh = !seen[lane];
+                    seen[lane] = true;
+                    fresh
+                })
+            },
+            "duplicate lane in one sweep"
+        );
+        let n = self.engine.n();
+        let max_len = reqs.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+        let mut outs: Vec<Vec<f64>> = reqs
+            .iter()
+            .map(|(_, s)| Vec::with_capacity(s.len()))
+            .collect();
+        let mut u = vec![0.0; bsz];
+        let mut active = vec![false; bsz];
+        for t in 0..max_len {
+            for &(lane, input) in reqs {
+                assert!(lane < bsz);
+                active[lane] = t < input.len();
+                u[lane] = if t < input.len() { input[t] } else { 0.0 };
+            }
+            self.step_masked(&u, &active);
+            for (i, &(lane, input)) in reqs.iter().enumerate() {
+                if t < input.len() {
+                    // bias-first then ascending-j: the sequential
+                    // streaming path's exact accumulation order
+                    let mut acc = ro.b[0];
+                    for j in 0..n {
+                        acc += self.state[j * bsz + lane] * ro.w[(j, 0)];
+                    }
+                    outs[i].push(acc);
+                }
+            }
+        }
+        outs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reservoir::{DiagonalEsn, EsnConfig, QBasisEsn};
+    use crate::rng::Pcg64;
+    use crate::spectral::uniform::uniform_spectrum;
+
+    fn qbasis(n: usize, d_in: usize, seed: u64) -> QBasisEsn {
+        let config = EsnConfig::default()
+            .with_n(n)
+            .with_d_in(d_in)
+            .with_seed(seed);
+        let mut rng = Pcg64::new(seed, 150);
+        let spec = uniform_spectrum(n, 0.9, &mut rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+        QBasisEsn::from_diagonal(&diag)
+    }
+
+    fn column(u: &Mat, b: usize) -> Mat {
+        let col: Vec<f64> = (0..u.rows()).map(|t| u[(t, b)]).collect();
+        Mat::from_rows(u.rows(), 1, &col)
+    }
+
+    #[test]
+    fn batched_states_bit_identical_to_independent_runs() {
+        let q = qbasis(30, 1, 1);
+        let mut rng = Pcg64::seeded(2);
+        let b = 5;
+        let u = Mat::randn(40, b, &mut rng);
+        let mut batch = BatchEsn::new(q.clone(), b);
+        let lanes = batch.run(&u);
+        for lane in 0..b {
+            let single = q.run(&column(&u, lane));
+            assert_eq!(
+                lanes[lane].max_abs_diff(&single),
+                0.0,
+                "lane {lane} diverged from its sequential run"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_fused_readout_matches_sequential_serving() {
+        let q = qbasis(24, 1, 3);
+        let mut rng = Pcg64::seeded(4);
+        let b = 4;
+        let u = Mat::randn(30, b, &mut rng);
+        let ro = Readout {
+            w: Mat::randn(24, 2, &mut rng),
+            b: vec![0.4, -0.2],
+        };
+        let mut batch = BatchEsn::new(q.clone(), b);
+        let y = batch.run_readout(&u, &ro);
+        for lane in 0..b {
+            let want = q.run_readout(&column(&u, lane), &ro);
+            for t in 0..30 {
+                for k in 0..2 {
+                    let got = y[(t, lane * 2 + k)];
+                    assert_eq!(
+                        got,
+                        want[(t, k)],
+                        "lane {lane} t={t} k={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_step_freezes_inactive_lanes() {
+        let q = qbasis(16, 1, 5);
+        let mut rng = Pcg64::seeded(6);
+        let b = 3;
+        let mut batch = BatchEsn::new(q, b);
+        // drive all lanes a bit
+        for _ in 0..10 {
+            let u: Vec<f64> = (0..b).map(|_| {
+                use crate::rng::Distributions;
+                rng.normal()
+            }).collect();
+            batch.step(&u);
+        }
+        let mut frozen = vec![0.0; batch.n()];
+        batch.lane_state(1, &mut frozen);
+        // advance lanes 0 and 2 only
+        let active = [true, false, true];
+        for _ in 0..7 {
+            batch.step_masked(&[0.3, 99.0, -0.1], &active);
+        }
+        let mut after = vec![0.0; batch.n()];
+        batch.lane_state(1, &mut after);
+        assert_eq!(frozen, after, "masked lane must not move");
+        // and an active lane did move
+        let mut moved = vec![0.0; batch.n()];
+        batch.lane_state(0, &mut moved);
+        assert!(moved.iter().zip(&frozen).any(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn sweep_streams_matches_per_lane_streaming() {
+        let q = qbasis(20, 1, 7);
+        let mut rng = Pcg64::seeded(8);
+        let ro = Readout {
+            w: Mat::randn(20, 1, &mut rng),
+            b: vec![0.25],
+        };
+        let b = 4;
+        let mut batch = BatchEsn::new(q.clone(), b);
+        // uneven request lengths on lanes 0, 2, 3 (lane 1 idle)
+        let in0: Vec<f64> = (0..9).map(|t| (t as f64 * 0.3).sin()).collect();
+        let in2: Vec<f64> = (0..4).map(|t| (t as f64 * 0.7).cos()).collect();
+        let in3: Vec<f64> = (0..13).map(|t| 0.1 * t as f64).collect();
+        let outs = batch.sweep_streams(
+            &[(0, &in0), (2, &in2), (3, &in3)],
+            &ro,
+        );
+        // reference: each lane streamed alone through the fused engine
+        for (input, out) in [(&in0, &outs[0]), (&in2, &outs[1]), (&in3, &outs[2])] {
+            let u = Mat::from_rows(input.len(), 1, input);
+            let want = q.run_readout(&u, &ro);
+            assert_eq!(out.len(), input.len());
+            for (t, got) in out.iter().enumerate() {
+                assert_eq!(*got, want[(t, 0)], "t={t}");
+            }
+        }
+        // lane 1 never moved
+        let mut idle = vec![1.0; batch.n()];
+        batch.lane_state(1, &mut idle);
+        assert!(idle.iter().all(|v| *v == 0.0));
+        // a SECOND round continues lane 2 from its persistent state
+        let in2b: Vec<f64> = (0..6).map(|t| (t as f64 * 0.7 + 2.8).cos()).collect();
+        let outs2 = batch.sweep_streams(&[(2, &in2b)], &ro);
+        let full: Vec<f64> = in2.iter().chain(&in2b).copied().collect();
+        let want = q.run_readout(&Mat::from_rows(full.len(), 1, &full), &ro);
+        for (t, got) in outs2[0].iter().enumerate() {
+            assert_eq!(*got, want[(in2.len() + t, 0)]);
+        }
+    }
+
+    #[test]
+    fn multi_input_general_path_close_to_sequential() {
+        // d_in > 1 uses the two-pass general path; QBasisEsn skips
+        // exact-zero inputs there, so equivalence is to rounding (and in
+        // practice exact when no input is 0.0)
+        let q = qbasis(18, 3, 9);
+        let mut rng = Pcg64::seeded(10);
+        let b = 3;
+        let t_len = 20;
+        // lane-major inputs [T][d_in × B]
+        let per_lane: Vec<Mat> =
+            (0..b).map(|_| Mat::randn(t_len, 3, &mut rng)).collect();
+        let mut batch = BatchEsn::new(q.clone(), b);
+        let mut lane_out = vec![Mat::zeros(t_len, 18); b];
+        let mut u = vec![0.0; 3 * b];
+        for t in 0..t_len {
+            for (lane, ul) in per_lane.iter().enumerate() {
+                for d in 0..3 {
+                    u[d * b + lane] = ul[(t, d)];
+                }
+            }
+            batch.step(&u);
+            for (lane, out) in lane_out.iter_mut().enumerate() {
+                batch.lane_state(lane, out.row_mut(t));
+            }
+        }
+        for lane in 0..b {
+            let want = q.run(&per_lane[lane]);
+            let err = lane_out[lane].max_abs_diff(&want);
+            assert!(err < 1e-12, "lane {lane} err={err}");
+        }
+    }
+
+    #[test]
+    fn reset_and_lane_state_roundtrip() {
+        let q = qbasis(12, 1, 11);
+        let mut batch = BatchEsn::new(q, 3);
+        batch.step(&[1.0, 2.0, 3.0]);
+        let mut s = vec![0.0; batch.n()];
+        batch.lane_state(2, &mut s);
+        assert!(s.iter().any(|v| *v != 0.0));
+        batch.reset_lane(2);
+        let mut z = vec![1.0; batch.n()];
+        batch.lane_state(2, &mut z);
+        assert!(z.iter().all(|v| *v == 0.0));
+        // other lanes untouched
+        let mut s0 = vec![0.0; batch.n()];
+        batch.lane_state(0, &mut s0);
+        assert!(s0.iter().any(|v| *v != 0.0));
+        // scatter/gather roundtrip
+        batch.set_lane_state(2, &s);
+        let mut back = vec![0.0; batch.n()];
+        batch.lane_state(2, &mut back);
+        assert_eq!(back, s);
+    }
+}

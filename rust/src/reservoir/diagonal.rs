@@ -14,6 +14,7 @@ use anyhow::{Context, Result};
 
 use crate::linalg::{eig, CLu, Lu, Mat};
 use crate::num::c64;
+use crate::readout::Readout;
 use crate::rng::Pcg64;
 use crate::spectral::eigvecs::{random_eigvecs, SlotBasis};
 use crate::spectral::{spectrum_from_eigenvalues, Spectrum};
@@ -243,6 +244,60 @@ impl DiagonalEsn {
             self.write_features(&s_re, &s_im, feats.row_mut(t));
         }
         feats
+    }
+
+    /// Fused streaming readout: run and fold `y = f·W_out + b` each step —
+    /// `O(N + N·D_out)` per step, no `[T × N]` trajectory materialized.
+    /// Matches `readout.predict(self.run(u))` to rounding.
+    pub fn run_readout(&self, u: &Mat, ro: &Readout) -> Mat {
+        assert_eq!(u.cols(), self.d_in);
+        self.run_readout_inner(u, None, ro)
+    }
+
+    /// Fused streaming readout over the Eq.-1 FEEDBACK path (teacher
+    /// forcing, `y(−1) = 0`): the readout accumulates directly from the
+    /// slot planes each step, so the generative/feedback serving loop
+    /// never materializes features either.
+    pub fn run_readout_teacher_forced(
+        &self,
+        u: &Mat,
+        y_teacher: &Mat,
+        ro: &Readout,
+    ) -> Mat {
+        assert_eq!(u.rows(), y_teacher.rows());
+        self.run_readout_inner(u, Some(y_teacher), ro)
+    }
+
+    fn run_readout_inner(&self, u: &Mat, y_teacher: Option<&Mat>, ro: &Readout) -> Mat {
+        assert_eq!(ro.w.rows(), self.n());
+        let d_out = ro.w.cols();
+        let t_len = u.rows();
+        let slots = self.spec.slots();
+        let mut s_re = vec![0.0; slots];
+        let mut s_im = vec![0.0; slots];
+        let mut feat = vec![0.0; self.n()];
+        let mut y = Mat::zeros(t_len, d_out);
+        let zero = vec![0.0; y_teacher.map_or(0, Mat::cols)];
+        for t in 0..t_len {
+            match y_teacher {
+                None => self.step(&mut s_re, &mut s_im, u.row(t)),
+                Some(teacher) => {
+                    let y_prev: &[f64] =
+                        if t == 0 { &zero } else { teacher.row(t - 1) };
+                    self.step_fb(&mut s_re, &mut s_im, u.row(t), y_prev);
+                }
+            }
+            self.write_features(&s_re, &s_im, &mut feat);
+            let yr = y.row_mut(t);
+            for k in 0..d_out {
+                let mut acc = ro.b[k];
+                for (j, &f) in feat.iter().enumerate() {
+                    acc += f * ro.w[(j, k)];
+                }
+                yr[k] = acc;
+            }
+        }
+        y
     }
 
     /// Q-basis gather: `[re(real slots) | (re,im) interleaved]`.

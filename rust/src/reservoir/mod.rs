@@ -6,6 +6,10 @@
 //!   transformed input weights, `O(N)` per step, producing real Q-basis
 //!   features (Appendix A layout). Constructed either by diagonalizing a
 //!   standard ESN (EWT/EET paths, Theorem 1) or directly from DPG parts.
+//! * [`BatchEsn`] — the batched multi-sequence engine: B independent
+//!   states in a lane-major `[N × B]` interleaved layout, advanced through
+//!   one pass over `Λ` per step with a fused streaming readout — the
+//!   serving hot path (one λ-sweep amortized across B users).
 //! * [`state_matrix`] — Theorem 5: input-weight-independent state matrix
 //!   `R(t)`, used to share state computations across the input-scaling
 //!   sweep of the grid search and for Appendix C's γ-reparametrization.
@@ -14,6 +18,7 @@
 //! `[T × N]` state/feature matrix whose row `t` is the state after
 //! consuming input row `t` (`r(t+1)` in the paper's 1-based indexing).
 
+mod batch;
 mod config;
 mod diagonal;
 pub mod parallel;
@@ -21,6 +26,7 @@ mod qbasis;
 mod standard;
 pub mod state_matrix;
 
+pub use batch::BatchEsn;
 pub use config::EsnConfig;
 pub use diagonal::DiagonalEsn;
 pub use qbasis::QBasisEsn;

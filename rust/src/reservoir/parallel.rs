@@ -10,10 +10,14 @@
 //!    chunk), then fix up each chunk's states with its prefix map
 //!    (parallel again).
 //!
-//! On this 1-vCPU container the wall-clock win is nil — the value is the
-//! verified ALGORITHM (work O(T·N), depth O(T/C + #chunks)), mirroring the
-//! Pallas `assoc_scan` kernel so both sides of the stack implement
-//! Appendix B.
+//! [`run_parallel_batch`] is the batched form: phase 1 of EVERY sequence
+//! is flattened into one `sequences × chunks` job list, so the worker
+//! pool stays full even when a single sequence has fewer chunks than the
+//! pool has threads — the time-scan analogue of `BatchEsn`'s lane
+//! batching. On this 1-vCPU container the wall-clock win is nil — the
+//! value is the verified ALGORITHM (work O(T·N), depth O(T/C + #chunks)),
+//! mirroring the Pallas `assoc_scan` kernel so both sides of the stack
+//! implement Appendix B.
 
 use crate::coordinator::WorkerPool;
 use crate::linalg::Mat;
@@ -56,66 +60,118 @@ impl AffineChunk {
     }
 }
 
+/// Phase-1 output for one chunk: its local (from-zero) states and total
+/// affine map.
+struct ChunkOut {
+    s_re: Mat,
+    s_im: Mat,
+    total: AffineChunk,
+}
+
 /// Time-parallel run of a diagonal reservoir: identical output to
 /// [`DiagonalEsn::run`] (up to f64 rounding), computed as a chunked prefix
 /// scan over `pool`.
 pub fn run_parallel(esn: &DiagonalEsn, u: &Mat, pool: &WorkerPool, chunk: usize) -> Mat {
-    let t_len = u.rows();
+    run_parallel_batch(esn, std::slice::from_ref(u), pool, chunk)
+        .pop()
+        .expect("one input, one output")
+}
+
+/// Batched time-parallel runs over independent sequences (all `[Tᵢ ×
+/// D_in]`). Phase 1 fans `Σᵢ ⌈Tᵢ/chunk⌉` chunk scans across the pool in
+/// ONE `map` call; phases 2–3 (summary scan + fix-up) run per sequence.
+/// Output `i` is identical to `run_parallel(esn, &inputs[i], …)`.
+pub fn run_parallel_batch(
+    esn: &DiagonalEsn,
+    inputs: &[Mat],
+    pool: &WorkerPool,
+    chunk: usize,
+) -> Vec<Mat> {
     let slots = esn.spec.slots();
     let chunk = chunk.max(1);
-    let n_chunks = t_len.div_ceil(chunk);
 
-    // phase 1: independent chunk scans (parallel) —
-    // states-from-zero + the chunk's total affine map
-    struct ChunkOut {
-        s_re: Mat,
-        s_im: Mat,
-        total: AffineChunk,
+    // flattened job list: (sequence, chunk-within-sequence)
+    let mut jobs: Vec<(usize, usize)> = Vec::new();
+    for (si, u) in inputs.iter().enumerate() {
+        for ci in 0..u.rows().div_ceil(chunk) {
+            jobs.push((si, ci));
+        }
     }
+
+    // phase 1: independent chunk scans (parallel across sequences AND
+    // chunks) — states-from-zero + the chunk's total affine map
     let spec = esn.spec.clone();
     let win_re = esn.win_re.clone();
     let win_im = esn.win_im.clone();
-    let u_owned = u.clone();
-    let chunks: Vec<ChunkOut> = pool.map(
-        (0..n_chunks).collect(),
-        move |ci| {
-            let lo = ci * chunk;
-            let hi = ((ci + 1) * chunk).min(t_len);
-            let len = hi - lo;
-            let mut s_re = Mat::zeros(len, slots);
-            let mut s_im = Mat::zeros(len, slots);
-            let mut cur_re = vec![0.0; slots];
-            let mut cur_im = vec![0.0; slots];
-            // total map: a = λ^len (per slot), b = chunk-scan from zero
-            for (row, t) in (lo..hi).enumerate() {
-                step_planes(&spec, &win_re, &win_im, &mut cur_re, &mut cur_im, u_owned.row(t));
-                s_re.row_mut(row).copy_from_slice(&cur_re);
-                s_im.row_mut(row).copy_from_slice(&cur_im);
-            }
-            let mut total = AffineChunk::identity(slots);
+    let u_all: Vec<Mat> = inputs.to_vec();
+    let chunks: Vec<ChunkOut> = pool.map(jobs, move |(si, ci)| {
+        let u = &u_all[si];
+        let t_len = u.rows();
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(t_len);
+        let len = hi - lo;
+        let mut s_re = Mat::zeros(len, slots);
+        let mut s_im = Mat::zeros(len, slots);
+        let mut cur_re = vec![0.0; slots];
+        let mut cur_im = vec![0.0; slots];
+        // total map: a = λ^len (per slot, accumulated INCREMENTALLY
+        // alongside the scan — `powi(len as u32)` both truncates 64-bit
+        // chunk lengths and drifts at |λ| ≈ 1; the running product is the
+        // same recurrence the phase-3 fix-up uses), b = chunk scan from 0
+        let mut a_re = vec![1.0; slots];
+        let mut a_im = vec![0.0; slots];
+        for (row, t) in (lo..hi).enumerate() {
+            step_planes(&spec, &win_re, &win_im, &mut cur_re, &mut cur_im, u.row(t));
             for j in 0..slots {
-                let lam = spec.lam[j].powi(len as u32);
-                total.a_re[j] = lam.re;
-                total.a_im[j] = lam.im;
-                total.b_re[j] = cur_re[j];
-                total.b_im[j] = cur_im[j];
+                let l = spec.lam[j];
+                let (re, im) = (a_re[j], a_im[j]);
+                a_re[j] = re * l.re - im * l.im;
+                a_im[j] = re * l.im + im * l.re;
             }
-            ChunkOut { s_re, s_im, total }
-        },
-    );
+            s_re.row_mut(row).copy_from_slice(&cur_re);
+            s_im.row_mut(row).copy_from_slice(&cur_im);
+        }
+        let mut total = AffineChunk::identity(slots);
+        total.a_re.copy_from_slice(&a_re);
+        total.a_im.copy_from_slice(&a_im);
+        total.b_re.copy_from_slice(&cur_re);
+        total.b_im.copy_from_slice(&cur_im);
+        ChunkOut { s_re, s_im, total }
+    });
+
+    // regroup phase-1 results per sequence (jobs were pushed in
+    // (sequence, chunk) order and `map` preserves input order)
+    let mut outs = Vec::with_capacity(inputs.len());
+    let mut cursor = 0;
+    for u in inputs {
+        let n_chunks = u.rows().div_ceil(chunk);
+        let seq_chunks = &chunks[cursor..cursor + n_chunks];
+        cursor += n_chunks;
+        outs.push(fixup_sequence(esn, u.rows(), seq_chunks, chunk));
+    }
+    outs
+}
+
+/// Phases 2–3 for one sequence: exclusive-scan the chunk summaries, then
+/// apply each chunk's prefix map to its local states.
+fn fixup_sequence(
+    esn: &DiagonalEsn,
+    t_len: usize,
+    chunks: &[ChunkOut],
+    chunk: usize,
+) -> Mat {
+    let slots = esn.spec.slots();
 
     // phase 2: exclusive scan of chunk summaries (sequential, cheap)
-    let mut prefixes = Vec::with_capacity(n_chunks);
+    let mut prefixes = Vec::with_capacity(chunks.len());
     let mut acc = AffineChunk::identity(slots);
-    for c in &chunks {
+    for c in chunks {
         prefixes.push(acc.clone());
         acc = c.total.compose_after(&acc);
     }
 
-    // phase 3: fix-up — apply each chunk's prefix map to its local states:
-    // s_global(t) = a_prefix ⊙ s_local(t) … wait, the prefix contributes
-    // `λ^(t−lo+1) ⊙ b_prefix` — the *state entering the chunk* is
-    // b_prefix, so s_global = s_local + λ^(row+1) ⊙ b_prefix.
+    // phase 3: fix-up — the *state entering the chunk* is b_prefix, so
+    // s_global(t) = s_local(t) + λ^(row+1) ⊙ b_prefix.
     let mut out = Mat::zeros(t_len, esn.n());
     for (ci, c) in chunks.iter().enumerate() {
         let pre = &prefixes[ci];
@@ -215,7 +271,9 @@ mod tests {
 
     #[test]
     fn near_unit_modulus_stability() {
-        // |λ| ≈ 1 is the worst case for λ^len powers in the summaries
+        // |λ| ≈ 1 is the worst case for the chunk-total maps; the
+        // incremental product must track λ^len without drift even for a
+        // single whole-sequence chunk
         let esn = setup(12, 3);
         let esn = DiagonalEsn::from_parts(
             esn.spec.scaled(1.0 / esn.spec.radius()),
@@ -227,8 +285,46 @@ mod tests {
         let u = Mat::randn(256, 1, &mut rng);
         let pool = WorkerPool::new(2);
         let seq = esn.run(&u);
-        let par = run_parallel(&esn, &u, &pool, 32);
         let scale = seq.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
-        assert!(par.max_abs_diff(&seq) / scale < 1e-10);
+        for chunk in [32, 256] {
+            let par = run_parallel(&esn, &u, &pool, chunk);
+            assert!(par.max_abs_diff(&seq) / scale < 1e-10, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn batched_scan_matches_per_sequence_runs() {
+        let esn = setup(16, 5);
+        let mut rng = Pcg64::seeded(6);
+        // uneven lengths: chunks-per-sequence varies, exercising regrouping
+        let inputs: Vec<Mat> = [37usize, 64, 5, 103]
+            .iter()
+            .map(|&t| Mat::randn(t, 1, &mut rng))
+            .collect();
+        let pool = WorkerPool::new(3);
+        let batched = run_parallel_batch(&esn, &inputs, &pool, 16);
+        assert_eq!(batched.len(), inputs.len());
+        for (u, par) in inputs.iter().zip(&batched) {
+            let seq = esn.run(u);
+            let err = par.max_abs_diff(&seq);
+            assert!(err < 1e-9, "T={} err={err}", u.rows());
+        }
+    }
+
+    #[test]
+    fn batched_scan_empty_and_tiny_sequences() {
+        let esn = setup(8, 7);
+        let mut rng = Pcg64::seeded(8);
+        let inputs = vec![
+            Mat::zeros(0, 1),
+            Mat::randn(1, 1, &mut rng),
+            Mat::randn(2, 1, &mut rng),
+        ];
+        let pool = WorkerPool::new(2);
+        let batched = run_parallel_batch(&esn, &inputs, &pool, 4);
+        assert_eq!(batched[0].rows(), 0);
+        for (u, par) in inputs.iter().zip(&batched) {
+            assert!(par.max_abs_diff(&esn.run(u)) < 1e-12);
+        }
     }
 }

@@ -17,20 +17,22 @@
 //! one interleaved stream instead of two planes plus a feature gather.
 
 use crate::linalg::Mat;
+use crate::readout::Readout;
 use crate::spectral::Spectrum;
 
 /// Interleaved-layout diagonal reservoir (Appendix A).
 #[derive(Clone, Debug)]
 pub struct QBasisEsn {
     /// Number of real-eigenvalue components (prefix of the buffer).
-    n_real: usize,
+    /// (`pub(crate)`: shared with the batched engine in [`super::BatchEsn`].)
+    pub(crate) n_real: usize,
     /// Real eigenvalues (length `n_real`).
-    lam_real: Vec<f64>,
+    pub(crate) lam_real: Vec<f64>,
     /// Complex eigenvalues as interleaved `(re, im)` pairs (length `n−n_real`).
-    lam_cpx: Vec<f64>,
+    pub(crate) lam_cpx: Vec<f64>,
     /// `[W_in]_Q` rows in buffer layout: `d_in × n` (real block then
     /// interleaved pairs) — accumulated in the real domain, as in the paper.
-    win_q: Mat,
+    pub(crate) win_q: Mat,
     n: usize,
     d_in: usize,
 }
@@ -81,6 +83,10 @@ impl QBasisEsn {
 
     pub fn n(&self) -> usize {
         self.n
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
     }
 
     /// One in-place step on the interleaved buffer (Appendix A's
@@ -184,10 +190,14 @@ impl QBasisEsn {
 
     /// Run and fold the readout on the fly (serving hot path — never
     /// materializes the trajectory): returns `[T × D_out]` predictions for
-    /// `y = feat·w + b`.
-    pub fn run_readout(&self, u: &Mat, w: &Mat, b: &[f64]) -> Mat {
-        assert_eq!(w.rows(), self.n);
-        let d_out = w.cols();
+    /// `y = feat·W_out + b`, `O(N + N·D_out)` work per step.
+    ///
+    /// Accumulation order (bias first, then ascending `j`) is the contract
+    /// shared with [`super::BatchEsn::run_readout`] and the server's
+    /// streaming path, so all three produce bit-identical outputs.
+    pub fn run_readout(&self, u: &Mat, ro: &Readout) -> Mat {
+        assert_eq!(ro.w.rows(), self.n);
+        let d_out = ro.w.cols();
         let t_len = u.rows();
         let mut state = vec![0.0; self.n];
         let mut y = Mat::zeros(t_len, d_out);
@@ -195,9 +205,9 @@ impl QBasisEsn {
             self.step(&mut state, u.row(t));
             let yr = y.row_mut(t);
             for k in 0..d_out {
-                let mut acc = b[k];
-                for j in 0..self.n {
-                    acc += state[j] * w[(j, k)];
+                let mut acc = ro.b[k];
+                for (j, &s) in state.iter().enumerate() {
+                    acc += s * ro.w[(j, k)];
                 }
                 yr[k] = acc;
             }
@@ -244,14 +254,16 @@ mod tests {
         let (_, q) = setup(20, 1, 3);
         let mut rng = Pcg64::seeded(4);
         let u = Mat::randn(25, 1, &mut rng);
-        let w = Mat::randn(20, 2, &mut rng);
-        let b = vec![0.3, -0.1];
-        let fused = q.run_readout(&u, &w, &b);
+        let ro = Readout {
+            w: Mat::randn(20, 2, &mut rng),
+            b: vec![0.3, -0.1],
+        };
+        let fused = q.run_readout(&u, &ro);
         let feats = q.run(&u);
-        let mut want = feats.matmul(&w);
+        let mut want = feats.matmul(&ro.w);
         for t in 0..25 {
             for k in 0..2 {
-                want[(t, k)] += b[k];
+                want[(t, k)] += ro.b[k];
             }
         }
         assert!(fused.max_abs_diff(&want) < 1e-12);

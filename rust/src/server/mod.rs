@@ -13,79 +13,428 @@
 //! ← {"ok": true, "output": […], "steps_per_sec": …}
 //! ```
 //!
-//! Each connection gets its own streaming state (slot planes); `predict`
-//! requests are stateless. The engine is the O(N) diagonal step — the same
-//! arithmetic as the compiled Pallas kernel, cross-validated against it in
-//! the integration tests.
+//! ## Micro-batching front
+//!
+//! Connection handlers do NOT run the engine. They enqueue jobs on a
+//! [`BatchFront`] and a single sweeper thread drains the queue:
+//! concurrent `predict` requests coalesce into one stateless
+//! [`BatchEsn`] sweep (one pass over `Λ`/`[W_in]_Q` amortized across the
+//! batch), and per-connection `stream` states live as lanes of one
+//! persistent [`BatchEsn`] hub whose pending requests advance together in
+//! a masked sweep. The per-lane arithmetic is bit-identical to the
+//! sequential engine, so batching is invisible to clients — responses are
+//! bit-for-bit what a one-request-at-a-time server would produce (tested
+//! here and in `rust/tests/pipeline.rs`).
+//!
+//! Every path is fused (state → readout each step): the request path does
+//! `O(N + N·D_out)` work per step and never materializes a `[T × N]`
+//! trajectory. Connections beyond the hub's lane capacity fall back to a
+//! local per-connection state with the same arithmetic.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use crate::linalg::Mat;
 use crate::readout::Readout;
-use crate::reservoir::DiagonalEsn;
+use crate::reservoir::{BatchEsn, DiagonalEsn, QBasisEsn};
 use crate::util::json::{parse, Json};
 use crate::util::Timer;
 
-/// A servable model: reservoir + trained readout.
+/// Max predict requests folded into one stateless sweep.
+const MAX_PREDICT_BATCH: usize = 32;
+/// Streaming-state lanes in the persistent hub (connections beyond this
+/// fall back to local per-connection state).
+const STREAM_LANES: usize = 64;
+
+/// A servable model: reservoir + trained readout + the interleaved-layout
+/// serving twin ([`QBasisEsn`]) that the fused request path runs on.
 pub struct Model {
     pub esn: DiagonalEsn,
+    pub qesn: QBasisEsn,
     pub readout: Readout,
 }
 
 impl Model {
-    /// Stateless sequence prediction: run → features → readout.
+    /// Build the serving bundle (derives the Appendix-A engine from `esn`).
+    pub fn new(esn: DiagonalEsn, readout: Readout) -> Self {
+        let qesn = QBasisEsn::from_diagonal(&esn);
+        Self { esn, qesn, readout }
+    }
+
+    /// Stateless sequence prediction through the fused streaming readout
+    /// — `O(N + N·D_out)` per step, no `[T × N]` materialization.
     pub fn predict(&self, input: &[f64]) -> Vec<f64> {
         let u = Mat::from_rows(input.len(), 1, input);
-        let feats = self.esn.run(&u);
-        let y = self.readout.predict(&feats);
+        let y = self.qesn.run_readout(&u, &self.readout);
         (0..y.rows()).map(|t| y[(t, 0)]).collect()
     }
 }
 
-/// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks; one thread per
-/// connection. `max_requests` bounds the total requests served (tests /
-/// examples); `None` runs forever.
+// ---------------------------------------------------------------------------
+// micro-batching front
+// ---------------------------------------------------------------------------
+
+enum FrontJob {
+    Predict {
+        input: Vec<f64>,
+        reply: mpsc::Sender<Vec<f64>>,
+    },
+    Stream {
+        lane: usize,
+        input: Vec<f64>,
+        reply: mpsc::Sender<Vec<f64>>,
+    },
+    /// Zero a hub lane. `reply` is `Some` for a client-visible `reset`
+    /// (synchronous), `None` when recycling a released lane.
+    Reset {
+        lane: usize,
+        reply: Option<mpsc::Sender<()>>,
+    },
+}
+
+struct FrontState {
+    jobs: Vec<FrontJob>,
+    shutdown: bool,
+}
+
+/// Shared queue between connection handlers and the sweeper thread.
+pub struct BatchFront {
+    model: Arc<Model>,
+    state: Mutex<FrontState>,
+    cv: Condvar,
+    free_lanes: Mutex<Vec<usize>>,
+    sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl BatchFront {
+    /// Spawn the sweeper and return the shared front.
+    pub fn start(model: Arc<Model>) -> Arc<Self> {
+        let front = Arc::new(Self {
+            model,
+            state: Mutex::new(FrontState {
+                jobs: Vec::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            // lane 0 handed out first
+            free_lanes: Mutex::new((0..STREAM_LANES).rev().collect()),
+            sweeper: Mutex::new(None),
+        });
+        let worker = Arc::clone(&front);
+        let handle = std::thread::Builder::new()
+            .name("lr-batch-sweeper".into())
+            .spawn(move || {
+                // a panic inside a sweep (engine assert) must not freeze
+                // the server: mark the front dead and drop stranded jobs
+                // so blocked reply receivers unblock into their fallbacks
+                let res = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| worker.sweeper_loop()),
+                );
+                let mut st = worker.state.lock().unwrap();
+                st.shutdown = true;
+                st.jobs.clear();
+                drop(st);
+                if res.is_err() {
+                    eprintln!("lr-batch-sweeper died; serving falls back to direct compute");
+                }
+            })
+            .expect("spawn sweeper");
+        *front.sweeper.lock().unwrap() = Some(handle);
+        front
+    }
+
+    /// Stop the sweeper once the queue drains (idempotent).
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+        if let Some(h) = self.sweeper.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Enqueue a job. Returns `false` (job dropped) when the sweeper is
+    /// gone — callers use their fallback path instead of blocking.
+    fn submit(&self, job: FrontJob) -> bool {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.shutdown {
+                return false;
+            }
+            st.jobs.push(job);
+        }
+        self.cv.notify_all();
+        true
+    }
+
+    fn acquire_lane(&self) -> Option<usize> {
+        self.free_lanes.lock().unwrap().pop()
+    }
+
+    /// Queue a zeroing of the lane, THEN return it to the free list — the
+    /// queue is processed in submission order, so the next owner's first
+    /// request always sees a fresh state.
+    fn release_lane(&self, lane: usize) {
+        self.submit(FrontJob::Reset { lane, reply: None });
+        self.free_lanes.lock().unwrap().push(lane);
+    }
+
+    /// Stateless prediction through the batch queue. Falls back to a
+    /// direct (bit-identical) computation if the sweeper is gone.
+    pub fn predict(&self, input: Vec<f64>) -> Vec<f64> {
+        let (tx, rx) = mpsc::channel();
+        let queued = self.submit(FrontJob::Predict {
+            input: input.clone(),
+            reply: tx,
+        });
+        if queued {
+            // a dying sweeper drops stranded jobs, so this cannot hang
+            if let Ok(out) = rx.recv() {
+                return out;
+            }
+        }
+        self.model.predict(&input)
+    }
+
+    /// Streaming step(s) on a hub lane (no fallback: the state lives in
+    /// the hub, so a dead sweeper is a hard error).
+    pub fn stream(&self, lane: usize, input: Vec<f64>) -> Result<Vec<f64>> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit(FrontJob::Stream {
+            lane,
+            input,
+            reply: tx,
+        }) {
+            anyhow::bail!("batch front unavailable");
+        }
+        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
+    }
+
+    /// Synchronous client-visible lane reset.
+    pub fn reset(&self, lane: usize) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit(FrontJob::Reset {
+            lane,
+            reply: Some(tx),
+        }) {
+            anyhow::bail!("batch front unavailable");
+        }
+        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
+    }
+
+    fn sweeper_loop(&self) {
+        // persistent streaming hub: one lane per connection
+        let mut hub = BatchEsn::new(self.model.qesn.clone(), STREAM_LANES);
+        loop {
+            let drained = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if !st.jobs.is_empty() {
+                        break std::mem::take(&mut st.jobs);
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            };
+            self.process(&mut hub, drained);
+        }
+    }
+
+    /// Drain one batch of jobs: predicts coalesce into stateless sweeps;
+    /// stream/reset jobs are grouped into rounds that preserve per-lane
+    /// submission order (lanes are independent, so cross-lane reordering
+    /// is unobservable).
+    fn process(&self, hub: &mut BatchEsn, drained: Vec<FrontJob>) {
+        let mut predicts: Vec<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
+        let mut round: Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
+        let mut in_round = [false; STREAM_LANES];
+
+        let flush_round =
+            |round: &mut Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)>,
+             in_round: &mut [bool; STREAM_LANES],
+             hub: &mut BatchEsn| {
+                if round.is_empty() {
+                    return;
+                }
+                let reqs: Vec<(usize, &[f64])> = round
+                    .iter()
+                    .map(|(lane, input, _)| (*lane, input.as_slice()))
+                    .collect();
+                let outs = hub.sweep_streams(&reqs, &self.model.readout);
+                for ((_, _, reply), out) in round.drain(..).zip(outs) {
+                    let _ = reply.send(out);
+                }
+                in_round.fill(false);
+            };
+
+        for job in drained {
+            match job {
+                FrontJob::Predict { input, reply } => predicts.push((input, reply)),
+                FrontJob::Stream { lane, input, reply } => {
+                    if in_round[lane] {
+                        // second request for a lane: close the round first
+                        // so per-lane order is preserved
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    in_round[lane] = true;
+                    round.push((lane, input, reply));
+                }
+                FrontJob::Reset { lane, reply } => {
+                    if in_round[lane] {
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    hub.reset_lane(lane);
+                    if let Some(tx) = reply {
+                        let _ = tx.send(());
+                    }
+                }
+            }
+        }
+        flush_round(&mut round, &mut in_round, hub);
+
+        // predicts: stateless — one fresh BatchEsn sweep per chunk
+        let d_out = self.model.readout.w.cols();
+        let mut start = 0;
+        while start < predicts.len() {
+            let chunk = &predicts[start..(start + MAX_PREDICT_BATCH).min(predicts.len())];
+            start += chunk.len();
+            let k = chunk.len();
+            let mut engine = BatchEsn::new(self.model.qesn.clone(), k);
+            if d_out == 1 {
+                // masked sweep: exhausted lanes freeze, so a short request
+                // never pays for the longest one in its batch
+                let reqs: Vec<(usize, &[f64])> = chunk
+                    .iter()
+                    .enumerate()
+                    .map(|(b, (input, _))| (b, input.as_slice()))
+                    .collect();
+                let outs = engine.sweep_streams(&reqs, &self.model.readout);
+                for ((_, reply), out) in chunk.iter().zip(outs) {
+                    let _ = reply.send(out);
+                }
+            } else {
+                // general D_out: zero-padded full sweep (padded steps are
+                // never read, so outputs are unchanged)
+                let max_len = chunk.iter().map(|(i, _)| i.len()).max().unwrap_or(0);
+                let mut u = Mat::zeros(max_len, k);
+                for (b, (input, _)) in chunk.iter().enumerate() {
+                    for (t, &v) in input.iter().enumerate() {
+                        u[(t, b)] = v;
+                    }
+                }
+                let y = engine.run_readout(&u, &self.model.readout);
+                for (b, (input, reply)) in chunk.iter().enumerate() {
+                    let out: Vec<f64> =
+                        (0..input.len()).map(|t| y[(t, b * d_out)]).collect();
+                    let _ = reply.send(out);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP service
+// ---------------------------------------------------------------------------
+
+/// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks; one
+/// lightweight handler thread per connection, all funneling into the
+/// shared [`BatchFront`]. `max_requests` bounds the total connections
+/// accepted (tests / examples) — all of them are joined before returning;
+/// `None` runs forever.
 pub fn serve(model: Arc<Model>, addr: &str, max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
+    let front = BatchFront::start(model);
     let mut served = 0usize;
+    let mut handles = Vec::new();
+    let mut accept_err: Option<anyhow::Error> = None;
     for stream in listener.incoming() {
-        let stream = stream?;
-        let model = Arc::clone(&model);
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                // don't early-return: the sweeper and any live handlers
+                // must still be wound down below
+                accept_err = Some(e.into());
+                break;
+            }
+        };
+        let front2 = Arc::clone(&front);
         let handle = std::thread::spawn(move || {
-            let _ = handle_connection(model, stream);
+            let _ = handle_connection(front2, stream);
         });
         served += 1;
         if let Some(max) = max_requests {
+            handles.push(handle);
             if served >= max {
-                let _ = handle.join();
                 break;
             }
         } else {
             drop(handle); // detach
         }
     }
-    Ok(())
+    for h in handles {
+        let _ = h.join();
+    }
+    front.shutdown();
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
-fn handle_connection(model: Arc<Model>, stream: TcpStream) -> Result<()> {
-    let peer = stream.peer_addr()?;
+/// Per-connection fallback streaming state (used when the hub is full).
+struct LocalStream {
+    s_re: Vec<f64>,
+    s_im: Vec<f64>,
+}
+
+/// Per-connection streaming identity: a hub lane is acquired LAZILY on
+/// the first `stream` op (predict-only connections never occupy one) and
+/// kept for the connection's lifetime; once the hub was full for this
+/// connection, it sticks to the local fallback so its state never jumps
+/// between hub and local.
+struct ConnState {
+    lane: Option<usize>,
+    hub_denied: bool,
+    local: LocalStream,
+}
+
+fn handle_connection(front: Arc<BatchFront>, stream: TcpStream) -> Result<()> {
+    let slots = front.model.esn.spec.slots();
+    let mut conn = ConnState {
+        lane: None,
+        hub_denied: false,
+        local: LocalStream {
+            s_re: vec![0.0f64; slots],
+            s_im: vec![0.0f64; slots],
+        },
+    };
+    let result = serve_lines(&front, &mut conn, stream);
+    if let Some(l) = conn.lane {
+        front.release_lane(l);
+    }
+    result
+}
+
+fn serve_lines(
+    front: &BatchFront,
+    conn: &mut ConnState,
+    stream: TcpStream,
+) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    // per-connection streaming state
-    let slots = model.esn.spec.slots();
-    let mut s_re = vec![0.0f64; slots];
-    let mut s_im = vec![0.0f64; slots];
     let mut line = String::new();
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client closed
         }
-        let response = match handle_request(&model, &line, &mut s_re, &mut s_im) {
+        let response = match handle_request(front, conn, &line) {
             Ok(json) => json,
             Err(e) => Json::obj(vec![
                 ("ok", Json::Bool(false)),
@@ -94,16 +443,15 @@ fn handle_connection(model: Arc<Model>, stream: TcpStream) -> Result<()> {
         };
         out.write_all(response.to_string_compact().as_bytes())?;
         out.write_all(b"\n")?;
-        let _ = peer;
     }
 }
 
 fn handle_request(
-    model: &Model,
+    front: &BatchFront,
+    conn: &mut ConnState,
     line: &str,
-    s_re: &mut [f64],
-    s_im: &mut [f64],
 ) -> Result<Json> {
+    let model = &front.model;
     let req = parse(line.trim())?;
     let op = req
         .get("op")
@@ -119,11 +467,16 @@ fn handle_request(
                 "spectral_radius",
                 Json::Num(model.esn.spec.radius()),
             ),
+            ("stream_lane", match conn.lane {
+                Some(l) => Json::Num(l as f64),
+                None => Json::Null,
+            }),
         ])),
         "predict" => {
             let input = parse_input(&req)?;
+            let steps = input.len();
             let t = Timer::start();
-            let output = model.predict(&input);
+            let output = front.predict(input);
             let dt = t.elapsed_s().max(1e-12);
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -133,37 +486,58 @@ fn handle_request(
                 ),
                 (
                     "steps_per_sec",
-                    Json::Num(input.len() as f64 / dt),
+                    Json::Num(steps as f64 / dt),
                 ),
             ]))
         }
         "stream" => {
             let input = parse_input(&req)?;
-            let mut outs = Vec::with_capacity(input.len());
-            let n = model.esn.n();
-            let mut feat = vec![0.0; n];
-            for &u in &input {
-                model.esn.step(s_re, s_im, &[u]);
-                model.esn.write_features(s_re, s_im, &mut feat);
-                // y = feat·w + b
-                let mut y = model.readout.b[0];
-                for (j, &f) in feat.iter().enumerate() {
-                    y += f * model.readout.w[(j, 0)];
+            // first stream op: try to claim a hub lane (and never switch
+            // engines once this connection's streaming has started)
+            if conn.lane.is_none() && !conn.hub_denied {
+                conn.lane = front.acquire_lane();
+                if conn.lane.is_none() {
+                    conn.hub_denied = true;
                 }
-                outs.push(y);
             }
+            let outs = match conn.lane {
+                Some(l) => front.stream(l, input)?,
+                None => stream_local(model, &input, &mut conn.local),
+            };
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("output", Json::Arr(outs.into_iter().map(Json::Num).collect())),
             ]))
         }
         "reset" => {
-            s_re.fill(0.0);
-            s_im.fill(0.0);
+            if let Some(l) = conn.lane {
+                front.reset(l)?;
+            }
+            conn.local.s_re.fill(0.0);
+            conn.local.s_im.fill(0.0);
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
         other => Err(anyhow!("unknown op {other:?}")),
     }
+}
+
+/// Hub-less streaming fallback: same arithmetic (and therefore the same
+/// bits) as a hub lane, on connection-local slot planes.
+fn stream_local(model: &Model, input: &[f64], local: &mut LocalStream) -> Vec<f64> {
+    let n = model.esn.n();
+    let mut outs = Vec::with_capacity(input.len());
+    let mut feat = vec![0.0; n];
+    for &u in input {
+        model.esn.step(&mut local.s_re, &mut local.s_im, &[u]);
+        model.esn.write_features(&local.s_re, &local.s_im, &mut feat);
+        // y = b + feat·w (bias-first: the shared accumulation contract)
+        let mut y = model.readout.b[0];
+        for (j, &f) in feat.iter().enumerate() {
+            y += f * model.readout.w[(j, 0)];
+        }
+        outs.push(y);
+    }
+    outs
 }
 
 fn parse_input(req: &Json) -> Result<Vec<f64>> {
@@ -199,9 +573,9 @@ impl Client {
         parse(line.trim())
     }
 
-    pub fn predict(&mut self, input: &[f64]) -> Result<Vec<f64>> {
+    fn io_op(&mut self, op: &str, input: &[f64]) -> Result<Vec<f64>> {
         let req = Json::obj(vec![
-            ("op", Json::Str("predict".into())),
+            ("op", Json::Str(op.into())),
             (
                 "input",
                 Json::Arr(input.iter().map(|&x| Json::Num(x)).collect()),
@@ -218,6 +592,15 @@ impl Client {
             .iter()
             .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad output")))
             .collect()
+    }
+
+    pub fn predict(&mut self, input: &[f64]) -> Result<Vec<f64>> {
+        self.io_op("predict", input)
+    }
+
+    /// Stateful streaming step(s) on this connection's lane.
+    pub fn stream(&mut self, input: &[f64]) -> Result<Vec<f64>> {
+        self.io_op("stream", input)
     }
 }
 
@@ -241,7 +624,7 @@ mod tests {
         let x = crate::tasks::mso::slice_rows(&feats, 100..400);
         let y = task.target_mat(100..400);
         let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity).unwrap();
-        Model { esn, readout }
+        Model::new(esn, readout)
     }
 
     #[test]
@@ -250,24 +633,96 @@ mod tests {
         let task = MsoTask::new(1);
         let input = &task.input[..50];
         let batch = model.predict(input);
-        // streaming path
-        let slots = model.esn.spec.slots();
-        let mut s_re = vec![0.0; slots];
-        let mut s_im = vec![0.0; slots];
-        let mut line_out = Vec::new();
-        let mut feat = vec![0.0; model.esn.n()];
-        for &u in input {
-            model.esn.step(&mut s_re, &mut s_im, &[u]);
-            model.esn.write_features(&s_re, &s_im, &mut feat);
-            let mut y = model.readout.b[0];
-            for (j, &f) in feat.iter().enumerate() {
-                y += f * model.readout.w[(j, 0)];
-            }
-            line_out.push(y);
-        }
+        // streaming path (local fallback arithmetic)
+        let mut local = LocalStream {
+            s_re: vec![0.0; model.esn.spec.slots()],
+            s_im: vec![0.0; model.esn.spec.slots()],
+        };
+        let line_out = stream_local(&model, input, &mut local);
         for (a, b) in batch.iter().zip(&line_out) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn batched_front_predict_is_bit_identical_to_model_predict() {
+        // the batching contract: coalescing must be invisible — same bits
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(2);
+        let inputs: Vec<Vec<f64>> = (0..7)
+            .map(|i| task.input[i * 10..i * 10 + 35 + i].to_vec())
+            .collect();
+        // submit all jobs before the sweeper can drain them one by one:
+        // hold the queue lock while enqueueing
+        let replies: Vec<mpsc::Receiver<Vec<f64>>> = {
+            let mut st = front.state.lock().unwrap();
+            inputs
+                .iter()
+                .map(|input| {
+                    let (tx, rx) = mpsc::channel();
+                    st.jobs.push(FrontJob::Predict {
+                        input: input.clone(),
+                        reply: tx,
+                    });
+                    rx
+                })
+                .collect()
+        };
+        front.cv.notify_all();
+        for (input, rx) in inputs.iter().zip(replies) {
+            let batched = rx.recv().unwrap();
+            let sequential = model.predict(input);
+            assert_eq!(batched.len(), sequential.len());
+            for (a, b) in batched.iter().zip(&sequential) {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "batched predict must be bit-identical: {a} vs {b}"
+                );
+            }
+        }
+        front.shutdown();
+    }
+
+    #[test]
+    fn hub_lanes_are_isolated_and_match_sequential_streaming() {
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let a = front.acquire_lane().unwrap();
+        let b = front.acquire_lane().unwrap();
+        assert_ne!(a, b);
+        // interleave chunks on two lanes
+        let in_a = &task.input[..40];
+        let in_b = &task.input[200..230];
+        let mut got_a = front.stream(a, in_a[..15].to_vec()).unwrap();
+        let mut got_b = front.stream(b, in_b[..7].to_vec()).unwrap();
+        got_a.extend(front.stream(a, in_a[15..].to_vec()).unwrap());
+        got_b.extend(front.stream(b, in_b[7..].to_vec()).unwrap());
+        // reference: each stream alone
+        let reference = |input: &[f64]| {
+            let mut local = LocalStream {
+                s_re: vec![0.0; model.esn.spec.slots()],
+                s_im: vec![0.0; model.esn.spec.slots()],
+            };
+            stream_local(&model, input, &mut local)
+        };
+        for (got, want) in [(got_a, reference(in_a)), (got_b, reference(in_b))] {
+            assert_eq!(got.len(), want.len());
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-10, "{x} vs {y}");
+            }
+        }
+        // reset isolates too: lane a resets, lane b keeps its state
+        front.reset(a).unwrap();
+        let fresh = front.stream(a, in_a[..5].to_vec()).unwrap();
+        let ref_a = reference(in_a);
+        for (x, y) in fresh.iter().zip(&ref_a[..5]) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        front.release_lane(a);
+        front.release_lane(b);
+        front.shutdown();
     }
 
     #[test]

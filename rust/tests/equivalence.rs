@@ -10,9 +10,13 @@
 //! * DPG spectra invariants: conjugate closure, radius bounds, layout.
 
 use linear_reservoir::linalg::Mat;
-use linear_reservoir::readout::{fit, predict_scaled, GramStats, Regularizer};
+use linear_reservoir::readout::{
+    fit, predict_scaled, GramStats, Readout, Regularizer,
+};
 use linear_reservoir::reservoir::state_matrix::state_matrix_1d;
-use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+use linear_reservoir::reservoir::{
+    BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn,
+};
 use linear_reservoir::rng::{Distributions, Pcg64};
 use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
 use linear_reservoir::spectral::uniform::uniform_spectrum;
@@ -178,6 +182,122 @@ fn prop_gram_scaling_consistency() {
         } else {
             Err(format!("f={f} s={s:.2e} α={alpha:.1e} err={err:.2e}"))
         }
+    });
+}
+
+#[test]
+fn prop_batch_engine_matches_independent_runs() {
+    // ISSUE-1 acceptance: BatchEsn states ≡ B independent QBasisEsn::run
+    // calls (≤ 1e-10; the lane arithmetic is in fact bit-identical)
+    check("BatchEsn ≡ B × QBasisEsn", 8, |rng| {
+        let n = 6 + rng.next_below(40) as usize;
+        let b = 1 + rng.next_below(12) as usize;
+        let t_len = 25;
+        let config = EsnConfig::default().with_n(n).with_seed(rng.next_u64());
+        let mut gen_rng = Pcg64::new(rng.next_u64(), 91);
+        let spec = uniform_spectrum(n, rng.uniform(0.3, 1.0), &mut gen_rng);
+        let q = QBasisEsn::from_diagonal(&DiagonalEsn::from_dpg(
+            spec, &config, &mut gen_rng,
+        ));
+        let u = Mat::randn(t_len, b, rng);
+        let mut batch = BatchEsn::new(q.clone(), b);
+        let lanes = batch.run(&u);
+        for lane in 0..b {
+            let col: Vec<f64> = (0..t_len).map(|t| u[(t, lane)]).collect();
+            let single = q.run(&Mat::from_rows(t_len, 1, &col));
+            let err = lanes[lane].max_abs_diff(&single);
+            if err > 1e-10 {
+                return Err(format!("n={n} B={b} lane={lane} err={err:.2e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_readout_matches_materialized() {
+    // fused run_readout ≡ readout.predict(esn.run(u)) on both the plain
+    // and the batched engine (≤ 1e-10)
+    check("fused readout ≡ run-then-matmul", 8, |rng| {
+        let n = 8 + rng.next_below(30) as usize;
+        let b = 1 + rng.next_below(6) as usize;
+        let d_out = 1 + rng.next_below(3) as usize;
+        let t_len = 30;
+        let config = EsnConfig::default().with_n(n).with_seed(rng.next_u64());
+        let mut gen_rng = Pcg64::new(rng.next_u64(), 92);
+        let spec = uniform_spectrum(n, rng.uniform(0.3, 0.95), &mut gen_rng);
+        let q = QBasisEsn::from_diagonal(&DiagonalEsn::from_dpg(
+            spec, &config, &mut gen_rng,
+        ));
+        let ro = Readout {
+            w: Mat::randn(n, d_out, rng),
+            b: (0..d_out).map(|_| rng.normal()).collect(),
+        };
+        let u = Mat::randn(t_len, b, rng);
+        let mut batch = BatchEsn::new(q.clone(), b);
+        let fused_batch = batch.run_readout(&u, &ro);
+        for lane in 0..b {
+            let col: Vec<f64> = (0..t_len).map(|t| u[(t, lane)]).collect();
+            let u1 = Mat::from_rows(t_len, 1, &col);
+            let fused = q.run_readout(&u1, &ro);
+            let want = ro.predict(&q.run(&u1));
+            let err = fused.max_abs_diff(&want);
+            if err > 1e-10 {
+                return Err(format!("qbasis n={n} lane={lane} err={err:.2e}"));
+            }
+            for t in 0..t_len {
+                for k in 0..d_out {
+                    let diff =
+                        (fused_batch[(t, lane * d_out + k)] - want[(t, k)]).abs();
+                    if diff > 1e-10 {
+                        return Err(format!(
+                            "batch n={n} lane={lane} t={t} k={k} err={diff:.2e}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_readout_matches_materialized_on_feedback_path() {
+    // the teacher-forced Eq.-1 path: fused run_readout_teacher_forced ≡
+    // predict(run_teacher_forced) (≤ 1e-10)
+    check("fused feedback readout ≡ materialized", 6, |rng| {
+        let n = 8 + rng.next_below(14) as usize;
+        let config = EsnConfig::default()
+            .with_n(n)
+            .with_sr(rng.uniform(0.4, 0.9))
+            .with_seed(rng.next_u64());
+        let w_fb = Mat::randn(1, n, rng);
+        let standard = StandardEsn::generate(config).with_feedback(w_fb);
+        let diag = match DiagonalEsn::from_standard(&standard) {
+            Ok(d) => d,
+            Err(_) => return Ok(()), // non-diagonalizable draw: skip
+        };
+        let t_len = 35;
+        let u = Mat::randn(t_len, 1, rng);
+        let y_teacher = Mat::randn(t_len, 1, rng);
+        let ro = Readout {
+            w: Mat::randn(n, 1, rng),
+            b: vec![rng.normal()],
+        };
+        let fused = diag.run_readout_teacher_forced(&u, &y_teacher, &ro);
+        let want = ro.predict(&diag.run_teacher_forced(&u, &y_teacher));
+        let err = fused.max_abs_diff(&want);
+        if err > 1e-10 {
+            return Err(format!("n={n} err={err:.2e}"));
+        }
+        // and the no-feedback fused path agrees with run() + predict too
+        let fused_plain = diag.run_readout(&u, &ro);
+        let want_plain = ro.predict(&diag.run(&u));
+        let err = fused_plain.max_abs_diff(&want_plain);
+        if err > 1e-10 {
+            return Err(format!("plain n={n} err={err:.2e}"));
+        }
+        Ok(())
     });
 }
 

@@ -131,7 +131,7 @@ fn tcp_serving_pipeline() {
     let x = slice_rows(&feats, splits.train.clone());
     let y = task.target_mat(splits.train.clone());
     let readout = fit(&x, &y, 1e-9, true, Regularizer::Identity).unwrap();
-    let model = Arc::new(Model { esn, readout });
+    let model = Arc::new(Model::new(esn, readout));
 
     let addr = "127.0.0.1:47617";
     let server_model = Arc::clone(&model);
@@ -150,6 +150,110 @@ fn tcp_serving_pipeline() {
     assert!(rmse(&pred_test, &y_test) < 1e-4);
     drop(client);
     handle.join().unwrap();
+}
+
+fn serving_model(seed: u64) -> Model {
+    let n = 50;
+    let config = EsnConfig::default().with_n(n).with_sr(0.9).with_seed(seed);
+    let mut rng = Pcg64::new(seed, 102);
+    let spec = golden_spectrum(n, GoldenParams { sr: 0.9, sigma: 0.0 }, &mut rng);
+    let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+    let task = MsoTask::new(2);
+    let splits = MsoTask::splits();
+    let feats = esn.run(&task.input_mat());
+    let x = slice_rows(&feats, splits.train.clone());
+    let y = task.target_mat(splits.train.clone());
+    let readout = fit(&x, &y, 1e-9, true, Regularizer::Identity).unwrap();
+    Model::new(esn, readout)
+}
+
+#[test]
+fn concurrent_batched_predicts_bit_identical_to_sequential() {
+    // the micro-batching front must be invisible: whatever coalescing
+    // happens server-side, every client gets bit-for-bit the output of a
+    // sequential Model::predict
+    let model = Arc::new(serving_model(11));
+    let task = MsoTask::new(2);
+    let clients = 6;
+    let addr = "127.0.0.1:47811";
+    let server_model = Arc::clone(&model);
+    let server = std::thread::spawn(move || {
+        serve(server_model, addr, Some(clients)).unwrap();
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let mut workers = Vec::new();
+    for i in 0..clients {
+        let model = Arc::clone(&model);
+        let input: Vec<f64> = task.input[i * 17..i * 17 + 60 + 3 * i].to_vec();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            // several rounds per connection to overlap with the others
+            for _ in 0..4 {
+                let got = client.predict(&input).unwrap();
+                let want = model.predict(&input);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert!(
+                        (a - b).abs() == 0.0,
+                        "batched predict not bit-identical: {a} vs {b}"
+                    );
+                }
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    server.join().unwrap();
+}
+
+#[test]
+fn concurrent_stream_connections_are_isolated() {
+    // every connection owns a streaming state; interleaved stream requests
+    // from concurrent connections must each reproduce their own sequential
+    // trajectory (no cross-talk between hub lanes)
+    let model = Arc::new(serving_model(12));
+    let task = MsoTask::new(2);
+    let clients = 4;
+    let addr = "127.0.0.1:47813";
+    let server_model = Arc::clone(&model);
+    let server = std::thread::spawn(move || {
+        serve(server_model, addr, Some(clients)).unwrap();
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let mut workers = Vec::new();
+    for i in 0..clients {
+        let model = Arc::clone(&model);
+        // distinct input per connection so cross-talk would be visible
+        let input: Vec<f64> = task.input[i * 50..i * 50 + 48].to_vec();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            // chunked streaming: state must persist across requests
+            let mut got = Vec::new();
+            for chunk in input.chunks(7 + i) {
+                got.extend(client.stream(chunk).unwrap());
+            }
+            // sequential reference on this connection's input alone
+            let want = {
+                let u = Mat::from_rows(input.len(), 1, &input);
+                let y = model.qesn.run_readout(&u, &model.readout);
+                (0..y.rows()).map(|t| y[(t, 0)]).collect::<Vec<f64>>()
+            };
+            assert_eq!(got.len(), want.len());
+            for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-10,
+                    "stream isolation broken at t={t}: {a} vs {b}"
+                );
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    server.join().unwrap();
 }
 
 // ---------------------------------------------------------------------------
@@ -171,7 +275,7 @@ fn server_rejects_malformed_requests_without_dying() {
     let x = slice_rows(&feats, 100..400);
     let y = task.target_mat(100..400);
     let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity).unwrap();
-    let model = Arc::new(Model { esn, readout });
+    let model = Arc::new(Model::new(esn, readout));
 
     let addr = "127.0.0.1:47731";
     let m2 = Arc::clone(&model);

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification + perf snapshot in one command:
+#   scripts/verify.sh
+# Runs the release build, the full test suite, and the quick reservoir
+# bench, leaving a machine-readable perf snapshot in
+# BENCH_reservoir_run.json (the perf-trajectory artifact).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json =="
+cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json
+
+echo "verify OK"
