@@ -1,8 +1,9 @@
 //! Bench: full-sequence reservoir runs (T×N trajectories) — standard
 //! dense vs sparse vs diagonal engines (Table 2's compute budget), plus
 //! the serving-path rows: fused streaming readout vs materialize-then-
-//! matmul, and the batched multi-sequence engine vs the one-sequence-at-
-//! a-time loop (states/sec across the batch).
+//! matmul, the batched multi-sequence engine vs the one-sequence-at-
+//! a-time loop (states/sec across the batch), and the precision ladder:
+//! f32 vs f64 SoA lane engines at the serving point (N=1000, B∈{8,64}).
 //!
 //! Run: `cargo bench --bench reservoir_run [-- --quick] [--json <path>]`
 //! `--json` writes machine-readable results (bench rows + derived
@@ -133,6 +134,59 @@ fn main() {
                 Json::Num(r6.per_iter.median / r5.per_iter.median),
             ),
         ]));
+    }
+
+    // --- precision ladder: f32 SoA lanes vs the f64 oracle --------------
+    // The step is memory-bound (Corollary 2): halving the element width
+    // should roughly double steps/sec. Rows run in BOTH quick and full
+    // mode — they are the acceptance artifact for the f32 lane engine.
+    {
+        let n = 1000;
+        println!("precision ladder, N = {n}, T = {t_len}");
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(7, 111);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let qbasis = QBasisEsn::from_diagonal(&diag);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        for &bsz in &[8usize, 64] {
+            let u_b = Mat::randn(t_len, bsz, &mut rng);
+            let mut e64 = BatchEsn::new(qbasis.clone(), bsz);
+            let r64 = bench(&format!("f64_batch{bsz}_N{n}"), cfg, || {
+                e64.reset();
+                e64.run_readout(&u_b, &readout)
+            });
+            let mut e32 = BatchEsn::<f32>::with_precision(qbasis.clone(), bsz);
+            let r32 = bench(&format!("f32_batch{bsz}_N{n}"), cfg, || {
+                e32.reset();
+                e32.run_readout(&u_b, &readout)
+            });
+            push(&mut rows, &r64);
+            push(&mut rows, &r32);
+            let steps = (t_len * bsz) as f64;
+            let f64_sps = steps / r64.per_iter.median;
+            let f32_sps = steps / r32.per_iter.median;
+            let speedup = r64.per_iter.median / r32.per_iter.median;
+            println!(
+                "  B={bsz}: f32 {:.3e} steps/s vs f64 {:.3e} steps/s → {:.2}x\n",
+                f32_sps, f64_sps, speedup
+            );
+            rows.push(Json::obj(vec![
+                (
+                    "name",
+                    Json::Str(format!("derived_precision_batch{bsz}_N{n}")),
+                ),
+                ("n_reservoir", Json::Num(n as f64)),
+                ("batch", Json::Num(bsz as f64)),
+                ("t", Json::Num(t_len as f64)),
+                ("f64_steps_per_sec", Json::Num(f64_sps)),
+                ("f32_steps_per_sec", Json::Num(f32_sps)),
+                ("f32_speedup", Json::Num(speedup)),
+            ]));
+        }
     }
 
     if let Some(path) = json_path {

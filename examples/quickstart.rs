@@ -76,5 +76,18 @@ fn main() -> anyhow::Result<()> {
         max_diff = max_diff.max((y_stream[(t, 0)] - pred[(i, 0)]).abs());
     }
     println!("fused streaming readout matches batch predictions to {max_diff:.1e}");
+
+    // 8. Precision selection for serving: the same model at f32 — half the
+    //    state traffic, 2× SIMD lanes (the compiled kernels' precision
+    //    point); the wire stays f64 and the error budget is enforced in
+    //    rust/tests/precision.rs. Pass this Model to server::serve.
+    use linear_reservoir::server::{Model, Precision};
+    let serving = Model::with_precision(esn, readout, Precision::F32);
+    let y32 = serving.predict(&series[..t_total]);
+    let mut f32_diff = 0.0f64;
+    for t in 800..t_total {
+        f32_diff = f32_diff.max((y32[t] - y_stream[(t, 0)]).abs());
+    }
+    println!("f32 serving engine within {f32_diff:.1e} of the f64 oracle");
     Ok(())
 }

@@ -11,7 +11,8 @@
 //! repro fig7   [--sizes 100,300] [--seeds 3] [--full]
 //! repro ablation-noise | ablation-eigvec | ablation-gamma
 //! repro e2e    [--k 5] [--n 100]
-//! repro serve  [--addr 127.0.0.1:7878] [--k 5] [--n 100]
+//! repro serve  [--addr 127.0.0.1:7878] [--k 5] [--n 100] [--f32]
+//!              [--holdoff-us 0]
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -213,7 +214,7 @@ fn dispatch(args: &Args) -> Result<()> {
             use linear_reservoir::readout::{fit, Regularizer};
             use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
             use linear_reservoir::rng::Pcg64;
-            use linear_reservoir::server::{serve, Model};
+            use linear_reservoir::server::{serve_with_holdoff, Model, Precision};
             use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
             use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
             use std::sync::Arc;
@@ -232,8 +233,26 @@ fn dispatch(args: &Args) -> Result<()> {
             let x = slice_rows(&feats, splits.train.clone());
             let y = task.target_mat(splits.train.clone());
             let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity)?;
-            println!("serving MSO{k} model (N={n}) on {addr} …");
-            serve(Arc::new(Model::new(esn, readout)), addr, None)
+            // --f32: serve from the f32 SoA lane engine (2× SIMD width;
+            // wire format unchanged — see rust/tests/precision.rs)
+            let precision = if args.flag("f32") {
+                Precision::F32
+            } else {
+                Precision::F64
+            };
+            // --holdoff-us: opt-in sweeper coalescing window (0 = drain
+            // immediately)
+            let holdoff_us = args.get_u64("holdoff-us", 0)?;
+            println!(
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs) on {addr} …",
+                precision.name()
+            );
+            serve_with_holdoff(
+                Arc::new(Model::with_precision(esn, readout, precision)),
+                addr,
+                None,
+                holdoff_us,
+            )
         }
         "all" => {
             let quick = args.flag("quick");

@@ -1,5 +1,9 @@
-//! Scalar numeric types: split-free complex arithmetic ([`c64`]).
+//! Scalar numeric types: split-free complex arithmetic ([`c64`]) and the
+//! precision-generic [`Scalar`] element trait (`f64`/`f32`, sealed) that
+//! the batched lane engines are generic over.
 
 mod complex;
+mod scalar;
 
 pub use complex::c64;
+pub use scalar::Scalar;

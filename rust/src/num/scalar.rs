@@ -1,0 +1,131 @@
+//! Precision-generic scalar abstraction for the lane engines.
+//!
+//! The diagonalized step is memory-bound element-wise arithmetic
+//! (Corollary 2): throughput is set by how many lanes fit a cache line
+//! and a SIMD register, not by FLOPs. [`Scalar`] abstracts the element
+//! type of the batched hot path so [`crate::reservoir::BatchEsn`] can run
+//! at `f64` (the bit-exact oracle precision) or `f32` (the compiled HLO
+//! kernels' precision point — 2× lanes per cache line, 2× SIMD width).
+//!
+//! The trait is **sealed**: exactly `f64` and `f32` implement it. Engines
+//! own the precision decision at construction; all public APIs stay
+//! `f64`-in / `f64`-out at the boundary (`f32 → f64` widening is exact,
+//! so round-trips through a wider boundary are lossless).
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+}
+
+/// Element type of a lane engine: `f64` or `f32` (sealed).
+///
+/// `LANES` is the number of elements per 64-byte cache line — the unit
+/// the chunked kernels block on, and the width lane counts are padded to
+/// so inner loops have exact SIMD-friendly trip counts.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + Send
+    + Sync
+    + 'static
+    + PartialEq
+    + PartialOrd
+    + core::fmt::Debug
+    + core::fmt::Display
+    + core::ops::Add<Output = Self>
+    + core::ops::Sub<Output = Self>
+    + core::ops::Mul<Output = Self>
+    + core::ops::AddAssign
+    + core::ops::MulAssign
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Elements per 64-byte cache line (= pad/chunk width of lane blocks).
+    const LANES: usize;
+    /// Display name ("f64"/"f32") for metrics and bench rows.
+    const NAME: &'static str;
+
+    /// Narrowing (f32) or identity (f64) conversion from the f64 boundary.
+    fn from_f64(x: f64) -> Self;
+    /// Exact widening back to the f64 boundary.
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn is_finite(self) -> bool;
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const LANES: usize = 8; // 64 B / 8 B
+    const NAME: &'static str = "f64";
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const LANES: usize = 16; // 64 B / 4 B
+    const NAME: &'static str = "f32";
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_widths_fill_a_cache_line() {
+        assert_eq!(<f64 as Scalar>::LANES * core::mem::size_of::<f64>(), 64);
+        assert_eq!(<f32 as Scalar>::LANES * core::mem::size_of::<f32>(), 64);
+    }
+
+    #[test]
+    fn f64_conversions_are_identity() {
+        for x in [0.0, -1.5, 1e300, f64::MIN_POSITIVE] {
+            assert_eq!(<f64 as Scalar>::from_f64(x).to_f64(), x);
+        }
+    }
+
+    #[test]
+    fn f32_widening_roundtrip_is_exact() {
+        // narrow → widen → narrow is the identity on the narrowed value
+        for x in [0.0f64, 0.1, -273.15, 1e-30] {
+            let narrowed = <f32 as Scalar>::from_f64(x);
+            let widened = narrowed.to_f64();
+            assert_eq!(<f32 as Scalar>::from_f64(widened), narrowed);
+        }
+    }
+}

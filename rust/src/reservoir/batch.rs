@@ -1,19 +1,37 @@
 //! Batched multi-sequence engine: B independent reservoir states advanced
-//! through ONE pass over Λ per step.
+//! through ONE pass over Λ per step — precision-generic and SIMD-shaped.
 //!
 //! The diagonal update is memory-bound: each step streams `Λ` and
 //! `[W_in]_Q` past the ALU to touch `N` state words. Serving one sequence
 //! at a time pays that stream once per user; serving B users pays it once
-//! per *step* while the per-lane arithmetic — the inner `for b in 0..B`
-//! loop over a contiguous lane block — autovectorizes across the batch.
+//! per *step* while the per-lane arithmetic — the inner lane loop over a
+//! contiguous block — autovectorizes across the batch.
 //!
-//! Layout: interleaved Q-layout `[N × B]`, lane-major — buffer position
-//! `j` (Appendix-A feature order: reals first, then `(Re, Im)` pairs)
-//! holds its B lanes contiguously at `state[j·B .. (j+1)·B]`. Per lane the
-//! arithmetic is EXPRESSION-IDENTICAL to [`QBasisEsn::step`]'s fused
-//! `d_in = 1` path, so a batched sweep is bit-identical to B independent
-//! sequential runs — equivalence is exact, not approximate (tested below
-//! and in `rust/tests/equivalence.rs`).
+//! ## SoA split-plane layout
+//!
+//! The state lives in two structure-of-arrays planes, one complex
+//! component per *slot* (a real eigenvalue or one member of a conjugate
+//! pair, exactly [`DiagonalEsn`](super::DiagonalEsn)'s slot form):
+//!
+//! ```text
+//! re[slot × B⁺]   im[slot × B⁺]      B⁺ = B padded up to Scalar::LANES
+//! ```
+//!
+//! Slot `j`'s B lanes are contiguous at `re[j·B⁺ .. j·B⁺+B]` (likewise
+//! `im`); real-eigenvalue slots never touch their `im` row. Lane counts
+//! are padded to the cache-line width so every inner loop has an exact
+//! SIMD-friendly trip count (padding lanes carry zeros and are never
+//! observable). The element type is generic over [`Scalar`]: `f64` is the
+//! bit-exact oracle, `f32` doubles lanes per cache line and SIMD width —
+//! the compiled HLO kernels' precision point (see `rust/tests/precision.rs`
+//! for the error budget).
+//!
+//! Per lane the arithmetic is EXPRESSION-IDENTICAL to [`QBasisEsn::step`]'s
+//! fused `d_in = 1` path, so at `f64` a batched sweep is bit-identical to
+//! B independent sequential runs — equivalence is exact, not approximate
+//! (tested below and in `rust/tests/equivalence.rs`). At every precision,
+//! lane results are independent of batch size and lane position (tested in
+//! `rust/tests/precision.rs`).
 //!
 //! The fused readout ([`BatchEsn::run_readout`]) folds `y = f·W_out + b`
 //! into the sweep: the request path does `O(N + N·D_out)` work per step
@@ -21,32 +39,263 @@
 //! step ([`BatchEsn::step_masked`] / [`BatchEsn::sweep_streams`]) lets the
 //! server coalesce per-connection streaming states of different lengths
 //! into the same sweep: frozen lanes are skipped, active lanes advance.
+//!
+//! All public APIs stay `f64` at the boundary (inputs, readouts, gathered
+//! lane states); `f32 → f64` widening is exact, so gather/scatter
+//! round-trips are lossless at both precisions.
 
 use crate::linalg::Mat;
+use crate::num::Scalar;
 use crate::readout::Readout;
 
 use super::QBasisEsn;
 
-/// B independent interleaved-layout reservoir states sharing one `(Λ,
-/// [W_in]_Q)` parameter set.
-#[derive(Clone, Debug)]
-pub struct BatchEsn {
-    engine: QBasisEsn,
-    batch: usize,
-    /// Lane-major state: entry `(j, b)` lives at `state[j·batch + b]`.
-    state: Vec<f64>,
+/// Lane-block kernels. The default build uses the chunked/unrolled form:
+/// fixed `Scalar::LANES`-wide blocks the autovectorizer maps to full-width
+/// SIMD (lane blocks are padded, so the remainder loops are dead in
+/// practice). Build with `--features plain-kernel` to A/B against the
+/// naive scalar loops — both forms compute the identical expression per
+/// element, so results are bit-for-bit the same.
+mod kernels {
+    use crate::num::Scalar;
+
+    /// `s[b] = s[b]·lam + u[b]·w` — fused Λ-rotate + input-add, real slot.
+    #[cfg(not(feature = "plain-kernel"))]
+    #[inline(always)]
+    pub fn fused_real<S: Scalar>(s: &mut [S], u: &[S], lam: S, w: S) {
+        debug_assert_eq!(s.len(), u.len());
+        let mut sc = s.chunks_exact_mut(S::LANES);
+        let mut uc = u.chunks_exact(S::LANES);
+        for (sv, uv) in (&mut sc).zip(&mut uc) {
+            for k in 0..S::LANES {
+                sv[k] = sv[k] * lam + uv[k] * w;
+            }
+        }
+        for (sb, &ub) in sc.into_remainder().iter_mut().zip(uc.remainder()) {
+            *sb = *sb * lam + ub * w;
+        }
+    }
+
+    #[cfg(feature = "plain-kernel")]
+    #[inline(always)]
+    pub fn fused_real<S: Scalar>(s: &mut [S], u: &[S], lam: S, w: S) {
+        debug_assert_eq!(s.len(), u.len());
+        for (sb, &ub) in s.iter_mut().zip(u) {
+            *sb = *sb * lam + ub * w;
+        }
+    }
+
+    /// Fused 2×2 rotation-scaling + input-add for a conjugate-pair slot:
+    /// `re' = re·a − im·b + u·w0`, `im' = re·b + im·a + u·w1`.
+    #[cfg(not(feature = "plain-kernel"))]
+    #[inline(always)]
+    pub fn fused_pair<S: Scalar>(
+        re: &mut [S],
+        im: &mut [S],
+        u: &[S],
+        a: S,
+        b: S,
+        w0: S,
+        w1: S,
+    ) {
+        debug_assert_eq!(re.len(), im.len());
+        debug_assert_eq!(re.len(), u.len());
+        let mut rc = re.chunks_exact_mut(S::LANES);
+        let mut ic = im.chunks_exact_mut(S::LANES);
+        let mut uc = u.chunks_exact(S::LANES);
+        for ((rv, iv), uv) in (&mut rc).zip(&mut ic).zip(&mut uc) {
+            for k in 0..S::LANES {
+                let (r0, i0) = (rv[k], iv[k]);
+                rv[k] = r0 * a - i0 * b + uv[k] * w0;
+                iv[k] = r0 * b + i0 * a + uv[k] * w1;
+            }
+        }
+        for ((rb, ib), &ub) in rc
+            .into_remainder()
+            .iter_mut()
+            .zip(ic.into_remainder().iter_mut())
+            .zip(uc.remainder())
+        {
+            let (r0, i0) = (*rb, *ib);
+            *rb = r0 * a - i0 * b + ub * w0;
+            *ib = r0 * b + i0 * a + ub * w1;
+        }
+    }
+
+    #[cfg(feature = "plain-kernel")]
+    #[inline(always)]
+    pub fn fused_pair<S: Scalar>(
+        re: &mut [S],
+        im: &mut [S],
+        u: &[S],
+        a: S,
+        b: S,
+        w0: S,
+        w1: S,
+    ) {
+        debug_assert_eq!(re.len(), im.len());
+        debug_assert_eq!(re.len(), u.len());
+        for ((rb, ib), &ub) in re.iter_mut().zip(im.iter_mut()).zip(u) {
+            let (r0, i0) = (*rb, *ib);
+            *rb = r0 * a - i0 * b + ub * w0;
+            *ib = r0 * b + i0 * a + ub * w1;
+        }
+    }
+
+    /// `s[b] *= lam` — rotation pass, real slot (general `d_in` path).
+    #[inline(always)]
+    pub fn scale<S: Scalar>(s: &mut [S], lam: S) {
+        for sb in s.iter_mut() {
+            *sb *= lam;
+        }
+    }
+
+    /// 2×2 rotation-scaling without input (general `d_in` path).
+    #[inline(always)]
+    pub fn rot_pair<S: Scalar>(re: &mut [S], im: &mut [S], a: S, b: S) {
+        debug_assert_eq!(re.len(), im.len());
+        for (rb, ib) in re.iter_mut().zip(im.iter_mut()) {
+            let (r0, i0) = (*rb, *ib);
+            *rb = r0 * a - i0 * b;
+            *ib = r0 * b + i0 * a;
+        }
+    }
+
+    /// `acc[b] += x[b]·w` — input accumulation / readout fold.
+    #[cfg(not(feature = "plain-kernel"))]
+    #[inline(always)]
+    pub fn axpy<S: Scalar>(acc: &mut [S], x: &[S], w: S) {
+        debug_assert_eq!(acc.len(), x.len());
+        let mut ac = acc.chunks_exact_mut(S::LANES);
+        let mut xc = x.chunks_exact(S::LANES);
+        for (av, xv) in (&mut ac).zip(&mut xc) {
+            for k in 0..S::LANES {
+                av[k] += xv[k] * w;
+            }
+        }
+        for (ab, &xb) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+            *ab += xb * w;
+        }
+    }
+
+    #[cfg(feature = "plain-kernel")]
+    #[inline(always)]
+    pub fn axpy<S: Scalar>(acc: &mut [S], x: &[S], w: S) {
+        debug_assert_eq!(acc.len(), x.len());
+        for (ab, &xb) in acc.iter_mut().zip(x) {
+            *ab += xb * w;
+        }
+    }
 }
 
-impl BatchEsn {
-    /// Build a `batch`-lane engine around (a clone of) `engine`'s
-    /// parameters. All lanes start at the zero state.
+/// B independent SoA split-plane reservoir states sharing one `(Λ,
+/// [W_in]_Q)` parameter set at precision `S` (`f64` oracle by default).
+#[derive(Clone, Debug)]
+pub struct BatchEsn<S: Scalar = f64> {
+    engine: QBasisEsn,
+    batch: usize,
+    /// `batch` rounded up to `S::LANES` — the stride of one slot's lane
+    /// block in the planes.
+    bpad: usize,
+    n_real: usize,
+    /// `n_real + n_pairs` — rows of each plane.
+    slots: usize,
+    d_in: usize,
+    /// Per-slot eigenvalue planes (`lam_im[j] = 0` for real slots).
+    lam_re: Vec<S>,
+    lam_im: Vec<S>,
+    /// `[d_in × slots]` input-weight planes (`win_im` zero on real slots).
+    win_re: Vec<S>,
+    win_im: Vec<S>,
+    /// State planes `[slots × bpad]`; padding lanes stay zero.
+    re: Vec<S>,
+    im: Vec<S>,
+    /// Padded per-step input scratch `[d_in × bpad]` (padding stays zero).
+    u_pad: Vec<S>,
+}
+
+impl BatchEsn<f64> {
+    /// Build a `batch`-lane engine at the oracle precision (`f64`) around
+    /// (a clone of) `engine`'s parameters. All lanes start at zero.
     pub fn new(engine: QBasisEsn, batch: usize) -> Self {
+        Self::with_precision(engine, batch)
+    }
+}
+
+/// A readout downcast to lane precision `S` once: feature-ordered
+/// `[N × D_out]` weights plus bias. Cache one next to a persistent
+/// engine (as the server hub does) so per-round sweeps stay
+/// allocation-free; at `f64` the cast is the identity copy.
+#[derive(Clone, Debug)]
+pub struct LaneReadout<S: Scalar> {
+    /// Feature-ordered `[N × D_out]`, row-major like [`Readout::w`]'s data.
+    w: Vec<S>,
+    b: Vec<S>,
+    n: usize,
+    d_out: usize,
+}
+
+impl<S: Scalar> LaneReadout<S> {
+    pub fn new(ro: &Readout) -> Self {
+        Self {
+            w: ro.w.data().iter().map(|&x| S::from_f64(x)).collect(),
+            b: ro.b.iter().map(|&x| S::from_f64(x)).collect(),
+            n: ro.w.rows(),
+            d_out: ro.w.cols(),
+        }
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+}
+
+impl<S: Scalar> BatchEsn<S> {
+    /// Build a `batch`-lane engine at precision `S`, downcasting
+    /// `engine`'s parameters once at construction.
+    pub fn with_precision(engine: QBasisEsn, batch: usize) -> Self {
         assert!(batch >= 1, "batch must be ≥ 1");
-        let n = engine.n();
+        let nr = engine.n_real;
+        let n_pairs = engine.lam_cpx.len() / 2;
+        let slots = nr + n_pairs;
+        let d_in = engine.d_in();
+        let bpad = (batch + S::LANES - 1) / S::LANES * S::LANES;
+
+        let mut lam_re = vec![S::ZERO; slots];
+        let mut lam_im = vec![S::ZERO; slots];
+        for j in 0..nr {
+            lam_re[j] = S::from_f64(engine.lam_real[j]);
+        }
+        for k in 0..n_pairs {
+            lam_re[nr + k] = S::from_f64(engine.lam_cpx[2 * k]);
+            lam_im[nr + k] = S::from_f64(engine.lam_cpx[2 * k + 1]);
+        }
+        let mut win_re = vec![S::ZERO; d_in * slots];
+        let mut win_im = vec![S::ZERO; d_in * slots];
+        for d in 0..d_in {
+            let row = engine.win_q.row(d);
+            for j in 0..nr {
+                win_re[d * slots + j] = S::from_f64(row[j]);
+            }
+            for k in 0..n_pairs {
+                win_re[d * slots + nr + k] = S::from_f64(row[nr + 2 * k]);
+                win_im[d * slots + nr + k] = S::from_f64(row[nr + 2 * k + 1]);
+            }
+        }
         Self {
             engine,
             batch,
-            state: vec![0.0; n * batch],
+            bpad,
+            n_real: nr,
+            slots,
+            d_in,
+            lam_re,
+            lam_im,
+            win_re,
+            win_im,
+            re: vec![S::ZERO; slots * bpad],
+            im: vec![S::ZERO; slots * bpad],
+            u_pad: vec![S::ZERO; d_in * bpad],
         }
     }
 
@@ -62,33 +311,50 @@ impl BatchEsn {
         &self.engine
     }
 
-    /// Raw lane-major state (layout `[N × B]`, see module docs).
-    pub fn states(&self) -> &[f64] {
-        &self.state
+    /// Engine precision name ("f64"/"f32") — for metrics and bench rows.
+    pub fn precision(&self) -> &'static str {
+        S::NAME
+    }
+
+    /// Raw SoA state planes `(re, im)`, each `[slots × bpad]` with slot
+    /// `j`'s lanes at `j·bpad..j·bpad+batch` (padding lanes are zero).
+    pub fn planes(&self) -> (&[S], &[S]) {
+        (&self.re, &self.im)
     }
 
     /// Zero every lane.
     pub fn reset(&mut self) {
-        self.state.fill(0.0);
+        self.re.fill(S::ZERO);
+        self.im.fill(S::ZERO);
     }
 
     /// Zero one lane (new connection adopting a recycled slot).
     pub fn reset_lane(&mut self, b: usize) {
         assert!(b < self.batch);
-        let bsz = self.batch;
-        for j in 0..self.engine.n() {
-            self.state[j * bsz + b] = 0.0;
+        let bp = self.bpad;
+        for j in 0..self.slots {
+            self.re[j * bp + b] = S::ZERO;
+            self.im[j * bp + b] = S::ZERO;
         }
     }
 
     /// Gather lane `b`'s state into `out` (length `N`, Q-basis feature
-    /// layout — the same row [`QBasisEsn::run`] would emit).
+    /// layout — the same row [`QBasisEsn::run`] would emit). The widening
+    /// to `f64` is exact at every precision, so
+    /// [`Self::set_lane_state`] ∘ `lane_state` round-trips bit-for-bit.
     pub fn lane_state(&self, b: usize, out: &mut [f64]) {
         assert!(b < self.batch);
         assert_eq!(out.len(), self.engine.n());
-        let bsz = self.batch;
-        for (j, o) in out.iter_mut().enumerate() {
-            *o = self.state[j * bsz + b];
+        let bp = self.bpad;
+        let nr = self.n_real;
+        for (j, o) in out[..nr].iter_mut().enumerate() {
+            *o = self.re[j * bp + b].to_f64();
+        }
+        let mut col = nr;
+        for j in nr..self.slots {
+            out[col] = self.re[j * bp + b].to_f64();
+            out[col + 1] = self.im[j * bp + b].to_f64();
+            col += 2;
         }
     }
 
@@ -97,9 +363,16 @@ impl BatchEsn {
     pub fn set_lane_state(&mut self, b: usize, s: &[f64]) {
         assert!(b < self.batch);
         assert_eq!(s.len(), self.engine.n());
-        let bsz = self.batch;
-        for (j, &v) in s.iter().enumerate() {
-            self.state[j * bsz + b] = v;
+        let bp = self.bpad;
+        let nr = self.n_real;
+        for (j, &v) in s[..nr].iter().enumerate() {
+            self.re[j * bp + b] = S::from_f64(v);
+        }
+        let mut col = nr;
+        for j in nr..self.slots {
+            self.re[j * bp + b] = S::from_f64(s[col]);
+            self.im[j * bp + b] = S::from_f64(s[col + 1]);
+            col += 2;
         }
     }
 
@@ -121,61 +394,74 @@ impl BatchEsn {
 
     fn step_inner(&mut self, u: &[f64], active: Option<&[bool]>) {
         let bsz = self.batch;
-        let e = &self.engine;
-        let d_in = e.d_in();
+        let bp = self.bpad;
+        let nr = self.n_real;
+        let slots = self.slots;
+        let d_in = self.d_in;
         debug_assert_eq!(u.len(), d_in * bsz);
-        let nr = e.n_real;
+        let Self {
+            re,
+            im,
+            u_pad,
+            lam_re,
+            lam_im,
+            win_re,
+            win_im,
+            ..
+        } = self;
+        // stage the inputs into the padded scratch (padding stays zero)
+        for d in 0..d_in {
+            let dst = &mut u_pad[d * bp..d * bp + bsz];
+            for (p, &v) in dst.iter_mut().zip(&u[d * bsz..(d + 1) * bsz]) {
+                *p = S::from_f64(v);
+            }
+        }
         if d_in == 1 {
             // fused single-input path — per lane this is exactly
-            // `QBasisEsn::step`'s d_in = 1 expression, so lanes are
+            // `QBasisEsn::step`'s d_in = 1 expression, so f64 lanes are
             // bit-identical to sequential runs
-            let row = e.win_q.row(0);
-            // real block
-            for j in 0..nr {
-                let lam = e.lam_real[j];
-                let w = row[j];
-                let s = &mut self.state[j * bsz..(j + 1) * bsz];
-                match active {
-                    None => {
-                        for (sb, &ub) in s.iter_mut().zip(&u[..bsz]) {
-                            *sb = *sb * lam + ub * w;
-                        }
+            match active {
+                None => {
+                    for j in 0..nr {
+                        kernels::fused_real(
+                            &mut re[j * bp..(j + 1) * bp],
+                            &u_pad[..bp],
+                            lam_re[j],
+                            win_re[j],
+                        );
                     }
-                    Some(mask) => {
+                    for j in nr..slots {
+                        kernels::fused_pair(
+                            &mut re[j * bp..(j + 1) * bp],
+                            &mut im[j * bp..(j + 1) * bp],
+                            &u_pad[..bp],
+                            lam_re[j],
+                            lam_im[j],
+                            win_re[j],
+                            win_im[j],
+                        );
+                    }
+                }
+                Some(mask) => {
+                    for j in 0..nr {
+                        let (lam, w) = (lam_re[j], win_re[j]);
+                        let s = &mut re[j * bp..(j + 1) * bp];
                         for b in 0..bsz {
                             if mask[b] {
-                                s[b] = s[b] * lam + u[b] * w;
+                                s[b] = s[b] * lam + u_pad[b] * w;
                             }
                         }
                     }
-                }
-            }
-            // complex pairs: buffer columns (nr + 2k, nr + 2k + 1)
-            let n_pairs = e.lam_cpx.len() / 2;
-            for k in 0..n_pairs {
-                let a = e.lam_cpx[2 * k];
-                let bb = e.lam_cpx[2 * k + 1];
-                let w0 = row[nr + 2 * k];
-                let w1 = row[nr + 2 * k + 1];
-                let base = (nr + 2 * k) * bsz;
-                let (res, ims) =
-                    self.state[base..base + 2 * bsz].split_at_mut(bsz);
-                match active {
-                    None => {
-                        for b in 0..bsz {
-                            let (re, im) = (res[b], ims[b]);
-                            let ub = u[b];
-                            res[b] = re * a - im * bb + ub * w0;
-                            ims[b] = re * bb + im * a + ub * w1;
-                        }
-                    }
-                    Some(mask) => {
+                    for j in nr..slots {
+                        let (a, bb) = (lam_re[j], lam_im[j]);
+                        let (w0, w1) = (win_re[j], win_im[j]);
+                        let rs = &mut re[j * bp..(j + 1) * bp];
+                        let is = &mut im[j * bp..(j + 1) * bp];
                         for b in 0..bsz {
                             if mask[b] {
-                                let (re, im) = (res[b], ims[b]);
-                                let ub = u[b];
-                                res[b] = re * a - im * bb + ub * w0;
-                                ims[b] = re * bb + im * a + ub * w1;
+                                let (r0, i0) = (rs[b], is[b]);
+                                rs[b] = r0 * a - i0 * bb + u_pad[b] * w0;
+                                is[b] = r0 * bb + i0 * a + u_pad[b] * w1;
                             }
                         }
                     }
@@ -185,38 +471,89 @@ impl BatchEsn {
         }
         // general path: Λ rotation pass, then one accumulation pass per
         // input dimension (mirrors QBasisEsn::step's general path)
-        for j in 0..nr {
-            let lam = e.lam_real[j];
-            let s = &mut self.state[j * bsz..(j + 1) * bsz];
-            for b in 0..bsz {
-                if active.map_or(true, |m| m[b]) {
-                    s[b] *= lam;
+        match active {
+            None => {
+                for j in 0..nr {
+                    kernels::scale(&mut re[j * bp..(j + 1) * bp], lam_re[j]);
+                }
+                for j in nr..slots {
+                    kernels::rot_pair(
+                        &mut re[j * bp..(j + 1) * bp],
+                        &mut im[j * bp..(j + 1) * bp],
+                        lam_re[j],
+                        lam_im[j],
+                    );
+                }
+            }
+            Some(mask) => {
+                for j in 0..nr {
+                    let lam = lam_re[j];
+                    let s = &mut re[j * bp..(j + 1) * bp];
+                    for b in 0..bsz {
+                        if mask[b] {
+                            s[b] *= lam;
+                        }
+                    }
+                }
+                for j in nr..slots {
+                    let (a, bb) = (lam_re[j], lam_im[j]);
+                    let rs = &mut re[j * bp..(j + 1) * bp];
+                    let is = &mut im[j * bp..(j + 1) * bp];
+                    for b in 0..bsz {
+                        if mask[b] {
+                            let (r0, i0) = (rs[b], is[b]);
+                            rs[b] = r0 * a - i0 * bb;
+                            is[b] = r0 * bb + i0 * a;
+                        }
+                    }
                 }
             }
         }
-        let n_pairs = e.lam_cpx.len() / 2;
-        for k in 0..n_pairs {
-            let a = e.lam_cpx[2 * k];
-            let bb = e.lam_cpx[2 * k + 1];
-            let base = (nr + 2 * k) * bsz;
-            let (res, ims) = self.state[base..base + 2 * bsz].split_at_mut(bsz);
-            for b in 0..bsz {
-                if active.map_or(true, |m| m[b]) {
-                    let (re, im) = (res[b], ims[b]);
-                    res[b] = re * a - im * bb;
-                    ims[b] = re * bb + im * a;
-                }
-            }
-        }
-        let n = e.n();
         for d in 0..d_in {
-            let row = e.win_q.row(d);
-            let ud = &u[d * bsz..(d + 1) * bsz];
-            for (j, &w) in row.iter().enumerate().take(n) {
-                let s = &mut self.state[j * bsz..(j + 1) * bsz];
-                for b in 0..bsz {
-                    if active.map_or(true, |m| m[b]) {
-                        s[b] += ud[b] * w;
+            let ud = &u_pad[d * bp..(d + 1) * bp];
+            match active {
+                None => {
+                    for j in 0..nr {
+                        kernels::axpy(
+                            &mut re[j * bp..(j + 1) * bp],
+                            ud,
+                            win_re[d * slots + j],
+                        );
+                    }
+                    for j in nr..slots {
+                        kernels::axpy(
+                            &mut re[j * bp..(j + 1) * bp],
+                            ud,
+                            win_re[d * slots + j],
+                        );
+                        kernels::axpy(
+                            &mut im[j * bp..(j + 1) * bp],
+                            ud,
+                            win_im[d * slots + j],
+                        );
+                    }
+                }
+                Some(mask) => {
+                    for j in 0..nr {
+                        let w = win_re[d * slots + j];
+                        let s = &mut re[j * bp..(j + 1) * bp];
+                        for b in 0..bsz {
+                            if mask[b] {
+                                s[b] += ud[b] * w;
+                            }
+                        }
+                    }
+                    for j in nr..slots {
+                        let (w0, w1) =
+                            (win_re[d * slots + j], win_im[d * slots + j]);
+                        let rs = &mut re[j * bp..(j + 1) * bp];
+                        let is = &mut im[j * bp..(j + 1) * bp];
+                        for b in 0..bsz {
+                            if mask[b] {
+                                rs[b] += ud[b] * w0;
+                                is[b] += ud[b] * w1;
+                            }
+                        }
                     }
                 }
             }
@@ -227,7 +564,7 @@ impl BatchEsn {
     /// lane, `D_in = 1`) without recording anything — the raw batched
     /// sweep, for benchmarking and warm-up.
     pub fn sweep(&mut self, u: &Mat) {
-        assert_eq!(self.engine.d_in(), 1, "sweep requires D_in = 1");
+        assert_eq!(self.d_in, 1, "sweep requires D_in = 1");
         assert_eq!(u.cols(), self.batch);
         for t in 0..u.rows() {
             self.step(u.row(t));
@@ -238,7 +575,7 @@ impl BatchEsn {
     /// each lane's `[T × N]` trajectory — the equivalence-testing path;
     /// serving should use [`Self::run_readout`] instead.
     pub fn run(&mut self, u: &Mat) -> Vec<Mat> {
-        assert_eq!(self.engine.d_in(), 1, "run requires D_in = 1");
+        assert_eq!(self.d_in, 1, "run requires D_in = 1");
         assert_eq!(u.cols(), self.batch);
         let t_len = u.rows();
         let bsz = self.batch;
@@ -247,10 +584,7 @@ impl BatchEsn {
         for t in 0..t_len {
             self.step(u.row(t));
             for (b, out) in outs.iter_mut().enumerate() {
-                let row = out.row_mut(t);
-                for (j, r) in row.iter_mut().enumerate() {
-                    *r = self.state[j * bsz + b];
-                }
+                self.lane_state(b, out.row_mut(t));
             }
         }
         outs
@@ -261,41 +595,65 @@ impl BatchEsn {
     /// `[T × (B·D_out)]` with lane-major grouping: lane `b`'s output `k`
     /// at time `t` is `y[(t, b·D_out + k)]`.
     ///
-    /// Per lane, both the step and the `bias-then-ascending-j`
-    /// accumulation order match [`QBasisEsn::run_readout`] exactly, so
-    /// batched serving is bit-identical to one-at-a-time serving.
+    /// The readout is downcast to `S` once per call ([`Self::run_readout_cast`]
+    /// skips even that); per lane, both the step and the
+    /// `bias-then-ascending-feature` accumulation order match
+    /// [`QBasisEsn::run_readout`] exactly, so f64 batched serving is
+    /// bit-identical to one-at-a-time serving.
     pub fn run_readout(&mut self, u: &Mat, ro: &Readout) -> Mat {
-        assert_eq!(self.engine.d_in(), 1, "run_readout requires D_in = 1");
+        self.run_readout_cast(u, &LaneReadout::new(ro))
+    }
+
+    /// [`Self::run_readout`] with a pre-cast readout — the allocation-free
+    /// form for callers that serve many rounds with one readout.
+    pub fn run_readout_cast(&mut self, u: &Mat, ro: &LaneReadout<S>) -> Mat {
+        assert_eq!(self.d_in, 1, "run_readout requires D_in = 1");
         assert_eq!(u.cols(), self.batch);
-        assert_eq!(ro.w.rows(), self.engine.n());
-        let d_out = ro.w.cols();
+        assert_eq!(ro.n, self.engine.n());
+        let d_out = ro.d_out;
         let t_len = u.rows();
         let bsz = self.batch;
-        let n = self.engine.n();
+        let bp = self.bpad;
+        let nr = self.n_real;
+        let slots = self.slots;
+        let w_s = &ro.w;
+        let b_s = &ro.b;
         let mut y = Mat::zeros(t_len, bsz * d_out);
+        // per-output-dim lane accumulators, padded like the state planes
+        let mut acc = vec![S::ZERO; d_out * bp];
         for t in 0..t_len {
             self.step(u.row(t));
-            let yr = y.row_mut(t);
             for k in 0..d_out {
-                let bias = ro.b[k];
-                for b in 0..bsz {
-                    yr[b * d_out + k] = bias;
+                acc[k * bp..(k + 1) * bp].fill(b_s[k]);
+            }
+            for k in 0..d_out {
+                let a = &mut acc[k * bp..(k + 1) * bp];
+                for j in 0..nr {
+                    kernels::axpy(
+                        a,
+                        &self.re[j * bp..(j + 1) * bp],
+                        w_s[j * d_out + k],
+                    );
+                }
+                let mut col = nr;
+                for j in nr..slots {
+                    kernels::axpy(
+                        a,
+                        &self.re[j * bp..(j + 1) * bp],
+                        w_s[col * d_out + k],
+                    );
+                    kernels::axpy(
+                        a,
+                        &self.im[j * bp..(j + 1) * bp],
+                        w_s[(col + 1) * d_out + k],
+                    );
+                    col += 2;
                 }
             }
-            for j in 0..n {
-                let s = &self.state[j * bsz..(j + 1) * bsz];
+            let yr = y.row_mut(t);
+            for b in 0..bsz {
                 for k in 0..d_out {
-                    let wjk = ro.w[(j, k)];
-                    if d_out == 1 {
-                        // contiguous lane accumulation (the serving case)
-                        for (yb, &sb) in yr.iter_mut().zip(s) {
-                            *yb += sb * wjk;
-                        }
-                    } else {
-                        for b in 0..bsz {
-                            yr[b * d_out + k] += s[b] * wjk;
-                        }
-                    }
+                    yr[b * d_out + k] = acc[k * bp + b].to_f64();
                 }
             }
         }
@@ -316,9 +674,19 @@ impl BatchEsn {
         reqs: &[(usize, &[f64])],
         ro: &Readout,
     ) -> Vec<Vec<f64>> {
-        assert_eq!(self.engine.d_in(), 1, "sweep_streams requires D_in = 1");
-        assert_eq!(ro.w.cols(), 1, "sweep_streams requires D_out = 1");
-        assert_eq!(ro.w.rows(), self.engine.n());
+        self.sweep_streams_cast(reqs, &LaneReadout::new(ro))
+    }
+
+    /// [`Self::sweep_streams`] with a pre-cast readout — the
+    /// allocation-free form for the per-round streaming hub.
+    pub fn sweep_streams_cast(
+        &mut self,
+        reqs: &[(usize, &[f64])],
+        ro: &LaneReadout<S>,
+    ) -> Vec<Vec<f64>> {
+        assert_eq!(self.d_in, 1, "sweep_streams requires D_in = 1");
+        assert_eq!(ro.d_out, 1, "sweep_streams requires D_out = 1");
+        assert_eq!(ro.n, self.engine.n());
         let bsz = self.batch;
         debug_assert!(
             {
@@ -331,13 +699,17 @@ impl BatchEsn {
             },
             "duplicate lane in one sweep"
         );
-        let n = self.engine.n();
+        let bp = self.bpad;
+        let nr = self.n_real;
+        let slots = self.slots;
+        let w_s = &ro.w;
+        let b0 = ro.b[0];
         let max_len = reqs.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
         let mut outs: Vec<Vec<f64>> = reqs
             .iter()
             .map(|(_, s)| Vec::with_capacity(s.len()))
             .collect();
-        let mut u = vec![0.0; bsz];
+        let mut u = vec![0.0f64; bsz];
         let mut active = vec![false; bsz];
         for t in 0..max_len {
             for &(lane, input) in reqs {
@@ -348,13 +720,19 @@ impl BatchEsn {
             self.step_masked(&u, &active);
             for (i, &(lane, input)) in reqs.iter().enumerate() {
                 if t < input.len() {
-                    // bias-first then ascending-j: the sequential
-                    // streaming path's exact accumulation order
-                    let mut acc = ro.b[0];
-                    for j in 0..n {
-                        acc += self.state[j * bsz + lane] * ro.w[(j, 0)];
+                    // bias-first then ascending feature index: the
+                    // sequential streaming path's exact accumulation order
+                    let mut acc = b0;
+                    for j in 0..nr {
+                        acc += self.re[j * bp + lane] * w_s[j];
                     }
-                    outs[i].push(acc);
+                    let mut col = nr;
+                    for j in nr..slots {
+                        acc += self.re[j * bp + lane] * w_s[col];
+                        acc += self.im[j * bp + lane] * w_s[col + 1];
+                        col += 2;
+                    }
+                    outs[i].push(acc.to_f64());
                 }
             }
         }
@@ -555,5 +933,98 @@ mod tests {
         let mut back = vec![0.0; batch.n()];
         batch.lane_state(2, &mut back);
         assert_eq!(back, s);
+    }
+
+    #[test]
+    fn soa_lane_state_roundtrip_exact_both_precisions() {
+        // the interleaved→SoA refactor is exactly where a stride bug would
+        // hide: gather(lane) → scatter(other engine, other lane) → gather
+        // must be bit-for-bit at BOTH precisions (f32→f64 widening is
+        // exact, and re-narrowing a widened f32 is the identity)
+        fn drive<S: Scalar>(e: &mut BatchEsn<S>, seed: u64) {
+            use crate::rng::Distributions;
+            let mut rng = Pcg64::seeded(seed);
+            for _ in 0..17 {
+                let u: Vec<f64> =
+                    (0..e.batch()).map(|_| rng.normal()).collect();
+                e.step(&u);
+            }
+        }
+        fn roundtrip<S: Scalar, T: Scalar>(q: &QBasisEsn) {
+            let n = q.n();
+            let mut a = BatchEsn::<S>::with_precision(q.clone(), 5);
+            drive(&mut a, 21);
+            let mut got = vec![0.0; n];
+            a.lane_state(3, &mut got);
+            assert!(got.iter().any(|v| *v != 0.0));
+            // scatter into a DIFFERENT lane of a DIFFERENT batch size
+            let mut b = BatchEsn::<T>::with_precision(q.clone(), 9);
+            drive(&mut b, 22); // non-zero background in every lane
+            b.set_lane_state(7, &got);
+            let mut back = vec![0.0; n];
+            b.lane_state(7, &mut back);
+            // T = S (or wider): the round-trip must be exact
+            assert_eq!(back, got);
+            // neighbours untouched by the scatter: still finite, and lane 0
+            // unchanged vs a fresh drive
+            let mut other = vec![0.0; n];
+            b.lane_state(6, &mut other);
+            assert!(other.iter().all(|v| v.is_finite()));
+        }
+        let q = qbasis(23, 1, 13); // odd N: both real slots and pairs
+        roundtrip::<f64, f64>(&q);
+        roundtrip::<f32, f32>(&q);
+        roundtrip::<f32, f64>(&q); // widening adoption is also exact
+    }
+
+    #[test]
+    fn f32_engine_tracks_f64_oracle_on_short_runs() {
+        // coarse smoke check here; the real error-budget harness lives in
+        // rust/tests/precision.rs
+        let q = qbasis(40, 1, 15);
+        let mut rng = Pcg64::seeded(16);
+        let b = 4;
+        let u = Mat::randn(50, b, &mut rng);
+        let ro = Readout {
+            w: Mat::randn(40, 1, &mut rng),
+            b: vec![0.3],
+        };
+        let mut e64 = BatchEsn::new(q.clone(), b);
+        let mut e32 = BatchEsn::<f32>::with_precision(q, b);
+        let y64 = e64.run_readout(&u, &ro);
+        let y32 = e32.run_readout(&u, &ro);
+        let scale = y64.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        for t in 0..50 {
+            for lane in 0..b {
+                let d = (y64[(t, lane)] - y32[(t, lane)]).abs();
+                assert!(
+                    d < 1e-3 * scale,
+                    "t={t} lane={lane} d={d} scale={scale}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn padding_lanes_stay_zero_and_unobservable() {
+        // batch = 3 pads to a full lane block; the pad region must remain
+        // exactly zero through fused, masked, and general-path steps
+        let q = qbasis(14, 1, 17);
+        let mut e = BatchEsn::<f32>::with_precision(q, 3);
+        e.step(&[1.0, -2.0, 0.5]);
+        e.step_masked(&[0.1, 0.2, 0.3], &[true, false, true]);
+        let (re, im) = e.planes();
+        let bpad = <f32 as Scalar>::LANES; // batch = 3 pads to one block
+        assert_eq!(re.len() % bpad, 0);
+        for (j, chunk) in re.chunks_exact(bpad).enumerate() {
+            for (b, v) in chunk.iter().enumerate().skip(3) {
+                assert_eq!(*v, 0.0, "re pad lane {b} of slot {j} moved");
+            }
+        }
+        for (j, chunk) in im.chunks_exact(bpad).enumerate() {
+            for (b, v) in chunk.iter().enumerate().skip(3) {
+                assert_eq!(*v, 0.0, "im pad lane {b} of slot {j} moved");
+            }
+        }
     }
 }

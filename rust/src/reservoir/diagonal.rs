@@ -321,6 +321,22 @@ impl DiagonalEsn {
         (lr, li, &self.win_re, &self.win_im)
     }
 
+    /// f32 split-plane export — the compiled HLO kernels' precision point
+    /// and the operand set of the native f32 lane engine:
+    /// `(lam_re, lam_im, win_re, win_im)` with the `[D_in × slots]` input
+    /// planes flattened row-major. The downcast mirrors what the f32
+    /// [`crate::reservoir::BatchEsn`] applies at construction, so the two
+    /// paths see identical parameters.
+    pub fn to_f32_planes(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let (lr, li) = self.spec.planes();
+        (
+            lr.iter().map(|&x| x as f32).collect(),
+            li.iter().map(|&x| x as f32).collect(),
+            self.win_re.data().iter().map(|&x| x as f32).collect(),
+            self.win_im.data().iter().map(|&x| x as f32).collect(),
+        )
+    }
+
     // ------------------------------------------------------------------
     // EWT readout transformation (Theorem 1 (i): [W_out]_Q = Q⁻¹ W_out)
     // ------------------------------------------------------------------
@@ -585,6 +601,29 @@ mod tests {
             .map(|(a, b)| a * a + b * b)
             .sum();
         assert!(energy < 1e-10, "energy={energy}");
+    }
+
+    #[test]
+    fn f32_planes_are_the_downcast_kernel_operands() {
+        let esn = dpg_esn(26, 11);
+        let (lr, li, wr, wi) = esn.kernel_operands();
+        let (lr32, li32, wr32, wi32) = esn.to_f32_planes();
+        assert_eq!(lr32.len(), lr.len());
+        assert_eq!(li32.len(), li.len());
+        assert_eq!(wr32.len(), wr.rows() * wr.cols());
+        assert_eq!(wi32.len(), wi.rows() * wi.cols());
+        for (a, b) in lr.iter().zip(&lr32) {
+            assert_eq!(*a as f32, *b);
+        }
+        for (a, b) in li.iter().zip(&li32) {
+            assert_eq!(*a as f32, *b);
+        }
+        for (a, b) in wr.data().iter().zip(&wr32) {
+            assert_eq!(*a as f32, *b);
+        }
+        for (a, b) in wi.data().iter().zip(&wi32) {
+            assert_eq!(*a as f32, *b);
+        }
     }
 
     #[test]

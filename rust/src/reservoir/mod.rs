@@ -7,9 +7,12 @@
 //!   features (Appendix A layout). Constructed either by diagonalizing a
 //!   standard ESN (EWT/EET paths, Theorem 1) or directly from DPG parts.
 //! * [`BatchEsn`] — the batched multi-sequence engine: B independent
-//!   states in a lane-major `[N × B]` interleaved layout, advanced through
-//!   one pass over `Λ` per step with a fused streaming readout — the
-//!   serving hot path (one λ-sweep amortized across B users).
+//!   states in SoA split planes `re/im [slots × B⁺]` (lane blocks padded
+//!   to the cache-line width), advanced through one pass over `Λ` per
+//!   step with a fused streaming readout — the serving hot path (one
+//!   λ-sweep amortized across B users). Precision-generic over
+//!   [`crate::num::Scalar`]: `f64` is the bit-exact oracle, `f32` doubles
+//!   SIMD width and lanes per cache line.
 //! * [`state_matrix`] — Theorem 5: input-weight-independent state matrix
 //!   `R(t)`, used to share state computations across the input-scaling
 //!   sweep of the grid search and for Appendix C's γ-reparametrization.
@@ -26,7 +29,7 @@ mod qbasis;
 mod standard;
 pub mod state_matrix;
 
-pub use batch::BatchEsn;
+pub use batch::{BatchEsn, LaneReadout};
 pub use config::EsnConfig;
 pub use diagonal::DiagonalEsn;
 pub use qbasis::QBasisEsn;

@@ -26,6 +26,27 @@
 //! bit-for-bit what a one-request-at-a-time server would produce (tested
 //! here and in `rust/tests/pipeline.rs`).
 //!
+//! The sweeper supports an **adaptive hold-off window** (opt-in via
+//! [`serve_with_holdoff`] / [`BatchFront::start_with_holdoff`]; [`serve`]
+//! drains immediately): when the queue is shallow it waits up to the
+//! configured microseconds for more jobs to coalesce; a batch-worthy
+//! queue (or shutdown) drains immediately. The window trades per-request
+//! latency on light request/response traffic for fewer, larger sweeps —
+//! worthwhile only when many clients arrive together. Queue depth, sweep
+//! count, hold-off, and engine precision are exported through `info`.
+//!
+//! ## Precision
+//!
+//! The hub (and every coalesced predict engine) runs at the model's
+//! [`Precision`]: `F64` is the bit-exact oracle path, `F32` serves from
+//! the f32 SoA lane engine — half the state traffic, twice the SIMD
+//! width, the compiled HLO kernels' precision point. The wire protocol is
+//! unchanged either way (JSON numbers are f64; f32→f64 widening is
+//! exact), and at `F32` every path — hub lane, local fallback, and
+//! [`Model::predict`] — runs the same f32 lane arithmetic, so responses
+//! stay consistent across paths. The error budget of the f32 engine
+//! against the f64 oracle is enforced in `rust/tests/precision.rs`.
+//!
 //! Every path is fused (state → readout each step): the request path does
 //! `O(N + N·D_out)` work per step and never materializes a `[T × N]`
 //! trajectory. Connections beyond the hub's lane capacity fall back to a
@@ -33,14 +54,16 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::linalg::Mat;
 use crate::readout::Readout;
-use crate::reservoir::{BatchEsn, DiagonalEsn, QBasisEsn};
+use crate::reservoir::{BatchEsn, DiagonalEsn, LaneReadout, QBasisEsn};
 use crate::util::json::{parse, Json};
 use crate::util::Timer;
 
@@ -49,28 +72,138 @@ const MAX_PREDICT_BATCH: usize = 32;
 /// Streaming-state lanes in the persistent hub (connections beyond this
 /// fall back to local per-connection state).
 const STREAM_LANES: usize = 64;
+/// Queue depth at which the sweeper skips the hold-off and drains
+/// immediately — the "under load" threshold.
+const HOLDOFF_DRAIN_DEPTH: usize = 4;
+
+/// Native engine precision of the serving path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Bit-exact oracle path (default).
+    F64,
+    /// f32 SoA lane engine: 2× lanes per cache line / SIMD width; see
+    /// `rust/tests/precision.rs` for the error budget vs the oracle.
+    F32,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
 
 /// A servable model: reservoir + trained readout + the interleaved-layout
-/// serving twin ([`QBasisEsn`]) that the fused request path runs on.
+/// serving twin ([`QBasisEsn`]) that the fused request path runs on, plus
+/// the [`Precision`] every serving engine is built at.
 pub struct Model {
     pub esn: DiagonalEsn,
     pub qesn: QBasisEsn,
     pub readout: Readout,
+    pub precision: Precision,
 }
 
 impl Model {
-    /// Build the serving bundle (derives the Appendix-A engine from `esn`).
+    /// Build the serving bundle at the oracle precision (derives the
+    /// Appendix-A engine from `esn`).
     pub fn new(esn: DiagonalEsn, readout: Readout) -> Self {
+        Self::with_precision(esn, readout, Precision::F64)
+    }
+
+    /// Build the serving bundle at an explicit precision.
+    pub fn with_precision(
+        esn: DiagonalEsn,
+        readout: Readout,
+        precision: Precision,
+    ) -> Self {
         let qesn = QBasisEsn::from_diagonal(&esn);
-        Self { esn, qesn, readout }
+        Self {
+            esn,
+            qesn,
+            readout,
+            precision,
+        }
     }
 
     /// Stateless sequence prediction through the fused streaming readout
-    /// — `O(N + N·D_out)` per step, no `[T × N]` materialization.
+    /// — `O(N + N·D_out)` per step, no `[T × N]` materialization. Runs at
+    /// the model's precision with the exact arithmetic of the batched
+    /// serving path, so batching stays invisible at every precision.
     pub fn predict(&self, input: &[f64]) -> Vec<f64> {
-        let u = Mat::from_rows(input.len(), 1, input);
-        let y = self.qesn.run_readout(&u, &self.readout);
-        (0..y.rows()).map(|t| y[(t, 0)]).collect()
+        match self.precision {
+            Precision::F64 => {
+                let u = Mat::from_rows(input.len(), 1, input);
+                let y = self.qesn.run_readout(&u, &self.readout);
+                (0..y.rows()).map(|t| y[(t, 0)]).collect()
+            }
+            Precision::F32 => {
+                // mirror the front's per-lane arithmetic exactly (lane
+                // results are position/batch-size independent, so a
+                // 1-lane engine is bit-identical to any hub lane)
+                let mut engine =
+                    BatchEsn::<f32>::with_precision(self.qesn.clone(), 1);
+                if self.readout.w.cols() == 1 {
+                    let mut outs = engine
+                        .sweep_streams(&[(0, input)], &self.readout);
+                    outs.pop().unwrap_or_default()
+                } else {
+                    let u = Mat::from_rows(input.len(), 1, input);
+                    let y = engine.run_readout(&u, &self.readout);
+                    (0..y.rows()).map(|t| y[(t, 0)]).collect()
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// precision-dispatched lane engine
+// ---------------------------------------------------------------------------
+
+/// A [`BatchEsn`] at the model's serving precision, paired with the
+/// readout pre-cast to that precision so per-round sweeps stay
+/// allocation-free. All `BatchEsn` APIs are f64 at the boundary, so
+/// dispatch is a plain match.
+enum Hub {
+    F64(BatchEsn<f64>, LaneReadout<f64>),
+    F32(BatchEsn<f32>, LaneReadout<f32>),
+}
+
+impl Hub {
+    fn new(model: &Model, lanes: usize) -> Self {
+        match model.precision {
+            Precision::F64 => Hub::F64(
+                BatchEsn::new(model.qesn.clone(), lanes),
+                LaneReadout::new(&model.readout),
+            ),
+            Precision::F32 => Hub::F32(
+                BatchEsn::<f32>::with_precision(model.qesn.clone(), lanes),
+                LaneReadout::new(&model.readout),
+            ),
+        }
+    }
+
+    fn sweep_streams(&mut self, reqs: &[(usize, &[f64])]) -> Vec<Vec<f64>> {
+        match self {
+            Hub::F64(e, ro) => e.sweep_streams_cast(reqs, ro),
+            Hub::F32(e, ro) => e.sweep_streams_cast(reqs, ro),
+        }
+    }
+
+    fn run_readout(&mut self, u: &Mat) -> Mat {
+        match self {
+            Hub::F64(e, ro) => e.run_readout_cast(u, ro),
+            Hub::F32(e, ro) => e.run_readout_cast(u, ro),
+        }
+    }
+
+    fn reset_lane(&mut self, lane: usize) {
+        match self {
+            Hub::F64(e, _) => e.reset_lane(lane),
+            Hub::F32(e, _) => e.reset_lane(lane),
+        }
     }
 }
 
@@ -108,11 +241,25 @@ pub struct BatchFront {
     cv: Condvar,
     free_lanes: Mutex<Vec<usize>>,
     sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Coalescing window: with a shallow queue the sweeper waits up to
+    /// this long for more jobs before draining; zero = drain immediately.
+    holdoff: Duration,
+    /// Total sweep rounds drained (metrics; exported via `info`).
+    sweeps: AtomicU64,
 }
 
 impl BatchFront {
-    /// Spawn the sweeper and return the shared front.
+    /// Spawn the sweeper and return the shared front (no hold-off: every
+    /// wake drains immediately — the legacy behavior).
     pub fn start(model: Arc<Model>) -> Arc<Self> {
+        Self::start_with_holdoff(model, 0)
+    }
+
+    /// Spawn the sweeper with an adaptive micro-batch hold-off window:
+    /// when fewer than a handful of jobs are queued, the sweeper waits up
+    /// to `holdoff_us` µs for more to coalesce; under load (queue already
+    /// batch-worthy) or on shutdown it drains immediately.
+    pub fn start_with_holdoff(model: Arc<Model>, holdoff_us: u64) -> Arc<Self> {
         let front = Arc::new(Self {
             model,
             state: Mutex::new(FrontState {
@@ -123,6 +270,8 @@ impl BatchFront {
             // lane 0 handed out first
             free_lanes: Mutex::new((0..STREAM_LANES).rev().collect()),
             sweeper: Mutex::new(None),
+            holdoff: Duration::from_micros(holdoff_us),
+            sweeps: AtomicU64::new(0),
         });
         let worker = Arc::clone(&front);
         let handle = std::thread::Builder::new()
@@ -182,8 +331,19 @@ impl BatchFront {
         self.free_lanes.lock().unwrap().push(lane);
     }
 
+    /// Current queued-job count (metrics; exported via `info`).
+    pub fn queue_depth(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    /// Total sweep rounds drained so far (metrics; exported via `info`).
+    pub fn sweep_count(&self) -> u64 {
+        self.sweeps.load(Ordering::Relaxed)
+    }
+
     /// Stateless prediction through the batch queue. Falls back to a
-    /// direct (bit-identical) computation if the sweeper is gone.
+    /// direct (bit-identical, same-precision) computation if the sweeper
+    /// is gone.
     pub fn predict(&self, input: Vec<f64>) -> Vec<f64> {
         let (tx, rx) = mpsc::channel();
         let queued = self.submit(FrontJob::Predict {
@@ -226,13 +386,38 @@ impl BatchFront {
     }
 
     fn sweeper_loop(&self) {
-        // persistent streaming hub: one lane per connection
-        let mut hub = BatchEsn::new(self.model.qesn.clone(), STREAM_LANES);
+        // persistent streaming hub, one lane per connection, at the
+        // model's precision
+        let mut hub = Hub::new(&self.model, STREAM_LANES);
         loop {
             let drained = {
                 let mut st = self.state.lock().unwrap();
                 loop {
                     if !st.jobs.is_empty() {
+                        // shallow queue: hold off briefly so concurrent
+                        // requests coalesce into one sweep; deep queue or
+                        // shutdown: drain now
+                        if !self.holdoff.is_zero()
+                            && st.jobs.len() < HOLDOFF_DRAIN_DEPTH
+                            && !st.shutdown
+                        {
+                            let start = Instant::now();
+                            while st.jobs.len() < HOLDOFF_DRAIN_DEPTH
+                                && !st.shutdown
+                            {
+                                match self.holdoff.checked_sub(start.elapsed())
+                                {
+                                    None => break,
+                                    Some(left) => {
+                                        let (guard, _) = self
+                                            .cv
+                                            .wait_timeout(st, left)
+                                            .unwrap();
+                                        st = guard;
+                                    }
+                                }
+                            }
+                        }
                         break std::mem::take(&mut st.jobs);
                     }
                     if st.shutdown {
@@ -241,6 +426,7 @@ impl BatchFront {
                     st = self.cv.wait(st).unwrap();
                 }
             };
+            self.sweeps.fetch_add(1, Ordering::Relaxed);
             self.process(&mut hub, drained);
         }
     }
@@ -249,7 +435,7 @@ impl BatchFront {
     /// stream/reset jobs are grouped into rounds that preserve per-lane
     /// submission order (lanes are independent, so cross-lane reordering
     /// is unobservable).
-    fn process(&self, hub: &mut BatchEsn, drained: Vec<FrontJob>) {
+    fn process(&self, hub: &mut Hub, drained: Vec<FrontJob>) {
         let mut predicts: Vec<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
         let mut round: Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
         let mut in_round = [false; STREAM_LANES];
@@ -257,7 +443,7 @@ impl BatchFront {
         let flush_round =
             |round: &mut Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)>,
              in_round: &mut [bool; STREAM_LANES],
-             hub: &mut BatchEsn| {
+             hub: &mut Hub| {
                 if round.is_empty() {
                     return;
                 }
@@ -265,7 +451,7 @@ impl BatchFront {
                     .iter()
                     .map(|(lane, input, _)| (*lane, input.as_slice()))
                     .collect();
-                let outs = hub.sweep_streams(&reqs, &self.model.readout);
+                let outs = hub.sweep_streams(&reqs);
                 for ((_, _, reply), out) in round.drain(..).zip(outs) {
                     let _ = reply.send(out);
                 }
@@ -297,14 +483,14 @@ impl BatchFront {
         }
         flush_round(&mut round, &mut in_round, hub);
 
-        // predicts: stateless — one fresh BatchEsn sweep per chunk
+        // predicts: stateless — one fresh precision-matched engine per chunk
         let d_out = self.model.readout.w.cols();
         let mut start = 0;
         while start < predicts.len() {
             let chunk = &predicts[start..(start + MAX_PREDICT_BATCH).min(predicts.len())];
             start += chunk.len();
             let k = chunk.len();
-            let mut engine = BatchEsn::new(self.model.qesn.clone(), k);
+            let mut engine = Hub::new(&self.model, k);
             if d_out == 1 {
                 // masked sweep: exhausted lanes freeze, so a short request
                 // never pays for the longest one in its batch
@@ -313,7 +499,7 @@ impl BatchFront {
                     .enumerate()
                     .map(|(b, (input, _))| (b, input.as_slice()))
                     .collect();
-                let outs = engine.sweep_streams(&reqs, &self.model.readout);
+                let outs = engine.sweep_streams(&reqs);
                 for ((_, reply), out) in chunk.iter().zip(outs) {
                     let _ = reply.send(out);
                 }
@@ -327,7 +513,7 @@ impl BatchFront {
                         u[(t, b)] = v;
                     }
                 }
-                let y = engine.run_readout(&u, &self.model.readout);
+                let y = engine.run_readout(&u);
                 for (b, (input, reply)) in chunk.iter().enumerate() {
                     let out: Vec<f64> =
                         (0..input.len()).map(|t| y[(t, b * d_out)]).collect();
@@ -344,12 +530,29 @@ impl BatchFront {
 
 /// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks; one
 /// lightweight handler thread per connection, all funneling into the
-/// shared [`BatchFront`]. `max_requests` bounds the total connections
-/// accepted (tests / examples) — all of them are joined before returning;
-/// `None` runs forever.
+/// shared [`BatchFront`] with immediate drain (no hold-off — the
+/// latency-safe default; high-concurrency deployments that prefer
+/// deeper coalescing use [`serve_with_holdoff`]). `max_requests` bounds
+/// the total connections accepted (tests / examples) — all of them are
+/// joined before returning; `None` runs forever.
 pub fn serve(model: Arc<Model>, addr: &str, max_requests: Option<usize>) -> Result<()> {
+    serve_with_holdoff(model, addr, max_requests, 0)
+}
+
+/// [`serve`] with an explicit sweeper hold-off window (µs): with a
+/// shallow queue the sweeper waits up to the window for more requests to
+/// coalesce into one sweep. This trades up to `holdoff_us` of latency on
+/// lightly-loaded request/response traffic for fewer, larger sweeps when
+/// many clients arrive together; a batch-worthy queue always drains
+/// immediately.
+pub fn serve_with_holdoff(
+    model: Arc<Model>,
+    addr: &str,
+    max_requests: Option<usize>,
+    holdoff_us: u64,
+) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
-    let front = BatchFront::start(model);
+    let front = BatchFront::start_with_holdoff(model, holdoff_us);
     let mut served = 0usize;
     let mut handles = Vec::new();
     let mut accept_err: Option<anyhow::Error> = None;
@@ -387,10 +590,20 @@ pub fn serve(model: Arc<Model>, addr: &str, max_requests: Option<usize>) -> Resu
     }
 }
 
-/// Per-connection fallback streaming state (used when the hub is full).
+/// Per-connection fallback streaming state at the oracle precision (used
+/// when the hub is full and the model serves `F64`).
 struct LocalStream {
     s_re: Vec<f64>,
     s_im: Vec<f64>,
+}
+
+/// Hub-less streaming state at the model's precision: the `F64` form is
+/// the legacy split-plane walk; the `F32` form is a 1-lane f32 engine
+/// with its pre-cast readout (bit-identical to an f32 hub lane — lane
+/// results are batch-size independent — and allocation-free per round).
+enum LocalFallback {
+    F64(LocalStream),
+    F32(BatchEsn<f32>, LaneReadout<f32>),
 }
 
 /// Per-connection streaming identity: a hub lane is acquired LAZILY on
@@ -401,18 +614,33 @@ struct LocalStream {
 struct ConnState {
     lane: Option<usize>,
     hub_denied: bool,
-    local: LocalStream,
+    /// Built lazily on the first hub-denied `stream` op — predict-only
+    /// connections (and connections that win a hub lane) never pay for it.
+    local: Option<LocalFallback>,
+}
+
+/// Construct the hub-less streaming state at the model's precision.
+fn local_fallback(model: &Model) -> LocalFallback {
+    match model.precision {
+        Precision::F64 => {
+            let slots = model.esn.spec.slots();
+            LocalFallback::F64(LocalStream {
+                s_re: vec![0.0f64; slots],
+                s_im: vec![0.0f64; slots],
+            })
+        }
+        Precision::F32 => LocalFallback::F32(
+            BatchEsn::<f32>::with_precision(model.qesn.clone(), 1),
+            LaneReadout::new(&model.readout),
+        ),
+    }
 }
 
 fn handle_connection(front: Arc<BatchFront>, stream: TcpStream) -> Result<()> {
-    let slots = front.model.esn.spec.slots();
     let mut conn = ConnState {
         lane: None,
         hub_denied: false,
-        local: LocalStream {
-            s_re: vec![0.0f64; slots],
-            s_im: vec![0.0f64; slots],
-        },
+        local: None,
     };
     let result = serve_lines(&front, &mut conn, stream);
     if let Some(l) = conn.lane {
@@ -467,6 +695,13 @@ fn handle_request(
                 "spectral_radius",
                 Json::Num(model.esn.spec.radius()),
             ),
+            ("precision", Json::Str(model.precision.name().into())),
+            ("queue_depth", Json::Num(front.queue_depth() as f64)),
+            ("sweeps", Json::Num(front.sweep_count() as f64)),
+            (
+                "holdoff_us",
+                Json::Num(front.holdoff.as_micros() as f64),
+            ),
             ("stream_lane", match conn.lane {
                 Some(l) => Json::Num(l as f64),
                 None => Json::Null,
@@ -502,7 +737,20 @@ fn handle_request(
             }
             let outs = match conn.lane {
                 Some(l) => front.stream(l, input)?,
-                None => stream_local(model, &input, &mut conn.local),
+                None => {
+                    let local = conn
+                        .local
+                        .get_or_insert_with(|| local_fallback(model));
+                    match local {
+                        LocalFallback::F64(ls) => {
+                            stream_local(model, &input, ls)
+                        }
+                        LocalFallback::F32(engine, ro) => engine
+                            .sweep_streams_cast(&[(0, input.as_slice())], ro)
+                            .pop()
+                            .unwrap_or_default(),
+                    }
+                }
             };
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -513,16 +761,17 @@ fn handle_request(
             if let Some(l) = conn.lane {
                 front.reset(l)?;
             }
-            conn.local.s_re.fill(0.0);
-            conn.local.s_im.fill(0.0);
+            // dropping the lazy fallback IS the reset: it is rebuilt from
+            // the zero state on the next hub-denied stream op
+            conn.local = None;
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
         other => Err(anyhow!("unknown op {other:?}")),
     }
 }
 
-/// Hub-less streaming fallback: same arithmetic (and therefore the same
-/// bits) as a hub lane, on connection-local slot planes.
+/// Hub-less f64 streaming fallback: same arithmetic (and therefore the
+/// same bits) as a hub lane, on connection-local slot planes.
 fn stream_local(model: &Model, input: &[f64], local: &mut LocalStream) -> Vec<f64> {
     let n = model.esn.n();
     let mut outs = Vec::with_capacity(input.len());
@@ -625,6 +874,11 @@ mod tests {
         let y = task.target_mat(100..400);
         let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity).unwrap();
         Model::new(esn, readout)
+    }
+
+    fn make_model_f32() -> Model {
+        let m = make_model();
+        Model::with_precision(m.esn, m.readout, Precision::F32)
     }
 
     #[test]
@@ -747,6 +1001,135 @@ mod tests {
             .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
             .unwrap();
         assert_eq!(resp.get("n").unwrap().as_usize(), Some(30));
+        drop(client);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn f32_front_predict_matches_f32_model_predict_bitwise() {
+        // precision consistency contract: at F32 every path (coalesced
+        // sweep, fallback, Model::predict) runs the same f32 lane
+        // arithmetic, so responses stay bit-identical across paths
+        let model = Arc::new(make_model_f32());
+        assert_eq!(model.precision, Precision::F32);
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(2);
+        for i in 0..5 {
+            let input = task.input[i * 13..i * 13 + 30 + i].to_vec();
+            let batched = front.predict(input.clone());
+            let direct = model.predict(&input);
+            assert_eq!(batched.len(), direct.len());
+            for (a, b) in batched.iter().zip(&direct) {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "f32 batched predict must be bit-identical: {a} vs {b}"
+                );
+            }
+            // and the f32 result is close to (but generally not equal to)
+            // the f64 oracle
+            let oracle = {
+                let u = Mat::from_rows(input.len(), 1, &input);
+                let y = model.qesn.run_readout(&u, &model.readout);
+                (0..y.rows()).map(|t| y[(t, 0)]).collect::<Vec<f64>>()
+            };
+            let scale =
+                oracle.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+            for (a, b) in batched.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-3 * scale, "{a} vs oracle {b}");
+            }
+        }
+        front.shutdown();
+    }
+
+    #[test]
+    fn f32_hub_streaming_matches_single_lane_f32_reference() {
+        let model = Arc::new(make_model_f32());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let lane = front.acquire_lane().unwrap();
+        let input = &task.input[..48];
+        let mut got = front.stream(lane, input[..17].to_vec()).unwrap();
+        got.extend(front.stream(lane, input[17..].to_vec()).unwrap());
+        // reference: a private 1-lane f32 engine (the F32 local fallback)
+        let mut reference =
+            BatchEsn::<f32>::with_precision(model.qesn.clone(), 1);
+        let want = reference
+            .sweep_streams(&[(0, input)], &model.readout)
+            .pop()
+            .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() == 0.0,
+                "f32 hub lane diverged from 1-lane reference at t={t}: {a} vs {b}"
+            );
+        }
+        front.release_lane(lane);
+        front.shutdown();
+    }
+
+    #[test]
+    fn holdoff_front_coalesces_and_counts_sweeps() {
+        let model = Arc::new(make_model());
+        // generous hold-off so concurrently-submitted jobs coalesce
+        let front = BatchFront::start_with_holdoff(Arc::clone(&model), 2_000);
+        let task = MsoTask::new(2);
+        let inputs: Vec<Vec<f64>> = (0..3)
+            .map(|i| task.input[i * 11..i * 11 + 25 + i].to_vec())
+            .collect();
+        let mut workers = Vec::new();
+        for input in inputs {
+            let f = Arc::clone(&front);
+            let m = Arc::clone(&model);
+            workers.push(std::thread::spawn(move || {
+                let got = f.predict(input.clone());
+                let want = m.predict(&input);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() == 0.0);
+                }
+            }));
+        }
+        for w in workers {
+            w.join().unwrap();
+        }
+        // all replies delivered ⇒ at least one sweep ran; with the
+        // hold-off they usually coalesce into exactly one
+        assert!(front.sweep_count() >= 1);
+        assert_eq!(front.queue_depth(), 0);
+        front.shutdown();
+    }
+
+    #[test]
+    fn info_reports_precision_and_sweeper_metrics() {
+        let model = Arc::new(make_model_f32());
+        let addr = "127.0.0.1:47417";
+        let server_model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve(server_model, addr, Some(1)).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut client = Client::connect(addr).unwrap();
+        let task = MsoTask::new(1);
+        // drive at least one sweep through the front
+        let out = client.predict(&task.input[..20]).unwrap();
+        assert_eq!(out.len(), 20);
+        let resp = client
+            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            resp.get("precision").and_then(Json::as_str),
+            Some("f32")
+        );
+        assert!(resp.get("sweeps").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(resp.get("queue_depth").and_then(Json::as_f64).is_some());
+        // serve() runs with immediate drain; the hold-off is opt-in via
+        // serve_with_holdoff / start_with_holdoff
+        assert_eq!(
+            resp.get("holdoff_us").and_then(Json::as_f64),
+            Some(0.0)
+        );
         drop(client);
         handle.join().unwrap();
     }

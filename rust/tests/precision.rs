@@ -1,0 +1,319 @@
+//! The f32 lane engine vs the f64 oracle — error-budget harness and SoA
+//! layout properties (randomized via the property harness).
+//!
+//! ## Error-budget model
+//!
+//! The f32 engine differs from the oracle through (a) one-time parameter
+//! rounding of `(Λ, [W_in]_Q, W_out)` and (b) per-step arithmetic
+//! rounding, both ~`ε₃₂ = 2⁻²³` relative. A relative eigenvalue
+//! perturbation `ε` reaches the state amplified by the effective memory
+//! horizon `min(T, (1−|λ|max)⁻¹)` — beyond the horizon the contraction
+//! forgets old rounding as fast as new rounding arrives, so the error
+//! saturates. The fused readout folds the feature error through
+//! `Σ|w_j·f_j|` (no cancellation credit is taken). The asserted bounds:
+//!
+//! ```text
+//! |f32_feat − f64_feat|  ≤ C·ε₃₂·H·max|feat|          H = min(T, (1−ρ)⁻¹)
+//! |f32_y    − f64_y|     ≤ C·ε₃₂·(H + √N)·max_t Σ_j |w_j·f_j(t)| + |b|·ε₃₂·C
+//! ```
+//!
+//! with `C = 32` margin. Both scale with `T·(1−|λ|max)⁻¹` in the regime
+//! where `T` is below the horizon, and saturate past it.
+
+use linear_reservoir::linalg::Mat;
+use linear_reservoir::readout::Readout;
+use linear_reservoir::reservoir::{BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn};
+use linear_reservoir::rng::{Distributions, Pcg64};
+use linear_reservoir::spectral::uniform::uniform_spectrum;
+use linear_reservoir::testing::check;
+
+const EPS32: f64 = f32::EPSILON as f64;
+const C_BOUND: f64 = 32.0;
+
+fn qbasis(n: usize, rho: f64, seed: u64) -> QBasisEsn {
+    let config = EsnConfig::default().with_n(n).with_seed(seed);
+    let mut rng = Pcg64::new(seed, 150);
+    let spec = uniform_spectrum(n, rho, &mut rng);
+    let diag = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+    QBasisEsn::from_diagonal(&diag)
+}
+
+fn column(u: &Mat, b: usize) -> Mat {
+    let col: Vec<f64> = (0..u.rows()).map(|t| u[(t, b)]).collect();
+    Mat::from_rows(u.rows(), 1, &col)
+}
+
+/// Effective memory horizon `min(T, (1−ρ)⁻¹)` of the error recursion.
+fn horizon(t_len: usize, rho: f64) -> f64 {
+    (1.0 / (1.0 - rho)).min(t_len as f64)
+}
+
+#[test]
+fn prop_f32_features_within_error_budget_of_f64_oracle() {
+    check("f32 features ≤ budget vs f64", 12, |rng| {
+        let n = 16 + rng.next_below(120) as usize;
+        let rho = rng.uniform(0.5, 0.95);
+        let b = 1 + rng.next_below(6) as usize;
+        let t_len = 200;
+        let q = qbasis(n, rho, rng.next_u64());
+        let u = Mat::randn(t_len, b, rng);
+        let mut e32 = BatchEsn::<f32>::with_precision(q.clone(), b);
+        e32.sweep(&u);
+        let budget = C_BOUND * EPS32 * horizon(t_len, rho);
+        let mut feat32 = vec![0.0; n];
+        for lane in 0..b {
+            let oracle = q.run(&column(&u, lane)); // [T × N] f64 features
+            e32.lane_state(lane, &mut feat32);
+            let fscale = oracle
+                .data()
+                .iter()
+                .fold(1e-30f64, |m, x| m.max(x.abs()));
+            let last = oracle.row(t_len - 1);
+            let mut worst = 0.0f64;
+            for (a, bfeat) in feat32.iter().zip(last) {
+                worst = worst.max((a - bfeat).abs());
+            }
+            let rel = worst / fscale;
+            if rel > budget {
+                return Err(format!(
+                    "n={n} ρ={rho:.3} lane={lane}: rel feature error \
+                     {rel:.3e} > budget {budget:.3e}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_f32_readout_within_error_budget_of_f64_oracle() {
+    check("f32 readout ≤ budget vs f64", 12, |rng| {
+        let n = 16 + rng.next_below(120) as usize;
+        let rho = rng.uniform(0.5, 0.95);
+        let b = 1 + rng.next_below(4) as usize;
+        let t_len = 200;
+        let q = qbasis(n, rho, rng.next_u64());
+        let ro = Readout {
+            w: Mat::randn(n, 1, rng),
+            b: vec![rng.normal()],
+        };
+        let u = Mat::randn(t_len, b, rng);
+        let mut e32 = BatchEsn::<f32>::with_precision(q.clone(), b);
+        let y32 = e32.run_readout(&u, &ro);
+        let hor = horizon(t_len, rho);
+        for lane in 0..b {
+            let u1 = column(&u, lane);
+            let want = q.run_readout(&u1, &ro); // f64 oracle outputs
+            let feats = q.run(&u1); // for the conditioning factor
+            // amplitude the rounding passes through: max_t Σ_j |w_j·f_j|
+            let mut amp = 0.0f64;
+            for t in 0..t_len {
+                let row = feats.row(t);
+                let mut s = ro.b[0].abs();
+                for (j, &f) in row.iter().enumerate() {
+                    s += (f * ro.w[(j, 0)]).abs();
+                }
+                amp = amp.max(s);
+            }
+            let budget =
+                C_BOUND * EPS32 * (hor + (n as f64).sqrt()) * amp.max(1e-30);
+            let mut worst = 0.0f64;
+            for t in 0..t_len {
+                worst = worst.max((y32[(t, lane)] - want[(t, 0)]).abs());
+            }
+            if worst > budget {
+                return Err(format!(
+                    "n={n} ρ={rho:.3} lane={lane}: abs readout error \
+                     {worst:.3e} > budget {budget:.3e} (amp {amp:.3e})"
+                ));
+            }
+            if y32.row(t_len - 1).iter().any(|v| !v.is_finite()) {
+                return Err(format!("n={n} lane={lane}: non-finite output"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_budget_scales_with_contraction_horizon() {
+    // sanity of the budget MODEL itself: a fast-forgetting spectrum
+    // (ρ = 0.3) must land an order of magnitude under the slow-spectrum
+    // budget — i.e. the horizon term is doing real work, the bound is not
+    // just a huge constant
+    check("budget scales with (1−ρ)⁻¹", 6, |rng| {
+        let n = 40 + rng.next_below(40) as usize;
+        let t_len = 150;
+        let rho = 0.3;
+        let q = qbasis(n, rho, rng.next_u64());
+        let u = Mat::randn(t_len, 1, rng);
+        let mut e32 = BatchEsn::<f32>::with_precision(q.clone(), 1);
+        e32.sweep(&u);
+        let oracle = q.run(&u);
+        let mut feat32 = vec![0.0; n];
+        e32.lane_state(0, &mut feat32);
+        let fscale = oracle
+            .data()
+            .iter()
+            .fold(1e-30f64, |m, x| m.max(x.abs()));
+        let mut worst = 0.0f64;
+        for (a, bfeat) in feat32.iter().zip(oracle.row(t_len - 1)) {
+            worst = worst.max((a - bfeat).abs());
+        }
+        let rel = worst / fscale;
+        // tight-spectrum budget (the ρ = 0.95 horizon would be 20; here
+        // the horizon is ~1.4, so the same C must still cover it)
+        let budget = C_BOUND * EPS32 * horizon(t_len, rho);
+        if rel > budget {
+            return Err(format!(
+                "n={n}: rel {rel:.3e} > tight budget {budget:.3e}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// SoA layout properties (both precisions)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_inactive_masked_step_is_a_noop_both_precisions() {
+    check("step_masked(all-inactive) is a no-op", 8, |rng| {
+        let n = 8 + rng.next_below(40) as usize;
+        let b = 1 + rng.next_below(9) as usize;
+        let q = qbasis(n, rng.uniform(0.3, 0.95), rng.next_u64());
+
+        fn run_case<S: linear_reservoir::num::Scalar>(
+            q: &QBasisEsn,
+            b: usize,
+            rng: &mut Pcg64,
+        ) -> Result<(), String> {
+            let n = q.n();
+            let mut e = BatchEsn::<S>::with_precision(q.clone(), b);
+            // warm every lane to a non-trivial state
+            for _ in 0..12 {
+                let u: Vec<f64> = (0..b).map(|_| rng.normal()).collect();
+                e.step(&u);
+            }
+            let before: Vec<Vec<f64>> = (0..b)
+                .map(|lane| {
+                    let mut s = vec![0.0; n];
+                    e.lane_state(lane, &mut s);
+                    s
+                })
+                .collect();
+            let inactive = vec![false; b];
+            for _ in 0..5 {
+                let u: Vec<f64> = (0..b).map(|_| rng.normal() * 100.0).collect();
+                e.step_masked(&u, &inactive);
+            }
+            for (lane, want) in before.iter().enumerate() {
+                let mut after = vec![0.0; n];
+                e.lane_state(lane, &mut after);
+                if after != *want {
+                    return Err(format!(
+                        "{} lane {lane} moved under an all-inactive mask",
+                        S::NAME
+                    ));
+                }
+            }
+            Ok(())
+        }
+
+        run_case::<f64>(&q, b, rng)?;
+        run_case::<f32>(&q, b, rng)
+    });
+}
+
+#[test]
+fn prop_lane_results_independent_of_batch_position_both_precisions() {
+    // THE SoA invariant: a lane's trajectory depends only on its own
+    // input, never on its position in the planes or on the batch size —
+    // bit-for-bit, at both precisions (this is what makes the F32 serving
+    // paths mutually consistent)
+    check("lane ⊥ batch position", 8, |rng| {
+        let n = 8 + rng.next_below(40) as usize;
+        let t_len = 30;
+        let q = qbasis(n, rng.uniform(0.3, 0.95), rng.next_u64());
+        let input = Mat::randn(t_len, 1, rng);
+        let ro = Readout {
+            w: Mat::randn(n, 1, rng),
+            b: vec![rng.normal()],
+        };
+        let b1 = 1 + rng.next_below(10) as usize;
+        let b2 = 1 + rng.next_below(10) as usize;
+        let p1 = rng.next_below(b1 as u64) as usize;
+        let p2 = rng.next_below(b2 as u64) as usize;
+
+        fn outputs_at<S: linear_reservoir::num::Scalar>(
+            q: &QBasisEsn,
+            input: &Mat,
+            ro: &Readout,
+            batch: usize,
+            pos: usize,
+            rng: &mut Pcg64,
+        ) -> Vec<f64> {
+            let t_len = input.rows();
+            // distinct noise in every other lane so cross-talk would show
+            let mut u = Mat::randn(t_len, batch, rng);
+            for t in 0..t_len {
+                u[(t, pos)] = input[(t, 0)];
+            }
+            let mut e = BatchEsn::<S>::with_precision(q.clone(), batch);
+            let y = e.run_readout(&u, ro);
+            (0..t_len).map(|t| y[(t, pos)]).collect()
+        }
+
+        fn case<S: linear_reservoir::num::Scalar>(
+            q: &QBasisEsn,
+            input: &Mat,
+            ro: &Readout,
+            (b1, p1): (usize, usize),
+            (b2, p2): (usize, usize),
+            rng: &mut Pcg64,
+        ) -> Result<(), String> {
+            let a = outputs_at::<S>(q, input, ro, b1, p1, rng);
+            let b = outputs_at::<S>(q, input, ro, b2, p2, rng);
+            for (t, (x, y)) in a.iter().zip(&b).enumerate() {
+                if x != y {
+                    return Err(format!(
+                        "{}: lane output differs by position at t={t}: \
+                         ({b1},{p1}) → {x} vs ({b2},{p2}) → {y}",
+                        S::NAME
+                    ));
+                }
+            }
+            Ok(())
+        }
+
+        case::<f64>(&q, &input, &ro, (b1, p1), (b2, p2), rng)?;
+        case::<f32>(&q, &input, &ro, (b1, p1), (b2, p2), rng)
+    });
+}
+
+#[test]
+fn f32_wire_values_roundtrip_exactly_through_f64_json_boundary() {
+    // the server's wire contract: f32-computed outputs cross the JSON
+    // boundary as f64 — widening then re-narrowing must be the identity,
+    // so the wire loses nothing
+    let q = qbasis(30, 0.9, 99);
+    let mut rng = Pcg64::seeded(100);
+    let ro = Readout {
+        w: Mat::randn(30, 1, &mut rng),
+        b: vec![0.2],
+    };
+    let u = Mat::randn(60, 2, &mut rng);
+    let mut e = BatchEsn::<f32>::with_precision(q, 2);
+    let y = e.run_readout(&u, &ro);
+    for t in 0..60 {
+        for lane in 0..2 {
+            let wide = y[(t, lane)]; // f64 at the API boundary
+            assert_eq!(
+                (wide as f32) as f64,
+                wide,
+                "f32-computed value not exactly representable at the wire"
+            );
+        }
+    }
+}

@@ -2,8 +2,10 @@
 # Tier-1 verification + perf snapshot in one command:
 #   scripts/verify.sh
 # Runs the release build, the full test suite, and the quick reservoir
-# bench, leaving a machine-readable perf snapshot in
-# BENCH_reservoir_run.json (the perf-trajectory artifact).
+# bench (which includes the f32/f64 precision-ladder rows), leaving a
+# machine-readable perf snapshot in BENCH_reservoir_run.json (the
+# perf-trajectory artifact). Fails if the precision rows are missing,
+# non-finite, or report zero throughput.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,5 +17,53 @@ cargo test -q
 
 echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json =="
 cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json
+
+echo "== bench sanity: precision rows present, finite, non-zero throughput =="
+if command -v python3 >/dev/null 2>&1; then
+  python3 - <<'EOF'
+import json, math, sys
+
+doc = json.load(open("BENCH_reservoir_run.json"))
+rows = {r.get("name"): r for r in doc.get("results", [])}
+required = [
+    "f32_batch8_N1000", "f64_batch8_N1000",
+    "f32_batch64_N1000", "f64_batch64_N1000",
+    "derived_precision_batch8_N1000", "derived_precision_batch64_N1000",
+]
+for name in required:
+    if name not in rows:
+        sys.exit(f"FAIL: missing bench row {name}")
+for name, row in rows.items():
+    for key, val in row.items():
+        if isinstance(val, float):
+            if not math.isfinite(val):
+                sys.exit(f"FAIL: non-finite {key} in row {name}: {val}")
+            if key.endswith("steps_per_sec") and val <= 0:
+                sys.exit(f"FAIL: zero throughput {key} in row {name}")
+            if key == "median_s" and val <= 0:
+                sys.exit(f"FAIL: zero-time bench row {name}")
+for b in (8, 64):
+    d = rows[f"derived_precision_batch{b}_N1000"]
+    print(f"  batch{b}: f32 {d['f32_steps_per_sec']:.3e} steps/s, "
+          f"f64 {d['f64_steps_per_sec']:.3e} steps/s, "
+          f"speedup {d['f32_speedup']:.2f}x")
+print("bench rows OK")
+EOF
+else
+  # minimal fallback when python3 is absent: rows exist, nothing NaN/inf
+  for row in f32_batch8_N1000 f64_batch8_N1000 f32_batch64_N1000 f64_batch64_N1000; do
+    grep -q "\"$row\"" BENCH_reservoir_run.json \
+      || { echo "FAIL: missing bench row $row"; exit 1; }
+  done
+  if grep -qiE '(nan|inf)' BENCH_reservoir_run.json; then
+    echo "FAIL: non-finite value in BENCH_reservoir_run.json"; exit 1
+  fi
+  # the JSON writer prints integral values without decimals, so a zero
+  # throughput is exactly `0` before the comma/EOL (0.97 must NOT match)
+  if grep -qE 'steps_per_sec": *(0(,|$)|-)' BENCH_reservoir_run.json; then
+    echo "FAIL: zero throughput row in BENCH_reservoir_run.json"; exit 1
+  fi
+  echo "bench rows OK (grep fallback)"
+fi
 
 echo "verify OK"
