@@ -2,8 +2,10 @@
 //! dense vs sparse vs diagonal engines (Table 2's compute budget), plus
 //! the serving-path rows: fused streaming readout vs materialize-then-
 //! matmul, the batched multi-sequence engine vs the one-sequence-at-
-//! a-time loop (states/sec across the batch), and the precision ladder:
-//! f32 vs f64 SoA lane engines at the serving point (N=1000, B∈{8,64}).
+//! a-time loop (states/sec across the batch), the precision ladder:
+//! f32 vs f64 SoA lane engines at the serving point (N=1000, B∈{8,64}),
+//! and the shard-per-core serving rows: aggregate predict throughput
+//! through a ShardedFront at 1/2/4 shards (B=64 concurrent requests).
 //!
 //! Run: `cargo bench --bench reservoir_run [-- --quick] [--json <path>]`
 //! `--json` writes machine-readable results (bench rows + derived
@@ -16,8 +18,11 @@ use linear_reservoir::reservoir::{
     BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn,
 };
 use linear_reservoir::rng::Pcg64;
+use linear_reservoir::server::{Model, ShardedFront};
 use linear_reservoir::spectral::uniform::uniform_spectrum;
 use linear_reservoir::util::json::Json;
+
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -187,6 +192,73 @@ fn main() {
                 ("f32_speedup", Json::Num(speedup)),
             ]));
         }
+    }
+
+    // --- shard-per-core serving: aggregate predict throughput -----------
+    // B = 64 concurrent stateless predicts dealt across S sweepers, each
+    // coalescing its share into masked batch sweeps. One sweeper is
+    // single-core by design, so aggregate steps/sec should scale with
+    // shard count until the cores (or memory bandwidth) run out; on a
+    // 1-vCPU container the rows still exist but the scaling is ≈1x.
+    {
+        let n = 1000;
+        let bsz = 64usize;
+        println!("sharded serving, N = {n}, B = {bsz}, T = {t_len}");
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(9, 112);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let model = Arc::new(Model::new(diag, readout));
+        let inputs: Vec<Vec<f64>> = (0..bsz)
+            .map(|_| Mat::randn(t_len, 1, &mut rng).data().to_vec())
+            .collect();
+        let mut sps = Vec::new();
+        for &s in &[1usize, 2, 4] {
+            let front = ShardedFront::start(Arc::clone(&model), s);
+            let r = bench(&format!("sharded{s}_batch{bsz}_N{n}"), cfg, || {
+                // submit the whole burst before collecting, so each
+                // shard's sweeper coalesces its share into batch sweeps
+                let replies: Vec<_> = inputs
+                    .iter()
+                    .map(|i| {
+                        front.predict_async(i.clone()).expect("sweeper alive")
+                    })
+                    .collect();
+                for rx in replies {
+                    std::hint::black_box(rx.recv().unwrap());
+                }
+            });
+            front.shutdown();
+            let steps = (bsz * t_len) as f64;
+            let shard_sps = steps / r.per_iter.median;
+            println!("  shards={s}: {:.3e} aggregate steps/s", shard_sps);
+            push(&mut rows, &r);
+            sps.push(shard_sps);
+        }
+        let base = sps[0];
+        println!(
+            "  scaling: 2 shards {:.2}x, 4 shards {:.2}x (vs 1 shard)\n",
+            sps[1] / base,
+            sps[2] / base
+        );
+        rows.push(Json::obj(vec![
+            (
+                "name",
+                Json::Str(format!("derived_sharded_batch{bsz}_N{n}")),
+            ),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("batch", Json::Num(bsz as f64)),
+            ("t", Json::Num(t_len as f64)),
+            ("sharded1_steps_per_sec", Json::Num(sps[0])),
+            ("sharded2_steps_per_sec", Json::Num(sps[1])),
+            ("sharded4_steps_per_sec", Json::Num(sps[2])),
+            ("speedup_2_shards", Json::Num(sps[1] / base)),
+            ("speedup_4_shards", Json::Num(sps[2] / base)),
+        ]));
     }
 
     if let Some(path) = json_path {

@@ -89,5 +89,11 @@ fn main() -> anyhow::Result<()> {
         f32_diff = f32_diff.max((y32[t] - y_stream[(t, 0)]).abs());
     }
     println!("f32 serving engine within {f32_diff:.1e} of the f64 oracle");
+
+    // 9. Deploying: `server::serve(Arc::new(serving), addr, None)` shards
+    //    the front one sweeper per core automatically (each with its own
+    //    64-lane streaming hub and pooled predict engines); the CLI twin
+    //    is `repro serve --shards N` (`0`/omitted = one per core, `1` =
+    //    the single-front behavior, bit-identical responses either way).
     Ok(())
 }

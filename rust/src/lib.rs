@@ -25,14 +25,17 @@
 //! [`reservoir`] mirror the compiled graphs and are used for
 //! cross-validation and for shapes that have no artifact.
 //!
-//! The serving path is batched, fused, and precision-generic:
-//! [`reservoir::BatchEsn`] advances B independent sequences in SoA split
-//! planes through one pass over `Λ` per step at `f64` (the bit-exact
-//! oracle) or `f32` (2× SIMD width, the compiled kernels' precision —
-//! [`num::Scalar`]), and the `run_readout` family folds `y = f·W_out + b`
-//! into the sweep so requests never materialize a `[T × N]` trajectory
-//! ([`server`] builds its micro-batching front on both and selects the
-//! precision per [`server::Model`]).
+//! The serving path is batched, fused, precision-generic, and sharded
+//! per core: [`reservoir::BatchEsn`] advances B independent sequences in
+//! SoA split planes through one pass over `Λ` per step at `f64` (the
+//! bit-exact oracle) or `f32` (2× SIMD width, the compiled kernels'
+//! precision — [`num::Scalar`]), and the `run_readout` family folds
+//! `y = f·W_out + b` into the sweep so requests never materialize a
+//! `[T × N]` trajectory. [`server`] runs one micro-batching
+//! [`server::BatchFront`] sweeper per core behind a
+//! [`server::ShardedFront`] (connections hash to a home shard, stateless
+//! predicts go to the least-loaded one), selecting the precision per
+//! [`server::Model`] — `cores × B` lanes, no locks on the hot path.
 //!
 //! The offline build environment provides no general-purpose crates, so the
 //! substrates are all local: [`rng`], [`linalg`] (including a from-scratch

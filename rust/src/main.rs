@@ -12,7 +12,7 @@
 //! repro ablation-noise | ablation-eigvec | ablation-gamma
 //! repro e2e    [--k 5] [--n 100]
 //! repro serve  [--addr 127.0.0.1:7878] [--k 5] [--n 100] [--f32]
-//!              [--holdoff-us 0]
+//!              [--holdoff-us 0] [--shards 0]   # 0 = one per core
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -214,7 +214,7 @@ fn dispatch(args: &Args) -> Result<()> {
             use linear_reservoir::readout::{fit, Regularizer};
             use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
             use linear_reservoir::rng::Pcg64;
-            use linear_reservoir::server::{serve_with_holdoff, Model, Precision};
+            use linear_reservoir::server::{serve_sharded, Model, Precision};
             use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
             use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
             use std::sync::Arc;
@@ -243,15 +243,26 @@ fn dispatch(args: &Args) -> Result<()> {
             // --holdoff-us: opt-in sweeper coalescing window (0 = drain
             // immediately)
             let holdoff_us = args.get_u64("holdoff-us", 0)?;
+            // --shards: sweepers (one hub + engine pool each); 0 = one
+            // per available core; 1 = the single-front legacy behavior
+            let shards = match args.get_usize("shards", 0)? {
+                0 => None,
+                s => Some(s),
+            };
             println!(
-                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs) on {addr} …",
-                precision.name()
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}) on {addr} …",
+                precision.name(),
+                match shards {
+                    Some(s) => s.to_string(),
+                    None => "auto".into(),
+                }
             );
-            serve_with_holdoff(
+            serve_sharded(
                 Arc::new(Model::with_precision(esn, readout, precision)),
                 addr,
                 None,
                 holdoff_us,
+                shards,
             )
         }
         "all" => {

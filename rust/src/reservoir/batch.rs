@@ -38,7 +38,9 @@
 //! per lane with zero `[T × N]` trajectory materialization. The masked
 //! step ([`BatchEsn::step_masked`] / [`BatchEsn::sweep_streams`]) lets the
 //! server coalesce per-connection streaming states of different lengths
-//! into the same sweep: frozen lanes are skipped, active lanes advance.
+//! into the same sweep: frozen lanes keep their exact bits through a
+//! branchless per-lane select (so a loaded hub vectorizes like the
+//! unmasked path), active lanes advance.
 //!
 //! All public APIs stay `f64` at the boundary (inputs, readouts, gathered
 //! lane states); `f32 → f64` widening is exact, so gather/scatter
@@ -56,6 +58,12 @@ use super::QBasisEsn;
 /// practice). Build with `--features plain-kernel` to A/B against the
 /// naive scalar loops — both forms compute the identical expression per
 /// element, so results are bit-for-bit the same.
+///
+/// The `*_masked` variants are branchless selects (`mask ? new : old` per
+/// lane): the updated value is computed for every lane and kept only
+/// where the mask is on, so the loaded-hub case (most lanes active)
+/// vectorizes like the unmasked path. Frozen lanes keep their exact bits
+/// — the select keeps the stored value, never a recomputation.
 mod kernels {
     use crate::num::Scalar;
 
@@ -142,6 +150,134 @@ mod kernels {
         }
     }
 
+    /// Masked [`fused_real`]: `s[b] = m[b] ? s[b]·lam + u[b]·w : s[b]`.
+    ///
+    /// Branchless select form — the new value is computed for EVERY lane
+    /// and discarded where the mask is off, so a loaded hub (most lanes
+    /// active) vectorizes like the unmasked path instead of branching per
+    /// lane. Frozen lanes keep their exact bits: the select keeps the old
+    /// value itself, never a recomputation of it.
+    #[cfg(not(feature = "plain-kernel"))]
+    #[inline(always)]
+    pub fn fused_real_masked<S: Scalar>(
+        s: &mut [S],
+        u: &[S],
+        m: &[bool],
+        lam: S,
+        w: S,
+    ) {
+        debug_assert_eq!(s.len(), u.len());
+        debug_assert_eq!(s.len(), m.len());
+        let mut sc = s.chunks_exact_mut(S::LANES);
+        let mut uc = u.chunks_exact(S::LANES);
+        let mut mc = m.chunks_exact(S::LANES);
+        for ((sv, uv), mv) in (&mut sc).zip(&mut uc).zip(&mut mc) {
+            for k in 0..S::LANES {
+                let new = sv[k] * lam + uv[k] * w;
+                sv[k] = if mv[k] { new } else { sv[k] };
+            }
+        }
+        for ((sb, &ub), &mb) in sc
+            .into_remainder()
+            .iter_mut()
+            .zip(uc.remainder())
+            .zip(mc.remainder())
+        {
+            let new = *sb * lam + ub * w;
+            *sb = if mb { new } else { *sb };
+        }
+    }
+
+    #[cfg(feature = "plain-kernel")]
+    #[inline(always)]
+    pub fn fused_real_masked<S: Scalar>(
+        s: &mut [S],
+        u: &[S],
+        m: &[bool],
+        lam: S,
+        w: S,
+    ) {
+        debug_assert_eq!(s.len(), u.len());
+        debug_assert_eq!(s.len(), m.len());
+        for ((sb, &ub), &mb) in s.iter_mut().zip(u).zip(m) {
+            let new = *sb * lam + ub * w;
+            *sb = if mb { new } else { *sb };
+        }
+    }
+
+    /// Masked [`fused_pair`]: select form of the 2×2 rotation-scaling +
+    /// input-add (same bit-exactness contract as [`fused_real_masked`]).
+    #[cfg(not(feature = "plain-kernel"))]
+    #[inline(always)]
+    pub fn fused_pair_masked<S: Scalar>(
+        re: &mut [S],
+        im: &mut [S],
+        u: &[S],
+        m: &[bool],
+        a: S,
+        b: S,
+        w0: S,
+        w1: S,
+    ) {
+        debug_assert_eq!(re.len(), im.len());
+        debug_assert_eq!(re.len(), u.len());
+        debug_assert_eq!(re.len(), m.len());
+        let mut rc = re.chunks_exact_mut(S::LANES);
+        let mut ic = im.chunks_exact_mut(S::LANES);
+        let mut uc = u.chunks_exact(S::LANES);
+        let mut mc = m.chunks_exact(S::LANES);
+        for (((rv, iv), uv), mv) in
+            (&mut rc).zip(&mut ic).zip(&mut uc).zip(&mut mc)
+        {
+            for k in 0..S::LANES {
+                let (r0, i0) = (rv[k], iv[k]);
+                let nr = r0 * a - i0 * b + uv[k] * w0;
+                let ni = r0 * b + i0 * a + uv[k] * w1;
+                rv[k] = if mv[k] { nr } else { r0 };
+                iv[k] = if mv[k] { ni } else { i0 };
+            }
+        }
+        for (((rb, ib), &ub), &mb) in rc
+            .into_remainder()
+            .iter_mut()
+            .zip(ic.into_remainder().iter_mut())
+            .zip(uc.remainder())
+            .zip(mc.remainder())
+        {
+            let (r0, i0) = (*rb, *ib);
+            let nr = r0 * a - i0 * b + ub * w0;
+            let ni = r0 * b + i0 * a + ub * w1;
+            *rb = if mb { nr } else { r0 };
+            *ib = if mb { ni } else { i0 };
+        }
+    }
+
+    #[cfg(feature = "plain-kernel")]
+    #[inline(always)]
+    pub fn fused_pair_masked<S: Scalar>(
+        re: &mut [S],
+        im: &mut [S],
+        u: &[S],
+        m: &[bool],
+        a: S,
+        b: S,
+        w0: S,
+        w1: S,
+    ) {
+        debug_assert_eq!(re.len(), im.len());
+        debug_assert_eq!(re.len(), u.len());
+        debug_assert_eq!(re.len(), m.len());
+        for (((rb, ib), &ub), &mb) in
+            re.iter_mut().zip(im.iter_mut()).zip(u).zip(m)
+        {
+            let (r0, i0) = (*rb, *ib);
+            let nr = r0 * a - i0 * b + ub * w0;
+            let ni = r0 * b + i0 * a + ub * w1;
+            *rb = if mb { nr } else { r0 };
+            *ib = if mb { ni } else { i0 };
+        }
+    }
+
     /// `s[b] *= lam` — rotation pass, real slot (general `d_in` path).
     #[inline(always)]
     pub fn scale<S: Scalar>(s: &mut [S], lam: S) {
@@ -158,6 +294,47 @@ mod kernels {
             let (r0, i0) = (*rb, *ib);
             *rb = r0 * a - i0 * b;
             *ib = r0 * b + i0 * a;
+        }
+    }
+
+    /// Masked [`scale`]: `s[b] = m[b] ? s[b]·lam : s[b]` (select form).
+    #[inline(always)]
+    pub fn scale_masked<S: Scalar>(s: &mut [S], m: &[bool], lam: S) {
+        debug_assert_eq!(s.len(), m.len());
+        for (sb, &mb) in s.iter_mut().zip(m) {
+            let new = *sb * lam;
+            *sb = if mb { new } else { *sb };
+        }
+    }
+
+    /// Masked [`rot_pair`]: select form of the 2×2 rotation-scaling.
+    #[inline(always)]
+    pub fn rot_pair_masked<S: Scalar>(
+        re: &mut [S],
+        im: &mut [S],
+        m: &[bool],
+        a: S,
+        b: S,
+    ) {
+        debug_assert_eq!(re.len(), im.len());
+        debug_assert_eq!(re.len(), m.len());
+        for ((rb, ib), &mb) in re.iter_mut().zip(im.iter_mut()).zip(m) {
+            let (r0, i0) = (*rb, *ib);
+            let nr = r0 * a - i0 * b;
+            let ni = r0 * b + i0 * a;
+            *rb = if mb { nr } else { r0 };
+            *ib = if mb { ni } else { i0 };
+        }
+    }
+
+    /// Masked [`axpy`]: `acc[b] = m[b] ? acc[b] + x[b]·w : acc[b]`.
+    #[inline(always)]
+    pub fn axpy_masked<S: Scalar>(acc: &mut [S], x: &[S], m: &[bool], w: S) {
+        debug_assert_eq!(acc.len(), x.len());
+        debug_assert_eq!(acc.len(), m.len());
+        for ((ab, &xb), &mb) in acc.iter_mut().zip(x).zip(m) {
+            let new = *ab + xb * w;
+            *ab = if mb { new } else { *ab };
         }
     }
 
@@ -212,6 +389,9 @@ pub struct BatchEsn<S: Scalar = f64> {
     im: Vec<S>,
     /// Padded per-step input scratch `[d_in × bpad]` (padding stays zero).
     u_pad: Vec<S>,
+    /// Padded per-step activity mask `[bpad]` for the branchless masked
+    /// kernels (padding lanes stay `false`, so they keep their zeros).
+    mask_pad: Vec<bool>,
 }
 
 impl BatchEsn<f64> {
@@ -296,6 +476,7 @@ impl<S: Scalar> BatchEsn<S> {
             re: vec![S::ZERO; slots * bpad],
             im: vec![S::ZERO; slots * bpad],
             u_pad: vec![S::ZERO; d_in * bpad],
+            mask_pad: vec![false; bpad],
         }
     }
 
@@ -403,6 +584,7 @@ impl<S: Scalar> BatchEsn<S> {
             re,
             im,
             u_pad,
+            mask_pad,
             lam_re,
             lam_im,
             win_re,
@@ -415,6 +597,14 @@ impl<S: Scalar> BatchEsn<S> {
             for (p, &v) in dst.iter_mut().zip(&u[d * bsz..(d + 1) * bsz]) {
                 *p = S::from_f64(v);
             }
+        }
+        // stage the mask into the padded scratch (padding stays false, so
+        // padding lanes select their old zeros). The masked kernels are
+        // branchless — `mask ? new : old` per lane — so a loaded hub
+        // vectorizes like the unmasked path; frozen lanes keep their exact
+        // bits because the select keeps the stored value itself.
+        if let Some(mask) = active {
+            mask_pad[..bsz].copy_from_slice(mask);
         }
         if d_in == 1 {
             // fused single-input path — per lane this is exactly
@@ -442,28 +632,27 @@ impl<S: Scalar> BatchEsn<S> {
                         );
                     }
                 }
-                Some(mask) => {
+                Some(_) => {
                     for j in 0..nr {
-                        let (lam, w) = (lam_re[j], win_re[j]);
-                        let s = &mut re[j * bp..(j + 1) * bp];
-                        for b in 0..bsz {
-                            if mask[b] {
-                                s[b] = s[b] * lam + u_pad[b] * w;
-                            }
-                        }
+                        kernels::fused_real_masked(
+                            &mut re[j * bp..(j + 1) * bp],
+                            &u_pad[..bp],
+                            &mask_pad[..bp],
+                            lam_re[j],
+                            win_re[j],
+                        );
                     }
                     for j in nr..slots {
-                        let (a, bb) = (lam_re[j], lam_im[j]);
-                        let (w0, w1) = (win_re[j], win_im[j]);
-                        let rs = &mut re[j * bp..(j + 1) * bp];
-                        let is = &mut im[j * bp..(j + 1) * bp];
-                        for b in 0..bsz {
-                            if mask[b] {
-                                let (r0, i0) = (rs[b], is[b]);
-                                rs[b] = r0 * a - i0 * bb + u_pad[b] * w0;
-                                is[b] = r0 * bb + i0 * a + u_pad[b] * w1;
-                            }
-                        }
+                        kernels::fused_pair_masked(
+                            &mut re[j * bp..(j + 1) * bp],
+                            &mut im[j * bp..(j + 1) * bp],
+                            &u_pad[..bp],
+                            &mask_pad[..bp],
+                            lam_re[j],
+                            lam_im[j],
+                            win_re[j],
+                            win_im[j],
+                        );
                     }
                 }
             }
@@ -485,27 +674,22 @@ impl<S: Scalar> BatchEsn<S> {
                     );
                 }
             }
-            Some(mask) => {
+            Some(_) => {
                 for j in 0..nr {
-                    let lam = lam_re[j];
-                    let s = &mut re[j * bp..(j + 1) * bp];
-                    for b in 0..bsz {
-                        if mask[b] {
-                            s[b] *= lam;
-                        }
-                    }
+                    kernels::scale_masked(
+                        &mut re[j * bp..(j + 1) * bp],
+                        &mask_pad[..bp],
+                        lam_re[j],
+                    );
                 }
                 for j in nr..slots {
-                    let (a, bb) = (lam_re[j], lam_im[j]);
-                    let rs = &mut re[j * bp..(j + 1) * bp];
-                    let is = &mut im[j * bp..(j + 1) * bp];
-                    for b in 0..bsz {
-                        if mask[b] {
-                            let (r0, i0) = (rs[b], is[b]);
-                            rs[b] = r0 * a - i0 * bb;
-                            is[b] = r0 * bb + i0 * a;
-                        }
-                    }
+                    kernels::rot_pair_masked(
+                        &mut re[j * bp..(j + 1) * bp],
+                        &mut im[j * bp..(j + 1) * bp],
+                        &mask_pad[..bp],
+                        lam_re[j],
+                        lam_im[j],
+                    );
                 }
             }
         }
@@ -533,27 +717,28 @@ impl<S: Scalar> BatchEsn<S> {
                         );
                     }
                 }
-                Some(mask) => {
+                Some(_) => {
                     for j in 0..nr {
-                        let w = win_re[d * slots + j];
-                        let s = &mut re[j * bp..(j + 1) * bp];
-                        for b in 0..bsz {
-                            if mask[b] {
-                                s[b] += ud[b] * w;
-                            }
-                        }
+                        kernels::axpy_masked(
+                            &mut re[j * bp..(j + 1) * bp],
+                            ud,
+                            &mask_pad[..bp],
+                            win_re[d * slots + j],
+                        );
                     }
                     for j in nr..slots {
-                        let (w0, w1) =
-                            (win_re[d * slots + j], win_im[d * slots + j]);
-                        let rs = &mut re[j * bp..(j + 1) * bp];
-                        let is = &mut im[j * bp..(j + 1) * bp];
-                        for b in 0..bsz {
-                            if mask[b] {
-                                rs[b] += ud[b] * w0;
-                                is[b] += ud[b] * w1;
-                            }
-                        }
+                        kernels::axpy_masked(
+                            &mut re[j * bp..(j + 1) * bp],
+                            ud,
+                            &mask_pad[..bp],
+                            win_re[d * slots + j],
+                        );
+                        kernels::axpy_masked(
+                            &mut im[j * bp..(j + 1) * bp],
+                            ud,
+                            &mask_pad[..bp],
+                            win_im[d * slots + j],
+                        );
                     }
                 }
             }
@@ -1003,6 +1188,84 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fully_active_masked_step_bit_identical_to_unmasked() {
+        // the branchless select form must compute the exact unmasked
+        // expression when every lane is on — at both precisions and on
+        // both the fused (d_in = 1) and general (d_in > 1) paths
+        fn check<S: Scalar>(d_in: usize, seed: u64) {
+            use crate::rng::Distributions;
+            let q = qbasis(19, d_in, seed);
+            let b = 5;
+            let mut masked = BatchEsn::<S>::with_precision(q.clone(), b);
+            let mut plain = BatchEsn::<S>::with_precision(q, b);
+            let all_on = vec![true; b];
+            let mut rng = Pcg64::seeded(seed ^ 0xabc);
+            for _ in 0..23 {
+                let u: Vec<f64> =
+                    (0..d_in * b).map(|_| rng.normal()).collect();
+                masked.step_masked(&u, &all_on);
+                plain.step(&u);
+            }
+            let (mre, mim) = masked.planes();
+            let (pre, pim) = plain.planes();
+            assert_eq!(mre, pre, "re planes diverged (d_in={d_in})");
+            assert_eq!(mim, pim, "im planes diverged (d_in={d_in})");
+        }
+        check::<f64>(1, 31);
+        check::<f32>(1, 32);
+        check::<f64>(3, 33);
+        check::<f32>(3, 34);
+    }
+
+    #[test]
+    fn masked_general_path_freezes_and_advances_exactly() {
+        // d_in > 1 masked path (scale/rot/axpy selects): frozen lanes are
+        // bit-frozen, active lanes exactly match a solo engine
+        use crate::rng::Distributions;
+        let d_in = 2;
+        let q = qbasis(15, d_in, 41);
+        let b = 3;
+        let mut batch = BatchEsn::new(q.clone(), b);
+        let mut solo = BatchEsn::new(q, 1);
+        let mut rng = Pcg64::seeded(42);
+        // warm all lanes with shared inputs (lane-major [d × B])
+        for _ in 0..5 {
+            let per_lane: Vec<f64> = (0..d_in).map(|_| rng.normal()).collect();
+            let mut u = vec![0.0; d_in * b];
+            for d in 0..d_in {
+                for lane in 0..b {
+                    u[d * b + lane] = per_lane[d];
+                }
+            }
+            batch.step(&u);
+            solo.step(&per_lane);
+        }
+        let mut frozen = vec![0.0; batch.n()];
+        batch.lane_state(1, &mut frozen);
+        // advance lanes 0 and 2 only, same fresh inputs for both
+        let active = [true, false, true];
+        for _ in 0..9 {
+            let per_lane: Vec<f64> = (0..d_in).map(|_| rng.normal()).collect();
+            let mut u = vec![0.0; d_in * b];
+            for d in 0..d_in {
+                for lane in 0..b {
+                    u[d * b + lane] = per_lane[d];
+                }
+            }
+            batch.step_masked(&u, &active);
+            solo.step(&per_lane);
+        }
+        let mut after = vec![0.0; batch.n()];
+        batch.lane_state(1, &mut after);
+        assert_eq!(frozen, after, "frozen lane moved on the general path");
+        let mut moved = vec![0.0; batch.n()];
+        batch.lane_state(0, &mut moved);
+        let mut want = vec![0.0; batch.n()];
+        solo.lane_state(0, &mut want);
+        assert_eq!(moved, want, "active lane diverged from solo engine");
     }
 
     #[test]

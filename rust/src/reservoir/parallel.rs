@@ -18,35 +18,46 @@
 //! value is the verified ALGORITHM (work O(T·N), depth O(T/C + #chunks)),
 //! mirroring the Pallas `assoc_scan` kernel so both sides of the stack
 //! implement Appendix B.
+//!
+//! The scan is **precision-generic** over [`Scalar`] (the same trait the
+//! batched lane engine uses): [`run_parallel_prec`] /
+//! [`run_parallel_batch_prec`] downcast `(Λ, [W_in]_P)` once and run
+//! every chunk scan, summary composition, and fix-up at `S` — so the
+//! training path can generate states at the f32 kernel precision point
+//! (half the plane traffic) as well as at the f64 oracle. The boundary
+//! stays `f64`-in/`f64`-out: inputs are narrowed per step exactly like
+//! `BatchEsn` narrows them, and the widening of the output features is
+//! exact. The bare [`run_parallel`] / [`run_parallel_batch`] are the
+//! `f64` instantiation (bit-compatible with the previous f64-only form).
 
 use crate::coordinator::WorkerPool;
 use crate::linalg::Mat;
-use crate::spectral::Spectrum;
+use crate::num::Scalar;
 
 use super::DiagonalEsn;
 
-/// Per-slot affine map `(a, b)` over split-complex planes.
+/// Per-slot affine map `(a, b)` over split-complex planes at precision `S`.
 #[derive(Clone)]
-struct AffineChunk {
-    a_re: Vec<f64>,
-    a_im: Vec<f64>,
-    b_re: Vec<f64>,
-    b_im: Vec<f64>,
+struct AffineChunk<S> {
+    a_re: Vec<S>,
+    a_im: Vec<S>,
+    b_re: Vec<S>,
+    b_im: Vec<S>,
 }
 
-impl AffineChunk {
+impl<S: Scalar> AffineChunk<S> {
     fn identity(slots: usize) -> Self {
         Self {
-            a_re: vec![1.0; slots],
-            a_im: vec![0.0; slots],
-            b_re: vec![0.0; slots],
-            b_im: vec![0.0; slots],
+            a_re: vec![S::ONE; slots],
+            a_im: vec![S::ZERO; slots],
+            b_re: vec![S::ZERO; slots],
+            b_im: vec![S::ZERO; slots],
         }
     }
 
     /// `self ∘ prev` (apply `prev` first): `(a₂, b₂)∘(a₁, b₁) =
     /// (a₂a₁, a₂b₁ + b₂)`.
-    fn compose_after(&self, prev: &AffineChunk) -> AffineChunk {
+    fn compose_after(&self, prev: &AffineChunk<S>) -> AffineChunk<S> {
         let n = self.a_re.len();
         let mut out = AffineChunk::identity(n);
         for j in 0..n {
@@ -60,34 +71,120 @@ impl AffineChunk {
     }
 }
 
-/// Phase-1 output for one chunk: its local (from-zero) states and total
-/// affine map.
-struct ChunkOut {
-    s_re: Mat,
-    s_im: Mat,
-    total: AffineChunk,
+/// Phase-1 output for one chunk: its local (from-zero) states — row-major
+/// `[len × slots]` split planes — and total affine map.
+struct ChunkOut<S> {
+    len: usize,
+    s_re: Vec<S>,
+    s_im: Vec<S>,
+    total: AffineChunk<S>,
 }
 
-/// Time-parallel run of a diagonal reservoir: identical output to
-/// [`DiagonalEsn::run`] (up to f64 rounding), computed as a chunked prefix
-/// scan over `pool`.
+/// The reservoir's parameters downcast once to scan precision `S`:
+/// per-slot `Λ` components and `[d_in × slots]` input-weight planes.
+#[derive(Clone)]
+struct ScanParams<S> {
+    slots: usize,
+    lam_re: Vec<S>,
+    lam_im: Vec<S>,
+    win_re: Vec<S>,
+    win_im: Vec<S>,
+}
+
+impl<S: Scalar> ScanParams<S> {
+    fn new(esn: &DiagonalEsn) -> Self {
+        let slots = esn.spec.slots();
+        let d_in = esn.win_re.rows();
+        let lam_re = esn.spec.lam.iter().map(|l| S::from_f64(l.re)).collect();
+        let lam_im = esn.spec.lam.iter().map(|l| S::from_f64(l.im)).collect();
+        let mut win_re = vec![S::ZERO; d_in * slots];
+        let mut win_im = vec![S::ZERO; d_in * slots];
+        for d in 0..d_in {
+            let wr = esn.win_re.row(d);
+            let wi = esn.win_im.row(d);
+            for j in 0..slots {
+                win_re[d * slots + j] = S::from_f64(wr[j]);
+                win_im[d * slots + j] = S::from_f64(wi[j]);
+            }
+        }
+        Self {
+            slots,
+            lam_re,
+            lam_im,
+            win_re,
+            win_im,
+        }
+    }
+
+    /// One Corollary-2 step on split planes at precision `S` (the input
+    /// row is narrowed per element, exactly like the batched lane engine).
+    fn step(&self, s_re: &mut [S], s_im: &mut [S], u: &[f64]) {
+        let slots = self.slots;
+        for j in 0..slots {
+            let (lr, li) = (self.lam_re[j], self.lam_im[j]);
+            let (re, im) = (s_re[j], s_im[j]);
+            s_re[j] = re * lr - im * li;
+            s_im[j] = re * li + im * lr;
+        }
+        for (d, &ud) in u.iter().enumerate() {
+            if ud == 0.0 {
+                continue;
+            }
+            let us = S::from_f64(ud);
+            let wr = &self.win_re[d * slots..(d + 1) * slots];
+            let wi = &self.win_im[d * slots..(d + 1) * slots];
+            for j in 0..slots {
+                s_re[j] += us * wr[j];
+                s_im[j] += us * wi[j];
+            }
+        }
+    }
+}
+
+/// Time-parallel run of a diagonal reservoir at the `f64` oracle
+/// precision: identical output to [`DiagonalEsn::run`] (up to f64
+/// rounding), computed as a chunked prefix scan over `pool`.
 pub fn run_parallel(esn: &DiagonalEsn, u: &Mat, pool: &WorkerPool, chunk: usize) -> Mat {
-    run_parallel_batch(esn, std::slice::from_ref(u), pool, chunk)
+    run_parallel_prec::<f64>(esn, u, pool, chunk)
+}
+
+/// [`run_parallel`] at an explicit scan precision `S`.
+pub fn run_parallel_prec<S: Scalar>(
+    esn: &DiagonalEsn,
+    u: &Mat,
+    pool: &WorkerPool,
+    chunk: usize,
+) -> Mat {
+    run_parallel_batch_prec::<S>(esn, std::slice::from_ref(u), pool, chunk)
         .pop()
         .expect("one input, one output")
 }
 
 /// Batched time-parallel runs over independent sequences (all `[Tᵢ ×
-/// D_in]`). Phase 1 fans `Σᵢ ⌈Tᵢ/chunk⌉` chunk scans across the pool in
-/// ONE `map` call; phases 2–3 (summary scan + fix-up) run per sequence.
-/// Output `i` is identical to `run_parallel(esn, &inputs[i], …)`.
+/// D_in]`) at the `f64` oracle precision. Phase 1 fans `Σᵢ ⌈Tᵢ/chunk⌉`
+/// chunk scans across the pool in ONE `map` call; phases 2–3 (summary
+/// scan + fix-up) run per sequence. Output `i` is identical to
+/// `run_parallel(esn, &inputs[i], …)`.
 pub fn run_parallel_batch(
     esn: &DiagonalEsn,
     inputs: &[Mat],
     pool: &WorkerPool,
     chunk: usize,
 ) -> Vec<Mat> {
-    let slots = esn.spec.slots();
+    run_parallel_batch_prec::<f64>(esn, inputs, pool, chunk)
+}
+
+/// [`run_parallel_batch`] at an explicit scan precision `S`: the whole
+/// scan — chunk states, chunk-total maps, summary composition, and
+/// fix-up — runs on `S` planes, with parameters downcast once up front.
+pub fn run_parallel_batch_prec<S: Scalar>(
+    esn: &DiagonalEsn,
+    inputs: &[Mat],
+    pool: &WorkerPool,
+    chunk: usize,
+) -> Vec<Mat> {
+    let params = ScanParams::<S>::new(esn);
+    let slots = params.slots;
     let chunk = chunk.max(1);
 
     // flattened job list: (sequence, chunk-within-sequence)
@@ -100,43 +197,46 @@ pub fn run_parallel_batch(
 
     // phase 1: independent chunk scans (parallel across sequences AND
     // chunks) — states-from-zero + the chunk's total affine map
-    let spec = esn.spec.clone();
-    let win_re = esn.win_re.clone();
-    let win_im = esn.win_im.clone();
+    let worker_params = params.clone();
     let u_all: Vec<Mat> = inputs.to_vec();
-    let chunks: Vec<ChunkOut> = pool.map(jobs, move |(si, ci)| {
+    let chunks: Vec<ChunkOut<S>> = pool.map(jobs, move |(si, ci)| {
         let u = &u_all[si];
         let t_len = u.rows();
         let lo = ci * chunk;
         let hi = ((ci + 1) * chunk).min(t_len);
         let len = hi - lo;
-        let mut s_re = Mat::zeros(len, slots);
-        let mut s_im = Mat::zeros(len, slots);
-        let mut cur_re = vec![0.0; slots];
-        let mut cur_im = vec![0.0; slots];
+        let mut s_re = vec![S::ZERO; len * slots];
+        let mut s_im = vec![S::ZERO; len * slots];
+        let mut cur_re = vec![S::ZERO; slots];
+        let mut cur_im = vec![S::ZERO; slots];
         // total map: a = λ^len (per slot, accumulated INCREMENTALLY
         // alongside the scan — `powi(len as u32)` both truncates 64-bit
         // chunk lengths and drifts at |λ| ≈ 1; the running product is the
         // same recurrence the phase-3 fix-up uses), b = chunk scan from 0
-        let mut a_re = vec![1.0; slots];
-        let mut a_im = vec![0.0; slots];
+        let mut a_re = vec![S::ONE; slots];
+        let mut a_im = vec![S::ZERO; slots];
         for (row, t) in (lo..hi).enumerate() {
-            step_planes(&spec, &win_re, &win_im, &mut cur_re, &mut cur_im, u.row(t));
+            worker_params.step(&mut cur_re, &mut cur_im, u.row(t));
             for j in 0..slots {
-                let l = spec.lam[j];
+                let (lr, li) = (worker_params.lam_re[j], worker_params.lam_im[j]);
                 let (re, im) = (a_re[j], a_im[j]);
-                a_re[j] = re * l.re - im * l.im;
-                a_im[j] = re * l.im + im * l.re;
+                a_re[j] = re * lr - im * li;
+                a_im[j] = re * li + im * lr;
             }
-            s_re.row_mut(row).copy_from_slice(&cur_re);
-            s_im.row_mut(row).copy_from_slice(&cur_im);
+            s_re[row * slots..(row + 1) * slots].copy_from_slice(&cur_re);
+            s_im[row * slots..(row + 1) * slots].copy_from_slice(&cur_im);
         }
         let mut total = AffineChunk::identity(slots);
         total.a_re.copy_from_slice(&a_re);
         total.a_im.copy_from_slice(&a_im);
         total.b_re.copy_from_slice(&cur_re);
         total.b_im.copy_from_slice(&cur_im);
-        ChunkOut { s_re, s_im, total }
+        ChunkOut {
+            len,
+            s_re,
+            s_im,
+            total,
+        }
     });
 
     // regroup phase-1 results per sequence (jobs were pushed in
@@ -147,20 +247,22 @@ pub fn run_parallel_batch(
         let n_chunks = u.rows().div_ceil(chunk);
         let seq_chunks = &chunks[cursor..cursor + n_chunks];
         cursor += n_chunks;
-        outs.push(fixup_sequence(esn, u.rows(), seq_chunks, chunk));
+        outs.push(fixup_sequence(esn, &params, u.rows(), seq_chunks, chunk));
     }
     outs
 }
 
 /// Phases 2–3 for one sequence: exclusive-scan the chunk summaries, then
-/// apply each chunk's prefix map to its local states.
-fn fixup_sequence(
+/// apply each chunk's prefix map to its local states. All arithmetic at
+/// `S`; only the final feature write widens to the f64 boundary.
+fn fixup_sequence<S: Scalar>(
     esn: &DiagonalEsn,
+    params: &ScanParams<S>,
     t_len: usize,
-    chunks: &[ChunkOut],
+    chunks: &[ChunkOut<S>],
     chunk: usize,
 ) -> Mat {
-    let slots = esn.spec.slots();
+    let slots = params.slots;
 
     // phase 2: exclusive scan of chunk summaries (sequential, cheap)
     let mut prefixes = Vec::with_capacity(chunks.len());
@@ -173,72 +275,45 @@ fn fixup_sequence(
     // phase 3: fix-up — the *state entering the chunk* is b_prefix, so
     // s_global(t) = s_local(t) + λ^(row+1) ⊙ b_prefix.
     let mut out = Mat::zeros(t_len, esn.n());
+    let nr = esn.spec.n_real;
     for (ci, c) in chunks.iter().enumerate() {
         let pre = &prefixes[ci];
         let lo = ci * chunk;
-        let len = c.s_re.rows();
         // running power λ^(row+1)
-        let mut pw_re: Vec<f64> = vec![1.0; slots];
-        let mut pw_im: Vec<f64> = vec![0.0; slots];
-        for row in 0..len {
+        let mut pw_re: Vec<S> = vec![S::ONE; slots];
+        let mut pw_im: Vec<S> = vec![S::ZERO; slots];
+        for row in 0..c.len {
             // pw ← pw · λ
             for j in 0..slots {
-                let l = esn.spec.lam[j];
+                let (lr, li) = (params.lam_re[j], params.lam_im[j]);
                 let (re, im) = (pw_re[j], pw_im[j]);
-                pw_re[j] = re * l.re - im * l.im;
-                pw_im[j] = re * l.im + im * l.re;
+                pw_re[j] = re * lr - im * li;
+                pw_im[j] = re * li + im * lr;
             }
+            let s_re = &c.s_re[row * slots..(row + 1) * slots];
+            let s_im = &c.s_im[row * slots..(row + 1) * slots];
             let feat = out.row_mut(lo + row);
-            let nr = esn.spec.n_real;
             let mut col = 0;
             for j in 0..slots {
                 // global state = local + λ^(row+1) ⊙ entering-state
-                let gre = c.s_re[(row, j)]
+                let gre = s_re[j]
                     + pw_re[j] * pre.b_re[j]
                     - pw_im[j] * pre.b_im[j];
-                let gim = c.s_im[(row, j)]
+                let gim = s_im[j]
                     + pw_re[j] * pre.b_im[j]
                     + pw_im[j] * pre.b_re[j];
                 if j < nr {
-                    feat[col] = gre;
+                    feat[col] = gre.to_f64();
                     col += 1;
                 } else {
-                    feat[col] = gre;
-                    feat[col + 1] = gim;
+                    feat[col] = gre.to_f64();
+                    feat[col + 1] = gim.to_f64();
                     col += 2;
                 }
             }
         }
     }
     out
-}
-
-fn step_planes(
-    spec: &Spectrum,
-    win_re: &Mat,
-    win_im: &Mat,
-    s_re: &mut [f64],
-    s_im: &mut [f64],
-    u: &[f64],
-) {
-    let slots = spec.slots();
-    for j in 0..slots {
-        let l = spec.lam[j];
-        let (re, im) = (s_re[j], s_im[j]);
-        s_re[j] = re * l.re - im * l.im;
-        s_im[j] = re * l.im + im * l.re;
-    }
-    for (d, &ud) in u.iter().enumerate() {
-        if ud == 0.0 {
-            continue;
-        }
-        let wr = win_re.row(d);
-        let wi = win_im.row(d);
-        for j in 0..slots {
-            s_re[j] += ud * wr[j];
-            s_im[j] += ud * wi[j];
-        }
-    }
 }
 
 #[cfg(test)]
@@ -325,6 +400,46 @@ mod tests {
         assert_eq!(batched[0].rows(), 0);
         for (u, par) in inputs.iter().zip(&batched) {
             assert!(par.max_abs_diff(&esn.run(u)) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_scan_tracks_f64_sequential_within_budget() {
+        // the f32 instantiation: same algorithm on narrowed planes; error
+        // vs the f64 oracle stays within the usual ε₃₂ · horizon budget
+        // (coarse bound here — the precise model lives in
+        // rust/tests/precision.rs for the lane engine)
+        let esn = setup(24, 9);
+        let mut rng = Pcg64::seeded(10);
+        let u = Mat::randn(128, 1, &mut rng);
+        let pool = WorkerPool::new(2);
+        let seq = esn.run(&u);
+        let scale = seq.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        for chunk in [1, 16, 128] {
+            let par = run_parallel_prec::<f32>(&esn, &u, &pool, chunk);
+            let err = par.max_abs_diff(&seq);
+            assert!(
+                err < 1e-3 * scale,
+                "chunk={chunk} err={err} scale={scale}"
+            );
+            assert!(err > 0.0, "f32 scan suspiciously exact (ran at f64?)");
+        }
+    }
+
+    #[test]
+    fn f32_chunked_scan_consistent_across_chunk_sizes() {
+        // chunking changes the association order, not the algorithm: all
+        // f32 chunkings must stay within a few ULP-horizons of each other
+        let esn = setup(16, 11);
+        let mut rng = Pcg64::seeded(12);
+        let u = Mat::randn(96, 1, &mut rng);
+        let pool = WorkerPool::new(3);
+        let whole = run_parallel_prec::<f32>(&esn, &u, &pool, 96);
+        let scale = whole.data().iter().fold(1.0f64, |m, x| m.max(x.abs()));
+        for chunk in [4, 13, 32] {
+            let par = run_parallel_prec::<f32>(&esn, &u, &pool, chunk);
+            let err = par.max_abs_diff(&whole);
+            assert!(err < 1e-3 * scale, "chunk={chunk} err={err}");
         }
     }
 }

@@ -21,13 +21,23 @@ pub struct Pcg64 {
     inc: u128,
 }
 
-/// SplitMix64 — used only to expand user seeds into PCG state material.
+/// SplitMix64 — used to expand user seeds into PCG state material.
 fn splitmix64(x: &mut u64) -> u64 {
     *x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
     let mut z = *x;
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
     z ^ (z >> 31)
+}
+
+/// Pure SplitMix64 step (stateless form of the mixer above): the
+/// canonical 64-bit finalizer for hash-style consumers — deterministic,
+/// cheap, well-mixed. The server's connection→shard map uses it; keeping
+/// one copy of the magic constants lives here.
+#[inline]
+pub fn splitmix64_mix(x: u64) -> u64 {
+    let mut s = x;
+    splitmix64(&mut s)
 }
 
 impl Pcg64 {

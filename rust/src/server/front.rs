@@ -1,0 +1,694 @@
+//! The micro-batching front: ONE sweeper thread draining a shared job
+//! queue into coalesced engine sweeps. A [`BatchFront`] is the unit of
+//! sharding — [`super::ShardedFront`] runs one per core — but is fully
+//! self-contained: its own queue, its own streaming-lane hub, its own
+//! pooled predict engines, sharing only the read-only `Arc<Model>`.
+//!
+//! Connection handlers never run the engine. They enqueue [`FrontJob`]s
+//! and the sweeper drains the queue: concurrent `predict` requests
+//! coalesce into one stateless [`BatchEsn`] sweep (one pass over
+//! `Λ`/`[W_in]_Q` amortized across the batch, engines reused from an
+//! [`EnginePool`] keyed by padded lane-width bucket), and per-connection
+//! `stream`
+//! states live as lanes of one persistent hub whose pending requests
+//! advance together in a branchless masked sweep. Per-lane arithmetic is
+//! bit-identical to the sequential engine, so batching is invisible to
+//! clients.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Mat;
+use crate::reservoir::{BatchEsn, LaneReadout};
+
+use super::pool::EnginePool;
+use super::{Model, Precision};
+
+/// Max predict requests folded into one stateless sweep.
+pub(crate) const MAX_PREDICT_BATCH: usize = 32;
+/// Streaming-state lanes in the persistent hub (connections beyond this
+/// fall back to local per-connection state).
+pub(crate) const STREAM_LANES: usize = 64;
+/// Queue depth at which the sweeper skips the hold-off and drains
+/// immediately — the "under load" threshold.
+const HOLDOFF_DRAIN_DEPTH: usize = 4;
+
+// ---------------------------------------------------------------------------
+// precision-dispatched lane engine
+// ---------------------------------------------------------------------------
+
+/// A [`BatchEsn`] at the model's serving precision, paired with the
+/// readout pre-cast to that precision so per-round sweeps stay
+/// allocation-free. All `BatchEsn` APIs are f64 at the boundary, so
+/// dispatch is a plain match.
+pub(crate) enum Hub {
+    F64(BatchEsn<f64>, LaneReadout<f64>),
+    F32(BatchEsn<f32>, LaneReadout<f32>),
+}
+
+impl Hub {
+    pub(crate) fn new(model: &Model, lanes: usize) -> Self {
+        match model.precision {
+            Precision::F64 => Hub::F64(
+                BatchEsn::new(model.qesn.clone(), lanes),
+                LaneReadout::new(&model.readout),
+            ),
+            Precision::F32 => Hub::F32(
+                BatchEsn::<f32>::with_precision(model.qesn.clone(), lanes),
+                LaneReadout::new(&model.readout),
+            ),
+        }
+    }
+
+    pub(crate) fn sweep_streams(&mut self, reqs: &[(usize, &[f64])]) -> Vec<Vec<f64>> {
+        match self {
+            Hub::F64(e, ro) => e.sweep_streams_cast(reqs, ro),
+            Hub::F32(e, ro) => e.sweep_streams_cast(reqs, ro),
+        }
+    }
+
+    pub(crate) fn run_readout(&mut self, u: &Mat) -> Mat {
+        match self {
+            Hub::F64(e, ro) => e.run_readout_cast(u, ro),
+            Hub::F32(e, ro) => e.run_readout_cast(u, ro),
+        }
+    }
+
+    pub(crate) fn reset_lane(&mut self, lane: usize) {
+        match self {
+            Hub::F64(e, _) => e.reset_lane(lane),
+            Hub::F32(e, _) => e.reset_lane(lane),
+        }
+    }
+
+    /// Zero every lane — a pooled engine is reset on checkout so reuse is
+    /// indistinguishable from a fresh construction.
+    pub(crate) fn reset(&mut self) {
+        match self {
+            Hub::F64(e, _) => e.reset(),
+            Hub::F32(e, _) => e.reset(),
+        }
+    }
+
+    /// Lane capacity of this engine (pooled engines are bucket-width, so
+    /// callers sizing a full-sweep input must use this, not their chunk
+    /// length).
+    pub(crate) fn lanes(&self) -> usize {
+        match self {
+            Hub::F64(e, _) => e.batch(),
+            Hub::F32(e, _) => e.batch(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// micro-batching front
+// ---------------------------------------------------------------------------
+
+pub(crate) enum FrontJob {
+    Predict {
+        input: Vec<f64>,
+        reply: mpsc::Sender<Vec<f64>>,
+    },
+    Stream {
+        lane: usize,
+        input: Vec<f64>,
+        reply: mpsc::Sender<Vec<f64>>,
+    },
+    /// Zero a hub lane. `reply` is `Some` for a client-visible `reset`
+    /// (synchronous), `None` when recycling a released lane.
+    Reset {
+        lane: usize,
+        reply: Option<mpsc::Sender<()>>,
+    },
+}
+
+struct FrontState {
+    jobs: Vec<FrontJob>,
+    shutdown: bool,
+}
+
+/// Shared queue between connection handlers and the sweeper thread —
+/// one shard of the serving path (a [`super::ShardedFront`] owns `S` of
+/// these; a single one is the legacy single-core front).
+pub struct BatchFront {
+    pub(crate) model: Arc<Model>,
+    state: Mutex<FrontState>,
+    cv: Condvar,
+    free_lanes: Mutex<Vec<usize>>,
+    sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
+    /// Coalescing window: with a shallow queue the sweeper waits up to
+    /// this long for more jobs before draining; zero = drain immediately.
+    holdoff: Duration,
+    /// Total sweep rounds drained (metrics; exported via `info`).
+    sweeps: AtomicU64,
+    /// Distinct predict engines constructed by the sweeper's pool so far
+    /// (metrics: stays flat once every chunk size has been seen).
+    engines_built: AtomicU64,
+    /// Mirror of `state.jobs.len()`, maintained under the state lock but
+    /// readable without it — the sharded front's least-loaded deal polls
+    /// every shard's depth per predict, which must not contend with
+    /// submitters and sweepers on the queue mutex.
+    depth: AtomicUsize,
+}
+
+impl BatchFront {
+    /// Spawn the sweeper and return the shared front (no hold-off: every
+    /// wake drains immediately — the legacy behavior).
+    pub fn start(model: Arc<Model>) -> Arc<Self> {
+        Self::start_with_holdoff(model, 0)
+    }
+
+    /// Spawn the sweeper with an adaptive micro-batch hold-off window:
+    /// when fewer than a handful of jobs are queued, the sweeper waits up
+    /// to `holdoff_us` µs for more to coalesce; under load (queue already
+    /// batch-worthy) or on shutdown it drains immediately.
+    pub fn start_with_holdoff(model: Arc<Model>, holdoff_us: u64) -> Arc<Self> {
+        Self::start_named(model, holdoff_us, "lr-batch-sweeper".into())
+    }
+
+    /// [`Self::start_with_holdoff`] with an explicit sweeper thread name
+    /// (the sharded front names each shard's sweeper by index).
+    pub(crate) fn start_named(
+        model: Arc<Model>,
+        holdoff_us: u64,
+        thread_name: String,
+    ) -> Arc<Self> {
+        let front = Arc::new(Self {
+            model,
+            state: Mutex::new(FrontState {
+                jobs: Vec::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            // lane 0 handed out first
+            free_lanes: Mutex::new((0..STREAM_LANES).rev().collect()),
+            sweeper: Mutex::new(None),
+            holdoff: Duration::from_micros(holdoff_us),
+            sweeps: AtomicU64::new(0),
+            engines_built: AtomicU64::new(0),
+            depth: AtomicUsize::new(0),
+        });
+        let worker = Arc::clone(&front);
+        let handle = std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || {
+                // a panic inside a sweep (engine assert) must not freeze
+                // the server: mark the front dead and drop stranded jobs
+                // so blocked reply receivers unblock into their fallbacks
+                let res = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| worker.sweeper_loop()),
+                );
+                let mut st = worker.state.lock().unwrap();
+                st.shutdown = true;
+                st.jobs.clear();
+                worker.depth.store(0, Ordering::Relaxed);
+                drop(st);
+                if res.is_err() {
+                    eprintln!("lr-batch-sweeper died; serving falls back to direct compute");
+                }
+            })
+            .expect("spawn sweeper");
+        *front.sweeper.lock().unwrap() = Some(handle);
+        front
+    }
+
+    /// Stop the sweeper once the queue drains (idempotent). Jobs already
+    /// queued are still processed — shutdown wakes the sweeper, which
+    /// drains the queue before exiting, so no accepted job is dropped.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+        if let Some(h) = self.sweeper.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Enqueue a job. Returns `false` (job dropped) when the sweeper is
+    /// gone — callers use their fallback path instead of blocking.
+    fn submit(&self, job: FrontJob) -> bool {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.shutdown {
+                return false;
+            }
+            st.jobs.push(job);
+            self.depth.store(st.jobs.len(), Ordering::Relaxed);
+        }
+        self.cv.notify_all();
+        true
+    }
+
+    pub(crate) fn acquire_lane(&self) -> Option<usize> {
+        self.free_lanes.lock().unwrap().pop()
+    }
+
+    /// Queue a zeroing of the lane, THEN return it to the free list — the
+    /// queue is processed in submission order, so the next owner's first
+    /// request always sees a fresh state.
+    pub(crate) fn release_lane(&self, lane: usize) {
+        self.submit(FrontJob::Reset { lane, reply: None });
+        self.free_lanes.lock().unwrap().push(lane);
+    }
+
+    /// Current queued-job count (metrics; exported via `info`; the
+    /// sharded front's least-loaded predict deal reads it per shard).
+    /// Lock-free: reads the mirror the queue operations maintain, so
+    /// polling every shard per predict never touches the queue mutex.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Total sweep rounds drained so far (metrics; exported via `info`).
+    pub fn sweep_count(&self) -> u64 {
+        self.sweeps.load(Ordering::Relaxed)
+    }
+
+    /// Distinct pooled predict engines built so far (flat once warm:
+    /// chunk-size reuse means coalesced predicts stop paying the
+    /// parameter-downcast + plane-allocation cost per chunk).
+    pub fn predict_engines_built(&self) -> u64 {
+        self.engines_built.load(Ordering::Relaxed)
+    }
+
+    /// The configured hold-off window in µs (metrics; `info`).
+    pub fn holdoff_us(&self) -> u64 {
+        self.holdoff.as_micros() as u64
+    }
+
+    /// The model this front serves.
+    pub fn model(&self) -> &Arc<Model> {
+        &self.model
+    }
+
+    /// Stateless prediction through the batch queue. Falls back to a
+    /// direct (bit-identical, same-precision) computation if the sweeper
+    /// is gone.
+    pub fn predict(&self, input: Vec<f64>) -> Vec<f64> {
+        if let Some(rx) = self.predict_async(input.clone()) {
+            // a dying sweeper drops stranded jobs, so this cannot hang
+            if let Ok(out) = rx.recv() {
+                return out;
+            }
+        }
+        self.model.predict(&input)
+    }
+
+    /// Enqueue a stateless prediction and return the reply channel
+    /// without blocking — the fan-out form ([`super::ShardedFront`] and
+    /// the benches submit whole batches before collecting). `None` when
+    /// the sweeper is gone; callers then use [`Model::predict`] directly.
+    pub fn predict_async(
+        &self,
+        input: Vec<f64>,
+    ) -> Option<mpsc::Receiver<Vec<f64>>> {
+        let (tx, rx) = mpsc::channel();
+        if self.submit(FrontJob::Predict { input, reply: tx }) {
+            Some(rx)
+        } else {
+            None
+        }
+    }
+
+    /// Streaming step(s) on a hub lane (no fallback: the state lives in
+    /// the hub, so a dead sweeper is a hard error).
+    pub fn stream(&self, lane: usize, input: Vec<f64>) -> Result<Vec<f64>> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit(FrontJob::Stream {
+            lane,
+            input,
+            reply: tx,
+        }) {
+            anyhow::bail!("batch front unavailable");
+        }
+        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
+    }
+
+    /// Synchronous client-visible lane reset.
+    pub fn reset(&self, lane: usize) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit(FrontJob::Reset {
+            lane,
+            reply: Some(tx),
+        }) {
+            anyhow::bail!("batch front unavailable");
+        }
+        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
+    }
+
+    fn sweeper_loop(&self) {
+        // persistent streaming hub, one lane per connection, at the
+        // model's precision — plus the pooled stateless predict engines
+        // (both owned by this thread: no locks on the hot path)
+        let mut hub = Hub::new(&self.model, STREAM_LANES);
+        let mut pool = EnginePool::new(Arc::clone(&self.model));
+        loop {
+            let drained = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if !st.jobs.is_empty() {
+                        // shallow queue: hold off briefly so concurrent
+                        // requests coalesce into one sweep; deep queue or
+                        // shutdown: drain now
+                        if !self.holdoff.is_zero()
+                            && st.jobs.len() < HOLDOFF_DRAIN_DEPTH
+                            && !st.shutdown
+                        {
+                            let start = Instant::now();
+                            while st.jobs.len() < HOLDOFF_DRAIN_DEPTH
+                                && !st.shutdown
+                            {
+                                match self.holdoff.checked_sub(start.elapsed())
+                                {
+                                    None => break,
+                                    Some(left) => {
+                                        let (guard, _) = self
+                                            .cv
+                                            .wait_timeout(st, left)
+                                            .unwrap();
+                                        st = guard;
+                                    }
+                                }
+                            }
+                        }
+                        let jobs = std::mem::take(&mut st.jobs);
+                        self.depth.store(0, Ordering::Relaxed);
+                        break jobs;
+                    }
+                    if st.shutdown {
+                        return;
+                    }
+                    st = self.cv.wait(st).unwrap();
+                }
+            };
+            self.sweeps.fetch_add(1, Ordering::Relaxed);
+            self.process(&mut hub, &mut pool, drained);
+        }
+    }
+
+    /// Drain one batch of jobs: predicts coalesce into stateless sweeps;
+    /// stream/reset jobs are grouped into rounds that preserve per-lane
+    /// submission order (lanes are independent, so cross-lane reordering
+    /// is unobservable).
+    fn process(&self, hub: &mut Hub, pool: &mut EnginePool, drained: Vec<FrontJob>) {
+        let mut predicts: Vec<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
+        let mut round: Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
+        let mut in_round = [false; STREAM_LANES];
+
+        let flush_round =
+            |round: &mut Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)>,
+             in_round: &mut [bool; STREAM_LANES],
+             hub: &mut Hub| {
+                if round.is_empty() {
+                    return;
+                }
+                let reqs: Vec<(usize, &[f64])> = round
+                    .iter()
+                    .map(|(lane, input, _)| (*lane, input.as_slice()))
+                    .collect();
+                let outs = hub.sweep_streams(&reqs);
+                for ((_, _, reply), out) in round.drain(..).zip(outs) {
+                    let _ = reply.send(out);
+                }
+                in_round.fill(false);
+            };
+
+        for job in drained {
+            match job {
+                FrontJob::Predict { input, reply } => predicts.push((input, reply)),
+                FrontJob::Stream { lane, input, reply } => {
+                    if in_round[lane] {
+                        // second request for a lane: close the round first
+                        // so per-lane order is preserved
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    in_round[lane] = true;
+                    round.push((lane, input, reply));
+                }
+                FrontJob::Reset { lane, reply } => {
+                    if in_round[lane] {
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    hub.reset_lane(lane);
+                    if let Some(tx) = reply {
+                        let _ = tx.send(());
+                    }
+                }
+            }
+        }
+        flush_round(&mut round, &mut in_round, hub);
+
+        // predicts: stateless — a pooled, reset, precision-matched engine
+        // per chunk (reused across rounds: no parameter downcast or plane
+        // allocation once a chunk size has been seen)
+        let d_out = self.model.readout.w.cols();
+        let mut start = 0;
+        while start < predicts.len() {
+            let chunk = &predicts[start..(start + MAX_PREDICT_BATCH).min(predicts.len())];
+            start += chunk.len();
+            let k = chunk.len();
+            let engine = pool.get(k);
+            if d_out == 1 {
+                // masked sweep: exhausted lanes freeze, so a short request
+                // never pays for the longest one in its batch
+                let reqs: Vec<(usize, &[f64])> = chunk
+                    .iter()
+                    .enumerate()
+                    .map(|(b, (input, _))| (b, input.as_slice()))
+                    .collect();
+                let outs = engine.sweep_streams(&reqs);
+                for ((_, reply), out) in chunk.iter().zip(outs) {
+                    let _ = reply.send(out);
+                }
+            } else {
+                // general D_out: zero-padded full sweep (padded steps and
+                // the pooled engine's spare bucket lanes are never read,
+                // so outputs are unchanged)
+                let max_len = chunk.iter().map(|(i, _)| i.len()).max().unwrap_or(0);
+                let mut u = Mat::zeros(max_len, engine.lanes());
+                for (b, (input, _)) in chunk.iter().enumerate() {
+                    for (t, &v) in input.iter().enumerate() {
+                        u[(t, b)] = v;
+                    }
+                }
+                let y = engine.run_readout(&u);
+                for (b, (input, reply)) in chunk.iter().enumerate() {
+                    let out: Vec<f64> =
+                        (0..input.len()).map(|t| y[(t, b * d_out)]).collect();
+                    let _ = reply.send(out);
+                }
+            }
+        }
+        self.engines_built.store(pool.built(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{make_model, make_model_f32};
+    use super::*;
+    use crate::tasks::mso::MsoTask;
+
+    #[test]
+    fn batched_front_predict_is_bit_identical_to_model_predict() {
+        // the batching contract: coalescing must be invisible — same bits
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(2);
+        let inputs: Vec<Vec<f64>> = (0..7)
+            .map(|i| task.input[i * 10..i * 10 + 35 + i].to_vec())
+            .collect();
+        // submit all jobs before the sweeper can drain them one by one:
+        // hold the queue lock while enqueueing
+        let replies: Vec<mpsc::Receiver<Vec<f64>>> = {
+            let mut st = front.state.lock().unwrap();
+            inputs
+                .iter()
+                .map(|input| {
+                    let (tx, rx) = mpsc::channel();
+                    st.jobs.push(FrontJob::Predict {
+                        input: input.clone(),
+                        reply: tx,
+                    });
+                    rx
+                })
+                .collect()
+        };
+        front.cv.notify_all();
+        for (input, rx) in inputs.iter().zip(replies) {
+            let batched = rx.recv().unwrap();
+            let sequential = model.predict(input);
+            assert_eq!(batched.len(), sequential.len());
+            for (a, b) in batched.iter().zip(&sequential) {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "batched predict must be bit-identical: {a} vs {b}"
+                );
+            }
+        }
+        front.shutdown();
+    }
+
+    #[test]
+    fn hub_lanes_are_isolated_and_match_sequential_streaming() {
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let a = front.acquire_lane().unwrap();
+        let b = front.acquire_lane().unwrap();
+        assert_ne!(a, b);
+        // interleave chunks on two lanes
+        let in_a = &task.input[..40];
+        let in_b = &task.input[200..230];
+        let mut got_a = front.stream(a, in_a[..15].to_vec()).unwrap();
+        let mut got_b = front.stream(b, in_b[..7].to_vec()).unwrap();
+        got_a.extend(front.stream(a, in_a[15..].to_vec()).unwrap());
+        got_b.extend(front.stream(b, in_b[7..].to_vec()).unwrap());
+        // reference: each stream alone through the sequential model path
+        let reference = |input: &[f64]| model.predict(input);
+        for (got, want) in [(got_a, reference(in_a)), (got_b, reference(in_b))] {
+            assert_eq!(got.len(), want.len());
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-10, "{x} vs {y}");
+            }
+        }
+        // reset isolates too: lane a resets, lane b keeps its state
+        front.reset(a).unwrap();
+        let fresh = front.stream(a, in_a[..5].to_vec()).unwrap();
+        let ref_a = reference(in_a);
+        for (x, y) in fresh.iter().zip(&ref_a[..5]) {
+            assert!((x - y).abs() < 1e-10);
+        }
+        front.release_lane(a);
+        front.release_lane(b);
+        front.shutdown();
+    }
+
+    #[test]
+    fn f32_front_predict_matches_f32_model_predict_bitwise() {
+        // precision consistency contract: at F32 every path (coalesced
+        // sweep, fallback, Model::predict) runs the same f32 lane
+        // arithmetic, so responses stay bit-identical across paths
+        let model = Arc::new(make_model_f32());
+        assert_eq!(model.precision, Precision::F32);
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(2);
+        for i in 0..5 {
+            let input = task.input[i * 13..i * 13 + 30 + i].to_vec();
+            let batched = front.predict(input.clone());
+            let direct = model.predict(&input);
+            assert_eq!(batched.len(), direct.len());
+            for (a, b) in batched.iter().zip(&direct) {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "f32 batched predict must be bit-identical: {a} vs {b}"
+                );
+            }
+            // and the f32 result is close to (but generally not equal to)
+            // the f64 oracle
+            let oracle = {
+                let u = Mat::from_rows(input.len(), 1, &input);
+                let y = model.qesn.run_readout(&u, &model.readout);
+                (0..y.rows()).map(|t| y[(t, 0)]).collect::<Vec<f64>>()
+            };
+            let scale =
+                oracle.iter().fold(1.0f64, |m, x| m.max(x.abs()));
+            for (a, b) in batched.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-3 * scale, "{a} vs oracle {b}");
+            }
+        }
+        front.shutdown();
+    }
+
+    #[test]
+    fn f32_hub_streaming_matches_single_lane_f32_reference() {
+        let model = Arc::new(make_model_f32());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let lane = front.acquire_lane().unwrap();
+        let input = &task.input[..48];
+        let mut got = front.stream(lane, input[..17].to_vec()).unwrap();
+        got.extend(front.stream(lane, input[17..].to_vec()).unwrap());
+        // reference: a private 1-lane f32 engine (the F32 local fallback)
+        let mut reference =
+            BatchEsn::<f32>::with_precision(model.qesn.clone(), 1);
+        let want = reference
+            .sweep_streams(&[(0, input)], &model.readout)
+            .pop()
+            .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() == 0.0,
+                "f32 hub lane diverged from 1-lane reference at t={t}: {a} vs {b}"
+            );
+        }
+        front.release_lane(lane);
+        front.shutdown();
+    }
+
+    #[test]
+    fn holdoff_front_coalesces_and_counts_sweeps() {
+        let model = Arc::new(make_model());
+        // generous hold-off so concurrently-submitted jobs coalesce
+        let front = BatchFront::start_with_holdoff(Arc::clone(&model), 2_000);
+        let task = MsoTask::new(2);
+        let inputs: Vec<Vec<f64>> = (0..3)
+            .map(|i| task.input[i * 11..i * 11 + 25 + i].to_vec())
+            .collect();
+        let mut workers = Vec::new();
+        for input in inputs {
+            let f = Arc::clone(&front);
+            let m = Arc::clone(&model);
+            workers.push(std::thread::spawn(move || {
+                let got = f.predict(input.clone());
+                let want = m.predict(&input);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() == 0.0);
+                }
+            }));
+        }
+        for w in workers {
+            w.join().unwrap();
+        }
+        // all replies delivered ⇒ at least one sweep ran; with the
+        // hold-off they usually coalesce into exactly one
+        assert!(front.sweep_count() >= 1);
+        assert_eq!(front.queue_depth(), 0);
+        front.shutdown();
+    }
+
+    #[test]
+    fn predict_engines_are_pooled_across_rounds() {
+        // the pool contract: one engine per chunk size, ever — a second
+        // round of same-sized predicts reuses the first round's engine
+        // (reset on checkout), and responses stay bit-identical
+        for model in [Arc::new(make_model()), Arc::new(make_model_f32())] {
+            let front = BatchFront::start(Arc::clone(&model));
+            let task = MsoTask::new(1);
+            let input = task.input[..30].to_vec();
+            let first = front.predict(input.clone());
+            let second = front.predict(input.clone());
+            let third = front.predict(input.clone());
+            assert_eq!(first.len(), second.len());
+            for (a, b) in first.iter().zip(&second).chain(first.iter().zip(&third)) {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "pooled engine reuse changed bits: {a} vs {b}"
+                );
+            }
+            // three single-predict rounds, all chunk size 1 → one engine
+            assert_eq!(
+                front.predict_engines_built(),
+                1,
+                "chunk-size-1 engine must be built exactly once"
+            );
+            front.shutdown();
+        }
+    }
+}

@@ -1,43 +1,58 @@
 //! Prediction service: a line-delimited JSON protocol over TCP, serving a
-//! trained diagonal reservoir. This is the "request path" of the stack —
-//! pure Rust, Python never involved.
+//! trained diagonal reservoir from every core of the box. This is the
+//! "request path" of the stack — pure Rust, Python never involved.
 //!
-//! Protocol (one JSON object per line):
+//! The subtree splits the serving path by layer:
 //!
-//! ```text
-//! → {"op": "predict", "input": [u0, u1, …]}     forecast 1-step-ahead for
-//!                                               the whole sequence
-//! → {"op": "stream", "input": [u_t]}            stateful per-connection
-//!                                               streaming step
-//! → {"op": "info"}
-//! ← {"ok": true, "output": […], "steps_per_sec": …}
-//! ```
+//! | module | role |
+//! |--------|------|
+//! | `wire.rs` | TCP accept loop, JSON protocol, connection→shard binding, [`Client`] |
+//! | `shard.rs` | [`ShardedFront`]: one [`BatchFront`] per core, stream hashing + least-loaded predict deal |
+//! | `front.rs` | [`BatchFront`]: one sweeper thread, job queue, streaming-lane hub |
+//! | `pool.rs` | pooled stateless predict engines, keyed by padded lane-width bucket |
+//!
+//! ## Shard-per-core serving
+//!
+//! One [`BatchFront`] sweeper is single-core by design. A
+//! [`ShardedFront`] runs `S` of them (default: one per available core),
+//! each owning its own job queue, sweeper thread, 64-lane streaming hub,
+//! and pooled predict engines — `cores × B` lanes in steady state.
+//! Shards share only the read-only `Arc<Model>`; the SoA state planes
+//! are per-shard, so nothing on the hot path crosses a shard boundary
+//! and there are no locks to contend. Each connection hashes to a *home
+//! shard* (a pure function of its connection key, which the wire layer
+//! derives from the peer IP — so a reconnecting client lands on the same
+//! shard) that holds its streaming state; stateless predicts are dealt
+//! to the least-loaded shard. `--shards 1` reproduces the
+//! single-front server bit-exactly; every shard count is bit-identical
+//! on the wire regardless, because shards never share mutable state.
 //!
 //! ## Micro-batching front
 //!
-//! Connection handlers do NOT run the engine. They enqueue jobs on a
-//! [`BatchFront`] and a single sweeper thread drains the queue:
+//! Connection handlers do NOT run the engine. They enqueue jobs on their
+//! shard's [`BatchFront`] and its sweeper thread drains the queue:
 //! concurrent `predict` requests coalesce into one stateless
 //! [`BatchEsn`] sweep (one pass over `Λ`/`[W_in]_Q` amortized across the
-//! batch), and per-connection `stream` states live as lanes of one
-//! persistent [`BatchEsn`] hub whose pending requests advance together in
-//! a masked sweep. The per-lane arithmetic is bit-identical to the
-//! sequential engine, so batching is invisible to clients — responses are
-//! bit-for-bit what a one-request-at-a-time server would produce (tested
-//! here and in `rust/tests/pipeline.rs`).
+//! batch, with the engine reused from a per-sweeper pool keyed by the
+//! padded lane-width bucket), and per-connection `stream` states live as
+//! lanes of one
+//! persistent [`BatchEsn`] hub whose pending requests advance together
+//! in a branchless masked sweep. The per-lane arithmetic is
+//! bit-identical to the sequential engine, so batching is invisible to
+//! clients — responses are bit-for-bit what a one-request-at-a-time
+//! server would produce (tested here and in `rust/tests/pipeline.rs`).
 //!
 //! The sweeper supports an **adaptive hold-off window** (opt-in via
 //! [`serve_with_holdoff`] / [`BatchFront::start_with_holdoff`]; [`serve`]
 //! drains immediately): when the queue is shallow it waits up to the
 //! configured microseconds for more jobs to coalesce; a batch-worthy
-//! queue (or shutdown) drains immediately. The window trades per-request
-//! latency on light request/response traffic for fewer, larger sweeps —
-//! worthwhile only when many clients arrive together. Queue depth, sweep
-//! count, hold-off, and engine precision are exported through `info`.
+//! queue (or shutdown) drains immediately. Queue depth, sweep count,
+//! hold-off, engine precision, and the shard topology are exported
+//! through `info`.
 //!
 //! ## Precision
 //!
-//! The hub (and every coalesced predict engine) runs at the model's
+//! The hub (and every pooled predict engine) runs at the model's
 //! [`Precision`]: `F64` is the bit-exact oracle path, `F32` serves from
 //! the f32 SoA lane engine — half the state traffic, twice the SIMD
 //! width, the compiled HLO kernels' precision point. The wire protocol is
@@ -49,32 +64,23 @@
 //!
 //! Every path is fused (state → readout each step): the request path does
 //! `O(N + N·D_out)` work per step and never materializes a `[T × N]`
-//! trajectory. Connections beyond the hub's lane capacity fall back to a
-//! local per-connection state with the same arithmetic.
+//! trajectory. Connections beyond their home hub's lane capacity fall
+//! back to a local per-connection state with the same arithmetic.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+mod front;
+mod pool;
+mod shard;
+mod wire;
 
-use anyhow::{anyhow, Result};
+pub use front::BatchFront;
+pub use shard::ShardedFront;
+pub use wire::{serve, serve_sharded, serve_with_holdoff, Client};
+
+use std::sync::Mutex;
 
 use crate::linalg::Mat;
 use crate::readout::Readout;
 use crate::reservoir::{BatchEsn, DiagonalEsn, LaneReadout, QBasisEsn};
-use crate::util::json::{parse, Json};
-use crate::util::Timer;
-
-/// Max predict requests folded into one stateless sweep.
-const MAX_PREDICT_BATCH: usize = 32;
-/// Streaming-state lanes in the persistent hub (connections beyond this
-/// fall back to local per-connection state).
-const STREAM_LANES: usize = 64;
-/// Queue depth at which the sweeper skips the hold-off and drains
-/// immediately — the "under load" threshold.
-const HOLDOFF_DRAIN_DEPTH: usize = 4;
 
 /// Native engine precision of the serving path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,12 +103,19 @@ impl Precision {
 
 /// A servable model: reservoir + trained readout + the interleaved-layout
 /// serving twin ([`QBasisEsn`]) that the fused request path runs on, plus
-/// the [`Precision`] every serving engine is built at.
+/// the [`Precision`] every serving engine is built at. Shared read-only
+/// (`Arc<Model>`) across every shard's sweeper and connection handler.
 pub struct Model {
     pub esn: DiagonalEsn,
     pub qesn: QBasisEsn,
     pub readout: Readout,
     pub precision: Precision,
+    /// Cached 1-lane f32 engine for the hub-less [`Model::predict`] path
+    /// (the dead-sweeper fallback / test oracle used to build one per
+    /// call — parameter downcast + plane allocation). Interior mutability
+    /// because `predict` takes `&self` and the model is shared; the lock
+    /// is uncontended off the fallback path.
+    f32_local: Mutex<Option<(BatchEsn<f32>, LaneReadout<f32>)>>,
 }
 
 impl Model {
@@ -124,6 +137,7 @@ impl Model {
             qesn,
             readout,
             precision,
+            f32_local: Mutex::new(None),
         }
     }
 
@@ -141,720 +155,77 @@ impl Model {
             Precision::F32 => {
                 // mirror the front's per-lane arithmetic exactly (lane
                 // results are position/batch-size independent, so a
-                // 1-lane engine is bit-identical to any hub lane)
-                let mut engine =
-                    BatchEsn::<f32>::with_precision(self.qesn.clone(), 1);
-                if self.readout.w.cols() == 1 {
-                    let mut outs = engine
-                        .sweep_streams(&[(0, input)], &self.readout);
-                    outs.pop().unwrap_or_default()
-                } else {
-                    let u = Mat::from_rows(input.len(), 1, input);
-                    let y = engine.run_readout(&u, &self.readout);
-                    (0..y.rows()).map(|t| y[(t, 0)]).collect()
-                }
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// precision-dispatched lane engine
-// ---------------------------------------------------------------------------
-
-/// A [`BatchEsn`] at the model's serving precision, paired with the
-/// readout pre-cast to that precision so per-round sweeps stay
-/// allocation-free. All `BatchEsn` APIs are f64 at the boundary, so
-/// dispatch is a plain match.
-enum Hub {
-    F64(BatchEsn<f64>, LaneReadout<f64>),
-    F32(BatchEsn<f32>, LaneReadout<f32>),
-}
-
-impl Hub {
-    fn new(model: &Model, lanes: usize) -> Self {
-        match model.precision {
-            Precision::F64 => Hub::F64(
-                BatchEsn::new(model.qesn.clone(), lanes),
-                LaneReadout::new(&model.readout),
-            ),
-            Precision::F32 => Hub::F32(
-                BatchEsn::<f32>::with_precision(model.qesn.clone(), lanes),
-                LaneReadout::new(&model.readout),
-            ),
-        }
-    }
-
-    fn sweep_streams(&mut self, reqs: &[(usize, &[f64])]) -> Vec<Vec<f64>> {
-        match self {
-            Hub::F64(e, ro) => e.sweep_streams_cast(reqs, ro),
-            Hub::F32(e, ro) => e.sweep_streams_cast(reqs, ro),
-        }
-    }
-
-    fn run_readout(&mut self, u: &Mat) -> Mat {
-        match self {
-            Hub::F64(e, ro) => e.run_readout_cast(u, ro),
-            Hub::F32(e, ro) => e.run_readout_cast(u, ro),
-        }
-    }
-
-    fn reset_lane(&mut self, lane: usize) {
-        match self {
-            Hub::F64(e, _) => e.reset_lane(lane),
-            Hub::F32(e, _) => e.reset_lane(lane),
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// micro-batching front
-// ---------------------------------------------------------------------------
-
-enum FrontJob {
-    Predict {
-        input: Vec<f64>,
-        reply: mpsc::Sender<Vec<f64>>,
-    },
-    Stream {
-        lane: usize,
-        input: Vec<f64>,
-        reply: mpsc::Sender<Vec<f64>>,
-    },
-    /// Zero a hub lane. `reply` is `Some` for a client-visible `reset`
-    /// (synchronous), `None` when recycling a released lane.
-    Reset {
-        lane: usize,
-        reply: Option<mpsc::Sender<()>>,
-    },
-}
-
-struct FrontState {
-    jobs: Vec<FrontJob>,
-    shutdown: bool,
-}
-
-/// Shared queue between connection handlers and the sweeper thread.
-pub struct BatchFront {
-    model: Arc<Model>,
-    state: Mutex<FrontState>,
-    cv: Condvar,
-    free_lanes: Mutex<Vec<usize>>,
-    sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
-    /// Coalescing window: with a shallow queue the sweeper waits up to
-    /// this long for more jobs before draining; zero = drain immediately.
-    holdoff: Duration,
-    /// Total sweep rounds drained (metrics; exported via `info`).
-    sweeps: AtomicU64,
-}
-
-impl BatchFront {
-    /// Spawn the sweeper and return the shared front (no hold-off: every
-    /// wake drains immediately — the legacy behavior).
-    pub fn start(model: Arc<Model>) -> Arc<Self> {
-        Self::start_with_holdoff(model, 0)
-    }
-
-    /// Spawn the sweeper with an adaptive micro-batch hold-off window:
-    /// when fewer than a handful of jobs are queued, the sweeper waits up
-    /// to `holdoff_us` µs for more to coalesce; under load (queue already
-    /// batch-worthy) or on shutdown it drains immediately.
-    pub fn start_with_holdoff(model: Arc<Model>, holdoff_us: u64) -> Arc<Self> {
-        let front = Arc::new(Self {
-            model,
-            state: Mutex::new(FrontState {
-                jobs: Vec::new(),
-                shutdown: false,
-            }),
-            cv: Condvar::new(),
-            // lane 0 handed out first
-            free_lanes: Mutex::new((0..STREAM_LANES).rev().collect()),
-            sweeper: Mutex::new(None),
-            holdoff: Duration::from_micros(holdoff_us),
-            sweeps: AtomicU64::new(0),
-        });
-        let worker = Arc::clone(&front);
-        let handle = std::thread::Builder::new()
-            .name("lr-batch-sweeper".into())
-            .spawn(move || {
-                // a panic inside a sweep (engine assert) must not freeze
-                // the server: mark the front dead and drop stranded jobs
-                // so blocked reply receivers unblock into their fallbacks
-                let res = std::panic::catch_unwind(
-                    std::panic::AssertUnwindSafe(|| worker.sweeper_loop()),
-                );
-                let mut st = worker.state.lock().unwrap();
-                st.shutdown = true;
-                st.jobs.clear();
-                drop(st);
-                if res.is_err() {
-                    eprintln!("lr-batch-sweeper died; serving falls back to direct compute");
-                }
-            })
-            .expect("spawn sweeper");
-        *front.sweeper.lock().unwrap() = Some(handle);
-        front
-    }
-
-    /// Stop the sweeper once the queue drains (idempotent).
-    pub fn shutdown(&self) {
-        self.state.lock().unwrap().shutdown = true;
-        self.cv.notify_all();
-        if let Some(h) = self.sweeper.lock().unwrap().take() {
-            let _ = h.join();
-        }
-    }
-
-    /// Enqueue a job. Returns `false` (job dropped) when the sweeper is
-    /// gone — callers use their fallback path instead of blocking.
-    fn submit(&self, job: FrontJob) -> bool {
-        {
-            let mut st = self.state.lock().unwrap();
-            if st.shutdown {
-                return false;
-            }
-            st.jobs.push(job);
-        }
-        self.cv.notify_all();
-        true
-    }
-
-    fn acquire_lane(&self) -> Option<usize> {
-        self.free_lanes.lock().unwrap().pop()
-    }
-
-    /// Queue a zeroing of the lane, THEN return it to the free list — the
-    /// queue is processed in submission order, so the next owner's first
-    /// request always sees a fresh state.
-    fn release_lane(&self, lane: usize) {
-        self.submit(FrontJob::Reset { lane, reply: None });
-        self.free_lanes.lock().unwrap().push(lane);
-    }
-
-    /// Current queued-job count (metrics; exported via `info`).
-    pub fn queue_depth(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
-    }
-
-    /// Total sweep rounds drained so far (metrics; exported via `info`).
-    pub fn sweep_count(&self) -> u64 {
-        self.sweeps.load(Ordering::Relaxed)
-    }
-
-    /// Stateless prediction through the batch queue. Falls back to a
-    /// direct (bit-identical, same-precision) computation if the sweeper
-    /// is gone.
-    pub fn predict(&self, input: Vec<f64>) -> Vec<f64> {
-        let (tx, rx) = mpsc::channel();
-        let queued = self.submit(FrontJob::Predict {
-            input: input.clone(),
-            reply: tx,
-        });
-        if queued {
-            // a dying sweeper drops stranded jobs, so this cannot hang
-            if let Ok(out) = rx.recv() {
-                return out;
-            }
-        }
-        self.model.predict(&input)
-    }
-
-    /// Streaming step(s) on a hub lane (no fallback: the state lives in
-    /// the hub, so a dead sweeper is a hard error).
-    pub fn stream(&self, lane: usize, input: Vec<f64>) -> Result<Vec<f64>> {
-        let (tx, rx) = mpsc::channel();
-        if !self.submit(FrontJob::Stream {
-            lane,
-            input,
-            reply: tx,
-        }) {
-            anyhow::bail!("batch front unavailable");
-        }
-        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
-    }
-
-    /// Synchronous client-visible lane reset.
-    pub fn reset(&self, lane: usize) -> Result<()> {
-        let (tx, rx) = mpsc::channel();
-        if !self.submit(FrontJob::Reset {
-            lane,
-            reply: Some(tx),
-        }) {
-            anyhow::bail!("batch front unavailable");
-        }
-        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
-    }
-
-    fn sweeper_loop(&self) {
-        // persistent streaming hub, one lane per connection, at the
-        // model's precision
-        let mut hub = Hub::new(&self.model, STREAM_LANES);
-        loop {
-            let drained = {
-                let mut st = self.state.lock().unwrap();
-                loop {
-                    if !st.jobs.is_empty() {
-                        // shallow queue: hold off briefly so concurrent
-                        // requests coalesce into one sweep; deep queue or
-                        // shutdown: drain now
-                        if !self.holdoff.is_zero()
-                            && st.jobs.len() < HOLDOFF_DRAIN_DEPTH
-                            && !st.shutdown
-                        {
-                            let start = Instant::now();
-                            while st.jobs.len() < HOLDOFF_DRAIN_DEPTH
-                                && !st.shutdown
-                            {
-                                match self.holdoff.checked_sub(start.elapsed())
-                                {
-                                    None => break,
-                                    Some(left) => {
-                                        let (guard, _) = self
-                                            .cv
-                                            .wait_timeout(st, left)
-                                            .unwrap();
-                                        st = guard;
-                                    }
-                                }
-                            }
-                        }
-                        break std::mem::take(&mut st.jobs);
+                // 1-lane engine is bit-identical to any hub lane); the
+                // engine + pre-cast readout are cached so repeated
+                // fallback predicts stop paying the parameter downcast
+                // and plane allocation — reset-on-use keeps the cached
+                // engine indistinguishable from a fresh one.
+                //
+                // The cache is an optimization, never a bottleneck:
+                // try_lock means concurrent fallback predicts (many
+                // handler threads racing after a sweeper death) run on
+                // transient engines in parallel instead of serializing
+                // whole O(T·N) sweeps behind the mutex, and a poisoned
+                // lock (panic mid-sweep) is recovered rather than
+                // propagated — reset-on-use makes any inherited state
+                // irrelevant. Both paths are bit-identical.
+                use std::sync::TryLockError;
+                let mut guard = match self.f32_local.try_lock() {
+                    Ok(g) => Some(g),
+                    Err(TryLockError::Poisoned(p)) => Some(p.into_inner()),
+                    Err(TryLockError::WouldBlock) => None,
+                };
+                match guard.as_mut() {
+                    Some(cached) => {
+                        let (engine, ro) = cached.get_or_insert_with(|| {
+                            (
+                                BatchEsn::<f32>::with_precision(
+                                    self.qesn.clone(),
+                                    1,
+                                ),
+                                LaneReadout::new(&self.readout),
+                            )
+                        });
+                        predict_f32_lane(engine, ro, input)
                     }
-                    if st.shutdown {
-                        return;
-                    }
-                    st = self.cv.wait(st).unwrap();
-                }
-            };
-            self.sweeps.fetch_add(1, Ordering::Relaxed);
-            self.process(&mut hub, drained);
-        }
-    }
-
-    /// Drain one batch of jobs: predicts coalesce into stateless sweeps;
-    /// stream/reset jobs are grouped into rounds that preserve per-lane
-    /// submission order (lanes are independent, so cross-lane reordering
-    /// is unobservable).
-    fn process(&self, hub: &mut Hub, drained: Vec<FrontJob>) {
-        let mut predicts: Vec<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
-        let mut round: Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
-        let mut in_round = [false; STREAM_LANES];
-
-        let flush_round =
-            |round: &mut Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)>,
-             in_round: &mut [bool; STREAM_LANES],
-             hub: &mut Hub| {
-                if round.is_empty() {
-                    return;
-                }
-                let reqs: Vec<(usize, &[f64])> = round
-                    .iter()
-                    .map(|(lane, input, _)| (*lane, input.as_slice()))
-                    .collect();
-                let outs = hub.sweep_streams(&reqs);
-                for ((_, _, reply), out) in round.drain(..).zip(outs) {
-                    let _ = reply.send(out);
-                }
-                in_round.fill(false);
-            };
-
-        for job in drained {
-            match job {
-                FrontJob::Predict { input, reply } => predicts.push((input, reply)),
-                FrontJob::Stream { lane, input, reply } => {
-                    if in_round[lane] {
-                        // second request for a lane: close the round first
-                        // so per-lane order is preserved
-                        flush_round(&mut round, &mut in_round, hub);
-                    }
-                    in_round[lane] = true;
-                    round.push((lane, input, reply));
-                }
-                FrontJob::Reset { lane, reply } => {
-                    if in_round[lane] {
-                        flush_round(&mut round, &mut in_round, hub);
-                    }
-                    hub.reset_lane(lane);
-                    if let Some(tx) = reply {
-                        let _ = tx.send(());
+                    None => {
+                        let mut engine = BatchEsn::<f32>::with_precision(
+                            self.qesn.clone(),
+                            1,
+                        );
+                        let ro = LaneReadout::new(&self.readout);
+                        predict_f32_lane(&mut engine, &ro, input)
                     }
                 }
             }
         }
-        flush_round(&mut round, &mut in_round, hub);
-
-        // predicts: stateless — one fresh precision-matched engine per chunk
-        let d_out = self.model.readout.w.cols();
-        let mut start = 0;
-        while start < predicts.len() {
-            let chunk = &predicts[start..(start + MAX_PREDICT_BATCH).min(predicts.len())];
-            start += chunk.len();
-            let k = chunk.len();
-            let mut engine = Hub::new(&self.model, k);
-            if d_out == 1 {
-                // masked sweep: exhausted lanes freeze, so a short request
-                // never pays for the longest one in its batch
-                let reqs: Vec<(usize, &[f64])> = chunk
-                    .iter()
-                    .enumerate()
-                    .map(|(b, (input, _))| (b, input.as_slice()))
-                    .collect();
-                let outs = engine.sweep_streams(&reqs);
-                for ((_, reply), out) in chunk.iter().zip(outs) {
-                    let _ = reply.send(out);
-                }
-            } else {
-                // general D_out: zero-padded full sweep (padded steps are
-                // never read, so outputs are unchanged)
-                let max_len = chunk.iter().map(|(i, _)| i.len()).max().unwrap_or(0);
-                let mut u = Mat::zeros(max_len, k);
-                for (b, (input, _)) in chunk.iter().enumerate() {
-                    for (t, &v) in input.iter().enumerate() {
-                        u[(t, b)] = v;
-                    }
-                }
-                let y = engine.run_readout(&u);
-                for (b, (input, reply)) in chunk.iter().enumerate() {
-                    let out: Vec<f64> =
-                        (0..input.len()).map(|t| y[(t, b * d_out)]).collect();
-                    let _ = reply.send(out);
-                }
-            }
-        }
     }
 }
 
-// ---------------------------------------------------------------------------
-// TCP service
-// ---------------------------------------------------------------------------
-
-/// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks; one
-/// lightweight handler thread per connection, all funneling into the
-/// shared [`BatchFront`] with immediate drain (no hold-off — the
-/// latency-safe default; high-concurrency deployments that prefer
-/// deeper coalescing use [`serve_with_holdoff`]). `max_requests` bounds
-/// the total connections accepted (tests / examples) — all of them are
-/// joined before returning; `None` runs forever.
-pub fn serve(model: Arc<Model>, addr: &str, max_requests: Option<usize>) -> Result<()> {
-    serve_with_holdoff(model, addr, max_requests, 0)
-}
-
-/// [`serve`] with an explicit sweeper hold-off window (µs): with a
-/// shallow queue the sweeper waits up to the window for more requests to
-/// coalesce into one sweep. This trades up to `holdoff_us` of latency on
-/// lightly-loaded request/response traffic for fewer, larger sweeps when
-/// many clients arrive together; a batch-worthy queue always drains
-/// immediately.
-pub fn serve_with_holdoff(
-    model: Arc<Model>,
-    addr: &str,
-    max_requests: Option<usize>,
-    holdoff_us: u64,
-) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    let front = BatchFront::start_with_holdoff(model, holdoff_us);
-    let mut served = 0usize;
-    let mut handles = Vec::new();
-    let mut accept_err: Option<anyhow::Error> = None;
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
-            Err(e) => {
-                // don't early-return: the sweeper and any live handlers
-                // must still be wound down below
-                accept_err = Some(e.into());
-                break;
-            }
-        };
-        let front2 = Arc::clone(&front);
-        let handle = std::thread::spawn(move || {
-            let _ = handle_connection(front2, stream);
-        });
-        served += 1;
-        if let Some(max) = max_requests {
-            handles.push(handle);
-            if served >= max {
-                break;
-            }
-        } else {
-            drop(handle); // detach
-        }
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    front.shutdown();
-    match accept_err {
-        Some(e) => Err(e),
-        None => Ok(()),
+/// One stateless f32 1-lane prediction: zero the engine, sweep, read the
+/// fused outputs. Shared by the cached and transient fallback paths of
+/// [`Model::predict`] so both are the same arithmetic by construction.
+fn predict_f32_lane(
+    engine: &mut BatchEsn<f32>,
+    ro: &LaneReadout<f32>,
+    input: &[f64],
+) -> Vec<f64> {
+    engine.reset();
+    if ro.d_out() == 1 {
+        engine
+            .sweep_streams_cast(&[(0, input)], ro)
+            .pop()
+            .unwrap_or_default()
+    } else {
+        let u = Mat::from_rows(input.len(), 1, input);
+        let y = engine.run_readout_cast(&u, ro);
+        (0..y.rows()).map(|t| y[(t, 0)]).collect()
     }
 }
 
-/// Per-connection fallback streaming state at the oracle precision (used
-/// when the hub is full and the model serves `F64`).
-struct LocalStream {
-    s_re: Vec<f64>,
-    s_im: Vec<f64>,
-}
-
-/// Hub-less streaming state at the model's precision: the `F64` form is
-/// the legacy split-plane walk; the `F32` form is a 1-lane f32 engine
-/// with its pre-cast readout (bit-identical to an f32 hub lane — lane
-/// results are batch-size independent — and allocation-free per round).
-enum LocalFallback {
-    F64(LocalStream),
-    F32(BatchEsn<f32>, LaneReadout<f32>),
-}
-
-/// Per-connection streaming identity: a hub lane is acquired LAZILY on
-/// the first `stream` op (predict-only connections never occupy one) and
-/// kept for the connection's lifetime; once the hub was full for this
-/// connection, it sticks to the local fallback so its state never jumps
-/// between hub and local.
-struct ConnState {
-    lane: Option<usize>,
-    hub_denied: bool,
-    /// Built lazily on the first hub-denied `stream` op — predict-only
-    /// connections (and connections that win a hub lane) never pay for it.
-    local: Option<LocalFallback>,
-}
-
-/// Construct the hub-less streaming state at the model's precision.
-fn local_fallback(model: &Model) -> LocalFallback {
-    match model.precision {
-        Precision::F64 => {
-            let slots = model.esn.spec.slots();
-            LocalFallback::F64(LocalStream {
-                s_re: vec![0.0f64; slots],
-                s_im: vec![0.0f64; slots],
-            })
-        }
-        Precision::F32 => LocalFallback::F32(
-            BatchEsn::<f32>::with_precision(model.qesn.clone(), 1),
-            LaneReadout::new(&model.readout),
-        ),
-    }
-}
-
-fn handle_connection(front: Arc<BatchFront>, stream: TcpStream) -> Result<()> {
-    let mut conn = ConnState {
-        lane: None,
-        hub_denied: false,
-        local: None,
-    };
-    let result = serve_lines(&front, &mut conn, stream);
-    if let Some(l) = conn.lane {
-        front.release_lane(l);
-    }
-    result
-}
-
-fn serve_lines(
-    front: &BatchFront,
-    conn: &mut ConnState,
-    stream: TcpStream,
-) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
-        }
-        let response = match handle_request(front, conn, &line) {
-            Ok(json) => json,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("{e:#}"))),
-            ]),
-        };
-        out.write_all(response.to_string_compact().as_bytes())?;
-        out.write_all(b"\n")?;
-    }
-}
-
-fn handle_request(
-    front: &BatchFront,
-    conn: &mut ConnState,
-    line: &str,
-) -> Result<Json> {
-    let model = &front.model;
-    let req = parse(line.trim())?;
-    let op = req
-        .get("op")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing 'op'"))?;
-    match op {
-        "info" => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("n", Json::Num(model.esn.n() as f64)),
-            ("slots", Json::Num(model.esn.spec.slots() as f64)),
-            ("n_real", Json::Num(model.esn.spec.n_real as f64)),
-            (
-                "spectral_radius",
-                Json::Num(model.esn.spec.radius()),
-            ),
-            ("precision", Json::Str(model.precision.name().into())),
-            ("queue_depth", Json::Num(front.queue_depth() as f64)),
-            ("sweeps", Json::Num(front.sweep_count() as f64)),
-            (
-                "holdoff_us",
-                Json::Num(front.holdoff.as_micros() as f64),
-            ),
-            ("stream_lane", match conn.lane {
-                Some(l) => Json::Num(l as f64),
-                None => Json::Null,
-            }),
-        ])),
-        "predict" => {
-            let input = parse_input(&req)?;
-            let steps = input.len();
-            let t = Timer::start();
-            let output = front.predict(input);
-            let dt = t.elapsed_s().max(1e-12);
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                (
-                    "output",
-                    Json::Arr(output.into_iter().map(Json::Num).collect()),
-                ),
-                (
-                    "steps_per_sec",
-                    Json::Num(steps as f64 / dt),
-                ),
-            ]))
-        }
-        "stream" => {
-            let input = parse_input(&req)?;
-            // first stream op: try to claim a hub lane (and never switch
-            // engines once this connection's streaming has started)
-            if conn.lane.is_none() && !conn.hub_denied {
-                conn.lane = front.acquire_lane();
-                if conn.lane.is_none() {
-                    conn.hub_denied = true;
-                }
-            }
-            let outs = match conn.lane {
-                Some(l) => front.stream(l, input)?,
-                None => {
-                    let local = conn
-                        .local
-                        .get_or_insert_with(|| local_fallback(model));
-                    match local {
-                        LocalFallback::F64(ls) => {
-                            stream_local(model, &input, ls)
-                        }
-                        LocalFallback::F32(engine, ro) => engine
-                            .sweep_streams_cast(&[(0, input.as_slice())], ro)
-                            .pop()
-                            .unwrap_or_default(),
-                    }
-                }
-            };
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("output", Json::Arr(outs.into_iter().map(Json::Num).collect())),
-            ]))
-        }
-        "reset" => {
-            if let Some(l) = conn.lane {
-                front.reset(l)?;
-            }
-            // dropping the lazy fallback IS the reset: it is rebuilt from
-            // the zero state on the next hub-denied stream op
-            conn.local = None;
-            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
-        }
-        other => Err(anyhow!("unknown op {other:?}")),
-    }
-}
-
-/// Hub-less f64 streaming fallback: same arithmetic (and therefore the
-/// same bits) as a hub lane, on connection-local slot planes.
-fn stream_local(model: &Model, input: &[f64], local: &mut LocalStream) -> Vec<f64> {
-    let n = model.esn.n();
-    let mut outs = Vec::with_capacity(input.len());
-    let mut feat = vec![0.0; n];
-    for &u in input {
-        model.esn.step(&mut local.s_re, &mut local.s_im, &[u]);
-        model.esn.write_features(&local.s_re, &local.s_im, &mut feat);
-        // y = b + feat·w (bias-first: the shared accumulation contract)
-        let mut y = model.readout.b[0];
-        for (j, &f) in feat.iter().enumerate() {
-            y += f * model.readout.w[(j, 0)];
-        }
-        outs.push(y);
-    }
-    outs
-}
-
-fn parse_input(req: &Json) -> Result<Vec<f64>> {
-    req.get("input")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing 'input' array"))?
-        .iter()
-        .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric input")))
-        .collect()
-}
-
-/// Minimal client for the examples/tests.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        Ok(Self {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: stream,
-        })
-    }
-
-    pub fn request(&mut self, req: &Json) -> Result<Json> {
-        self.writer
-            .write_all(req.to_string_compact().as_bytes())?;
-        self.writer.write_all(b"\n")?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        parse(line.trim())
-    }
-
-    fn io_op(&mut self, op: &str, input: &[f64]) -> Result<Vec<f64>> {
-        let req = Json::obj(vec![
-            ("op", Json::Str(op.into())),
-            (
-                "input",
-                Json::Arr(input.iter().map(|&x| Json::Num(x)).collect()),
-            ),
-        ]);
-        let resp = self.request(&req)?;
-        anyhow::ensure!(
-            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
-            "server error: {resp:?}"
-        );
-        resp.get("output")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("missing output"))?
-            .iter()
-            .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad output")))
-            .collect()
-    }
-
-    pub fn predict(&mut self, input: &[f64]) -> Result<Vec<f64>> {
-        self.io_op("predict", input)
-    }
-
-    /// Stateful streaming step(s) on this connection's lane.
-    pub fn stream(&mut self, input: &[f64]) -> Result<Vec<f64>> {
-        self.io_op("stream", input)
-    }
-}
-
+/// Shared model fixtures for the subtree's unit tests.
 #[cfg(test)]
-mod tests {
+pub(crate) mod testutil {
     use super::*;
     use crate::readout::{fit, Regularizer};
     use crate::reservoir::EsnConfig;
@@ -862,7 +233,7 @@ mod tests {
     use crate::spectral::uniform::uniform_spectrum;
     use crate::tasks::mso::MsoTask;
 
-    fn make_model() -> Model {
+    pub(crate) fn make_model() -> Model {
         let config = EsnConfig::default().with_n(30).with_sr(0.9).with_seed(1);
         let mut rng = Pcg64::new(1, 2);
         let spec = uniform_spectrum(30, 0.9, &mut rng);
@@ -876,261 +247,57 @@ mod tests {
         Model::new(esn, readout)
     }
 
-    fn make_model_f32() -> Model {
+    pub(crate) fn make_model_f32() -> Model {
         let m = make_model();
         Model::with_precision(m.esn, m.readout, Precision::F32)
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{make_model, make_model_f32};
+    use super::*;
 
     #[test]
-    fn predict_and_stream_agree() {
-        let model = make_model();
-        let task = MsoTask::new(1);
-        let input = &task.input[..50];
-        let batch = model.predict(input);
-        // streaming path (local fallback arithmetic)
-        let mut local = LocalStream {
-            s_re: vec![0.0; model.esn.spec.slots()],
-            s_im: vec![0.0; model.esn.spec.slots()],
-        };
-        let line_out = stream_local(&model, input, &mut local);
-        for (a, b) in batch.iter().zip(&line_out) {
-            assert!((a - b).abs() < 1e-10);
-        }
-    }
-
-    #[test]
-    fn batched_front_predict_is_bit_identical_to_model_predict() {
-        // the batching contract: coalescing must be invisible — same bits
-        let model = Arc::new(make_model());
-        let front = BatchFront::start(Arc::clone(&model));
-        let task = MsoTask::new(2);
-        let inputs: Vec<Vec<f64>> = (0..7)
-            .map(|i| task.input[i * 10..i * 10 + 35 + i].to_vec())
-            .collect();
-        // submit all jobs before the sweeper can drain them one by one:
-        // hold the queue lock while enqueueing
-        let replies: Vec<mpsc::Receiver<Vec<f64>>> = {
-            let mut st = front.state.lock().unwrap();
-            inputs
-                .iter()
-                .map(|input| {
-                    let (tx, rx) = mpsc::channel();
-                    st.jobs.push(FrontJob::Predict {
-                        input: input.clone(),
-                        reply: tx,
-                    });
-                    rx
-                })
-                .collect()
-        };
-        front.cv.notify_all();
-        for (input, rx) in inputs.iter().zip(replies) {
-            let batched = rx.recv().unwrap();
-            let sequential = model.predict(input);
-            assert_eq!(batched.len(), sequential.len());
-            for (a, b) in batched.iter().zip(&sequential) {
-                assert!(
-                    (a - b).abs() == 0.0,
-                    "batched predict must be bit-identical: {a} vs {b}"
-                );
-            }
-        }
-        front.shutdown();
-    }
-
-    #[test]
-    fn hub_lanes_are_isolated_and_match_sequential_streaming() {
-        let model = Arc::new(make_model());
-        let front = BatchFront::start(Arc::clone(&model));
-        let task = MsoTask::new(1);
-        let a = front.acquire_lane().unwrap();
-        let b = front.acquire_lane().unwrap();
-        assert_ne!(a, b);
-        // interleave chunks on two lanes
-        let in_a = &task.input[..40];
-        let in_b = &task.input[200..230];
-        let mut got_a = front.stream(a, in_a[..15].to_vec()).unwrap();
-        let mut got_b = front.stream(b, in_b[..7].to_vec()).unwrap();
-        got_a.extend(front.stream(a, in_a[15..].to_vec()).unwrap());
-        got_b.extend(front.stream(b, in_b[7..].to_vec()).unwrap());
-        // reference: each stream alone
-        let reference = |input: &[f64]| {
-            let mut local = LocalStream {
-                s_re: vec![0.0; model.esn.spec.slots()],
-                s_im: vec![0.0; model.esn.spec.slots()],
-            };
-            stream_local(&model, input, &mut local)
-        };
-        for (got, want) in [(got_a, reference(in_a)), (got_b, reference(in_b))] {
-            assert_eq!(got.len(), want.len());
-            for (x, y) in got.iter().zip(&want) {
-                assert!((x - y).abs() < 1e-10, "{x} vs {y}");
-            }
-        }
-        // reset isolates too: lane a resets, lane b keeps its state
-        front.reset(a).unwrap();
-        let fresh = front.stream(a, in_a[..5].to_vec()).unwrap();
-        let ref_a = reference(in_a);
-        for (x, y) in fresh.iter().zip(&ref_a[..5]) {
-            assert!((x - y).abs() < 1e-10);
-        }
-        front.release_lane(a);
-        front.release_lane(b);
-        front.shutdown();
-    }
-
-    #[test]
-    fn end_to_end_over_tcp() {
-        let model = Arc::new(make_model());
-        let addr = "127.0.0.1:47391";
-        let server_model = Arc::clone(&model);
-        let handle = std::thread::spawn(move || {
-            serve(server_model, addr, Some(1)).unwrap();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        let mut client = Client::connect(addr).unwrap();
-        let task = MsoTask::new(1);
-        let out = client.predict(&task.input[..40]).unwrap();
-        assert_eq!(out.len(), 40);
-        let direct = model.predict(&task.input[..40]);
-        for (a, b) in out.iter().zip(&direct) {
-            assert!((a - b).abs() < 1e-9);
-        }
-        // info op
-        let resp = client
-            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
-            .unwrap();
-        assert_eq!(resp.get("n").unwrap().as_usize(), Some(30));
-        drop(client);
-        handle.join().unwrap();
-    }
-
-    #[test]
-    fn f32_front_predict_matches_f32_model_predict_bitwise() {
-        // precision consistency contract: at F32 every path (coalesced
-        // sweep, fallback, Model::predict) runs the same f32 lane
-        // arithmetic, so responses stay bit-identical across paths
-        let model = Arc::new(make_model_f32());
-        assert_eq!(model.precision, Precision::F32);
-        let front = BatchFront::start(Arc::clone(&model));
-        let task = MsoTask::new(2);
-        for i in 0..5 {
-            let input = task.input[i * 13..i * 13 + 30 + i].to_vec();
-            let batched = front.predict(input.clone());
-            let direct = model.predict(&input);
-            assert_eq!(batched.len(), direct.len());
-            for (a, b) in batched.iter().zip(&direct) {
-                assert!(
-                    (a - b).abs() == 0.0,
-                    "f32 batched predict must be bit-identical: {a} vs {b}"
-                );
-            }
-            // and the f32 result is close to (but generally not equal to)
-            // the f64 oracle
-            let oracle = {
-                let u = Mat::from_rows(input.len(), 1, &input);
-                let y = model.qesn.run_readout(&u, &model.readout);
-                (0..y.rows()).map(|t| y[(t, 0)]).collect::<Vec<f64>>()
-            };
-            let scale =
-                oracle.iter().fold(1.0f64, |m, x| m.max(x.abs()));
-            for (a, b) in batched.iter().zip(&oracle) {
-                assert!((a - b).abs() < 1e-3 * scale, "{a} vs oracle {b}");
-            }
-        }
-        front.shutdown();
-    }
-
-    #[test]
-    fn f32_hub_streaming_matches_single_lane_f32_reference() {
-        let model = Arc::new(make_model_f32());
-        let front = BatchFront::start(Arc::clone(&model));
-        let task = MsoTask::new(1);
-        let lane = front.acquire_lane().unwrap();
-        let input = &task.input[..48];
-        let mut got = front.stream(lane, input[..17].to_vec()).unwrap();
-        got.extend(front.stream(lane, input[17..].to_vec()).unwrap());
-        // reference: a private 1-lane f32 engine (the F32 local fallback)
-        let mut reference =
-            BatchEsn::<f32>::with_precision(model.qesn.clone(), 1);
-        let want = reference
-            .sweep_streams(&[(0, input)], &model.readout)
-            .pop()
-            .unwrap();
-        assert_eq!(got.len(), want.len());
-        for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+    fn f32_model_predict_caches_its_lane_engine() {
+        let model = make_model_f32();
+        let input: Vec<f64> = (0..40).map(|t| (t as f64 * 0.17).sin()).collect();
+        assert!(model.f32_local.lock().unwrap().is_none());
+        let first = model.predict(&input);
+        assert!(
+            model.f32_local.lock().unwrap().is_some(),
+            "first f32 predict must populate the cached engine"
+        );
+        // repeated predicts reuse the cached engine bit-identically
+        let second = model.predict(&input);
+        assert_eq!(first.len(), second.len());
+        for (a, b) in first.iter().zip(&second) {
             assert!(
                 (a - b).abs() == 0.0,
-                "f32 hub lane diverged from 1-lane reference at t={t}: {a} vs {b}"
+                "cached f32 engine changed bits: {a} vs {b}"
             );
         }
-        front.release_lane(lane);
-        front.shutdown();
+        // and a different input afterwards still starts from zero state
+        let shifted: Vec<f64> = input.iter().map(|x| x + 0.5).collect();
+        let fresh_model = make_model_f32();
+        let want = fresh_model.predict(&shifted);
+        let got = model.predict(&shifted);
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() == 0.0,
+                "cached engine leaked state across predicts: {a} vs {b}"
+            );
+        }
     }
 
     #[test]
-    fn holdoff_front_coalesces_and_counts_sweeps() {
-        let model = Arc::new(make_model());
-        // generous hold-off so concurrently-submitted jobs coalesce
-        let front = BatchFront::start_with_holdoff(Arc::clone(&model), 2_000);
-        let task = MsoTask::new(2);
-        let inputs: Vec<Vec<f64>> = (0..3)
-            .map(|i| task.input[i * 11..i * 11 + 25 + i].to_vec())
-            .collect();
-        let mut workers = Vec::new();
-        for input in inputs {
-            let f = Arc::clone(&front);
-            let m = Arc::clone(&model);
-            workers.push(std::thread::spawn(move || {
-                let got = f.predict(input.clone());
-                let want = m.predict(&input);
-                assert_eq!(got.len(), want.len());
-                for (a, b) in got.iter().zip(&want) {
-                    assert!((a - b).abs() == 0.0);
-                }
-            }));
-        }
-        for w in workers {
-            w.join().unwrap();
-        }
-        // all replies delivered ⇒ at least one sweep ran; with the
-        // hold-off they usually coalesce into exactly one
-        assert!(front.sweep_count() >= 1);
-        assert_eq!(front.queue_depth(), 0);
-        front.shutdown();
-    }
-
-    #[test]
-    fn info_reports_precision_and_sweeper_metrics() {
-        let model = Arc::new(make_model_f32());
-        let addr = "127.0.0.1:47417";
-        let server_model = Arc::clone(&model);
-        let handle = std::thread::spawn(move || {
-            serve(server_model, addr, Some(1)).unwrap();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        let mut client = Client::connect(addr).unwrap();
-        let task = MsoTask::new(1);
-        // drive at least one sweep through the front
-        let out = client.predict(&task.input[..20]).unwrap();
-        assert_eq!(out.len(), 20);
-        let resp = client
-            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
-            .unwrap();
-        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
-        assert_eq!(
-            resp.get("precision").and_then(Json::as_str),
-            Some("f32")
+    fn f64_model_predict_unaffected_by_cache() {
+        let model = make_model();
+        let input: Vec<f64> = (0..30).map(|t| (t as f64 * 0.2).cos()).collect();
+        let _ = model.predict(&input);
+        assert!(
+            model.f32_local.lock().unwrap().is_none(),
+            "f64 path must not build the f32 cache"
         );
-        assert!(resp.get("sweeps").and_then(Json::as_f64).unwrap() >= 1.0);
-        assert!(resp.get("queue_depth").and_then(Json::as_f64).is_some());
-        // serve() runs with immediate drain; the hold-off is opt-in via
-        // serve_with_holdoff / start_with_holdoff
-        assert_eq!(
-            resp.get("holdoff_us").and_then(Json::as_f64),
-            Some(0.0)
-        );
-        drop(client);
-        handle.join().unwrap();
     }
 }

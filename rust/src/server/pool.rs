@@ -1,0 +1,122 @@
+//! Pooled stateless predict engines, keyed by chunk size.
+//!
+//! Every coalesced predict chunk used to construct a fresh precision-
+//! matched [`super::front::Hub`] — a clone of the `(Λ, [W_in]_Q)`
+//! parameter set, a parameter downcast (at f32), and three plane
+//! allocations, paid per chunk on the hot path. Chunk sizes repeat
+//! heavily in steady state (bounded by `MAX_PREDICT_BATCH`, and under
+//! load almost always exactly `MAX_PREDICT_BATCH` or the queue
+//! remainder), so the sweeper keeps one engine per chunk size it has
+//! seen and re-issues it after a lane reset — `O(slots × B⁺)` zeroing
+//! instead of construction.
+//!
+//! The pool is owned by the sweeper thread (one per shard): no locks,
+//! no sharing. Statelessness is preserved by construction: an engine is
+//! zeroed on checkout, so a pooled sweep is bit-identical to one on a
+//! freshly built engine (tested in `front.rs` and implied by every
+//! bit-identity test that routes predicts through the front).
+//!
+//! Keys are **bucketed to the padded lane width**: `BatchEsn` pads its
+//! lane count up to `Scalar::LANES` anyway (8 at f64, 16 at f32), so an
+//! engine built for `k` lanes and one built for `⌈k/LANES⌉·LANES` lanes
+//! have byte-identical planes and do byte-identical work — and lane
+//! results are independent of batch size and position (a tested engine
+//! property), so serving a k-request chunk from the bucket-width engine
+//! is bit-identical to a k-width engine. One engine per bucket (4 at
+//! f64, 2 at f32 with the 32-predict cap) instead of one per chunk size.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::num::Scalar;
+
+use super::front::Hub;
+use super::{Model, Precision};
+
+/// Per-sweeper cache of stateless predict engines, keyed by the padded
+/// lane-width bucket.
+pub(crate) struct EnginePool {
+    model: Arc<Model>,
+    engines: HashMap<usize, Hub>,
+    built: u64,
+}
+
+impl EnginePool {
+    pub(crate) fn new(model: Arc<Model>) -> Self {
+        Self {
+            model,
+            engines: HashMap::new(),
+            built: 0,
+        }
+    }
+
+    /// `lanes` rounded up to the model precision's padded lane width —
+    /// the engine size `BatchEsn` would pad to internally anyway.
+    fn bucket(&self, lanes: usize) -> usize {
+        let w = match self.model.precision {
+            Precision::F64 => <f64 as Scalar>::LANES,
+            Precision::F32 => <f32 as Scalar>::LANES,
+        };
+        lanes.div_ceil(w) * w
+    }
+
+    /// Check out a pooled engine with at least `lanes` lanes (exactly the
+    /// bucket width), building it on first use. The engine comes back
+    /// zeroed, so callers see fresh-construction semantics either way;
+    /// lanes beyond the caller's chunk stay zero and unobservable.
+    pub(crate) fn get(&mut self, lanes: usize) -> &mut Hub {
+        use std::collections::hash_map::Entry;
+        let bucket = self.bucket(lanes);
+        let hub = match self.engines.entry(bucket) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                self.built += 1;
+                v.insert(Hub::new(&self.model, bucket))
+            }
+        };
+        hub.reset();
+        hub
+    }
+
+    /// Distinct engines constructed so far (metrics: flat once warm).
+    pub(crate) fn built(&self) -> u64 {
+        self.built
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::make_model;
+    use super::*;
+
+    #[test]
+    fn pool_builds_once_per_bucket_and_resets_state() {
+        // f64 model → bucket width 8: chunk sizes 1..=8 share one engine
+        let model = Arc::new(make_model());
+        let mut pool = EnginePool::new(Arc::clone(&model));
+        let input: Vec<f64> = (0..20).map(|t| (t as f64 * 0.1).sin()).collect();
+
+        let reqs: [(usize, &[f64]); 2] =
+            [(0, input.as_slice()), (1, input.as_slice())];
+        let first = pool.get(2).sweep_streams(&reqs).pop().unwrap();
+        assert_eq!(pool.built(), 1);
+        // same bucket → reused engine, zeroed on checkout: identical
+        let again = pool.get(2).sweep_streams(&reqs).pop().unwrap();
+        assert_eq!(pool.built(), 1, "chunk size 2 must not rebuild");
+        assert_eq!(first, again, "pooled engine must be stateless");
+        // bit-identity across bucket sharing: the engine is batch-size
+        // independent per lane, so the bucket-width sweep equals the
+        // sequential model path exactly
+        let direct = model.predict(&input);
+        assert_eq!(first, direct, "bucketed sweep must match Model::predict");
+        // chunk size 5 lands in the same 8-wide bucket: no rebuild
+        let _ = pool.get(5);
+        assert_eq!(pool.built(), 1, "sizes 1..=8 share the f64 bucket");
+        // size 9 crosses into the next bucket
+        let _ = pool.get(9);
+        assert_eq!(pool.built(), 2);
+        // and the original bucket is still cached
+        let _ = pool.get(8);
+        assert_eq!(pool.built(), 2);
+    }
+}

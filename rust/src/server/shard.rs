@@ -1,0 +1,334 @@
+//! Shard-per-core serving: `S` independent [`BatchFront`] sweepers behind
+//! one dispatch facade, turning the box into `cores × B` lanes.
+//!
+//! One `BatchFront` sweeper is single-core by design — every connection
+//! funnels into one job queue drained by one thread, so one core does all
+//! the arithmetic no matter how many the box has. The diagonal step is
+//! embarrassingly parallel across lanes AND across users, and the SoA
+//! planes already isolate lane state, so sharding is pure replication:
+//! each shard owns its own sweeper thread, job queue, streaming-lane hub,
+//! and pooled predict engines, and shares only the read-only
+//! `Arc<Model>`. Nothing on the hot path crosses a shard boundary, so
+//! there are no locks to contend — aggregate throughput scales with
+//! shard count until memory bandwidth saturates.
+//!
+//! Dispatch policy:
+//! * **streams** — each connection hashes (SplitMix64 of its connection
+//!   key) to a *home shard* and keeps it for the connection's lifetime:
+//!   per-connection state never migrates. The map is a pure function of
+//!   the key, so identical keys always land on the same shard; the wire
+//!   layer derives the key from the peer IP, which makes shard placement
+//!   stable across reconnects (tested).
+//! * **stateless predicts** — dealt to the least-loaded shard (smallest
+//!   queue) with a rotating tie-break, so a burst fills all sweepers
+//!   instead of queueing behind one.
+//!
+//! With `S = 1` the facade is exactly the PR-2 single-front server —
+//! same sweeper, same arithmetic, bit-identical responses (tested).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::Result;
+
+use super::front::BatchFront;
+use super::Model;
+
+/// `S` independent micro-batching fronts plus the dispatch policy.
+pub struct ShardedFront {
+    shards: Vec<Arc<BatchFront>>,
+    /// Rotating offset for the least-loaded predict deal's tie-break.
+    rr: AtomicUsize,
+}
+
+impl ShardedFront {
+    /// Spawn `shards` sweepers (≥ 1; clamped) with immediate drain.
+    pub fn start(model: Arc<Model>, shards: usize) -> Arc<Self> {
+        Self::start_with_holdoff(model, shards, 0)
+    }
+
+    /// Spawn `shards` sweepers, each with the given hold-off window (µs).
+    pub fn start_with_holdoff(
+        model: Arc<Model>,
+        shards: usize,
+        holdoff_us: u64,
+    ) -> Arc<Self> {
+        let shards = shards.max(1);
+        let fronts = (0..shards)
+            .map(|i| {
+                BatchFront::start_named(
+                    Arc::clone(&model),
+                    holdoff_us,
+                    format!("lr-shard-{i}-sweeper"),
+                )
+            })
+            .collect();
+        Arc::new(Self {
+            shards: fronts,
+            rr: AtomicUsize::new(0),
+        })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Direct access to shard `i` (streaming lanes live on a shard).
+    pub fn shard(&self, i: usize) -> &Arc<BatchFront> {
+        &self.shards[i]
+    }
+
+    /// The model every shard serves.
+    pub fn model(&self) -> &Arc<Model> {
+        self.shards[0].model()
+    }
+
+    /// Home shard for a connection key: a pure function of the key
+    /// (SplitMix64, uniform across shards) — the same key maps to the
+    /// same shard on every call, on every run, at the same shard count.
+    /// The wire layer derives the key from the peer IP (not the
+    /// ephemeral port), so a reconnecting client hashes back to its
+    /// previous home shard; any caller-supplied persistent identity gets
+    /// the same stability from this function.
+    pub fn shard_for_key(&self, key: u64) -> usize {
+        (crate::rng::splitmix64_mix(key) % self.shards.len() as u64) as usize
+    }
+
+    /// The home front for a connection key.
+    pub fn home(&self, key: u64) -> &Arc<BatchFront> {
+        &self.shards[self.shard_for_key(key)]
+    }
+
+    /// Least-loaded shard for a stateless job, rotating the scan start so
+    /// ties spread round-robin instead of piling on shard 0.
+    fn pick_shard(&self) -> &Arc<BatchFront> {
+        let n = self.shards.len();
+        if n == 1 {
+            return &self.shards[0];
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_depth = self.shards[start].queue_depth();
+        for off in 1..n {
+            let i = (start + off) % n;
+            let d = self.shards[i].queue_depth();
+            if d < best_depth {
+                best = i;
+                best_depth = d;
+            }
+        }
+        &self.shards[best]
+    }
+
+    /// Stateless prediction, dealt to the least-loaded shard. Falls back
+    /// to a direct same-precision computation if that shard's sweeper is
+    /// gone (inside [`BatchFront::predict`]).
+    pub fn predict(&self, input: Vec<f64>) -> Vec<f64> {
+        self.pick_shard().predict(input)
+    }
+
+    /// Fan-out form of [`Self::predict`]: enqueue on the least-loaded
+    /// shard and return the reply channel without blocking (benches and
+    /// batch submitters collect the receivers afterwards).
+    pub fn predict_async(
+        &self,
+        input: Vec<f64>,
+    ) -> Option<mpsc::Receiver<Vec<f64>>> {
+        self.pick_shard().predict_async(input)
+    }
+
+    /// Streaming step(s) on a lane of shard `shard_idx`.
+    pub fn stream(
+        &self,
+        shard_idx: usize,
+        lane: usize,
+        input: Vec<f64>,
+    ) -> Result<Vec<f64>> {
+        self.shards[shard_idx].stream(lane, input)
+    }
+
+    /// Per-shard queue depths (metrics; `info`).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.queue_depth()).collect()
+    }
+
+    /// Per-shard sweep counts (metrics; `info`).
+    pub fn sweep_counts(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.sweep_count()).collect()
+    }
+
+    /// Total queued jobs across shards.
+    pub fn queue_depth_total(&self) -> usize {
+        self.queue_depths().iter().sum()
+    }
+
+    /// Total sweep rounds across shards.
+    pub fn sweep_count_total(&self) -> u64 {
+        self.sweep_counts().iter().sum()
+    }
+
+    /// Shut every shard down (idempotent). Each front drains its queued
+    /// jobs before its sweeper exits, so no accepted job is dropped.
+    pub fn shutdown(&self) {
+        for s in &self.shards {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{make_model, make_model_f32};
+    use super::*;
+    use crate::tasks::mso::MsoTask;
+
+    #[test]
+    fn shard_hash_is_stable_and_covers_all_shards() {
+        let model = Arc::new(make_model());
+        let front = ShardedFront::start(Arc::clone(&model), 4);
+        let mut hit = [false; 4];
+        for key in 0..256u64 {
+            let s = front.shard_for_key(key);
+            assert!(s < 4);
+            hit[s] = true;
+            // stability: the assignment is a pure function of the key —
+            // a reconnect (same key, later in time) lands on the same
+            // shard, as does a fresh facade over the same shard count
+            assert_eq!(s, front.shard_for_key(key));
+        }
+        assert!(hit.iter().all(|h| *h), "256 keys must cover 4 shards");
+        // a second sharded front (server restart) assigns identically
+        let front2 = ShardedFront::start(Arc::clone(&model), 4);
+        for key in 0..64u64 {
+            assert_eq!(front.shard_for_key(key), front2.shard_for_key(key));
+        }
+        front.shutdown();
+        front2.shutdown();
+    }
+
+    #[test]
+    fn cross_shard_lanes_are_isolated() {
+        // two streaming connections on DIFFERENT shards: interleaved
+        // requests must each reproduce their solo trajectory exactly
+        let model = Arc::new(make_model());
+        let front = ShardedFront::start(Arc::clone(&model), 2);
+        let task = MsoTask::new(1);
+        let lane0 = front.shard(0).acquire_lane().unwrap();
+        let lane1 = front.shard(1).acquire_lane().unwrap();
+        let in0 = &task.input[..40];
+        let in1 = &task.input[150..185];
+        let mut got0 = front.stream(0, lane0, in0[..13].to_vec()).unwrap();
+        let mut got1 = front.stream(1, lane1, in1[..9].to_vec()).unwrap();
+        got0.extend(front.stream(0, lane0, in0[13..].to_vec()).unwrap());
+        got1.extend(front.stream(1, lane1, in1[9..].to_vec()).unwrap());
+        for (got, input) in [(got0, in0), (got1, in1)] {
+            let want = model.predict(input);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "cross-shard stream diverged: {a} vs {b}"
+                );
+            }
+        }
+        front.shard(0).release_lane(lane0);
+        front.shard(1).release_lane(lane1);
+        front.shutdown();
+    }
+
+    #[test]
+    fn single_shard_bit_identical_to_batch_front() {
+        // `--shards 1` must reproduce the PR-2 single-front server
+        // bit-exactly, at both precisions, on both predicts and streams
+        for model in [Arc::new(make_model()), Arc::new(make_model_f32())] {
+            let sharded = ShardedFront::start(Arc::clone(&model), 1);
+            let plain = BatchFront::start(Arc::clone(&model));
+            let task = MsoTask::new(2);
+            for i in 0..4 {
+                let input = task.input[i * 9..i * 9 + 28 + i].to_vec();
+                let a = sharded.predict(input.clone());
+                let b = plain.predict(input);
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert!(
+                        (x - y).abs() == 0.0,
+                        "shards=1 predict != BatchFront: {x} vs {y}"
+                    );
+                }
+            }
+            // streaming: same lane, same chunks, same bits
+            let ls = sharded.shard(0).acquire_lane().unwrap();
+            let lp = plain.acquire_lane().unwrap();
+            let input = &task.input[..44];
+            let mut got_s = sharded.stream(0, ls, input[..20].to_vec()).unwrap();
+            got_s.extend(sharded.stream(0, ls, input[20..].to_vec()).unwrap());
+            let mut got_p = plain.stream(lp, input[..20].to_vec()).unwrap();
+            got_p.extend(plain.stream(lp, input[20..].to_vec()).unwrap());
+            assert_eq!(got_s.len(), got_p.len());
+            for (x, y) in got_s.iter().zip(&got_p) {
+                assert!(
+                    (x - y).abs() == 0.0,
+                    "shards=1 stream != BatchFront: {x} vs {y}"
+                );
+            }
+            sharded.shutdown();
+            plain.shutdown();
+        }
+    }
+
+    #[test]
+    fn shutdown_drains_all_shard_queues() {
+        // jobs accepted before shutdown must all be answered — shutdown
+        // wakes every sweeper, which drains its queue before exiting
+        let model = Arc::new(make_model());
+        let front = ShardedFront::start(Arc::clone(&model), 3);
+        let task = MsoTask::new(2);
+        let inputs: Vec<Vec<f64>> = (0..12)
+            .map(|i| task.input[i * 7..i * 7 + 20 + i].to_vec())
+            .collect();
+        let replies: Vec<_> = inputs
+            .iter()
+            .map(|input| {
+                front
+                    .predict_async(input.clone())
+                    .expect("front accepts before shutdown")
+            })
+            .collect();
+        front.shutdown();
+        for (input, rx) in inputs.iter().zip(replies) {
+            let got = rx.recv().expect("queued job answered during drain");
+            let want = model.predict(input);
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() == 0.0);
+            }
+        }
+        assert_eq!(front.queue_depth_total(), 0, "queues drained");
+        front.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn least_loaded_deal_spreads_a_burst() {
+        // with every queue empty the rotating tie-break spreads
+        // consecutive predicts across shards — observable as sweeps on
+        // more than one shard after a burst
+        let model = Arc::new(make_model());
+        let front = ShardedFront::start(Arc::clone(&model), 2);
+        let task = MsoTask::new(1);
+        for i in 0..8 {
+            let input = task.input[i * 5..i * 5 + 15].to_vec();
+            let got = front.predict(input.clone());
+            let want = model.predict(&input);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() == 0.0);
+            }
+        }
+        let sweeps = front.sweep_counts();
+        assert!(
+            sweeps.iter().filter(|&&s| s > 0).count() >= 2,
+            "8 sequential predicts on idle shards must touch both: {sweeps:?}"
+        );
+        front.shutdown();
+    }
+}

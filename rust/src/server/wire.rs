@@ -1,0 +1,604 @@
+//! Wire layer: the line-delimited JSON protocol over TCP, and the
+//! connection-to-shard binding.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"op": "predict", "input": [u0, u1, …]}     forecast 1-step-ahead for
+//!                                               the whole sequence
+//! → {"op": "stream", "input": [u_t]}            stateful per-connection
+//!                                               streaming step
+//! → {"op": "reset"}                             zero this connection's state
+//! → {"op": "info"}
+//! ← {"ok": true, "output": […], "steps_per_sec": …}
+//! ```
+//!
+//! The protocol is unchanged from the single-front server — sharding is
+//! invisible on the wire except through `info`, which now reports
+//! `shards`, this connection's `shard`, and per-shard
+//! `shard_queue_depth` / `shard_sweeps` next to the aggregate
+//! `queue_depth` / `sweeps`.
+//!
+//! Each accepted connection derives a key from its **peer IP** (ports
+//! change per connection, the address does not) and hashes to a **home
+//! shard** for its lifetime: `stream`/`reset` state lives on the home
+//! shard's hub, while stateless `predict`s are dealt to the least-loaded
+//! shard. Because the hash is a pure function of the key and the key is
+//! a pure function of the client's address, a reconnecting client lands
+//! on the same shard — shard placement is stable across reconnects
+//! (tested). When the peer address is unreadable the accept counter
+//! stands in. Connections beyond the home hub's lane capacity fall back
+//! to a connection-local state with the same arithmetic
+//! (precision-matched, bit-identical to a hub lane).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::reservoir::{BatchEsn, LaneReadout};
+use crate::util::json::{parse, Json};
+use crate::util::Timer;
+
+use super::shard::ShardedFront;
+use super::{Model, Precision};
+
+/// Default shard count: one sweeper per available core.
+pub(crate) fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Connection key from the peer IP (NOT the port — ports are ephemeral,
+/// so keying on the address is what makes a reconnecting client hash to
+/// its previous home shard).
+fn ip_key(ip: &std::net::IpAddr) -> u64 {
+    match ip {
+        std::net::IpAddr::V4(v4) => u32::from_be_bytes(v4.octets()) as u64,
+        std::net::IpAddr::V6(v6) => {
+            let o = v6.octets();
+            let hi = u64::from_be_bytes(o[..8].try_into().expect("8 bytes"));
+            let lo = u64::from_be_bytes(o[8..].try_into().expect("8 bytes"));
+            hi ^ lo.rotate_left(1)
+        }
+    }
+}
+
+/// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks; one
+/// lightweight handler thread per connection, each bound to a home shard
+/// of a [`ShardedFront`] sized to the available cores, with immediate
+/// drain (no hold-off — the latency-safe default; high-concurrency
+/// deployments that prefer deeper coalescing use [`serve_with_holdoff`]).
+/// `max_requests` bounds the total connections accepted (tests /
+/// examples) — all of them are joined before returning; `None` runs
+/// forever.
+pub fn serve(model: Arc<Model>, addr: &str, max_requests: Option<usize>) -> Result<()> {
+    serve_sharded(model, addr, max_requests, 0, None)
+}
+
+/// [`serve`] with an explicit sweeper hold-off window (µs): with a
+/// shallow queue each shard's sweeper waits up to the window for more
+/// requests to coalesce into one sweep. This trades up to `holdoff_us`
+/// of latency on lightly-loaded request/response traffic for fewer,
+/// larger sweeps when many clients arrive together; a batch-worthy
+/// queue always drains immediately.
+pub fn serve_with_holdoff(
+    model: Arc<Model>,
+    addr: &str,
+    max_requests: Option<usize>,
+    holdoff_us: u64,
+) -> Result<()> {
+    serve_sharded(model, addr, max_requests, holdoff_us, None)
+}
+
+/// The fully-knobbed server: [`serve_with_holdoff`] plus an explicit
+/// shard count. `None` shards = one per available core; `Some(1)`
+/// reproduces the single-front server bit-exactly (one sweeper, one hub
+/// — the PR-2 behavior); responses are bit-identical at every shard
+/// count either way, since shards never share mutable state.
+pub fn serve_sharded(
+    model: Arc<Model>,
+    addr: &str,
+    max_requests: Option<usize>,
+    holdoff_us: u64,
+    shards: Option<usize>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let shards = shards.unwrap_or_else(default_shards);
+    let front = ShardedFront::start_with_holdoff(model, shards, holdoff_us);
+    let mut served = 0usize;
+    let mut handles = Vec::new();
+    let mut accept_err: Option<anyhow::Error> = None;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                // don't early-return: the sweepers and any live handlers
+                // must still be wound down below
+                accept_err = Some(e.into());
+                break;
+            }
+        };
+        let front2 = Arc::clone(&front);
+        // key by peer IP so the same client re-hashes to the same home
+        // shard across reconnects; fall back to the accept counter when
+        // the peer address is unreadable
+        let conn_key = stream
+            .peer_addr()
+            .map(|a| ip_key(&a.ip()))
+            .unwrap_or(served as u64);
+        let handle = std::thread::spawn(move || {
+            let _ = handle_connection(front2, conn_key, stream);
+        });
+        served += 1;
+        if let Some(max) = max_requests {
+            handles.push(handle);
+            if served >= max {
+                break;
+            }
+        } else {
+            drop(handle); // detach
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    front.shutdown();
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Per-connection fallback streaming state at the oracle precision (used
+/// when the home hub is full and the model serves `F64`).
+struct LocalStream {
+    s_re: Vec<f64>,
+    s_im: Vec<f64>,
+}
+
+/// Hub-less streaming state at the model's precision: the `F64` form is
+/// the legacy split-plane walk; the `F32` form is a 1-lane f32 engine
+/// with its pre-cast readout (bit-identical to an f32 hub lane — lane
+/// results are batch-size independent — and allocation-free per round).
+enum LocalFallback {
+    F64(LocalStream),
+    F32(BatchEsn<f32>, LaneReadout<f32>),
+}
+
+/// Per-connection streaming identity: the home shard is fixed at accept
+/// time (hash of the connection key); a hub lane on that shard is
+/// acquired LAZILY on the first `stream` op (predict-only connections
+/// never occupy one) and kept for the connection's lifetime; once the
+/// hub was full for this connection, it sticks to the local fallback so
+/// its state never jumps between hub and local.
+struct ConnState {
+    shard_idx: usize,
+    lane: Option<usize>,
+    hub_denied: bool,
+    /// Built lazily on the first hub-denied `stream` op — predict-only
+    /// connections (and connections that win a hub lane) never pay for it.
+    local: Option<LocalFallback>,
+}
+
+/// Construct the hub-less streaming state at the model's precision.
+fn local_fallback(model: &Model) -> LocalFallback {
+    match model.precision {
+        Precision::F64 => {
+            let slots = model.esn.spec.slots();
+            LocalFallback::F64(LocalStream {
+                s_re: vec![0.0f64; slots],
+                s_im: vec![0.0f64; slots],
+            })
+        }
+        Precision::F32 => LocalFallback::F32(
+            BatchEsn::<f32>::with_precision(model.qesn.clone(), 1),
+            LaneReadout::new(&model.readout),
+        ),
+    }
+}
+
+fn handle_connection(
+    front: Arc<ShardedFront>,
+    conn_key: u64,
+    stream: TcpStream,
+) -> Result<()> {
+    let mut conn = ConnState {
+        shard_idx: front.shard_for_key(conn_key),
+        lane: None,
+        hub_denied: false,
+        local: None,
+    };
+    let result = serve_lines(&front, &mut conn, stream);
+    if let Some(l) = conn.lane {
+        front.shard(conn.shard_idx).release_lane(l);
+    }
+    result
+}
+
+fn serve_lines(
+    front: &ShardedFront,
+    conn: &mut ConnState,
+    stream: TcpStream,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let response = match handle_request(front, conn, &line) {
+            Ok(json) => json,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(format!("{e:#}"))),
+            ]),
+        };
+        out.write_all(response.to_string_compact().as_bytes())?;
+        out.write_all(b"\n")?;
+    }
+}
+
+fn handle_request(
+    front: &ShardedFront,
+    conn: &mut ConnState,
+    line: &str,
+) -> Result<Json> {
+    let model = front.model();
+    let home = front.shard(conn.shard_idx);
+    let req = parse(line.trim())?;
+    let op = req
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'op'"))?;
+    match op {
+        "info" => {
+            let depths = front.queue_depths();
+            let sweeps = front.sweep_counts();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("n", Json::Num(model.esn.n() as f64)),
+                ("slots", Json::Num(model.esn.spec.slots() as f64)),
+                ("n_real", Json::Num(model.esn.spec.n_real as f64)),
+                (
+                    "spectral_radius",
+                    Json::Num(model.esn.spec.radius()),
+                ),
+                ("precision", Json::Str(model.precision.name().into())),
+                ("shards", Json::Num(front.shards() as f64)),
+                ("shard", Json::Num(conn.shard_idx as f64)),
+                (
+                    "queue_depth",
+                    Json::Num(depths.iter().sum::<usize>() as f64),
+                ),
+                (
+                    "sweeps",
+                    Json::Num(sweeps.iter().sum::<u64>() as f64),
+                ),
+                (
+                    "shard_queue_depth",
+                    Json::Arr(
+                        depths.iter().map(|&d| Json::Num(d as f64)).collect(),
+                    ),
+                ),
+                (
+                    "shard_sweeps",
+                    Json::Arr(
+                        sweeps.iter().map(|&s| Json::Num(s as f64)).collect(),
+                    ),
+                ),
+                (
+                    "holdoff_us",
+                    Json::Num(home.holdoff_us() as f64),
+                ),
+                ("stream_lane", match conn.lane {
+                    Some(l) => Json::Num(l as f64),
+                    None => Json::Null,
+                }),
+            ]))
+        }
+        "predict" => {
+            let input = parse_input(&req)?;
+            let steps = input.len();
+            let t = Timer::start();
+            // stateless: dealt to the least-loaded shard, not the home
+            let output = front.predict(input);
+            let dt = t.elapsed_s().max(1e-12);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "output",
+                    Json::Arr(output.into_iter().map(Json::Num).collect()),
+                ),
+                (
+                    "steps_per_sec",
+                    Json::Num(steps as f64 / dt),
+                ),
+            ]))
+        }
+        "stream" => {
+            let input = parse_input(&req)?;
+            // first stream op: try to claim a lane on the home shard's
+            // hub (and never switch engines once this connection's
+            // streaming has started)
+            if conn.lane.is_none() && !conn.hub_denied {
+                conn.lane = home.acquire_lane();
+                if conn.lane.is_none() {
+                    conn.hub_denied = true;
+                }
+            }
+            let outs = match conn.lane {
+                Some(l) => home.stream(l, input)?,
+                None => {
+                    let local = conn
+                        .local
+                        .get_or_insert_with(|| local_fallback(model));
+                    match local {
+                        LocalFallback::F64(ls) => {
+                            stream_local(model, &input, ls)
+                        }
+                        LocalFallback::F32(engine, ro) => engine
+                            .sweep_streams_cast(&[(0, input.as_slice())], ro)
+                            .pop()
+                            .unwrap_or_default(),
+                    }
+                }
+            };
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("output", Json::Arr(outs.into_iter().map(Json::Num).collect())),
+            ]))
+        }
+        "reset" => {
+            if let Some(l) = conn.lane {
+                home.reset(l)?;
+            }
+            // dropping the lazy fallback IS the reset: it is rebuilt from
+            // the zero state on the next hub-denied stream op
+            conn.local = None;
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+/// Hub-less f64 streaming fallback: same arithmetic (and therefore the
+/// same bits) as a hub lane, on connection-local slot planes.
+fn stream_local(model: &Model, input: &[f64], local: &mut LocalStream) -> Vec<f64> {
+    let n = model.esn.n();
+    let mut outs = Vec::with_capacity(input.len());
+    let mut feat = vec![0.0; n];
+    for &u in input {
+        model.esn.step(&mut local.s_re, &mut local.s_im, &[u]);
+        model.esn.write_features(&local.s_re, &local.s_im, &mut feat);
+        // y = b + feat·w (bias-first: the shared accumulation contract)
+        let mut y = model.readout.b[0];
+        for (j, &f) in feat.iter().enumerate() {
+            y += f * model.readout.w[(j, 0)];
+        }
+        outs.push(y);
+    }
+    outs
+}
+
+fn parse_input(req: &Json) -> Result<Vec<f64>> {
+    req.get("input")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'input' array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric input")))
+        .collect()
+}
+
+/// Minimal client for the examples/tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        self.writer
+            .write_all(req.to_string_compact().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        parse(line.trim())
+    }
+
+    fn io_op(&mut self, op: &str, input: &[f64]) -> Result<Vec<f64>> {
+        let req = Json::obj(vec![
+            ("op", Json::Str(op.into())),
+            (
+                "input",
+                Json::Arr(input.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+        ]);
+        let resp = self.request(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        resp.get("output")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing output"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("bad output")))
+            .collect()
+    }
+
+    pub fn predict(&mut self, input: &[f64]) -> Result<Vec<f64>> {
+        self.io_op("predict", input)
+    }
+
+    /// Stateful streaming step(s) on this connection's lane.
+    pub fn stream(&mut self, input: &[f64]) -> Result<Vec<f64>> {
+        self.io_op("stream", input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{make_model, make_model_f32};
+    use super::*;
+
+    use crate::tasks::mso::MsoTask;
+
+    #[test]
+    fn predict_and_stream_agree() {
+        let model = make_model();
+        let task = MsoTask::new(1);
+        let input = &task.input[..50];
+        let batch = model.predict(input);
+        // streaming path (local fallback arithmetic)
+        let mut local = LocalStream {
+            s_re: vec![0.0; model.esn.spec.slots()],
+            s_im: vec![0.0; model.esn.spec.slots()],
+        };
+        let line_out = stream_local(&model, input, &mut local);
+        for (a, b) in batch.iter().zip(&line_out) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let model = Arc::new(make_model());
+        let addr = "127.0.0.1:47391";
+        let server_model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve(server_model, addr, Some(1)).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut client = Client::connect(addr).unwrap();
+        let task = MsoTask::new(1);
+        let out = client.predict(&task.input[..40]).unwrap();
+        assert_eq!(out.len(), 40);
+        let direct = model.predict(&task.input[..40]);
+        for (a, b) in out.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        // info op
+        let resp = client
+            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("n").unwrap().as_usize(), Some(30));
+        drop(client);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn explicit_two_shard_server_over_tcp_is_invisible() {
+        // shards must be unobservable on the wire: an explicitly 2-shard
+        // server answers bit-identically to Model::predict, and `info`
+        // reports the shard topology
+        let model = Arc::new(make_model());
+        let addr = "127.0.0.1:47421";
+        let server_model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve_sharded(server_model, addr, Some(2), 0, Some(2)).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let task = MsoTask::new(2);
+        // both connections come from the same peer IP, so they (and any
+        // reconnect) must hash to the same home shard — shard placement
+        // is stable across reconnects
+        let mut c1 = Client::connect(addr).unwrap();
+        let mut c2 = Client::connect(addr).unwrap();
+        let shard_of = |c: &mut Client| {
+            c.request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+                .unwrap()
+                .get("shard")
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        assert_eq!(
+            shard_of(&mut c1),
+            shard_of(&mut c2),
+            "same peer IP must keep its home shard across connections"
+        );
+        for i in 0..3 {
+            let input = &task.input[i * 8..i * 8 + 25];
+            for c in [&mut c1, &mut c2] {
+                let got = c.predict(input).unwrap();
+                let want = model.predict(input);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert!((a - b).abs() == 0.0, "{a} vs {b}");
+                }
+            }
+        }
+        let resp = c1
+            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("shards").and_then(Json::as_f64), Some(2.0));
+        let shard = resp.get("shard").and_then(Json::as_f64).unwrap();
+        assert!(shard == 0.0 || shard == 1.0);
+        assert_eq!(
+            resp.get("shard_queue_depth").and_then(Json::as_arr).unwrap().len(),
+            2
+        );
+        assert_eq!(
+            resp.get("shard_sweeps").and_then(Json::as_arr).unwrap().len(),
+            2
+        );
+        drop(c1);
+        drop(c2);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn info_reports_precision_and_sweeper_metrics() {
+        let model = Arc::new(make_model_f32());
+        let addr = "127.0.0.1:47417";
+        let server_model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve(server_model, addr, Some(1)).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut client = Client::connect(addr).unwrap();
+        let task = MsoTask::new(1);
+        // drive at least one sweep through the front
+        let out = client.predict(&task.input[..20]).unwrap();
+        assert_eq!(out.len(), 20);
+        let resp = client
+            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            resp.get("precision").and_then(Json::as_str),
+            Some("f32")
+        );
+        // aggregate sweeps count every shard's rounds; the predict above
+        // ran on one of them
+        assert!(resp.get("sweeps").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(resp.get("queue_depth").and_then(Json::as_f64).is_some());
+        // default serve() shards one sweeper per available core
+        let shards = resp.get("shards").and_then(Json::as_f64).unwrap();
+        assert!(shards >= 1.0);
+        assert_eq!(
+            resp.get("shard_sweeps").and_then(Json::as_arr).unwrap().len(),
+            shards as usize
+        );
+        // serve() runs with immediate drain; the hold-off is opt-in via
+        // serve_with_holdoff / start_with_holdoff
+        assert_eq!(
+            resp.get("holdoff_us").and_then(Json::as_f64),
+            Some(0.0)
+        );
+        drop(client);
+        handle.join().unwrap();
+    }
+}

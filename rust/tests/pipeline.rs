@@ -10,7 +10,7 @@ use linear_reservoir::metrics::{nrmse, rmse};
 use linear_reservoir::readout::{fit, Regularizer};
 use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
 use linear_reservoir::rng::Pcg64;
-use linear_reservoir::server::{serve, Client, Model};
+use linear_reservoir::server::{serve, serve_sharded, Client, Model};
 use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
 use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
 use linear_reservoir::tasks::narma::NarmaTask;
@@ -246,6 +246,61 @@ fn concurrent_stream_connections_are_isolated() {
                 assert!(
                     (a - b).abs() < 1e-10,
                     "stream isolation broken at t={t}: {a} vs {b}"
+                );
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    server.join().unwrap();
+}
+
+#[test]
+fn sharded_server_mixed_traffic_bit_identical_and_isolated() {
+    // the shard-per-core front must be invisible end to end: concurrent
+    // connections (each streaming on its home shard's hub while also
+    // firing stateless predicts dealt to the least-loaded shard) all get
+    // bit-for-bit their solo trajectories
+    let model = Arc::new(serving_model(13));
+    let task = MsoTask::new(2);
+    let clients = 5;
+    let addr = "127.0.0.1:47815";
+    let server_model = Arc::clone(&model);
+    let server = std::thread::spawn(move || {
+        // explicit 2 shards, no hold-off
+        serve_sharded(server_model, addr, Some(clients), 0, Some(2)).unwrap();
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let mut workers = Vec::new();
+    for i in 0..clients {
+        let model = Arc::clone(&model);
+        let stream_in: Vec<f64> = task.input[i * 40..i * 40 + 42].to_vec();
+        let predict_in: Vec<f64> = task.input[i * 23..i * 23 + 30 + i].to_vec();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            let mut got = Vec::new();
+            for chunk in stream_in.chunks(9 + i) {
+                // interleave a stateless predict between stream chunks —
+                // it must not perturb this connection's lane state
+                let p = client.predict(&predict_in).unwrap();
+                let p_want = model.predict(&predict_in);
+                assert_eq!(p.len(), p_want.len());
+                for (a, b) in p.iter().zip(&p_want) {
+                    assert!(
+                        (a - b).abs() == 0.0,
+                        "sharded predict not bit-identical: {a} vs {b}"
+                    );
+                }
+                got.extend(client.stream(chunk).unwrap());
+            }
+            let want = model.predict(&stream_in);
+            assert_eq!(got.len(), want.len());
+            for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "sharded stream diverged at t={t}: {a} vs {b}"
                 );
             }
         }));

@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verification + perf snapshot in one command:
 #   scripts/verify.sh
-# Runs the release build, the full test suite, and the quick reservoir
-# bench (which includes the f32/f64 precision-ladder rows), leaving a
-# machine-readable perf snapshot in BENCH_reservoir_run.json (the
-# perf-trajectory artifact). Fails if the precision rows are missing,
-# non-finite, or report zero throughput.
+# Runs the release build, the full test suite, the plain-kernel A/B of
+# the batched lane engine (the scalar twin of the chunked/branchless
+# kernels must stay bit-identical), and the quick reservoir bench (which
+# includes the f32/f64 precision-ladder rows and the sharded serving
+# rows), leaving a machine-readable perf snapshot in
+# BENCH_reservoir_run.json (the perf-trajectory artifact). Fails if the
+# precision or sharding rows are missing, non-finite, or report zero
+# throughput.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,6 +17,9 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== cargo test -q --features plain-kernel --lib reservoir::batch (A/B twin) =="
+cargo test -q --features plain-kernel --lib reservoir::batch
 
 echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json =="
 cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json
@@ -29,6 +35,8 @@ required = [
     "f32_batch8_N1000", "f64_batch8_N1000",
     "f32_batch64_N1000", "f64_batch64_N1000",
     "derived_precision_batch8_N1000", "derived_precision_batch64_N1000",
+    "sharded1_batch64_N1000", "sharded2_batch64_N1000",
+    "sharded4_batch64_N1000", "derived_sharded_batch64_N1000",
 ]
 for name in required:
     if name not in rows:
@@ -47,11 +55,18 @@ for b in (8, 64):
     print(f"  batch{b}: f32 {d['f32_steps_per_sec']:.3e} steps/s, "
           f"f64 {d['f64_steps_per_sec']:.3e} steps/s, "
           f"speedup {d['f32_speedup']:.2f}x")
+d = rows["derived_sharded_batch64_N1000"]
+print(f"  sharded: 1x {d['sharded1_steps_per_sec']:.3e} steps/s, "
+      f"2 shards {d['speedup_2_shards']:.2f}x, "
+      f"4 shards {d['speedup_4_shards']:.2f}x")
 print("bench rows OK")
 EOF
 else
   # minimal fallback when python3 is absent: rows exist, nothing NaN/inf
-  for row in f32_batch8_N1000 f64_batch8_N1000 f32_batch64_N1000 f64_batch64_N1000; do
+  for row in f32_batch8_N1000 f64_batch8_N1000 f32_batch64_N1000 \
+             f64_batch64_N1000 sharded1_batch64_N1000 \
+             sharded2_batch64_N1000 sharded4_batch64_N1000 \
+             derived_sharded_batch64_N1000; do
     grep -q "\"$row\"" BENCH_reservoir_run.json \
       || { echo "FAIL: missing bench row $row"; exit 1; }
   done
