@@ -4,8 +4,11 @@
 //! matmul, the batched multi-sequence engine vs the one-sequence-at-
 //! a-time loop (states/sec across the batch), the precision ladder:
 //! f32 vs f64 SoA lane engines at the serving point (N=1000, B∈{8,64}),
-//! and the shard-per-core serving rows: aggregate predict throughput
-//! through a ShardedFront at 1/2/4 shards (B=64 concurrent requests).
+//! the shard-per-core serving rows: aggregate predict throughput
+//! through a ShardedFront at 1/2/4 shards (B=64 concurrent requests),
+//! and the event-loop wire rows: pipelined predict and mixed
+//! stream/predict throughput over TCP through the epoll readiness loop
+//! while 128 idle streaming connections sit parked on it (thread-free).
 //!
 //! Run: `cargo bench --bench reservoir_run [-- --quick] [--json <path>]`
 //! `--json` writes machine-readable results (bench rows + derived
@@ -18,7 +21,7 @@ use linear_reservoir::reservoir::{
     BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn,
 };
 use linear_reservoir::rng::Pcg64;
-use linear_reservoir::server::{Model, ShardedFront};
+use linear_reservoir::server::{serve_on, Client, Model, ShardedFront};
 use linear_reservoir::spectral::uniform::uniform_spectrum;
 use linear_reservoir::util::json::Json;
 
@@ -259,6 +262,124 @@ fn main() {
             ("speedup_2_shards", Json::Num(sps[1] / base)),
             ("speedup_4_shards", Json::Num(sps[2] / base)),
         ]));
+    }
+
+    // --- event-loop wire serving: idle connections + mixed traffic ------
+    // The epoll transport's claim is capacity, not arithmetic: with 128
+    // idle streaming connections parked on the loop (zero threads — see
+    // rust/tests/pipeline.rs for the thread-count assertion), a
+    // pipelined burst of predicts must still flow at sweeper throughput,
+    // and mixing stream chunks in must not stall either side. These are
+    // full wire-path numbers (JSON + TCP + queue + sweep), so they sit
+    // below the raw engine rows by construction. Rows run in quick mode
+    // too — they are the acceptance artifact for the readiness loop.
+    {
+        let n = 1000;
+        let idle = 128usize;
+        let active = 16usize;
+        println!("event-loop serving, N = {n}, idle = {idle}, active = {active}, T = {t_len}");
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(11, 113);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let model = Arc::new(Model::new(diag, readout));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server_model = Arc::clone(&model);
+        let max_conns = idle + active;
+        let server = std::thread::spawn(move || {
+            serve_on(listener, server_model, Some(max_conns), 0, Some(2), false)
+                .unwrap();
+        });
+        // park the idle streaming connections on the loop (one stream
+        // round-trip each proves registration, then they sit idle)
+        let probe = [0.1f64, -0.2, 0.3];
+        let mut idles: Vec<Client> = (0..idle)
+            .map(|_| {
+                let mut c = Client::connect(&addr).unwrap();
+                let out = c.stream(&probe).unwrap();
+                assert_eq!(out.len(), probe.len());
+                c
+            })
+            .collect();
+        let mut actives: Vec<Client> =
+            (0..active).map(|_| Client::connect(&addr).unwrap()).collect();
+        let input: Vec<f64> = Mat::randn(t_len, 1, &mut rng).data().to_vec();
+        let predict_req = Json::obj(vec![
+            ("op", Json::Str("predict".into())),
+            (
+                "input",
+                Json::Arr(input.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+        ]);
+        // pipelined: write all requests, then collect all replies — the
+        // event loop interleaves the sweeps and flushes on writability
+        let r_idle = bench(
+            &format!("evloop_idle{idle}_predict{active}_N{n}"),
+            cfg,
+            || {
+                for c in actives.iter_mut() {
+                    c.send(&predict_req).unwrap();
+                }
+                for c in actives.iter_mut() {
+                    std::hint::black_box(c.recv().unwrap());
+                }
+            },
+        );
+        push(&mut rows, &r_idle);
+        let predict_sps = (active * t_len) as f64 / r_idle.per_iter.median;
+
+        // mixed traffic: stream chunks on hub lanes + the predict burst
+        let mixers = 16usize.min(idle);
+        let chunk_len = 100usize;
+        let stream_req = Json::obj(vec![
+            ("op", Json::Str("stream".into())),
+            (
+                "input",
+                Json::Arr(input[..chunk_len].iter().map(|&x| Json::Num(x)).collect()),
+            ),
+        ]);
+        let r_mixed = bench(
+            &format!("evloop_mixed_stream{mixers}_predict{active}_N{n}"),
+            cfg,
+            || {
+                for c in idles[..mixers].iter_mut() {
+                    c.send(&stream_req).unwrap();
+                }
+                for c in actives.iter_mut() {
+                    c.send(&predict_req).unwrap();
+                }
+                for c in idles[..mixers].iter_mut() {
+                    std::hint::black_box(c.recv().unwrap());
+                }
+                for c in actives.iter_mut() {
+                    std::hint::black_box(c.recv().unwrap());
+                }
+            },
+        );
+        push(&mut rows, &r_mixed);
+        let mixed_steps = (mixers * chunk_len + active * t_len) as f64;
+        let mixed_sps = mixed_steps / r_mixed.per_iter.median;
+        println!(
+            "  idle-loaded predicts: {:.3e} steps/s | mixed stream+predict: {:.3e} steps/s\n",
+            predict_sps, mixed_sps
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("derived_evloop_N{n}"))),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("idle_conns", Json::Num(idle as f64)),
+            ("active_conns", Json::Num(active as f64)),
+            ("t", Json::Num(t_len as f64)),
+            ("idle_predict_steps_per_sec", Json::Num(predict_sps)),
+            ("mixed_steps_per_sec", Json::Num(mixed_sps)),
+        ]));
+        drop(actives);
+        drop(idles);
+        server.join().unwrap();
     }
 
     if let Some(path) = json_path {

@@ -95,5 +95,12 @@ fn main() -> anyhow::Result<()> {
     //    64-lane streaming hub and pooled predict engines); the CLI twin
     //    is `repro serve --shards N` (`0`/omitted = one per core, `1` =
     //    the single-front behavior, bit-identical responses either way).
+    //    On Linux, connections are served by an epoll readiness loop —
+    //    S sweepers + 1 poll thread regardless of connection count, so
+    //    idle streaming clients cost a file descriptor, not a thread.
+    //    `repro serve --threaded` (or `serve_on(…, threaded = true)`
+    //    with an already-bound listener — bind port 0 for a race-free
+    //    ephemeral port) forces the legacy thread-per-connection
+    //    transport for A/B: responses are bit-identical between the two.
     Ok(())
 }

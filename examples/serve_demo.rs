@@ -9,7 +9,7 @@ use std::sync::Arc;
 use linear_reservoir::readout::{fit, Regularizer};
 use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
 use linear_reservoir::rng::Pcg64;
-use linear_reservoir::server::{serve, Client, Model};
+use linear_reservoir::server::{serve_on, Client, Model};
 use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
 use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
 use linear_reservoir::util::Timer;
@@ -31,14 +31,16 @@ fn main() -> anyhow::Result<()> {
     // through the server's micro-batching front with zero [T×N] traffic
     let model = Arc::new(Model::new(esn, readout));
 
-    // serve in the background
-    let addr = "127.0.0.1:47901";
+    // serve in the background on an ephemeral port (bind before the
+    // thread starts — no startup race, no sleep; on Linux the default
+    // transport is the epoll event loop)
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
     let server_model = Arc::clone(&model);
-    let handle = std::thread::spawn(move || serve(server_model, addr, Some(1)));
-    std::thread::sleep(std::time::Duration::from_millis(150));
-
+    let handle =
+        std::thread::spawn(move || serve_on(listener, server_model, Some(1), 0, None, false));
     // client: batch of requests
-    let mut client = Client::connect(addr)?;
+    let mut client = Client::connect(&addr)?;
     let requests = 50;
     let t = Timer::start();
     let mut last = Vec::new();

@@ -35,7 +35,12 @@
 //! [`server::BatchFront`] sweeper per core behind a
 //! [`server::ShardedFront`] (connections hash to a home shard, stateless
 //! predicts go to the least-loaded one), selecting the precision per
-//! [`server::Model`] — `cores × B` lanes, no locks on the hot path.
+//! [`server::Model`] — `cores × B` lanes, no locks on the hot path. On
+//! Linux the wire layer is an epoll readiness loop (hand-rolled, raw
+//! libc FFI): S sweepers + 1 poll thread serve every connection, so
+//! idle streaming clients cost a file descriptor, not an OS thread
+//! (`server::serve_on`; `--threaded` keeps the thread-per-connection
+//! twin for A/B).
 //!
 //! The offline build environment provides no general-purpose crates, so the
 //! substrates are all local: [`rng`], [`linalg`] (including a from-scratch

@@ -13,6 +13,8 @@
 //! repro e2e    [--k 5] [--n 100]
 //! repro serve  [--addr 127.0.0.1:7878] [--k 5] [--n 100] [--f32]
 //!              [--holdoff-us 0] [--shards 0]   # 0 = one per core
+//!              [--threaded]   # thread-per-connection A/B transport
+//!                             # (default: epoll event loop on Linux)
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -214,7 +216,7 @@ fn dispatch(args: &Args) -> Result<()> {
             use linear_reservoir::readout::{fit, Regularizer};
             use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
             use linear_reservoir::rng::Pcg64;
-            use linear_reservoir::server::{serve_sharded, Model, Precision};
+            use linear_reservoir::server::{serve_on, Model, Precision};
             use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
             use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
             use std::sync::Arc;
@@ -249,21 +251,34 @@ fn dispatch(args: &Args) -> Result<()> {
                 0 => None,
                 s => Some(s),
             };
+            // --threaded: thread-per-connection transport (the A/B twin
+            // of the default epoll event loop; on non-Linux platforms
+            // the threaded path is the only transport either way)
+            let threaded = args.flag("threaded");
+            let listener = std::net::TcpListener::bind(addr)?;
+            let bound = listener.local_addr()?;
             println!(
-                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}) on {addr} …",
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, {}) on {bound} …",
                 precision.name(),
                 match shards {
                     Some(s) => s.to_string(),
                     None => "auto".into(),
+                },
+                if threaded || !cfg!(target_os = "linux") {
+                    "thread-per-connection"
+                } else {
+                    "epoll event loop"
                 }
             );
-            serve_sharded(
+            serve_on(
+                listener,
                 Arc::new(Model::with_precision(esn, readout, precision)),
-                addr,
                 None,
                 holdoff_us,
                 shards,
+                threaded,
             )
+            .map(|_| ())
         }
         "all" => {
             let quick = args.flag("quick");

@@ -106,24 +106,140 @@ impl Hub {
 }
 
 // ---------------------------------------------------------------------------
+// reply plumbing
+// ---------------------------------------------------------------------------
+
+/// What a queued job's reply routes back as. Channel replies (the
+/// threaded path) carry only success — a dropped sender is observed as a
+/// `RecvError` on the paired receiver. Event replies make the same two
+/// outcomes explicit so the poll loop can dispatch without blocking.
+pub(crate) enum Completion {
+    /// The sweeper ran the job; here is its output.
+    Done(Vec<f64>),
+    /// The job was dropped without running (sweeper gone / shutting
+    /// down). The receiver falls back exactly like a `RecvError`.
+    Dropped,
+}
+
+/// Completion mailbox between sweeper threads and an event loop: the
+/// sweeper pushes `(token, completion)` pairs and fires the wake
+/// callback (the poll loop's eventfd), and the poll thread drains the
+/// batch on wake. One queue serves every shard — tokens identify the
+/// request, not the shard.
+pub(crate) struct CompletionQueue {
+    done: Mutex<Vec<(u64, Completion)>>,
+    wake: Box<dyn Fn() + Send + Sync>,
+}
+
+impl CompletionQueue {
+    pub(crate) fn new(wake: Box<dyn Fn() + Send + Sync>) -> Arc<Self> {
+        Arc::new(Self {
+            done: Mutex::new(Vec::new()),
+            wake,
+        })
+    }
+
+    fn push(&self, token: u64, c: Completion) {
+        // transition-edge wake: the poll thread drains the whole queue
+        // per wake, so only the empty→non-empty push needs to signal —
+        // a sweeper resolving a 32-predict chunk costs one eventfd
+        // write, not 32. (Atomic under the mutex: a drain empties the
+        // queue atomically, so any push it misses sees empty and
+        // signals.)
+        let was_empty = {
+            let mut q = self.done.lock().unwrap();
+            let was = q.is_empty();
+            q.push((token, c));
+            was
+        };
+        if was_empty {
+            (self.wake)();
+        }
+    }
+
+    /// Take everything completed since the last drain.
+    pub(crate) fn drain(&self) -> Vec<(u64, Completion)> {
+        std::mem::take(&mut *self.done.lock().unwrap())
+    }
+}
+
+/// Event-loop reply handle: delivers exactly one [`Completion`] to its
+/// queue — `Done` when the sweeper sends, `Dropped` from `Drop` if the
+/// job dies unsent (queue cleared on sweeper death, or `submit` refusing
+/// on shutdown). The exactly-once guarantee is what lets the poll loop
+/// register a pending response slot unconditionally: no reply can leak.
+pub(crate) struct EventReply {
+    token: u64,
+    queue: Arc<CompletionQueue>,
+    sent: bool,
+}
+
+impl EventReply {
+    pub(crate) fn new(token: u64, queue: Arc<CompletionQueue>) -> Self {
+        Self {
+            token,
+            queue,
+            sent: false,
+        }
+    }
+
+    fn complete(mut self, v: Vec<f64>) {
+        self.sent = true;
+        self.queue.push(self.token, Completion::Done(v));
+    }
+}
+
+impl Drop for EventReply {
+    fn drop(&mut self) {
+        if !self.sent {
+            self.queue.push(self.token, Completion::Dropped);
+        }
+    }
+}
+
+/// Where a job's output goes: a blocking mpsc channel (one parked
+/// handler thread per request — the threaded path) or an event-loop
+/// completion token (no thread parks anywhere — the epoll path). The
+/// sweeper is oblivious: it calls [`ReplySender::send`] either way.
+pub(crate) enum ReplySender {
+    Chan(mpsc::Sender<Vec<f64>>),
+    Event(EventReply),
+}
+
+impl ReplySender {
+    pub(crate) fn send(self, v: Vec<f64>) {
+        match self {
+            ReplySender::Chan(tx) => {
+                let _ = tx.send(v);
+            }
+            ReplySender::Event(ev) => ev.complete(v),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // micro-batching front
 // ---------------------------------------------------------------------------
 
 pub(crate) enum FrontJob {
     Predict {
-        input: Vec<f64>,
-        reply: mpsc::Sender<Vec<f64>>,
+        /// Shared, not owned: the submitter keeps a clone of the `Arc`
+        /// for its dead-sweeper fallback, so queueing a predict never
+        /// copies the input.
+        input: Arc<Vec<f64>>,
+        reply: ReplySender,
     },
     Stream {
         lane: usize,
         input: Vec<f64>,
-        reply: mpsc::Sender<Vec<f64>>,
+        reply: ReplySender,
     },
     /// Zero a hub lane. `reply` is `Some` for a client-visible `reset`
-    /// (synchronous), `None` when recycling a released lane.
+    /// (answered with an empty vec on completion), `None` when recycling
+    /// a released lane.
     Reset {
         lane: usize,
-        reply: Option<mpsc::Sender<()>>,
+        reply: Option<ReplySender>,
     },
 }
 
@@ -250,9 +366,18 @@ impl BatchFront {
     /// Queue a zeroing of the lane, THEN return it to the free list — the
     /// queue is processed in submission order, so the next owner's first
     /// request always sees a fresh state.
+    ///
+    /// If the reset cannot be queued (sweeper gone or shutting down) the
+    /// lane is WITHHELD from the free list: the hub state can only be
+    /// zeroed by the sweeper that owns it, so returning the lane un-reset
+    /// would hand the next connection this connection's reservoir state.
+    /// A withheld lane is unreachable anyway — with the sweeper dead,
+    /// `stream` on it could only error — so capacity is not lost where it
+    /// could have been used.
     pub(crate) fn release_lane(&self, lane: usize) {
-        self.submit(FrontJob::Reset { lane, reply: None });
-        self.free_lanes.lock().unwrap().push(lane);
+        if self.submit(FrontJob::Reset { lane, reply: None }) {
+            self.free_lanes.lock().unwrap().push(lane);
+        }
     }
 
     /// Current queued-job count (metrics; exported via `info`; the
@@ -287,9 +412,15 @@ impl BatchFront {
 
     /// Stateless prediction through the batch queue. Falls back to a
     /// direct (bit-identical, same-precision) computation if the sweeper
-    /// is gone.
+    /// is gone. The input is shared with the queue via `Arc`, not
+    /// cloned.
     pub fn predict(&self, input: Vec<f64>) -> Vec<f64> {
-        if let Some(rx) = self.predict_async(input.clone()) {
+        let input = Arc::new(input);
+        let (tx, rx) = mpsc::channel();
+        if self.submit(FrontJob::Predict {
+            input: Arc::clone(&input),
+            reply: ReplySender::Chan(tx),
+        }) {
             // a dying sweeper drops stranded jobs, so this cannot hang
             if let Ok(out) = rx.recv() {
                 return out;
@@ -307,22 +438,67 @@ impl BatchFront {
         input: Vec<f64>,
     ) -> Option<mpsc::Receiver<Vec<f64>>> {
         let (tx, rx) = mpsc::channel();
-        if self.submit(FrontJob::Predict { input, reply: tx }) {
+        if self.submit(FrontJob::Predict {
+            input: Arc::new(input),
+            reply: ReplySender::Chan(tx),
+        }) {
             Some(rx)
         } else {
             None
         }
     }
 
+    /// Enqueue a stateless prediction with an arbitrary reply sink (the
+    /// event loop passes an [`EventReply`]). Returns `false` when the
+    /// sweeper is gone — but an `Event` reply still delivers its
+    /// `Dropped` completion either way, so event-loop callers need not
+    /// branch on the return value.
+    pub(crate) fn submit_predict(
+        &self,
+        input: Arc<Vec<f64>>,
+        reply: ReplySender,
+    ) -> bool {
+        self.submit(FrontJob::Predict { input, reply })
+    }
+
+    /// Enqueue streaming step(s) on a hub lane with an arbitrary reply
+    /// sink (see [`Self::submit_predict`] on the return value).
+    ///
+    /// A multi-output model cannot stream — the hub's masked sweep
+    /// asserts `D_out = 1` ON THE SWEEPER THREAD, where a panic kills
+    /// the whole shard. Refusing here (every stream path funnels through
+    /// this method) keeps the invariant next to the code that asserts
+    /// it; the wire layer rejects earlier with a friendlier message.
+    pub(crate) fn submit_stream(
+        &self,
+        lane: usize,
+        input: Vec<f64>,
+        reply: ReplySender,
+    ) -> bool {
+        if self.model.readout.w.cols() != 1 {
+            return false;
+        }
+        self.submit(FrontJob::Stream { lane, input, reply })
+    }
+
+    /// Enqueue a client-visible lane reset with an arbitrary reply sink
+    /// (answered with an empty vec; see [`Self::submit_predict`] on the
+    /// return value).
+    pub(crate) fn submit_reset(&self, lane: usize, reply: ReplySender) -> bool {
+        self.submit(FrontJob::Reset {
+            lane,
+            reply: Some(reply),
+        })
+    }
+
     /// Streaming step(s) on a hub lane (no fallback: the state lives in
     /// the hub, so a dead sweeper is a hard error).
     pub fn stream(&self, lane: usize, input: Vec<f64>) -> Result<Vec<f64>> {
+        // distinguish "the op is unsupported" from "the front is dead" —
+        // submit_stream refuses both with one bool
+        super::wire::guard_streamable(&self.model)?;
         let (tx, rx) = mpsc::channel();
-        if !self.submit(FrontJob::Stream {
-            lane,
-            input,
-            reply: tx,
-        }) {
+        if !self.submit_stream(lane, input, ReplySender::Chan(tx)) {
             anyhow::bail!("batch front unavailable");
         }
         rx.recv().map_err(|_| anyhow!("batch front unavailable"))
@@ -331,13 +507,12 @@ impl BatchFront {
     /// Synchronous client-visible lane reset.
     pub fn reset(&self, lane: usize) -> Result<()> {
         let (tx, rx) = mpsc::channel();
-        if !self.submit(FrontJob::Reset {
-            lane,
-            reply: Some(tx),
-        }) {
+        if !self.submit_reset(lane, ReplySender::Chan(tx)) {
             anyhow::bail!("batch front unavailable");
         }
-        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
+        rx.recv()
+            .map(|_| ())
+            .map_err(|_| anyhow!("batch front unavailable"))
     }
 
     fn sweeper_loop(&self) {
@@ -395,12 +570,12 @@ impl BatchFront {
     /// submission order (lanes are independent, so cross-lane reordering
     /// is unobservable).
     fn process(&self, hub: &mut Hub, pool: &mut EnginePool, drained: Vec<FrontJob>) {
-        let mut predicts: Vec<(Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
-        let mut round: Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)> = Vec::new();
+        let mut predicts: Vec<(Arc<Vec<f64>>, ReplySender)> = Vec::new();
+        let mut round: Vec<(usize, Vec<f64>, ReplySender)> = Vec::new();
         let mut in_round = [false; STREAM_LANES];
 
         let flush_round =
-            |round: &mut Vec<(usize, Vec<f64>, mpsc::Sender<Vec<f64>>)>,
+            |round: &mut Vec<(usize, Vec<f64>, ReplySender)>,
              in_round: &mut [bool; STREAM_LANES],
              hub: &mut Hub| {
                 if round.is_empty() {
@@ -412,7 +587,7 @@ impl BatchFront {
                     .collect();
                 let outs = hub.sweep_streams(&reqs);
                 for ((_, _, reply), out) in round.drain(..).zip(outs) {
-                    let _ = reply.send(out);
+                    reply.send(out);
                 }
                 in_round.fill(false);
             };
@@ -435,7 +610,7 @@ impl BatchFront {
                     }
                     hub.reset_lane(lane);
                     if let Some(tx) = reply {
-                        let _ = tx.send(());
+                        tx.send(Vec::new());
                     }
                 }
             }
@@ -446,10 +621,13 @@ impl BatchFront {
         // per chunk (reused across rounds: no parameter downcast or plane
         // allocation once a chunk size has been seen)
         let d_out = self.model.readout.w.cols();
-        let mut start = 0;
-        while start < predicts.len() {
-            let chunk = &predicts[start..(start + MAX_PREDICT_BATCH).min(predicts.len())];
-            start += chunk.len();
+        let mut predicts = predicts.into_iter();
+        loop {
+            let chunk: Vec<(Arc<Vec<f64>>, ReplySender)> =
+                predicts.by_ref().take(MAX_PREDICT_BATCH).collect();
+            if chunk.is_empty() {
+                break;
+            }
             let k = chunk.len();
             let engine = pool.get(k);
             if d_out == 1 {
@@ -461,8 +639,8 @@ impl BatchFront {
                     .map(|(b, (input, _))| (b, input.as_slice()))
                     .collect();
                 let outs = engine.sweep_streams(&reqs);
-                for ((_, reply), out) in chunk.iter().zip(outs) {
-                    let _ = reply.send(out);
+                for ((_, reply), out) in chunk.into_iter().zip(outs) {
+                    reply.send(out);
                 }
             } else {
                 // general D_out: zero-padded full sweep (padded steps and
@@ -476,10 +654,18 @@ impl BatchFront {
                     }
                 }
                 let y = engine.run_readout(&u);
-                for (b, (input, reply)) in chunk.iter().enumerate() {
-                    let out: Vec<f64> =
-                        (0..input.len()).map(|t| y[(t, b * d_out)]).collect();
-                    let _ = reply.send(out);
+                for (b, (input, reply)) in chunk.into_iter().enumerate() {
+                    // ALL d_out columns of this lane, step-major — the
+                    // same `[T × D_out]` flattening Model::predict
+                    // returns, so multi-output responses carry every
+                    // output, not just column 0
+                    let mut out = Vec::with_capacity(input.len() * d_out);
+                    for t in 0..input.len() {
+                        for j in 0..d_out {
+                            out.push(y[(t, b * d_out + j)]);
+                        }
+                    }
+                    reply.send(out);
                 }
             }
         }
@@ -511,8 +697,8 @@ mod tests {
                 .map(|input| {
                     let (tx, rx) = mpsc::channel();
                     st.jobs.push(FrontJob::Predict {
-                        input: input.clone(),
-                        reply: tx,
+                        input: Arc::new(input.clone()),
+                        reply: ReplySender::Chan(tx),
                     });
                     rx
                 })
@@ -660,6 +846,129 @@ mod tests {
         // hold-off they usually coalesce into exactly one
         assert!(front.sweep_count() >= 1);
         assert_eq!(front.queue_depth(), 0);
+        front.shutdown();
+    }
+
+    #[test]
+    fn released_lane_is_withheld_when_sweeper_is_gone() {
+        // regression: release_lane used to queue a Reset and push the
+        // lane back to the free list even when the sweeper was gone —
+        // `submit` returns false, the reset never runs, and the NEXT
+        // owner inherits this connection's reservoir state. The fix
+        // withholds the un-zeroable lane instead.
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let lane = front.acquire_lane().unwrap();
+        // put non-zero state into the lane
+        let _ = front.stream(lane, task.input[..10].to_vec()).unwrap();
+        // the sweeper shuts down between this connection's release and
+        // the next acquire (server shutdown racing connection teardown)
+        front.shutdown();
+        front.release_lane(lane);
+        // the stale lane must never be handed out again: draining the
+        // whole free list yields every OTHER lane, and only those
+        let mut handed_out = 0;
+        while let Some(l) = front.acquire_lane() {
+            assert_ne!(l, lane, "stale (un-reset) lane handed back out");
+            handed_out += 1;
+        }
+        assert_eq!(handed_out, STREAM_LANES - 1);
+    }
+
+    #[test]
+    fn general_d_out_predict_returns_all_output_columns() {
+        // regression: the coalesced general-D_out path collected only
+        // `y[(t, b*d_out)]` — the first output column per lane — so
+        // multi-output models got truncated responses over the wire
+        let model = Arc::new(super::super::testutil::make_model_d2());
+        let d_out = model.readout.w.cols();
+        assert_eq!(d_out, 2);
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        for len in [1usize, 23, 37] {
+            let input = task.input[..len].to_vec();
+            let got = front.predict(input.clone());
+            // T steps × 2 outputs, step-major
+            assert_eq!(got.len(), len * d_out, "truncated multi-output reply");
+            let u = Mat::from_rows(len, 1, &input);
+            let y = model.qesn.run_readout(&u, &model.readout);
+            for t in 0..len {
+                for j in 0..d_out {
+                    let (a, b) = (got[t * d_out + j], y[(t, j)]);
+                    assert!(
+                        (a - b).abs() == 0.0,
+                        "d_out=2 predict diverged at t={t}, j={j}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+        // the columns carry different trained outputs, so truncation or
+        // column aliasing would be visible above
+        let probe = front.predict(task.input[..8].to_vec());
+        assert!((0..8).any(|t| probe[t * 2] != probe[t * 2 + 1]));
+        front.shutdown();
+    }
+
+    #[test]
+    fn event_reply_delivers_exactly_one_completion() {
+        let q = CompletionQueue::new(Box::new(|| {}));
+        EventReply::new(7, Arc::clone(&q)).complete(vec![1.0]);
+        drop(EventReply::new(8, Arc::clone(&q)));
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(matches!(&drained[0], (7, Completion::Done(v)) if *v == [1.0]));
+        assert!(matches!(&drained[1], (8, Completion::Dropped)));
+    }
+
+    #[test]
+    fn event_reply_of_a_refused_job_still_completes_as_dropped() {
+        // the poll loop registers its pending slot unconditionally; a
+        // job refused at submit (shutdown) must still deliver a Dropped
+        // completion so the slot resolves into the fallback path
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        front.shutdown();
+        let q = CompletionQueue::new(Box::new(|| {}));
+        let accepted = front.submit_predict(
+            Arc::new(vec![0.1, 0.2]),
+            ReplySender::Event(EventReply::new(3, Arc::clone(&q))),
+        );
+        assert!(!accepted);
+        let drained = q.drain();
+        assert!(matches!(drained.as_slice(), [(3, Completion::Dropped)]));
+    }
+
+    #[test]
+    fn event_reply_completes_done_through_the_sweeper_and_wakes() {
+        // the full event-reply round trip minus epoll: submit with an
+        // Event reply, block on the wake callback, drain the completion,
+        // and check the payload is bit-identical to Model::predict
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let input = task.input[..31].to_vec();
+        let (wtx, wrx) = mpsc::channel();
+        let q = CompletionQueue::new(Box::new(move || {
+            let _ = wtx.send(());
+        }));
+        assert!(front.submit_predict(
+            Arc::new(input.clone()),
+            ReplySender::Event(EventReply::new(42, Arc::clone(&q))),
+        ));
+        wrx.recv().expect("sweeper fires the wake callback");
+        let drained = q.drain();
+        assert_eq!(drained.len(), 1);
+        match &drained[0] {
+            (42, Completion::Done(out)) => {
+                let want = model.predict(&input);
+                assert_eq!(out.len(), want.len());
+                for (a, b) in out.iter().zip(&want) {
+                    assert!((a - b).abs() == 0.0);
+                }
+            }
+            other => panic!("expected Done(42), got token {}", other.0),
+        }
         front.shutdown();
     }
 

@@ -6,10 +6,26 @@
 //!
 //! | module | role |
 //! |--------|------|
-//! | `wire.rs` | TCP accept loop, JSON protocol, connection→shard binding, [`Client`] |
+//! | `wire.rs` | JSON protocol, transport-agnostic request core, connection→shard binding, entry points ([`serve_on`]), [`Client`] |
+//! | `poll.rs` | epoll readiness loop (Linux default): one poll thread serves every connection, thread-free idle |
 //! | `shard.rs` | [`ShardedFront`]: one [`BatchFront`] per core, stream hashing + least-loaded predict deal |
-//! | `front.rs` | [`BatchFront`]: one sweeper thread, job queue, streaming-lane hub |
+//! | `front.rs` | [`BatchFront`]: one sweeper thread, job queue, streaming-lane hub, event-reply plumbing |
 //! | `pool.rs` | pooled stateless predict engines, keyed by padded lane-width bucket |
+//!
+//! ## Event-driven accept loop
+//!
+//! On Linux, [`serve_on`] (and every `serve*` wrapper) defaults to the
+//! epoll readiness loop in `poll.rs`: non-blocking sockets, one poll
+//! thread owning every connection's read/write buffers and line
+//! framing, sweeper replies delivered through an eventfd-woken
+//! completion queue and flushed on socket writability. N idle streaming
+//! connections cost N file descriptors and ZERO threads — the box runs
+//! `S` sweepers + 1 poll thread regardless of connection count. The
+//! thread-per-connection transport remains available as an A/B twin
+//! (`serve_on(…, threaded = true)` / `repro serve --threaded`, and the
+//! non-Linux default); both transports drive the same shard queues and
+//! the same sweeper arithmetic, so responses are bit-identical between
+//! them at both precisions (tested).
 //!
 //! ## Shard-per-core serving
 //!
@@ -68,13 +84,15 @@
 //! back to a local per-connection state with the same arithmetic.
 
 mod front;
+#[cfg(target_os = "linux")]
+mod poll;
 mod pool;
 mod shard;
 mod wire;
 
 pub use front::BatchFront;
 pub use shard::ShardedFront;
-pub use wire::{serve, serve_sharded, serve_with_holdoff, Client};
+pub use wire::{serve, serve_on, serve_sharded, serve_with_holdoff, Client};
 
 use std::sync::Mutex;
 
@@ -145,12 +163,15 @@ impl Model {
     /// — `O(N + N·D_out)` per step, no `[T × N]` materialization. Runs at
     /// the model's precision with the exact arithmetic of the batched
     /// serving path, so batching stays invisible at every precision.
+    /// Multi-output models return the `[T × D_out]` predictions flattened
+    /// step-major (all `D_out` values of step 0, then step 1, …) — the
+    /// same shape the coalesced front path serves.
     pub fn predict(&self, input: &[f64]) -> Vec<f64> {
         match self.precision {
             Precision::F64 => {
                 let u = Mat::from_rows(input.len(), 1, input);
                 let y = self.qesn.run_readout(&u, &self.readout);
-                (0..y.rows()).map(|t| y[(t, 0)]).collect()
+                flatten_step_major(&y)
             }
             Precision::F32 => {
                 // mirror the front's per-lane arithmetic exactly (lane
@@ -219,8 +240,21 @@ fn predict_f32_lane(
     } else {
         let u = Mat::from_rows(input.len(), 1, input);
         let y = engine.run_readout_cast(&u, ro);
-        (0..y.rows()).map(|t| y[(t, 0)]).collect()
+        flatten_step_major(&y)
     }
+}
+
+/// Flatten a `[T × D_out]` prediction matrix step-major — the wire shape
+/// of a multi-output predict (for `D_out = 1` this is just the column).
+fn flatten_step_major(y: &Mat) -> Vec<f64> {
+    let (t_len, d_out) = (y.rows(), y.cols());
+    let mut out = Vec::with_capacity(t_len * d_out);
+    for t in 0..t_len {
+        for j in 0..d_out {
+            out.push(y[(t, j)]);
+        }
+    }
+    out
 }
 
 /// Shared model fixtures for the subtree's unit tests.
@@ -250,6 +284,28 @@ pub(crate) mod testutil {
     pub(crate) fn make_model_f32() -> Model {
         let m = make_model();
         Model::with_precision(m.esn, m.readout, Precision::F32)
+    }
+
+    /// A 2-output model (D_out = 2): the MSO target plus an affine twin
+    /// of it, so the two trained columns are genuinely different and
+    /// column truncation/aliasing is observable.
+    pub(crate) fn make_model_d2() -> Model {
+        let config = EsnConfig::default().with_n(30).with_sr(0.9).with_seed(1);
+        let mut rng = Pcg64::new(1, 2);
+        let spec = uniform_spectrum(30, 0.9, &mut rng);
+        let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+        let task = MsoTask::new(1);
+        let u = task.input_mat();
+        let feats = esn.run(&u);
+        let x = crate::tasks::mso::slice_rows(&feats, 100..400);
+        let y1 = task.target_mat(100..400);
+        let mut y = Mat::zeros(y1.rows(), 2);
+        for t in 0..y1.rows() {
+            y[(t, 0)] = y1[(t, 0)];
+            y[(t, 1)] = 0.5 - 2.0 * y1[(t, 0)];
+        }
+        let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity).unwrap();
+        Model::new(esn, readout)
     }
 }
 

@@ -1,0 +1,831 @@
+//! Event-driven serving transport: a hand-rolled epoll readiness loop.
+//!
+//! The thread-per-connection transport burns one OS thread per client
+//! just to park in `read_line` — at 10k idle streaming connections that
+//! is 10k stacks and 10k scheduler entries doing nothing. The paper's
+//! O(N) step makes the arithmetic cheap enough that those threads ARE
+//! the serving cost. This module replaces them with ONE poll thread:
+//!
+//! ```text
+//!             ┌─────────────────────────────────────────────────────┐
+//!             │                  poll thread (epoll)                │
+//!  listener ──┤ accept → register fd (non-blocking, level-trig.)    │
+//!  conn fd ───┤ readable → rbuf → line frame → dispatch:            │
+//!             │    info / errors / hub-less stream → Ready slot     │
+//!             │    predict/stream/reset → Waiting slot + EventReply │
+//!             │                    │ submit ───────────▶ shard queues
+//!             │                    ▼                        │ sweep
+//!  eventfd ◀──┼──────── CompletionQueue.push ◀── ReplySender┘
+//!             │ wake → drain completions → resolve slot → wbuf      │
+//!             │ writable → flush wbuf (EPOLLOUT only while pending) │
+//!             └─────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Raw `libc` syscalls via `extern "C"` — `epoll_create1` / `epoll_ctl`
+//! / `epoll_wait`, plus an `eventfd` the sweepers signal when they
+//! complete a job (std links libc on Linux; no new crates). Sockets stay
+//! `std::net` types flipped to non-blocking.
+//!
+//! Invariants:
+//!
+//! * **FIFO responses.** Each connection keeps an ordered slot queue;
+//!   a response is flushed only when every earlier request's slot is
+//!   resolved, so pipelined clients see replies in request order even
+//!   though shard queues complete out of order.
+//! * **Exactly-one completion.** Every queued job carries an
+//!   [`EventReply`] whose `Drop` delivers a `Dropped` completion if the
+//!   sweeper dies or refuses the job — a pending slot can never leak, so
+//!   the loop registers slots unconditionally and handles fallbacks
+//!   (direct predict / error response) at completion time.
+//! * **Same decision tree as the threaded path.** `dispatch` mirrors
+//!   `wire.rs::handle_request` op for op on the shared transport-
+//!   agnostic core, so responses are bit-identical between transports
+//!   (tested in `wire.rs` and `rust/tests/pipeline.rs`).
+//! * **Thread-free idle.** An idle connection costs one fd and one
+//!   `Conn` entry. The box runs S sweepers + 1 poll thread regardless
+//!   of connection count (asserted in `rust/tests/pipeline.rs`).
+//!
+//! Hub-overflow streaming (beyond `S × 64` lanes) runs its
+//! connection-local fallback inline on the poll thread — O(T·N) per
+//! request of the same bit-identical arithmetic; acceptable because
+//! overflow lanes are the degraded tier by definition.
+
+#![cfg(target_os = "linux")]
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::AsRawFd;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+use super::front::{Completion, CompletionQueue, EventReply, ReplySender};
+use super::shard::ShardedFront;
+use super::wire::{
+    error_response, guard_streamable, info_response, ip_key, ok_response, parse_op,
+    predict_response, stream_fallback, stream_response, try_acquire_lane, ConnState,
+    Op,
+};
+
+// ---------------------------------------------------------------------------
+// raw syscall surface (glibc symbols; std already links libc on Linux)
+// ---------------------------------------------------------------------------
+
+/// Kernel epoll event record. On x86-64 the kernel ABI packs this struct
+/// (no padding between `events` and `data`); elsewhere it is naturally
+/// aligned. Fields are only ever read BY VALUE (taking a reference to a
+/// packed field would be UB).
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(
+        epfd: c_int,
+        events: *mut EpollEvent,
+        maxevents: c_int,
+        timeout_ms: c_int,
+    ) -> c_int;
+    fn eventfd(initval: u32, flags: c_int) -> c_int;
+    #[link_name = "read"]
+    fn c_read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    #[link_name = "write"]
+    fn c_write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    #[link_name = "close"]
+    fn c_close(fd: c_int) -> c_int;
+}
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+const EINTR: i32 = 4;
+const ENOMEM: i32 = 12;
+const ENFILE: i32 = 23;
+const EMFILE: i32 = 24;
+const EPROTO: i32 = 71;
+const ECONNABORTED: i32 = 103;
+const ENOBUFS: i32 = 105;
+
+/// Thin RAII epoll instance.
+struct Epoll {
+    fd: c_int,
+}
+
+impl Epoll {
+    fn new() -> Result<Self> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        anyhow::ensure!(
+            fd >= 0,
+            "epoll_create1: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(Self { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: c_int, events: u32, token: u64) -> Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
+        anyhow::ensure!(rc == 0, "epoll_ctl: {}", std::io::Error::last_os_error());
+        Ok(())
+    }
+
+    fn add(&self, fd: c_int, events: u32, token: u64) -> Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, events, token)
+    }
+
+    fn modify(&self, fd: c_int, events: u32, token: u64) -> Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, events, token)
+    }
+
+    fn del(&self, fd: c_int) {
+        // failure only means the fd is already gone — nothing to unwind
+        let _ = self.ctl(EPOLL_CTL_DEL, fd, 0, 0);
+    }
+
+    /// Block until at least one event is ready (retrying on EINTR).
+    fn wait(&self, events: &mut [EpollEvent]) -> Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, -1)
+            };
+            if n >= 0 {
+                return Ok(n as usize);
+            }
+            let err = std::io::Error::last_os_error();
+            if err.raw_os_error() != Some(EINTR) {
+                return Err(anyhow!("epoll_wait: {err}"));
+            }
+        }
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe {
+            c_close(self.fd);
+        }
+    }
+}
+
+/// The sweeper→poll wake channel: sweeper threads `signal()` after
+/// pushing a completion, the poll thread `drain_counter()`s on
+/// readability. The counter semantics coalesce any number of signals
+/// into one readable event — exactly what a batch drain wants.
+struct EventFd {
+    fd: c_int,
+}
+
+impl EventFd {
+    fn new() -> Result<Self> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        anyhow::ensure!(fd >= 0, "eventfd: {}", std::io::Error::last_os_error());
+        Ok(Self { fd })
+    }
+
+    fn signal(&self) {
+        let one: u64 = 1;
+        // EAGAIN (counter saturated) still leaves the fd readable, so a
+        // lost increment cannot lose the wake
+        let _ = unsafe { c_write(self.fd, &one as *const u64 as *const c_void, 8) };
+    }
+
+    fn drain_counter(&self) {
+        let mut v: u64 = 0;
+        let _ = unsafe { c_read(self.fd, &mut v as *mut u64 as *mut c_void, 8) };
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe {
+            c_close(self.fd);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection table
+// ---------------------------------------------------------------------------
+
+const LISTENER_TOKEN: u64 = u64::MAX;
+const WAKE_TOKEN: u64 = u64::MAX - 1;
+/// A single request line longer than this is not protocol traffic; the
+/// connection is dropped instead of buffering it unboundedly. Complete
+/// lines are framed out of the buffer every readiness round, so the
+/// buffer only approaches this bound when one LINE does.
+const MAX_LINE_BYTES: usize = 64 << 20;
+/// Max bytes read from one connection per readiness round: level-
+/// triggered epoll re-delivers whatever is left, so a firehose client
+/// yields the poll thread to its peers every `READ_BUDGET` bytes
+/// instead of monopolizing the loop until its socket runs dry.
+const READ_BUDGET: usize = 256 << 10;
+/// Write-side backpressure: while more than this many unflushed response
+/// bytes are pending on a connection, the loop stops reading from it
+/// (EPOLLIN dropped), so a client that pipelines requests without ever
+/// draining replies throttles ITSELF instead of growing server memory —
+/// the event-loop analogue of the threaded path blocking in `write_all`.
+const WBUF_HIGH_WATER: usize = 1 << 20;
+/// Events drained per `epoll_wait` round.
+const EVENT_BATCH: usize = 128;
+
+/// What an in-flight (queued-to-a-sweeper) request resolves into.
+enum PendingKind {
+    /// The input is kept (shared with the queued job via `Arc` — no
+    /// copy) so a `Dropped` completion (sweeper gone) can fall back to
+    /// the direct same-precision `Model::predict`, exactly like
+    /// `BatchFront::predict` does on the threaded path.
+    Predict {
+        input: Arc<Vec<f64>>,
+        queued_at: Instant,
+    },
+    Stream,
+    Reset,
+}
+
+/// One response slot in a connection's FIFO: resolved (`Ready`) slots at
+/// the head flush to the socket; a `Waiting` head holds every later
+/// response back so pipelined replies stay in request order.
+enum Slot {
+    Ready(Json),
+    Waiting { token: u64, kind: PendingKind },
+}
+
+struct Conn {
+    sock: TcpStream,
+    state: ConnState,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Bytes of `wbuf` already written to the socket.
+    wpos: usize,
+    slots: VecDeque<Slot>,
+    /// Last epoll interest mask registered for this fd.
+    interest: u32,
+    /// Whether the fd is currently registered with epoll. Deregistered
+    /// while the wanted mask is empty (EOF seen, nothing to write,
+    /// waiting only on sweeper completions): EPOLLHUP/EPOLLERR are
+    /// unmaskable and level-triggered, so a fully-closed peer would
+    /// busy-wake the loop through an empty interest mask otherwise.
+    registered: bool,
+    /// Peer sent EOF: serve out pending slots, flush, then close.
+    eof: bool,
+    /// Hard error: close as soon as observed.
+    dead: bool,
+}
+
+impl Conn {
+    fn finished(&self) -> bool {
+        self.dead || (self.eof && self.slots.is_empty() && self.wpos >= self.wbuf.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the loop
+// ---------------------------------------------------------------------------
+
+struct EventLoop {
+    ep: Epoll,
+    wake: Arc<EventFd>,
+    completions: Arc<CompletionQueue>,
+    front: Arc<ShardedFront>,
+    conns: HashMap<u64, Conn>,
+    /// In-flight reply token → owning connection id.
+    token_conn: HashMap<u64, u64>,
+    next_conn_id: u64,
+    next_token: u64,
+    accepted: usize,
+    accepting: bool,
+    max_conns: Option<usize>,
+}
+
+/// Serve every connection of `listener` from this thread with an epoll
+/// readiness loop. Returns once `max_conns` connections have been
+/// accepted AND have all closed (`None`: runs forever). Called by
+/// [`super::wire::serve_on`], which owns the sweeper lifecycle.
+pub(crate) fn serve_event_loop(
+    listener: TcpListener,
+    front: Arc<ShardedFront>,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let ep = Epoll::new()?;
+    let wake = Arc::new(EventFd::new()?);
+    let completions = {
+        let w = Arc::clone(&wake);
+        CompletionQueue::new(Box::new(move || w.signal()))
+    };
+    ep.add(listener.as_raw_fd(), EPOLLIN, LISTENER_TOKEN)?;
+    ep.add(wake.fd, EPOLLIN, WAKE_TOKEN)?;
+    let mut lp = EventLoop {
+        ep,
+        wake,
+        completions,
+        front,
+        conns: HashMap::new(),
+        token_conn: HashMap::new(),
+        next_conn_id: 0,
+        next_token: 0,
+        accepted: 0,
+        accepting: true,
+        max_conns,
+    };
+    let mut events = vec![EpollEvent { events: 0, data: 0 }; EVENT_BATCH];
+    let mut accept_err: Option<anyhow::Error> = None;
+    loop {
+        if let Some(max) = lp.max_conns {
+            if lp.accepting && lp.accepted >= max {
+                lp.stop_accepting(&listener);
+            }
+        }
+        if !lp.accepting && lp.conns.is_empty() {
+            break;
+        }
+        let n = lp.ep.wait(&mut events)?;
+        for ev in &events[..n] {
+            // copy packed fields by value (references into a packed
+            // struct would be UB)
+            let (token, mask) = (ev.data, ev.events);
+            match token {
+                LISTENER_TOKEN => {
+                    if let Err(e) = lp.accept_ready(&listener) {
+                        // like the threaded path: stop accepting, serve
+                        // the live connections out, then surface the
+                        // accept error
+                        lp.stop_accepting(&listener);
+                        accept_err = Some(e);
+                    }
+                }
+                WAKE_TOKEN => {
+                    lp.wake.drain_counter();
+                    lp.deliver_completions();
+                }
+                id => lp.conn_event(id, mask),
+            }
+        }
+    }
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+impl EventLoop {
+    fn stop_accepting(&mut self, listener: &TcpListener) {
+        if self.accepting {
+            self.accepting = false;
+            self.ep.del(listener.as_raw_fd());
+        }
+    }
+
+    /// Drain the accept backlog (level-triggered: whatever is left stays
+    /// readable for the next round).
+    fn accept_ready(&mut self, listener: &TcpListener) -> Result<()> {
+        loop {
+            if let Some(max) = self.max_conns {
+                if self.accepted >= max {
+                    return Ok(()); // the loop head deregisters next round
+                }
+            }
+            match listener.accept() {
+                Ok((sock, peer)) => {
+                    // same key derivation as the threaded path: peer IP,
+                    // so reconnects keep their home shard (accept(2)
+                    // hands the address over directly — the tagged
+                    // fallback key only exists for transports that must
+                    // query it after the fact)
+                    let key = ip_key(&peer.ip());
+                    self.accepted += 1;
+                    // a connection that can't be registered is dropped
+                    // (closed), never fatal to the serving loop
+                    let _ = self.register_conn(sock, key);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => match e.raw_os_error() {
+                    // the pending connection was RST before accept —
+                    // it is consumed; keep draining the backlog
+                    Some(ECONNABORTED) | Some(EPROTO) => continue,
+                    // resource exhaustion (fd table full, no buffers):
+                    // not this listener's death sentence — yield the
+                    // round with a brief throttle (the level-triggered
+                    // listener would otherwise busy-spin while the
+                    // condition persists) and retry on the next wake
+                    Some(EMFILE) | Some(ENFILE) | Some(ENOBUFS) | Some(ENOMEM) => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        return Ok(());
+                    }
+                    _ => return Err(e.into()),
+                },
+            }
+        }
+    }
+
+    fn register_conn(&mut self, sock: TcpStream, key: u64) -> Result<()> {
+        sock.set_nonblocking(true)?;
+        let id = self.next_conn_id;
+        self.next_conn_id += 1;
+        let interest = EPOLLIN | EPOLLRDHUP;
+        self.ep.add(sock.as_raw_fd(), interest, id)?;
+        self.conns.insert(
+            id,
+            Conn {
+                sock,
+                state: ConnState::new(self.front.shard_for_key(key)),
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                slots: VecDeque::new(),
+                interest,
+                registered: true,
+                eof: false,
+                dead: false,
+            },
+        );
+        Ok(())
+    }
+
+    /// Readiness on a connection fd: read what's there, dispatch every
+    /// complete line, flush what's writable, close if done.
+    fn conn_event(&mut self, id: u64, mask: u32) {
+        let Some(mut conn) = self.conns.remove(&id) else {
+            return;
+        };
+        if mask & EPOLLERR != 0 {
+            conn.dead = true;
+        }
+        if !conn.dead && !conn.eof && mask & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
+            read_ready(&mut conn);
+            // frame + dispatch every complete line, compacting the read
+            // buffer ONCE per round (a per-line drain would memmove the
+            // whole remainder per request under pipelined bursts)
+            let mut consumed = 0usize;
+            while !conn.dead {
+                let Some((end, next)) = next_line_bounds(&conn.rbuf, consumed)
+                else {
+                    break;
+                };
+                // parse in place while the buffer is borrowed (`Op` owns
+                // its data, so no per-line String copy on the poll
+                // thread's hot path); invalid UTF-8 closes the
+                // connection with no response — the same observable
+                // behavior as the threaded path, whose `read_line` fails
+                // with InvalidData there
+                let op = match std::str::from_utf8(&conn.rbuf[consumed..end]) {
+                    Ok(line) => parse_op(line),
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                };
+                consumed = next;
+                self.dispatch(&mut conn, id, op);
+            }
+            if consumed > 0 {
+                conn.rbuf.drain(..consumed);
+            }
+            if conn.eof && !conn.dead && !conn.rbuf.is_empty() {
+                // the peer half-closed with an unterminated final line:
+                // serve it, exactly like the threaded path's
+                // BufReader::read_line returning the partial line at EOF
+                // (invalid UTF-8 closes unanswered there too)
+                let tail = std::mem::take(&mut conn.rbuf);
+                match std::str::from_utf8(&tail) {
+                    Ok(line) => {
+                        let op = parse_op(line);
+                        self.dispatch(&mut conn, id, op);
+                    }
+                    Err(_) => conn.dead = true,
+                }
+            }
+        }
+        self.pump(&mut conn, id);
+        self.finish_or_keep(id, conn);
+    }
+
+    fn alloc_token(&mut self, conn_id: u64) -> u64 {
+        let t = self.next_token;
+        self.next_token += 1;
+        self.token_conn.insert(t, conn_id);
+        t
+    }
+
+    fn event_reply(&mut self, conn_id: u64) -> (u64, ReplySender) {
+        let token = self.alloc_token(conn_id);
+        let reply =
+            ReplySender::Event(EventReply::new(token, Arc::clone(&self.completions)));
+        (token, reply)
+    }
+
+    /// One parsed request → one slot. Mirrors `wire.rs::handle_request`
+    /// op for op, with event replies instead of blocking channels. Takes
+    /// the already-parsed `Result<Op>` so the caller can parse while the
+    /// read buffer is still borrowed (no per-line copy).
+    fn dispatch(&mut self, conn: &mut Conn, id: u64, op: Result<Op>) {
+        let front = Arc::clone(&self.front);
+        match op {
+            Err(e) => conn.slots.push_back(Slot::Ready(error_response(&e))),
+            Ok(Op::Info) => conn
+                .slots
+                .push_back(Slot::Ready(info_response(&front, &conn.state))),
+            Ok(Op::Predict(input)) => {
+                let input = Arc::new(input);
+                let (token, reply) = self.event_reply(id);
+                conn.slots.push_back(Slot::Waiting {
+                    token,
+                    kind: PendingKind::Predict {
+                        input: Arc::clone(&input),
+                        queued_at: Instant::now(),
+                    },
+                });
+                // stateless: dealt to the least-loaded shard; a refused
+                // job still resolves through its Dropped completion
+                front.submit_predict_dealt(input, reply);
+            }
+            Ok(Op::Stream(input)) => {
+                if let Err(e) = guard_streamable(front.model()) {
+                    conn.slots.push_back(Slot::Ready(error_response(&e)));
+                    return;
+                }
+                try_acquire_lane(&front, &mut conn.state);
+                match conn.state.lane {
+                    Some(lane) => {
+                        let (token, reply) = self.event_reply(id);
+                        conn.slots.push_back(Slot::Waiting {
+                            token,
+                            kind: PendingKind::Stream,
+                        });
+                        front
+                            .shard(conn.state.shard_idx)
+                            .submit_stream(lane, input, reply);
+                    }
+                    None => {
+                        // hub full: connection-local fallback, inline on
+                        // the poll thread (same bits as a hub lane)
+                        let outs =
+                            stream_fallback(front.model(), &mut conn.state, &input);
+                        conn.slots.push_back(Slot::Ready(stream_response(outs)));
+                    }
+                }
+            }
+            Ok(Op::Reset) => {
+                conn.state.clear_local();
+                match conn.state.lane {
+                    Some(lane) => {
+                        let (token, reply) = self.event_reply(id);
+                        conn.slots.push_back(Slot::Waiting {
+                            token,
+                            kind: PendingKind::Reset,
+                        });
+                        front.shard(conn.state.shard_idx).submit_reset(lane, reply);
+                    }
+                    None => conn.slots.push_back(Slot::Ready(ok_response())),
+                }
+            }
+        }
+    }
+
+    /// Route drained completions to their slots and flush any
+    /// connections whose FIFO head became ready.
+    fn deliver_completions(&mut self) {
+        for (token, completion) in self.completions.drain() {
+            let Some(cid) = self.token_conn.remove(&token) else {
+                continue;
+            };
+            let Some(mut conn) = self.conns.remove(&cid) else {
+                // connection closed while the job was in flight — the
+                // completion (and its exactly-once guarantee) is spent
+                continue;
+            };
+            resolve_slot(&mut conn, token, completion, &self.front);
+            self.pump(&mut conn, cid);
+            self.finish_or_keep(cid, conn);
+        }
+    }
+
+    /// Serialize consecutive resolved head slots into the write buffer,
+    /// flush as far as the socket accepts, and (de)register EPOLLOUT so
+    /// a drained buffer never busy-wakes the loop.
+    fn pump(&mut self, conn: &mut Conn, id: u64) {
+        while let Some(Slot::Ready(_)) = conn.slots.front() {
+            let Some(Slot::Ready(json)) = conn.slots.pop_front() else {
+                unreachable!("front() said Ready");
+            };
+            conn.wbuf
+                .extend_from_slice(json.to_string_compact().as_bytes());
+            conn.wbuf.push(b'\n');
+        }
+        flush(conn);
+        if conn.wpos >= conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        }
+        if conn.dead {
+            return;
+        }
+        let mut want = 0u32;
+        let pending = conn.wbuf.len() - conn.wpos;
+        // backpressure: stop reading while the peer isn't draining its
+        // responses (resumes automatically — EPOLLOUT flushes call back
+        // into pump, which re-adds EPOLLIN once below the mark)
+        if !conn.eof && pending <= WBUF_HIGH_WATER {
+            want |= EPOLLIN | EPOLLRDHUP;
+        }
+        if pending > 0 {
+            want |= EPOLLOUT;
+        }
+        if want == 0 {
+            // EOF seen, nothing to write, waiting only on sweeper
+            // completions: EPOLLHUP/EPOLLERR are unmaskable and
+            // level-triggered, so keeping the fd registered with an
+            // empty mask would busy-wake the loop on a fully-closed
+            // peer. Deregister; the completion path re-registers when
+            // there is a response to flush.
+            if conn.registered {
+                self.ep.del(conn.sock.as_raw_fd());
+                conn.registered = false;
+            }
+        } else if !conn.registered {
+            if self.ep.add(conn.sock.as_raw_fd(), want, id).is_ok() {
+                conn.registered = true;
+                conn.interest = want;
+            } else {
+                conn.dead = true;
+            }
+        } else if want != conn.interest {
+            if self.ep.modify(conn.sock.as_raw_fd(), want, id).is_ok() {
+                conn.interest = want;
+            } else {
+                conn.dead = true;
+            }
+        }
+    }
+
+    fn finish_or_keep(&mut self, id: u64, conn: Conn) {
+        if conn.finished() {
+            self.ep.del(conn.sock.as_raw_fd());
+            if let Some(lane) = conn.state.lane {
+                // queues a reset ahead of re-issue (or withholds the
+                // lane if the sweeper is gone) — see release_lane
+                self.front.shard(conn.state.shard_idx).release_lane(lane);
+            }
+            // dropping `conn` closes the socket; any still-in-flight
+            // token resolves later and is discarded in deliver_completions
+        } else {
+            self.conns.insert(id, conn);
+        }
+    }
+}
+
+/// Non-blocking read into the connection buffer until the socket is
+/// dry, EOF, a hard error, or the per-round fairness budget is spent
+/// (the remainder stays readable — level-triggered — and is picked up
+/// next round, after other connections get their turn).
+fn read_ready(conn: &mut Conn) {
+    let mut buf = [0u8; 4096];
+    let mut taken = 0usize;
+    while taken < READ_BUDGET {
+        match conn.sock.read(&mut buf) {
+            Ok(0) => {
+                conn.eof = true;
+                break;
+            }
+            Ok(n) => {
+                taken += n;
+                conn.rbuf.extend_from_slice(&buf[..n]);
+                if conn.rbuf.len() > MAX_LINE_BYTES {
+                    conn.dead = true;
+                    break;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Bounds of the next complete line at/after `from`: `(end, next)` where
+/// `rbuf[from..end]` is the line (newline excluded) and `next` is where
+/// the following line starts. Pure scan — the caller compacts the buffer
+/// once per readiness round, not per line.
+fn next_line_bounds(rbuf: &[u8], from: usize) -> Option<(usize, usize)> {
+    let rel = rbuf[from..].iter().position(|&b| b == b'\n')?;
+    Some((from + rel, from + rel + 1))
+}
+
+/// Turn a completion into its response JSON in the owning connection's
+/// slot. Fallbacks here mirror what the threaded path's blocking calls
+/// do when the sweeper is gone.
+fn resolve_slot(
+    conn: &mut Conn,
+    token: u64,
+    completion: Completion,
+    front: &ShardedFront,
+) {
+    for slot in conn.slots.iter_mut() {
+        let Slot::Waiting { token: t, kind } = slot else {
+            continue;
+        };
+        if *t != token {
+            continue;
+        }
+        let json = match (kind, completion) {
+            (PendingKind::Predict { input, queued_at }, Completion::Done(out)) => {
+                predict_response(out, input.len(), queued_at.elapsed().as_secs_f64())
+            }
+            (PendingKind::Predict { input, queued_at }, Completion::Dropped) => {
+                // sweeper gone: direct same-precision computation, just
+                // like BatchFront::predict's fallback — still identical
+                // bits on the wire
+                let steps = input.len();
+                let out = front.model().predict(input);
+                predict_response(out, steps, queued_at.elapsed().as_secs_f64())
+            }
+            (PendingKind::Stream, Completion::Done(outs)) => stream_response(outs),
+            (PendingKind::Reset, Completion::Done(_)) => ok_response(),
+            (PendingKind::Stream | PendingKind::Reset, Completion::Dropped) => {
+                error_response(&anyhow!("batch front unavailable"))
+            }
+        };
+        *slot = Slot::Ready(json);
+        return;
+    }
+}
+
+/// Write as much of the pending buffer as the socket accepts.
+fn flush(conn: &mut Conn) {
+    while conn.wpos < conn.wbuf.len() {
+        match conn.sock.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_framing_handles_partial_multiple_and_empty_lines() {
+        let buf = b"abc\ndef".to_vec();
+        assert_eq!(next_line_bounds(&buf, 0), Some((3, 4)));
+        assert_eq!(&buf[0..3], b"abc");
+        // partial tail: no complete line yet
+        assert_eq!(next_line_bounds(&buf, 4), None);
+        let buf = b"abc\ndef\n\nx".to_vec();
+        let (end1, next1) = next_line_bounds(&buf, 0).unwrap();
+        assert_eq!(&buf[0..end1], b"abc");
+        let (end2, next2) = next_line_bounds(&buf, next1).unwrap();
+        assert_eq!(&buf[next1..end2], b"def");
+        // empty line between newlines
+        let (end3, next3) = next_line_bounds(&buf, next2).unwrap();
+        assert_eq!(end3, next2, "empty line has zero length");
+        assert_eq!(next_line_bounds(&buf, next3), None, "partial 'x' tail");
+    }
+
+    #[test]
+    fn eventfd_signal_wakes_epoll_with_its_token() {
+        let ep = Epoll::new().unwrap();
+        let efd = EventFd::new().unwrap();
+        ep.add(efd.fd, EPOLLIN, 9).unwrap();
+        efd.signal();
+        efd.signal(); // coalesces: still one readable event
+        let mut events = vec![EpollEvent { events: 0, data: 0 }; 4];
+        let n = ep.wait(&mut events).unwrap();
+        assert_eq!(n, 1);
+        let token = events[0].data;
+        assert_eq!(token, 9);
+        efd.drain_counter();
+    }
+}

@@ -138,6 +138,20 @@ impl ShardedFront {
         self.pick_shard().predict_async(input)
     }
 
+    /// Least-loaded-deal predict with an arbitrary reply sink — the
+    /// event loop's form: it passes an `EventReply`, never blocks, and a
+    /// refused job (sweeper gone) still resolves through the reply's
+    /// `Dropped` completion, so the return value only reports whether
+    /// the job was queued. The input `Arc` lets the caller keep its
+    /// fallback copy without cloning the data.
+    pub(crate) fn submit_predict_dealt(
+        &self,
+        input: Arc<Vec<f64>>,
+        reply: super::front::ReplySender,
+    ) -> bool {
+        self.pick_shard().submit_predict(input, reply)
+    }
+
     /// Streaming step(s) on a lane of shard `shard_idx`.
     pub fn stream(
         &self,

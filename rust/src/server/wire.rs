@@ -14,10 +14,29 @@
 //! ```
 //!
 //! The protocol is unchanged from the single-front server — sharding is
-//! invisible on the wire except through `info`, which now reports
-//! `shards`, this connection's `shard`, and per-shard
-//! `shard_queue_depth` / `shard_sweeps` next to the aggregate
-//! `queue_depth` / `sweeps`.
+//! invisible on the wire except through `info`, which reports `shards`,
+//! this connection's `shard`, and per-shard `shard_queue_depth` /
+//! `shard_sweeps` next to the aggregate `queue_depth` / `sweeps`.
+//!
+//! ## Two transports, one request handler
+//!
+//! Request handling is transport-agnostic: [`parse_op`] classifies a
+//! line, the `*_response` builders produce the reply JSON, and the
+//! per-connection identity lives in a [`ConnState`]. Two transports
+//! drive that core:
+//!
+//! * **event loop** (`server/poll.rs`, the Linux default): ONE poll
+//!   thread owns every connection through an epoll readiness loop;
+//!   requests are submitted to the shard queues with event replies and
+//!   responses flush on socket writability. N idle connections cost N
+//!   file descriptors and zero threads.
+//! * **threaded** (`serve_on(…, threaded = true)`, the `--threaded` A/B
+//!   path and the non-Linux fallback): one handler thread per
+//!   connection, parked in `read_line`, blocking on mpsc reply channels.
+//!
+//! Both transports run the same sweeper arithmetic on the same shard
+//! queues, so responses are bit-identical between them at both
+//! precisions (tested below).
 //!
 //! Each accepted connection derives a key from its **peer IP** (ports
 //! change per connection, the address does not) and hashes to a **home
@@ -26,13 +45,15 @@
 //! shard. Because the hash is a pure function of the key and the key is
 //! a pure function of the client's address, a reconnecting client lands
 //! on the same shard — shard placement is stable across reconnects
-//! (tested). When the peer address is unreadable the accept counter
-//! stands in. Connections beyond the home hub's lane capacity fall back
-//! to a connection-local state with the same arithmetic
+//! (tested). When the peer address is unreadable, a tagged accept
+//! counter stands in ([`fallback_key`] — disjoint from the IPv4 key
+//! space, so an unreadable peer can never alias a real client's home
+//! shard). Connections beyond the home hub's lane capacity fall back to
+//! a connection-local state with the same arithmetic
 //! (precision-matched, bit-identical to a hub lane).
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
@@ -54,7 +75,7 @@ pub(crate) fn default_shards() -> usize {
 /// Connection key from the peer IP (NOT the port — ports are ephemeral,
 /// so keying on the address is what makes a reconnecting client hash to
 /// its previous home shard).
-fn ip_key(ip: &std::net::IpAddr) -> u64 {
+pub(crate) fn ip_key(ip: &std::net::IpAddr) -> u64 {
     match ip {
         std::net::IpAddr::V4(v4) => u32::from_be_bytes(v4.octets()) as u64,
         std::net::IpAddr::V6(v6) => {
@@ -66,14 +87,35 @@ fn ip_key(ip: &std::net::IpAddr) -> u64 {
     }
 }
 
-/// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks; one
-/// lightweight handler thread per connection, each bound to a home shard
-/// of a [`ShardedFront`] sized to the available cores, with immediate
-/// drain (no hold-off — the latency-safe default; high-concurrency
-/// deployments that prefer deeper coalescing use [`serve_with_holdoff`]).
-/// `max_requests` bounds the total connections accepted (tests /
-/// examples) — all of them are joined before returning; `None` runs
-/// forever.
+/// Tag for connection keys minted when the peer address is unreadable.
+/// IPv4 keys are at most `2³² − 1`, so a raw accept counter must NOT
+/// stand in: `0.0.0.7` and "7th unreadable peer" would be the same key,
+/// and because the shard map is a pure function of the key they would
+/// KEEP colliding onto the same home shard. The tag moves the fallback
+/// range into the top half of the key space, disjoint from every IPv4
+/// key (IPv6 keys are 128→64-bit mixes spread over the whole space; a
+/// chance collision there is no likelier than between two IPv6 peers).
+pub(crate) const FALLBACK_KEY_TAG: u64 = 1 << 63;
+
+/// Connection key for the `counter`-th accepted connection whose peer
+/// address could not be read. See [`FALLBACK_KEY_TAG`].
+pub(crate) fn fallback_key(counter: usize) -> u64 {
+    FALLBACK_KEY_TAG | counter as u64
+}
+
+// ---------------------------------------------------------------------------
+// serving entry points
+// ---------------------------------------------------------------------------
+
+/// Serve `model` on `addr` (e.g. "127.0.0.1:7878"). Blocks. Connections
+/// bind to a home shard of a [`ShardedFront`] sized to the available
+/// cores, with immediate drain (no hold-off — the latency-safe default;
+/// high-concurrency deployments that prefer deeper coalescing use
+/// [`serve_with_holdoff`]). On Linux the connections are served by the
+/// epoll event loop (`server/poll.rs`); elsewhere by one handler thread
+/// per connection. `max_requests` bounds the total connections accepted
+/// (tests / examples) — all of them are served to completion before
+/// returning; `None` runs forever.
 pub fn serve(model: Arc<Model>, addr: &str, max_requests: Option<usize>) -> Result<()> {
     serve_sharded(model, addr, max_requests, 0, None)
 }
@@ -93,11 +135,12 @@ pub fn serve_with_holdoff(
     serve_sharded(model, addr, max_requests, holdoff_us, None)
 }
 
-/// The fully-knobbed server: [`serve_with_holdoff`] plus an explicit
-/// shard count. `None` shards = one per available core; `Some(1)`
-/// reproduces the single-front server bit-exactly (one sweeper, one hub
-/// — the PR-2 behavior); responses are bit-identical at every shard
-/// count either way, since shards never share mutable state.
+/// [`serve_with_holdoff`] plus an explicit shard count. `None` shards =
+/// one per available core; `Some(1)` reproduces the single-front server
+/// bit-exactly (one sweeper, one hub — the PR-2 behavior); responses are
+/// bit-identical at every shard count either way, since shards never
+/// share mutable state. Binds `addr` and delegates to [`serve_on`] with
+/// the default transport.
 pub fn serve_sharded(
     model: Arc<Model>,
     addr: &str,
@@ -106,8 +149,67 @@ pub fn serve_sharded(
     shards: Option<usize>,
 ) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
+    serve_on(listener, model, max_requests, holdoff_us, shards, false).map(|_| ())
+}
+
+/// The fully-knobbed, listener-based entry point: serve `model` on an
+/// already-bound `listener` (bind to port 0 and read
+/// `listener.local_addr()` for a race-free ephemeral-port server — the
+/// test/bench idiom). Returns the bound address once serving completes.
+///
+/// `threaded = false` picks the transport default: the epoll event loop
+/// on Linux (one poll thread, thread-free idle connections), the
+/// thread-per-connection loop elsewhere. `threaded = true` forces the
+/// thread-per-connection path everywhere (`repro serve --threaded`) —
+/// the A/B twin whose responses the event loop must match bit-for-bit.
+pub fn serve_on(
+    listener: TcpListener,
+    model: Arc<Model>,
+    max_requests: Option<usize>,
+    holdoff_us: u64,
+    shards: Option<usize>,
+    threaded: bool,
+) -> Result<SocketAddr> {
+    let addr = listener.local_addr()?;
     let shards = shards.unwrap_or_else(default_shards);
     let front = ShardedFront::start_with_holdoff(model, shards, holdoff_us);
+    let use_event = !threaded && cfg!(target_os = "linux");
+    let res = if use_event {
+        serve_event(listener, Arc::clone(&front), max_requests)
+    } else {
+        serve_threaded(&listener, &front, max_requests)
+    };
+    front.shutdown();
+    res.map(|()| addr)
+}
+
+#[cfg(target_os = "linux")]
+fn serve_event(
+    listener: TcpListener,
+    front: Arc<ShardedFront>,
+    max_conns: Option<usize>,
+) -> Result<()> {
+    super::poll::serve_event_loop(listener, front, max_conns)
+}
+
+#[cfg(not(target_os = "linux"))]
+fn serve_event(
+    _listener: TcpListener,
+    _front: Arc<ShardedFront>,
+    _max_conns: Option<usize>,
+) -> Result<()> {
+    unreachable!("event loop is Linux-only; serve_on routes non-Linux to the threaded path")
+}
+
+/// The thread-per-connection transport: one lightweight handler thread
+/// per accepted connection, parked in `read_line` between requests.
+/// Kept as the `--threaded` A/B twin of the event loop (and the
+/// non-Linux default).
+fn serve_threaded(
+    listener: &TcpListener,
+    front: &Arc<ShardedFront>,
+    max_requests: Option<usize>,
+) -> Result<()> {
     let mut served = 0usize;
     let mut handles = Vec::new();
     let mut accept_err: Option<anyhow::Error> = None;
@@ -115,20 +217,20 @@ pub fn serve_sharded(
         let stream = match stream {
             Ok(s) => s,
             Err(e) => {
-                // don't early-return: the sweepers and any live handlers
-                // must still be wound down below
+                // don't early-return: any live handlers must still be
+                // joined below (and the caller winds the sweepers down)
                 accept_err = Some(e.into());
                 break;
             }
         };
-        let front2 = Arc::clone(&front);
+        let front2 = Arc::clone(front);
         // key by peer IP so the same client re-hashes to the same home
-        // shard across reconnects; fall back to the accept counter when
-        // the peer address is unreadable
+        // shard across reconnects; an unreadable peer address gets a
+        // tagged counter key outside the IPv4 key space
         let conn_key = stream
             .peer_addr()
             .map(|a| ip_key(&a.ip()))
-            .unwrap_or(served as u64);
+            .unwrap_or_else(|_| fallback_key(served));
         let handle = std::thread::spawn(move || {
             let _ = handle_connection(front2, conn_key, stream);
         });
@@ -145,12 +247,15 @@ pub fn serve_sharded(
     for h in handles {
         let _ = h.join();
     }
-    front.shutdown();
     match accept_err {
         Some(e) => Err(e),
         None => Ok(()),
     }
 }
+
+// ---------------------------------------------------------------------------
+// per-connection identity + hub-less fallback state
+// ---------------------------------------------------------------------------
 
 /// Per-connection fallback streaming state at the oracle precision (used
 /// when the home hub is full and the model serves `F64`).
@@ -168,19 +273,37 @@ enum LocalFallback {
     F32(BatchEsn<f32>, LaneReadout<f32>),
 }
 
-/// Per-connection streaming identity: the home shard is fixed at accept
-/// time (hash of the connection key); a hub lane on that shard is
-/// acquired LAZILY on the first `stream` op (predict-only connections
-/// never occupy one) and kept for the connection's lifetime; once the
-/// hub was full for this connection, it sticks to the local fallback so
-/// its state never jumps between hub and local.
-struct ConnState {
-    shard_idx: usize,
-    lane: Option<usize>,
+/// Per-connection streaming identity, shared by both transports: the
+/// home shard is fixed at accept time (hash of the connection key); a
+/// hub lane on that shard is acquired LAZILY on the first `stream` op
+/// (predict-only connections never occupy one) and kept for the
+/// connection's lifetime; once the hub was full for this connection, it
+/// sticks to the local fallback so its state never jumps between hub
+/// and local.
+pub(crate) struct ConnState {
+    pub(crate) shard_idx: usize,
+    pub(crate) lane: Option<usize>,
     hub_denied: bool,
     /// Built lazily on the first hub-denied `stream` op — predict-only
     /// connections (and connections that win a hub lane) never pay for it.
     local: Option<LocalFallback>,
+}
+
+impl ConnState {
+    pub(crate) fn new(shard_idx: usize) -> Self {
+        Self {
+            shard_idx,
+            lane: None,
+            hub_denied: false,
+            local: None,
+        }
+    }
+
+    /// Drop the lazy local-fallback state — dropping it IS the reset: it
+    /// is rebuilt from the zero state on the next hub-denied stream op.
+    pub(crate) fn clear_local(&mut self) {
+        self.local = None;
+    }
 }
 
 /// Construct the hub-less streaming state at the model's precision.
@@ -200,17 +323,148 @@ fn local_fallback(model: &Model) -> LocalFallback {
     }
 }
 
+/// First-`stream`-op lane claim: try the home shard's hub once; a denial
+/// is sticky so the connection's state never migrates between hub and
+/// local fallback.
+pub(crate) fn try_acquire_lane(front: &ShardedFront, conn: &mut ConnState) {
+    if conn.lane.is_none() && !conn.hub_denied {
+        conn.lane = front.shard(conn.shard_idx).acquire_lane();
+        if conn.lane.is_none() {
+            conn.hub_denied = true;
+        }
+    }
+}
+
+/// Hub-denied streaming step(s) on the connection-local state — the same
+/// per-lane arithmetic as a hub lane, so the fallback is bit-identical.
+pub(crate) fn stream_fallback(
+    model: &Model,
+    conn: &mut ConnState,
+    input: &[f64],
+) -> Vec<f64> {
+    let local = conn.local.get_or_insert_with(|| local_fallback(model));
+    match local {
+        LocalFallback::F64(ls) => stream_local(model, input, ls),
+        LocalFallback::F32(engine, ro) => engine
+            .sweep_streams_cast(&[(0, input)], ro)
+            .pop()
+            .unwrap_or_default(),
+    }
+}
+
+/// The hub's masked stream sweep asserts `D_out = 1`; reject the op at
+/// the wire instead of letting a client panic a shared sweeper thread.
+pub(crate) fn guard_streamable(model: &Model) -> Result<()> {
+    anyhow::ensure!(
+        model.readout.w.cols() == 1,
+        "stream requires a single-output model (D_out = 1); use predict"
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// transport-agnostic request core
+// ---------------------------------------------------------------------------
+
+/// A classified request line. Parsing is transport-independent; the
+/// transports differ only in how they wait for the shard queues.
+pub(crate) enum Op {
+    Info,
+    Predict(Vec<f64>),
+    Stream(Vec<f64>),
+    Reset,
+}
+
+pub(crate) fn parse_op(line: &str) -> Result<Op> {
+    let req = parse(line.trim())?;
+    let op = req
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing 'op'"))?;
+    match op {
+        "info" => Ok(Op::Info),
+        "predict" => Ok(Op::Predict(parse_input(&req)?)),
+        "stream" => Ok(Op::Stream(parse_input(&req)?)),
+        "reset" => Ok(Op::Reset),
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
+    let model = front.model();
+    let home = front.shard(conn.shard_idx);
+    let depths = front.queue_depths();
+    let sweeps = front.sweep_counts();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("n", Json::Num(model.esn.n() as f64)),
+        ("slots", Json::Num(model.esn.spec.slots() as f64)),
+        ("n_real", Json::Num(model.esn.spec.n_real as f64)),
+        ("spectral_radius", Json::Num(model.esn.spec.radius())),
+        ("precision", Json::Str(model.precision.name().into())),
+        ("shards", Json::Num(front.shards() as f64)),
+        ("shard", Json::Num(conn.shard_idx as f64)),
+        (
+            "queue_depth",
+            Json::Num(depths.iter().sum::<usize>() as f64),
+        ),
+        ("sweeps", Json::Num(sweeps.iter().sum::<u64>() as f64)),
+        (
+            "shard_queue_depth",
+            Json::Arr(depths.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        (
+            "shard_sweeps",
+            Json::Arr(sweeps.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
+        ("holdoff_us", Json::Num(home.holdoff_us() as f64)),
+        ("stream_lane", match conn.lane {
+            Some(l) => Json::Num(l as f64),
+            None => Json::Null,
+        }),
+    ])
+}
+
+pub(crate) fn predict_response(output: Vec<f64>, steps: usize, dt_s: f64) -> Json {
+    let dt = dt_s.max(1e-12);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "output",
+            Json::Arr(output.into_iter().map(Json::Num).collect()),
+        ),
+        ("steps_per_sec", Json::Num(steps as f64 / dt)),
+    ])
+}
+
+pub(crate) fn stream_response(outs: Vec<f64>) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("output", Json::Arr(outs.into_iter().map(Json::Num).collect())),
+    ])
+}
+
+pub(crate) fn ok_response() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true))])
+}
+
+pub(crate) fn error_response(e: &anyhow::Error) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(format!("{e:#}"))),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// threaded transport: blocking per-connection handler
+// ---------------------------------------------------------------------------
+
 fn handle_connection(
     front: Arc<ShardedFront>,
     conn_key: u64,
     stream: TcpStream,
 ) -> Result<()> {
-    let mut conn = ConnState {
-        shard_idx: front.shard_for_key(conn_key),
-        lane: None,
-        hub_denied: false,
-        local: None,
-    };
+    let mut conn = ConnState::new(front.shard_for_key(conn_key));
     let result = serve_lines(&front, &mut conn, stream);
     if let Some(l) = conn.lane {
         front.shard(conn.shard_idx).release_lane(l);
@@ -233,16 +487,17 @@ fn serve_lines(
         }
         let response = match handle_request(front, conn, &line) {
             Ok(json) => json,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(format!("{e:#}"))),
-            ]),
+            Err(e) => error_response(&e),
         };
         out.write_all(response.to_string_compact().as_bytes())?;
         out.write_all(b"\n")?;
     }
 }
 
+/// One request → one response, blocking on the shard queues. The event
+/// loop mirrors this decision tree with event replies in
+/// `server/poll.rs::dispatch` — the two must stay semantically aligned
+/// (enforced by the bit-identity tests below).
 fn handle_request(
     front: &ShardedFront,
     conn: &mut ConnState,
@@ -250,119 +505,34 @@ fn handle_request(
 ) -> Result<Json> {
     let model = front.model();
     let home = front.shard(conn.shard_idx);
-    let req = parse(line.trim())?;
-    let op = req
-        .get("op")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing 'op'"))?;
-    match op {
-        "info" => {
-            let depths = front.queue_depths();
-            let sweeps = front.sweep_counts();
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("n", Json::Num(model.esn.n() as f64)),
-                ("slots", Json::Num(model.esn.spec.slots() as f64)),
-                ("n_real", Json::Num(model.esn.spec.n_real as f64)),
-                (
-                    "spectral_radius",
-                    Json::Num(model.esn.spec.radius()),
-                ),
-                ("precision", Json::Str(model.precision.name().into())),
-                ("shards", Json::Num(front.shards() as f64)),
-                ("shard", Json::Num(conn.shard_idx as f64)),
-                (
-                    "queue_depth",
-                    Json::Num(depths.iter().sum::<usize>() as f64),
-                ),
-                (
-                    "sweeps",
-                    Json::Num(sweeps.iter().sum::<u64>() as f64),
-                ),
-                (
-                    "shard_queue_depth",
-                    Json::Arr(
-                        depths.iter().map(|&d| Json::Num(d as f64)).collect(),
-                    ),
-                ),
-                (
-                    "shard_sweeps",
-                    Json::Arr(
-                        sweeps.iter().map(|&s| Json::Num(s as f64)).collect(),
-                    ),
-                ),
-                (
-                    "holdoff_us",
-                    Json::Num(home.holdoff_us() as f64),
-                ),
-                ("stream_lane", match conn.lane {
-                    Some(l) => Json::Num(l as f64),
-                    None => Json::Null,
-                }),
-            ]))
-        }
-        "predict" => {
-            let input = parse_input(&req)?;
+    match parse_op(line)? {
+        Op::Info => Ok(info_response(front, conn)),
+        Op::Predict(input) => {
             let steps = input.len();
             let t = Timer::start();
             // stateless: dealt to the least-loaded shard, not the home
             let output = front.predict(input);
-            let dt = t.elapsed_s().max(1e-12);
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                (
-                    "output",
-                    Json::Arr(output.into_iter().map(Json::Num).collect()),
-                ),
-                (
-                    "steps_per_sec",
-                    Json::Num(steps as f64 / dt),
-                ),
-            ]))
+            Ok(predict_response(output, steps, t.elapsed_s()))
         }
-        "stream" => {
-            let input = parse_input(&req)?;
+        Op::Stream(input) => {
+            guard_streamable(model)?;
             // first stream op: try to claim a lane on the home shard's
             // hub (and never switch engines once this connection's
             // streaming has started)
-            if conn.lane.is_none() && !conn.hub_denied {
-                conn.lane = home.acquire_lane();
-                if conn.lane.is_none() {
-                    conn.hub_denied = true;
-                }
-            }
+            try_acquire_lane(front, conn);
             let outs = match conn.lane {
                 Some(l) => home.stream(l, input)?,
-                None => {
-                    let local = conn
-                        .local
-                        .get_or_insert_with(|| local_fallback(model));
-                    match local {
-                        LocalFallback::F64(ls) => {
-                            stream_local(model, &input, ls)
-                        }
-                        LocalFallback::F32(engine, ro) => engine
-                            .sweep_streams_cast(&[(0, input.as_slice())], ro)
-                            .pop()
-                            .unwrap_or_default(),
-                    }
-                }
+                None => stream_fallback(model, conn, &input),
             };
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("output", Json::Arr(outs.into_iter().map(Json::Num).collect())),
-            ]))
+            Ok(stream_response(outs))
         }
-        "reset" => {
+        Op::Reset => {
             if let Some(l) = conn.lane {
                 home.reset(l)?;
             }
-            // dropping the lazy fallback IS the reset: it is rebuilt from
-            // the zero state on the next hub-denied stream op
-            conn.local = None;
-            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+            conn.clear_local();
+            Ok(ok_response())
         }
-        other => Err(anyhow!("unknown op {other:?}")),
     }
 }
 
@@ -410,9 +580,23 @@ impl Client {
     }
 
     pub fn request(&mut self, req: &Json) -> Result<Json> {
+        self.send(req)?;
+        self.recv()
+    }
+
+    /// Write one request line without waiting for the reply — pair with
+    /// [`Self::recv`] to pipeline requests across many connections (the
+    /// event-loop benches fan out this way).
+    pub fn send(&mut self, req: &Json) -> Result<()> {
         self.writer
             .write_all(req.to_string_compact().as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Read one reply line (FIFO with the requests sent on this
+    /// connection).
+    pub fn recv(&mut self) -> Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         parse(line.trim())
@@ -451,10 +635,27 @@ impl Client {
 
 #[cfg(test)]
 mod tests {
-    use super::super::testutil::{make_model, make_model_f32};
+    use super::super::testutil::{make_model, make_model_d2, make_model_f32};
     use super::*;
 
     use crate::tasks::mso::MsoTask;
+
+    /// Bind port 0, spawn the server, hand back the discovered address —
+    /// race-free (the listener is bound before the thread starts) and
+    /// safe under parallel test runs (no hard-coded ports).
+    fn spawn_server(
+        model: Arc<Model>,
+        max_conns: usize,
+        shards: Option<usize>,
+        threaded: bool,
+    ) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            serve_on(listener, model, Some(max_conns), 0, shards, threaded).unwrap();
+        });
+        (addr, handle)
+    }
 
     #[test]
     fn predict_and_stream_agree() {
@@ -474,15 +675,28 @@ mod tests {
     }
 
     #[test]
+    fn fallback_connection_keys_cannot_alias_ipv4_keys() {
+        // low IPv4 addresses key to small integers …
+        let low = ip_key(&"0.0.0.7".parse().unwrap());
+        assert_eq!(low, 7);
+        // … so the unreadable-peer fallback must live in a disjoint
+        // range: tagged, and above every possible IPv4 key
+        for served in [0usize, 7, 1_000_000] {
+            let k = fallback_key(served);
+            assert_ne!(k & FALLBACK_KEY_TAG, 0);
+            assert!(
+                k > u32::MAX as u64,
+                "fallback key {k} collides with the IPv4 key space"
+            );
+        }
+        assert_ne!(fallback_key(7), low);
+    }
+
+    #[test]
     fn end_to_end_over_tcp() {
         let model = Arc::new(make_model());
-        let addr = "127.0.0.1:47391";
-        let server_model = Arc::clone(&model);
-        let handle = std::thread::spawn(move || {
-            serve(server_model, addr, Some(1)).unwrap();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        let mut client = Client::connect(addr).unwrap();
+        let (addr, handle) = spawn_server(Arc::clone(&model), 1, None, false);
+        let mut client = Client::connect(&addr).unwrap();
         let task = MsoTask::new(1);
         let out = client.predict(&task.input[..40]).unwrap();
         assert_eq!(out.len(), 40);
@@ -505,18 +719,13 @@ mod tests {
         // server answers bit-identically to Model::predict, and `info`
         // reports the shard topology
         let model = Arc::new(make_model());
-        let addr = "127.0.0.1:47421";
-        let server_model = Arc::clone(&model);
-        let handle = std::thread::spawn(move || {
-            serve_sharded(server_model, addr, Some(2), 0, Some(2)).unwrap();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        let (addr, handle) = spawn_server(Arc::clone(&model), 2, Some(2), false);
         let task = MsoTask::new(2);
         // both connections come from the same peer IP, so they (and any
         // reconnect) must hash to the same home shard — shard placement
         // is stable across reconnects
-        let mut c1 = Client::connect(addr).unwrap();
-        let mut c2 = Client::connect(addr).unwrap();
+        let mut c1 = Client::connect(&addr).unwrap();
+        let mut c2 = Client::connect(&addr).unwrap();
         let shard_of = |c: &mut Client| {
             c.request(&Json::obj(vec![("op", Json::Str("info".into()))]))
                 .unwrap()
@@ -562,13 +771,8 @@ mod tests {
     #[test]
     fn info_reports_precision_and_sweeper_metrics() {
         let model = Arc::new(make_model_f32());
-        let addr = "127.0.0.1:47417";
-        let server_model = Arc::clone(&model);
-        let handle = std::thread::spawn(move || {
-            serve(server_model, addr, Some(1)).unwrap();
-        });
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        let mut client = Client::connect(addr).unwrap();
+        let (addr, handle) = spawn_server(Arc::clone(&model), 1, None, false);
+        let mut client = Client::connect(&addr).unwrap();
         let task = MsoTask::new(1);
         // drive at least one sweep through the front
         let out = client.predict(&task.input[..20]).unwrap();
@@ -585,19 +789,88 @@ mod tests {
         // ran on one of them
         assert!(resp.get("sweeps").and_then(Json::as_f64).unwrap() >= 1.0);
         assert!(resp.get("queue_depth").and_then(Json::as_f64).is_some());
-        // default serve() shards one sweeper per available core
+        // default serve_on() shards one sweeper per available core
         let shards = resp.get("shards").and_then(Json::as_f64).unwrap();
         assert!(shards >= 1.0);
         assert_eq!(
             resp.get("shard_sweeps").and_then(Json::as_arr).unwrap().len(),
             shards as usize
         );
-        // serve() runs with immediate drain; the hold-off is opt-in via
-        // serve_with_holdoff / start_with_holdoff
+        // zero hold-off here; the window is opt-in via serve_with_holdoff
         assert_eq!(
             resp.get("holdoff_us").and_then(Json::as_f64),
             Some(0.0)
         );
+        drop(client);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn event_loop_matches_threaded_bitwise_at_both_precisions() {
+        // the tentpole contract: the epoll transport must be invisible —
+        // mixed predict/stream traffic answers bit-for-bit what the
+        // thread-per-connection transport answers, at f64 and f32
+        for make in [make_model as fn() -> Model, make_model_f32] {
+            let model = Arc::new(make());
+            let task = MsoTask::new(2);
+            let mut per_transport: Vec<Vec<Vec<f64>>> = Vec::new();
+            for threaded in [false, true] {
+                let (addr, handle) =
+                    spawn_server(Arc::clone(&model), 1, Some(2), threaded);
+                let mut client = Client::connect(&addr).unwrap();
+                let mut outs = Vec::new();
+                for i in 0..3 {
+                    let input = &task.input[i * 11..i * 11 + 30 + i];
+                    outs.push(client.predict(input).unwrap());
+                }
+                let stream_in = &task.input[..40];
+                let mut streamed = client.stream(&stream_in[..17]).unwrap();
+                streamed.extend(client.stream(&stream_in[17..]).unwrap());
+                outs.push(streamed);
+                drop(client);
+                handle.join().unwrap();
+                per_transport.push(outs);
+            }
+            let (ev, th) = (&per_transport[0], &per_transport[1]);
+            assert_eq!(ev.len(), th.len());
+            for (a_vec, b_vec) in ev.iter().zip(th) {
+                assert_eq!(a_vec.len(), b_vec.len());
+                for (a, b) in a_vec.iter().zip(b_vec) {
+                    assert!(
+                        (a - b).abs() == 0.0,
+                        "event loop diverged from threaded path: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_output_model_serves_all_columns_and_rejects_stream() {
+        // wire end-to-end of the D_out fix: a 2-output model's predict
+        // returns T×2 values (step-major), and a stream op is refused
+        // with an error response instead of panicking the sweeper
+        let model = Arc::new(make_model_d2());
+        let (addr, handle) = spawn_server(Arc::clone(&model), 1, Some(1), false);
+        let mut client = Client::connect(&addr).unwrap();
+        let task = MsoTask::new(1);
+        let input = &task.input[..25];
+        let got = client.predict(input).unwrap();
+        assert_eq!(got.len(), input.len() * 2, "truncated multi-output reply");
+        let want = model.predict(input);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() == 0.0, "{a} vs {b}");
+        }
+        // stream on a D_out=2 model: clean error, connection stays alive
+        let resp = client
+            .request(&Json::obj(vec![
+                ("op", Json::Str("stream".into())),
+                ("input", Json::Arr(vec![Json::Num(0.1)])),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let again = client.predict(input).unwrap();
+        assert_eq!(again, got);
         drop(client);
         handle.join().unwrap();
     }

@@ -4,11 +4,13 @@
 # Runs the release build, the full test suite, the plain-kernel A/B of
 # the batched lane engine (the scalar twin of the chunked/branchless
 # kernels must stay bit-identical), and the quick reservoir bench (which
-# includes the f32/f64 precision-ladder rows and the sharded serving
-# rows), leaving a machine-readable perf snapshot in
-# BENCH_reservoir_run.json (the perf-trajectory artifact). Fails if the
-# precision or sharding rows are missing, non-finite, or report zero
-# throughput.
+# includes the f32/f64 precision-ladder rows, the sharded serving rows,
+# and the epoll event-loop wire rows), persisting the machine-readable
+# perf snapshot as BENCH_pr4.json at the repo root — the committed
+# perf-trajectory artifact (BENCH_reservoir_run.json is kept as an
+# uncommitted working copy for tooling that greps the legacy name).
+# Fails if the precision, sharding, or event-loop rows are missing,
+# non-finite, or report zero throughput.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,15 +23,16 @@ cargo test -q
 echo "== cargo test -q --features plain-kernel --lib reservoir::batch (A/B twin) =="
 cargo test -q --features plain-kernel --lib reservoir::batch
 
-echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json =="
-cargo bench --bench reservoir_run -- --quick --json BENCH_reservoir_run.json
+echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_pr4.json =="
+cargo bench --bench reservoir_run -- --quick --json BENCH_pr4.json
+cp BENCH_pr4.json BENCH_reservoir_run.json
 
-echo "== bench sanity: precision rows present, finite, non-zero throughput =="
+echo "== bench sanity: precision/sharded/evloop rows present, finite, non-zero =="
 if command -v python3 >/dev/null 2>&1; then
   python3 - <<'EOF'
 import json, math, sys
 
-doc = json.load(open("BENCH_reservoir_run.json"))
+doc = json.load(open("BENCH_pr4.json"))
 rows = {r.get("name"): r for r in doc.get("results", [])}
 required = [
     "f32_batch8_N1000", "f64_batch8_N1000",
@@ -37,6 +40,9 @@ required = [
     "derived_precision_batch8_N1000", "derived_precision_batch64_N1000",
     "sharded1_batch64_N1000", "sharded2_batch64_N1000",
     "sharded4_batch64_N1000", "derived_sharded_batch64_N1000",
+    "evloop_idle128_predict16_N1000",
+    "evloop_mixed_stream16_predict16_N1000",
+    "derived_evloop_N1000",
 ]
 for name in required:
     if name not in rows:
@@ -59,6 +65,10 @@ d = rows["derived_sharded_batch64_N1000"]
 print(f"  sharded: 1x {d['sharded1_steps_per_sec']:.3e} steps/s, "
       f"2 shards {d['speedup_2_shards']:.2f}x, "
       f"4 shards {d['speedup_4_shards']:.2f}x")
+d = rows["derived_evloop_N1000"]
+print(f"  evloop: idle-loaded predicts {d['idle_predict_steps_per_sec']:.3e} steps/s, "
+      f"mixed {d['mixed_steps_per_sec']:.3e} steps/s "
+      f"({int(d['idle_conns'])} idle conns)")
 print("bench rows OK")
 EOF
 else
@@ -66,17 +76,19 @@ else
   for row in f32_batch8_N1000 f64_batch8_N1000 f32_batch64_N1000 \
              f64_batch64_N1000 sharded1_batch64_N1000 \
              sharded2_batch64_N1000 sharded4_batch64_N1000 \
-             derived_sharded_batch64_N1000; do
-    grep -q "\"$row\"" BENCH_reservoir_run.json \
+             derived_sharded_batch64_N1000 \
+             evloop_idle128_predict16_N1000 \
+             evloop_mixed_stream16_predict16_N1000 derived_evloop_N1000; do
+    grep -q "\"$row\"" BENCH_pr4.json \
       || { echo "FAIL: missing bench row $row"; exit 1; }
   done
-  if grep -qiE '(nan|inf)' BENCH_reservoir_run.json; then
-    echo "FAIL: non-finite value in BENCH_reservoir_run.json"; exit 1
+  if grep -qiE '(nan|inf)' BENCH_pr4.json; then
+    echo "FAIL: non-finite value in BENCH_pr4.json"; exit 1
   fi
   # the JSON writer prints integral values without decimals, so a zero
   # throughput is exactly `0` before the comma/EOL (0.97 must NOT match)
-  if grep -qE 'steps_per_sec": *(0(,|$)|-)' BENCH_reservoir_run.json; then
-    echo "FAIL: zero throughput row in BENCH_reservoir_run.json"; exit 1
+  if grep -qE 'steps_per_sec": *(0(,|$)|-)' BENCH_pr4.json; then
+    echo "FAIL: zero throughput row in BENCH_pr4.json"; exit 1
   fi
   echo "bench rows OK (grep fallback)"
 fi
