@@ -6,17 +6,24 @@
 //! f32 vs f64 SoA lane engines at the serving point (N=1000, B∈{8,64}),
 //! the shard-per-core serving rows: aggregate predict throughput
 //! through a ShardedFront at 1/2/4 shards (B=64 concurrent requests),
-//! and the event-loop wire rows: pipelined predict and mixed
+//! the event-loop wire rows: pipelined predict and mixed
 //! stream/predict throughput over TCP through the epoll readiness loop
-//! while 128 idle streaming connections sit parked on it (thread-free).
+//! while 128 idle streaming connections sit parked on it (thread-free),
+//! and the training-stack rows: fused streaming Gram accumulation
+//! (scan → GramAcc) at f64 and f32, plus online `train` ops over the
+//! wire onto a hub lane (rows/sec, with a commit→stream close-out).
 //!
 //! Run: `cargo bench --bench reservoir_run [-- --quick] [--json <path>]`
 //! `--json` writes machine-readable results (bench rows + derived
 //! throughputs), e.g. `--json BENCH_reservoir_run.json`.
 
 use linear_reservoir::bench::{bench, BenchConfig, BenchResult};
+use linear_reservoir::coordinator::WorkerPool;
 use linear_reservoir::linalg::Mat;
 use linear_reservoir::readout::Readout;
+use linear_reservoir::reservoir::parallel::{
+    run_parallel_batch_train_prec, TrainSpec,
+};
 use linear_reservoir::reservoir::{
     BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn,
 };
@@ -380,6 +387,135 @@ fn main() {
         drop(actives);
         drop(idles);
         server.join().unwrap();
+    }
+
+    // --- streaming fused training: rows/sec through GramAcc -------------
+    // Training cost is Gram-dominated (O(F²) per row vs the O(N) step),
+    // so the rows here time the full fused pipeline: batched chunk scan +
+    // streamed rank-2 accumulation, at both precisions. f32 halves the
+    // accumulator traffic and doubles SIMD width — the ratio is the
+    // training-side precision ladder. Rows run in quick mode too: they
+    // are the acceptance artifact for the training stack.
+    {
+        let n = 1000;
+        let t_train = 256usize;
+        println!("fused streaming training, N = {n}, rows = {t_train}");
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(13, 114);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let u_t = Mat::randn(t_train, 1, &mut rng);
+        let y_t = Mat::randn(t_train, 1, &mut rng);
+        let pool = WorkerPool::new(
+            linear_reservoir::coordinator::pool::suggested_threads(),
+        );
+        let tspec = TrainSpec {
+            train: 0..t_train,
+            eval: vec![],
+        };
+        let r64 = bench(&format!("train_fused_f64_N{n}"), cfg, || {
+            run_parallel_batch_train_prec::<f64>(
+                &diag,
+                std::slice::from_ref(&u_t),
+                std::slice::from_ref(&y_t),
+                std::slice::from_ref(&tspec),
+                &pool,
+                64,
+            )
+        });
+        let r32 = bench(&format!("train_fused_f32_N{n}"), cfg, || {
+            run_parallel_batch_train_prec::<f32>(
+                &diag,
+                std::slice::from_ref(&u_t),
+                std::slice::from_ref(&y_t),
+                std::slice::from_ref(&tspec),
+                &pool,
+                64,
+            )
+        });
+        push(&mut rows, &r64);
+        push(&mut rows, &r32);
+        let f64_rps = t_train as f64 / r64.per_iter.median;
+        let f32_rps = t_train as f64 / r32.per_iter.median;
+
+        // --- online training over the wire: train ops on a hub lane ----
+        let train_ops = 4usize;
+        let chunk_len = 64usize;
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let model = Arc::new(Model::new(diag, readout));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server_model = Arc::clone(&model);
+        let server = std::thread::spawn(move || {
+            serve_on(listener, server_model, Some(1), 0, Some(1), false)
+                .unwrap();
+        });
+        let mut client = Client::connect(&addr).unwrap();
+        let train_reqs: Vec<Json> = (0..train_ops)
+            .map(|_| {
+                let input = Mat::randn(chunk_len, 1, &mut rng);
+                let target = Mat::randn(chunk_len, 1, &mut rng);
+                Json::obj(vec![
+                    ("op", Json::Str("train".into())),
+                    (
+                        "input",
+                        Json::Arr(
+                            input.data().iter().map(|&x| Json::Num(x)).collect(),
+                        ),
+                    ),
+                    (
+                        "target",
+                        Json::Arr(
+                            target.data().iter().map(|&x| Json::Num(x)).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let r_wire = bench(&format!("train_online_wire_N{n}"), cfg, || {
+            // pipelined: send every train op, then drain the replies —
+            // the lane accumulates (features, target) rows server-side
+            for req in &train_reqs {
+                client.send(req).unwrap();
+            }
+            for _ in 0..train_ops {
+                std::hint::black_box(client.recv().unwrap());
+            }
+        });
+        push(&mut rows, &r_wire);
+        let wire_rps =
+            (train_ops * chunk_len) as f64 / r_wire.per_iter.median;
+        // close the loop once (untimed): the accumulated lane commits and
+        // the hot-swapped readout serves a stream
+        client.commit(1e-2).expect("commit after online training");
+        let probe = [0.1f64, -0.2, 0.3];
+        let swapped = client.stream(&probe).expect("post-commit stream");
+        assert_eq!(swapped.len(), probe.len());
+        drop(client);
+        server.join().unwrap();
+
+        println!(
+            "  fused train: f64 {:.3e} rows/s, f32 {:.3e} rows/s → {:.2}x | online wire {:.3e} rows/s\n",
+            f64_rps,
+            f32_rps,
+            r64.per_iter.median / r32.per_iter.median,
+            wire_rps
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("derived_train_N{n}"))),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("train_rows", Json::Num(t_train as f64)),
+            ("f64_rows_per_sec", Json::Num(f64_rps)),
+            ("f32_rows_per_sec", Json::Num(f32_rps)),
+            (
+                "f32_over_f64",
+                Json::Num(r64.per_iter.median / r32.per_iter.median),
+            ),
+            ("online_wire_rows_per_sec", Json::Num(wire_rps)),
+        ]));
     }
 
     if let Some(path) = json_path {

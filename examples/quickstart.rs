@@ -97,10 +97,34 @@ fn main() -> anyhow::Result<()> {
     //    the single-front behavior, bit-identical responses either way).
     //    On Linux, connections are served by an epoll readiness loop —
     //    S sweepers + 1 poll thread regardless of connection count, so
-    //    idle streaming clients cost a file descriptor, not a thread.
-    //    `repro serve --threaded` (or `serve_on(…, threaded = true)`
-    //    with an already-bound listener — bind port 0 for a race-free
-    //    ephemeral port) forces the legacy thread-per-connection
-    //    transport for A/B: responses are bit-identical between the two.
+    //    idle streaming clients cost a file descriptor, not a thread
+    //    (and `--idle-timeout-s N` reaps connections silent for N
+    //    seconds). `repro serve --threaded` (or `serve_on(…, threaded =
+    //    true)` with an already-bound listener — bind port 0 for a
+    //    race-free ephemeral port) forces the legacy
+    //    thread-per-connection transport for A/B: responses are
+    //    bit-identical between the two.
+
+    // 10. ONLINE training over TCP: the O(N) step makes training as
+    //     cheap as serving, so the server trains where it serves. On a
+    //     live connection, `train` advances your streaming state AND
+    //     accumulates (features, target) rows into a per-lane ridge
+    //     accumulator; `commit` solves it and hot-swaps YOUR
+    //     connection's readout (predict and other connections keep the
+    //     deployed model); further `train`+`commit` rounds refine it
+    //     online, and `reset` (or disconnecting) drops the training.
+    //     Wire script against a running `repro serve`:
+    //
+    //       {"op":"train","input":[u0,u1,…],"target":[y0,y1,…]}
+    //         ← {"ok":true,"rows":N}       (lane's total training rows)
+    //       {"op":"commit","alpha":1e-6}   ← {"ok":true}
+    //       {"op":"stream","input":[u…]}   ← predictions from YOUR
+    //                                        freshly committed readout
+    //
+    //     In-process the same cycle is `Client::train` / `commit` /
+    //     `stream` (see server::wire), and the batch-scale twin is
+    //     `reservoir::parallel::run_parallel_batch_train` — the batched
+    //     scan streaming rows into `readout::GramAcc` without ever
+    //     materializing the [T×N] training block.
     Ok(())
 }

@@ -8,13 +8,33 @@
 //! sweep reuses the Gram statistics — `|scales|·|alphas|` ridge solves per
 //! trajectory instead of `|scales|·|alphas|` full re-runs (×36 with the
 //! paper grid).
+//!
+//! Diagonal methods (EET + every DPG flavor) run their per-grid-point
+//! trajectory through the **fused training scan**
+//! ([`run_parallel_batch_train`]): the batched time-parallel chunk scan
+//! feeds the train span's feature rows straight into streaming Gram
+//! accumulators shared across the worker pool, so the grid never
+//! materializes a `[T × F]` training block — only the validation/test
+//! spans become matrices (they are what `predict_scaled` consumes).
+//! Fusing is numerically free: it is bit-identical to materializing the
+//! same chunked scan and running `GramStats::new` (tested below). The
+//! trajectories themselves now come from the chunked scan instead of
+//! the sequential interleaved engine, which moves per-point RMSEs at
+//! the scan-association level (≲1e-9 — `run_parallel`'s documented
+//! tolerance vs the sequential run); results stay deterministic per
+//! seed. The `Normal` baseline keeps the materialize-then-
+//! `GramStats::new` path (its `O(N²)`-per-step engine has no diagonal
+//! scan).
 
 use anyhow::Result;
 
 use crate::linalg::Mat;
 use crate::metrics::rmse;
 use crate::readout::{predict_scaled, GramStats};
+use crate::reservoir::parallel::{run_parallel_batch_train, TrainSpec};
 use crate::reservoir::{DiagonalEsn, EsnConfig, StandardEsn};
+
+use super::pool::{suggested_threads, WorkerPool};
 use crate::rng::Pcg64;
 use crate::spectral::eigvecs::random_eigvecs;
 use crate::spectral::golden::{golden_spectrum, GoldenParams};
@@ -212,25 +232,14 @@ impl Provider {
         }
     }
 
-    /// Feature trajectory at unit input scaling for grid point (ρ, lr).
-    /// Leak enters the spectrum/matrix here; the `lr` factor on `W_in` is
-    /// deferred to the Gram scaling (`s = input_scaling·lr`).
-    fn features(&self, rho: f64, lr: f64, u: &Mat) -> Mat {
+    /// The diagonal engine at unit input scaling for grid point (ρ, lr),
+    /// when this provider is diagonal. Leak enters the spectrum here; the
+    /// `lr` factor on `W_in` is deferred to the Gram scaling
+    /// (`s = input_scaling·lr`). The fused training scan consumes this
+    /// directly.
+    fn diag_esn(&self, rho: f64, lr: f64) -> Option<DiagonalEsn> {
         match self {
-            Provider::Normal { w0, w_in } => {
-                let n = w0.rows();
-                let mut w = w0.clone();
-                w.scale(rho * lr);
-                if lr < 1.0 {
-                    w.add_diag(1.0 - lr);
-                }
-                let esn = StandardEsn::from_parts(
-                    w,
-                    w_in.clone(),
-                    EsnConfig::default().with_n(n),
-                );
-                esn.run(u)
-            }
+            Provider::Normal { .. } => None,
             Provider::Diag {
                 spec0,
                 win_re,
@@ -253,16 +262,50 @@ impl Provider {
                     None => spec0.scaled(rho),
                 }
                 .apply_leak(lr);
-                // interleaved Appendix-A engine: ~1.2× over split planes
-                // (perf pass, EXPERIMENTS.md §Perf)
-                let esn = crate::reservoir::QBasisEsn::from_slot_form(
-                    &spec, win_re, win_im,
+                Some(DiagonalEsn::from_parts(
+                    spec,
+                    win_re.clone(),
+                    win_im.clone(),
+                    None,
+                ))
+            }
+        }
+    }
+
+    /// Materialized feature trajectory at unit input scaling for grid
+    /// point (ρ, lr) — the `Normal` baseline's only path (explicit `W`,
+    /// no diagonal scan exists for it). Diagonal providers never come
+    /// through here: the grid routes every one of them through the fused
+    /// training scan ([`Provider::diag_esn`] is `Some` for all of them).
+    fn features(&self, rho: f64, lr: f64, u: &Mat) -> Mat {
+        match self {
+            Provider::Normal { w0, w_in } => {
+                let n = w0.rows();
+                let mut w = w0.clone();
+                w.scale(rho * lr);
+                if lr < 1.0 {
+                    w.add_diag(1.0 - lr);
+                }
+                let esn = StandardEsn::from_parts(
+                    w,
+                    w_in.clone(),
+                    EsnConfig::default().with_n(n),
                 );
                 esn.run(u)
+            }
+            Provider::Diag { .. } => {
+                unreachable!(
+                    "diagonal providers run through the fused training scan"
+                )
             }
         }
     }
 }
+
+/// Chunk length of the fused training scan inside the grid: a handful of
+/// chunks per MSO-length sequence — enough to keep a multi-core pool
+/// busy without drowning phase 2 in summaries.
+const SCAN_CHUNK: usize = 256;
 
 /// Grid-search runner for the MSO family.
 pub struct GridSearch {
@@ -293,15 +336,53 @@ impl GridSearch {
         let y_test = task.target_mat(splits.test.clone());
 
         let provider = Provider::build(method, self.n, self.connectivity, seed)?;
+        // one pool shared by every grid point's fused scan — spawned
+        // lazily on the first diagonal grid point, so the Normal
+        // baseline (which never scans) spawns no threads at all. Scoped
+        // per run_mso rather than hoisted to GridSearch: the struct's
+        // public-field literal construction is API, and one pool spawn
+        // per multi-second grid run is noise next to the scan itself.
+        let mut pool: Option<WorkerPool> = None;
 
         let mut best: Option<TrialResult> = None;
         for &rho in &self.spec.spectral_radii {
             for &lr in &self.spec.leak_rates {
-                let states = provider.features(rho, lr, &u);
-                let x_train = slice_rows(&states, splits.train.clone());
-                let x_valid = slice_rows(&states, splits.valid.clone());
-                let x_test = slice_rows(&states, splits.test.clone());
-                let stats = GramStats::new(&x_train, &y_train);
+                let (stats, x_valid, x_test) = match provider.diag_esn(rho, lr) {
+                    Some(esn) => {
+                        // fused path: the batched scan streams the train
+                        // span's rows into shared Gram accumulators; only
+                        // the valid/test spans materialize
+                        let pool = pool
+                            .get_or_insert_with(|| WorkerPool::new(suggested_threads()));
+                        let tspec = TrainSpec {
+                            train: splits.train.clone(),
+                            eval: vec![splits.valid.clone(), splits.test.clone()],
+                        };
+                        let (acc, mut evals) = run_parallel_batch_train(
+                            &esn,
+                            std::slice::from_ref(&u),
+                            std::slice::from_ref(&y_train),
+                            std::slice::from_ref(&tspec),
+                            pool,
+                            SCAN_CHUNK,
+                        );
+                        let mut spans = evals.pop().expect("one sequence");
+                        let x_test = spans.pop().expect("test span");
+                        let x_valid = spans.pop().expect("valid span");
+                        (acc.finish(), x_valid, x_test)
+                    }
+                    None => {
+                        let states = provider.features(rho, lr, &u);
+                        (
+                            GramStats::new(
+                                &slice_rows(&states, splits.train.clone()),
+                                &y_train,
+                            ),
+                            slice_rows(&states, splits.valid.clone()),
+                            slice_rows(&states, splits.test.clone()),
+                        )
+                    }
+                };
                 for &scale_in in &self.spec.input_scalings {
                     let s = scale_in * lr;
                     for &alpha in &self.spec.alphas {
@@ -395,6 +476,47 @@ mod tests {
         let b = gs.run_mso(2, MethodKind::DpgUniform, 7).unwrap();
         assert_eq!(a.test_rmse, b.test_rmse);
         assert_eq!(a.alpha, b.alpha);
+    }
+
+    #[test]
+    fn fused_grid_training_bit_identical_to_materialized_path() {
+        // the grid's fused-scan consumption must be invisible: for a
+        // diagonal method at one grid point, the streamed Gram fit and
+        // the eval spans equal the materialize-then-GramStats::new
+        // reference bit for bit
+        let provider = Provider::build(MethodKind::DpgUniform, 24, 1.0, 3).unwrap();
+        let task = MsoTask::new(1);
+        let splits = MsoTask::splits();
+        let u = task.input_mat();
+        let y_train = task.target_mat(splits.train.clone());
+        let pool = WorkerPool::new(2);
+        let esn = provider.diag_esn(0.9, 0.5).expect("diag provider");
+        let tspec = TrainSpec {
+            train: splits.train.clone(),
+            eval: vec![splits.valid.clone()],
+        };
+        let (acc, mut evals) = run_parallel_batch_train(
+            &esn,
+            std::slice::from_ref(&u),
+            std::slice::from_ref(&y_train),
+            std::slice::from_ref(&tspec),
+            &pool,
+            SCAN_CHUNK,
+        );
+        let states =
+            crate::reservoir::parallel::run_parallel(&esn, &u, &pool, SCAN_CHUNK);
+        let stats =
+            GramStats::new(&slice_rows(&states, splits.train.clone()), &y_train);
+        let a = acc.finish().solve_scaled(1e-6, 0.5).unwrap();
+        let b = stats.solve_scaled(1e-6, 0.5).unwrap();
+        assert_eq!(a.w.data(), b.w.data(), "fused grid fit diverged");
+        assert_eq!(a.b, b.b);
+        let x_valid = evals.pop().unwrap().pop().unwrap();
+        assert_eq!(
+            x_valid.data(),
+            slice_rows(&states, splits.valid.clone()).data(),
+            "fused eval span diverged"
+        );
     }
 
     #[test]

@@ -1,13 +1,114 @@
 //! Cholesky factorization for symmetric positive-definite systems — the
 //! ridge-regression normal equations `(XᵀX + αR)·W = XᵀY` (Eq. 9 / Eq. 14).
+//!
+//! The factorization is **precision-generic** ([`CholeskyPrec<S>`] over
+//! the sealed [`Scalar`] trait): the f32 training stack solves its normal
+//! equations at f32 end-to-end, while the public f64 [`Cholesky`] wrapper
+//! keeps the historical `Mat`-based API and — because the generic kernel
+//! mirrors the original expression-for-expression, including the 4-way
+//! unrolled dot — its exact bit behavior.
 
 use anyhow::{bail, Result};
 
+use crate::num::Scalar;
+
+use super::dense::dot_prec;
 use super::Mat;
 
-/// Lower-triangular Cholesky factor `A = L·Lᵀ`.
+/// Lower-triangular Cholesky factor `A = L·Lᵀ` at precision `S`, over a
+/// row-major `[n × n]` slice (no `Mat` dependency — the f32 training
+/// path assembles its systems as flat `Vec<S>`).
+pub struct CholeskyPrec<S: Scalar> {
+    l: Vec<S>,
+    n: usize,
+}
+
+impl<S: Scalar> CholeskyPrec<S> {
+    /// Factor an SPD matrix given as a row-major `[n × n]` slice. Fails
+    /// if a non-positive pivot appears (matrix not positive definite —
+    /// e.g. α=0 with rank-deficient features).
+    pub fn factor_slice(a: &[S], n: usize) -> Result<Self> {
+        assert_eq!(a.len(), n * n);
+        let mut l = vec![S::ZERO; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                // rows i and j of L are contiguous prefixes — use the
+                // unrolled dot kernel (perf pass: ~1.7× on the
+                // grid-search solve path, see EXPERIMENTS.md §Perf)
+                let s = {
+                    let (li, lj) = (&l[i * n..i * n + j], &l[j * n..j * n + j]);
+                    a[i * n + j] - dot_prec(li, lj)
+                };
+                if i == j {
+                    if s <= S::ZERO {
+                        bail!(
+                            "Cholesky: non-positive pivot {:.3e} at {i} — \
+                             matrix not positive definite",
+                            s.to_f64()
+                        );
+                    }
+                    l[i * n + j] = s.sqrt();
+                } else {
+                    l[i * n + j] = s / l[j * n + j];
+                }
+            }
+        }
+        Ok(Self { l, n })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A·x = b` at `S`.
+    pub fn solve_vec(&self, b: &[S]) -> Vec<S> {
+        let n = self.n;
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        // L y = b
+        for i in 0..n {
+            let mut s = y[i];
+            for k in 0..i {
+                s = s - self.l[i * n + k] * y[k];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        // Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s = s - self.l[k * n + i] * y[k];
+            }
+            y[i] = s / self.l[i * n + i];
+        }
+        y
+    }
+
+    /// Solve `A·X = B` for a row-major `[n × cols]` right-hand side,
+    /// column by column (the same order the f64 `solve_mat` uses).
+    pub fn solve_mat_slice(&self, b: &[S], cols: usize) -> Vec<S> {
+        let n = self.n;
+        assert_eq!(b.len(), n * cols);
+        let mut out = vec![S::ZERO; n * cols];
+        let mut col = vec![S::ZERO; n];
+        for j in 0..cols {
+            for i in 0..n {
+                col[i] = b[i * cols + j];
+            }
+            let x = self.solve_vec(&col);
+            for i in 0..n {
+                out[i * cols + j] = x[i];
+            }
+        }
+        out
+    }
+}
+
+/// Lower-triangular Cholesky factor `A = L·Lᵀ` — the f64 `Mat` API
+/// (a thin wrapper over [`CholeskyPrec<f64>`], bit-identical to the
+/// historical implementation).
 pub struct Cholesky {
-    l: Mat,
+    inner: CholeskyPrec<f64>,
 }
 
 impl Cholesky {
@@ -15,77 +116,22 @@ impl Cholesky {
     /// not positive definite — e.g. α=0 with rank-deficient features).
     pub fn factor(a: &Mat) -> Result<Self> {
         assert_eq!(a.rows(), a.cols());
-        let n = a.rows();
-        let mut l = Mat::zeros(n, n);
-        for i in 0..n {
-            for j in 0..=i {
-                // rows i and j of L are contiguous prefixes — use the
-                // unrolled dot kernel (perf pass: ~1.7× on the grid-search
-                // solve path, see EXPERIMENTS.md §Perf)
-                let (li, lj) = if i == j {
-                    (l.row(i), l.row(i))
-                } else {
-                    // split_at guarantees disjoint borrows; j < i
-                    let (top, bottom) = l.data().split_at(i * n);
-                    (&bottom[..n], &top[j * n..j * n + n])
-                };
-                let s = a[(i, j)] - super::dense::dot(&li[..j], &lj[..j]);
-                if i == j {
-                    if s <= 0.0 {
-                        bail!(
-                            "Cholesky: non-positive pivot {s:.3e} at {i} — \
-                             matrix not positive definite"
-                        );
-                    }
-                    l[(i, j)] = s.sqrt();
-                } else {
-                    l[(i, j)] = s / l[(j, j)];
-                }
-            }
-        }
-        Ok(Self { l })
+        Ok(Self {
+            inner: CholeskyPrec::factor_slice(a.data(), a.rows())?,
+        })
     }
 
     /// Solve `A·x = b`.
     pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
-        let n = self.l.rows();
-        assert_eq!(b.len(), n);
-        let mut y = b.to_vec();
-        // L y = b
-        for i in 0..n {
-            let mut s = y[i];
-            for k in 0..i {
-                s -= self.l[(i, k)] * y[k];
-            }
-            y[i] = s / self.l[(i, i)];
-        }
-        // Lᵀ x = y
-        for i in (0..n).rev() {
-            let mut s = y[i];
-            for k in i + 1..n {
-                s -= self.l[(k, i)] * y[k];
-            }
-            y[i] = s / self.l[(i, i)];
-        }
-        y
+        self.inner.solve_vec(b)
     }
 
     /// Solve `A·X = B`.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
-        let n = self.l.rows();
+        let n = self.inner.n();
         assert_eq!(b.rows(), n);
-        let mut out = Mat::zeros(n, b.cols());
-        let mut col = vec![0.0; n];
-        for j in 0..b.cols() {
-            for i in 0..n {
-                col[i] = b[(i, j)];
-            }
-            let x = self.solve_vec(&col);
-            for i in 0..n {
-                out[(i, j)] = x[i];
-            }
-        }
-        out
+        let flat = self.inner.solve_mat_slice(b.data(), b.cols());
+        Mat::from_rows(n, b.cols(), &flat)
     }
 }
 
@@ -106,7 +152,8 @@ mod tests {
     fn factor_roundtrip() {
         let a = random_spd(9, 1);
         let ch = Cholesky::factor(&a).unwrap();
-        let rec = ch.l.matmul(&ch.l.transpose());
+        let l = Mat::from_rows(9, 9, &ch.inner.l);
+        let rec = l.matmul(&l.transpose());
         assert!(rec.max_abs_diff(&a) < 1e-10);
     }
 
@@ -128,5 +175,47 @@ mod tests {
     fn rejects_indefinite() {
         let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
         assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn dot_prec_f64_bit_identical_to_dense_dot() {
+        // the generic solve path's bit-behavior claim rests on this
+        let mut rng = Pcg64::seeded(4);
+        use crate::rng::Distributions;
+        for n in [0usize, 1, 3, 4, 7, 16, 33] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            assert_eq!(dot_prec(&a, &b), super::super::dense::dot(&a, &b));
+        }
+    }
+
+    #[test]
+    fn f32_factor_solves_within_f32_tolerance() {
+        let a = random_spd(10, 5);
+        let mut rng = Pcg64::seeded(6);
+        use crate::rng::Distributions;
+        let b = rng.normal_vec(10);
+        let a32: Vec<f32> = a.data().iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&x| x as f32).collect();
+        let x32 = CholeskyPrec::<f32>::factor_slice(&a32, 10)
+            .unwrap()
+            .solve_vec(&b32);
+        let x64 = Cholesky::factor(&a).unwrap().solve_vec(&b);
+        let scale = x64.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        for (lo, hi) in x32.iter().zip(&x64) {
+            // modest-condition system: f32 solve tracks f64 loosely
+            assert!(
+                ((*lo as f64) - hi).abs() < 1e-2 * scale,
+                "{lo} vs {hi}"
+            );
+        }
+    }
+
+    #[test]
+    fn f64_slice_factor_bit_identical_to_mat_wrapper() {
+        let a = random_spd(11, 7);
+        let via_mat = Cholesky::factor(&a).unwrap();
+        let via_slice = CholeskyPrec::<f64>::factor_slice(a.data(), 11).unwrap();
+        assert_eq!(via_mat.inner.l, via_slice.l);
     }
 }

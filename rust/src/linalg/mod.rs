@@ -18,7 +18,7 @@ mod hessenberg;
 mod lu;
 
 pub use cdense::CMat;
-pub use cholesky::Cholesky;
+pub use cholesky::{Cholesky, CholeskyPrec};
 pub use dense::Mat;
 pub use eig::{eig, eigenvalues, Eig};
 pub use hessenberg::hessenberg;

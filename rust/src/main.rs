@@ -13,6 +13,8 @@
 //! repro e2e    [--k 5] [--n 100]
 //! repro serve  [--addr 127.0.0.1:7878] [--k 5] [--n 100] [--f32]
 //!              [--holdoff-us 0] [--shards 0]   # 0 = one per core
+//!              [--idle-timeout-s 0]  # reap silent connections
+//!                                    # (0 = never; event loop only)
 //!              [--threaded]   # thread-per-connection A/B transport
 //!                             # (default: epoll event loop on Linux)
 //! repro all    [--quick]       # every driver with small budgets
@@ -216,7 +218,7 @@ fn dispatch(args: &Args) -> Result<()> {
             use linear_reservoir::readout::{fit, Regularizer};
             use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
             use linear_reservoir::rng::Pcg64;
-            use linear_reservoir::server::{serve_on, Model, Precision};
+            use linear_reservoir::server::{serve_on_opts, Model, Precision, ServeOpts};
             use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
             use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
             use std::sync::Arc;
@@ -255,28 +257,46 @@ fn dispatch(args: &Args) -> Result<()> {
             // of the default epoll event loop; on non-Linux platforms
             // the threaded path is the only transport either way)
             let threaded = args.flag("threaded");
+            // --idle-timeout-s: reap connections silent this long (0 =
+            // never; only the event-loop transport has the timer wheel)
+            let idle_s = args.get_u64("idle-timeout-s", 0)?;
+            let idle_timeout =
+                (idle_s > 0).then(|| std::time::Duration::from_secs(idle_s));
             let listener = std::net::TcpListener::bind(addr)?;
             let bound = listener.local_addr()?;
+            // the timer wheel lives in the event loop; on the threaded
+            // transport (or non-Linux) a configured timeout is inert —
+            // say so instead of printing it as active
+            let event_loop = !threaded && cfg!(target_os = "linux");
             println!(
-                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, {}) on {bound} …",
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, idle-timeout {}, {}) on {bound} …",
                 precision.name(),
                 match shards {
                     Some(s) => s.to_string(),
                     None => "auto".into(),
                 },
-                if threaded || !cfg!(target_os = "linux") {
-                    "thread-per-connection"
-                } else {
+                match idle_s {
+                    0 => "off".into(),
+                    _ if !event_loop =>
+                        "off (threaded transport has no idle reaper)".into(),
+                    s => format!("{s}s"),
+                },
+                if event_loop {
                     "epoll event loop"
+                } else {
+                    "thread-per-connection"
                 }
             );
-            serve_on(
+            serve_on_opts(
                 listener,
                 Arc::new(Model::with_precision(esn, readout, precision)),
                 None,
-                holdoff_us,
-                shards,
-                threaded,
+                ServeOpts {
+                    holdoff_us,
+                    shards,
+                    threaded,
+                    idle_timeout,
+                },
             )
             .map(|_| ())
         }

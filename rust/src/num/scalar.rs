@@ -23,6 +23,11 @@ mod sealed {
 /// `LANES` is the number of elements per 64-byte cache line — the unit
 /// the chunked kernels block on, and the width lane counts are padded to
 /// so inner loops have exact SIMD-friendly trip counts.
+///
+/// `Div` and [`Scalar::sqrt`] exist for the precision-generic SOLVE path
+/// (`linalg::CholeskyPrec`, `readout::GramAcc::solve_scaled`): the lane
+/// engines themselves never divide, but training end-to-end at `S` needs
+/// the normal-equation factorization to run at `S` too.
 pub trait Scalar:
     sealed::Sealed
     + Copy
@@ -36,6 +41,7 @@ pub trait Scalar:
     + core::ops::Add<Output = Self>
     + core::ops::Sub<Output = Self>
     + core::ops::Mul<Output = Self>
+    + core::ops::Div<Output = Self>
     + core::ops::AddAssign
     + core::ops::MulAssign
 {
@@ -52,6 +58,8 @@ pub trait Scalar:
     fn to_f64(self) -> f64;
     fn abs(self) -> Self;
     fn is_finite(self) -> bool;
+    /// IEEE square root at `S` (Cholesky pivots).
+    fn sqrt(self) -> Self;
 }
 
 impl Scalar for f64 {
@@ -76,6 +84,10 @@ impl Scalar for f64 {
     fn is_finite(self) -> bool {
         f64::is_finite(self)
     }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
 }
 
 impl Scalar for f32 {
@@ -99,6 +111,10 @@ impl Scalar for f32 {
     #[inline(always)]
     fn is_finite(self) -> bool {
         f32::is_finite(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
     }
 }
 

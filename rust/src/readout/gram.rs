@@ -1,0 +1,496 @@
+//! Streaming, precision-generic Gram accumulation — the training twin of
+//! the SoA lane engines.
+//!
+//! [`super::GramStats::new`] is monolithic: it wants the whole `[T × F]`
+//! feature matrix in memory before it can start. [`GramAcc<S>`] computes
+//! the identical statistics from a STREAM of `(feature row, target row)`
+//! pairs — chunks from the time-parallel scan, rows arriving one at a
+//! time over a `train` wire op — without the caller ever assembling the
+//! feature matrix, and at either precision of the sealed
+//! [`Scalar`](crate::num::Scalar) trait (`f64` training is the exact
+//! oracle; `f32` halves the accumulator traffic and doubles SIMD width,
+//! matching the f32 state scan end-to-end).
+//!
+//! ## Exactness contract (f64)
+//!
+//! The Gram triangle uses the same rank-2 (two-rows-per-pass) update as
+//! `GramStats::new`. Row **pairing survives chunk boundaries**: an odd
+//! trailing row of one `push_rows` call is carried and paired with the
+//! first row of the next call, so feeding the same rows through ANY
+//! sequence of `push_row`/`push_rows` calls is **bit-identical** to one
+//! monolithic `GramStats::new` over the concatenated rows (property-
+//! tested here and in `rust/tests/precision.rs`).
+//!
+//! [`GramAcc::merge`] is the deterministic parallel reduction: it
+//! flushes both sides' pending rows first (row pairing never crosses a
+//! merge boundary — each merged accumulator is a self-contained row
+//! stream) and element-wise adds the statistics. Merging the same
+//! per-stream accumulators in the same order always produces the same
+//! bits, whatever chunking built each side — which is what makes the
+//! fused multi-sequence trainer
+//! ([`crate::reservoir::parallel::run_parallel_batch_train`])
+//! bit-reproducible against its materialize-then-`GramStats::new`
+//! reference.
+//!
+//! ## Solving
+//!
+//! [`GramAcc::finish`] widens into a [`GramStats`] (exact at both
+//! precisions — `S → f64` is lossless) for the legacy f64 sub-grid
+//! sweep; [`GramAcc::solve_scaled`] solves the scaled ridge system
+//! natively at `S` ([`CholeskyPrec`] with the same f64-widened
+//! `Cholesky`/LU fallback as `GramStats::solve_scaled`), so f32 training
+//! never round-trips through f64 arithmetic. At `f64`,
+//! `solve_scaled` is bit-identical to `GramStats::solve_scaled` (tested).
+
+use anyhow::Result;
+
+use crate::linalg::{Cholesky, CholeskyPrec, Lu, Mat};
+use crate::num::Scalar;
+
+use super::{GramStats, Readout};
+
+/// Streaming accumulator for the ridge normal-equation statistics
+/// `XᵀX`, `XᵀY`, column/target sums, and the row count, at precision `S`.
+#[derive(Clone, Debug)]
+pub struct GramAcc<S: Scalar> {
+    f: usize,
+    d: usize,
+    /// `[F × F]` Gram; only the upper triangle is accumulated (mirrored
+    /// on `finish`/solve).
+    g: Vec<S>,
+    /// `[F × D]` cross term `XᵀY`.
+    b: Vec<S>,
+    col_sums: Vec<S>,
+    y_sums: Vec<S>,
+    t_len: usize,
+    /// Pending unpaired feature row (the rank-2 update consumes rows two
+    /// at a time; the carry keeps pairing aligned across chunk bounds).
+    carry: Vec<S>,
+    carry_full: bool,
+    /// Narrowing scratch for the second row of a pair.
+    row_scratch: Vec<S>,
+    y_scratch: Vec<S>,
+}
+
+impl<S: Scalar> GramAcc<S> {
+    /// Fresh accumulator for `f` features and `d` targets.
+    pub fn new(f: usize, d: usize) -> Self {
+        Self {
+            f,
+            d,
+            g: vec![S::ZERO; f * f],
+            b: vec![S::ZERO; f * d],
+            col_sums: vec![S::ZERO; f],
+            y_sums: vec![S::ZERO; d],
+            t_len: 0,
+            carry: vec![S::ZERO; f],
+            carry_full: false,
+            row_scratch: vec![S::ZERO; f],
+            y_scratch: vec![S::ZERO; d],
+        }
+    }
+
+    /// Feature dimension `F`.
+    pub fn features(&self) -> usize {
+        self.f
+    }
+
+    /// Target dimension `D`.
+    pub fn targets(&self) -> usize {
+        self.d
+    }
+
+    /// Rows accumulated so far.
+    pub fn rows(&self) -> usize {
+        self.t_len
+    }
+
+    /// Accumulate one `(features, targets)` row. Rows are narrowed to `S`
+    /// per element at the boundary (identity at f64).
+    pub fn push_row(&mut self, x: &[f64], y: &[f64]) {
+        assert_eq!(x.len(), self.f, "feature row length mismatch");
+        assert_eq!(y.len(), self.d, "target row length mismatch");
+        let f = self.f;
+        for (s, &v) in self.y_scratch.iter_mut().zip(y) {
+            *s = S::from_f64(v);
+        }
+        // Gram triangle: rank-2 when a carry row is pending, otherwise
+        // stash this row as the carry. The b / sum updates below always
+        // run per row, in row order — exactly GramStats::new's order.
+        if self.carry_full {
+            for (s, &v) in self.row_scratch.iter_mut().zip(x) {
+                *s = S::from_f64(v);
+            }
+            let (ra, rb) = (&self.carry, &self.row_scratch);
+            for i in 0..f {
+                let (xa, xb) = (ra[i], rb[i]);
+                if xa == S::ZERO && xb == S::ZERO {
+                    continue;
+                }
+                let gi = &mut self.g[i * f..(i + 1) * f];
+                for j in i..f {
+                    gi[j] += xa * ra[j] + xb * rb[j];
+                }
+            }
+            self.carry_full = false;
+            self.tail_row_updates(true);
+        } else {
+            for (s, &v) in self.carry.iter_mut().zip(x) {
+                *s = S::from_f64(v);
+            }
+            self.carry_full = true;
+            self.tail_row_updates(false);
+        }
+        self.t_len += 1;
+    }
+
+    /// Per-row `XᵀY` / column-sum / target-sum updates for the row most
+    /// recently staged into `row_scratch` (`true`) or `carry` (`false`).
+    fn tail_row_updates(&mut self, in_scratch: bool) {
+        let f = self.f;
+        let d = self.d;
+        let row: &[S] = if in_scratch {
+            &self.row_scratch
+        } else {
+            &self.carry
+        };
+        for i in 0..f {
+            let xi = row[i];
+            if xi == S::ZERO {
+                continue;
+            }
+            let bi = &mut self.b[i * d..(i + 1) * d];
+            for (bk, &yk) in bi.iter_mut().zip(&self.y_scratch) {
+                *bk += xi * yk;
+            }
+        }
+        for (cs, &xi) in self.col_sums.iter_mut().zip(row) {
+            *cs += xi;
+        }
+        for (ys, &yk) in self.y_sums.iter_mut().zip(&self.y_scratch) {
+            *ys += yk;
+        }
+    }
+
+    /// Accumulate a `[T × F]` / `[T × D]` chunk row by row. Any chunking
+    /// of the same row stream is bit-identical (the carry keeps the
+    /// rank-2 pairing aligned across calls).
+    pub fn push_rows(&mut self, x: &Mat, y: &Mat) {
+        assert_eq!(x.rows(), y.rows(), "X/Y row mismatch");
+        for t in 0..x.rows() {
+            self.push_row(x.row(t), y.row(t));
+        }
+    }
+
+    /// Apply the pending unpaired row to the Gram triangle (the same
+    /// single-row update `GramStats::new` applies to an odd trailing
+    /// row). Idempotent.
+    fn flush_carry(&mut self) {
+        if !self.carry_full {
+            return;
+        }
+        let f = self.f;
+        for i in 0..f {
+            let xi = self.carry[i];
+            if xi == S::ZERO {
+                continue;
+            }
+            let gi = &mut self.g[i * f..(i + 1) * f];
+            for j in i..f {
+                gi[j] += xi * self.carry[j];
+            }
+        }
+        self.carry_full = false;
+    }
+
+    /// Fold `other` into `self` — the deterministic parallel reduction.
+    /// Both pending rows are flushed first: row pairing never crosses a
+    /// merge boundary, so each merged accumulator is a self-contained row
+    /// stream and the result depends only on the per-stream contents and
+    /// the merge order, never on how each stream was chunked.
+    pub fn merge(&mut self, mut other: Self) {
+        assert_eq!(self.f, other.f, "feature dim mismatch in merge");
+        assert_eq!(self.d, other.d, "target dim mismatch in merge");
+        self.flush_carry();
+        other.flush_carry();
+        for (a, b) in self.g.iter_mut().zip(&other.g) {
+            *a += *b;
+        }
+        for (a, b) in self.b.iter_mut().zip(&other.b) {
+            *a += *b;
+        }
+        for (a, b) in self.col_sums.iter_mut().zip(&other.col_sums) {
+            *a += *b;
+        }
+        for (a, b) in self.y_sums.iter_mut().zip(&other.y_sums) {
+            *a += *b;
+        }
+        self.t_len += other.t_len;
+    }
+
+    /// Upper-triangle Gram with the pending row applied and the lower
+    /// triangle mirrored — the full `[F × F]` matrix at `S`.
+    fn g_full(&self) -> Vec<S> {
+        let f = self.f;
+        let mut g = self.g.clone();
+        if self.carry_full {
+            for i in 0..f {
+                let xi = self.carry[i];
+                if xi == S::ZERO {
+                    continue;
+                }
+                let gi = &mut g[i * f..(i + 1) * f];
+                for j in i..f {
+                    gi[j] += xi * self.carry[j];
+                }
+            }
+        }
+        for i in 0..f {
+            for j in 0..i {
+                g[i * f + j] = g[j * f + i];
+            }
+        }
+        g
+    }
+
+    /// Widen into a [`GramStats`] (exact: `S → f64` is lossless), for the
+    /// legacy f64 `(input-scaling × α)` sub-grid sweep. Non-consuming —
+    /// a serving-path trainer keeps accumulating after a snapshot.
+    pub fn finish(&self) -> GramStats {
+        let f = self.f;
+        let d = self.d;
+        let g_full = self.g_full();
+        let mut g = Mat::zeros(f, f);
+        for (dst, &v) in g.data_mut().iter_mut().zip(&g_full) {
+            *dst = v.to_f64();
+        }
+        let mut b = Mat::zeros(f, d);
+        for (dst, &v) in b.data_mut().iter_mut().zip(&self.b) {
+            *dst = v.to_f64();
+        }
+        GramStats {
+            g,
+            b,
+            col_sums: self.col_sums.iter().map(|v| v.to_f64()).collect(),
+            y_sums: self.y_sums.iter().map(|v| v.to_f64()).collect(),
+            t_len: self.t_len,
+        }
+    }
+
+    /// Solve the ridge system for features scaled by `s`, with bias and
+    /// plain `α·I` regularization, natively at `S` — the precision-true
+    /// twin of [`GramStats::solve_scaled`] (bit-identical to it at f64).
+    /// The returned [`Readout`] is f64 at the boundary (exact widening).
+    ///
+    /// Fallback: if the `S` Cholesky hits a non-positive pivot, the
+    /// system is widened to f64 and retried through Cholesky then LU —
+    /// the same ladder `GramStats::solve_scaled` uses.
+    pub fn solve_scaled(&self, alpha: f64, s: f64) -> Result<Readout> {
+        let f = self.f;
+        let d = self.d;
+        let ext = f + 1;
+        let g_base = self.g_full();
+        let s_s = S::from_f64(s);
+        let alpha_s = S::from_f64(alpha);
+        let s2 = s_s * s_s;
+        let mut g = vec![S::ZERO; ext * ext];
+        for i in 0..f {
+            for j in 0..f {
+                g[i * ext + j] = s2 * g_base[i * f + j];
+            }
+            g[i * ext + f] = s_s * self.col_sums[i];
+            g[f * ext + i] = s_s * self.col_sums[i];
+            g[i * ext + i] += alpha_s;
+        }
+        g[f * ext + f] = S::from_f64(self.t_len as f64 + alpha);
+        let mut rhs = vec![S::ZERO; ext * d];
+        for i in 0..f {
+            for k in 0..d {
+                rhs[i * d + k] = s_s * self.b[i * d + k];
+            }
+        }
+        for k in 0..d {
+            rhs[f * d + k] = self.y_sums[k];
+        }
+
+        let sol: Vec<f64> = match CholeskyPrec::<S>::factor_slice(&g, ext) {
+            Ok(ch) => ch
+                .solve_mat_slice(&rhs, d)
+                .iter()
+                .map(|v| v.to_f64())
+                .collect(),
+            Err(_) => {
+                // widen and retry through the f64 ladder (identity at
+                // S = f64, so this is exactly GramStats::solve_scaled's
+                // Cholesky-then-LU fallback)
+                let g64: Vec<f64> = g.iter().map(|v| v.to_f64()).collect();
+                let rhs64: Vec<f64> = rhs.iter().map(|v| v.to_f64()).collect();
+                let gm = Mat::from_rows(ext, ext, &g64);
+                let rm = Mat::from_rows(ext, d, &rhs64);
+                let out = match Cholesky::factor(&gm) {
+                    Ok(ch) => ch.solve_mat(&rm),
+                    Err(_) => Lu::factor(&gm).solve_mat(&rm)?,
+                };
+                out.data().to_vec()
+            }
+        };
+        let mut w = Mat::zeros(f, d);
+        for i in 0..f {
+            for k in 0..d {
+                w[(i, k)] = sol[i * d + k];
+            }
+        }
+        Ok(Readout {
+            w,
+            b: (0..d).map(|k| sol[f * d + k]).collect(),
+        })
+    }
+}
+
+/// Plain-ridge fit with bias at precision `S` — `fit(x, y, α, bias=true,
+/// Identity)`'s precision-generic twin, built on the streaming
+/// accumulator (one `push_rows`, one native-`S` solve).
+pub fn fit_prec<S: Scalar>(x: &Mat, y: &Mat, alpha: f64) -> Result<Readout> {
+    let mut acc = GramAcc::<S>::new(x.cols(), y.cols());
+    acc.push_rows(x, y);
+    acc.solve_scaled(alpha, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{fit, GramStats, Regularizer};
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn problem(t_len: usize, f: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::seeded(seed);
+        let x = Mat::randn(t_len, f, &mut rng);
+        let w_true = Mat::randn(f, d, &mut rng);
+        let y = x.matmul(&w_true);
+        (x, y)
+    }
+
+    fn slice_rows(m: &Mat, lo: usize, hi: usize) -> Mat {
+        let mut out = Mat::zeros(hi - lo, m.cols());
+        for (r, t) in (lo..hi).enumerate() {
+            out.row_mut(r).copy_from_slice(m.row(t));
+        }
+        out
+    }
+
+    /// Compare every private statistic bit-for-bit (child module of
+    /// `readout`, so `GramStats` fields are visible).
+    fn assert_stats_bit_identical(a: &GramStats, b: &GramStats) {
+        assert_eq!(a.t_len, b.t_len);
+        assert_eq!(a.g.data(), b.g.data(), "Gram matrices differ");
+        assert_eq!(a.b.data(), b.b.data(), "XᵀY differs");
+        assert_eq!(a.col_sums, b.col_sums, "column sums differ");
+        assert_eq!(a.y_sums, b.y_sums, "target sums differ");
+    }
+
+    #[test]
+    fn chunked_pushes_bit_identical_to_monolithic_gram_stats() {
+        // odd total length AND odd chunk boundaries: the carry must keep
+        // the rank-2 pairing aligned across every cut
+        let (x, y) = problem(157, 9, 2, 1);
+        let want = GramStats::new(&x, &y);
+        for cuts in [
+            vec![157],
+            vec![1, 156],
+            vec![3, 5, 149],
+            vec![80, 77],
+            vec![], // fully row-by-row via the remainder loop
+        ] {
+            let mut acc = GramAcc::<f64>::new(9, 2);
+            let mut lo = 0;
+            for &len in &cuts {
+                acc.push_rows(&slice_rows(&x, lo, lo + len), &slice_rows(&y, lo, lo + len));
+                lo += len;
+            }
+            // any remainder row by row (exercises push_row directly)
+            for t in lo..157 {
+                acc.push_row(x.row(t), y.row(t));
+            }
+            assert_stats_bit_identical(&acc.finish(), &want);
+        }
+    }
+
+    #[test]
+    fn merge_is_chunking_invariant_and_deterministic() {
+        // two halves, each built with DIFFERENT chunkings, merged in the
+        // same order → identical bits
+        let (x, y) = problem(121, 7, 1, 2);
+        let split = 59; // odd split: both halves carry odd rows
+        let build = |lo: usize, hi: usize, step: usize| {
+            let mut acc = GramAcc::<f64>::new(7, 1);
+            let mut t = lo;
+            while t < hi {
+                let e = (t + step).min(hi);
+                acc.push_rows(&slice_rows(&x, t, e), &slice_rows(&y, t, e));
+                t = e;
+            }
+            acc
+        };
+        let mut a1 = build(0, split, 13);
+        a1.merge(build(split, 121, 7));
+        let mut a2 = build(0, split, split);
+        a2.merge(build(split, 121, 121 - split));
+        assert_stats_bit_identical(&a1.finish(), &a2.finish());
+        // and the merged row count is the total
+        assert_eq!(a1.rows(), 121);
+    }
+
+    #[test]
+    fn f64_solve_scaled_bit_identical_to_gram_stats_solve() {
+        let (x, y) = problem(140, 8, 2, 3);
+        let stats = GramStats::new(&x, &y);
+        let mut acc = GramAcc::<f64>::new(8, 2);
+        acc.push_rows(&x, &y);
+        for (alpha, s) in [(1e-8, 1.0), (0.5, 0.01), (1e-3, 3.0)] {
+            let a = stats.solve_scaled(alpha, s).unwrap();
+            let b = acc.solve_scaled(alpha, s).unwrap();
+            assert_eq!(a.w.data(), b.w.data(), "alpha={alpha} s={s}");
+            assert_eq!(a.b, b.b, "alpha={alpha} s={s}");
+        }
+    }
+
+    #[test]
+    fn finish_then_gram_stats_solve_matches_direct_fit() {
+        let (x, y) = problem(150, 6, 1, 4);
+        let mut acc = GramAcc::<f64>::new(6, 1);
+        acc.push_rows(&x, &y);
+        let via_acc = acc.finish().solve_scaled(0.01, 1.0).unwrap();
+        let direct = fit(&x, &y, 0.01, true, Regularizer::Identity).unwrap();
+        assert!(via_acc.w.max_abs_diff(&direct.w) < 1e-8);
+        assert!((via_acc.b[0] - direct.b[0]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn fit_prec_f32_close_to_f64_fit_on_benign_problem() {
+        let (x, y) = problem(200, 10, 1, 5);
+        let a = fit_prec::<f64>(&x, &y, 1e-2).unwrap();
+        let b = fit_prec::<f32>(&x, &y, 1e-2).unwrap();
+        let scale = a.w.data().iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        assert!(
+            a.w.max_abs_diff(&b.w) < 1e-2 * scale,
+            "f32 fit drifted: {}",
+            a.w.max_abs_diff(&b.w)
+        );
+        // and the f32 path genuinely ran at f32
+        assert!(a.w.max_abs_diff(&b.w) > 0.0, "f32 fit suspiciously exact");
+    }
+
+    #[test]
+    fn snapshot_keeps_accumulating_after_finish() {
+        // the serving-path contract: commit (a solve) must not stop the
+        // online trainer — finish/solve are non-consuming snapshots
+        let (x, y) = problem(60, 5, 1, 6);
+        let mut acc = GramAcc::<f64>::new(5, 1);
+        acc.push_rows(&slice_rows(&x, 0, 31), &slice_rows(&y, 0, 31));
+        let early = acc.finish();
+        assert_eq!(early.t_len, 31);
+        acc.push_rows(&slice_rows(&x, 31, 60), &slice_rows(&y, 31, 60));
+        let full_stream = acc.finish();
+        assert_stats_bit_identical(&full_stream, &GramStats::new(&x, &y));
+    }
+}

@@ -6,7 +6,10 @@
 //! `R = diag(I_bias, QᵀQ)` (generalized). Cholesky first, LU fallback
 //! (`R` can be near-semidefinite when the eigenbasis degenerates).
 
+pub mod gram;
 pub mod poly;
+
+pub use gram::{fit_prec, GramAcc};
 
 use anyhow::Result;
 
@@ -31,6 +34,20 @@ pub struct Readout {
 }
 
 impl Readout {
+    /// Apply to ONE feature row for output `k`: bias first, then
+    /// ascending feature index — THE shared fused accumulation contract
+    /// (every fused serving path and the server's streaming fallbacks
+    /// accumulate in exactly this order, which is what makes them
+    /// bit-identical to each other; see DESIGN.md §5).
+    #[inline]
+    pub fn apply_row(&self, feat: &[f64], k: usize) -> f64 {
+        let mut y = self.b[k];
+        for (j, &f) in feat.iter().enumerate() {
+            y += f * self.w[(j, k)];
+        }
+        y
+    }
+
     /// Apply to `[T × F]` features → `[T × D_out]` predictions.
     pub fn predict(&self, x: &Mat) -> Mat {
         let mut y = x.matmul(&self.w);
@@ -164,6 +181,12 @@ pub fn fit(
 /// Precomputed Gram statistics for sweep reuse (the paper's §5.1 trick:
 /// states — and therefore `XᵀX`, `XᵀY` — are computed once per reservoir
 /// and re-used across the whole (input-scaling × α) sub-grid).
+///
+/// [`GramStats::new`] is the monolithic materialize-first constructor;
+/// the streaming, precision-generic twin is [`gram::GramAcc`] (chunked
+/// push + parallel merge, bit-identical to this constructor at f64 —
+/// the fused training scan and the online `train` wire op build their
+/// statistics through it without ever assembling `[T × F]`).
 ///
 /// For a feature scaling `s` (D_in = 1 linearity: `X(s·W_in) = s·X(W_in)`),
 /// the scaled normal equations follow in closed form:

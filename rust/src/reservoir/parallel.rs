@@ -30,9 +30,22 @@
 //! exact. The bare [`run_parallel`] / [`run_parallel_batch`] are the
 //! `f64` instantiation (bit-compatible with the previous f64-only form).
 
+//! [`run_parallel_batch_train`] fuses **Gram accumulation** into the
+//! batched scan: phase 3's fix-up rows are streamed straight into
+//! per-worker [`GramAcc`]s (one per sequence, merged deterministically in
+//! sequence order) instead of being materialized, so multi-sequence
+//! training never assembles a `[T × F]` feature matrix — only the
+//! requested eval spans (validation/test slices) become `Mat`s. At f64
+//! the fused path is bit-identical to materialize-then-`GramStats::new`
+//! (the accumulator's carry keeps the rank-2 row pairing aligned across
+//! chunk boundaries; tested below and in `rust/tests/precision.rs`).
+
+use std::ops::Range;
+
 use crate::coordinator::WorkerPool;
 use crate::linalg::Mat;
 use crate::num::Scalar;
+use crate::readout::GramAcc;
 
 use super::DiagonalEsn;
 
@@ -184,8 +197,29 @@ pub fn run_parallel_batch_prec<S: Scalar>(
     chunk: usize,
 ) -> Vec<Mat> {
     let params = ScanParams::<S>::new(esn);
-    let slots = params.slots;
     let chunk = chunk.max(1);
+    let per_seq = phase1_chunks(&params, inputs, pool, chunk);
+    let nr = esn.spec.n_real;
+    let n = esn.n();
+    inputs
+        .iter()
+        .zip(per_seq)
+        .map(|(u, chunks)| fixup_sequence(&params, nr, n, u.rows(), &chunks, chunk))
+        .collect()
+}
+
+/// Phase 1 for a batch of sequences: fan `Σᵢ ⌈Tᵢ/chunk⌉` independent
+/// chunk scans across the pool in ONE `map` call — states-from-zero plus
+/// each chunk's total affine map — and regroup the results per sequence
+/// (jobs are pushed in `(sequence, chunk)` order and `map` preserves
+/// input order).
+fn phase1_chunks<S: Scalar>(
+    params: &ScanParams<S>,
+    inputs: &[Mat],
+    pool: &WorkerPool,
+    chunk: usize,
+) -> Vec<Vec<ChunkOut<S>>> {
+    let slots = params.slots;
 
     // flattened job list: (sequence, chunk-within-sequence)
     let mut jobs: Vec<(usize, usize)> = Vec::new();
@@ -195,8 +229,6 @@ pub fn run_parallel_batch_prec<S: Scalar>(
         }
     }
 
-    // phase 1: independent chunk scans (parallel across sequences AND
-    // chunks) — states-from-zero + the chunk's total affine map
     let worker_params = params.clone();
     let u_all: Vec<Mat> = inputs.to_vec();
     let chunks: Vec<ChunkOut<S>> = pool.map(jobs, move |(si, ci)| {
@@ -239,29 +271,52 @@ pub fn run_parallel_batch_prec<S: Scalar>(
         }
     });
 
-    // regroup phase-1 results per sequence (jobs were pushed in
-    // (sequence, chunk) order and `map` preserves input order)
-    let mut outs = Vec::with_capacity(inputs.len());
-    let mut cursor = 0;
+    // split (no copies: the chunk states move) per sequence
+    let mut per_seq = Vec::with_capacity(inputs.len());
+    let mut rest = chunks;
     for u in inputs {
         let n_chunks = u.rows().div_ceil(chunk);
-        let seq_chunks = &chunks[cursor..cursor + n_chunks];
-        cursor += n_chunks;
-        outs.push(fixup_sequence(esn, &params, u.rows(), seq_chunks, chunk));
+        let tail = rest.split_off(n_chunks);
+        per_seq.push(rest);
+        rest = tail;
     }
-    outs
+    per_seq
 }
 
-/// Phases 2–3 for one sequence: exclusive-scan the chunk summaries, then
-/// apply each chunk's prefix map to its local states. All arithmetic at
-/// `S`; only the final feature write widens to the f64 boundary.
+/// Phases 2–3 for one sequence, materialized: the `[T × N]` feature
+/// matrix the inference path wants ([`fixup_rows`] does the arithmetic;
+/// the row copy preserves bits).
 fn fixup_sequence<S: Scalar>(
-    esn: &DiagonalEsn,
     params: &ScanParams<S>,
+    nr: usize,
+    n: usize,
     t_len: usize,
     chunks: &[ChunkOut<S>],
     chunk: usize,
 ) -> Mat {
+    let mut out = Mat::zeros(t_len, n);
+    fixup_rows(params, nr, n, chunks, chunk, |t, row| {
+        out.row_mut(t).copy_from_slice(row);
+    });
+    out
+}
+
+/// Phases 2–3 for one sequence as a ROW VISITOR: exclusive-scan the
+/// chunk summaries, apply each chunk's prefix map to its local states,
+/// and hand every fixed-up feature row (global time index + Q-basis
+/// layout, widened to the f64 boundary) to `sink` in time order — the
+/// shared core of the materializing path ([`fixup_sequence`]) and the
+/// streaming trainer ([`run_parallel_batch_train_prec`]), so both see
+/// identical bits by construction. All arithmetic at `S`; only the
+/// feature write widens.
+fn fixup_rows<S: Scalar>(
+    params: &ScanParams<S>,
+    nr: usize,
+    n: usize,
+    chunks: &[ChunkOut<S>],
+    chunk: usize,
+    mut sink: impl FnMut(usize, &[f64]),
+) {
     let slots = params.slots;
 
     // phase 2: exclusive scan of chunk summaries (sequential, cheap)
@@ -274,8 +329,7 @@ fn fixup_sequence<S: Scalar>(
 
     // phase 3: fix-up — the *state entering the chunk* is b_prefix, so
     // s_global(t) = s_local(t) + λ^(row+1) ⊙ b_prefix.
-    let mut out = Mat::zeros(t_len, esn.n());
-    let nr = esn.spec.n_real;
+    let mut feat = vec![0.0f64; n];
     for (ci, c) in chunks.iter().enumerate() {
         let pre = &prefixes[ci];
         let lo = ci * chunk;
@@ -292,7 +346,6 @@ fn fixup_sequence<S: Scalar>(
             }
             let s_re = &c.s_re[row * slots..(row + 1) * slots];
             let s_im = &c.s_im[row * slots..(row + 1) * slots];
-            let feat = out.row_mut(lo + row);
             let mut col = 0;
             for j in 0..slots {
                 // global state = local + λ^(row+1) ⊙ entering-state
@@ -311,9 +364,126 @@ fn fixup_sequence<S: Scalar>(
                     col += 2;
                 }
             }
+            sink(lo + row, &feat);
         }
     }
-    out
+}
+
+// ---------------------------------------------------------------------------
+// fused streaming training scan
+// ---------------------------------------------------------------------------
+
+/// What to do with one sequence's trajectory in the fused training scan.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    /// Rows streamed into the Gram accumulator; `targets.row(k)` pairs
+    /// with state row `train.start + k`. Rows before `train.start` are a
+    /// washout — they drive the state but never touch the statistics.
+    pub train: Range<usize>,
+    /// Spans materialized as `[len × N]` feature matrices (the
+    /// validation/test slices the grid's prediction step needs). May
+    /// overlap `train`.
+    pub eval: Vec<Range<usize>>,
+}
+
+/// [`run_parallel_batch_train_prec`] at the f64 oracle precision.
+pub fn run_parallel_batch_train(
+    esn: &DiagonalEsn,
+    inputs: &[Mat],
+    targets: &[Mat],
+    specs: &[TrainSpec],
+    pool: &WorkerPool,
+    chunk: usize,
+) -> (GramAcc<f64>, Vec<Vec<Mat>>) {
+    run_parallel_batch_train_prec::<f64>(esn, inputs, targets, specs, pool, chunk)
+}
+
+/// Fused multi-sequence training scan at precision `S`: the batched
+/// two-phase chunk scan of [`run_parallel_batch_prec`], with phase 3
+/// streaming each fixed-up feature row straight into a per-worker
+/// [`GramAcc`] instead of a feature matrix. One accumulator per sequence
+/// (row pairing restarts per sequence), merged **in sequence order** on
+/// the coordinator — a deterministic reduction, so the result is
+/// bit-identical (f64) to materializing each sequence's `[T × F]` block,
+/// slicing its train span, running the monolithic `GramStats::new`, and
+/// merging in the same order (tested). Only the `spec.eval` spans are
+/// materialized; the training span never exists as a matrix.
+///
+/// Returns the merged accumulator (solve with
+/// [`GramAcc::solve_scaled`], or widen via [`GramAcc::finish`] for the
+/// f64 sub-grid sweep) and, per sequence, one `Mat` per requested eval
+/// span.
+pub fn run_parallel_batch_train_prec<S: Scalar>(
+    esn: &DiagonalEsn,
+    inputs: &[Mat],
+    targets: &[Mat],
+    specs: &[TrainSpec],
+    pool: &WorkerPool,
+    chunk: usize,
+) -> (GramAcc<S>, Vec<Vec<Mat>>) {
+    assert!(!inputs.is_empty(), "training scan needs at least one sequence");
+    assert_eq!(inputs.len(), targets.len(), "inputs/targets length mismatch");
+    assert_eq!(inputs.len(), specs.len(), "inputs/specs length mismatch");
+    let d = targets[0].cols();
+    for ((u, y), spec) in inputs.iter().zip(targets).zip(specs) {
+        assert_eq!(y.cols(), d, "target dims must agree across sequences");
+        assert_eq!(
+            y.rows(),
+            spec.train.len(),
+            "targets must align with the train span"
+        );
+        assert!(spec.train.end <= u.rows(), "train span out of range");
+        for r in &spec.eval {
+            assert!(r.end <= u.rows(), "eval span out of range");
+        }
+    }
+
+    let params = ScanParams::<S>::new(esn);
+    let chunk = chunk.max(1);
+    let nr = esn.spec.n_real;
+    let n = esn.n();
+    let per_seq = phase1_chunks(&params, inputs, pool, chunk);
+
+    // phases 2–3 as per-sequence jobs: each worker replays its sequence's
+    // fix-up and feeds the rows straight into its own accumulator / eval
+    // mats — parallel across sequences, nothing [T × F] ever allocated.
+    let jobs: Vec<(Vec<ChunkOut<S>>, Mat, TrainSpec)> = per_seq
+        .into_iter()
+        .zip(targets)
+        .zip(specs)
+        .map(|((chunks, y), spec)| (chunks, y.clone(), spec.clone()))
+        .collect();
+    let worker_params = params.clone();
+    let results: Vec<(GramAcc<S>, Vec<Mat>)> =
+        pool.map(jobs, move |(chunks, target, spec)| {
+            let mut acc = GramAcc::<S>::new(n, target.cols());
+            let mut evals: Vec<Mat> =
+                spec.eval.iter().map(|r| Mat::zeros(r.len(), n)).collect();
+            fixup_rows(&worker_params, nr, n, &chunks, chunk, |t, row| {
+                if spec.train.contains(&t) {
+                    acc.push_row(row, target.row(t - spec.train.start));
+                }
+                for (k, r) in spec.eval.iter().enumerate() {
+                    if r.contains(&t) {
+                        evals[k].row_mut(t - r.start).copy_from_slice(row);
+                    }
+                }
+            });
+            (acc, evals)
+        });
+
+    // deterministic reduction: fold from the first sequence's accumulator
+    // in sequence order (never from a zero accumulator — `0.0 + (−0.0)`
+    // would flip a sign bit and break the bitwise contract)
+    let mut it = results.into_iter();
+    let (mut acc, first_evals) = it.next().expect("≥ 1 sequence");
+    let mut evals = Vec::with_capacity(inputs.len());
+    evals.push(first_evals);
+    for (a, e) in it {
+        acc.merge(a);
+        evals.push(e);
+    }
+    (acc, evals)
 }
 
 #[cfg(test)]
@@ -424,6 +594,167 @@ mod tests {
             );
             assert!(err > 0.0, "f32 scan suspiciously exact (ran at f64?)");
         }
+    }
+
+    fn slice(m: &Mat, r: std::ops::Range<usize>) -> Mat {
+        let mut out = Mat::zeros(r.len(), m.cols());
+        for (row, t) in r.enumerate() {
+            out.row_mut(row).copy_from_slice(m.row(t));
+        }
+        out
+    }
+
+    #[test]
+    fn fused_train_bit_identical_to_materialized_gram() {
+        // the tentpole contract: streaming phase-3 rows into the
+        // accumulator must be bit-identical to materializing the [T × F]
+        // block, slicing the train span, and running GramStats::new —
+        // across chunk sizes, with an odd-offset odd-length train span
+        use crate::readout::GramStats;
+        let esn = setup(18, 21);
+        let mut rng = Pcg64::seeded(22);
+        let u = Mat::randn(111, 1, &mut rng); // odd length
+        let train = 9..86; // odd offset, odd length
+        let y = Mat::randn(train.len(), 1, &mut rng);
+        let pool = WorkerPool::new(3);
+        let spec = TrainSpec {
+            train: train.clone(),
+            eval: vec![86..111, 0..9],
+        };
+        for chunk in [7usize, 16, 50, 111] {
+            let (acc, evals) = run_parallel_batch_train(
+                &esn,
+                std::slice::from_ref(&u),
+                std::slice::from_ref(&y),
+                std::slice::from_ref(&spec),
+                &pool,
+                chunk,
+            );
+            assert_eq!(acc.rows(), train.len());
+            // reference: materialize with the SAME chunking, then the
+            // monolithic constructor over the sliced train block
+            let states = run_parallel(&esn, &u, &pool, chunk);
+            let want = GramStats::new(&slice(&states, train.clone()), &y);
+            for (alpha, s) in [(1e-6, 1.0), (0.5, 0.01)] {
+                let got_ro = acc.solve_scaled(alpha, s).unwrap();
+                let want_ro = want.solve_scaled(alpha, s).unwrap();
+                assert_eq!(
+                    got_ro.w.data(),
+                    want_ro.w.data(),
+                    "chunk={chunk} alpha={alpha} s={s}: fused readout \
+                     diverged from materialized fit"
+                );
+                assert_eq!(got_ro.b, want_ro.b, "chunk={chunk}");
+            }
+            // eval spans are the materialized slices, bit for bit
+            assert_eq!(evals.len(), 1);
+            assert_eq!(evals[0].len(), 2);
+            for (mat, r) in evals[0].iter().zip([86..111, 0..9]) {
+                assert_eq!(
+                    mat.data(),
+                    slice(&states, r).data(),
+                    "chunk={chunk}: eval span diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_multi_sequence_merge_matches_per_sequence_accumulators() {
+        // multi-sequence grid fit: per-worker accumulators merged in
+        // sequence order ≡ per-sequence monolithic accumulation merged in
+        // the same order — and uneven lengths exercise the regrouping
+        use crate::readout::GramAcc;
+        let esn = setup(14, 23);
+        let mut rng = Pcg64::seeded(24);
+        let lens = [37usize, 64, 5, 103];
+        let inputs: Vec<Mat> =
+            lens.iter().map(|&t| Mat::randn(t, 1, &mut rng)).collect();
+        let specs: Vec<TrainSpec> = lens
+            .iter()
+            .map(|&t| TrainSpec {
+                // washout 3 where it fits, otherwise the whole sequence
+                train: if t > 6 { 3..t } else { 0..t },
+                eval: vec![],
+            })
+            .collect();
+        let targets: Vec<Mat> = specs
+            .iter()
+            .map(|s| Mat::randn(s.train.len(), 1, &mut rng))
+            .collect();
+        let pool = WorkerPool::new(3);
+        let (acc, evals) =
+            run_parallel_batch_train(&esn, &inputs, &targets, &specs, &pool, 16);
+        assert_eq!(evals.len(), inputs.len());
+        assert_eq!(
+            acc.rows(),
+            specs.iter().map(|s| s.train.len()).sum::<usize>()
+        );
+        // reference: materialize every sequence, one-push per-sequence
+        // accumulators, fold-merge in sequence order
+        let mats = run_parallel_batch(&esn, &inputs, &pool, 16);
+        let mut accs = mats
+            .iter()
+            .zip(&specs)
+            .zip(&targets)
+            .map(|((m, s), y)| {
+                let mut a = GramAcc::<f64>::new(esn.n(), 1);
+                a.push_rows(&slice(m, s.train.clone()), y);
+                a
+            })
+            .collect::<Vec<_>>()
+            .into_iter();
+        let mut want = accs.next().unwrap();
+        for a in accs {
+            want.merge(a);
+        }
+        let got_ro = acc.solve_scaled(1e-5, 1.0).unwrap();
+        let want_ro = want.solve_scaled(1e-5, 1.0).unwrap();
+        assert_eq!(got_ro.w.data(), want_ro.w.data());
+        assert_eq!(got_ro.b, want_ro.b);
+    }
+
+    #[test]
+    fn f32_fused_training_tracks_f64_within_coarse_budget() {
+        // the all-f32 training point: accumulate AND solve at f32; the
+        // readout must track the f64 oracle loosely (the calibrated
+        // budget model lives in rust/tests/precision.rs) and must not be
+        // secretly running at f64
+        let esn = setup(16, 25);
+        let mut rng = Pcg64::seeded(26);
+        let u = Mat::randn(120, 1, &mut rng);
+        let train = 10..120;
+        let y = Mat::randn(train.len(), 1, &mut rng);
+        let pool = WorkerPool::new(2);
+        let spec = TrainSpec { train, eval: vec![] };
+        let (a64, _) = run_parallel_batch_train_prec::<f64>(
+            &esn,
+            std::slice::from_ref(&u),
+            std::slice::from_ref(&y),
+            std::slice::from_ref(&spec),
+            &pool,
+            16,
+        );
+        let (a32, _) = run_parallel_batch_train_prec::<f32>(
+            &esn,
+            std::slice::from_ref(&u),
+            std::slice::from_ref(&y),
+            std::slice::from_ref(&spec),
+            &pool,
+            16,
+        );
+        // generous ridge keeps the system well-conditioned at f32, so the
+        // comparison measures accumulation rounding, not κ amplification
+        let r64 = a64.solve_scaled(1.0, 1.0).unwrap();
+        let r32 = a32.solve_scaled(1.0, 1.0).unwrap();
+        let scale = r64.w.data().iter().fold(1.0f64, |m, v| m.max(v.abs()));
+        let diff = r64.w.max_abs_diff(&r32.w);
+        assert!(
+            diff < 0.5 * scale,
+            "f32 training readout drifted: {diff} vs scale {scale}"
+        );
+        assert!(diff > 0.0, "f32 training suspiciously exact (ran at f64?)");
+        assert!(r32.w.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -23,6 +23,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::linalg::Mat;
+use crate::readout::{GramAcc, Readout};
 use crate::reservoir::{BatchEsn, LaneReadout};
 
 use super::pool::EnginePool;
@@ -41,56 +42,254 @@ const HOLDOFF_DRAIN_DEPTH: usize = 4;
 // precision-dispatched lane engine
 // ---------------------------------------------------------------------------
 
+/// Outcome codes of a lane `commit`, carried through the `Vec<f64>`
+/// reply channel (the sweeper can only answer with numbers). Shared by
+/// both transports so their error responses stay identical.
+pub(crate) const COMMIT_OK: f64 = 1.0;
+pub(crate) const COMMIT_EMPTY: f64 = 2.0;
+pub(crate) const COMMIT_SINGULAR: f64 = 3.0;
+
+/// Map a commit outcome code to its client-visible error (`None` = ok).
+/// One function serves the threaded wrapper and the event-loop resolver,
+/// so the two transports answer a failed commit with the same message.
+pub(crate) fn commit_code_error(code: f64) -> Option<anyhow::Error> {
+    if code == COMMIT_OK {
+        None
+    } else if code == COMMIT_EMPTY {
+        // same message as a commit with no lane at all — one constructor
+        // in wire.rs keeps every "premature commit" answer identical
+        Some(super::wire::nothing_to_commit_error())
+    } else {
+        Some(anyhow!(
+            "commit failed: ridge system not solvable (try a larger alpha)"
+        ))
+    }
+}
+
+/// One precision's hub: the batched lane engine, the model readout
+/// pre-cast to `S`, and the per-lane TRAINING state — a streaming
+/// [`GramAcc`] fed by `train` ops and the committed readout installed by
+/// `commit` (an `Arc` swap owned by the sweeper thread, so installation
+/// is atomic with respect to every sweep).
+pub(crate) struct HubState<S: crate::num::Scalar> {
+    engine: BatchEsn<S>,
+    ro: LaneReadout<S>,
+    /// Per-lane online trainers, allocated lazily on the first `train`.
+    trainers: Vec<Option<GramAcc<S>>>,
+    /// Per-lane committed readouts; `None` = the shared model readout.
+    /// A committed lane's streams leave the fused shared sweep and go
+    /// through [`HubState::sweep_committed`].
+    committed: Vec<Option<Arc<Readout>>>,
+}
+
+impl<S: crate::num::Scalar> HubState<S> {
+    fn new(model: &Model, lanes: usize) -> Self {
+        Self {
+            engine: BatchEsn::<S>::with_precision(model.qesn.clone(), lanes),
+            ro: LaneReadout::new(&model.readout),
+            trainers: (0..lanes).map(|_| None).collect(),
+            committed: vec![None; lanes],
+        }
+    }
+
+    /// Coalesced streaming sweep with per-lane readout overrides: lanes
+    /// still on the model readout advance together through the engine's
+    /// fused masked sweep; committed lanes advance together through
+    /// [`Self::sweep_committed`]. Lane state evolution is identical
+    /// either way (frozen-lane exactness + lane position independence),
+    /// so the split is unobservable beyond the readout itself.
+    fn sweep_streams(&mut self, reqs: &[(usize, &[f64])]) -> Vec<Vec<f64>> {
+        if reqs.iter().all(|&(lane, _)| self.committed[lane].is_none()) {
+            return self.engine.sweep_streams_cast(reqs, &self.ro);
+        }
+        let mut outs: Vec<Option<Vec<f64>>> = reqs.iter().map(|_| None).collect();
+        let mut base: Vec<(usize, &[f64])> = Vec::new();
+        let mut base_idx: Vec<usize> = Vec::new();
+        let mut custom: Vec<(usize, &[f64])> = Vec::new();
+        let mut custom_idx: Vec<usize> = Vec::new();
+        for (i, &(lane, input)) in reqs.iter().enumerate() {
+            if self.committed[lane].is_some() {
+                custom.push((lane, input));
+                custom_idx.push(i);
+            } else {
+                base.push((lane, input));
+                base_idx.push(i);
+            }
+        }
+        if !base.is_empty() {
+            let got = self.engine.sweep_streams_cast(&base, &self.ro);
+            for (i, out) in base_idx.into_iter().zip(got) {
+                outs[i] = Some(out);
+            }
+        }
+        let got = self.sweep_committed(&custom);
+        for (i, out) in custom_idx.into_iter().zip(got) {
+            outs[i] = Some(out);
+        }
+        outs.into_iter().map(|o| o.expect("every request answered")).collect()
+    }
+
+    /// Masked sweep over committed lanes: all requested lanes advance
+    /// together per step (same engine arithmetic as the fused sweep);
+    /// each lane's output comes from its committed readout applied to
+    /// the exactly-widened lane features, bias first then ascending
+    /// feature index — the shared fused accumulation contract, in f64.
+    fn sweep_committed(&mut self, reqs: &[(usize, &[f64])]) -> Vec<Vec<f64>> {
+        let bsz = self.engine.batch();
+        let n = self.engine.n();
+        let max_len = reqs.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+        let mut outs: Vec<Vec<f64>> = reqs
+            .iter()
+            .map(|(_, s)| Vec::with_capacity(s.len()))
+            .collect();
+        let mut u = vec![0.0f64; bsz];
+        let mut active = vec![false; bsz];
+        let mut feat = vec![0.0f64; n];
+        for t in 0..max_len {
+            for &(lane, input) in reqs {
+                active[lane] = t < input.len();
+                u[lane] = if t < input.len() { input[t] } else { 0.0 };
+            }
+            self.engine.step_masked(&u, &active);
+            for (i, &(lane, input)) in reqs.iter().enumerate() {
+                if t < input.len() {
+                    self.engine.lane_state(lane, &mut feat);
+                    let ro = self.committed[lane].as_ref().expect("committed lane");
+                    // bias-first ascending-feature apply in f64 (feature
+                    // widening is exact at both precisions, so this is
+                    // well-defined engine-independently)
+                    outs[i].push(ro.apply_row(&feat, 0));
+                }
+            }
+        }
+        outs
+    }
+
+    /// `train` op: advance the lane through `input` (identical state
+    /// evolution to a `stream` of the same rows — masked single-lane
+    /// steps) and push each step's `(features, target)` row into the
+    /// lane's streaming accumulator. Returns the lane's total accumulated
+    /// row count.
+    fn train(&mut self, lane: usize, input: &[f64], target: &[f64]) -> u64 {
+        debug_assert_eq!(input.len(), target.len());
+        let bsz = self.engine.batch();
+        let n = self.engine.n();
+        let Self {
+            engine, trainers, ..
+        } = self;
+        let trainer = trainers[lane].get_or_insert_with(|| GramAcc::new(n, 1));
+        let mut u = vec![0.0f64; bsz];
+        let mut active = vec![false; bsz];
+        active[lane] = true;
+        let mut feat = vec![0.0f64; n];
+        for (&ut, &yt) in input.iter().zip(target) {
+            u[lane] = ut;
+            engine.step_masked(&u, &active);
+            engine.lane_state(lane, &mut feat);
+            trainer.push_row(&feat, std::slice::from_ref(&yt));
+        }
+        trainer.rows() as u64
+    }
+
+    /// `commit` op: solve the lane's accumulated ridge system natively at
+    /// `S` and hot-swap the lane's readout (`Arc` swap). The trainer
+    /// keeps its statistics — further `train` rows extend the same
+    /// stream, so a later commit refines the readout online.
+    fn commit(&mut self, lane: usize, alpha: f64) -> f64 {
+        match &self.trainers[lane] {
+            None => COMMIT_EMPTY,
+            Some(acc) if acc.rows() == 0 => COMMIT_EMPTY,
+            Some(acc) => match acc.solve_scaled(alpha, 1.0) {
+                Ok(ro) => {
+                    self.committed[lane] = Some(Arc::new(ro));
+                    COMMIT_OK
+                }
+                Err(_) => COMMIT_SINGULAR,
+            },
+        }
+    }
+
+    /// Full per-lane clear: zero the state AND drop the trainer and any
+    /// committed readout. Used for both the client-visible `reset` and
+    /// lane recycling — either way the lane leaves as a pristine
+    /// model-readout lane, so the next owner can never inherit another
+    /// connection's training.
+    fn reset_lane(&mut self, lane: usize) {
+        self.engine.reset_lane(lane);
+        self.trainers[lane] = None;
+        self.committed[lane] = None;
+    }
+
+    fn reset(&mut self) {
+        self.engine.reset();
+        for t in self.trainers.iter_mut() {
+            *t = None;
+        }
+        for c in self.committed.iter_mut() {
+            *c = None;
+        }
+    }
+}
+
 /// A [`BatchEsn`] at the model's serving precision, paired with the
-/// readout pre-cast to that precision so per-round sweeps stay
-/// allocation-free. All `BatchEsn` APIs are f64 at the boundary, so
-/// dispatch is a plain match.
+/// readout pre-cast to that precision (so per-round sweeps stay
+/// allocation-free) and the per-lane training state. All `BatchEsn` APIs
+/// are f64 at the boundary, so dispatch is a plain match.
 pub(crate) enum Hub {
-    F64(BatchEsn<f64>, LaneReadout<f64>),
-    F32(BatchEsn<f32>, LaneReadout<f32>),
+    F64(HubState<f64>),
+    F32(HubState<f32>),
 }
 
 impl Hub {
     pub(crate) fn new(model: &Model, lanes: usize) -> Self {
         match model.precision {
-            Precision::F64 => Hub::F64(
-                BatchEsn::new(model.qesn.clone(), lanes),
-                LaneReadout::new(&model.readout),
-            ),
-            Precision::F32 => Hub::F32(
-                BatchEsn::<f32>::with_precision(model.qesn.clone(), lanes),
-                LaneReadout::new(&model.readout),
-            ),
+            Precision::F64 => Hub::F64(HubState::new(model, lanes)),
+            Precision::F32 => Hub::F32(HubState::new(model, lanes)),
         }
     }
 
     pub(crate) fn sweep_streams(&mut self, reqs: &[(usize, &[f64])]) -> Vec<Vec<f64>> {
         match self {
-            Hub::F64(e, ro) => e.sweep_streams_cast(reqs, ro),
-            Hub::F32(e, ro) => e.sweep_streams_cast(reqs, ro),
+            Hub::F64(h) => h.sweep_streams(reqs),
+            Hub::F32(h) => h.sweep_streams(reqs),
         }
     }
 
     pub(crate) fn run_readout(&mut self, u: &Mat) -> Mat {
         match self {
-            Hub::F64(e, ro) => e.run_readout_cast(u, ro),
-            Hub::F32(e, ro) => e.run_readout_cast(u, ro),
+            Hub::F64(h) => h.engine.run_readout_cast(u, &h.ro),
+            Hub::F32(h) => h.engine.run_readout_cast(u, &h.ro),
+        }
+    }
+
+    pub(crate) fn train(&mut self, lane: usize, input: &[f64], target: &[f64]) -> u64 {
+        match self {
+            Hub::F64(h) => h.train(lane, input, target),
+            Hub::F32(h) => h.train(lane, input, target),
+        }
+    }
+
+    pub(crate) fn commit(&mut self, lane: usize, alpha: f64) -> f64 {
+        match self {
+            Hub::F64(h) => h.commit(lane, alpha),
+            Hub::F32(h) => h.commit(lane, alpha),
         }
     }
 
     pub(crate) fn reset_lane(&mut self, lane: usize) {
         match self {
-            Hub::F64(e, _) => e.reset_lane(lane),
-            Hub::F32(e, _) => e.reset_lane(lane),
+            Hub::F64(h) => h.reset_lane(lane),
+            Hub::F32(h) => h.reset_lane(lane),
         }
     }
 
-    /// Zero every lane — a pooled engine is reset on checkout so reuse is
-    /// indistinguishable from a fresh construction.
+    /// Zero every lane (and drop all per-lane training state) — a pooled
+    /// engine is reset on checkout so reuse is indistinguishable from a
+    /// fresh construction.
     pub(crate) fn reset(&mut self) {
         match self {
-            Hub::F64(e, _) => e.reset(),
-            Hub::F32(e, _) => e.reset(),
+            Hub::F64(h) => h.reset(),
+            Hub::F32(h) => h.reset(),
         }
     }
 
@@ -99,8 +298,8 @@ impl Hub {
     /// length).
     pub(crate) fn lanes(&self) -> usize {
         match self {
-            Hub::F64(e, _) => e.batch(),
-            Hub::F32(e, _) => e.batch(),
+            Hub::F64(h) => h.engine.batch(),
+            Hub::F32(h) => h.engine.batch(),
         }
     }
 }
@@ -234,9 +433,25 @@ pub(crate) enum FrontJob {
         input: Vec<f64>,
         reply: ReplySender,
     },
-    /// Zero a hub lane. `reply` is `Some` for a client-visible `reset`
-    /// (answered with an empty vec on completion), `None` when recycling
-    /// a released lane.
+    /// Online training step(s) on a hub lane: advance the lane state over
+    /// `input` and stream each step's `(features, target)` row into the
+    /// lane's Gram accumulator. Answered with `[total_rows]`.
+    Train {
+        lane: usize,
+        input: Vec<f64>,
+        target: Vec<f64>,
+        reply: ReplySender,
+    },
+    /// Solve the lane's accumulated ridge system and hot-swap the lane's
+    /// readout. Answered with `[COMMIT_* code]`.
+    Commit {
+        lane: usize,
+        alpha: f64,
+        reply: ReplySender,
+    },
+    /// Zero a hub lane (state + trainer + committed readout). `reply` is
+    /// `Some` for a client-visible `reset` (answered with an empty vec on
+    /// completion), `None` when recycling a released lane.
     Reset {
         lane: usize,
         reply: Option<ReplySender>,
@@ -481,6 +696,40 @@ impl BatchFront {
         self.submit(FrontJob::Stream { lane, input, reply })
     }
 
+    /// Enqueue online training step(s) on a hub lane with an arbitrary
+    /// reply sink. Refused (like [`Self::submit_stream`]) on multi-output
+    /// models — the trainer fits a single-output readout — and on
+    /// mismatched input/target lengths; the wire layer rejects both
+    /// earlier with friendlier messages.
+    pub(crate) fn submit_train(
+        &self,
+        lane: usize,
+        input: Vec<f64>,
+        target: Vec<f64>,
+        reply: ReplySender,
+    ) -> bool {
+        if self.model.readout.w.cols() != 1 || input.len() != target.len() {
+            return false;
+        }
+        self.submit(FrontJob::Train {
+            lane,
+            input,
+            target,
+            reply,
+        })
+    }
+
+    /// Enqueue a lane commit (ridge solve + readout hot-swap) with an
+    /// arbitrary reply sink.
+    pub(crate) fn submit_commit(
+        &self,
+        lane: usize,
+        alpha: f64,
+        reply: ReplySender,
+    ) -> bool {
+        self.submit(FrontJob::Commit { lane, alpha, reply })
+    }
+
     /// Enqueue a client-visible lane reset with an arbitrary reply sink
     /// (answered with an empty vec; see [`Self::submit_predict`] on the
     /// return value).
@@ -502,6 +751,41 @@ impl BatchFront {
             anyhow::bail!("batch front unavailable");
         }
         rx.recv().map_err(|_| anyhow!("batch front unavailable"))
+    }
+
+    /// Synchronous online training step(s) on a hub lane: advance the
+    /// lane exactly like [`Self::stream`] would AND stream each step's
+    /// `(features, target)` pair into the lane's Gram accumulator on the
+    /// sweeper thread. Returns the lane's total accumulated row count.
+    pub fn train(&self, lane: usize, input: Vec<f64>, target: Vec<f64>) -> Result<u64> {
+        super::wire::guard_streamable(&self.model)?;
+        anyhow::ensure!(
+            input.len() == target.len(),
+            "train input/target length mismatch ({} vs {})",
+            input.len(),
+            target.len()
+        );
+        let (tx, rx) = mpsc::channel();
+        if !self.submit_train(lane, input, target, ReplySender::Chan(tx)) {
+            anyhow::bail!("batch front unavailable");
+        }
+        let v = rx.recv().map_err(|_| anyhow!("batch front unavailable"))?;
+        Ok(v.first().copied().unwrap_or(0.0) as u64)
+    }
+
+    /// Synchronous lane commit: solve the accumulated ridge system at the
+    /// hub's precision and atomically hot-swap this lane's readout —
+    /// subsequent [`Self::stream`] calls on the lane use it.
+    pub fn commit(&self, lane: usize, alpha: f64) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit_commit(lane, alpha, ReplySender::Chan(tx)) {
+            anyhow::bail!("batch front unavailable");
+        }
+        let v = rx.recv().map_err(|_| anyhow!("batch front unavailable"))?;
+        match commit_code_error(v.first().copied().unwrap_or(COMMIT_SINGULAR)) {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
     }
 
     /// Synchronous client-visible lane reset.
@@ -603,6 +887,27 @@ impl BatchFront {
                     }
                     in_round[lane] = true;
                     round.push((lane, input, reply));
+                }
+                FrontJob::Train {
+                    lane,
+                    input,
+                    target,
+                    reply,
+                } => {
+                    // stateful like Stream: close any open round touching
+                    // this lane first so per-lane order is preserved
+                    if in_round[lane] {
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    let rows = hub.train(lane, &input, &target);
+                    reply.send(vec![rows as f64]);
+                }
+                FrontJob::Commit { lane, alpha, reply } => {
+                    if in_round[lane] {
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    let code = hub.commit(lane, alpha);
+                    reply.send(vec![code]);
                 }
                 FrontJob::Reset { lane, reply } => {
                     if in_round[lane] {
@@ -969,6 +1274,167 @@ mod tests {
             }
             other => panic!("expected Done(42), got token {}", other.0),
         }
+        front.shutdown();
+    }
+
+    #[test]
+    fn train_commit_hot_swaps_readout_bit_identically_to_local_fit() {
+        // the serving-side training contract at f64: the lane's streamed
+        // Gram accumulation + native solve must equal a locally computed
+        // fit over the same trajectory bit for bit, and post-commit
+        // streams must apply exactly that readout
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let train_in = task.input[..120].to_vec();
+        // a target the model readout was NOT fitted to, so the swap is
+        // observable
+        let target: Vec<f64> =
+            train_in.iter().map(|x| 0.5 - 2.0 * x).collect();
+        let lane = front.acquire_lane().unwrap();
+        // split the training stream across two ops: accumulation must be
+        // chunking-invariant
+        let r1 = front
+            .train(lane, train_in[..47].to_vec(), target[..47].to_vec())
+            .unwrap();
+        assert_eq!(r1, 47);
+        let r2 = front
+            .train(lane, train_in[47..].to_vec(), target[47..].to_vec())
+            .unwrap();
+        assert_eq!(r2, 120);
+        front.commit(lane, 1e-8).unwrap();
+
+        // local reference: same trajectory (QBasisEsn run — hub lanes are
+        // bit-identical to it), same accumulator, same solve
+        let u = Mat::from_rows(train_in.len(), 1, &train_in);
+        let x = model.qesn.run(&u);
+        let y = Mat::from_rows(target.len(), 1, &target);
+        let mut acc = crate::readout::GramAcc::<f64>::new(model.esn.n(), 1);
+        acc.push_rows(&x, &y);
+        let want_ro = acc.solve_scaled(1e-8, 1.0).unwrap();
+
+        // post-commit stream continues the SAME state and applies the
+        // committed readout: reference = continue the run, bias-first
+        // ascending-feature accumulation
+        let stream_in = task.input[120..160].to_vec();
+        let got = front.stream(lane, stream_in.clone()).unwrap();
+        let all: Vec<f64> =
+            train_in.iter().chain(&stream_in).copied().collect();
+        let u_all = Mat::from_rows(all.len(), 1, &all);
+        let x_all = model.qesn.run(&u_all);
+        for (k, g) in got.iter().enumerate() {
+            let want = want_ro.apply_row(x_all.row(120 + k), 0);
+            assert!(
+                (g - want).abs() == 0.0,
+                "post-commit stream diverged at step {k}: {g} vs {want}"
+            );
+        }
+        // and the swap changed predictions vs the model readout
+        let model_y: Vec<f64> = {
+            let y = model.qesn.run_readout(&u_all, &model.readout);
+            (120..160).map(|t| y[(t, 0)]).collect()
+        };
+        assert!(
+            got.iter().zip(&model_y).any(|(a, b)| a != b),
+            "committed readout did not change predictions"
+        );
+        front.release_lane(lane);
+        front.shutdown();
+    }
+
+    #[test]
+    fn commit_without_training_errors_and_reset_clears_training() {
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let lane = front.acquire_lane().unwrap();
+        assert!(
+            front.commit(lane, 1e-8).is_err(),
+            "commit with no trained rows must refuse"
+        );
+        let _ = front
+            .train(lane, task.input[..20].to_vec(), task.input[1..21].to_vec())
+            .unwrap();
+        front.commit(lane, 1e-8).unwrap();
+        // reset returns the lane to a pristine model-readout lane:
+        // trainer rows are gone (commit refuses again) and the stream
+        // matches the model readout from a zero state
+        front.reset(lane).unwrap();
+        assert!(front.commit(lane, 1e-8).is_err(), "reset must drop the trainer");
+        let got = front.stream(lane, task.input[..10].to_vec()).unwrap();
+        let want = model.predict(&task.input[..10]);
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() == 0.0,
+                "reset lane must serve the model readout again: {a} vs {b}"
+            );
+        }
+        front.release_lane(lane);
+        front.shutdown();
+    }
+
+    #[test]
+    fn recycled_lane_does_not_inherit_committed_readout() {
+        // connection A trains + commits, disconnects; the recycled lane
+        // handed to connection B must serve the MODEL readout from zero
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let lane = front.acquire_lane().unwrap();
+        let target: Vec<f64> =
+            task.input[..30].iter().map(|x| 1.0 - x).collect();
+        let _ = front
+            .train(lane, task.input[..30].to_vec(), target)
+            .unwrap();
+        front.commit(lane, 1e-8).unwrap();
+        front.release_lane(lane);
+        // the freshest free lane is the recycled one (LIFO free list)
+        let lane2 = front.acquire_lane().unwrap();
+        assert_eq!(lane2, lane, "free list should hand the recycled lane back");
+        let got = front.stream(lane2, task.input[..8].to_vec()).unwrap();
+        let want = model.predict(&task.input[..8]);
+        for (a, b) in got.iter().zip(&want) {
+            assert!(
+                (a - b).abs() == 0.0,
+                "recycled lane inherited training: {a} vs {b}"
+            );
+        }
+        front.release_lane(lane2);
+        front.shutdown();
+    }
+
+    #[test]
+    fn f32_train_commit_stream_is_finite_and_swaps() {
+        // the f32 hub trains at f32 end-to-end (accumulate + solve at
+        // f32): same trajectory on two lanes, one trained+committed, one
+        // on the model readout — outputs must differ (swap observable)
+        // and stay finite
+        let model = Arc::new(make_model_f32());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let trained = front.acquire_lane().unwrap();
+        let plain = front.acquire_lane().unwrap();
+        let target: Vec<f64> =
+            task.input[..100].iter().map(|x| 0.5 - 2.0 * x).collect();
+        let rows = front
+            .train(trained, task.input[..100].to_vec(), target)
+            .unwrap();
+        assert_eq!(rows, 100);
+        // α well above the f32 noise floor of the Gram diagonal: the MSO
+        // trajectory is low-rank, so a too-small ridge would vanish in
+        // f32 assembly and leave the system singular
+        front.commit(trained, 1e-2).unwrap();
+        let _ = front.stream(plain, task.input[..100].to_vec()).unwrap();
+        // identical state trajectories from here; different readouts
+        let after = front
+            .stream(trained, task.input[100..140].to_vec())
+            .unwrap();
+        let base = front.stream(plain, task.input[100..140].to_vec()).unwrap();
+        assert!(after.iter().all(|v| v.is_finite()));
+        assert_eq!(after.len(), base.len());
+        assert!(after != base, "f32 committed readout unobservable");
+        front.release_lane(trained);
+        front.release_lane(plain);
         front.shutdown();
     }
 

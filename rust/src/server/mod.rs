@@ -82,6 +82,17 @@
 //! `O(N + N·D_out)` work per step and never materializes a `[T × N]`
 //! trajectory. Connections beyond their home hub's lane capacity fall
 //! back to a local per-connection state with the same arithmetic.
+//!
+//! ## Online training (train-where-you-serve)
+//!
+//! The `train` wire op advances a connection's hub lane like `stream`
+//! while streaming each step's `(features, target)` row into a per-lane
+//! [`crate::readout::GramAcc`] on the lane's sweeper; `commit` solves
+//! the accumulated ridge system at the hub's precision and atomically
+//! hot-swaps that connection's readout (`Arc<Readout>` swap, sweeper-
+//! owned). Stateless predicts keep the deployed model readout; `reset`
+//! and lane recycling drop all training state. See DESIGN.md §9 and
+//! `wire.rs` for the protocol and invariants.
 
 mod front;
 #[cfg(target_os = "linux")]
@@ -92,7 +103,10 @@ mod wire;
 
 pub use front::BatchFront;
 pub use shard::ShardedFront;
-pub use wire::{serve, serve_on, serve_sharded, serve_with_holdoff, Client};
+pub use wire::{
+    serve, serve_on, serve_on_opts, serve_sharded, serve_with_holdoff, Client,
+    ServeOpts,
+};
 
 use std::sync::Mutex;
 

@@ -58,18 +58,21 @@ use std::net::{TcpListener, TcpStream};
 use std::os::raw::{c_int, c_void};
 use std::os::unix::io::AsRawFd;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::util::json::Json;
 
-use super::front::{Completion, CompletionQueue, EventReply, ReplySender};
+use super::front::{
+    commit_code_error, Completion, CompletionQueue, EventReply, ReplySender,
+};
 use super::shard::ShardedFront;
 use super::wire::{
-    error_response, guard_streamable, info_response, ip_key, ok_response, parse_op,
-    predict_response, stream_fallback, stream_response, try_acquire_lane, ConnState,
-    Op,
+    error_response, fallback_key, guard_streamable, guard_train_rows,
+    hub_full_train_error, info_response, ip_key, nothing_to_commit_error,
+    ok_response, parse_op, predict_response, stream_fallback, stream_response,
+    train_response, try_acquire_lane, ConnState, Op,
 };
 
 // ---------------------------------------------------------------------------
@@ -98,6 +101,16 @@ extern "C" {
         timeout_ms: c_int,
     ) -> c_int;
     fn eventfd(initval: u32, flags: c_int) -> c_int;
+    /// `accept4(2)`: accept + O_NONBLOCK + CLOEXEC in ONE syscall — the
+    /// std `accept` path costs an extra `fcntl` round trip per
+    /// connection to flip non-blocking. `addrlen` is `socklen_t` (u32 on
+    /// Linux); the peer address lands in `addr` as a raw sockaddr.
+    fn accept4(
+        sockfd: c_int,
+        addr: *mut c_void,
+        addrlen: *mut u32,
+        flags: c_int,
+    ) -> c_int;
     #[link_name = "read"]
     fn c_read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
     #[link_name = "write"]
@@ -117,10 +130,16 @@ const EPOLLHUP: u32 = 0x010;
 const EPOLLRDHUP: u32 = 0x2000;
 const EFD_CLOEXEC: c_int = 0o2000000;
 const EFD_NONBLOCK: c_int = 0o4000;
+// SOCK_* accept4 flags share the O_* octal values on Linux
+const SOCK_NONBLOCK: c_int = 0o4000;
+const SOCK_CLOEXEC: c_int = 0o2000000;
+const AF_INET: u16 = 2;
+const AF_INET6: u16 = 10;
 const EINTR: i32 = 4;
 const ENOMEM: i32 = 12;
 const ENFILE: i32 = 23;
 const EMFILE: i32 = 24;
+const ENOSYS: i32 = 38;
 const EPROTO: i32 = 71;
 const ECONNABORTED: i32 = 103;
 const ENOBUFS: i32 = 105;
@@ -161,11 +180,17 @@ impl Epoll {
         let _ = self.ctl(EPOLL_CTL_DEL, fd, 0, 0);
     }
 
-    /// Block until at least one event is ready (retrying on EINTR).
-    fn wait(&self, events: &mut [EpollEvent]) -> Result<usize> {
+    /// Block until at least one event is ready or `timeout_ms` elapses
+    /// (`-1` = forever; `Ok(0)` = timed out), retrying on EINTR.
+    fn wait(&self, events: &mut [EpollEvent], timeout_ms: c_int) -> Result<usize> {
         loop {
             let n = unsafe {
-                epoll_wait(self.fd, events.as_mut_ptr(), events.len() as c_int, -1)
+                epoll_wait(
+                    self.fd,
+                    events.as_mut_ptr(),
+                    events.len() as c_int,
+                    timeout_ms,
+                )
             };
             if n >= 0 {
                 return Ok(n as usize);
@@ -258,6 +283,8 @@ enum PendingKind {
         queued_at: Instant,
     },
     Stream,
+    Train,
+    Commit,
     Reset,
 }
 
@@ -289,11 +316,96 @@ struct Conn {
     eof: bool,
     /// Hard error: close as soon as observed.
     dead: bool,
+    /// Last instant of request-reply activity: stamped when bytes arrive
+    /// from the peer AND when a reply flushes to it (so the server's own
+    /// queue/sweep latency never counts as client silence). The
+    /// idle-timeout wheel reaps `idle_timeout` after the LATER of the
+    /// client's last bytes and our last flushed response.
+    last_active: Instant,
 }
 
 impl Conn {
     fn finished(&self) -> bool {
         self.dead || (self.eof && self.slots.is_empty() && self.wpos >= self.wbuf.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// idle-timeout timer wheel
+// ---------------------------------------------------------------------------
+
+/// Coarse timer wheel reaping connections that have gone silent for the
+/// configured idle timeout.
+///
+/// Design: O(1) amortized, LAZY repositioning. Each live connection sits
+/// in exactly one slot (placed at registration, and re-placed only when
+/// its slot comes due). Activity does NOT move the entry — `conn_event`
+/// just stamps `last_active`, and when the slot fires the wheel checks
+/// the stamp: still fresh → re-insert at the remaining time; genuinely
+/// idle → reap. So the per-request cost of the timeout is one `Instant`
+/// store, and the wheel only does work once per timeout period per
+/// connection. The tick is `timeout/8` (≥ 25 ms): reaping happens within
+/// ~12% of the configured timeout, which is all "reap silent
+/// connections" needs.
+struct IdleWheel {
+    slots: Vec<Vec<u64>>,
+    cur: usize,
+    tick: Duration,
+    timeout: Duration,
+    next_tick: Instant,
+}
+
+impl IdleWheel {
+    fn new(timeout: Duration, now: Instant) -> Self {
+        let timeout = timeout.max(Duration::from_millis(1));
+        let tick = (timeout / 8).max(Duration::from_millis(25));
+        // enough slots to place a full timeout ahead of `cur`
+        let n = (timeout.as_micros() / tick.as_micros()) as usize + 2;
+        Self {
+            slots: vec![Vec::new(); n],
+            cur: 0,
+            tick,
+            timeout,
+            next_tick: now + tick,
+        }
+    }
+
+    /// Place `id` so its slot fires no earlier than `remaining` from now
+    /// (rounded UP to a tick — firing early would reap live connections).
+    fn schedule(&mut self, id: u64, remaining: Duration) {
+        let n = self.slots.len();
+        let ticks = ((remaining.as_micros() / self.tick.as_micros()) as usize + 1)
+            .min(n - 1);
+        let slot = (self.cur + ticks) % n;
+        self.slots[slot].push(id);
+    }
+
+    /// Drain every slot that has come due by `now`. The caller checks
+    /// each id's `last_active` and either reaps or re-schedules it.
+    fn expired(&mut self, now: Instant) -> Vec<u64> {
+        let mut due = Vec::new();
+        while now >= self.next_tick {
+            self.cur = (self.cur + 1) % self.slots.len();
+            due.append(&mut self.slots[self.cur]);
+            self.next_tick += self.tick;
+        }
+        due
+    }
+
+    /// Milliseconds until the next tick boundary — the epoll timeout that
+    /// keeps the wheel advancing while the loop is otherwise idle.
+    /// Clamped to [1 ms, 60 s]: `as_millis()` is u128, and a huge
+    /// configured timeout must not wrap the `c_int` negative (which would
+    /// degrade the idle loop into a busy poll); waking at most once a
+    /// minute costs nothing and `expired()` is driven by real time, so an
+    /// early wake never mis-fires a slot.
+    fn timeout_ms(&self, now: Instant) -> c_int {
+        let ms = self
+            .next_tick
+            .saturating_duration_since(now)
+            .as_millis()
+            .min(60_000) as c_int;
+        ms.max(1)
     }
 }
 
@@ -314,16 +426,21 @@ struct EventLoop {
     accepted: usize,
     accepting: bool,
     max_conns: Option<usize>,
+    /// Idle-connection reaper; `None` = connections may idle forever.
+    wheel: Option<IdleWheel>,
 }
 
 /// Serve every connection of `listener` from this thread with an epoll
 /// readiness loop. Returns once `max_conns` connections have been
-/// accepted AND have all closed (`None`: runs forever). Called by
-/// [`super::wire::serve_on`], which owns the sweeper lifecycle.
+/// accepted AND have all closed (`None`: runs forever). Connections
+/// silent for `idle_timeout` are reaped by a coarse timer wheel (`None`
+/// = never). Called by [`super::wire::serve_on_opts`], which owns the
+/// sweeper lifecycle.
 pub(crate) fn serve_event_loop(
     listener: TcpListener,
     front: Arc<ShardedFront>,
     max_conns: Option<usize>,
+    idle_timeout: Option<Duration>,
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
     let ep = Epoll::new()?;
@@ -346,6 +463,7 @@ pub(crate) fn serve_event_loop(
         accepted: 0,
         accepting: true,
         max_conns,
+        wheel: idle_timeout.map(|t| IdleWheel::new(t, Instant::now())),
     };
     let mut events = vec![EpollEvent { events: 0, data: 0 }; EVENT_BATCH];
     let mut accept_err: Option<anyhow::Error> = None;
@@ -358,7 +476,13 @@ pub(crate) fn serve_event_loop(
         if !lp.accepting && lp.conns.is_empty() {
             break;
         }
-        let n = lp.ep.wait(&mut events)?;
+        // with a wheel, wake at the next tick boundary so idle reaping
+        // advances even when no fd is active (n = 0 on timeout)
+        let timeout_ms = lp
+            .wheel
+            .as_ref()
+            .map_or(-1, |w| w.timeout_ms(Instant::now()));
+        let n = lp.ep.wait(&mut events, timeout_ms)?;
         for ev in &events[..n] {
             // copy packed fields by value (references into a packed
             // struct would be UB)
@@ -380,6 +504,7 @@ pub(crate) fn serve_event_loop(
                 id => lp.conn_event(id, mask),
             }
         }
+        lp.reap_idle();
     }
     match accept_err {
         Some(e) => Err(e),
@@ -396,7 +521,10 @@ impl EventLoop {
     }
 
     /// Drain the accept backlog (level-triggered: whatever is left stays
-    /// readable for the next round).
+    /// readable for the next round). Each accept is one
+    /// `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)` syscall — no per-accept
+    /// `fcntl` — with a runtime fallback to `accept` + `set_nonblocking`
+    /// the first time the kernel reports ENOSYS.
     fn accept_ready(&mut self, listener: &TcpListener) -> Result<()> {
         loop {
             if let Some(max) = self.max_conns {
@@ -404,14 +532,16 @@ impl EventLoop {
                     return Ok(()); // the loop head deregisters next round
                 }
             }
-            match listener.accept() {
+            match accept_nonblocking(listener) {
                 Ok((sock, peer)) => {
                     // same key derivation as the threaded path: peer IP,
-                    // so reconnects keep their home shard (accept(2)
-                    // hands the address over directly — the tagged
-                    // fallback key only exists for transports that must
-                    // query it after the fact)
-                    let key = ip_key(&peer.ip());
+                    // so reconnects keep their home shard; a peer address
+                    // the kernel didn't hand back (or in an unknown
+                    // family) gets the tagged fallback key, disjoint from
+                    // the IPv4 key space
+                    let key = peer
+                        .map(|ip| ip_key(&ip))
+                        .unwrap_or_else(|| fallback_key(self.accepted));
                     self.accepted += 1;
                     // a connection that can't be registered is dropped
                     // (closed), never fatal to the serving loop
@@ -438,12 +568,17 @@ impl EventLoop {
         }
     }
 
+    /// Register an accepted, ALREADY-non-blocking socket (the accept path
+    /// flips it via `accept4(SOCK_NONBLOCK)` or the fallback `fcntl`).
     fn register_conn(&mut self, sock: TcpStream, key: u64) -> Result<()> {
-        sock.set_nonblocking(true)?;
         let id = self.next_conn_id;
         self.next_conn_id += 1;
         let interest = EPOLLIN | EPOLLRDHUP;
         self.ep.add(sock.as_raw_fd(), interest, id)?;
+        let now = Instant::now();
+        if let Some(wheel) = &mut self.wheel {
+            wheel.schedule(id, wheel.timeout);
+        }
         self.conns.insert(
             id,
             Conn {
@@ -457,9 +592,41 @@ impl EventLoop {
                 registered: true,
                 eof: false,
                 dead: false,
+                last_active: now,
             },
         );
         Ok(())
+    }
+
+    /// Advance the idle wheel: reap connections silent past the timeout,
+    /// re-schedule the rest at their remaining time. A connection with an
+    /// in-flight request or an unflushed response is never reaped — only
+    /// genuinely quiescent peers are (a slow sweep or a slow-draining
+    /// client is backpressure's problem, not the reaper's).
+    fn reap_idle(&mut self) {
+        let Some(mut wheel) = self.wheel.take() else {
+            return;
+        };
+        let now = Instant::now();
+        for id in wheel.expired(now) {
+            let Some(conn) = self.conns.get(&id) else {
+                continue; // closed since it was scheduled
+            };
+            let idle = now.duration_since(conn.last_active);
+            let busy =
+                !conn.slots.is_empty() || conn.wpos < conn.wbuf.len();
+            if idle >= wheel.timeout && !busy {
+                let mut c = self.conns.remove(&id).expect("just looked up");
+                c.dead = true;
+                self.finish_or_keep(id, c); // closes + releases the lane
+            } else {
+                // still alive (or mid-request): fire again when its
+                // timeout could next elapse
+                let remaining = wheel.timeout.saturating_sub(idle);
+                wheel.schedule(id, remaining);
+            }
+        }
+        self.wheel = Some(wheel);
     }
 
     /// Readiness on a connection fd: read what's there, dispatch every
@@ -472,7 +639,11 @@ impl EventLoop {
             conn.dead = true;
         }
         if !conn.dead && !conn.eof && mask & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
-            read_ready(&mut conn);
+            if read_ready(&mut conn) > 0 {
+                // incoming bytes = the peer is alive; stamp for the
+                // idle-timeout wheel
+                conn.last_active = Instant::now();
+            }
             // frame + dispatch every complete line, compacting the read
             // buffer ONCE per round (a per-line drain would memmove the
             // whole remainder per request under pipelined bursts)
@@ -585,6 +756,48 @@ impl EventLoop {
                     }
                 }
             }
+            Ok(Op::Train { input, target }) => {
+                if let Err(e) = guard_streamable(front.model())
+                    .and_then(|()| guard_train_rows(front.model(), input.len()))
+                {
+                    conn.slots.push_back(Slot::Ready(error_response(&e)));
+                    return;
+                }
+                // training is lane-resident (the accumulator lives next
+                // to the lane state on the home shard's sweeper) — no
+                // local-fallback tier
+                try_acquire_lane(&front, &mut conn.state);
+                match conn.state.lane {
+                    Some(lane) => {
+                        let (token, reply) = self.event_reply(id);
+                        conn.slots.push_back(Slot::Waiting {
+                            token,
+                            kind: PendingKind::Train,
+                        });
+                        front
+                            .shard(conn.state.shard_idx)
+                            .submit_train(lane, input, target, reply);
+                    }
+                    None => conn.slots.push_back(Slot::Ready(error_response(
+                        &hub_full_train_error(),
+                    ))),
+                }
+            }
+            Ok(Op::Commit { alpha }) => match conn.state.lane {
+                Some(lane) => {
+                    let (token, reply) = self.event_reply(id);
+                    conn.slots.push_back(Slot::Waiting {
+                        token,
+                        kind: PendingKind::Commit,
+                    });
+                    front
+                        .shard(conn.state.shard_idx)
+                        .submit_commit(lane, alpha, reply);
+                }
+                None => conn.slots.push_back(Slot::Ready(error_response(
+                    &nothing_to_commit_error(),
+                ))),
+            },
             Ok(Op::Reset) => {
                 conn.state.clear_local();
                 match conn.state.lane {
@@ -632,7 +845,16 @@ impl EventLoop {
                 .extend_from_slice(json.to_string_compact().as_bytes());
             conn.wbuf.push(b'\n');
         }
+        let flushed_from = conn.wpos;
         flush(conn);
+        if conn.wpos > flushed_from {
+            // a reply just went out: restart the idle clock, so a client
+            // whose request spent longer than the timeout in the queue /
+            // sweep isn't reaped the instant its answer flushes — "idle"
+            // measures silence in the request-reply cadence, and the
+            // server's own processing time is not the client's silence
+            conn.last_active = Instant::now();
+        }
         if conn.wpos >= conn.wbuf.len() {
             conn.wbuf.clear();
             conn.wpos = 0;
@@ -694,11 +916,81 @@ impl EventLoop {
     }
 }
 
+/// `true` once the kernel has reported ENOSYS for `accept4` — from then
+/// on every accept takes the std `accept` + `set_nonblocking` fallback
+/// without retrying the missing syscall.
+static ACCEPT4_UNAVAILABLE: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Accept one pending connection, non-blocking and CLOEXEC from birth:
+/// `accept4(SOCK_NONBLOCK | SOCK_CLOEXEC)` — one syscall instead of
+/// accept + fcntl — falling back at runtime to `accept` +
+/// `set_nonblocking` if the kernel lacks `accept4` (ENOSYS, pre-2.6.28
+/// or odd seccomp profiles). Returns the stream plus the peer IP when
+/// the kernel handed back a parseable sockaddr (`None` → the caller
+/// mints a tagged fallback key).
+fn accept_nonblocking(
+    listener: &TcpListener,
+) -> std::io::Result<(TcpStream, Option<std::net::IpAddr>)> {
+    use std::os::unix::io::FromRawFd;
+    use std::sync::atomic::Ordering;
+    if !ACCEPT4_UNAVAILABLE.load(Ordering::Relaxed) {
+        // sockaddr_storage is 128 bytes; family is the first u16
+        let mut addr = [0u8; 128];
+        let mut len: u32 = addr.len() as u32;
+        let fd = unsafe {
+            accept4(
+                listener.as_raw_fd(),
+                addr.as_mut_ptr() as *mut c_void,
+                &mut len,
+                SOCK_NONBLOCK | SOCK_CLOEXEC,
+            )
+        };
+        if fd >= 0 {
+            // SAFETY: accept4 returned a fresh, owned socket fd
+            let sock = unsafe { TcpStream::from_raw_fd(fd) };
+            return Ok((sock, parse_peer_sockaddr(&addr, len as usize)));
+        }
+        let err = std::io::Error::last_os_error();
+        if err.raw_os_error() != Some(ENOSYS) {
+            return Err(err);
+        }
+        ACCEPT4_UNAVAILABLE.store(true, Ordering::Relaxed);
+    }
+    let (sock, peer) = listener.accept()?;
+    sock.set_nonblocking(true)?;
+    Ok((sock, Some(peer.ip())))
+}
+
+/// Decode the peer IP out of a raw sockaddr buffer: `sa_family` is the
+/// leading native-endian u16; AF_INET puts the 4 address bytes at offset
+/// 4 (`sin_addr`, after the u16 port), AF_INET6 the 16 address bytes at
+/// offset 8 (`sin6_addr`, after port + flowinfo). Anything else — or a
+/// truncated length — is unreadable and maps to `None`.
+fn parse_peer_sockaddr(buf: &[u8], len: usize) -> Option<std::net::IpAddr> {
+    use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
+    if len < 2 || buf.len() < 2 {
+        return None;
+    }
+    match u16::from_ne_bytes([buf[0], buf[1]]) {
+        AF_INET if len >= 8 => Some(IpAddr::V4(Ipv4Addr::new(
+            buf[4], buf[5], buf[6], buf[7],
+        ))),
+        AF_INET6 if len >= 24 => {
+            let mut o = [0u8; 16];
+            o.copy_from_slice(&buf[8..24]);
+            Some(IpAddr::V6(Ipv6Addr::from(o)))
+        }
+        _ => None,
+    }
+}
+
 /// Non-blocking read into the connection buffer until the socket is
 /// dry, EOF, a hard error, or the per-round fairness budget is spent
 /// (the remainder stays readable — level-triggered — and is picked up
-/// next round, after other connections get their turn).
-fn read_ready(conn: &mut Conn) {
+/// next round, after other connections get their turn). Returns the
+/// bytes taken this round (the idle-timeout activity signal).
+fn read_ready(conn: &mut Conn) -> usize {
     let mut buf = [0u8; 4096];
     let mut taken = 0usize;
     while taken < READ_BUDGET {
@@ -723,6 +1015,7 @@ fn read_ready(conn: &mut Conn) {
             }
         }
     }
+    taken
 }
 
 /// Bounds of the next complete line at/after `from`: `(end, next)` where
@@ -763,10 +1056,25 @@ fn resolve_slot(
                 predict_response(out, steps, queued_at.elapsed().as_secs_f64())
             }
             (PendingKind::Stream, Completion::Done(outs)) => stream_response(outs),
-            (PendingKind::Reset, Completion::Done(_)) => ok_response(),
-            (PendingKind::Stream | PendingKind::Reset, Completion::Dropped) => {
-                error_response(&anyhow!("batch front unavailable"))
+            (PendingKind::Train, Completion::Done(v)) => {
+                train_response(v.first().copied().unwrap_or(0.0) as u64)
             }
+            (PendingKind::Commit, Completion::Done(v)) => {
+                // the sweeper answers with a COMMIT_* code; map it to the
+                // same response the threaded wrapper produces
+                match commit_code_error(
+                    v.first().copied().unwrap_or(f64::NAN),
+                ) {
+                    None => ok_response(),
+                    Some(e) => error_response(&e),
+                }
+            }
+            (PendingKind::Reset, Completion::Done(_)) => ok_response(),
+            (
+                PendingKind::Stream | PendingKind::Train | PendingKind::Commit
+                | PendingKind::Reset,
+                Completion::Dropped,
+            ) => error_response(&anyhow!("batch front unavailable")),
         };
         *slot = Slot::Ready(json);
         return;
@@ -815,6 +1123,85 @@ mod tests {
     }
 
     #[test]
+    fn sockaddr_parsing_decodes_v4_v6_and_rejects_junk() {
+        // AF_INET, port 0x1234, 127.0.0.1
+        let mut v4 = [0u8; 128];
+        v4[..2].copy_from_slice(&AF_INET.to_ne_bytes());
+        v4[2] = 0x12;
+        v4[3] = 0x34;
+        v4[4..8].copy_from_slice(&[127, 0, 0, 1]);
+        assert_eq!(
+            parse_peer_sockaddr(&v4, 16),
+            Some("127.0.0.1".parse().unwrap())
+        );
+        // AF_INET6, ::1
+        let mut v6 = [0u8; 128];
+        v6[..2].copy_from_slice(&AF_INET6.to_ne_bytes());
+        v6[23] = 1; // last byte of the address = 1
+        assert_eq!(
+            parse_peer_sockaddr(&v6, 28),
+            Some("::1".parse().unwrap())
+        );
+        // unknown family / truncated → unreadable
+        let mut unix = [0u8; 128];
+        unix[0] = 1; // AF_UNIX
+        assert_eq!(parse_peer_sockaddr(&unix, 16), None);
+        assert_eq!(parse_peer_sockaddr(&v4, 1), None);
+        assert_eq!(parse_peer_sockaddr(&v6, 10), None);
+    }
+
+    #[test]
+    fn accept4_path_serves_a_real_connection() {
+        // exercise accept_nonblocking directly against a loopback
+        // listener: the accepted socket must be non-blocking (a read
+        // with no data errs WouldBlock instead of parking) and the peer
+        // IP must decode
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        // the connection may need a beat to land in the backlog
+        let (mut sock, peer) = loop {
+            match accept_nonblocking(&listener) {
+                Ok(got) => break got,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => panic!("accept_nonblocking: {e}"),
+            }
+        };
+        assert_eq!(peer, Some("127.0.0.1".parse().unwrap()));
+        let mut buf = [0u8; 8];
+        match sock.read(&mut buf) {
+            Err(e) => assert_eq!(
+                e.kind(),
+                ErrorKind::WouldBlock,
+                "accepted socket must be non-blocking"
+            ),
+            Ok(n) => panic!("expected WouldBlock, read {n} bytes"),
+        }
+        drop(client);
+    }
+
+    #[test]
+    fn idle_wheel_fires_after_timeout_and_not_before() {
+        let t0 = Instant::now();
+        let timeout = Duration::from_millis(400);
+        let mut wheel = IdleWheel::new(timeout, t0);
+        wheel.schedule(7, timeout);
+        // well before the timeout: the slot must not have fired
+        let early: Vec<u64> = wheel.expired(t0 + Duration::from_millis(120));
+        assert!(early.is_empty(), "fired {early:?} before the timeout");
+        // past the timeout (+ a tick of slack): it must fire
+        let late = wheel.expired(t0 + timeout + wheel.tick + wheel.tick);
+        assert_eq!(late, vec![7]);
+        // re-scheduling with remaining time lands in a later slot
+        wheel.schedule(7, Duration::from_millis(100));
+        let again = wheel.expired(t0 + timeout + Duration::from_millis(900));
+        assert_eq!(again, vec![7]);
+    }
+
+    #[test]
     fn eventfd_signal_wakes_epoll_with_its_token() {
         let ep = Epoll::new().unwrap();
         let efd = EventFd::new().unwrap();
@@ -822,7 +1209,7 @@ mod tests {
         efd.signal();
         efd.signal(); // coalesces: still one readable event
         let mut events = vec![EpollEvent { events: 0, data: 0 }; 4];
-        let n = ep.wait(&mut events).unwrap();
+        let n = ep.wait(&mut events, -1).unwrap();
         assert_eq!(n, 1);
         let token = events[0].data;
         assert_eq!(token, 9);

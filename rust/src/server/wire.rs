@@ -8,10 +8,44 @@
 //!                                               the whole sequence
 //! → {"op": "stream", "input": [u_t]}            stateful per-connection
 //!                                               streaming step
-//! → {"op": "reset"}                             zero this connection's state
+//! → {"op": "train", "input": […],               advance the connection's
+//!    "target": […]}                             state AND stream the
+//!                                               (features, target) rows
+//!                                               into its online ridge
+//!                                               accumulator
+//! → {"op": "commit", "alpha": 1e-8}             solve the accumulated
+//!                                               ridge system, hot-swap
+//!                                               this connection's readout
+//! → {"op": "reset"}                             zero this connection's
+//!                                               state AND training
 //! → {"op": "info"}
 //! ← {"ok": true, "output": […], "steps_per_sec": …}
+//! ← {"ok": true, "rows": …}                     (train)
 //! ```
+//!
+//! ## Online training (train / commit)
+//!
+//! `train` is `stream`'s training twin: the connection's hub lane
+//! advances through `input` exactly as a stream would (state evolution
+//! is identical), and each step's `(feature row, target)` pair feeds a
+//! per-lane streaming Gram accumulator on the lane's home-shard sweeper
+//! — training rides the same O(N) step that serves. `commit` solves the
+//! accumulated ridge system at the hub's precision and **atomically
+//! hot-swaps this connection's readout** (an `Arc` swap owned by the
+//! sweeper thread): subsequent `stream` calls on the connection use the
+//! committed readout; further `train` rows extend the same accumulator,
+//! so a later `commit` refines it online. `predict` (stateless, dealt
+//! across shards) always serves the model readout. `reset` — and lane
+//! recycling when the connection closes — drops the accumulator AND the
+//! committed readout, so no later connection can inherit another's
+//! training. Training needs a hub lane: connections beyond the hub's
+//! lane capacity get an error (their local-fallback state has no
+//! sweeper-side accumulator). One `train` op's row count is capped by a
+//! per-model WORK budget ([`max_train_rows`]: `2²⁸/N²` rows, clamped to
+//! `[64, 4096]`) — accumulation is `O(N²)`/row on the sweeper, so the
+//! cap bounds head-of-line blocking regardless of model size; larger
+//! streams arrive as multiple ops, which interleave with the shard's
+//! serving jobs.
 //!
 //! The protocol is unchanged from the single-front server — sharding is
 //! invisible on the wire except through `info`, which reports `shards`,
@@ -55,6 +89,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -170,12 +205,51 @@ pub fn serve_on(
     shards: Option<usize>,
     threaded: bool,
 ) -> Result<SocketAddr> {
+    serve_on_opts(
+        listener,
+        model,
+        max_requests,
+        ServeOpts {
+            holdoff_us,
+            shards,
+            threaded,
+            idle_timeout: None,
+        },
+    )
+}
+
+/// Knobs of [`serve_on_opts`] — the positional `serve_on` parameters
+/// plus the options that arrived later.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeOpts {
+    /// Sweeper coalescing window in µs (0 = drain immediately).
+    pub holdoff_us: u64,
+    /// Shard count; `None` = one per available core.
+    pub shards: Option<usize>,
+    /// Force the thread-per-connection transport (the A/B twin; the
+    /// non-Linux default either way).
+    pub threaded: bool,
+    /// Reap connections with no incoming traffic for this long (event
+    /// loop only — a coarse timer wheel in `server/poll.rs`; `None` =
+    /// never. The threaded transport parks in `read_line` and is not
+    /// covered). A connection with an in-flight request or an unflushed
+    /// response is never reaped.
+    pub idle_timeout: Option<Duration>,
+}
+
+/// [`serve_on`] with the full option set.
+pub fn serve_on_opts(
+    listener: TcpListener,
+    model: Arc<Model>,
+    max_requests: Option<usize>,
+    opts: ServeOpts,
+) -> Result<SocketAddr> {
     let addr = listener.local_addr()?;
-    let shards = shards.unwrap_or_else(default_shards);
-    let front = ShardedFront::start_with_holdoff(model, shards, holdoff_us);
-    let use_event = !threaded && cfg!(target_os = "linux");
+    let shards = opts.shards.unwrap_or_else(default_shards);
+    let front = ShardedFront::start_with_holdoff(model, shards, opts.holdoff_us);
+    let use_event = !opts.threaded && cfg!(target_os = "linux");
     let res = if use_event {
-        serve_event(listener, Arc::clone(&front), max_requests)
+        serve_event(listener, Arc::clone(&front), max_requests, opts.idle_timeout)
     } else {
         serve_threaded(&listener, &front, max_requests)
     };
@@ -188,8 +262,9 @@ fn serve_event(
     listener: TcpListener,
     front: Arc<ShardedFront>,
     max_conns: Option<usize>,
+    idle_timeout: Option<Duration>,
 ) -> Result<()> {
-    super::poll::serve_event_loop(listener, front, max_conns)
+    super::poll::serve_event_loop(listener, front, max_conns, idle_timeout)
 }
 
 #[cfg(not(target_os = "linux"))]
@@ -197,6 +272,7 @@ fn serve_event(
     _listener: TcpListener,
     _front: Arc<ShardedFront>,
     _max_conns: Option<usize>,
+    _idle_timeout: Option<Duration>,
 ) -> Result<()> {
     unreachable!("event loop is Linux-only; serve_on routes non-Linux to the threaded path")
 }
@@ -362,9 +438,65 @@ pub(crate) fn guard_streamable(model: &Model) -> Result<()> {
     Ok(())
 }
 
+/// Error for a `train` op on a connection that couldn't get a hub lane.
+/// ONE constructor for both transports — the wire-parity invariant says
+/// the event loop and the threaded path answer identically, so neither
+/// carries its own copy of the message.
+pub(crate) fn hub_full_train_error() -> anyhow::Error {
+    anyhow!(
+        "train requires a hub streaming lane (hub full); \
+         reconnect when capacity frees up"
+    )
+}
+
+/// Error for a `commit` with nothing accumulated (no lane / no rows) —
+/// shared by both transports AND by the sweeper's `COMMIT_EMPTY` code
+/// mapping, so every "premature commit" answers with the same message.
+pub(crate) fn nothing_to_commit_error() -> anyhow::Error {
+    anyhow!("nothing to commit: train some rows first")
+}
+
 // ---------------------------------------------------------------------------
 // transport-agnostic request core
 // ---------------------------------------------------------------------------
+
+/// Default ridge α for a `commit` without an explicit `"alpha"`.
+pub(crate) const DEFAULT_COMMIT_ALPHA: f64 = 1e-8;
+
+/// Absolute max rows one `train` op may carry (the parse-time sanity
+/// bound; the per-model WORK bound below is usually tighter).
+pub(crate) const MAX_TRAIN_ROWS_PER_OP: usize = 4096;
+
+/// Per-op Gram-work budget in multiply-accumulates (~0.1–0.3 s of one
+/// core). Gram accumulation is `O(F²)` per row ON THE SWEEPER THREAD,
+/// so an unbounded op would head-of-line block every other lane on the
+/// shard for its whole duration. A fixed row count only bounds the
+/// stall for small models; the row cap therefore SCALES with the model:
+/// `max_rows = WORK / N²` (clamped to [64, MAX_TRAIN_ROWS_PER_OP]).
+/// Larger training sets arrive as multiple ops, which interleave with
+/// the shard's serving jobs between queue drains. (The in-process
+/// `BatchFront::train` API is uncapped — it's not the untrusted
+/// surface.)
+const MAX_TRAIN_ROW_WORK: usize = 1 << 28;
+
+/// The work-scaled per-op row cap for a model with `n` features.
+pub(crate) fn max_train_rows(n: usize) -> usize {
+    (MAX_TRAIN_ROW_WORK / (n * n).max(1)).clamp(64, MAX_TRAIN_ROWS_PER_OP)
+}
+
+/// Reject a `train` op whose row count exceeds the model's work-scaled
+/// cap — shared by both transports so the error is identical on the
+/// wire.
+pub(crate) fn guard_train_rows(model: &Model, rows: usize) -> Result<()> {
+    let cap = max_train_rows(model.esn.n());
+    anyhow::ensure!(
+        rows <= cap,
+        "train op too large ({rows} rows; max {cap} per op at N={} — \
+         split the stream across multiple ops)",
+        model.esn.n()
+    );
+    Ok(())
+}
 
 /// A classified request line. Parsing is transport-independent; the
 /// transports differ only in how they wait for the shard queues.
@@ -372,6 +504,8 @@ pub(crate) enum Op {
     Info,
     Predict(Vec<f64>),
     Stream(Vec<f64>),
+    Train { input: Vec<f64>, target: Vec<f64> },
+    Commit { alpha: f64 },
     Reset,
 }
 
@@ -385,6 +519,36 @@ pub(crate) fn parse_op(line: &str) -> Result<Op> {
         "info" => Ok(Op::Info),
         "predict" => Ok(Op::Predict(parse_input(&req)?)),
         "stream" => Ok(Op::Stream(parse_input(&req)?)),
+        "train" => {
+            let input = parse_input(&req)?;
+            let target = parse_vec(&req, "target")?;
+            anyhow::ensure!(
+                input.len() == target.len(),
+                "train input/target length mismatch ({} vs {})",
+                input.len(),
+                target.len()
+            );
+            anyhow::ensure!(
+                input.len() <= MAX_TRAIN_ROWS_PER_OP,
+                "train op too large ({} rows; max {MAX_TRAIN_ROWS_PER_OP} \
+                 per op — split the stream across multiple ops)",
+                input.len()
+            );
+            Ok(Op::Train { input, target })
+        }
+        "commit" => {
+            let alpha = match req.get("alpha") {
+                None => DEFAULT_COMMIT_ALPHA,
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("non-numeric 'alpha'"))?,
+            };
+            anyhow::ensure!(
+                alpha.is_finite() && alpha >= 0.0,
+                "'alpha' must be a finite non-negative number"
+            );
+            Ok(Op::Commit { alpha })
+        }
         "reset" => Ok(Op::Reset),
         other => Err(anyhow!("unknown op {other:?}")),
     }
@@ -441,6 +605,15 @@ pub(crate) fn stream_response(outs: Vec<f64>) -> Json {
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("output", Json::Arr(outs.into_iter().map(Json::Num).collect())),
+    ])
+}
+
+/// `train` reply: the lane's TOTAL accumulated row count (not just this
+/// op's), so a client can track its online training set size.
+pub(crate) fn train_response(rows: u64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("rows", Json::Num(rows as f64)),
     ])
 }
 
@@ -526,6 +699,27 @@ fn handle_request(
             };
             Ok(stream_response(outs))
         }
+        Op::Train { input, target } => {
+            guard_streamable(model)?;
+            guard_train_rows(model, input.len())?;
+            // training is lane-resident: the Gram accumulator lives next
+            // to the lane state on the home shard's sweeper
+            try_acquire_lane(front, conn);
+            match conn.lane {
+                Some(l) => {
+                    let rows = home.train(l, input, target)?;
+                    Ok(train_response(rows))
+                }
+                None => Err(hub_full_train_error()),
+            }
+        }
+        Op::Commit { alpha } => match conn.lane {
+            Some(l) => {
+                home.commit(l, alpha)?;
+                Ok(ok_response())
+            }
+            None => Err(nothing_to_commit_error()),
+        },
         Op::Reset => {
             if let Some(l) = conn.lane {
                 home.reset(l)?;
@@ -545,23 +739,23 @@ fn stream_local(model: &Model, input: &[f64], local: &mut LocalStream) -> Vec<f6
     for &u in input {
         model.esn.step(&mut local.s_re, &mut local.s_im, &[u]);
         model.esn.write_features(&local.s_re, &local.s_im, &mut feat);
-        // y = b + feat·w (bias-first: the shared accumulation contract)
-        let mut y = model.readout.b[0];
-        for (j, &f) in feat.iter().enumerate() {
-            y += f * model.readout.w[(j, 0)];
-        }
-        outs.push(y);
+        // bias-first ascending-feature: the shared accumulation contract
+        outs.push(model.readout.apply_row(&feat, 0));
     }
     outs
 }
 
-fn parse_input(req: &Json) -> Result<Vec<f64>> {
-    req.get("input")
+fn parse_vec(req: &Json, field: &str) -> Result<Vec<f64>> {
+    req.get(field)
         .and_then(Json::as_arr)
-        .ok_or_else(|| anyhow!("missing 'input' array"))?
+        .ok_or_else(|| anyhow!("missing '{field}' array"))?
         .iter()
-        .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric input")))
+        .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric {field}")))
         .collect()
+}
+
+fn parse_input(req: &Json) -> Result<Vec<f64>> {
+    parse_vec(req, "input")
 }
 
 /// Minimal client for the examples/tests.
@@ -630,6 +824,47 @@ impl Client {
     /// Stateful streaming step(s) on this connection's lane.
     pub fn stream(&mut self, input: &[f64]) -> Result<Vec<f64>> {
         self.io_op("stream", input)
+    }
+
+    /// Online training step(s): advance this connection's state over
+    /// `input` and accumulate `(features, target)` rows server-side.
+    /// Returns the lane's total accumulated row count.
+    pub fn train(&mut self, input: &[f64], target: &[f64]) -> Result<u64> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("train".into())),
+            (
+                "input",
+                Json::Arr(input.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+            (
+                "target",
+                Json::Arr(target.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+        ]);
+        let resp = self.request(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        resp.get("rows")
+            .and_then(Json::as_f64)
+            .map(|r| r as u64)
+            .ok_or_else(|| anyhow!("missing rows"))
+    }
+
+    /// Solve the accumulated ridge system and hot-swap this connection's
+    /// readout; subsequent [`Self::stream`] calls use it.
+    pub fn commit(&mut self, alpha: f64) -> Result<()> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("commit".into())),
+            ("alpha", Json::Num(alpha)),
+        ]);
+        let resp = self.request(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        Ok(())
     }
 }
 
@@ -805,6 +1040,51 @@ mod tests {
         handle.join().unwrap();
     }
 
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn event_loop_reaps_parked_connections_after_idle_timeout() {
+        // a connection that goes silent past --idle-timeout-s is closed
+        // by the timer wheel; an active round-trip first proves the
+        // timeout only bites SILENT connections
+        use std::time::{Duration, Instant};
+        let model = Arc::new(make_model());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server_model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                server_model,
+                Some(1),
+                ServeOpts {
+                    shards: Some(1),
+                    idle_timeout: Some(Duration::from_millis(300)),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let task = MsoTask::new(1);
+        // activity works and resets the idle clock
+        let out = c.predict(&task.input[..10]).unwrap();
+        assert_eq!(out.len(), 10);
+        // park silently; the wheel must reap us and (max_conns = 1) the
+        // server must exit — observed as EOF on the next read
+        let t0 = Instant::now();
+        let r = c.recv();
+        let waited = t0.elapsed();
+        assert!(
+            r.is_err(),
+            "expected the server to close the parked connection, got {r:?}"
+        );
+        assert!(
+            waited >= Duration::from_millis(150),
+            "reaped suspiciously fast ({waited:?}) — before the timeout"
+        );
+        handle.join().unwrap();
+    }
+
     #[test]
     fn event_loop_matches_threaded_bitwise_at_both_precisions() {
         // the tentpole contract: the epoll transport must be invisible —
@@ -842,6 +1122,102 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn train_commit_stream_hot_swaps_on_both_transports() {
+        // the acceptance contract: a wire-driven train→commit→stream
+        // must change predictions EXACTLY as a locally fitted readout
+        // would — on the event loop and the threaded twin alike
+        use crate::linalg::Mat;
+        use crate::readout::GramAcc;
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let train_in = &task.input[..150];
+        let target: Vec<f64> =
+            train_in.iter().map(|x| 0.5 - 2.0 * x).collect();
+        let stream_in = &task.input[150..190];
+        let alpha = 1e-8;
+
+        // local reference: same trajectory (hub lanes are bit-identical
+        // to the sequential QBasisEsn), same accumulator, same solve
+        let u = Mat::from_rows(train_in.len(), 1, train_in);
+        let x = model.qesn.run(&u);
+        let y = Mat::from_rows(target.len(), 1, &target);
+        let mut acc = GramAcc::<f64>::new(model.esn.n(), 1);
+        acc.push_rows(&x, &y);
+        let want_ro = acc.solve_scaled(alpha, 1.0).unwrap();
+        let all: Vec<f64> =
+            train_in.iter().chain(stream_in).copied().collect();
+        let u_all = Mat::from_rows(all.len(), 1, &all);
+        let x_all = model.qesn.run(&u_all);
+        let want: Vec<f64> = (150..190)
+            .map(|t| want_ro.apply_row(x_all.row(t), 0))
+            .collect();
+        let model_y: Vec<f64> = {
+            let y_all = model.qesn.run_readout(&u_all, &model.readout);
+            (150..190).map(|t| y_all[(t, 0)]).collect()
+        };
+
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 1, Some(2), threaded);
+            let mut c = Client::connect(&addr).unwrap();
+            // split the training stream: accumulation must be
+            // chunking-invariant over the wire too
+            assert_eq!(c.train(&train_in[..70], &target[..70]).unwrap(), 70);
+            assert_eq!(c.train(&train_in[70..], &target[70..]).unwrap(), 150);
+            c.commit(alpha).unwrap();
+            let got = c.stream(stream_in).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() == 0.0,
+                    "threaded={threaded} t={t}: hot-swapped stream \
+                     diverged from the local fit: {a} vs {b}"
+                );
+            }
+            // and the swap is observable vs the model readout
+            assert!(
+                got.iter().zip(&model_y).any(|(a, b)| a != b),
+                "threaded={threaded}: committed readout unobservable"
+            );
+            drop(c);
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn commit_without_training_is_a_clean_error_on_both_transports() {
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 1, Some(1), threaded);
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c
+                .request(&Json::obj(vec![("op", Json::Str("commit".into()))]))
+                .unwrap();
+            assert_eq!(
+                resp.get("ok"),
+                Some(&Json::Bool(false)),
+                "threaded={threaded}: premature commit must refuse"
+            );
+            // the connection survives and serves on
+            let out = c.predict(&task.input[..15]).unwrap();
+            assert_eq!(out.len(), 15);
+            // mismatched train lengths are rejected at parse, cleanly
+            let resp = c
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("train".into())),
+                    ("input", Json::Arr(vec![Json::Num(0.1), Json::Num(0.2)])),
+                    ("target", Json::Arr(vec![Json::Num(0.3)])),
+                ]))
+                .unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            drop(c);
+            handle.join().unwrap();
         }
     }
 

@@ -20,8 +20,13 @@
 //! with `C = 32` margin. Both scale with `T·(1−|λ|max)⁻¹` in the regime
 //! where `T` is below the horizon, and saturate past it.
 
+use linear_reservoir::coordinator::WorkerPool;
 use linear_reservoir::linalg::Mat;
-use linear_reservoir::readout::Readout;
+use linear_reservoir::metrics::nrmse;
+use linear_reservoir::readout::{GramAcc, GramStats, Readout};
+use linear_reservoir::reservoir::parallel::{
+    run_parallel_batch_train_prec, TrainSpec,
+};
 use linear_reservoir::reservoir::{BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn};
 use linear_reservoir::rng::{Distributions, Pcg64};
 use linear_reservoir::spectral::uniform::uniform_spectrum;
@@ -290,6 +295,209 @@ fn prop_lane_results_independent_of_batch_position_both_precisions() {
         case::<f64>(&q, &input, &ro, (b1, p1), (b2, p2), rng)?;
         case::<f32>(&q, &input, &ro, (b1, p1), (b2, p2), rng)
     });
+}
+
+// ---------------------------------------------------------------------------
+// training stack: streaming Gram accumulation + precision budget
+// ---------------------------------------------------------------------------
+
+fn copy_rows(m: &Mat, lo: usize, hi: usize) -> Mat {
+    let mut out = Mat::zeros(hi - lo, m.cols());
+    for (r, t) in (lo..hi).enumerate() {
+        out.row_mut(r).copy_from_slice(m.row(t));
+    }
+    out
+}
+
+#[test]
+fn prop_chunked_gram_acc_push_and_merge_bit_identical_to_monolithic() {
+    // the streaming accumulator's exactness contract at f64:
+    //  (a) ANY chunking of a row stream into one GramAcc ≡ the monolithic
+    //      GramStats::new over the same rows (the carry keeps the rank-2
+    //      pairing aligned across chunk boundaries), and
+    //  (b) a merge of two independently-chunked streams ≡ the merge of
+    //      their monolithic one-push accumulators (chunking-invariance
+    //      composes through the deterministic reduction).
+    // Bitwise comparison surface: the solved ridge readouts (a
+    // deterministic function of the statistics).
+    check("GramAcc push/merge ≡ GramStats::new (f64, bitwise)", 16, |rng| {
+        let t = 20 + rng.next_below(180) as usize;
+        let f = 2 + rng.next_below(10) as usize;
+        let d = 1 + rng.next_below(3) as usize;
+        let x = Mat::randn(t, f, rng);
+        let y = Mat::randn(t, d, rng);
+        let solve_points = [(1e-6, 1.0), (0.3, 0.05)];
+
+        // (a) random chunking vs monolithic
+        let mut acc = GramAcc::<f64>::new(f, d);
+        let mut lo = 0;
+        while lo < t {
+            let len = 1 + rng.next_below((t - lo) as u64) as usize;
+            acc.push_rows(&copy_rows(&x, lo, lo + len), &copy_rows(&y, lo, lo + len));
+            lo += len;
+        }
+        let mono = GramStats::new(&x, &y);
+        for (alpha, s) in solve_points {
+            let got = acc.solve_scaled(alpha, s).map_err(|e| e.to_string())?;
+            let want = mono.solve_scaled(alpha, s).map_err(|e| e.to_string())?;
+            if got.w.data() != want.w.data() || got.b != want.b {
+                return Err(format!(
+                    "t={t} f={f} d={d} α={alpha} s={s}: chunked push \
+                     diverged from GramStats::new"
+                ));
+            }
+        }
+
+        // (b) split + merge, each side randomly chunked
+        let k = rng.next_below(t as u64 + 1) as usize;
+        let chunked = |rng: &mut Pcg64, lo0: usize, hi: usize| {
+            let mut a = GramAcc::<f64>::new(f, d);
+            let mut lo = lo0;
+            while lo < hi {
+                let len = 1 + rng.next_below((hi - lo) as u64) as usize;
+                a.push_rows(
+                    &copy_rows(&x, lo, lo + len),
+                    &copy_rows(&y, lo, lo + len),
+                );
+                lo += len;
+            }
+            a
+        };
+        let mut merged = chunked(&mut *rng, 0, k);
+        merged.merge(chunked(&mut *rng, k, t));
+        // reference: one-push (monolithic) per stream, merged in order
+        let mut want = GramAcc::<f64>::new(f, d);
+        want.push_rows(&copy_rows(&x, 0, k), &copy_rows(&y, 0, k));
+        let mut right = GramAcc::<f64>::new(f, d);
+        right.push_rows(&copy_rows(&x, k, t), &copy_rows(&y, k, t));
+        want.merge(right);
+        for (alpha, s) in solve_points {
+            let got = merged.solve_scaled(alpha, s).map_err(|e| e.to_string())?;
+            let ref_ro = want.solve_scaled(alpha, s).map_err(|e| e.to_string())?;
+            if got.w.data() != ref_ro.w.data() || got.b != ref_ro.b {
+                return Err(format!(
+                    "t={t} k={k}: merged chunked streams diverged from \
+                     merged monolithic streams"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn f32_fused_training_nrmse_within_conditioned_budget_of_f64() {
+    // END-TO-END f32 training (state scan + Gram accumulation + ridge
+    // solve, all at f32) vs the all-f64 oracle on a next-step-forecast
+    // task. Error model (the PR-2 budget extended through the normal
+    // equations): feature rounding reaches the statistics amplified by
+    // the memory horizon H = min(T, (1−ρ)⁻¹); the solve amplifies the
+    // relative statistic perturbation by at most the ridge condition
+    // proxy κ = 1 + λmax(G)/α ≤ 1 + trace(G)/α; the prediction error is
+    // that relative error times the readout amplitude; NRMSE divides by
+    // the target std. With C = 32 margin:
+    //
+    //   |nrmse32 − nrmse64| ≤ C·ε₃₂·H·κ·amp / σ_y
+    let n = 64;
+    let rho = 0.9;
+    let t_total = 600;
+    let train = 100..500;
+    let test = 500..600;
+    let config = EsnConfig::default().with_n(n).with_seed(77);
+    let mut rng = Pcg64::new(77, 170);
+    let spec = uniform_spectrum(n, rho, &mut rng);
+    let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+    // sine-mixture next-step forecast
+    let series: Vec<f64> = (0..=t_total)
+        .map(|t| (0.2 * t as f64).sin() + (0.311 * t as f64).sin())
+        .collect();
+    let u = Mat::from_rows(t_total, 1, &series[..t_total]);
+    let y_train = Mat::from_rows(
+        train.len(),
+        1,
+        &series[train.start + 1..train.end + 1],
+    );
+    let y_test = Mat::from_rows(
+        test.len(),
+        1,
+        &series[test.start + 1..test.end + 1],
+    );
+    let pool = WorkerPool::new(2);
+    let tspec = TrainSpec {
+        train: train.clone(),
+        // materialize the test span (for evaluation) and the train span
+        // (only to compute the budget's trace term — the f32 path never
+        // sees it)
+        eval: vec![test.clone(), train.clone()],
+    };
+
+    let (a64, mut evals) = run_parallel_batch_train_prec::<f64>(
+        &esn,
+        std::slice::from_ref(&u),
+        std::slice::from_ref(&y_train),
+        std::slice::from_ref(&tspec),
+        &pool,
+        128,
+    );
+    let mut spans = evals.pop().unwrap();
+    let x_train = spans.pop().unwrap();
+    let x_test = spans.pop().unwrap();
+    let (a32, _) = run_parallel_batch_train_prec::<f32>(
+        &esn,
+        std::slice::from_ref(&u),
+        std::slice::from_ref(&y_train),
+        std::slice::from_ref(&tspec),
+        &pool,
+        128,
+    );
+
+    // α relative to the Gram scale: trace(G) = Σ_t ‖x_t‖²
+    let trace: f64 = x_train.data().iter().map(|v| v * v).sum();
+    let alpha = 1e-3 * trace;
+    let ro64 = a64.solve_scaled(alpha, 1.0).unwrap();
+    let ro32 = a32.solve_scaled(alpha, 1.0).unwrap();
+    // both evaluated on the SAME f64 test features: the delta isolates
+    // the training path (accumulate + solve), which is what's budgeted
+    let nrmse64 = nrmse(&ro64.predict(&x_test), &y_test);
+    let nrmse32 = nrmse(&ro32.predict(&x_test), &y_test);
+    assert!(
+        nrmse64 < 0.5,
+        "fused f64 training failed to learn the task: NRMSE {nrmse64}"
+    );
+    assert!(nrmse32.is_finite(), "f32 training produced non-finite NRMSE");
+
+    let hor = horizon(train.len(), rho);
+    let kappa = 1.0 + trace / alpha;
+    // readout amplitude the rounding passes through (f64 fit, no
+    // cancellation credit)
+    let mut amp = 0.0f64;
+    for t in 0..x_test.rows() {
+        let row = x_test.row(t);
+        let mut s = ro64.b[0].abs();
+        for (j, &f) in row.iter().enumerate() {
+            s += (f * ro64.w[(j, 0)]).abs();
+        }
+        amp = amp.max(s);
+    }
+    let sigma_y = {
+        let m = y_test.data().iter().sum::<f64>() / y_test.rows() as f64;
+        (y_test.data().iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / y_test.rows() as f64)
+            .sqrt()
+            .max(1e-30)
+    };
+    let budget = C_BOUND * EPS32 * hor * kappa * amp / sigma_y;
+    let delta = (nrmse32 - nrmse64).abs();
+    assert!(
+        delta <= budget,
+        "f32 training NRMSE delta {delta:.3e} exceeds budget {budget:.3e} \
+         (nrmse64={nrmse64:.3e}, nrmse32={nrmse32:.3e}, κ={kappa:.1e}, H={hor:.1})"
+    );
+    // and the f32 path genuinely ran at f32
+    assert!(
+        ro64.w.max_abs_diff(&ro32.w) > 0.0,
+        "f32 training suspiciously exact (ran at f64?)"
+    );
 }
 
 #[test]

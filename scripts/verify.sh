@@ -5,12 +5,13 @@
 # the batched lane engine (the scalar twin of the chunked/branchless
 # kernels must stay bit-identical), and the quick reservoir bench (which
 # includes the f32/f64 precision-ladder rows, the sharded serving rows,
-# and the epoll event-loop wire rows), persisting the machine-readable
-# perf snapshot as BENCH_pr4.json at the repo root — the committed
-# perf-trajectory artifact (BENCH_reservoir_run.json is kept as an
-# uncommitted working copy for tooling that greps the legacy name).
-# Fails if the precision, sharding, or event-loop rows are missing,
-# non-finite, or report zero throughput.
+# the epoll event-loop wire rows, and the fused/online training rows),
+# persisting the machine-readable perf snapshot as BENCH_pr5.json at the
+# repo root — the committed perf-trajectory artifact
+# (BENCH_reservoir_run.json is kept as an uncommitted working copy for
+# tooling that greps the legacy name).
+# Fails if the precision, sharding, event-loop, or training rows are
+# missing, non-finite, or report zero throughput.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -23,16 +24,16 @@ cargo test -q
 echo "== cargo test -q --features plain-kernel --lib reservoir::batch (A/B twin) =="
 cargo test -q --features plain-kernel --lib reservoir::batch
 
-echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_pr4.json =="
-cargo bench --bench reservoir_run -- --quick --json BENCH_pr4.json
-cp BENCH_pr4.json BENCH_reservoir_run.json
+echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_pr5.json =="
+cargo bench --bench reservoir_run -- --quick --json BENCH_pr5.json
+cp BENCH_pr5.json BENCH_reservoir_run.json
 
-echo "== bench sanity: precision/sharded/evloop rows present, finite, non-zero =="
+echo "== bench sanity: precision/sharded/evloop/training rows present, finite, non-zero =="
 if command -v python3 >/dev/null 2>&1; then
   python3 - <<'EOF'
 import json, math, sys
 
-doc = json.load(open("BENCH_pr4.json"))
+doc = json.load(open("BENCH_pr5.json"))
 rows = {r.get("name"): r for r in doc.get("results", [])}
 required = [
     "f32_batch8_N1000", "f64_batch8_N1000",
@@ -43,6 +44,8 @@ required = [
     "evloop_idle128_predict16_N1000",
     "evloop_mixed_stream16_predict16_N1000",
     "derived_evloop_N1000",
+    "train_fused_f64_N1000", "train_fused_f32_N1000",
+    "train_online_wire_N1000", "derived_train_N1000",
 ]
 for name in required:
     if name not in rows:
@@ -52,7 +55,7 @@ for name, row in rows.items():
         if isinstance(val, float):
             if not math.isfinite(val):
                 sys.exit(f"FAIL: non-finite {key} in row {name}: {val}")
-            if key.endswith("steps_per_sec") and val <= 0:
+            if key.endswith(("steps_per_sec", "rows_per_sec")) and val <= 0:
                 sys.exit(f"FAIL: zero throughput {key} in row {name}")
             if key == "median_s" and val <= 0:
                 sys.exit(f"FAIL: zero-time bench row {name}")
@@ -69,6 +72,10 @@ d = rows["derived_evloop_N1000"]
 print(f"  evloop: idle-loaded predicts {d['idle_predict_steps_per_sec']:.3e} steps/s, "
       f"mixed {d['mixed_steps_per_sec']:.3e} steps/s "
       f"({int(d['idle_conns'])} idle conns)")
+d = rows["derived_train_N1000"]
+print(f"  training: fused f64 {d['f64_rows_per_sec']:.3e} rows/s, "
+      f"f32 {d['f32_rows_per_sec']:.3e} rows/s ({d['f32_over_f64']:.2f}x), "
+      f"online wire {d['online_wire_rows_per_sec']:.3e} rows/s")
 print("bench rows OK")
 EOF
 else
@@ -78,17 +85,19 @@ else
              sharded2_batch64_N1000 sharded4_batch64_N1000 \
              derived_sharded_batch64_N1000 \
              evloop_idle128_predict16_N1000 \
-             evloop_mixed_stream16_predict16_N1000 derived_evloop_N1000; do
-    grep -q "\"$row\"" BENCH_pr4.json \
+             evloop_mixed_stream16_predict16_N1000 derived_evloop_N1000 \
+             train_fused_f64_N1000 train_fused_f32_N1000 \
+             train_online_wire_N1000 derived_train_N1000; do
+    grep -q "\"$row\"" BENCH_pr5.json \
       || { echo "FAIL: missing bench row $row"; exit 1; }
   done
-  if grep -qiE '(nan|inf)' BENCH_pr4.json; then
-    echo "FAIL: non-finite value in BENCH_pr4.json"; exit 1
+  if grep -qiE '(nan|inf)' BENCH_pr5.json; then
+    echo "FAIL: non-finite value in BENCH_pr5.json"; exit 1
   fi
   # the JSON writer prints integral values without decimals, so a zero
   # throughput is exactly `0` before the comma/EOL (0.97 must NOT match)
-  if grep -qE 'steps_per_sec": *(0(,|$)|-)' BENCH_pr4.json; then
-    echo "FAIL: zero throughput row in BENCH_pr4.json"; exit 1
+  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr5.json; then
+    echo "FAIL: zero throughput row in BENCH_pr5.json"; exit 1
   fi
   echo "bench rows OK (grep fallback)"
 fi
