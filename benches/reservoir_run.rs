@@ -518,6 +518,108 @@ fn main() {
         ]));
     }
 
+    // --- fault-tolerant lifecycle: checkpoint/restore + failover storm --
+    // PR6's acceptance rows. `checkpoint_restore_N1000` times one full
+    // wire round of checkpoint → restore on a warm N=1000 lane (the
+    // warm-failover primitive's latency). `derived_failover_N1000` runs a
+    // restart storm: repeated cycles of stream → checkpoint → failover →
+    // reconnect → restore → continue, reporting sustained steps/sec
+    // across the whole storm. With `--features fault-inject` each cycle's
+    // failover is a REAL contained sweeper panic (the lane is poisoned
+    // and recovered through restore); without the feature the cycle
+    // exercises the same client-side failover path via teardown +
+    // reconnect. Rows run in quick mode too — they are the acceptance
+    // artifact for the fault-tolerance work.
+    {
+        let n = 1000;
+        let cycles = if quick { 4usize } else { 8 };
+        let chunk_len = 250usize;
+        println!("fault-tolerant lifecycle, N = {n}, storm cycles = {cycles}");
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(17, 115);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let model = Arc::new(Model::new(diag, readout));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server_model = Arc::clone(&model);
+        // conn #1 warms and runs the latency row; the storm reconnects
+        // once per cycle
+        let max_conns = 1 + cycles;
+        let server = std::thread::spawn(move || {
+            serve_on(listener, server_model, Some(max_conns), 0, Some(1), false)
+                .unwrap();
+        });
+        let input: Vec<f64> = Mat::randn(t_len, 1, &mut rng).data().to_vec();
+        let mut client = Client::connect(&addr).unwrap();
+        let warm = client.stream(&input[..chunk_len]).unwrap();
+        assert_eq!(warm.len(), chunk_len);
+
+        // restore latency: one checkpoint + one restore per iteration,
+        // full wire path (snapshot encode + JSON + TCP + sweeper install)
+        let r_cp = bench(&format!("checkpoint_restore_N{n}"), cfg, || {
+            let cp = client.checkpoint().expect("checkpoint");
+            std::hint::black_box(client.restore(&cp).expect("restore"));
+        });
+        push(&mut rows, &r_cp);
+
+        // failover storm: every cycle checkpoints, suffers a failover,
+        // reconnects, restores, and keeps streaming
+        let storm_t0 = std::time::Instant::now();
+        let mut streamed = 0usize;
+        for cycle in 0..cycles {
+            let off = (cycle * chunk_len) % (t_len - chunk_len);
+            let out = client.stream(&input[off..off + chunk_len]).unwrap();
+            assert_eq!(out.len(), chunk_len);
+            streamed += chunk_len;
+            let cp = client.checkpoint().expect("storm checkpoint");
+            #[cfg(feature = "fault-inject")]
+            {
+                // a real contained sweeper panic: the in-flight stream
+                // answers the typed error and the lane is quarantined
+                linear_reservoir::server::fault::arm_sweeper_panic(1);
+                assert!(
+                    client.stream(&input[..1]).is_err(),
+                    "armed panic must fail the in-flight stream"
+                );
+            }
+            drop(client);
+            client = Client::connect(&addr).unwrap();
+            let v = client.restore(&cp).expect("storm restore");
+            std::hint::black_box(v);
+        }
+        let storm_secs = storm_t0.elapsed().as_secs_f64();
+        let storm_sps = streamed as f64 / storm_secs;
+        #[cfg(feature = "fault-inject")]
+        linear_reservoir::server::fault::disarm();
+        drop(client);
+        server.join().unwrap();
+        println!(
+            "  restore round trip: {:.3e}s | storm: {streamed} steps across \
+             {cycles} failovers → {:.3e} steps/s\n",
+            r_cp.per_iter.median, storm_sps
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("derived_failover_N{n}"))),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("cycles", Json::Num(cycles as f64)),
+            ("chunk", Json::Num(chunk_len as f64)),
+            (
+                "real_sweeper_panics",
+                Json::Bool(cfg!(feature = "fault-inject")),
+            ),
+            ("storm_steps_per_sec", Json::Num(storm_sps)),
+            (
+                "restore_round_trip_sec",
+                Json::Num(r_cp.per_iter.median),
+            ),
+        ]));
+    }
+
     if let Some(path) = json_path {
         let doc = Json::obj(vec![
             ("bench", Json::Str("reservoir_run".into())),

@@ -117,7 +117,7 @@ fn main() -> anyhow::Result<()> {
     //
     //       {"op":"train","input":[u0,u1,…],"target":[y0,y1,…]}
     //         ← {"ok":true,"rows":N}       (lane's total training rows)
-    //       {"op":"commit","alpha":1e-6}   ← {"ok":true}
+    //       {"op":"commit","alpha":1e-6}   ← {"ok":true,"version":1}
     //       {"op":"stream","input":[u…]}   ← predictions from YOUR
     //                                        freshly committed readout
     //
@@ -126,5 +126,28 @@ fn main() -> anyhow::Result<()> {
     //     `reservoir::parallel::run_parallel_batch_train` — the batched
     //     scan streaming rows into `readout::GramAcc` without ever
     //     materializing the [T×N] training block.
+
+    // 11. FAULT TOLERANCE: a connection's full lane value — streaming
+    //     state, trainer accumulator, committed readout + version ring —
+    //     round-trips through `checkpoint`/`restore` bit-exactly, on
+    //     either transport, across reconnects, and across servers built
+    //     from the same model (warm failover / lane migration):
+    //
+    //       {"op":"checkpoint"}               ← {"ok":true,"checkpoint":{…}}
+    //       …connection dies / sweeper panics / lane migrates…
+    //       {"op":"restore","checkpoint":{…}} ← {"ok":true,"version":v}
+    //       {"op":"stream","input":[u…]}      ← bit-identical continuation
+    //
+    //     `commit` returns a monotonic version id and the sweeper keeps a
+    //     bounded per-lane ring of committed readouts, so
+    //     `{"op":"rollback","version":1}` atomically reinstates an
+    //     earlier readout (0 = the deployed model's) WITHOUT dropping the
+    //     accumulated training rows. Every degradation is a typed error
+    //     code (`lane_poisoned`, `trainer_budget`, `unavailable`, …) —
+    //     DESIGN.md §10 has the full contract, `--trainer-budget-mb`
+    //     caps sweeper training memory, and the `fault-inject` cargo
+    //     feature arms the deterministic chaos harness
+    //     (`rust/tests/chaos.rs`). In-process: `Client::checkpoint` /
+    //     `restore` / `rollback`.
     Ok(())
 }

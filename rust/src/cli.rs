@@ -75,6 +75,20 @@ impl Args {
         }
     }
 
+    /// Like [`get_u64`](Self::get_u64) but with no default: `None` when
+    /// the option is absent, so callers can distinguish "unset" from any
+    /// sentinel value (e.g. `--trainer-budget-mb` where absence means
+    /// unlimited).
+    pub fn get_opt_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.opts.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} expects an integer: {e}")),
+        }
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.opts.get(name) {
             None => Ok(default),
@@ -125,5 +139,15 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("x --n abc").unwrap();
         assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn optional_u64_distinguishes_absent_from_zero() {
+        let a = parse("serve --trainer-budget-mb 0").unwrap();
+        assert_eq!(a.get_opt_u64("trainer-budget-mb").unwrap(), Some(0));
+        let b = parse("serve").unwrap();
+        assert_eq!(b.get_opt_u64("trainer-budget-mb").unwrap(), None);
+        let c = parse("serve --trainer-budget-mb lots").unwrap();
+        assert!(c.get_opt_u64("trainer-budget-mb").is_err());
     }
 }

@@ -17,6 +17,8 @@
 //!                                    # (0 = never; event loop only)
 //!              [--threaded]   # thread-per-connection A/B transport
 //!                             # (default: epoll event loop on Linux)
+//!              [--trainer-budget-mb M]  # cap per-shard trainer
+//!                                       # memory (absent = unlimited)
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -262,6 +264,13 @@ fn dispatch(args: &Args) -> Result<()> {
             let idle_s = args.get_u64("idle-timeout-s", 0)?;
             let idle_timeout =
                 (idle_s > 0).then(|| std::time::Duration::from_secs(idle_s));
+            // --trainer-budget-mb: cap trainer-accumulator memory per
+            // shard; training past it answers the typed
+            // `trainer_budget` error. Absent = unlimited (`--trainer-
+            // budget-mb 0` refuses all training, which is also valid).
+            let trainer_budget = args
+                .get_opt_u64("trainer-budget-mb")?
+                .map(|mb| (mb as usize) << 20);
             let listener = std::net::TcpListener::bind(addr)?;
             let bound = listener.local_addr()?;
             // the timer wheel lives in the event loop; on the threaded
@@ -269,7 +278,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // say so instead of printing it as active
             let event_loop = !threaded && cfg!(target_os = "linux");
             println!(
-                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, idle-timeout {}, {}) on {bound} …",
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, idle-timeout {}, trainer-budget {}, {}) on {bound} …",
                 precision.name(),
                 match shards {
                     Some(s) => s.to_string(),
@@ -280,6 +289,10 @@ fn dispatch(args: &Args) -> Result<()> {
                     _ if !event_loop =>
                         "off (threaded transport has no idle reaper)".into(),
                     s => format!("{s}s"),
+                },
+                match trainer_budget {
+                    None => "unlimited".into(),
+                    Some(b) => format!("{}MiB", b >> 20),
                 },
                 if event_loop {
                     "epoll event loop"
@@ -296,6 +309,7 @@ fn dispatch(args: &Args) -> Result<()> {
                     shards,
                     threaded,
                     idle_timeout,
+                    trainer_budget,
                 },
             )
             .map(|_| ())

@@ -42,12 +42,50 @@
 //! never round-trips through f64 arithmetic. At `f64`,
 //! `solve_scaled` is bit-identical to `GramStats::solve_scaled` (tested).
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::linalg::{Cholesky, CholeskyPrec, Lu, Mat};
 use crate::num::Scalar;
 
 use super::{GramStats, Readout};
+
+/// Precision-erased snapshot of a [`GramAcc`] — every accumulated
+/// statistic widened to f64 (lossless for both `S = f64` and `S = f32`),
+/// plus the pending unpaired carry row. This is the wire/lane-migration
+/// form of a trainer: [`GramAcc::export_raw`] ∘ [`GramAcc::from_raw`]
+/// round-trips the accumulator **bit-exactly** at either precision,
+/// because narrowing an f64 that was widened from an `S` recovers the
+/// original `S` bits.
+///
+/// Scratch buffers are intentionally absent — they carry no state between
+/// rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GramAccRaw {
+    /// Feature dimension `F`.
+    pub f: usize,
+    /// Target dimension `D`.
+    pub d: usize,
+    /// `[F × F]` Gram, upper triangle populated (lower triangle zeros).
+    pub g: Vec<f64>,
+    /// `[F × D]` cross term `XᵀY`.
+    pub b: Vec<f64>,
+    /// `[F]` column sums.
+    pub col_sums: Vec<f64>,
+    /// `[D]` target sums.
+    pub y_sums: Vec<f64>,
+    /// Rows accumulated.
+    pub rows: u64,
+    /// Pending unpaired feature row, when one is staged (`Some` ↔ the
+    /// accumulator's carry slot was full at snapshot time).
+    pub carry: Option<Vec<f64>>,
+}
+
+/// Heap bytes a [`GramAcc`] with `f` features and `d` targets pins at
+/// element size `elem` — the trainer-budget cost model (dominated by the
+/// `F × F` Gram triangle; includes cross term, sums, carry, and scratch).
+pub fn acc_cost_bytes(f: usize, d: usize, elem: usize) -> usize {
+    (f * f + f * d + 3 * f + 2 * d) * elem
+}
 
 /// Streaming accumulator for the ridge normal-equation statistics
 /// `XᵀX`, `XᵀY`, column/target sums, and the row count, at precision `S`.
@@ -277,6 +315,69 @@ impl<S: Scalar> GramAcc<S> {
         }
     }
 
+    /// Snapshot every accumulated statistic into the precision-erased
+    /// [`GramAccRaw`] wire form. Non-consuming; `S → f64` widening is
+    /// exact at both precisions, so `from_raw(export_raw())` is the
+    /// bit-identity.
+    pub fn export_raw(&self) -> GramAccRaw {
+        GramAccRaw {
+            f: self.f,
+            d: self.d,
+            g: self.g.iter().map(|v| v.to_f64()).collect(),
+            b: self.b.iter().map(|v| v.to_f64()).collect(),
+            col_sums: self.col_sums.iter().map(|v| v.to_f64()).collect(),
+            y_sums: self.y_sums.iter().map(|v| v.to_f64()).collect(),
+            rows: self.t_len as u64,
+            carry: if self.carry_full {
+                Some(self.carry.iter().map(|v| v.to_f64()).collect())
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Rebuild an accumulator from its [`GramAccRaw`] snapshot. Values
+    /// are narrowed to `S` per element — exact when the snapshot came
+    /// from a `GramAcc<S>` of the same precision (the restore path), so
+    /// the rebuilt trainer continues bit-identically to the original.
+    /// Fails on dimension/length mismatches or non-finite input (a
+    /// corrupt snapshot must never poison the sweeper).
+    pub fn from_raw(raw: &GramAccRaw) -> Result<Self> {
+        let (f, d) = (raw.f, raw.d);
+        if raw.g.len() != f * f
+            || raw.b.len() != f * d
+            || raw.col_sums.len() != f
+            || raw.y_sums.len() != d
+            || raw.carry.as_ref().is_some_and(|c| c.len() != f)
+        {
+            bail!("trainer snapshot has inconsistent dimensions");
+        }
+        let mut all = raw
+            .g
+            .iter()
+            .chain(&raw.b)
+            .chain(&raw.col_sums)
+            .chain(&raw.y_sums)
+            .chain(raw.carry.iter().flatten());
+        if all.any(|v| !v.is_finite()) {
+            bail!("trainer snapshot contains non-finite values");
+        }
+        let narrow = |src: &[f64]| -> Vec<S> {
+            src.iter().map(|&v| S::from_f64(v)).collect()
+        };
+        let mut acc = Self::new(f, d);
+        acc.g = narrow(&raw.g);
+        acc.b = narrow(&raw.b);
+        acc.col_sums = narrow(&raw.col_sums);
+        acc.y_sums = narrow(&raw.y_sums);
+        acc.t_len = raw.rows as usize;
+        if let Some(c) = &raw.carry {
+            acc.carry = narrow(c);
+            acc.carry_full = true;
+        }
+        Ok(acc)
+    }
+
     /// Solve the ridge system for features scaled by `s`, with bias and
     /// plain `α·I` regularization, natively at `S` — the precision-true
     /// twin of [`GramStats::solve_scaled`] (bit-identical to it at f64).
@@ -478,6 +579,66 @@ mod tests {
         );
         // and the f32 path genuinely ran at f32
         assert!(a.w.max_abs_diff(&b.w) > 0.0, "f32 fit suspiciously exact");
+    }
+
+    #[test]
+    fn export_import_round_trips_bit_exactly_and_continues_identically() {
+        // both precisions, both carry parities: the restored trainer must
+        // hold identical bits AND keep producing identical bits when fed
+        // the remaining rows — the checkpoint/restore failover contract
+        fn check<S: Scalar>(rows_before: usize) {
+            let (x, y) = problem(90, 6, 1, 7);
+            let mut acc = GramAcc::<S>::new(6, 1);
+            for t in 0..rows_before {
+                acc.push_row(x.row(t), y.row(t));
+            }
+            let raw = acc.export_raw();
+            assert_eq!(raw.rows, rows_before as u64);
+            assert_eq!(raw.carry.is_some(), rows_before % 2 == 1);
+            let mut restored = GramAcc::<S>::from_raw(&raw).unwrap();
+            // identical bits now…
+            assert_eq!(restored.export_raw(), raw);
+            // …and identical bits after both keep accumulating
+            for t in rows_before..90 {
+                acc.push_row(x.row(t), y.row(t));
+                restored.push_row(x.row(t), y.row(t));
+            }
+            assert_eq!(acc.export_raw(), restored.export_raw());
+            let a = acc.solve_scaled(1e-6, 1.0).unwrap();
+            let b = restored.solve_scaled(1e-6, 1.0).unwrap();
+            assert_eq!(a.w.data(), b.w.data());
+            assert_eq!(a.b, b.b);
+        }
+        check::<f64>(40); // even: no carry pending
+        check::<f64>(41); // odd: carry row crosses the snapshot
+        check::<f32>(40);
+        check::<f32>(41);
+    }
+
+    #[test]
+    fn from_raw_rejects_corrupt_snapshots() {
+        let mut acc = GramAcc::<f64>::new(4, 1);
+        acc.push_row(&[1.0, 2.0, 3.0, 4.0], &[0.5]);
+        let good = acc.export_raw();
+        let mut bad = good.clone();
+        bad.g.pop();
+        assert!(GramAcc::<f64>::from_raw(&bad).is_err());
+        let mut bad = good.clone();
+        bad.col_sums[0] = f64::NAN;
+        assert!(GramAcc::<f64>::from_raw(&bad).is_err());
+        let mut bad = good.clone();
+        bad.carry = Some(vec![0.0; 3]); // wrong carry length
+        assert!(GramAcc::<f64>::from_raw(&bad).is_err());
+        assert!(GramAcc::<f64>::from_raw(&good).is_ok());
+    }
+
+    #[test]
+    fn acc_cost_bytes_matches_allocation_shape() {
+        // the budget model must count every buffer `new` allocates
+        let (f, d) = (30, 1);
+        let elems = f * f + f * d + 3 * f + 2 * d;
+        assert_eq!(acc_cost_bytes(f, d, 8), elems * 8);
+        assert!(acc_cost_bytes(f, d, 4) < acc_cost_bytes(f, d, 8));
     }
 
     #[test]

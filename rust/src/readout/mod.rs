@@ -9,7 +9,7 @@
 pub mod gram;
 pub mod poly;
 
-pub use gram::{fit_prec, GramAcc};
+pub use gram::{acc_cost_bytes, fit_prec, GramAcc, GramAccRaw};
 
 use anyhow::Result;
 

@@ -1,0 +1,166 @@
+//! Deterministic fault injection for the chaos suite.
+//!
+//! The hooks in this module are compiled to no-ops unless the
+//! `fault-inject` cargo feature is enabled (unit tests inside the crate
+//! get them too, via `cfg(test)`), so the production hot path pays at
+//! most one relaxed atomic load per stateful job and nothing at all on
+//! the socket path. Armed faults fire exactly once (or persist, for the
+//! write-shaping hook) and are fully described by process-global state:
+//! tests serialize on a lock, arm a fault, drive the server, observe the
+//! typed degradation, and `disarm()`.
+//!
+//! | hook | failure it injects |
+//! |------|--------------------|
+//! | [`arm_sweeper_panic`] | sweep-loop panic after N stateful jobs — exercises catch_unwind containment (lane quarantine + in-place restart) |
+//! | [`arm_sweeper_kill`] | unrecoverable sweeper death after N stateful jobs (a [`SweeperKill`] payload escalates past the containment) |
+//! | [`set_short_writes`] | short socket writes in the poll loop: at most `chunk` bytes per `write(2)`, optionally sleeping first — a deterministically slow reader |
+//! | [`force_trainer_budget`] | overrides the hub trainer budget to a chosen byte count — allocation exhaustion without gigabytes of traffic |
+
+#[cfg(any(test, feature = "fault-inject"))]
+mod armed {
+    use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    /// Panic payload that must NOT be contained: the sweep loop's
+    /// catch_unwind rethrows it so the injected fault reproduces the
+    /// legacy whole-front death (the failure mode the containment path
+    /// is measured against).
+    pub struct SweeperKill;
+
+    /// Remaining stateful jobs before the armed sweeper fault fires;
+    /// <= 0 means disarmed.
+    static SWEEP_FUSE: AtomicI64 = AtomicI64::new(0);
+    /// 1 = the armed fault is a hard kill ([`SweeperKill`] payload),
+    /// 0 = a containable panic.
+    static SWEEP_KILL: AtomicUsize = AtomicUsize::new(0);
+    /// Max bytes per socket write; 0 = unshaped.
+    static WRITE_CHUNK: AtomicUsize = AtomicUsize::new(0);
+    /// Microseconds to sleep before each shaped write.
+    static WRITE_DELAY_US: AtomicU64 = AtomicU64::new(0);
+    /// Trainer-budget override in bytes; u64::MAX = no override.
+    static BUDGET: AtomicU64 = AtomicU64::new(u64::MAX);
+    /// When set, an armed sweeper fuse only ticks down on the named
+    /// sweeper thread. Unit tests share one process and run in
+    /// parallel, so an unscoped fuse could fire on an UNRELATED test's
+    /// sweeper; scoping by thread name pins the blast radius.
+    static TARGET_THREAD: Mutex<Option<String>> = Mutex::new(None);
+
+    /// Restrict armed sweeper faults to the sweeper thread with this
+    /// exact name (see `BatchFront::start_configured`). Cleared by
+    /// [`disarm`].
+    pub fn target_sweeper_thread(name: &str) {
+        *TARGET_THREAD.lock().unwrap() = Some(name.to_string());
+    }
+
+    /// Arm a containable sweep panic that fires on the `after_jobs`-th
+    /// stateful job (1 = the very next one) counted across all sweepers.
+    pub fn arm_sweeper_panic(after_jobs: u64) {
+        SWEEP_KILL.store(0, Ordering::SeqCst);
+        SWEEP_FUSE.store(after_jobs as i64, Ordering::SeqCst);
+    }
+
+    /// Arm an unrecoverable sweeper kill (escalates past containment).
+    pub fn arm_sweeper_kill(after_jobs: u64) {
+        SWEEP_KILL.store(1, Ordering::SeqCst);
+        SWEEP_FUSE.store(after_jobs as i64, Ordering::SeqCst);
+    }
+
+    /// Shape every subsequent poll-loop socket write: at most `chunk`
+    /// bytes per call, sleeping `delay` first (a deterministic slow
+    /// reader / EAGAIN generator). `chunk = 0` un-shapes.
+    pub fn set_short_writes(chunk: usize, delay: Duration) {
+        WRITE_DELAY_US.store(delay.as_micros() as u64, Ordering::SeqCst);
+        WRITE_CHUNK.store(chunk, Ordering::SeqCst);
+    }
+
+    /// Override every hub's trainer budget (bytes) until [`disarm`].
+    pub fn force_trainer_budget(bytes: usize) {
+        BUDGET.store(bytes as u64, Ordering::SeqCst);
+    }
+
+    /// Clear every armed fault.
+    pub fn disarm() {
+        SWEEP_FUSE.store(0, Ordering::SeqCst);
+        SWEEP_KILL.store(0, Ordering::SeqCst);
+        WRITE_CHUNK.store(0, Ordering::SeqCst);
+        WRITE_DELAY_US.store(0, Ordering::SeqCst);
+        BUDGET.store(u64::MAX, Ordering::SeqCst);
+        *TARGET_THREAD.lock().unwrap() = None;
+    }
+
+    /// Called by the sweeper once per stateful job. Panics when an armed
+    /// fuse reaches zero — inside the sweep loop's catch_unwind.
+    pub(crate) fn sweeper_job_tick() {
+        if SWEEP_FUSE.load(Ordering::SeqCst) <= 0 {
+            return; // nothing armed: one atomic load on the test path
+        }
+        if let Some(target) = TARGET_THREAD.lock().unwrap().as_deref() {
+            if std::thread::current().name() != Some(target) {
+                return;
+            }
+        }
+        let fired = SWEEP_FUSE
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                if v > 0 {
+                    Some(v - 1)
+                } else {
+                    None
+                }
+            })
+            .map(|prev| prev == 1)
+            .unwrap_or(false);
+        if fired {
+            if SWEEP_KILL.load(Ordering::SeqCst) == 1 {
+                std::panic::panic_any(SweeperKill);
+            }
+            panic!("fault-inject: armed sweeper panic fired");
+        }
+    }
+
+    /// Current write shaping, if armed: `(max_bytes, pre-write delay)`.
+    pub(crate) fn short_write_chunk() -> Option<(usize, Duration)> {
+        match WRITE_CHUNK.load(Ordering::Relaxed) {
+            0 => None,
+            c => Some((
+                c,
+                Duration::from_micros(WRITE_DELAY_US.load(Ordering::Relaxed)),
+            )),
+        }
+    }
+
+    /// Current trainer-budget override in bytes, if armed.
+    pub(crate) fn budget_override() -> Option<usize> {
+        match BUDGET.load(Ordering::Relaxed) {
+            u64::MAX => None,
+            b => Some(b as usize),
+        }
+    }
+}
+
+#[cfg(any(test, feature = "fault-inject"))]
+pub use armed::{
+    arm_sweeper_kill, arm_sweeper_panic, disarm, force_trainer_budget,
+    set_short_writes, target_sweeper_thread, SweeperKill,
+};
+#[cfg(any(test, feature = "fault-inject"))]
+pub(crate) use armed::{budget_override, short_write_chunk, sweeper_job_tick};
+
+/// No-op twin (nothing armed, nothing armable) — the production build.
+#[cfg(not(any(test, feature = "fault-inject")))]
+mod disarmed {
+    #[inline(always)]
+    pub(crate) fn sweeper_job_tick() {}
+
+    #[inline(always)]
+    pub(crate) fn short_write_chunk() -> Option<(usize, std::time::Duration)> {
+        None
+    }
+
+    #[inline(always)]
+    pub(crate) fn budget_override() -> Option<usize> {
+        None
+    }
+}
+#[cfg(not(any(test, feature = "fault-inject")))]
+pub(crate) use disarmed::{budget_override, short_write_chunk, sweeper_job_tick};

@@ -20,10 +20,10 @@ use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::linalg::Mat;
-use crate::readout::{GramAcc, Readout};
+use crate::readout::{acc_cost_bytes, GramAcc, GramAccRaw, Readout};
 use crate::reservoir::{BatchEsn, LaneReadout};
 
 use super::pool::EnginePool;
@@ -42,28 +42,52 @@ const HOLDOFF_DRAIN_DEPTH: usize = 4;
 // precision-dispatched lane engine
 // ---------------------------------------------------------------------------
 
-/// Outcome codes of a lane `commit`, carried through the `Vec<f64>`
-/// reply channel (the sweeper can only answer with numbers). Shared by
-/// both transports so their error responses stay identical.
-pub(crate) const COMMIT_OK: f64 = 1.0;
-pub(crate) const COMMIT_EMPTY: f64 = 2.0;
-pub(crate) const COMMIT_SINGULAR: f64 = 3.0;
+/// Committed-readout versions retained per lane for `rollback` — a
+/// small bounded ring, so committing in a loop can never grow sweeper
+/// memory without bound.
+pub(crate) const VERSION_RING: usize = 8;
 
-/// Map a commit outcome code to its client-visible error (`None` = ok).
-/// One function serves the threaded wrapper and the event-loop resolver,
-/// so the two transports answer a failed commit with the same message.
-pub(crate) fn commit_code_error(code: f64) -> Option<anyhow::Error> {
-    if code == COMMIT_OK {
-        None
-    } else if code == COMMIT_EMPTY {
-        // same message as a commit with no lane at all — one constructor
-        // in wire.rs keeps every "premature commit" answer identical
-        Some(super::wire::nothing_to_commit_error())
-    } else {
-        Some(anyhow!(
-            "commit failed: ridge system not solvable (try a larger alpha)"
-        ))
-    }
+/// The full portable value of one streaming lane, captured by
+/// `checkpoint` and reinstalled — on any lane of any hub serving the
+/// same model at the same precision — by `restore`: dynamics state,
+/// online-trainer accumulator, and the committed-readout version ring.
+/// Every numeric field is f64 at the boundary (widening from the f32
+/// hub is exact, and the JSON wire codec round-trips f64 bit-exactly),
+/// so `restore(checkpoint())` reproduces the lane bit-for-bit. This is
+/// both the client warm-failover token and the shard/node lane-migration
+/// primitive.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaneSnapshot {
+    /// Reservoir feature dimension `N` (validated on restore).
+    pub(crate) n: usize,
+    /// Serving precision the snapshot was taken at. Restore refuses a
+    /// mismatch: narrowing foreign f64 state would silently round.
+    pub(crate) precision: Precision,
+    /// `lane_state` layout: `n_real` real slots, then (re, im) pairs.
+    pub(crate) state: Vec<f64>,
+    /// Online Gram accumulator, when the lane has accumulated rows.
+    pub(crate) trainer: Option<GramAccRaw>,
+    /// Version id of the installed committed readout; 0 = base model
+    /// readout (invariant: 0 or a member of `versions`).
+    pub(crate) active_version: u64,
+    /// The id the next `commit` will assign (monotonic per lane; always
+    /// greater than every retained id, and ≥ 1).
+    pub(crate) next_version: u64,
+    /// Retained version ring, oldest first: `(id, w column [N], bias)`.
+    pub(crate) versions: Vec<(u64, Vec<f64>, f64)>,
+}
+
+/// A sweeper-side outcome routed back to the submitter: plain numbers
+/// (predict/stream outputs, row counts, version ids), a boxed lane
+/// snapshot (`checkpoint`), or a typed error code — a slug resolved
+/// through `wire::coded_error`, so the threaded and event-loop
+/// transports answer every failure with the identical message AND the
+/// identical machine-readable `code` field.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Vals(Vec<f64>),
+    Snap(Box<LaneSnapshot>),
+    Err(&'static str),
 }
 
 /// One precision's hub: the batched lane engine, the model readout
@@ -74,22 +98,55 @@ pub(crate) fn commit_code_error(code: f64) -> Option<anyhow::Error> {
 pub(crate) struct HubState<S: crate::num::Scalar> {
     engine: BatchEsn<S>,
     ro: LaneReadout<S>,
-    /// Per-lane online trainers, allocated lazily on the first `train`.
+    /// Per-lane online trainers, allocated lazily on the first `train`
+    /// (each allocation charged against `trainer_budget`).
     trainers: Vec<Option<GramAcc<S>>>,
     /// Per-lane committed readouts; `None` = the shared model readout.
     /// A committed lane's streams leave the fused shared sweep and go
     /// through [`HubState::sweep_committed`].
     committed: Vec<Option<Arc<Readout>>>,
+    /// Per-lane bounded ring of retained committed readouts, oldest
+    /// first — `rollback` reinstalls any member atomically.
+    versions: Vec<Vec<(u64, Arc<Readout>)>>,
+    /// Per-lane id of the installed committed readout (0 = base model
+    /// readout; otherwise a member of the lane's ring).
+    active_version: Vec<u64>,
+    /// Per-lane id the next `commit` assigns (monotonic, starts at 1).
+    next_version: Vec<u64>,
+    /// Lanes quarantined by a sweep panic: stateful ops answer
+    /// `lane_poisoned` until a `reset` or `restore` rebuilds the lane.
+    poisoned: Vec<bool>,
+    /// Bytes currently pinned by allocated trainers.
+    trainer_bytes: usize,
+    /// Trainer allocation cap for this hub (`usize::MAX` = unlimited).
+    trainer_budget: usize,
 }
 
 impl<S: crate::num::Scalar> HubState<S> {
-    fn new(model: &Model, lanes: usize) -> Self {
+    fn new(model: &Model, lanes: usize, trainer_budget: usize) -> Self {
         Self {
             engine: BatchEsn::<S>::with_precision(model.qesn.clone(), lanes),
             ro: LaneReadout::new(&model.readout),
             trainers: (0..lanes).map(|_| None).collect(),
             committed: vec![None; lanes],
+            versions: (0..lanes).map(|_| Vec::new()).collect(),
+            active_version: vec![0; lanes],
+            next_version: vec![1; lanes],
+            poisoned: vec![false; lanes],
+            trainer_bytes: 0,
+            trainer_budget,
         }
+    }
+
+    /// The effective trainer budget (fault injection can force a lower
+    /// one to drive exhaustion deterministically in tests).
+    fn budget(&self) -> usize {
+        super::fault::budget_override().unwrap_or(self.trainer_budget)
+    }
+
+    /// Per-lane trainer cost under the budget model.
+    fn trainer_cost(&self) -> usize {
+        acc_cost_bytes(self.engine.n(), 1, std::mem::size_of::<S>())
     }
 
     /// Coalesced streaming sweep with per-lane readout overrides: lanes
@@ -170,14 +227,25 @@ impl<S: crate::num::Scalar> HubState<S> {
     /// steps) and push each step's `(features, target)` row into the
     /// lane's streaming accumulator. Returns the lane's total accumulated
     /// row count.
-    fn train(&mut self, lane: usize, input: &[f64], target: &[f64]) -> u64 {
+    fn train(&mut self, lane: usize, input: &[f64], target: &[f64]) -> Reply {
         debug_assert_eq!(input.len(), target.len());
         let bsz = self.engine.batch();
         let n = self.engine.n();
+        if self.trainers[lane].is_none() {
+            // first train on this lane allocates its accumulator — the
+            // only trainer allocation in the hub, so charging here (and
+            // in restore) bounds trainer memory exactly
+            let cost = self.trainer_cost();
+            if self.trainer_bytes.saturating_add(cost) > self.budget() {
+                return Reply::Err("trainer_budget");
+            }
+            self.trainer_bytes += cost;
+            self.trainers[lane] = Some(GramAcc::new(n, 1));
+        }
         let Self {
             engine, trainers, ..
         } = self;
-        let trainer = trainers[lane].get_or_insert_with(|| GramAcc::new(n, 1));
+        let trainer = trainers[lane].as_mut().expect("allocated above");
         let mut u = vec![0.0f64; bsz];
         let mut active = vec![false; bsz];
         active[lane] = true;
@@ -188,36 +256,194 @@ impl<S: crate::num::Scalar> HubState<S> {
             engine.lane_state(lane, &mut feat);
             trainer.push_row(&feat, std::slice::from_ref(&yt));
         }
-        trainer.rows() as u64
+        Reply::Vals(vec![trainer.rows() as f64])
     }
 
     /// `commit` op: solve the lane's accumulated ridge system natively at
-    /// `S` and hot-swap the lane's readout (`Arc` swap). The trainer
-    /// keeps its statistics — further `train` rows extend the same
-    /// stream, so a later commit refines the readout online.
-    fn commit(&mut self, lane: usize, alpha: f64) -> f64 {
+    /// `S`, hot-swap the lane's readout (`Arc` swap), and retain the new
+    /// readout in the lane's bounded version ring under a fresh monotonic
+    /// id (answered to the client). The trainer keeps its statistics —
+    /// further `train` rows extend the same stream, so a later commit
+    /// refines the readout online.
+    fn commit(&mut self, lane: usize, alpha: f64) -> Reply {
         match &self.trainers[lane] {
-            None => COMMIT_EMPTY,
-            Some(acc) if acc.rows() == 0 => COMMIT_EMPTY,
+            None => Reply::Err("commit_empty"),
+            Some(acc) if acc.rows() == 0 => Reply::Err("commit_empty"),
             Some(acc) => match acc.solve_scaled(alpha, 1.0) {
                 Ok(ro) => {
-                    self.committed[lane] = Some(Arc::new(ro));
-                    COMMIT_OK
+                    let v = self.next_version[lane];
+                    self.next_version[lane] += 1;
+                    let ro = Arc::new(ro);
+                    let ring = &mut self.versions[lane];
+                    if ring.len() == VERSION_RING {
+                        // evict the oldest retained version; the ACTIVE
+                        // version is never evicted here, because commit
+                        // installs the new id as active below
+                        ring.remove(0);
+                    }
+                    ring.push((v, Arc::clone(&ro)));
+                    self.committed[lane] = Some(ro);
+                    self.active_version[lane] = v;
+                    Reply::Vals(vec![v as f64])
                 }
-                Err(_) => COMMIT_SINGULAR,
+                Err(_) => Reply::Err("commit_singular"),
             },
         }
     }
 
-    /// Full per-lane clear: zero the state AND drop the trainer and any
-    /// committed readout. Used for both the client-visible `reset` and
-    /// lane recycling — either way the lane leaves as a pristine
-    /// model-readout lane, so the next owner can never inherit another
-    /// connection's training.
+    /// `rollback` op: atomically reinstall a retained committed readout
+    /// (or, for `version` 0, the base model readout) WITHOUT touching the
+    /// trainer — accumulated rows survive, so train → commit → rollback →
+    /// train → commit keeps extending one row stream.
+    fn rollback(&mut self, lane: usize, version: u64) -> Reply {
+        if version == 0 {
+            self.committed[lane] = None;
+            self.active_version[lane] = 0;
+            return Reply::Vals(vec![0.0]);
+        }
+        match self.versions[lane].iter().find(|(v, _)| *v == version) {
+            Some((v, ro)) => {
+                self.committed[lane] = Some(Arc::clone(ro));
+                self.active_version[lane] = *v;
+                Reply::Vals(vec![*v as f64])
+            }
+            None => Reply::Err("rollback_unknown_version"),
+        }
+    }
+
+    /// `checkpoint` op: snapshot the lane's full portable value (exact
+    /// at both precisions — see [`LaneSnapshot`]). Read-only: streaming
+    /// and training continue unaffected.
+    fn checkpoint(&self, lane: usize, precision: Precision) -> Reply {
+        let n = self.engine.n();
+        let mut state = vec![0.0f64; n];
+        self.engine.lane_state(lane, &mut state);
+        Reply::Snap(Box::new(LaneSnapshot {
+            n,
+            precision,
+            state,
+            trainer: self.trainers[lane].as_ref().map(|t| t.export_raw()),
+            active_version: self.active_version[lane],
+            next_version: self.next_version[lane],
+            versions: self.versions[lane]
+                .iter()
+                .map(|(v, ro)| (*v, ro.w.data().to_vec(), ro.b[0]))
+                .collect(),
+        }))
+    }
+
+    /// `restore` op: validate the snapshot fully, then install it
+    /// atomically — state, trainer, version ring, active readout — and
+    /// clear any poison quarantine (restore IS the recovery path after a
+    /// contained sweeper panic). Nothing is modified on any validation
+    /// failure, so a rejected restore leaves the lane exactly as it was.
+    fn restore(
+        &mut self,
+        lane: usize,
+        snap: &LaneSnapshot,
+        precision: Precision,
+    ) -> Reply {
+        let n = self.engine.n();
+        if snap.n != n
+            || snap.precision != precision
+            || snap.state.len() != n
+            || snap.state.iter().any(|v| !v.is_finite())
+            || snap.next_version == 0
+            || snap.versions.len() > VERSION_RING
+        {
+            return Reply::Err("restore_mismatch");
+        }
+        // version-ring invariants: ids strictly ascending, all below the
+        // next-id counter, weights well-formed and finite
+        let mut prev = 0u64;
+        for (v, w, b) in &snap.versions {
+            if *v <= prev
+                || *v >= snap.next_version
+                || w.len() != n
+                || w.iter().any(|x| !x.is_finite())
+                || !b.is_finite()
+            {
+                return Reply::Err("restore_mismatch");
+            }
+            prev = *v;
+        }
+        if snap.active_version != 0
+            && !snap
+                .versions
+                .iter()
+                .any(|(v, _, _)| *v == snap.active_version)
+        {
+            return Reply::Err("restore_mismatch");
+        }
+        let trainer = match &snap.trainer {
+            None => None,
+            Some(raw) => {
+                if raw.f != n || raw.d != 1 {
+                    return Reply::Err("restore_mismatch");
+                }
+                match GramAcc::<S>::from_raw(raw) {
+                    Ok(acc) => Some(acc),
+                    Err(_) => return Reply::Err("restore_mismatch"),
+                }
+            }
+        };
+        // budget: the lane's current trainer charge is swapped for the
+        // snapshot's (same dims, same cost), so only None↔Some changes it
+        let cost = self.trainer_cost();
+        let old = if self.trainers[lane].is_some() { cost } else { 0 };
+        let new = if trainer.is_some() { cost } else { 0 };
+        if self.trainer_bytes - old + new > self.budget() {
+            return Reply::Err("trainer_budget");
+        }
+        let ring: Vec<(u64, Arc<Readout>)> = snap
+            .versions
+            .iter()
+            .map(|(v, w, b)| {
+                (
+                    *v,
+                    Arc::new(Readout {
+                        w: Mat::from_rows(n, 1, w),
+                        b: vec![*b],
+                    }),
+                )
+            })
+            .collect();
+        // everything validated — install (the sweeper thread owns the
+        // hub, so nothing observes a half-installed lane)
+        self.trainer_bytes = self.trainer_bytes - old + new;
+        self.engine.reset_lane(lane);
+        self.engine.set_lane_state(lane, &snap.state);
+        self.trainers[lane] = trainer;
+        self.committed[lane] = if snap.active_version == 0 {
+            None
+        } else {
+            ring.iter()
+                .find(|(v, _)| *v == snap.active_version)
+                .map(|(_, ro)| Arc::clone(ro))
+        };
+        self.versions[lane] = ring;
+        self.active_version[lane] = snap.active_version;
+        self.next_version[lane] = snap.next_version;
+        self.poisoned[lane] = false;
+        Reply::Vals(vec![snap.active_version as f64])
+    }
+
+    /// Full per-lane clear: zero the state AND drop the trainer, the
+    /// committed readout, the version ring, and any poison quarantine.
+    /// Used for both the client-visible `reset` and lane recycling —
+    /// either way the lane leaves as a pristine model-readout lane, so
+    /// the next owner can never inherit another connection's training.
     fn reset_lane(&mut self, lane: usize) {
         self.engine.reset_lane(lane);
-        self.trainers[lane] = None;
+        if self.trainers[lane].take().is_some() {
+            let cost = self.trainer_cost();
+            self.trainer_bytes = self.trainer_bytes.saturating_sub(cost);
+        }
         self.committed[lane] = None;
+        self.versions[lane].clear();
+        self.active_version[lane] = 0;
+        self.next_version[lane] = 1;
+        self.poisoned[lane] = false;
     }
 
     fn reset(&mut self) {
@@ -228,6 +454,13 @@ impl<S: crate::num::Scalar> HubState<S> {
         for c in self.committed.iter_mut() {
             *c = None;
         }
+        for v in self.versions.iter_mut() {
+            v.clear();
+        }
+        self.active_version.fill(0);
+        self.next_version.fill(1);
+        self.poisoned.fill(false);
+        self.trainer_bytes = 0;
     }
 }
 
@@ -241,10 +474,10 @@ pub(crate) enum Hub {
 }
 
 impl Hub {
-    pub(crate) fn new(model: &Model, lanes: usize) -> Self {
+    pub(crate) fn new(model: &Model, lanes: usize, trainer_budget: usize) -> Self {
         match model.precision {
-            Precision::F64 => Hub::F64(HubState::new(model, lanes)),
-            Precision::F32 => Hub::F32(HubState::new(model, lanes)),
+            Precision::F64 => Hub::F64(HubState::new(model, lanes, trainer_budget)),
+            Precision::F32 => Hub::F32(HubState::new(model, lanes, trainer_budget)),
         }
     }
 
@@ -262,17 +495,55 @@ impl Hub {
         }
     }
 
-    pub(crate) fn train(&mut self, lane: usize, input: &[f64], target: &[f64]) -> u64 {
+    pub(crate) fn train(&mut self, lane: usize, input: &[f64], target: &[f64]) -> Reply {
         match self {
             Hub::F64(h) => h.train(lane, input, target),
             Hub::F32(h) => h.train(lane, input, target),
         }
     }
 
-    pub(crate) fn commit(&mut self, lane: usize, alpha: f64) -> f64 {
+    pub(crate) fn commit(&mut self, lane: usize, alpha: f64) -> Reply {
         match self {
             Hub::F64(h) => h.commit(lane, alpha),
             Hub::F32(h) => h.commit(lane, alpha),
+        }
+    }
+
+    pub(crate) fn rollback(&mut self, lane: usize, version: u64) -> Reply {
+        match self {
+            Hub::F64(h) => h.rollback(lane, version),
+            Hub::F32(h) => h.rollback(lane, version),
+        }
+    }
+
+    pub(crate) fn checkpoint(&self, lane: usize) -> Reply {
+        match self {
+            Hub::F64(h) => h.checkpoint(lane, Precision::F64),
+            Hub::F32(h) => h.checkpoint(lane, Precision::F32),
+        }
+    }
+
+    pub(crate) fn restore(&mut self, lane: usize, snap: &LaneSnapshot) -> Reply {
+        match self {
+            Hub::F64(h) => h.restore(lane, snap, Precision::F64),
+            Hub::F32(h) => h.restore(lane, snap, Precision::F32),
+        }
+    }
+
+    /// Quarantine a lane after a contained sweep panic: its hub state
+    /// may be mid-update, so stateful ops answer `lane_poisoned` until
+    /// a `reset` or `restore` rebuilds the lane from scratch.
+    pub(crate) fn poison(&mut self, lane: usize) {
+        match self {
+            Hub::F64(h) => h.poisoned[lane] = true,
+            Hub::F32(h) => h.poisoned[lane] = true,
+        }
+    }
+
+    pub(crate) fn poisoned(&self, lane: usize) -> bool {
+        match self {
+            Hub::F64(h) => h.poisoned[lane],
+            Hub::F32(h) => h.poisoned[lane],
         }
     }
 
@@ -313,10 +584,12 @@ impl Hub {
 /// `RecvError` on the paired receiver. Event replies make the same two
 /// outcomes explicit so the poll loop can dispatch without blocking.
 pub(crate) enum Completion {
-    /// The sweeper ran the job; here is its output.
-    Done(Vec<f64>),
+    /// The sweeper ran the job; here is its outcome (values, snapshot,
+    /// or typed error code).
+    Done(Reply),
     /// The job was dropped without running (sweeper gone / shutting
-    /// down). The receiver falls back exactly like a `RecvError`.
+    /// down / unwound by a contained panic). The receiver falls back
+    /// exactly like a `RecvError`.
     Dropped,
 }
 
@@ -382,7 +655,7 @@ impl EventReply {
         }
     }
 
-    fn complete(mut self, v: Vec<f64>) {
+    fn complete(mut self, v: Reply) {
         self.sent = true;
         self.queue.push(self.token, Completion::Done(v));
     }
@@ -401,12 +674,12 @@ impl Drop for EventReply {
 /// completion token (no thread parks anywhere — the epoll path). The
 /// sweeper is oblivious: it calls [`ReplySender::send`] either way.
 pub(crate) enum ReplySender {
-    Chan(mpsc::Sender<Vec<f64>>),
+    Chan(mpsc::Sender<Reply>),
     Event(EventReply),
 }
 
 impl ReplySender {
-    pub(crate) fn send(self, v: Vec<f64>) {
+    pub(crate) fn send(self, v: Reply) {
         match self {
             ReplySender::Chan(tx) => {
                 let _ = tx.send(v);
@@ -443,19 +716,56 @@ pub(crate) enum FrontJob {
         reply: ReplySender,
     },
     /// Solve the lane's accumulated ridge system and hot-swap the lane's
-    /// readout. Answered with `[COMMIT_* code]`.
+    /// readout. Answered with `[version]` or a typed error code.
     Commit {
         lane: usize,
         alpha: f64,
         reply: ReplySender,
     },
-    /// Zero a hub lane (state + trainer + committed readout). `reply` is
-    /// `Some` for a client-visible `reset` (answered with an empty vec on
-    /// completion), `None` when recycling a released lane.
+    /// Atomically reinstall a retained committed-readout version (0 =
+    /// base model readout) without touching the trainer. Answered with
+    /// `[version]` or `rollback_unknown_version`.
+    Rollback {
+        lane: usize,
+        version: u64,
+        reply: ReplySender,
+    },
+    /// Snapshot the lane's full portable value. Answered with a boxed
+    /// [`LaneSnapshot`].
+    Checkpoint { lane: usize, reply: ReplySender },
+    /// Validate and atomically install a snapshot onto the lane (also
+    /// clears poison — the post-panic recovery op). Answered with
+    /// `[active_version]` or a typed error code.
+    Restore {
+        lane: usize,
+        snap: Box<LaneSnapshot>,
+        reply: ReplySender,
+    },
+    /// Zero a hub lane (state + trainer + committed readout + version
+    /// ring). `reply` is `Some` for a client-visible `reset` (answered
+    /// with an empty vec on completion), `None` when recycling a
+    /// released lane.
     Reset {
         lane: usize,
         reply: Option<ReplySender>,
     },
+}
+
+impl FrontJob {
+    /// The hub lane a job touches (`None` for stateless predicts) — the
+    /// quarantine set when a sweep panics mid-batch.
+    fn lane(&self) -> Option<usize> {
+        match self {
+            FrontJob::Predict { .. } => None,
+            FrontJob::Stream { lane, .. }
+            | FrontJob::Train { lane, .. }
+            | FrontJob::Commit { lane, .. }
+            | FrontJob::Rollback { lane, .. }
+            | FrontJob::Checkpoint { lane, .. }
+            | FrontJob::Restore { lane, .. }
+            | FrontJob::Reset { lane, .. } => Some(*lane),
+        }
+    }
 }
 
 struct FrontState {
@@ -485,6 +795,13 @@ pub struct BatchFront {
     /// every shard's depth per predict, which must not contend with
     /// submitters and sweepers on the queue mutex.
     depth: AtomicUsize,
+    /// Sweep panics contained (lane quarantined, sweeper restarted in
+    /// place) since start — metrics, and the chaos suite's containment
+    /// witness.
+    panics: AtomicU64,
+    /// Trainer allocation cap handed to the hub (bytes; `usize::MAX` =
+    /// unlimited).
+    trainer_budget: usize,
 }
 
 impl BatchFront {
@@ -499,15 +816,18 @@ impl BatchFront {
     /// to `holdoff_us` µs for more to coalesce; under load (queue already
     /// batch-worthy) or on shutdown it drains immediately.
     pub fn start_with_holdoff(model: Arc<Model>, holdoff_us: u64) -> Arc<Self> {
-        Self::start_named(model, holdoff_us, "lr-batch-sweeper".into())
+        Self::start_configured(model, holdoff_us, "lr-batch-sweeper".into(), usize::MAX)
     }
 
     /// [`Self::start_with_holdoff`] with an explicit sweeper thread name
-    /// (the sharded front names each shard's sweeper by index).
-    pub(crate) fn start_named(
+    /// (the sharded front names each shard's sweeper by index) and a
+    /// per-hub trainer memory budget in bytes (`usize::MAX` =
+    /// unlimited).
+    pub(crate) fn start_configured(
         model: Arc<Model>,
         holdoff_us: u64,
         thread_name: String,
+        trainer_budget: usize,
     ) -> Arc<Self> {
         let front = Arc::new(Self {
             model,
@@ -523,14 +843,19 @@ impl BatchFront {
             sweeps: AtomicU64::new(0),
             engines_built: AtomicU64::new(0),
             depth: AtomicUsize::new(0),
+            panics: AtomicU64::new(0),
+            trainer_budget,
         });
         let worker = Arc::clone(&front);
         let handle = std::thread::Builder::new()
             .name(thread_name)
             .spawn(move || {
-                // a panic inside a sweep (engine assert) must not freeze
-                // the server: mark the front dead and drop stranded jobs
-                // so blocked reply receivers unblock into their fallbacks
+                // last-resort containment: per-batch panics are caught
+                // INSIDE sweeper_loop (lane quarantine + in-place
+                // restart); only a panic outside batch processing — or
+                // an injected hard kill — lands here. Mark the front
+                // dead and drop stranded jobs so blocked reply
+                // receivers unblock into their fallbacks.
                 let res = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| worker.sweeper_loop()),
                 );
@@ -608,6 +933,12 @@ impl BatchFront {
         self.sweeps.load(Ordering::Relaxed)
     }
 
+    /// Sweep panics contained so far (each one poisoned the lanes of its
+    /// batch and restarted the sweeper in place).
+    pub fn sweeper_panics(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
     /// Distinct pooled predict engines built so far (flat once warm:
     /// chunk-size reuse means coalesced predicts stop paying the
     /// parameter-downcast + plane-allocation cost per chunk).
@@ -637,7 +968,7 @@ impl BatchFront {
             reply: ReplySender::Chan(tx),
         }) {
             // a dying sweeper drops stranded jobs, so this cannot hang
-            if let Ok(out) = rx.recv() {
+            if let Ok(Reply::Vals(out)) = rx.recv() {
                 return out;
             }
         }
@@ -651,7 +982,7 @@ impl BatchFront {
     pub fn predict_async(
         &self,
         input: Vec<f64>,
-    ) -> Option<mpsc::Receiver<Vec<f64>>> {
+    ) -> Option<mpsc::Receiver<Reply>> {
         let (tx, rx) = mpsc::channel();
         if self.submit(FrontJob::Predict {
             input: Arc::new(input),
@@ -730,6 +1061,41 @@ impl BatchFront {
         self.submit(FrontJob::Commit { lane, alpha, reply })
     }
 
+    /// Enqueue a rollback to a retained committed-readout version with an
+    /// arbitrary reply sink.
+    pub(crate) fn submit_rollback(
+        &self,
+        lane: usize,
+        version: u64,
+        reply: ReplySender,
+    ) -> bool {
+        self.submit(FrontJob::Rollback {
+            lane,
+            version,
+            reply,
+        })
+    }
+
+    /// Enqueue a lane checkpoint with an arbitrary reply sink.
+    pub(crate) fn submit_checkpoint(&self, lane: usize, reply: ReplySender) -> bool {
+        self.submit(FrontJob::Checkpoint { lane, reply })
+    }
+
+    /// Enqueue a lane restore with an arbitrary reply sink. Refused
+    /// (like [`Self::submit_stream`]) on multi-output models — snapshots
+    /// describe single-output streaming lanes.
+    pub(crate) fn submit_restore(
+        &self,
+        lane: usize,
+        snap: Box<LaneSnapshot>,
+        reply: ReplySender,
+    ) -> bool {
+        if self.model.readout.w.cols() != 1 {
+            return false;
+        }
+        self.submit(FrontJob::Restore { lane, snap, reply })
+    }
+
     /// Enqueue a client-visible lane reset with an arbitrary reply sink
     /// (answered with an empty vec; see [`Self::submit_predict`] on the
     /// return value).
@@ -740,6 +1106,18 @@ impl BatchFront {
         })
     }
 
+    /// Block on a channel reply and map the three outcomes: values pass
+    /// through, typed error codes become the shared wire error, and a
+    /// dropped sender (dead sweeper / contained panic unwound the job)
+    /// becomes the deterministic "unavailable" error.
+    fn recv_vals(rx: &mpsc::Receiver<Reply>) -> Result<Vec<f64>> {
+        match rx.recv() {
+            Ok(Reply::Vals(v)) => Ok(v),
+            Ok(Reply::Err(code)) => Err(super::wire::coded_error(code)),
+            _ => Err(super::wire::unavailable_error()),
+        }
+    }
+
     /// Streaming step(s) on a hub lane (no fallback: the state lives in
     /// the hub, so a dead sweeper is a hard error).
     pub fn stream(&self, lane: usize, input: Vec<f64>) -> Result<Vec<f64>> {
@@ -748,9 +1126,9 @@ impl BatchFront {
         super::wire::guard_streamable(&self.model)?;
         let (tx, rx) = mpsc::channel();
         if !self.submit_stream(lane, input, ReplySender::Chan(tx)) {
-            anyhow::bail!("batch front unavailable");
+            return Err(super::wire::unavailable_error());
         }
-        rx.recv().map_err(|_| anyhow!("batch front unavailable"))
+        Self::recv_vals(&rx)
     }
 
     /// Synchronous online training step(s) on a hub lane: advance the
@@ -767,43 +1145,79 @@ impl BatchFront {
         );
         let (tx, rx) = mpsc::channel();
         if !self.submit_train(lane, input, target, ReplySender::Chan(tx)) {
-            anyhow::bail!("batch front unavailable");
+            return Err(super::wire::unavailable_error());
         }
-        let v = rx.recv().map_err(|_| anyhow!("batch front unavailable"))?;
+        let v = Self::recv_vals(&rx)?;
         Ok(v.first().copied().unwrap_or(0.0) as u64)
     }
 
     /// Synchronous lane commit: solve the accumulated ridge system at the
     /// hub's precision and atomically hot-swap this lane's readout —
-    /// subsequent [`Self::stream`] calls on the lane use it.
-    pub fn commit(&self, lane: usize, alpha: f64) -> Result<()> {
+    /// subsequent [`Self::stream`] calls on the lane use it. Returns the
+    /// newly retained readout's version id (monotonic per lane).
+    pub fn commit(&self, lane: usize, alpha: f64) -> Result<u64> {
         let (tx, rx) = mpsc::channel();
         if !self.submit_commit(lane, alpha, ReplySender::Chan(tx)) {
-            anyhow::bail!("batch front unavailable");
+            return Err(super::wire::unavailable_error());
         }
-        let v = rx.recv().map_err(|_| anyhow!("batch front unavailable"))?;
-        match commit_code_error(v.first().copied().unwrap_or(COMMIT_SINGULAR)) {
-            None => Ok(()),
-            Some(e) => Err(e),
+        let v = Self::recv_vals(&rx)?;
+        Ok(v.first().copied().unwrap_or(0.0) as u64)
+    }
+
+    /// Synchronous rollback: atomically reinstall a retained committed
+    /// readout version (0 = base model readout) without dropping
+    /// accumulated training rows. Returns the now-active version id.
+    pub fn rollback(&self, lane: usize, version: u64) -> Result<u64> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit_rollback(lane, version, ReplySender::Chan(tx)) {
+            return Err(super::wire::unavailable_error());
         }
+        let v = Self::recv_vals(&rx)?;
+        Ok(v.first().copied().unwrap_or(0.0) as u64)
+    }
+
+    /// Synchronous lane checkpoint: the lane's full portable value,
+    /// bit-exact at both precisions.
+    pub fn checkpoint(&self, lane: usize) -> Result<LaneSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit_checkpoint(lane, ReplySender::Chan(tx)) {
+            return Err(super::wire::unavailable_error());
+        }
+        match rx.recv() {
+            Ok(Reply::Snap(s)) => Ok(*s),
+            Ok(Reply::Err(code)) => Err(super::wire::coded_error(code)),
+            _ => Err(super::wire::unavailable_error()),
+        }
+    }
+
+    /// Synchronous lane restore: validate and atomically install a
+    /// snapshot (clearing any poison quarantine). Returns the restored
+    /// active version id.
+    pub fn restore(&self, lane: usize, snap: LaneSnapshot) -> Result<u64> {
+        let (tx, rx) = mpsc::channel();
+        if !self.submit_restore(lane, Box::new(snap), ReplySender::Chan(tx)) {
+            return Err(super::wire::unavailable_error());
+        }
+        let v = Self::recv_vals(&rx)?;
+        Ok(v.first().copied().unwrap_or(0.0) as u64)
     }
 
     /// Synchronous client-visible lane reset.
     pub fn reset(&self, lane: usize) -> Result<()> {
         let (tx, rx) = mpsc::channel();
         if !self.submit_reset(lane, ReplySender::Chan(tx)) {
-            anyhow::bail!("batch front unavailable");
+            return Err(super::wire::unavailable_error());
         }
         rx.recv()
             .map(|_| ())
-            .map_err(|_| anyhow!("batch front unavailable"))
+            .map_err(|_| super::wire::unavailable_error())
     }
 
     fn sweeper_loop(&self) {
         // persistent streaming hub, one lane per connection, at the
         // model's precision — plus the pooled stateless predict engines
         // (both owned by this thread: no locks on the hot path)
-        let mut hub = Hub::new(&self.model, STREAM_LANES);
+        let mut hub = Hub::new(&self.model, STREAM_LANES, self.trainer_budget);
         let mut pool = EnginePool::new(Arc::clone(&self.model));
         loop {
             let drained = {
@@ -845,7 +1259,43 @@ impl BatchFront {
                 }
             };
             self.sweeps.fetch_add(1, Ordering::Relaxed);
-            self.process(&mut hub, &mut pool, drained);
+            // Panic containment: one drained batch runs under
+            // catch_unwind, so an engine assert (or an injected fault)
+            // cannot take the shard down. The lanes this batch touches
+            // are recorded FIRST — they are the only lanes whose hub
+            // state can be mid-update when the unwind happens — and are
+            // quarantined (poisoned) on panic, while every untouched
+            // lane keeps bit-identical state and the sweeper restarts
+            // in place on the same hub. Replies the unwound batch never
+            // sent are dropped, which both transports surface as the
+            // deterministic "unavailable" error.
+            let touched: Vec<usize> =
+                drained.iter().filter_map(|j| j.lane()).collect();
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || self.process(&mut hub, &mut pool, drained),
+            ));
+            if let Err(_payload) = res {
+                #[cfg(any(test, feature = "fault-inject"))]
+                if _payload.is::<super::fault::SweeperKill>() {
+                    // injected hard kill: escalate to the outer handler
+                    // (permanent front death — the legacy failure mode
+                    // the chaos suite migrates away from)
+                    std::panic::resume_unwind(_payload);
+                }
+                let n_poisoned = touched.len();
+                for lane in touched {
+                    hub.poison(lane);
+                }
+                // pooled predict engines may be mid-update too; rebuild
+                // them (cheap, lazily refilled — the hub lanes are what
+                // must survive)
+                pool = EnginePool::new(Arc::clone(&self.model));
+                self.panics.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "lr-batch-sweeper: sweep panicked; quarantined \
+                     {n_poisoned} lane job(s), sweeper restarted in place"
+                );
+            }
         }
     }
 
@@ -871,7 +1321,7 @@ impl BatchFront {
                     .collect();
                 let outs = hub.sweep_streams(&reqs);
                 for ((_, _, reply), out) in round.drain(..).zip(outs) {
-                    reply.send(out);
+                    reply.send(Reply::Vals(out));
                 }
                 in_round.fill(false);
             };
@@ -880,6 +1330,11 @@ impl BatchFront {
             match job {
                 FrontJob::Predict { input, reply } => predicts.push((input, reply)),
                 FrontJob::Stream { lane, input, reply } => {
+                    super::fault::sweeper_job_tick();
+                    if hub.poisoned(lane) {
+                        reply.send(Reply::Err("lane_poisoned"));
+                        continue;
+                    }
                     if in_round[lane] {
                         // second request for a lane: close the round first
                         // so per-lane order is preserved
@@ -894,20 +1349,68 @@ impl BatchFront {
                     target,
                     reply,
                 } => {
+                    super::fault::sweeper_job_tick();
+                    if hub.poisoned(lane) {
+                        reply.send(Reply::Err("lane_poisoned"));
+                        continue;
+                    }
                     // stateful like Stream: close any open round touching
                     // this lane first so per-lane order is preserved
                     if in_round[lane] {
                         flush_round(&mut round, &mut in_round, hub);
                     }
-                    let rows = hub.train(lane, &input, &target);
-                    reply.send(vec![rows as f64]);
+                    reply.send(hub.train(lane, &input, &target));
                 }
                 FrontJob::Commit { lane, alpha, reply } => {
+                    super::fault::sweeper_job_tick();
+                    if hub.poisoned(lane) {
+                        reply.send(Reply::Err("lane_poisoned"));
+                        continue;
+                    }
                     if in_round[lane] {
                         flush_round(&mut round, &mut in_round, hub);
                     }
-                    let code = hub.commit(lane, alpha);
-                    reply.send(vec![code]);
+                    reply.send(hub.commit(lane, alpha));
+                }
+                FrontJob::Rollback {
+                    lane,
+                    version,
+                    reply,
+                } => {
+                    super::fault::sweeper_job_tick();
+                    if hub.poisoned(lane) {
+                        reply.send(Reply::Err("lane_poisoned"));
+                        continue;
+                    }
+                    if in_round[lane] {
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    reply.send(hub.rollback(lane, version));
+                }
+                FrontJob::Checkpoint { lane, reply } => {
+                    super::fault::sweeper_job_tick();
+                    if hub.poisoned(lane) {
+                        // a poisoned lane's state may be mid-update:
+                        // snapshotting it would capture (and later
+                        // faithfully restore) corruption
+                        reply.send(Reply::Err("lane_poisoned"));
+                        continue;
+                    }
+                    // the snapshot must include every op already in this
+                    // batch for the lane, so close any open round first
+                    if in_round[lane] {
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    reply.send(hub.checkpoint(lane));
+                }
+                FrontJob::Restore { lane, snap, reply } => {
+                    super::fault::sweeper_job_tick();
+                    // restore is the recovery op: allowed (and poison-
+                    // clearing) on a quarantined lane
+                    if in_round[lane] {
+                        flush_round(&mut round, &mut in_round, hub);
+                    }
+                    reply.send(hub.restore(lane, &snap));
                 }
                 FrontJob::Reset { lane, reply } => {
                     if in_round[lane] {
@@ -915,7 +1418,7 @@ impl BatchFront {
                     }
                     hub.reset_lane(lane);
                     if let Some(tx) = reply {
-                        tx.send(Vec::new());
+                        tx.send(Reply::Vals(Vec::new()));
                     }
                 }
             }
@@ -945,7 +1448,7 @@ impl BatchFront {
                     .collect();
                 let outs = engine.sweep_streams(&reqs);
                 for ((_, reply), out) in chunk.into_iter().zip(outs) {
-                    reply.send(out);
+                    reply.send(Reply::Vals(out));
                 }
             } else {
                 // general D_out: zero-padded full sweep (padded steps and
@@ -970,7 +1473,7 @@ impl BatchFront {
                             out.push(y[(t, b * d_out + j)]);
                         }
                     }
-                    reply.send(out);
+                    reply.send(Reply::Vals(out));
                 }
             }
         }
@@ -995,7 +1498,7 @@ mod tests {
             .collect();
         // submit all jobs before the sweeper can drain them one by one:
         // hold the queue lock while enqueueing
-        let replies: Vec<mpsc::Receiver<Vec<f64>>> = {
+        let replies: Vec<mpsc::Receiver<Reply>> = {
             let mut st = front.state.lock().unwrap();
             inputs
                 .iter()
@@ -1011,7 +1514,10 @@ mod tests {
         };
         front.cv.notify_all();
         for (input, rx) in inputs.iter().zip(replies) {
-            let batched = rx.recv().unwrap();
+            let batched = match rx.recv().unwrap() {
+                Reply::Vals(v) => v,
+                other => panic!("expected values, got {other:?}"),
+            };
             let sequential = model.predict(input);
             assert_eq!(batched.len(), sequential.len());
             for (a, b) in batched.iter().zip(&sequential) {
@@ -1218,11 +1724,14 @@ mod tests {
     #[test]
     fn event_reply_delivers_exactly_one_completion() {
         let q = CompletionQueue::new(Box::new(|| {}));
-        EventReply::new(7, Arc::clone(&q)).complete(vec![1.0]);
+        EventReply::new(7, Arc::clone(&q)).complete(Reply::Vals(vec![1.0]));
         drop(EventReply::new(8, Arc::clone(&q)));
         let drained = q.drain();
         assert_eq!(drained.len(), 2);
-        assert!(matches!(&drained[0], (7, Completion::Done(v)) if *v == [1.0]));
+        assert!(matches!(
+            &drained[0],
+            (7, Completion::Done(Reply::Vals(v))) if *v == [1.0]
+        ));
         assert!(matches!(&drained[1], (8, Completion::Dropped)));
     }
 
@@ -1265,7 +1774,7 @@ mod tests {
         let drained = q.drain();
         assert_eq!(drained.len(), 1);
         match &drained[0] {
-            (42, Completion::Done(out)) => {
+            (42, Completion::Done(Reply::Vals(out))) => {
                 let want = model.predict(&input);
                 assert_eq!(out.len(), want.len());
                 for (a, b) in out.iter().zip(&want) {
@@ -1465,5 +1974,214 @@ mod tests {
             );
             front.shutdown();
         }
+    }
+
+    /// The stable machine-readable code of a typed serving error.
+    fn err_code(e: &anyhow::Error) -> &'static str {
+        e.downcast_ref::<super::super::wire::WireError>()
+            .unwrap_or_else(|| panic!("expected a typed wire error, got {e:#}"))
+            .code
+    }
+
+    #[test]
+    fn checkpoint_restore_round_trips_bit_exactly_at_both_precisions() {
+        for make in [make_model as fn() -> super::super::Model, make_model_f32] {
+            let model = Arc::new(make());
+            let task = MsoTask::new(1);
+            let input = &task.input[..60];
+            let front = BatchFront::start(Arc::clone(&model));
+            // uninterrupted reference lane
+            let r = front.acquire_lane().unwrap();
+            let reference = front.stream(r, input.to_vec()).unwrap();
+            // interrupted lane: half the stream, then snapshot
+            let a = front.acquire_lane().unwrap();
+            let first = front.stream(a, input[..30].to_vec()).unwrap();
+            assert_eq!(first, reference[..30]);
+            let snap = front.checkpoint(a).unwrap();
+            // migrate: restore onto a DIFFERENT lane of a DIFFERENT front
+            let other = BatchFront::start(Arc::clone(&model));
+            let b = other.acquire_lane().unwrap();
+            assert_eq!(other.restore(b, snap.clone()).unwrap(), 0);
+            // checkpoint ∘ restore must be the identity on lane values
+            assert_eq!(other.checkpoint(b).unwrap(), snap);
+            let rest = other.stream(b, input[30..].to_vec()).unwrap();
+            assert_eq!(
+                rest,
+                reference[30..],
+                "restored lane diverged from the uninterrupted stream"
+            );
+            // with an accumulator: the trainer snapshot round-trips and
+            // commits to the same readout as the original lane
+            let target: Vec<f64> =
+                input[..30].iter().map(|x| 0.25 - x).collect();
+            assert_eq!(
+                other.train(b, input[..30].to_vec(), target).unwrap(),
+                30
+            );
+            let snap2 = other.checkpoint(b).unwrap();
+            assert!(snap2.trainer.is_some(), "trainer missing from snapshot");
+            let c = other.acquire_lane().unwrap();
+            assert_eq!(other.restore(c, snap2.clone()).unwrap(), 0);
+            assert_eq!(other.checkpoint(c).unwrap(), snap2);
+            // α above the f32 Gram noise floor so both precisions solve
+            assert_eq!(other.commit(b, 1e-2).unwrap(), 1);
+            assert_eq!(other.commit(c, 1e-2).unwrap(), 1);
+            let gb = other.stream(b, input[30..40].to_vec()).unwrap();
+            let gc = other.stream(c, input[30..40].to_vec()).unwrap();
+            assert_eq!(gb, gc, "commit from a restored accumulator diverged");
+            front.shutdown();
+            other.shutdown();
+        }
+    }
+
+    #[test]
+    fn rollback_reinstalls_retained_versions_without_dropping_rows() {
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        // twin lanes with identical histories; only `a` rolls back
+        let a = front.acquire_lane().unwrap();
+        let twin = front.acquire_lane().unwrap();
+        let t1: Vec<f64> = task.input[..80].iter().map(|x| 0.5 - 2.0 * x).collect();
+        let t2: Vec<f64> = task.input[80..120].iter().map(|x| 0.5 - 2.0 * x).collect();
+        for lane in [a, twin] {
+            assert_eq!(front.train(lane, task.input[..80].to_vec(), t1.clone()).unwrap(), 80);
+            assert_eq!(front.commit(lane, 1e-8).unwrap(), 1, "versions start at 1");
+            assert_eq!(front.train(lane, task.input[80..120].to_vec(), t2.clone()).unwrap(), 120);
+            assert_eq!(front.commit(lane, 1e-6).unwrap(), 2, "ids are monotonic");
+        }
+        // unknown version: typed refusal, lane unchanged
+        let err = front.rollback(a, 7).unwrap_err();
+        assert_eq!(err_code(&err), "rollback_unknown_version");
+        // bounce base → v1; the twin goes straight to v1
+        assert_eq!(front.rollback(a, 0).unwrap(), 0);
+        assert_eq!(front.rollback(a, 1).unwrap(), 1);
+        assert_eq!(front.rollback(twin, 1).unwrap(), 1);
+        // same state ⊕ same readout ⇒ bit-identical continuations
+        let ga = front.stream(a, task.input[120..150].to_vec()).unwrap();
+        let gt = front.stream(twin, task.input[120..150].to_vec()).unwrap();
+        assert_eq!(ga, gt, "rollback did not reinstall version 1 bit-exactly");
+        // the accumulator survived every swap: rows continue, id mints 3
+        assert_eq!(
+            front.train(a, task.input[150..160].to_vec(), vec![0.0; 10]).unwrap(),
+            130
+        );
+        assert_eq!(front.commit(a, 1e-8).unwrap(), 3);
+        front.shutdown();
+    }
+
+    #[test]
+    fn sweeper_panic_is_contained_and_restore_lifts_quarantine() {
+        use super::super::fault;
+        let model = Arc::new(make_model());
+        // dedicated sweeper thread name: the armed fuse is scoped to it,
+        // so parallel tests' sweepers can never consume this fault
+        let front = BatchFront::start_configured(
+            Arc::clone(&model),
+            0,
+            "lr-fault-unit-sweeper".into(),
+            usize::MAX,
+        );
+        let task = MsoTask::new(1);
+        let victim = front.acquire_lane().unwrap();
+        let bystander = front.acquire_lane().unwrap();
+        let _ = front.stream(victim, task.input[..20].to_vec()).unwrap();
+        let by_first = front.stream(bystander, task.input[..20].to_vec()).unwrap();
+        // last-known-good checkpoint to recover the victim with
+        let cp = front.checkpoint(victim).unwrap();
+        // uninterrupted reference for both lanes (identical histories)
+        let reference = {
+            let f2 = BatchFront::start(Arc::clone(&model));
+            let l = f2.acquire_lane().unwrap();
+            let mut all = f2.stream(l, task.input[..20].to_vec()).unwrap();
+            all.extend(f2.stream(l, task.input[20..40].to_vec()).unwrap());
+            f2.shutdown();
+            all
+        };
+        assert_eq!(by_first, reference[..20]);
+        // arm: the next stateful job on THIS front's sweeper panics
+        fault::target_sweeper_thread("lr-fault-unit-sweeper");
+        fault::arm_sweeper_panic(1);
+        let err = front
+            .stream(victim, task.input[20..30].to_vec())
+            .unwrap_err();
+        assert_eq!(
+            err_code(&err),
+            "unavailable",
+            "the unwound job's reply must surface as unavailable"
+        );
+        assert_eq!(front.sweeper_panics(), 1, "containment must count the panic");
+        // the sweeper restarted in place: the untouched lane still
+        // serves, bit-identically to its uninterrupted continuation
+        let by_rest = front.stream(bystander, task.input[20..40].to_vec()).unwrap();
+        assert_eq!(
+            by_rest,
+            reference[20..],
+            "surviving lane lost bit-identity after the contained panic"
+        );
+        // the victim is quarantined with the typed code, and checkpoint
+        // refuses too (it would snapshot possibly-corrupt state)
+        let err = front.stream(victim, task.input[20..30].to_vec()).unwrap_err();
+        assert_eq!(err_code(&err), "lane_poisoned");
+        let err = front.checkpoint(victim).unwrap_err();
+        assert_eq!(err_code(&err), "lane_poisoned");
+        // restore IS the recovery op: quarantine lifts, state recovers
+        // bit-exactly from the last checkpoint
+        assert_eq!(front.restore(victim, cp).unwrap(), 0);
+        let got = front.stream(victim, task.input[20..40].to_vec()).unwrap();
+        assert_eq!(got, reference[20..], "recovered lane diverged");
+        fault::disarm();
+        front.shutdown();
+    }
+
+    #[test]
+    fn trainer_budget_refuses_charges_and_releases_exactly() {
+        use crate::readout::acc_cost_bytes;
+        let model = Arc::new(make_model());
+        let n = model.esn.n();
+        let one = acc_cost_bytes(n, 1, std::mem::size_of::<f64>());
+        let task = MsoTask::new(1);
+        let target: Vec<f64> = task.input[..10].iter().map(|x| 1.0 - x).collect();
+        // budget below one accumulator: the FIRST train refuses, typed
+        let starve = BatchFront::start_configured(
+            Arc::clone(&model),
+            0,
+            "lr-budget-starved-sweeper".into(),
+            one - 1,
+        );
+        let lane = starve.acquire_lane().unwrap();
+        let err = starve
+            .train(lane, task.input[..10].to_vec(), target.clone())
+            .unwrap_err();
+        assert_eq!(err_code(&err), "trainer_budget");
+        // the refusal happens before any state advance: the lane still
+        // streams from zero state, bit-identically to the model path
+        let got = starve.stream(lane, task.input[..10].to_vec()).unwrap();
+        assert_eq!(got, model.predict(&task.input[..10]));
+        starve.shutdown();
+        // budget of exactly one accumulator: first lane trains, second
+        // refuses; reset releases the charge and the second fits again
+        let front = BatchFront::start_configured(
+            Arc::clone(&model),
+            0,
+            "lr-budget-one-sweeper".into(),
+            one,
+        );
+        let a = front.acquire_lane().unwrap();
+        let b = front.acquire_lane().unwrap();
+        assert_eq!(
+            front.train(a, task.input[..10].to_vec(), target.clone()).unwrap(),
+            10
+        );
+        let err = front
+            .train(b, task.input[..10].to_vec(), target.clone())
+            .unwrap_err();
+        assert_eq!(err_code(&err), "trainer_budget");
+        front.reset(a).unwrap();
+        assert_eq!(
+            front.train(b, task.input[..10].to_vec(), target).unwrap(),
+            10
+        );
+        front.shutdown();
     }
 }

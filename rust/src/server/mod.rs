@@ -94,6 +94,7 @@
 //! and lane recycling drop all training state. See DESIGN.md §9 and
 //! `wire.rs` for the protocol and invariants.
 
+pub mod fault;
 mod front;
 #[cfg(target_os = "linux")]
 mod poll;
@@ -101,11 +102,11 @@ mod pool;
 mod shard;
 mod wire;
 
-pub use front::BatchFront;
+pub use front::{BatchFront, LaneSnapshot, Reply};
 pub use shard::ShardedFront;
 pub use wire::{
     serve, serve_on, serve_on_opts, serve_sharded, serve_with_holdoff, Client,
-    ServeOpts,
+    ServeOpts, WireError,
 };
 
 use std::sync::Mutex;

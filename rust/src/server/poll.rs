@@ -64,15 +64,14 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::Json;
 
-use super::front::{
-    commit_code_error, Completion, CompletionQueue, EventReply, ReplySender,
-};
+use super::front::{Completion, CompletionQueue, EventReply, Reply, ReplySender};
 use super::shard::ShardedFront;
 use super::wire::{
-    error_response, fallback_key, guard_streamable, guard_train_rows,
-    hub_full_train_error, info_response, ip_key, nothing_to_commit_error,
-    ok_response, parse_op, predict_response, stream_fallback, stream_response,
-    train_response, try_acquire_lane, ConnState, Op,
+    checkpoint_response, coded_error, error_response, fallback_key,
+    guard_streamable, guard_train_rows, hub_full_train_error, info_response,
+    ip_key, no_lane_error, nothing_to_commit_error, ok_response, parse_op,
+    predict_response, stream_fallback, stream_response, train_response,
+    try_acquire_lane, unavailable_error, version_response, ConnState, Op,
 };
 
 // ---------------------------------------------------------------------------
@@ -263,12 +262,26 @@ const MAX_LINE_BYTES: usize = 64 << 20;
 /// yields the poll thread to its peers every `READ_BUDGET` bytes
 /// instead of monopolizing the loop until its socket runs dry.
 const READ_BUDGET: usize = 256 << 10;
-/// Write-side backpressure: while more than this many unflushed response
-/// bytes are pending on a connection, the loop stops reading from it
-/// (EPOLLIN dropped), so a client that pipelines requests without ever
-/// draining replies throttles ITSELF instead of growing server memory —
-/// the event-loop analogue of the threaded path blocking in `write_all`.
-const WBUF_HIGH_WATER: usize = 1 << 20;
+/// Shared write-buffer budget for the whole poll loop: the per-
+/// connection backpressure high-water mark is this budget apportioned
+/// across the live connections (see [`wbuf_high_water`]), so worst-case
+/// unflushed-response memory is bounded per PROCESS, not per connection.
+const WBUF_TOTAL_BUDGET: usize = 64 << 20;
+/// Write-side backpressure threshold for one connection: while more than
+/// this many unflushed response bytes are pending, the loop stops
+/// reading from it (EPOLLIN dropped), so a client that pipelines
+/// requests without ever draining replies throttles ITSELF instead of
+/// growing server memory — the event-loop analogue of the threaded path
+/// blocking in `write_all`.
+///
+/// The mark adapts to load: `WBUF_TOTAL_BUDGET / live` clamped to
+/// [64 KiB, 1 MiB]. Up to 64 connections each get the old fixed 1 MiB;
+/// past that the shared budget divides down to a 64 KiB floor (≈ one
+/// max-size pipelined burst of replies), so 10k slow-draining clients
+/// pin ~640 MB in the old scheme but ≤ 64 MiB + one response each here.
+fn wbuf_high_water(live: usize) -> usize {
+    (WBUF_TOTAL_BUDGET / live.max(1)).clamp(64 << 10, 1 << 20)
+}
 /// Events drained per `epoll_wait` round.
 const EVENT_BATCH: usize = 128;
 
@@ -285,6 +298,9 @@ enum PendingKind {
     Stream,
     Train,
     Commit,
+    Rollback,
+    Checkpoint,
+    Restore,
     Reset,
 }
 
@@ -798,6 +814,61 @@ impl EventLoop {
                     &nothing_to_commit_error(),
                 ))),
             },
+            Ok(Op::Rollback { version }) => match conn.state.lane {
+                Some(lane) => {
+                    let (token, reply) = self.event_reply(id);
+                    conn.slots.push_back(Slot::Waiting {
+                        token,
+                        kind: PendingKind::Rollback,
+                    });
+                    front
+                        .shard(conn.state.shard_idx)
+                        .submit_rollback(lane, version, reply);
+                }
+                None => conn.slots.push_back(Slot::Ready(error_response(
+                    &no_lane_error("rollback"),
+                ))),
+            },
+            Ok(Op::Checkpoint) => match conn.state.lane {
+                Some(lane) => {
+                    let (token, reply) = self.event_reply(id);
+                    conn.slots.push_back(Slot::Waiting {
+                        token,
+                        kind: PendingKind::Checkpoint,
+                    });
+                    front
+                        .shard(conn.state.shard_idx)
+                        .submit_checkpoint(lane, reply);
+                }
+                None => conn.slots.push_back(Slot::Ready(error_response(
+                    &no_lane_error("checkpoint"),
+                ))),
+            },
+            Ok(Op::Restore(snap)) => {
+                if let Err(e) = guard_streamable(front.model()) {
+                    conn.slots.push_back(Slot::Ready(error_response(&e)));
+                    return;
+                }
+                // a restore adopts (or acquires) this connection's hub
+                // lane — the migration / failover entry point, so it may
+                // claim a lane exactly like stream/train do
+                try_acquire_lane(&front, &mut conn.state);
+                match conn.state.lane {
+                    Some(lane) => {
+                        let (token, reply) = self.event_reply(id);
+                        conn.slots.push_back(Slot::Waiting {
+                            token,
+                            kind: PendingKind::Restore,
+                        });
+                        front
+                            .shard(conn.state.shard_idx)
+                            .submit_restore(lane, snap, reply);
+                    }
+                    None => conn.slots.push_back(Slot::Ready(error_response(
+                        &hub_full_train_error(),
+                    ))),
+                }
+            }
             Ok(Op::Reset) => {
                 conn.state.clear_local();
                 match conn.state.lane {
@@ -866,8 +937,10 @@ impl EventLoop {
         let pending = conn.wbuf.len() - conn.wpos;
         // backpressure: stop reading while the peer isn't draining its
         // responses (resumes automatically — EPOLLOUT flushes call back
-        // into pump, which re-adds EPOLLIN once below the mark)
-        if !conn.eof && pending <= WBUF_HIGH_WATER {
+        // into pump, which re-adds EPOLLIN once below the mark). The
+        // mark is the shared budget over the live population: `conn` is
+        // temporarily out of `self.conns`, hence the +1.
+        if !conn.eof && pending <= wbuf_high_water(self.conns.len() + 1) {
             want |= EPOLLIN | EPOLLRDHUP;
         }
         if pending > 0 {
@@ -1036,53 +1109,96 @@ fn resolve_slot(
     completion: Completion,
     front: &ShardedFront,
 ) {
-    for slot in conn.slots.iter_mut() {
-        let Slot::Waiting { token: t, kind } = slot else {
-            continue;
-        };
-        if *t != token {
-            continue;
-        }
-        let json = match (kind, completion) {
-            (PendingKind::Predict { input, queued_at }, Completion::Done(out)) => {
-                predict_response(out, input.len(), queued_at.elapsed().as_secs_f64())
-            }
-            (PendingKind::Predict { input, queued_at }, Completion::Dropped) => {
-                // sweeper gone: direct same-precision computation, just
-                // like BatchFront::predict's fallback — still identical
-                // bits on the wire
-                let steps = input.len();
-                let out = front.model().predict(input);
-                predict_response(out, steps, queued_at.elapsed().as_secs_f64())
-            }
-            (PendingKind::Stream, Completion::Done(outs)) => stream_response(outs),
-            (PendingKind::Train, Completion::Done(v)) => {
-                train_response(v.first().copied().unwrap_or(0.0) as u64)
-            }
-            (PendingKind::Commit, Completion::Done(v)) => {
-                // the sweeper answers with a COMMIT_* code; map it to the
-                // same response the threaded wrapper produces
-                match commit_code_error(
-                    v.first().copied().unwrap_or(f64::NAN),
-                ) {
-                    None => ok_response(),
-                    Some(e) => error_response(&e),
-                }
-            }
-            (PendingKind::Reset, Completion::Done(_)) => ok_response(),
-            (
-                PendingKind::Stream | PendingKind::Train | PendingKind::Commit
-                | PendingKind::Reset,
-                Completion::Dropped,
-            ) => error_response(&anyhow!("batch front unavailable")),
-        };
-        *slot = Slot::Ready(json);
+    let Some(idx) = conn
+        .slots
+        .iter()
+        .position(|s| matches!(s, Slot::Waiting { token: t, .. } if *t == token))
+    else {
         return;
+    };
+    // take the kind OUT of the slot so the arms below own it and the
+    // connection state stays borrowable (restore clears local fallback)
+    let Slot::Waiting { kind, .. } =
+        std::mem::replace(&mut conn.slots[idx], Slot::Ready(Json::Null))
+    else {
+        unreachable!("position() matched a Waiting slot");
+    };
+    // a restore that comes back with values installed its snapshot: the
+    // connection-local fallback state (if any) is superseded, exactly
+    // like the threaded path's clear_local after a successful restore
+    if matches!(
+        (&kind, &completion),
+        (PendingKind::Restore, Completion::Done(Reply::Vals(_)))
+    ) {
+        conn.state.clear_local();
     }
+    let json = match (kind, completion) {
+        (
+            PendingKind::Predict { input, queued_at },
+            Completion::Done(Reply::Vals(out)),
+        ) => predict_response(out, input.len(), queued_at.elapsed().as_secs_f64()),
+        (PendingKind::Predict { input, queued_at }, _) => {
+            // sweeper gone (job dropped or refused): direct same-
+            // precision computation, just like BatchFront::predict's
+            // fallback — still identical bits on the wire
+            let steps = input.len();
+            let out = front.model().predict(input);
+            predict_response(out, steps, queued_at.elapsed().as_secs_f64())
+        }
+        // typed sweeper refusal (lane_poisoned, trainer_budget,
+        // commit_empty, …): same coded response as the threaded wrapper
+        (_, Completion::Done(Reply::Err(code))) => {
+            error_response(&coded_error(code))
+        }
+        (PendingKind::Stream, Completion::Done(Reply::Vals(outs))) => {
+            stream_response(outs)
+        }
+        (PendingKind::Train, Completion::Done(Reply::Vals(v))) => {
+            train_response(v.first().copied().unwrap_or(0.0) as u64)
+        }
+        // commit / rollback / restore all answer with the lane's active
+        // readout version
+        (
+            PendingKind::Commit | PendingKind::Rollback | PendingKind::Restore,
+            Completion::Done(Reply::Vals(v)),
+        ) => version_response(v.first().copied().unwrap_or(0.0) as u64),
+        (PendingKind::Checkpoint, Completion::Done(Reply::Snap(snap))) => {
+            checkpoint_response(&snap)
+        }
+        (PendingKind::Reset, Completion::Done(_)) => ok_response(),
+        // sweeper dead before the job ran, or a reply shape impossible
+        // for the op: the deterministic "unavailable" error, same as the
+        // threaded wrappers' dropped-channel mapping
+        _ => error_response(&unavailable_error()),
+    };
+    conn.slots[idx] = Slot::Ready(json);
 }
 
-/// Write as much of the pending buffer as the socket accepts.
+/// Write as much of the pending buffer as the socket accepts. Under an
+/// armed short-write fault ([`super::fault::set_short_writes`]) the call
+/// is shaped to at most ONE chunk-bounded `write(2)` after the
+/// configured delay, then behaves as if the socket reported WouldBlock —
+/// a deterministic slow reader for the chaos suite (level-triggered
+/// EPOLLOUT re-delivers, so the buffer still drains chunk by chunk).
 fn flush(conn: &mut Conn) {
+    if let Some((chunk, delay)) = super::fault::short_write_chunk() {
+        if conn.wpos >= conn.wbuf.len() {
+            return;
+        }
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        let end = (conn.wpos + chunk.max(1)).min(conn.wbuf.len());
+        match conn.sock.write(&conn.wbuf[conn.wpos..end]) {
+            Ok(0) => conn.dead = true,
+            Ok(n) => conn.wpos += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => conn.dead = true,
+        }
+        return;
+    }
     while conn.wpos < conn.wbuf.len() {
         match conn.sock.write(&conn.wbuf[conn.wpos..]) {
             Ok(0) => {
@@ -1199,6 +1315,20 @@ mod tests {
         wheel.schedule(7, Duration::from_millis(100));
         let again = wheel.expired(t0 + timeout + Duration::from_millis(900));
         assert_eq!(again, vec![7]);
+    }
+
+    #[test]
+    fn wbuf_high_water_apportions_the_shared_budget() {
+        // up to 64 live connections each keep the full 1 MiB ceiling
+        assert_eq!(wbuf_high_water(1), 1 << 20);
+        assert_eq!(wbuf_high_water(64), 1 << 20);
+        // past that the 64 MiB process budget divides down
+        assert_eq!(wbuf_high_water(128), 512 << 10);
+        assert_eq!(wbuf_high_water(1024), 64 << 10);
+        // the floor keeps a huge fleet from starving each connection
+        assert_eq!(wbuf_high_water(100_000), 64 << 10);
+        // degenerate zero-live input must not divide by zero
+        assert_eq!(wbuf_high_water(0), 1 << 20);
     }
 
     #[test]

@@ -71,7 +71,8 @@ impl EnginePool {
             Entry::Occupied(e) => e.into_mut(),
             Entry::Vacant(v) => {
                 self.built += 1;
-                v.insert(Hub::new(&self.model, bucket))
+                // pooled predict engines never train, so no budget
+                v.insert(Hub::new(&self.model, bucket, usize::MAX))
             }
         };
         hub.reset();

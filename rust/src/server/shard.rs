@@ -53,13 +53,27 @@ impl ShardedFront {
         shards: usize,
         holdoff_us: u64,
     ) -> Arc<Self> {
+        Self::start_configured(model, shards, holdoff_us, usize::MAX)
+    }
+
+    /// [`Self::start_with_holdoff`] with a per-shard trainer memory
+    /// budget in bytes (`usize::MAX` = unlimited). Each shard's hub
+    /// enforces the budget independently — lanes never migrate between
+    /// shards, so a per-shard cap is a per-connection-population cap.
+    pub fn start_configured(
+        model: Arc<Model>,
+        shards: usize,
+        holdoff_us: u64,
+        trainer_budget: usize,
+    ) -> Arc<Self> {
         let shards = shards.max(1);
         let fronts = (0..shards)
             .map(|i| {
-                BatchFront::start_named(
+                BatchFront::start_configured(
                     Arc::clone(&model),
                     holdoff_us,
                     format!("lr-shard-{i}-sweeper"),
+                    trainer_budget,
                 )
             })
             .collect();
@@ -134,7 +148,7 @@ impl ShardedFront {
     pub fn predict_async(
         &self,
         input: Vec<f64>,
-    ) -> Option<mpsc::Receiver<Vec<f64>>> {
+    ) -> Option<mpsc::Receiver<super::front::Reply>> {
         self.pick_shard().predict_async(input)
     }
 
@@ -311,7 +325,10 @@ mod tests {
             .collect();
         front.shutdown();
         for (input, rx) in inputs.iter().zip(replies) {
-            let got = rx.recv().expect("queued job answered during drain");
+            let got = match rx.recv().expect("queued job answered during drain") {
+                super::super::front::Reply::Vals(v) => v,
+                other => panic!("expected values, got {other:?}"),
+            };
             let want = model.predict(input);
             assert_eq!(got.len(), want.len());
             for (a, b) in got.iter().zip(&want) {

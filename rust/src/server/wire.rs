@@ -16,12 +16,47 @@
 //! → {"op": "commit", "alpha": 1e-8}             solve the accumulated
 //!                                               ridge system, hot-swap
 //!                                               this connection's readout
+//! → {"op": "rollback", "version": 3}            reinstall a retained
+//!                                               committed readout (0 =
+//!                                               base model readout)
+//! → {"op": "checkpoint"}                        snapshot this connection's
+//!                                               full lane value
+//! → {"op": "restore", "checkpoint": {…}}        reinstall a snapshot
+//!                                               bit-exactly (also the
+//!                                               post-fault recovery op)
 //! → {"op": "reset"}                             zero this connection's
 //!                                               state AND training
 //! → {"op": "info"}
 //! ← {"ok": true, "output": […], "steps_per_sec": …}
 //! ← {"ok": true, "rows": …}                     (train)
+//! ← {"ok": true, "version": …}                  (commit/rollback/restore)
+//! ← {"ok": true, "checkpoint": {…}}             (checkpoint)
+//! ← {"ok": false, "error": "…", "code": "…"}    (typed failures — see
+//!                                               DESIGN.md §10 for the
+//!                                               error-code contract)
 //! ```
+//!
+//! ## Fault tolerance (checkpoint / restore / rollback)
+//!
+//! `checkpoint` snapshots the connection's full lane value — dynamics
+//! state, online-trainer accumulator, and the committed-readout version
+//! ring — as a JSON object whose every number round-trips f64
+//! bit-exactly (the crate's JSON writer prints shortest-form floats).
+//! `restore` validates such a snapshot fully and installs it atomically
+//! on the connection's lane (acquiring one if needed), reproducing the
+//! lane bit-for-bit: a client that checkpoints periodically can
+//! reconnect after any failure — including a contained sweeper panic
+//! that quarantined its lane — restore, and continue as if
+//! uninterrupted. The same snapshot restores onto a different
+//! connection, server, or shard serving the same model at the same
+//! precision, which makes it the lane-migration primitive. `commit`
+//! answers a monotonically increasing per-lane version id and retains
+//! each committed readout in a bounded per-lane ring ([`VERSION_RING`]
+//! deep, sweeper-side); `rollback` reinstalls any retained version — or
+//! version 0, the base model readout — atomically, WITHOUT dropping the
+//! trainer's accumulated rows. Failures answer `{"ok": false, "error",
+//! "code"}` with a stable machine-readable [`WireError`] code, identical
+//! on both transports.
 //!
 //! ## Online training (train / commit)
 //!
@@ -93,10 +128,12 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use crate::readout::GramAccRaw;
 use crate::reservoir::{BatchEsn, LaneReadout};
 use crate::util::json::{parse, Json};
 use crate::util::Timer;
 
+use super::front::LaneSnapshot;
 use super::shard::ShardedFront;
 use super::{Model, Precision};
 
@@ -214,6 +251,7 @@ pub fn serve_on(
             shards,
             threaded,
             idle_timeout: None,
+            trainer_budget: None,
         },
     )
 }
@@ -235,6 +273,13 @@ pub struct ServeOpts {
     /// covered). A connection with an in-flight request or an unflushed
     /// response is never reaped.
     pub idle_timeout: Option<Duration>,
+    /// Per-shard online-trainer memory budget in bytes (`None` =
+    /// unlimited): the lazily-allocated per-lane Gram accumulators on
+    /// one shard may not exceed this, and a `train` that would answers
+    /// the typed `trainer_budget` error instead of allocating — so a
+    /// reconnecting (or hostile) client population can't grow sweeper
+    /// memory without bound. `--trainer-budget-mb` on the CLI.
+    pub trainer_budget: Option<usize>,
 }
 
 /// [`serve_on`] with the full option set.
@@ -246,7 +291,12 @@ pub fn serve_on_opts(
 ) -> Result<SocketAddr> {
     let addr = listener.local_addr()?;
     let shards = opts.shards.unwrap_or_else(default_shards);
-    let front = ShardedFront::start_with_holdoff(model, shards, opts.holdoff_us);
+    let front = ShardedFront::start_configured(
+        model,
+        shards,
+        opts.holdoff_us,
+        opts.trainer_budget.unwrap_or(usize::MAX),
+    );
     let use_event = !opts.threaded && cfg!(target_os = "linux");
     let res = if use_event {
         serve_event(listener, Arc::clone(&front), max_requests, opts.idle_timeout)
@@ -438,22 +488,107 @@ pub(crate) fn guard_streamable(model: &Model) -> Result<()> {
     Ok(())
 }
 
-/// Error for a `train` op on a connection that couldn't get a hub lane.
-/// ONE constructor for both transports — the wire-parity invariant says
-/// the event loop and the threaded path answer identically, so neither
-/// carries its own copy of the message.
-pub(crate) fn hub_full_train_error() -> anyhow::Error {
-    anyhow!(
-        "train requires a hub streaming lane (hub full); \
-         reconnect when capacity frees up"
-    )
+/// A typed serving failure: a stable machine-readable `code` slug plus
+/// the human-readable message. Every failure either transport can emit
+/// resolves through ONE constructor per code ([`coded_error`]), so the
+/// event loop and the threaded path answer each failure mode with the
+/// identical message AND the identical `code` field (the error-code
+/// contract, documented in DESIGN.md §10).
+#[derive(Debug)]
+pub struct WireError {
+    /// Stable machine-readable slug, e.g. `"commit_empty"`,
+    /// `"lane_poisoned"`, `"trainer_budget"`.
+    pub code: &'static str,
+    msg: String,
 }
 
-/// Error for a `commit` with nothing accumulated (no lane / no rows) —
-/// shared by both transports AND by the sweeper's `COMMIT_EMPTY` code
-/// mapping, so every "premature commit" answers with the same message.
+impl WireError {
+    /// The human-readable message (also what `Display` prints).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Wrap a `(code, message)` pair as an `anyhow::Error` carrying a
+/// downcastable [`WireError`].
+pub(crate) fn coded(code: &'static str, msg: impl Into<String>) -> anyhow::Error {
+    anyhow::Error::new(WireError {
+        code,
+        msg: msg.into(),
+    })
+}
+
+/// Resolve a sweeper-side error-code slug into the shared typed wire
+/// error — the single source of each failure mode's `(code, message)`
+/// pair for both transports.
+pub(crate) fn coded_error(code: &'static str) -> anyhow::Error {
+    let msg = match code {
+        "commit_empty" => "nothing to commit: train some rows first",
+        "commit_singular" => {
+            "commit failed: accumulated system is singular \
+             (train more rows or raise alpha)"
+        }
+        "trainer_budget" => {
+            "trainer memory budget exhausted; reset a lane or raise \
+             --trainer-budget-mb"
+        }
+        "lane_poisoned" => {
+            "lane quarantined by a contained sweeper fault; \
+             reset or restore a checkpoint to recover"
+        }
+        "restore_mismatch" => {
+            "restore rejected: snapshot does not match this server's \
+             model/precision or is malformed"
+        }
+        "rollback_unknown_version" => {
+            "rollback failed: version not retained on this lane \
+             (the ring keeps the most recent commits; 0 = base readout)"
+        }
+        "hub_full" => {
+            "this op requires a hub streaming lane (hub full); \
+             reconnect when capacity frees up"
+        }
+        "no_lane" => "this op requires an active streaming lane",
+        "unavailable" => "service unavailable: sweeper not running",
+        other => {
+            debug_assert!(false, "unmapped wire error code {other:?}");
+            "internal serving error"
+        }
+    };
+    coded(code, msg)
+}
+
+/// The deterministic "sweeper gone / job dropped" failure, shared by
+/// every path that observes a dead or restarting sweeper.
+pub(crate) fn unavailable_error() -> anyhow::Error {
+    coded_error("unavailable")
+}
+
+/// Error for a `train` op on a connection that couldn't get a hub lane.
+pub(crate) fn hub_full_train_error() -> anyhow::Error {
+    coded_error("hub_full")
+}
+
+/// Error for a `commit` with nothing accumulated (no lane / no rows).
 pub(crate) fn nothing_to_commit_error() -> anyhow::Error {
-    anyhow!("nothing to commit: train some rows first")
+    coded_error("commit_empty")
+}
+
+/// Error for a lane-resident op (`checkpoint`, `rollback`) on a
+/// connection with no active streaming lane.
+pub(crate) fn no_lane_error(op: &str) -> anyhow::Error {
+    coded(
+        "no_lane",
+        format!("{op} requires an active streaming lane on this connection"),
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -506,6 +641,9 @@ pub(crate) enum Op {
     Stream(Vec<f64>),
     Train { input: Vec<f64>, target: Vec<f64> },
     Commit { alpha: f64 },
+    Rollback { version: u64 },
+    Checkpoint,
+    Restore(Box<LaneSnapshot>),
     Reset,
 }
 
@@ -549,9 +687,191 @@ pub(crate) fn parse_op(line: &str) -> Result<Op> {
             );
             Ok(Op::Commit { alpha })
         }
+        "rollback" => {
+            // default 0 = the base model readout
+            let version = match req.get("version") {
+                None => 0u64,
+                Some(v) => {
+                    let x = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("non-numeric 'version'"))?;
+                    anyhow::ensure!(
+                        x.is_finite() && x >= 0.0 && x.fract() == 0.0,
+                        "'version' must be a non-negative integer"
+                    );
+                    x as u64
+                }
+            };
+            Ok(Op::Rollback { version })
+        }
+        "checkpoint" => Ok(Op::Checkpoint),
+        "restore" => {
+            let snap = req
+                .get("checkpoint")
+                .ok_or_else(|| anyhow!("missing 'checkpoint' object"))?;
+            Ok(Op::Restore(Box::new(snapshot_from_json(snap)?)))
+        }
         "reset" => Ok(Op::Reset),
         other => Err(anyhow!("unknown op {other:?}")),
     }
+}
+
+// ---------------------------------------------------------------------------
+// lane-snapshot wire codec
+// ---------------------------------------------------------------------------
+
+/// Encode a [`LaneSnapshot`] as the wire object of a `checkpoint`
+/// response. Every f64 prints in shortest-form round-trip notation, so
+/// `snapshot_from_json(snapshot_to_json(s)) == s` bit-for-bit (tested).
+pub(crate) fn snapshot_to_json(snap: &LaneSnapshot) -> Json {
+    let nums = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+    let mut fields = vec![
+        ("n", Json::Num(snap.n as f64)),
+        ("precision", Json::Str(snap.precision.name().into())),
+        ("state", nums(&snap.state)),
+        ("active_version", Json::Num(snap.active_version as f64)),
+        ("next_version", Json::Num(snap.next_version as f64)),
+        (
+            "versions",
+            Json::Arr(
+                snap.versions
+                    .iter()
+                    .map(|(v, w, b)| {
+                        Json::obj(vec![
+                            ("version", Json::Num(*v as f64)),
+                            ("w", nums(w)),
+                            ("b", Json::Num(*b)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some(raw) = &snap.trainer {
+        let mut t = vec![
+            ("f", Json::Num(raw.f as f64)),
+            ("d", Json::Num(raw.d as f64)),
+            ("g", nums(&raw.g)),
+            ("b", nums(&raw.b)),
+            ("col_sums", nums(&raw.col_sums)),
+            ("y_sums", nums(&raw.y_sums)),
+            ("rows", Json::Num(raw.rows as f64)),
+        ];
+        if let Some(carry) = &raw.carry {
+            t.push(("carry", nums(carry)));
+        }
+        fields.push(("trainer", Json::obj(t)));
+    }
+    Json::obj(fields)
+}
+
+/// Decode the wire form back into a [`LaneSnapshot`]. Shape errors are
+/// rejected here (malformed JSON); SEMANTIC validation — dimensions
+/// against the serving model, version-ring invariants, finiteness —
+/// happens sweeper-side in `restore`, which answers `restore_mismatch`.
+pub(crate) fn snapshot_from_json(j: &Json) -> Result<LaneSnapshot> {
+    let nums = |field: &str| -> Result<Vec<f64>> {
+        j.get(field)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint: missing '{field}' array"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("checkpoint: non-numeric {field}"))
+            })
+            .collect()
+    };
+    let int = |field: &str| -> Result<u64> {
+        j.get(field)
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as u64)
+            .ok_or_else(|| anyhow!("checkpoint: missing integer '{field}'"))
+    };
+    let precision = match j.get("precision").and_then(Json::as_str) {
+        Some("f64") => Precision::F64,
+        Some("f32") => Precision::F32,
+        _ => return Err(anyhow!("checkpoint: missing 'precision' (f64|f32)")),
+    };
+    let versions = j
+        .get("versions")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("checkpoint: missing 'versions' array"))?
+        .iter()
+        .map(|e| {
+            let v = e
+                .get("version")
+                .and_then(Json::as_f64)
+                .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+                .ok_or_else(|| anyhow!("checkpoint: bad version entry"))?;
+            let w = e
+                .get("w")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("checkpoint: version entry missing 'w'"))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .ok_or_else(|| anyhow!("checkpoint: non-numeric w"))
+                })
+                .collect::<Result<Vec<f64>>>()?;
+            let b = e
+                .get("b")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("checkpoint: version entry missing 'b'"))?;
+            Ok((v as u64, w, b))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let trainer = match j.get("trainer") {
+        None | Some(Json::Null) => None,
+        Some(t) => {
+            let tnums = |field: &str| -> Result<Vec<f64>> {
+                t.get(field)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        anyhow!("checkpoint: trainer missing '{field}'")
+                    })?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64().ok_or_else(|| {
+                            anyhow!("checkpoint: non-numeric trainer {field}")
+                        })
+                    })
+                    .collect()
+            };
+            let tint = |field: &str| -> Result<u64> {
+                t.get(field)
+                    .and_then(Json::as_f64)
+                    .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| {
+                        anyhow!("checkpoint: trainer missing integer '{field}'")
+                    })
+            };
+            let carry = match t.get("carry") {
+                None | Some(Json::Null) => None,
+                Some(_) => Some(tnums("carry")?),
+            };
+            Some(GramAccRaw {
+                f: tint("f")? as usize,
+                d: tint("d")? as usize,
+                g: tnums("g")?,
+                b: tnums("b")?,
+                col_sums: tnums("col_sums")?,
+                y_sums: tnums("y_sums")?,
+                rows: tint("rows")?,
+                carry,
+            })
+        }
+    };
+    Ok(LaneSnapshot {
+        n: int("n")? as usize,
+        precision,
+        state: nums("state")?,
+        trainer,
+        active_version: int("active_version")?,
+        next_version: int("next_version")?,
+        versions,
+    })
 }
 
 pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
@@ -621,11 +941,35 @@ pub(crate) fn ok_response() -> Json {
     Json::obj(vec![("ok", Json::Bool(true))])
 }
 
-pub(crate) fn error_response(e: &anyhow::Error) -> Json {
+/// `commit` / `rollback` / `restore` reply: the lane's now-active
+/// committed-readout version id (0 = base model readout).
+pub(crate) fn version_response(version: u64) -> Json {
     Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("version", Json::Num(version as f64)),
+    ])
+}
+
+/// `checkpoint` reply: the encoded lane snapshot.
+pub(crate) fn checkpoint_response(snap: &LaneSnapshot) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("checkpoint", snapshot_to_json(snap)),
+    ])
+}
+
+pub(crate) fn error_response(e: &anyhow::Error) -> Json {
+    let mut fields = vec![
         ("ok", Json::Bool(false)),
         ("error", Json::Str(format!("{e:#}"))),
-    ])
+    ];
+    // typed failures additionally carry their stable machine-readable
+    // code — identical on both transports by construction (one
+    // constructor per code)
+    if let Some(we) = e.downcast_ref::<WireError>() {
+        fields.push(("code", Json::Str(we.code.into())));
+    }
+    Json::obj(fields)
 }
 
 // ---------------------------------------------------------------------------
@@ -715,11 +1059,39 @@ fn handle_request(
         }
         Op::Commit { alpha } => match conn.lane {
             Some(l) => {
-                home.commit(l, alpha)?;
-                Ok(ok_response())
+                let version = home.commit(l, alpha)?;
+                Ok(version_response(version))
             }
             None => Err(nothing_to_commit_error()),
         },
+        Op::Rollback { version } => match conn.lane {
+            Some(l) => {
+                let active = home.rollback(l, version)?;
+                Ok(version_response(active))
+            }
+            None => Err(no_lane_error("rollback")),
+        },
+        Op::Checkpoint => match conn.lane {
+            Some(l) => {
+                let snap = home.checkpoint(l)?;
+                Ok(checkpoint_response(&snap))
+            }
+            None => Err(no_lane_error("checkpoint")),
+        },
+        Op::Restore(snap) => {
+            guard_streamable(model)?;
+            // restore targets a hub lane (acquiring one on first use,
+            // like stream); it also supersedes any local-fallback state
+            try_acquire_lane(front, conn);
+            match conn.lane {
+                Some(l) => {
+                    let active = home.restore(l, *snap)?;
+                    conn.clear_local();
+                    Ok(version_response(active))
+                }
+                None => Err(hub_full_train_error()),
+            }
+        }
         Op::Reset => {
             if let Some(l) = conn.lane {
                 home.reset(l)?;
@@ -853,18 +1225,66 @@ impl Client {
     }
 
     /// Solve the accumulated ridge system and hot-swap this connection's
-    /// readout; subsequent [`Self::stream`] calls use it.
-    pub fn commit(&mut self, alpha: f64) -> Result<()> {
+    /// readout; subsequent [`Self::stream`] calls use it. Returns the
+    /// newly retained readout's version id (monotonic per lane).
+    pub fn commit(&mut self, alpha: f64) -> Result<u64> {
         let req = Json::obj(vec![
             ("op", Json::Str("commit".into())),
             ("alpha", Json::Num(alpha)),
         ]);
+        self.version_op(&req)
+    }
+
+    /// Atomically reinstall a retained committed-readout version (0 =
+    /// base model readout) without dropping accumulated training rows.
+    /// Returns the now-active version id.
+    pub fn rollback(&mut self, version: u64) -> Result<u64> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("rollback".into())),
+            ("version", Json::Num(version as f64)),
+        ]);
+        self.version_op(&req)
+    }
+
+    /// Snapshot this connection's full lane value (state + trainer +
+    /// committed-readout version ring) as the wire checkpoint object —
+    /// feed it back through [`Self::restore`] (on this connection, a
+    /// reconnect, or a different server over the same model) to continue
+    /// bit-identically.
+    pub fn checkpoint(&mut self) -> Result<Json> {
+        let req = Json::obj(vec![("op", Json::Str("checkpoint".into()))]);
         let resp = self.request(&req)?;
         anyhow::ensure!(
             resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
             "server error: {resp:?}"
         );
-        Ok(())
+        resp.get("checkpoint")
+            .cloned()
+            .ok_or_else(|| anyhow!("missing checkpoint"))
+    }
+
+    /// Install a checkpoint object (from [`Self::checkpoint`]) onto this
+    /// connection's lane, bit-exactly. Returns the restored active
+    /// version id.
+    pub fn restore(&mut self, checkpoint: &Json) -> Result<u64> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("restore".into())),
+            ("checkpoint", checkpoint.clone()),
+        ]);
+        self.version_op(&req)
+    }
+
+    /// Shared request → `{"ok": true, "version": v}` decode.
+    fn version_op(&mut self, req: &Json) -> Result<u64> {
+        let resp = self.request(req)?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        resp.get("version")
+            .and_then(Json::as_f64)
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow!("missing version"))
     }
 }
 
@@ -1249,5 +1669,218 @@ mod tests {
         assert_eq!(again, got);
         drop(client);
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn snapshot_json_codec_round_trips_bit_exactly() {
+        // the checkpoint wire codec must lose NOTHING: every f64 —
+        // including values whose decimal forms are awkward — survives
+        // encode → compact string → parse → decode with identical bits
+        let snap = LaneSnapshot {
+            n: 3,
+            precision: Precision::F64,
+            state: vec![0.1, -1e-17, f64::MIN_POSITIVE, -0.0, 3.0],
+            trainer: Some(GramAccRaw {
+                f: 2,
+                d: 1,
+                g: vec![0.1 + 0.2, -2.5e-123, 1.0, 4.0],
+                b: vec![1e300, -7.0],
+                col_sums: vec![std::f64::consts::E, -0.0],
+                y_sums: vec![std::f64::consts::PI],
+                rows: 12_345_678_901_234,
+                carry: Some(vec![-1.5, f64::EPSILON]),
+            }),
+            active_version: 2,
+            next_version: 3,
+            versions: vec![
+                (1, vec![0.25, -0.1], 0.0),
+                (2, vec![1e-300, 9.9], -2.0),
+            ],
+        };
+        let wire = snapshot_to_json(&snap).to_string_compact();
+        let back = snapshot_from_json(&parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        // PartialEq treats -0.0 == 0.0, so pin the sign bits explicitly
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.state), bits(&snap.state));
+        let (bt, st) = (back.trainer.unwrap(), snap.trainer.clone().unwrap());
+        assert_eq!(bits(&bt.col_sums), bits(&st.col_sums));
+        assert_eq!(bits(&bt.g), bits(&st.g));
+        // a trainer-less snapshot (nothing accumulated yet) round-trips
+        let bare = LaneSnapshot {
+            trainer: None,
+            ..snap.clone()
+        };
+        let wire = snapshot_to_json(&bare).to_string_compact();
+        let back = snapshot_from_json(&parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, bare);
+        // junk shapes are rejected at parse, not served to the sweeper
+        assert!(snapshot_from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn commit_with_zero_rows_carries_the_commit_empty_code() {
+        // the zero-rows commit must answer `code: "commit_empty"` — on
+        // BOTH transports, and identically whether the connection has a
+        // hub lane (sweeper-side refusal) or none at all
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 1, Some(1), threaded);
+            let mut c = Client::connect(&addr).unwrap();
+            let commit_req = Json::obj(vec![("op", Json::Str("commit".into()))]);
+            // no lane yet: refused before reaching a shard queue
+            let resp = c.request(&commit_req).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code"),
+                Some(&Json::Str("commit_empty".into())),
+                "threaded={threaded}: lane-less commit lost its code: {resp:?}"
+            );
+            // stream acquires a lane but trains nothing: the sweeper
+            // itself must refuse with the SAME code
+            let out = c.stream(&task.input[..5]).unwrap();
+            assert_eq!(out.len(), 5);
+            let resp = c.request(&commit_req).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code"),
+                Some(&Json::Str("commit_empty".into())),
+                "threaded={threaded}: zero-row commit lost its code: {resp:?}"
+            );
+            // the connection survives the refusals
+            let out = c.stream(&task.input[5..10]).unwrap();
+            assert_eq!(out.len(), 5);
+            drop(c);
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_continues_bitwise_on_both_transports_and_precisions() {
+        // the tentpole contract: a client that checkpoints mid-stream and
+        // restores on a FRESH connection — even to a DIFFERENT server —
+        // continues bit-identically to an uninterrupted stream
+        for make in [make_model as fn() -> Model, make_model_f32] {
+            let model = Arc::new(make());
+            let task = MsoTask::new(1);
+            let input = &task.input[..60];
+            for threaded in [false, true] {
+                let (addr, handle) =
+                    spawn_server(Arc::clone(&model), 3, Some(2), threaded);
+                // uninterrupted reference lane on its own connection
+                let mut r = Client::connect(&addr).unwrap();
+                let reference = r.stream(input).unwrap();
+                // interrupted client: half the stream, then checkpoint
+                let mut a = Client::connect(&addr).unwrap();
+                let first = a.stream(&input[..30]).unwrap();
+                assert_eq!(first, reference[..30], "pre-checkpoint diverged");
+                let cp = a.checkpoint().unwrap();
+                drop(a); // "failure": the connection (and its lane) dies
+                // warm failover: fresh connection, restore, continue
+                let mut b = Client::connect(&addr).unwrap();
+                let active = b.restore(&cp).unwrap();
+                assert_eq!(active, 0, "no commits yet: base readout active");
+                let rest = b.stream(&input[30..]).unwrap();
+                assert_eq!(
+                    rest,
+                    reference[30..],
+                    "threaded={threaded}: restored stream diverged \
+                     from the uninterrupted reference"
+                );
+                drop(b);
+                drop(r);
+                handle.join().unwrap();
+                // lane migration: the SAME checkpoint restores onto a
+                // different server over the same model, bit-identically
+                let (addr2, handle2) =
+                    spawn_server(Arc::clone(&model), 1, Some(1), threaded);
+                let mut m = Client::connect(&addr2).unwrap();
+                m.restore(&cp).unwrap();
+                let rest = m.stream(&input[30..]).unwrap();
+                assert_eq!(
+                    rest,
+                    reference[30..],
+                    "threaded={threaded}: cross-server restore diverged"
+                );
+                drop(m);
+                handle2.join().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn commit_versions_rollback_and_rows_survive_on_both_transports() {
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let train_in = &task.input[..100];
+        let target: Vec<f64> = train_in.iter().map(|x| 0.5 - 2.0 * x).collect();
+        let train2_in = &task.input[100..150];
+        let target2: Vec<f64> = train2_in.iter().map(|x| 0.5 - 2.0 * x).collect();
+        let probe = &task.input[150..180];
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 3, Some(2), threaded);
+            // twin lane: identical history, but NEVER rolled back —
+            // proves rollback(v1) on `a` reinstalls v1's readout
+            // bit-exactly (same state ⊕ same readout ⇒ same bits)
+            let mut a = Client::connect(&addr).unwrap();
+            let mut twin = Client::connect(&addr).unwrap();
+            for c in [&mut a, &mut twin] {
+                assert_eq!(c.train(train_in, &target).unwrap(), 100);
+                assert_eq!(
+                    c.commit(1e-8).unwrap(),
+                    1,
+                    "first commit must mint version 1"
+                );
+                assert_eq!(c.train(train2_in, &target2).unwrap(), 150);
+                assert_eq!(
+                    c.commit(1e-6).unwrap(),
+                    2,
+                    "second commit must mint version 2"
+                );
+            }
+            // unknown version: typed refusal, nothing changes
+            let resp = a
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("rollback".into())),
+                    ("version", Json::Num(99.0)),
+                ]))
+                .unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code"),
+                Some(&Json::Str("rollback_unknown_version".into()))
+            );
+            // bounce through base and back — the ring retains both
+            assert_eq!(a.rollback(0).unwrap(), 0);
+            assert_eq!(a.rollback(1).unwrap(), 1);
+            assert_eq!(twin.rollback(1).unwrap(), 1);
+            let got = a.stream(probe).unwrap();
+            let want = twin.stream(probe).unwrap();
+            assert_eq!(
+                got, want,
+                "threaded={threaded}: rolled-back readout is not \
+                 bit-identical to the retained version 1"
+            );
+            // the accumulator survived every rollback: row counts
+            // continue from 150, and the next commit mints version 3
+            assert_eq!(a.train(probe, &vec![0.0; probe.len()]).unwrap(), 180);
+            assert_eq!(a.commit(1e-8).unwrap(), 3);
+            // checkpoint carries the ring: a restore elsewhere resumes
+            // at the active version with the same next-version counter
+            let cp = a.checkpoint().unwrap();
+            let mut b = Client::connect(&addr).unwrap();
+            assert_eq!(b.restore(&cp).unwrap(), 3, "active version travels");
+            assert_eq!(b.rollback(1).unwrap(), 1, "ring travels");
+            let got = b.stream(probe).unwrap();
+            let want = a.rollback(1).and_then(|_| a.stream(probe)).unwrap();
+            assert_eq!(got, want, "restored twin diverged after rollback");
+            drop(a);
+            drop(twin);
+            drop(b);
+            handle.join().unwrap();
+        }
     }
 }

@@ -77,7 +77,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                // integral values print without a decimal point — EXCEPT
+                // negative zero, which `as i64` would collapse to `0` and
+                // lose on re-parse. `{x}` prints `-0`, which parses back
+                // to -0.0, keeping serialize∘parse bit-exact on every
+                // finite f64 (the checkpoint wire format depends on it).
+                let neg_zero = *x == 0.0 && x.is_sign_negative();
+                if x.fract() == 0.0 && x.abs() < 1e15 && !neg_zero {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -380,5 +386,38 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn float_serialization_is_bit_exact() {
+        // serialize ∘ parse must be the identity on every finite f64 —
+        // the checkpoint/restore wire format relies on it. Rust's
+        // shortest-form `{}` Display guarantees round-trip for normal
+        // values; the special cases are the integral shortcut and -0.0.
+        let cases = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            0.1,
+            -0.1,
+            1.0 + f64::EPSILON,
+            f64::MIN_POSITIVE,
+            f64::MIN_POSITIVE / 4.0, // subnormal
+            1e300,
+            -1e-300,
+            std::f64::consts::PI,
+            1234567890123456.0, // above the integral-shortcut cutoff
+        ];
+        for &x in &cases {
+            let text = Json::Num(x).to_string_compact();
+            let back = parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                x.to_bits(),
+                "round-trip of {x:?} via {text:?} lost bits"
+            );
+        }
+        assert_eq!(Json::Num(-0.0).to_string_compact(), "-0");
     }
 }

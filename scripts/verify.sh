@@ -3,15 +3,19 @@
 #   scripts/verify.sh
 # Runs the release build, the full test suite, the plain-kernel A/B of
 # the batched lane engine (the scalar twin of the chunked/branchless
-# kernels must stay bit-identical), and the quick reservoir bench (which
-# includes the f32/f64 precision-ladder rows, the sharded serving rows,
-# the epoll event-loop wire rows, and the fused/online training rows),
-# persisting the machine-readable perf snapshot as BENCH_pr5.json at the
+# kernels must stay bit-identical), the chaos suite under
+# `--features fault-inject` (deterministic sweeper panics, forced short
+# writes, budget exhaustion, EMFILE accept storms — every degradation
+# must be a typed error, never a hang), and the quick reservoir bench
+# (precision-ladder, sharded-serving, event-loop wire, fused/online
+# training, and the PR6 checkpoint/restore + failover-storm rows),
+# persisting the machine-readable perf snapshot as BENCH_pr6.json at the
 # repo root — the committed perf-trajectory artifact
 # (BENCH_reservoir_run.json is kept as an uncommitted working copy for
 # tooling that greps the legacy name).
-# Fails if the precision, sharding, event-loop, or training rows are
-# missing, non-finite, or report zero throughput.
+# Fails if the precision, sharding, event-loop, training, or
+# fault-tolerance rows are missing, non-finite, or report zero
+# throughput.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,16 +28,21 @@ cargo test -q
 echo "== cargo test -q --features plain-kernel --lib reservoir::batch (A/B twin) =="
 cargo test -q --features plain-kernel --lib reservoir::batch
 
-echo "== cargo bench --bench reservoir_run -- --quick --json BENCH_pr5.json =="
-cargo bench --bench reservoir_run -- --quick --json BENCH_pr5.json
-cp BENCH_pr5.json BENCH_reservoir_run.json
+echo "== cargo test -q --features fault-inject --test chaos (chaos suite) =="
+cargo test -q --features fault-inject --test chaos
 
-echo "== bench sanity: precision/sharded/evloop/training rows present, finite, non-zero =="
+echo "== cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr6.json =="
+# fault-inject makes the failover-storm row use REAL contained sweeper
+# panics (without it the row still exists via teardown/reconnect cycles)
+cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr6.json
+cp BENCH_pr6.json BENCH_reservoir_run.json
+
+echo "== bench sanity: precision/sharded/evloop/training/failover rows present, finite, non-zero =="
 if command -v python3 >/dev/null 2>&1; then
   python3 - <<'EOF'
 import json, math, sys
 
-doc = json.load(open("BENCH_pr5.json"))
+doc = json.load(open("BENCH_pr6.json"))
 rows = {r.get("name"): r for r in doc.get("results", [])}
 required = [
     "f32_batch8_N1000", "f64_batch8_N1000",
@@ -46,6 +55,7 @@ required = [
     "derived_evloop_N1000",
     "train_fused_f64_N1000", "train_fused_f32_N1000",
     "train_online_wire_N1000", "derived_train_N1000",
+    "checkpoint_restore_N1000", "derived_failover_N1000",
 ]
 for name in required:
     if name not in rows:
@@ -57,7 +67,7 @@ for name, row in rows.items():
                 sys.exit(f"FAIL: non-finite {key} in row {name}: {val}")
             if key.endswith(("steps_per_sec", "rows_per_sec")) and val <= 0:
                 sys.exit(f"FAIL: zero throughput {key} in row {name}")
-            if key == "median_s" and val <= 0:
+            if key in ("median_s", "restore_round_trip_sec") and val <= 0:
                 sys.exit(f"FAIL: zero-time bench row {name}")
 for b in (8, 64):
     d = rows[f"derived_precision_batch{b}_N1000"]
@@ -76,6 +86,11 @@ d = rows["derived_train_N1000"]
 print(f"  training: fused f64 {d['f64_rows_per_sec']:.3e} rows/s, "
       f"f32 {d['f32_rows_per_sec']:.3e} rows/s ({d['f32_over_f64']:.2f}x), "
       f"online wire {d['online_wire_rows_per_sec']:.3e} rows/s")
+d = rows["derived_failover_N1000"]
+real = "real sweeper panics" if d.get("real_sweeper_panics") else "reconnect cycles"
+print(f"  failover: restore round trip {d['restore_round_trip_sec']:.3e}s, "
+      f"storm {d['storm_steps_per_sec']:.3e} steps/s "
+      f"across {int(d['cycles'])} failovers ({real})")
 print("bench rows OK")
 EOF
 else
@@ -87,17 +102,18 @@ else
              evloop_idle128_predict16_N1000 \
              evloop_mixed_stream16_predict16_N1000 derived_evloop_N1000 \
              train_fused_f64_N1000 train_fused_f32_N1000 \
-             train_online_wire_N1000 derived_train_N1000; do
-    grep -q "\"$row\"" BENCH_pr5.json \
+             train_online_wire_N1000 derived_train_N1000 \
+             checkpoint_restore_N1000 derived_failover_N1000; do
+    grep -q "\"$row\"" BENCH_pr6.json \
       || { echo "FAIL: missing bench row $row"; exit 1; }
   done
-  if grep -qiE '(nan|inf)' BENCH_pr5.json; then
-    echo "FAIL: non-finite value in BENCH_pr5.json"; exit 1
+  if grep -qiE '(nan|inf)' BENCH_pr6.json; then
+    echo "FAIL: non-finite value in BENCH_pr6.json"; exit 1
   fi
   # the JSON writer prints integral values without decimals, so a zero
   # throughput is exactly `0` before the comma/EOL (0.97 must NOT match)
-  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr5.json; then
-    echo "FAIL: zero throughput row in BENCH_pr5.json"; exit 1
+  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr6.json; then
+    echo "FAIL: zero throughput row in BENCH_pr6.json"; exit 1
   fi
   echo "bench rows OK (grep fallback)"
 fi
