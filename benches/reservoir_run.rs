@@ -28,7 +28,9 @@ use linear_reservoir::reservoir::{
     BatchEsn, DiagonalEsn, EsnConfig, QBasisEsn, StandardEsn,
 };
 use linear_reservoir::rng::Pcg64;
-use linear_reservoir::server::{serve_on, Client, Model, ShardedFront};
+use linear_reservoir::server::{
+    serve_on, serve_on_opts, Client, Model, ServeOpts, ShardedFront,
+};
 use linear_reservoir::spectral::uniform::uniform_spectrum;
 use linear_reservoir::util::json::Json;
 
@@ -617,6 +619,199 @@ fn main() {
                 "restore_round_trip_sec",
                 Json::Num(r_cp.per_iter.median),
             ),
+        ]));
+    }
+
+    // --- PR7: lane mobility — migration, standby deltas, rebalance ------
+    // `migrate_lane_N1000` times one live shard→shard move of a warm
+    // N=1000 lane over the wire (sync checkpoint + cross-shard restore +
+    // binding re-home: the self-healing primitive's latency).
+    // `standby_delta_N1000` times one round of the standby pusher's
+    // primitive: checkpoint the warm lane, park it on a replica server
+    // under a fixed lane id (`migrate_in` push form). `derived_
+    // rebalance_N1000` runs a skewed-load storm: every lane is forced
+    // onto shard 0, then clients keep streaming while the `--rebalance`
+    // policy thread migrates the skew away mid-stream — sustained
+    // steps/sec across the storm. Rows run in quick mode too — they are
+    // the acceptance artifact for the lane-mobility work.
+    {
+        let n = 1000;
+        println!("lane mobility, N = {n}, T = {t_len}");
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(19, 116);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let model = Arc::new(Model::new(diag, readout));
+        let input: Vec<f64> = Mat::randn(t_len, 1, &mut rng).data().to_vec();
+
+        // migration latency: one live move per iteration; `None` targets
+        // the coldest OTHER shard, so the warm lane ping-pongs 0↔1
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server_model = Arc::clone(&model);
+        let server = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                server_model,
+                Some(1),
+                ServeOpts {
+                    shards: Some(2),
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+            .unwrap();
+        });
+        let mut client = Client::connect(&addr).unwrap();
+        let warm = client.stream(&input[..250]).unwrap();
+        assert_eq!(warm.len(), 250);
+        let r_mig = bench(&format!("migrate_lane_N{n}"), cfg, || {
+            std::hint::black_box(client.migrate(None).expect("migrate"));
+        });
+        push(&mut rows, &r_mig);
+        drop(client);
+        server.join().unwrap();
+
+        // standby delta round trip: primary checkpoint → replica park
+        let p_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let p_addr = p_listener.local_addr().unwrap().to_string();
+        let p_model = Arc::clone(&model);
+        let primary = std::thread::spawn(move || {
+            serve_on_opts(
+                p_listener,
+                p_model,
+                Some(1),
+                ServeOpts {
+                    shards: Some(1),
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+            .unwrap();
+        });
+        let s_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let s_addr = s_listener.local_addr().unwrap().to_string();
+        let s_model = Arc::clone(&model);
+        let replica = std::thread::spawn(move || {
+            serve_on_opts(
+                s_listener,
+                s_model,
+                Some(1),
+                ServeOpts {
+                    shards: Some(1),
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+            .unwrap();
+        });
+        let mut pc = Client::connect(&p_addr).unwrap();
+        let warm = pc.stream(&input[..250]).unwrap();
+        assert_eq!(warm.len(), 250);
+        let mut rc = Client::connect(&s_addr).unwrap();
+        let r_delta = bench(&format!("standby_delta_N{n}"), cfg, || {
+            let cp = pc.checkpoint().expect("delta checkpoint");
+            let req = Json::obj(vec![
+                ("op", Json::Str("migrate_in".into())),
+                ("lane_id", Json::Num(7.0)),
+                ("checkpoint", cp),
+            ]);
+            let resp = rc.request(&req).expect("push delta");
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        });
+        push(&mut rows, &r_delta);
+        drop(pc);
+        drop(rc);
+        primary.join().unwrap();
+        replica.join().unwrap();
+
+        // skewed-load rebalance storm: pile every lane onto shard 0,
+        // then stream while the policy thread (50 ms tick) migrates the
+        // skew to shard 1 mid-stream
+        let movers = 8usize;
+        let rounds = if quick { 8usize } else { 16 };
+        let chunk_len = 250usize;
+        let b_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let b_addr = b_listener.local_addr().unwrap().to_string();
+        let b_model = Arc::clone(&model);
+        let storm_server = std::thread::spawn(move || {
+            serve_on_opts(
+                b_listener,
+                b_model,
+                Some(movers),
+                ServeOpts {
+                    shards: Some(2),
+                    rebalance: true,
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+            .unwrap();
+        });
+        let mut clients: Vec<Client> = (0..movers)
+            .map(|_| {
+                let mut c = Client::connect(&b_addr).unwrap();
+                let out = c.stream(&input[..chunk_len]).unwrap();
+                assert_eq!(out.len(), chunk_len);
+                // force the skew: every lane starts on shard 0
+                c.migrate(Some(0)).expect("skew setup");
+                c
+            })
+            .collect();
+        let storm_t0 = std::time::Instant::now();
+        let mut streamed = 0usize;
+        for round in 0..rounds {
+            let off = (round * chunk_len) % (t_len - chunk_len);
+            // pipelined: all movers stream concurrently, so both shards'
+            // sweepers stay busy while lanes move under them
+            let req = Json::obj(vec![
+                ("op", Json::Str("stream".into())),
+                (
+                    "input",
+                    Json::Arr(
+                        input[off..off + chunk_len]
+                            .iter()
+                            .map(|&x| Json::Num(x))
+                            .collect(),
+                    ),
+                ),
+            ]);
+            for c in clients.iter_mut() {
+                c.send(&req).unwrap();
+            }
+            for c in clients.iter_mut() {
+                std::hint::black_box(c.recv().unwrap());
+            }
+            streamed += movers * chunk_len;
+        }
+        let storm_secs = storm_t0.elapsed().as_secs_f64();
+        let storm_sps = streamed as f64 / storm_secs;
+        // the policy thread must have found and drained the skew
+        let moved = clients[0]
+            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+            .expect("info")
+            .get("lanes_migrated")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        drop(clients);
+        storm_server.join().unwrap();
+        println!(
+            "  migrate: {:.3e}s | standby delta: {:.3e}s | rebalance storm: \
+             {streamed} steps, {moved} migration(s) → {:.3e} steps/s\n",
+            r_mig.per_iter.median, r_delta.per_iter.median, storm_sps
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("derived_rebalance_N{n}"))),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("movers", Json::Num(movers as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("chunk", Json::Num(chunk_len as f64)),
+            ("lanes_migrated", Json::Num(moved)),
+            ("storm_steps_per_sec", Json::Num(storm_sps)),
         ]));
     }
 

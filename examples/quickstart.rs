@@ -149,5 +149,36 @@ fn main() -> anyhow::Result<()> {
     //     feature arms the deterministic chaos harness
     //     (`rust/tests/chaos.rs`). In-process: `Client::checkpoint` /
     //     `restore` / `rollback`.
+
+    // 12. SELF-HEALING: two-process failover demo. Terminal A is the
+    //     primary, streaming per-lane checkpoint deltas to a warm
+    //     standby; terminal B is the replica — the same binary, the same
+    //     model, no special mode:
+    //
+    //       B$ repro serve --addr 127.0.0.1:7879
+    //       A$ repro serve --addr 127.0.0.1:7878 \
+    //            --standby 127.0.0.1:7879 --standby-interval-ms 100
+    //
+    //     Stream against A, then hard-kill it (`kill -9`) and promote
+    //     your lane on B — the continuation is bit-identical to the
+    //     uninterrupted run (`lane_id` comes from `{"op":"info"}` on A;
+    //     `standby_lag_lanes: 0` there means B holds every mutation):
+    //
+    //       A: {"op":"stream","input":[u…]}   ← predictions…   (A dies)
+    //       B: {"op":"migrate_in","lane_id":7} ← {"ok":true,"version":v}
+    //       B: {"op":"stream","input":[u…]}   ← …continue bit-identically
+    //
+    //     The same snapshot primitive powers live migration: `{"op":
+    //     "migrate"}` moves your lane to another shard mid-stream
+    //     (`--rebalance` does this automatically off hot shards), and
+    //     `{"op":"migrate_in","checkpoint":{…}}` re-homes it onto
+    //     another server. Overload degrades on YOUR terms: pass
+    //     `"deadline_ms"` on any request and expired/shed jobs answer
+    //     typed `deadline_exceeded`/`overloaded` (never a hang; state
+    //     untouched; `Client::with_retry` backs off on exactly the
+    //     transient codes). `kill -TERM` (or `{"op":"shutdown_drain"}`)
+    //     drains gracefully — in-flight replies flush, and
+    //     `--drain-checkpoint DIR` spills live lanes as `lane-<id>.json`
+    //     for a successor to adopt. DESIGN.md §11 has the protocol.
     Ok(())
 }

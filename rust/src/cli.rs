@@ -101,6 +101,12 @@ impl Args {
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
+
+    /// Optional path-valued flag: `None` when absent (the common "feature
+    /// off" default for things like `--drain-checkpoint <dir>`).
+    pub fn get_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.get(name).map(std::path::PathBuf::from)
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +145,17 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse("x --n abc").unwrap();
         assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn path_flag_is_none_when_absent() {
+        let a = parse("serve --drain-checkpoint /tmp/spill").unwrap();
+        assert_eq!(
+            a.get_path("drain-checkpoint"),
+            Some(std::path::PathBuf::from("/tmp/spill"))
+        );
+        let b = parse("serve").unwrap();
+        assert_eq!(b.get_path("drain-checkpoint"), None);
     }
 
     #[test]

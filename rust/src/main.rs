@@ -19,6 +19,12 @@
 //!                             # (default: epoll event loop on Linux)
 //!              [--trainer-budget-mb M]  # cap per-shard trainer
 //!                                       # memory (absent = unlimited)
+//!              [--rebalance]  # migrate hot lanes between shards when
+//!                             # sweep-occupancy skew crosses threshold
+//!              [--standby host:port]        # stream per-lane checkpoint
+//!              [--standby-interval-ms 200]  # deltas to a warm replica
+//!              [--drain-checkpoint DIR] # on SIGTERM/shutdown_drain,
+//!                                       # spill live lanes to DIR
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -271,6 +277,18 @@ fn dispatch(args: &Args) -> Result<()> {
             let trainer_budget = args
                 .get_opt_u64("trainer-budget-mb")?
                 .map(|mb| (mb as usize) << 20);
+            // --rebalance: opt-in background lane migration off the
+            // hottest shard when the sweep-occupancy EWMA skew crosses
+            // the threshold (see DESIGN.md §11)
+            let rebalance = args.flag("rebalance");
+            // --standby: warm-replica address; a pusher thread streams
+            // dirty-lane checkpoint deltas there over the normal wire
+            // protocol so the replica can be promoted bit-identically
+            let standby = args.get("standby").map(String::from);
+            let standby_interval_ms = args.get_u64("standby-interval-ms", 200)?;
+            // --drain-checkpoint: where graceful drain spills live lanes
+            // so a successor process can adopt them
+            let drain_checkpoint = args.get_path("drain-checkpoint");
             let listener = std::net::TcpListener::bind(addr)?;
             let bound = listener.local_addr()?;
             // the timer wheel lives in the event loop; on the threaded
@@ -278,7 +296,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // say so instead of printing it as active
             let event_loop = !threaded && cfg!(target_os = "linux");
             println!(
-                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, idle-timeout {}, trainer-budget {}, {}) on {bound} …",
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, idle-timeout {}, trainer-budget {}, rebalance {}, standby {}, drain-checkpoint {}, {}) on {bound} …",
                 precision.name(),
                 match shards {
                     Some(s) => s.to_string(),
@@ -293,6 +311,15 @@ fn dispatch(args: &Args) -> Result<()> {
                 match trainer_budget {
                     None => "unlimited".into(),
                     Some(b) => format!("{}MiB", b >> 20),
+                },
+                if rebalance { "on" } else { "off" },
+                match &standby {
+                    Some(a) => format!("{a} (every {standby_interval_ms}ms)"),
+                    None => "off".into(),
+                },
+                match &drain_checkpoint {
+                    Some(d) => d.display().to_string(),
+                    None => "off".into(),
                 },
                 if event_loop {
                     "epoll event loop"
@@ -310,6 +337,13 @@ fn dispatch(args: &Args) -> Result<()> {
                     threaded,
                     idle_timeout,
                     trainer_budget,
+                    rebalance,
+                    standby,
+                    standby_interval_ms,
+                    drain_checkpoint,
+                    // operator-facing binary: SIGTERM means "drain, don't
+                    // drop" (library embedders opt in via ServeOpts)
+                    drain_on_sigterm: true,
                 },
             )
             .map(|_| ())

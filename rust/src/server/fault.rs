@@ -15,6 +15,7 @@
 //! | [`arm_sweeper_kill`] | unrecoverable sweeper death after N stateful jobs (a [`SweeperKill`] payload escalates past the containment) |
 //! | [`set_short_writes`] | short socket writes in the poll loop: at most `chunk` bytes per `write(2)`, optionally sleeping first — a deterministically slow reader |
 //! | [`force_trainer_budget`] | overrides the hub trainer budget to a chosen byte count — allocation exhaustion without gigabytes of traffic |
+//! | [`force_admit_depth`] | overrides the per-shard queue admission depth — typed `overloaded` shedding without a real request storm |
 
 #[cfg(any(test, feature = "fault-inject"))]
 mod armed {
@@ -40,6 +41,8 @@ mod armed {
     static WRITE_DELAY_US: AtomicU64 = AtomicU64::new(0);
     /// Trainer-budget override in bytes; u64::MAX = no override.
     static BUDGET: AtomicU64 = AtomicU64::new(u64::MAX);
+    /// Queue-admission depth override; u64::MAX = no override.
+    static ADMIT_DEPTH: AtomicU64 = AtomicU64::new(u64::MAX);
     /// When set, an armed sweeper fuse only ticks down on the named
     /// sweeper thread. Unit tests share one process and run in
     /// parallel, so an unscoped fuse could fire on an UNRELATED test's
@@ -79,6 +82,13 @@ mod armed {
         BUDGET.store(bytes as u64, Ordering::SeqCst);
     }
 
+    /// Override every shard's queue-admission depth until [`disarm`]:
+    /// `0` sheds every queued job with the typed `overloaded` error —
+    /// a deterministic overload without a real request storm.
+    pub fn force_admit_depth(depth: usize) {
+        ADMIT_DEPTH.store(depth as u64, Ordering::SeqCst);
+    }
+
     /// Clear every armed fault.
     pub fn disarm() {
         SWEEP_FUSE.store(0, Ordering::SeqCst);
@@ -86,6 +96,7 @@ mod armed {
         WRITE_CHUNK.store(0, Ordering::SeqCst);
         WRITE_DELAY_US.store(0, Ordering::SeqCst);
         BUDGET.store(u64::MAX, Ordering::SeqCst);
+        ADMIT_DEPTH.store(u64::MAX, Ordering::SeqCst);
         *TARGET_THREAD.lock().unwrap() = None;
     }
 
@@ -136,15 +147,35 @@ mod armed {
             b => Some(b as usize),
         }
     }
+
+    /// Current queue-admission depth override for the front whose
+    /// sweeper thread has this name, if armed. Scoped exactly like the
+    /// sweeper fuse: with a [`target_sweeper_thread`] set, only that
+    /// front sheds — parallel unit tests' fronts are untouched.
+    pub(crate) fn admit_depth_override_for(sweeper: &str) -> Option<usize> {
+        let depth = match ADMIT_DEPTH.load(Ordering::Relaxed) {
+            u64::MAX => return None,
+            d => d as usize,
+        };
+        if let Some(target) = TARGET_THREAD.lock().unwrap().as_deref() {
+            if sweeper != target {
+                return None;
+            }
+        }
+        Some(depth)
+    }
 }
 
 #[cfg(any(test, feature = "fault-inject"))]
 pub use armed::{
-    arm_sweeper_kill, arm_sweeper_panic, disarm, force_trainer_budget,
-    set_short_writes, target_sweeper_thread, SweeperKill,
+    arm_sweeper_kill, arm_sweeper_panic, disarm, force_admit_depth,
+    force_trainer_budget, set_short_writes, target_sweeper_thread, SweeperKill,
 };
 #[cfg(any(test, feature = "fault-inject"))]
-pub(crate) use armed::{budget_override, short_write_chunk, sweeper_job_tick};
+pub(crate) use armed::{
+    admit_depth_override_for, budget_override, short_write_chunk,
+    sweeper_job_tick,
+};
 
 /// No-op twin (nothing armed, nothing armable) — the production build.
 #[cfg(not(any(test, feature = "fault-inject")))]
@@ -161,6 +192,14 @@ mod disarmed {
     pub(crate) fn budget_override() -> Option<usize> {
         None
     }
+
+    #[inline(always)]
+    pub(crate) fn admit_depth_override_for(_sweeper: &str) -> Option<usize> {
+        None
+    }
 }
 #[cfg(not(any(test, feature = "fault-inject")))]
-pub(crate) use disarmed::{budget_override, short_write_chunk, sweeper_job_tick};
+pub(crate) use disarmed::{
+    admit_depth_override_for, budget_override, short_write_chunk,
+    sweeper_job_tick,
+};

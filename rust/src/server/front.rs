@@ -37,6 +37,12 @@ pub(crate) const STREAM_LANES: usize = 64;
 /// Queue depth at which the sweeper skips the hold-off and drains
 /// immediately — the "under load" threshold.
 const HOLDOFF_DRAIN_DEPTH: usize = 4;
+/// Queue-admission ceiling: a submission finding this many jobs
+/// already queued is shed with the typed `overloaded` error instead
+/// of buffering without bound. Far above anything a healthy sweeper
+/// leaves queued (it drains whole batches per round), so only a stuck
+/// or saturated shard ever sheds; fault injection can force it lower.
+const ADMIT_MAX_DEPTH: usize = 4096;
 
 // ---------------------------------------------------------------------------
 // precision-dispatched lane engine
@@ -766,10 +772,40 @@ impl FrontJob {
             | FrontJob::Reset { lane, .. } => Some(*lane),
         }
     }
+
+    /// Answer the job with a typed error WITHOUT running it — the
+    /// admission-control / deadline-shedding path. A refused job never
+    /// touches hub state, so shedding is invisible to the lane's value:
+    /// the client's retried op continues the stream bit-identically.
+    fn refuse(self, code: &'static str) {
+        match self {
+            FrontJob::Predict { reply, .. }
+            | FrontJob::Stream { reply, .. }
+            | FrontJob::Train { reply, .. }
+            | FrontJob::Commit { reply, .. }
+            | FrontJob::Rollback { reply, .. }
+            | FrontJob::Checkpoint { reply, .. }
+            | FrontJob::Restore { reply, .. } => reply.send(Reply::Err(code)),
+            FrontJob::Reset { reply, .. } => {
+                if let Some(tx) = reply {
+                    tx.send(Reply::Err(code));
+                }
+            }
+        }
+    }
+}
+
+/// A queued job plus its admission deadline. The sweeper refuses (with
+/// the typed `deadline_exceeded` code) any job whose deadline passed
+/// while it waited in the queue — BEFORE touching lane state, so an
+/// expired op is indistinguishable from one never sent.
+struct QueuedJob {
+    job: FrontJob,
+    deadline: Option<Instant>,
 }
 
 struct FrontState {
-    jobs: Vec<FrontJob>,
+    jobs: Vec<QueuedJob>,
     shutdown: bool,
 }
 
@@ -802,6 +838,14 @@ pub struct BatchFront {
     /// Trainer allocation cap handed to the hub (bytes; `usize::MAX` =
     /// unlimited).
     trainer_budget: usize,
+    /// Jobs shed at admission with the typed `overloaded` error.
+    jobs_shed: AtomicU64,
+    /// Jobs refused with the typed `deadline_exceeded` error — at
+    /// admission or by the sweeper when the queue outlived them.
+    deadline_misses: AtomicU64,
+    /// This front's sweeper thread name; fault injection scopes the
+    /// admission-depth override by it, exactly like the sweeper fuse.
+    sweeper_name: String,
 }
 
 impl BatchFront {
@@ -845,6 +889,9 @@ impl BatchFront {
             depth: AtomicUsize::new(0),
             panics: AtomicU64::new(0),
             trainer_budget,
+            jobs_shed: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            sweeper_name: thread_name.clone(),
         });
         let worker = Arc::clone(&front);
         let handle = std::thread::Builder::new()
@@ -887,16 +934,56 @@ impl BatchFront {
     /// Enqueue a job. Returns `false` (job dropped) when the sweeper is
     /// gone — callers use their fallback path instead of blocking.
     fn submit(&self, job: FrontJob) -> bool {
+        self.submit_with_deadline(job, None)
+    }
+
+    /// Enqueue a job under admission control. Returns `false` only when
+    /// the sweeper is gone (callers fall back); a job SHED at admission
+    /// — queue over the depth ceiling, or deadline already expired —
+    /// answers its reply with the typed `overloaded` /
+    /// `deadline_exceeded` code and counts as handled (`true`): the
+    /// degradation is a bounded response, never a drop or a hang.
+    ///
+    /// Internal lane-recycling resets (`Reset { reply: None }`) bypass
+    /// the depth ceiling: refusing one would return a lane to the free
+    /// list un-zeroed, handing the next owner this connection's state.
+    fn submit_with_deadline(
+        &self,
+        job: FrontJob,
+        deadline: Option<Instant>,
+    ) -> bool {
+        let recycle = matches!(&job, FrontJob::Reset { reply: None, .. });
         {
             let mut st = self.state.lock().unwrap();
             if st.shutdown {
                 return false;
             }
-            st.jobs.push(job);
+            if !recycle && st.jobs.len() >= self.admit_depth() {
+                drop(st);
+                self.jobs_shed.fetch_add(1, Ordering::Relaxed);
+                job.refuse("overloaded");
+                return true;
+            }
+            // non-strict so `deadline_ms: 0` expires deterministically
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                drop(st);
+                self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                job.refuse("deadline_exceeded");
+                return true;
+            }
+            st.jobs.push(QueuedJob { job, deadline });
             self.depth.store(st.jobs.len(), Ordering::Relaxed);
         }
         self.cv.notify_all();
         true
+    }
+
+    /// Effective queue-admission ceiling (fault injection can force it
+    /// lower — scoped by sweeper name — to drive typed shedding
+    /// deterministically in tests).
+    fn admit_depth(&self) -> usize {
+        super::fault::admit_depth_override_for(&self.sweeper_name)
+            .unwrap_or(ADMIT_MAX_DEPTH)
     }
 
     pub(crate) fn acquire_lane(&self) -> Option<usize> {
@@ -939,6 +1026,24 @@ impl BatchFront {
         self.panics.load(Ordering::Relaxed)
     }
 
+    /// Jobs shed at admission with the typed `overloaded` error so far
+    /// (metrics; exported via `info`).
+    pub fn jobs_shed(&self) -> u64 {
+        self.jobs_shed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs refused with the typed `deadline_exceeded` error so far
+    /// (metrics; exported via `info`).
+    pub fn deadline_misses(&self) -> u64 {
+        self.deadline_misses.load(Ordering::Relaxed)
+    }
+
+    /// Streaming lanes currently handed out — the occupancy signal the
+    /// rebalance policy and the migration target choice read.
+    pub fn lanes_in_use(&self) -> usize {
+        STREAM_LANES - self.free_lanes.lock().unwrap().len()
+    }
+
     /// Distinct pooled predict engines built so far (flat once warm:
     /// chunk-size reuse means coalesced predicts stop paying the
     /// parameter-downcast + plane-allocation cost per chunk).
@@ -975,6 +1080,39 @@ impl BatchFront {
         self.model.predict(&input)
     }
 
+    /// [`Self::predict`] under a client deadline: a shed or expired job
+    /// answers the typed error instead of the dead-sweeper fallback —
+    /// overload protection must degrade with a bounded typed response,
+    /// not silently absorb the queue's work onto the caller thread.
+    pub fn predict_deadline(
+        &self,
+        input: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<f64>> {
+        let input = Arc::new(input);
+        let (tx, rx) = mpsc::channel();
+        if self.submit_predict_deadline(
+            Arc::clone(&input),
+            ReplySender::Chan(tx),
+            deadline,
+        ) {
+            match rx.recv() {
+                Ok(Reply::Vals(out)) => return Ok(out),
+                Ok(Reply::Err(code)) => {
+                    return Err(super::wire::coded_error(code))
+                }
+                _ => {}
+            }
+        }
+        // dead sweeper: the direct bit-identical fallback, still honoring
+        // an already-expired deadline with the typed refusal
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+            return Err(super::wire::coded_error("deadline_exceeded"));
+        }
+        Ok(self.model.predict(&input))
+    }
+
     /// Enqueue a stateless prediction and return the reply channel
     /// without blocking — the fan-out form ([`super::ShardedFront`] and
     /// the benches submit whole batches before collecting). `None` when
@@ -1004,7 +1142,19 @@ impl BatchFront {
         input: Arc<Vec<f64>>,
         reply: ReplySender,
     ) -> bool {
-        self.submit(FrontJob::Predict { input, reply })
+        self.submit_predict_deadline(input, reply, None)
+    }
+
+    /// [`Self::submit_predict`] with a client deadline: expired (at
+    /// admission or when the sweeper reaches the job) answers the typed
+    /// `deadline_exceeded` code instead of running.
+    pub(crate) fn submit_predict_deadline(
+        &self,
+        input: Arc<Vec<f64>>,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
+        self.submit_with_deadline(FrontJob::Predict { input, reply }, deadline)
     }
 
     /// Enqueue streaming step(s) on a hub lane with an arbitrary reply
@@ -1021,10 +1171,22 @@ impl BatchFront {
         input: Vec<f64>,
         reply: ReplySender,
     ) -> bool {
+        self.submit_stream_deadline(lane, input, reply, None)
+    }
+
+    /// [`Self::submit_stream`] with a client deadline (see
+    /// [`Self::submit_predict_deadline`]).
+    pub(crate) fn submit_stream_deadline(
+        &self,
+        lane: usize,
+        input: Vec<f64>,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
         if self.model.readout.w.cols() != 1 {
             return false;
         }
-        self.submit(FrontJob::Stream { lane, input, reply })
+        self.submit_with_deadline(FrontJob::Stream { lane, input, reply }, deadline)
     }
 
     /// Enqueue online training step(s) on a hub lane with an arbitrary
@@ -1039,15 +1201,31 @@ impl BatchFront {
         target: Vec<f64>,
         reply: ReplySender,
     ) -> bool {
+        self.submit_train_deadline(lane, input, target, reply, None)
+    }
+
+    /// [`Self::submit_train`] with a client deadline (see
+    /// [`Self::submit_predict_deadline`]).
+    pub(crate) fn submit_train_deadline(
+        &self,
+        lane: usize,
+        input: Vec<f64>,
+        target: Vec<f64>,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
         if self.model.readout.w.cols() != 1 || input.len() != target.len() {
             return false;
         }
-        self.submit(FrontJob::Train {
-            lane,
-            input,
-            target,
-            reply,
-        })
+        self.submit_with_deadline(
+            FrontJob::Train {
+                lane,
+                input,
+                target,
+                reply,
+            },
+            deadline,
+        )
     }
 
     /// Enqueue a lane commit (ridge solve + readout hot-swap) with an
@@ -1058,7 +1236,19 @@ impl BatchFront {
         alpha: f64,
         reply: ReplySender,
     ) -> bool {
-        self.submit(FrontJob::Commit { lane, alpha, reply })
+        self.submit_commit_deadline(lane, alpha, reply, None)
+    }
+
+    /// [`Self::submit_commit`] with a client deadline (see
+    /// [`Self::submit_predict_deadline`]).
+    pub(crate) fn submit_commit_deadline(
+        &self,
+        lane: usize,
+        alpha: f64,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
+        self.submit_with_deadline(FrontJob::Commit { lane, alpha, reply }, deadline)
     }
 
     /// Enqueue a rollback to a retained committed-readout version with an
@@ -1069,16 +1259,42 @@ impl BatchFront {
         version: u64,
         reply: ReplySender,
     ) -> bool {
-        self.submit(FrontJob::Rollback {
-            lane,
-            version,
-            reply,
-        })
+        self.submit_rollback_deadline(lane, version, reply, None)
+    }
+
+    /// [`Self::submit_rollback`] with a client deadline (see
+    /// [`Self::submit_predict_deadline`]).
+    pub(crate) fn submit_rollback_deadline(
+        &self,
+        lane: usize,
+        version: u64,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
+        self.submit_with_deadline(
+            FrontJob::Rollback {
+                lane,
+                version,
+                reply,
+            },
+            deadline,
+        )
     }
 
     /// Enqueue a lane checkpoint with an arbitrary reply sink.
     pub(crate) fn submit_checkpoint(&self, lane: usize, reply: ReplySender) -> bool {
-        self.submit(FrontJob::Checkpoint { lane, reply })
+        self.submit_checkpoint_deadline(lane, reply, None)
+    }
+
+    /// [`Self::submit_checkpoint`] with a client deadline (see
+    /// [`Self::submit_predict_deadline`]).
+    pub(crate) fn submit_checkpoint_deadline(
+        &self,
+        lane: usize,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
+        self.submit_with_deadline(FrontJob::Checkpoint { lane, reply }, deadline)
     }
 
     /// Enqueue a lane restore with an arbitrary reply sink. Refused
@@ -1090,20 +1306,46 @@ impl BatchFront {
         snap: Box<LaneSnapshot>,
         reply: ReplySender,
     ) -> bool {
+        self.submit_restore_deadline(lane, snap, reply, None)
+    }
+
+    /// [`Self::submit_restore`] with a client deadline (see
+    /// [`Self::submit_predict_deadline`]).
+    pub(crate) fn submit_restore_deadline(
+        &self,
+        lane: usize,
+        snap: Box<LaneSnapshot>,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
         if self.model.readout.w.cols() != 1 {
             return false;
         }
-        self.submit(FrontJob::Restore { lane, snap, reply })
+        self.submit_with_deadline(FrontJob::Restore { lane, snap, reply }, deadline)
     }
 
     /// Enqueue a client-visible lane reset with an arbitrary reply sink
     /// (answered with an empty vec; see [`Self::submit_predict`] on the
     /// return value).
     pub(crate) fn submit_reset(&self, lane: usize, reply: ReplySender) -> bool {
-        self.submit(FrontJob::Reset {
-            lane,
-            reply: Some(reply),
-        })
+        self.submit_reset_deadline(lane, reply, None)
+    }
+
+    /// [`Self::submit_reset`] with a client deadline (see
+    /// [`Self::submit_predict_deadline`]).
+    pub(crate) fn submit_reset_deadline(
+        &self,
+        lane: usize,
+        reply: ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
+        self.submit_with_deadline(
+            FrontJob::Reset {
+                lane,
+                reply: Some(reply),
+            },
+            deadline,
+        )
     }
 
     /// Block on a channel reply and map the three outcomes: values pass
@@ -1121,11 +1363,23 @@ impl BatchFront {
     /// Streaming step(s) on a hub lane (no fallback: the state lives in
     /// the hub, so a dead sweeper is a hard error).
     pub fn stream(&self, lane: usize, input: Vec<f64>) -> Result<Vec<f64>> {
+        self.stream_deadline(lane, input, None)
+    }
+
+    /// [`Self::stream`] under a client deadline: expired answers the
+    /// typed `deadline_exceeded` error without advancing the lane.
+    pub fn stream_deadline(
+        &self,
+        lane: usize,
+        input: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<f64>> {
         // distinguish "the op is unsupported" from "the front is dead" —
         // submit_stream refuses both with one bool
         super::wire::guard_streamable(&self.model)?;
         let (tx, rx) = mpsc::channel();
-        if !self.submit_stream(lane, input, ReplySender::Chan(tx)) {
+        if !self.submit_stream_deadline(lane, input, ReplySender::Chan(tx), deadline)
+        {
             return Err(super::wire::unavailable_error());
         }
         Self::recv_vals(&rx)
@@ -1136,6 +1390,18 @@ impl BatchFront {
     /// `(features, target)` pair into the lane's Gram accumulator on the
     /// sweeper thread. Returns the lane's total accumulated row count.
     pub fn train(&self, lane: usize, input: Vec<f64>, target: Vec<f64>) -> Result<u64> {
+        self.train_deadline(lane, input, target, None)
+    }
+
+    /// [`Self::train`] under a client deadline (see
+    /// [`Self::stream_deadline`]).
+    pub fn train_deadline(
+        &self,
+        lane: usize,
+        input: Vec<f64>,
+        target: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<u64> {
         super::wire::guard_streamable(&self.model)?;
         anyhow::ensure!(
             input.len() == target.len(),
@@ -1144,7 +1410,13 @@ impl BatchFront {
             target.len()
         );
         let (tx, rx) = mpsc::channel();
-        if !self.submit_train(lane, input, target, ReplySender::Chan(tx)) {
+        if !self.submit_train_deadline(
+            lane,
+            input,
+            target,
+            ReplySender::Chan(tx),
+            deadline,
+        ) {
             return Err(super::wire::unavailable_error());
         }
         let v = Self::recv_vals(&rx)?;
@@ -1156,8 +1428,20 @@ impl BatchFront {
     /// subsequent [`Self::stream`] calls on the lane use it. Returns the
     /// newly retained readout's version id (monotonic per lane).
     pub fn commit(&self, lane: usize, alpha: f64) -> Result<u64> {
+        self.commit_deadline(lane, alpha, None)
+    }
+
+    /// [`Self::commit`] under a client deadline (see
+    /// [`Self::stream_deadline`]).
+    pub fn commit_deadline(
+        &self,
+        lane: usize,
+        alpha: f64,
+        deadline: Option<Instant>,
+    ) -> Result<u64> {
         let (tx, rx) = mpsc::channel();
-        if !self.submit_commit(lane, alpha, ReplySender::Chan(tx)) {
+        if !self.submit_commit_deadline(lane, alpha, ReplySender::Chan(tx), deadline)
+        {
             return Err(super::wire::unavailable_error());
         }
         let v = Self::recv_vals(&rx)?;
@@ -1168,8 +1452,24 @@ impl BatchFront {
     /// readout version (0 = base model readout) without dropping
     /// accumulated training rows. Returns the now-active version id.
     pub fn rollback(&self, lane: usize, version: u64) -> Result<u64> {
+        self.rollback_deadline(lane, version, None)
+    }
+
+    /// [`Self::rollback`] under a client deadline (see
+    /// [`Self::stream_deadline`]).
+    pub fn rollback_deadline(
+        &self,
+        lane: usize,
+        version: u64,
+        deadline: Option<Instant>,
+    ) -> Result<u64> {
         let (tx, rx) = mpsc::channel();
-        if !self.submit_rollback(lane, version, ReplySender::Chan(tx)) {
+        if !self.submit_rollback_deadline(
+            lane,
+            version,
+            ReplySender::Chan(tx),
+            deadline,
+        ) {
             return Err(super::wire::unavailable_error());
         }
         let v = Self::recv_vals(&rx)?;
@@ -1179,8 +1479,18 @@ impl BatchFront {
     /// Synchronous lane checkpoint: the lane's full portable value,
     /// bit-exact at both precisions.
     pub fn checkpoint(&self, lane: usize) -> Result<LaneSnapshot> {
+        self.checkpoint_deadline(lane, None)
+    }
+
+    /// [`Self::checkpoint`] under a client deadline (see
+    /// [`Self::stream_deadline`]).
+    pub fn checkpoint_deadline(
+        &self,
+        lane: usize,
+        deadline: Option<Instant>,
+    ) -> Result<LaneSnapshot> {
         let (tx, rx) = mpsc::channel();
-        if !self.submit_checkpoint(lane, ReplySender::Chan(tx)) {
+        if !self.submit_checkpoint_deadline(lane, ReplySender::Chan(tx), deadline) {
             return Err(super::wire::unavailable_error());
         }
         match rx.recv() {
@@ -1194,8 +1504,24 @@ impl BatchFront {
     /// snapshot (clearing any poison quarantine). Returns the restored
     /// active version id.
     pub fn restore(&self, lane: usize, snap: LaneSnapshot) -> Result<u64> {
+        self.restore_deadline(lane, snap, None)
+    }
+
+    /// [`Self::restore`] under a client deadline (see
+    /// [`Self::stream_deadline`]).
+    pub fn restore_deadline(
+        &self,
+        lane: usize,
+        snap: LaneSnapshot,
+        deadline: Option<Instant>,
+    ) -> Result<u64> {
         let (tx, rx) = mpsc::channel();
-        if !self.submit_restore(lane, Box::new(snap), ReplySender::Chan(tx)) {
+        if !self.submit_restore_deadline(
+            lane,
+            Box::new(snap),
+            ReplySender::Chan(tx),
+            deadline,
+        ) {
             return Err(super::wire::unavailable_error());
         }
         let v = Self::recv_vals(&rx)?;
@@ -1204,13 +1530,25 @@ impl BatchFront {
 
     /// Synchronous client-visible lane reset.
     pub fn reset(&self, lane: usize) -> Result<()> {
+        self.reset_deadline(lane, None)
+    }
+
+    /// [`Self::reset`] under a client deadline (see
+    /// [`Self::stream_deadline`]).
+    pub fn reset_deadline(
+        &self,
+        lane: usize,
+        deadline: Option<Instant>,
+    ) -> Result<()> {
         let (tx, rx) = mpsc::channel();
-        if !self.submit_reset(lane, ReplySender::Chan(tx)) {
+        if !self.submit_reset_deadline(lane, ReplySender::Chan(tx), deadline) {
             return Err(super::wire::unavailable_error());
         }
-        rx.recv()
-            .map(|_| ())
-            .map_err(|_| super::wire::unavailable_error())
+        match rx.recv() {
+            Ok(Reply::Err(code)) => Err(super::wire::coded_error(code)),
+            Ok(_) => Ok(()),
+            Err(_) => Err(super::wire::unavailable_error()),
+        }
     }
 
     fn sweeper_loop(&self) {
@@ -1270,7 +1608,7 @@ impl BatchFront {
             // sent are dropped, which both transports surface as the
             // deterministic "unavailable" error.
             let touched: Vec<usize> =
-                drained.iter().filter_map(|j| j.lane()).collect();
+                drained.iter().filter_map(|j| j.job.lane()).collect();
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                 || self.process(&mut hub, &mut pool, drained),
             ));
@@ -1303,7 +1641,7 @@ impl BatchFront {
     /// stream/reset jobs are grouped into rounds that preserve per-lane
     /// submission order (lanes are independent, so cross-lane reordering
     /// is unobservable).
-    fn process(&self, hub: &mut Hub, pool: &mut EnginePool, drained: Vec<FrontJob>) {
+    fn process(&self, hub: &mut Hub, pool: &mut EnginePool, drained: Vec<QueuedJob>) {
         let mut predicts: Vec<(Arc<Vec<f64>>, ReplySender)> = Vec::new();
         let mut round: Vec<(usize, Vec<f64>, ReplySender)> = Vec::new();
         let mut in_round = [false; STREAM_LANES];
@@ -1326,7 +1664,15 @@ impl BatchFront {
                 in_round.fill(false);
             };
 
-        for job in drained {
+        for QueuedJob { job, deadline } in drained {
+            // a job whose deadline passed while queued is refused BEFORE
+            // touching any lane — an expired op never advances state, so
+            // the client's retry continues the stream bit-identically
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                self.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                job.refuse("deadline_exceeded");
+                continue;
+            }
             match job {
                 FrontJob::Predict { input, reply } => predicts.push((input, reply)),
                 FrontJob::Stream { lane, input, reply } => {
@@ -1504,9 +1850,12 @@ mod tests {
                 .iter()
                 .map(|input| {
                     let (tx, rx) = mpsc::channel();
-                    st.jobs.push(FrontJob::Predict {
-                        input: Arc::new(input.clone()),
-                        reply: ReplySender::Chan(tx),
+                    st.jobs.push(QueuedJob {
+                        job: FrontJob::Predict {
+                            input: Arc::new(input.clone()),
+                            reply: ReplySender::Chan(tx),
+                        },
+                        deadline: None,
                     });
                     rx
                 })
@@ -1983,6 +2332,119 @@ mod tests {
             .code
     }
 
+    /// Serializes unit tests that arm process-global fault state
+    /// (`TARGET_THREAD` is shared, so two armed tests racing would
+    /// stomp each other's scope).
+    fn fault_guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn expired_deadline_refuses_at_admission_without_advancing_state() {
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let task = MsoTask::new(1);
+        let lane = front.acquire_lane().unwrap();
+        let first = front.stream(lane, task.input[..20].to_vec()).unwrap();
+        // non-strict expiry: a deadline of "now" is deterministically
+        // late by the time admission checks it
+        let err = front
+            .stream_deadline(
+                lane,
+                task.input[20..30].to_vec(),
+                Some(Instant::now()),
+            )
+            .unwrap_err();
+        assert_eq!(err_code(&err), "deadline_exceeded");
+        assert_eq!(front.deadline_misses(), 1);
+        // the refused op never touched the lane: the continuation is
+        // bit-identical to an uninterrupted twin
+        let rest = front.stream(lane, task.input[20..40].to_vec()).unwrap();
+        let reference = model.predict(&task.input[..40]);
+        assert_eq!(first, reference[..20]);
+        assert_eq!(rest, reference[20..40]);
+        // a deadline comfortably in the future is not a refusal
+        let ok = front
+            .stream_deadline(
+                lane,
+                task.input[40..50].to_vec(),
+                Some(Instant::now() + Duration::from_secs(30)),
+            )
+            .unwrap();
+        assert_eq!(ok, reference[40..50]);
+        front.release_lane(lane);
+        front.shutdown();
+    }
+
+    #[test]
+    fn queued_job_past_deadline_is_refused_by_the_sweeper() {
+        // the second half of the end-to-end deadline: a job admitted in
+        // time whose deadline passes while it waits in the queue is
+        // refused when the sweeper reaches it, typed, state untouched
+        let model = Arc::new(make_model());
+        let front = BatchFront::start(Arc::clone(&model));
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = front.state.lock().unwrap();
+            st.jobs.push(QueuedJob {
+                job: FrontJob::Stream {
+                    lane: 0,
+                    input: vec![0.1; 4],
+                    reply: ReplySender::Chan(tx),
+                },
+                // already expired when the sweeper drains it
+                deadline: Some(Instant::now()),
+            });
+        }
+        front.cv.notify_all();
+        assert_eq!(rx.recv().unwrap(), Reply::Err("deadline_exceeded"));
+        assert_eq!(front.deadline_misses(), 1);
+        // the lane never advanced: a fresh stream starts from zero state
+        let lane_zero_probe = front.stream(0, vec![0.1; 4]).unwrap();
+        assert_eq!(lane_zero_probe, model.predict(&[0.1; 4]));
+        front.shutdown();
+    }
+
+    #[test]
+    fn forced_admission_depth_sheds_typed_overloaded_and_recovers() {
+        use super::super::fault;
+        let _guard = fault_guard();
+        let model = Arc::new(make_model());
+        // dedicated sweeper name: the admission override is scoped to
+        // it, so parallel tests' fronts never shed
+        let front = BatchFront::start_configured(
+            Arc::clone(&model),
+            0,
+            "lr-admit-unit-sweeper".into(),
+            usize::MAX,
+        );
+        let task = MsoTask::new(1);
+        let lane = front.acquire_lane().unwrap();
+        let first = front.stream(lane, task.input[..20].to_vec()).unwrap();
+        fault::target_sweeper_thread("lr-admit-unit-sweeper");
+        fault::force_admit_depth(0);
+        let err = front
+            .stream(lane, task.input[20..30].to_vec())
+            .unwrap_err();
+        assert_eq!(err_code(&err), "overloaded");
+        assert!(front.jobs_shed() >= 1);
+        // lane release under a shed queue must still work: the internal
+        // recycling reset bypasses admission (otherwise the next owner
+        // would inherit this lane's state)
+        let spare = front.acquire_lane().unwrap();
+        front.release_lane(spare);
+        fault::disarm();
+        // recovery: the shed op never ran, so the stream continues
+        // bit-identically to an unshed twin
+        let rest = front.stream(lane, task.input[20..40].to_vec()).unwrap();
+        let reference = model.predict(&task.input[..40]);
+        assert_eq!(first, reference[..20]);
+        assert_eq!(rest, reference[20..40]);
+        front.release_lane(lane);
+        front.shutdown();
+    }
+
     #[test]
     fn checkpoint_restore_round_trips_bit_exactly_at_both_precisions() {
         for make in [make_model as fn() -> super::super::Model, make_model_f32] {
@@ -2073,6 +2535,7 @@ mod tests {
     #[test]
     fn sweeper_panic_is_contained_and_restore_lifts_quarantine() {
         use super::super::fault;
+        let _guard = fault_guard();
         let model = Arc::new(make_model());
         // dedicated sweeper thread name: the armed fuse is scoped to it,
         // so parallel tests' sweepers can never consume this fault

@@ -103,10 +103,10 @@ mod shard;
 mod wire;
 
 pub use front::{BatchFront, LaneSnapshot, Reply};
-pub use shard::ShardedFront;
+pub use shard::{LaneBinding, ShardedFront};
 pub use wire::{
-    serve, serve_on, serve_on_opts, serve_sharded, serve_with_holdoff, Client,
-    ServeOpts, WireError,
+    is_retryable_code, serve, serve_on, serve_on_opts, serve_sharded,
+    serve_with_holdoff, Client, ServeOpts, WireError, RETRYABLE_CODES,
 };
 
 use std::sync::Mutex;

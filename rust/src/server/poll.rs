@@ -57,6 +57,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::raw::{c_int, c_void};
 use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -65,13 +66,15 @@ use anyhow::{anyhow, Result};
 use crate::util::json::Json;
 
 use super::front::{Completion, CompletionQueue, EventReply, Reply, ReplySender};
-use super::shard::ShardedFront;
+use super::shard::{LaneBinding, ShardedFront};
 use super::wire::{
     checkpoint_response, coded_error, error_response, fallback_key,
-    guard_streamable, guard_train_rows, hub_full_train_error, info_response,
-    ip_key, no_lane_error, nothing_to_commit_error, ok_response, parse_op,
-    predict_response, stream_fallback, stream_response, train_response,
-    try_acquire_lane, unavailable_error, version_response, ConnState, Op,
+    guard_streamable, guard_train_rows, handle_migrate, handle_migrate_in,
+    hub_full_train_error, info_response, ip_key, no_lane_error,
+    nothing_to_commit_error, ok_response, parse_op, predict_response,
+    stream_fallback, stream_response, train_response, try_acquire_lane,
+    unavailable_error, version_response, ConnState, DrainCfg, Op,
+    SIGTERM_DRAIN,
 };
 
 // ---------------------------------------------------------------------------
@@ -180,25 +183,27 @@ impl Epoll {
     }
 
     /// Block until at least one event is ready or `timeout_ms` elapses
-    /// (`-1` = forever; `Ok(0)` = timed out), retrying on EINTR.
+    /// (`-1` = forever; `Ok(0)` = timed out). EINTR surfaces as `Ok(0)`
+    /// rather than retrying in place: a signal (SIGTERM → drain) must
+    /// bounce control back to the loop head so the drain flag is seen
+    /// even mid-`epoll_wait`.
     fn wait(&self, events: &mut [EpollEvent], timeout_ms: c_int) -> Result<usize> {
-        loop {
-            let n = unsafe {
-                epoll_wait(
-                    self.fd,
-                    events.as_mut_ptr(),
-                    events.len() as c_int,
-                    timeout_ms,
-                )
-            };
-            if n >= 0 {
-                return Ok(n as usize);
-            }
-            let err = std::io::Error::last_os_error();
-            if err.raw_os_error() != Some(EINTR) {
-                return Err(anyhow!("epoll_wait: {err}"));
-            }
+        let n = unsafe {
+            epoll_wait(
+                self.fd,
+                events.as_mut_ptr(),
+                events.len() as c_int,
+                timeout_ms,
+            )
+        };
+        if n >= 0 {
+            return Ok(n as usize);
         }
+        let err = std::io::Error::last_os_error();
+        if err.raw_os_error() == Some(EINTR) {
+            return Ok(0);
+        }
+        Err(anyhow!("epoll_wait: {err}"))
     }
 }
 
@@ -444,19 +449,31 @@ struct EventLoop {
     max_conns: Option<usize>,
     /// Idle-connection reaper; `None` = connections may idle forever.
     wheel: Option<IdleWheel>,
+    /// Graceful drain requested (`shutdown_drain` op or SIGTERM): stop
+    /// accepting, serve out in-flight slots, flush, close.
+    draining: bool,
+    /// One-shot guard: live connections have been flipped to EOF-serve-
+    /// out mode for the drain.
+    drain_closed: bool,
+    /// Lane bindings retained (NOT released) by connections that closed
+    /// while draining, so their lanes survive to be spilled.
+    drain_keep: Vec<Arc<LaneBinding>>,
 }
 
 /// Serve every connection of `listener` from this thread with an epoll
 /// readiness loop. Returns once `max_conns` connections have been
-/// accepted AND have all closed (`None`: runs forever). Connections
-/// silent for `idle_timeout` are reaped by a coarse timer wheel (`None`
-/// = never). Called by [`super::wire::serve_on_opts`], which owns the
-/// sweeper lifecycle.
+/// accepted AND have all closed (`None`: runs forever), or after a
+/// graceful drain (`shutdown_drain` op, or SIGTERM when
+/// `drain.watch_sigterm`) has served out every in-flight request.
+/// Connections silent for `idle_timeout` are reaped by a coarse timer
+/// wheel (`None` = never). Called by [`super::wire::serve_on_opts`],
+/// which owns the sweeper lifecycle.
 pub(crate) fn serve_event_loop(
     listener: TcpListener,
     front: Arc<ShardedFront>,
     max_conns: Option<usize>,
     idle_timeout: Option<Duration>,
+    drain: &DrainCfg,
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
     let ep = Epoll::new()?;
@@ -480,10 +497,20 @@ pub(crate) fn serve_event_loop(
         accepting: true,
         max_conns,
         wheel: idle_timeout.map(|t| IdleWheel::new(t, Instant::now())),
+        draining: false,
+        drain_closed: false,
+        drain_keep: Vec::new(),
     };
     let mut events = vec![EpollEvent { events: 0, data: 0 }; EVENT_BATCH];
     let mut accept_err: Option<anyhow::Error> = None;
     loop {
+        if drain.watch_sigterm && SIGTERM_DRAIN.load(Ordering::SeqCst) {
+            lp.draining = true;
+        }
+        if lp.draining {
+            lp.stop_accepting(&listener);
+            lp.drain_conns();
+        }
         if let Some(max) = lp.max_conns {
             if lp.accepting && lp.accepted >= max {
                 lp.stop_accepting(&listener);
@@ -493,11 +520,16 @@ pub(crate) fn serve_event_loop(
             break;
         }
         // with a wheel, wake at the next tick boundary so idle reaping
-        // advances even when no fd is active (n = 0 on timeout)
-        let timeout_ms = lp
+        // advances even when no fd is active (n = 0 on timeout); a
+        // SIGTERM watcher bounds the sleep so the drain flag is seen
+        // promptly even if the signal lands on another thread
+        let mut timeout_ms = lp
             .wheel
             .as_ref()
             .map_or(-1, |w| w.timeout_ms(Instant::now()));
+        if drain.watch_sigterm {
+            timeout_ms = if timeout_ms < 0 { 250 } else { timeout_ms.min(250) };
+        }
         let n = lp.ep.wait(&mut events, timeout_ms)?;
         for ev in &events[..n] {
             // copy packed fields by value (references into a packed
@@ -522,6 +554,19 @@ pub(crate) fn serve_event_loop(
         }
         lp.reap_idle();
     }
+    // spill the lanes retained by drained connections, then free them
+    if let Some(dir) = &drain.spill_dir {
+        if !lp.drain_keep.is_empty() {
+            let n = lp.front.spill_bindings(&lp.drain_keep, dir);
+            eprintln!(
+                "drain-checkpoint: spilled {n} lane(s) to {}",
+                dir.display()
+            );
+        }
+    }
+    for b in &lp.drain_keep {
+        lp.front.release_binding(b);
+    }
     match accept_err {
         Some(e) => Err(e),
         None => Ok(()),
@@ -533,6 +578,26 @@ impl EventLoop {
         if self.accepting {
             self.accepting = false;
             self.ep.del(listener.as_raw_fd());
+        }
+    }
+
+    /// One-shot drain propagation: flip every live connection to EOF
+    /// mode (stop reading; in-flight slots still resolve and flush —
+    /// never a mid-reply cutoff) and close the ones that are already
+    /// quiescent. Idempotent via `drain_closed`.
+    fn drain_conns(&mut self) {
+        if self.drain_closed {
+            return;
+        }
+        self.drain_closed = true;
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            let Some(mut conn) = self.conns.remove(&id) else {
+                continue;
+            };
+            conn.eof = true;
+            self.pump(&mut conn, id);
+            self.finish_or_keep(id, conn);
         }
     }
 
@@ -723,16 +788,33 @@ impl EventLoop {
 
     /// One parsed request → one slot. Mirrors `wire.rs::handle_request`
     /// op for op, with event replies instead of blocking channels. Takes
-    /// the already-parsed `Result<Op>` so the caller can parse while the
-    /// read buffer is still borrowed (no per-line copy).
-    fn dispatch(&mut self, conn: &mut Conn, id: u64, op: Result<Op>) {
+    /// the already-parsed `Result<(Op, deadline budget)>` so the caller
+    /// can parse while the read buffer is still borrowed (no per-line
+    /// copy). Lane ops resolve the binding's CURRENT home under its lock
+    /// ([`ShardedFront::with_binding`]), so a submission serializes with
+    /// live migration exactly like the threaded path's sync calls.
+    fn dispatch(
+        &mut self,
+        conn: &mut Conn,
+        id: u64,
+        op: Result<(Op, Option<Duration>)>,
+    ) {
         let front = Arc::clone(&self.front);
+        let (op, budget) = match op {
+            Ok(parsed) => parsed,
+            Err(e) => {
+                conn.slots.push_back(Slot::Ready(error_response(&e)));
+                return;
+            }
+        };
+        // the budget starts when the request is UNDERSTOOD (same point
+        // as the threaded path); saturating via checked_add
+        let deadline = budget.and_then(|d| Instant::now().checked_add(d));
         match op {
-            Err(e) => conn.slots.push_back(Slot::Ready(error_response(&e))),
-            Ok(Op::Info) => conn
+            Op::Info => conn
                 .slots
                 .push_back(Slot::Ready(info_response(&front, &conn.state))),
-            Ok(Op::Predict(input)) => {
+            Op::Predict(input) => {
                 let input = Arc::new(input);
                 let (token, reply) = self.event_reply(id);
                 conn.slots.push_back(Slot::Waiting {
@@ -744,24 +826,25 @@ impl EventLoop {
                 });
                 // stateless: dealt to the least-loaded shard; a refused
                 // job still resolves through its Dropped completion
-                front.submit_predict_dealt(input, reply);
+                front.submit_predict_dealt_deadline(input, reply, deadline);
             }
-            Ok(Op::Stream(input)) => {
+            Op::Stream(input) => {
                 if let Err(e) = guard_streamable(front.model()) {
                     conn.slots.push_back(Slot::Ready(error_response(&e)));
                     return;
                 }
                 try_acquire_lane(&front, &mut conn.state);
-                match conn.state.lane {
-                    Some(lane) => {
+                match conn.state.binding.clone() {
+                    Some(b) => {
                         let (token, reply) = self.event_reply(id);
                         conn.slots.push_back(Slot::Waiting {
                             token,
                             kind: PendingKind::Stream,
                         });
-                        front
-                            .shard(conn.state.shard_idx)
-                            .submit_stream(lane, input, reply);
+                        front.with_binding(&b, |s, l| {
+                            s.submit_stream_deadline(l, input, reply, deadline)
+                        });
+                        b.mark_dirty();
                     }
                     None => {
                         // hub full: connection-local fallback, inline on
@@ -772,7 +855,7 @@ impl EventLoop {
                     }
                 }
             }
-            Ok(Op::Train { input, target }) => {
+            Op::Train { input, target } => {
                 if let Err(e) = guard_streamable(front.model())
                     .and_then(|()| guard_train_rows(front.model(), input.len()))
                 {
@@ -783,68 +866,71 @@ impl EventLoop {
                 // to the lane state on the home shard's sweeper) — no
                 // local-fallback tier
                 try_acquire_lane(&front, &mut conn.state);
-                match conn.state.lane {
-                    Some(lane) => {
+                match conn.state.binding.clone() {
+                    Some(b) => {
                         let (token, reply) = self.event_reply(id);
                         conn.slots.push_back(Slot::Waiting {
                             token,
                             kind: PendingKind::Train,
                         });
-                        front
-                            .shard(conn.state.shard_idx)
-                            .submit_train(lane, input, target, reply);
+                        front.with_binding(&b, |s, l| {
+                            s.submit_train_deadline(l, input, target, reply, deadline)
+                        });
+                        b.mark_dirty();
                     }
                     None => conn.slots.push_back(Slot::Ready(error_response(
                         &hub_full_train_error(),
                     ))),
                 }
             }
-            Ok(Op::Commit { alpha }) => match conn.state.lane {
-                Some(lane) => {
+            Op::Commit { alpha } => match conn.state.binding.clone() {
+                Some(b) => {
                     let (token, reply) = self.event_reply(id);
                     conn.slots.push_back(Slot::Waiting {
                         token,
                         kind: PendingKind::Commit,
                     });
-                    front
-                        .shard(conn.state.shard_idx)
-                        .submit_commit(lane, alpha, reply);
+                    front.with_binding(&b, |s, l| {
+                        s.submit_commit_deadline(l, alpha, reply, deadline)
+                    });
+                    b.mark_dirty();
                 }
                 None => conn.slots.push_back(Slot::Ready(error_response(
                     &nothing_to_commit_error(),
                 ))),
             },
-            Ok(Op::Rollback { version }) => match conn.state.lane {
-                Some(lane) => {
+            Op::Rollback { version } => match conn.state.binding.clone() {
+                Some(b) => {
                     let (token, reply) = self.event_reply(id);
                     conn.slots.push_back(Slot::Waiting {
                         token,
                         kind: PendingKind::Rollback,
                     });
-                    front
-                        .shard(conn.state.shard_idx)
-                        .submit_rollback(lane, version, reply);
+                    front.with_binding(&b, |s, l| {
+                        s.submit_rollback_deadline(l, version, reply, deadline)
+                    });
+                    b.mark_dirty();
                 }
                 None => conn.slots.push_back(Slot::Ready(error_response(
                     &no_lane_error("rollback"),
                 ))),
             },
-            Ok(Op::Checkpoint) => match conn.state.lane {
-                Some(lane) => {
+            Op::Checkpoint => match conn.state.binding.clone() {
+                Some(b) => {
                     let (token, reply) = self.event_reply(id);
                     conn.slots.push_back(Slot::Waiting {
                         token,
                         kind: PendingKind::Checkpoint,
                     });
-                    front
-                        .shard(conn.state.shard_idx)
-                        .submit_checkpoint(lane, reply);
+                    front.with_binding(&b, |s, l| {
+                        s.submit_checkpoint_deadline(l, reply, deadline)
+                    });
                 }
                 None => conn.slots.push_back(Slot::Ready(error_response(
                     &no_lane_error("checkpoint"),
                 ))),
             },
-            Ok(Op::Restore(snap)) => {
+            Op::Restore(snap) => {
                 if let Err(e) = guard_streamable(front.model()) {
                     conn.slots.push_back(Slot::Ready(error_response(&e)));
                     return;
@@ -853,35 +939,71 @@ impl EventLoop {
                 // lane — the migration / failover entry point, so it may
                 // claim a lane exactly like stream/train do
                 try_acquire_lane(&front, &mut conn.state);
-                match conn.state.lane {
-                    Some(lane) => {
+                match conn.state.binding.clone() {
+                    Some(b) => {
                         let (token, reply) = self.event_reply(id);
                         conn.slots.push_back(Slot::Waiting {
                             token,
                             kind: PendingKind::Restore,
                         });
-                        front
-                            .shard(conn.state.shard_idx)
-                            .submit_restore(lane, snap, reply);
+                        front.with_binding(&b, |s, l| {
+                            s.submit_restore_deadline(l, snap, reply, deadline)
+                        });
+                        b.mark_dirty();
                     }
                     None => conn.slots.push_back(Slot::Ready(error_response(
                         &hub_full_train_error(),
                     ))),
                 }
             }
-            Ok(Op::Reset) => {
+            Op::Reset => {
                 conn.state.clear_local();
-                match conn.state.lane {
-                    Some(lane) => {
+                match conn.state.binding.clone() {
+                    Some(b) => {
                         let (token, reply) = self.event_reply(id);
                         conn.slots.push_back(Slot::Waiting {
                             token,
                             kind: PendingKind::Reset,
                         });
-                        front.shard(conn.state.shard_idx).submit_reset(lane, reply);
+                        front.with_binding(&b, |s, l| {
+                            s.submit_reset_deadline(l, reply, deadline)
+                        });
+                        b.mark_dirty();
                     }
                     None => conn.slots.push_back(Slot::Ready(ok_response())),
                 }
+            }
+            // migration ops run synchronously on the poll thread: a move
+            // is a checkpoint + restore round through the shard queues
+            // (milliseconds), and serializing it here keeps the
+            // slot-FIFO reply order trivially correct
+            Op::Migrate { shard } => {
+                let json = match handle_migrate(&front, &mut conn.state, shard) {
+                    Ok(j) => j,
+                    Err(e) => error_response(&e),
+                };
+                conn.slots.push_back(Slot::Ready(json));
+            }
+            Op::MigrateIn { lane_id, snap } => {
+                let json = match handle_migrate_in(
+                    &front,
+                    &mut conn.state,
+                    lane_id,
+                    snap,
+                    deadline,
+                ) {
+                    Ok(j) => j,
+                    Err(e) => error_response(&e),
+                };
+                conn.slots.push_back(Slot::Ready(json));
+            }
+            Op::ShutdownDrain => {
+                // reply first, then drain: the ok flushes through the
+                // normal pump path before this connection closes (eof),
+                // and the loop head propagates the drain to every peer
+                conn.slots.push_back(Slot::Ready(ok_response()));
+                conn.eof = true;
+                self.draining = true;
             }
         }
     }
@@ -973,13 +1095,19 @@ impl EventLoop {
         }
     }
 
-    fn finish_or_keep(&mut self, id: u64, conn: Conn) {
+    fn finish_or_keep(&mut self, id: u64, mut conn: Conn) {
         if conn.finished() {
             self.ep.del(conn.sock.as_raw_fd());
-            if let Some(lane) = conn.state.lane {
-                // queues a reset ahead of re-issue (or withholds the
-                // lane if the sweeper is gone) — see release_lane
-                self.front.shard(conn.state.shard_idx).release_lane(lane);
+            if let Some(b) = conn.state.binding.take() {
+                if self.draining {
+                    // drain keeps the lane alive so the loop can spill
+                    // it to --drain-checkpoint after the last close
+                    self.drain_keep.push(b);
+                } else {
+                    // queues a reset ahead of re-issue (or withholds the
+                    // lane if the sweeper is gone) — see release_lane
+                    self.front.release_binding(&b);
+                }
             }
             // dropping `conn` closes the socket; any still-in-flight
             // token resolves later and is discarded in deliver_completions
@@ -1137,18 +1265,23 @@ fn resolve_slot(
             PendingKind::Predict { input, queued_at },
             Completion::Done(Reply::Vals(out)),
         ) => predict_response(out, input.len(), queued_at.elapsed().as_secs_f64()),
+        // typed sweeper refusal (lane_poisoned, trainer_budget,
+        // commit_empty, overloaded, deadline_exceeded, …): same coded
+        // response as the threaded wrapper. This arm MUST precede the
+        // predict fallback below — an admission shed or an expired
+        // deadline is a refusal the client asked for, and silently
+        // answering it with an inline predict would defeat the overload
+        // protection it exists to provide.
+        (_, Completion::Done(Reply::Err(code))) => {
+            error_response(&coded_error(code))
+        }
         (PendingKind::Predict { input, queued_at }, _) => {
-            // sweeper gone (job dropped or refused): direct same-
-            // precision computation, just like BatchFront::predict's
-            // fallback — still identical bits on the wire
+            // sweeper gone (job dropped): direct same-precision
+            // computation, just like BatchFront::predict's fallback —
+            // still identical bits on the wire
             let steps = input.len();
             let out = front.model().predict(input);
             predict_response(out, steps, queued_at.elapsed().as_secs_f64())
-        }
-        // typed sweeper refusal (lane_poisoned, trainer_budget,
-        // commit_empty, …): same coded response as the threaded wrapper
-        (_, Completion::Done(Reply::Err(code))) => {
-            error_response(&coded_error(code))
         }
         (PendingKind::Stream, Completion::Done(Reply::Vals(outs))) => {
             stream_response(outs)

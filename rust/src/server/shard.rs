@@ -26,19 +26,130 @@
 //! With `S = 1` the facade is exactly the PR-2 single-front server —
 //! same sweeper, same arithmetic, bit-identical responses (tested).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, Weak};
+use std::time::Instant;
 
 use anyhow::Result;
 
-use super::front::BatchFront;
+use super::front::{BatchFront, LaneSnapshot, Reply, ReplySender};
 use super::Model;
+
+/// Minimum occupancy skew (hottest minus coldest shard, in lanes) at
+/// which [`ShardedFront::rebalance_once`] migrates lanes.
+const REBALANCE_MIN_SKEW: usize = 2;
+/// EWMA smoothing factor for the per-shard occupancy signal in `info`.
+const EWMA_ALPHA: f64 = 0.2;
+/// Most parked (standby-pushed, not yet adopted) lane snapshots
+/// retained — beyond this, `migrate_in` refuses with `hub_full` so a
+/// replica's memory stays bounded no matter how many primaries push.
+const PARKED_MAX: usize = 1024;
+
+/// A connection's mobile lane identity: the level of indirection that
+/// makes live migration atomic. Connections hold an `Arc<LaneBinding>`
+/// instead of a raw `(shard, lane)` pair and route every lane op
+/// through [`ShardedFront::with_binding`], which resolves the current
+/// home under the binding's lock. Migration holds that same lock across
+/// its checkpoint → restore → re-home sequence, so ops submitted before
+/// the move land on the source lane, ops after land on the target lane,
+/// and nothing ever observes a half-moved lane — the FIFO shard queues
+/// do the rest of the ordering, which is what makes a mid-stream
+/// migration bit-invisible.
+pub struct LaneBinding {
+    /// Process-unique id (monotonic from 1) — names the lane in `info`,
+    /// in standby pushes, and in drain-checkpoint spill files.
+    id: u64,
+    /// Current `(shard index, lane index)` home. Locked for the full
+    /// duration of a migration.
+    home: Mutex<(usize, usize)>,
+    /// Set by every state-mutating op; the standby pusher swaps it off
+    /// and ships a checkpoint delta. Idle lanes stay clean and cost the
+    /// pusher nothing.
+    dirty: AtomicBool,
+    /// A standby push for this lane is in flight (swapped-off dirty bit
+    /// not yet confirmed by the replica) — counted in `standby_lag_lanes`
+    /// so "lag 0" really means the replica has everything.
+    pushing: AtomicBool,
+    /// The binding's lane has been returned to its shard's free list;
+    /// late ops answer `no_lane`.
+    released: AtomicBool,
+}
+
+impl LaneBinding {
+    /// Process-unique lane id (stable across migrations).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The shard currently homing this binding's lane.
+    pub fn home_shard(&self) -> usize {
+        self.home.lock().unwrap().0
+    }
+
+    /// The lane index on the current home shard.
+    pub fn home_lane(&self) -> usize {
+        self.home.lock().unwrap().1
+    }
+
+    /// Record a state mutation for the standby delta stream.
+    pub fn mark_dirty(&self) {
+        self.dirty.store(true, Ordering::SeqCst);
+    }
+
+    /// Lane already returned to the free list (connection gone)?
+    pub fn released(&self) -> bool {
+        self.released.load(Ordering::SeqCst)
+    }
+
+    /// Claim the dirty bit for a standby push. `true` = there is new
+    /// state to ship (and the lane is now counted as mid-push); `false`
+    /// = clean since the last push, ship nothing.
+    pub(crate) fn begin_push(&self) -> bool {
+        if !self.dirty.swap(false, Ordering::SeqCst) {
+            return false;
+        }
+        self.pushing.store(true, Ordering::SeqCst);
+        true
+    }
+
+    /// Finish a push; a FAILED push re-marks the lane dirty so the
+    /// delta is retried instead of lost.
+    pub(crate) fn end_push(&self, ok: bool) {
+        if !ok {
+            self.dirty.store(true, Ordering::SeqCst);
+        }
+        self.pushing.store(false, Ordering::SeqCst);
+    }
+
+    /// Dirty or mid-push — the replica does not yet hold this lane's
+    /// latest state.
+    fn lagging(&self) -> bool {
+        self.dirty.load(Ordering::SeqCst) || self.pushing.load(Ordering::SeqCst)
+    }
+}
 
 /// `S` independent micro-batching fronts plus the dispatch policy.
 pub struct ShardedFront {
     shards: Vec<Arc<BatchFront>>,
     /// Rotating offset for the least-loaded predict deal's tie-break.
     rr: AtomicUsize,
+    /// Every live lane binding (weak: a dropped connection's binding
+    /// prunes itself) — the migration, rebalance, standby-push, and
+    /// drain-spill work lists.
+    bindings: Mutex<Vec<Weak<LaneBinding>>>,
+    /// Next binding id (ids start at 1; 0 is never a valid lane id).
+    next_binding_id: AtomicU64,
+    /// Lanes moved by [`Self::migrate_binding`] since start.
+    lanes_migrated: AtomicU64,
+    /// Per-shard occupancy EWMA (f64 bit patterns; see
+    /// [`Self::update_occupancy_ewma`]).
+    occ_ewma: Vec<AtomicU64>,
+    /// Lane snapshots pushed by a primary (`migrate_in` with both id and
+    /// checkpoint) awaiting adoption — the warm-standby parking lot.
+    /// Parked lanes occupy NO hub lane: a replica can hold state for
+    /// more primaries than it has lanes, paying a lane only on adopt.
+    parked: Mutex<HashMap<u64, LaneSnapshot>>,
 }
 
 impl ShardedFront {
@@ -80,6 +191,11 @@ impl ShardedFront {
         Arc::new(Self {
             shards: fronts,
             rr: AtomicUsize::new(0),
+            bindings: Mutex::new(Vec::new()),
+            next_binding_id: AtomicU64::new(1),
+            lanes_migrated: AtomicU64::new(0),
+            occ_ewma: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            parked: Mutex::new(HashMap::new()),
         })
     }
 
@@ -142,6 +258,16 @@ impl ShardedFront {
         self.pick_shard().predict(input)
     }
 
+    /// [`Self::predict`] under a client deadline: shed or expired jobs
+    /// answer the typed `overloaded` / `deadline_exceeded` error.
+    pub fn predict_deadline(
+        &self,
+        input: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<f64>> {
+        self.pick_shard().predict_deadline(input, deadline)
+    }
+
     /// Fan-out form of [`Self::predict`]: enqueue on the least-loaded
     /// shard and return the reply channel without blocking (benches and
     /// batch submitters collect the receivers afterwards).
@@ -163,7 +289,17 @@ impl ShardedFront {
         input: Arc<Vec<f64>>,
         reply: super::front::ReplySender,
     ) -> bool {
-        self.pick_shard().submit_predict(input, reply)
+        self.submit_predict_dealt_deadline(input, reply, None)
+    }
+
+    /// [`Self::submit_predict_dealt`] with a client deadline.
+    pub(crate) fn submit_predict_dealt_deadline(
+        &self,
+        input: Arc<Vec<f64>>,
+        reply: super::front::ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
+        self.pick_shard().submit_predict_deadline(input, reply, deadline)
     }
 
     /// Streaming step(s) on a lane of shard `shard_idx`.
@@ -174,6 +310,309 @@ impl ShardedFront {
         input: Vec<f64>,
     ) -> Result<Vec<f64>> {
         self.shards[shard_idx].stream(lane, input)
+    }
+
+    // -----------------------------------------------------------------
+    // lane bindings: acquisition, migration, rebalance, standby parking
+    // -----------------------------------------------------------------
+
+    /// Acquire a lane on `shard_idx` wrapped in a mobile [`LaneBinding`]
+    /// (the connection-facing form of `acquire_lane`: everything routed
+    /// through the binding survives a live migration). `None` when the
+    /// shard's hub is full.
+    pub fn acquire_binding(&self, shard_idx: usize) -> Option<Arc<LaneBinding>> {
+        let lane = self.shards[shard_idx].acquire_lane()?;
+        let b = Arc::new(LaneBinding {
+            id: self.next_binding_id.fetch_add(1, Ordering::Relaxed),
+            home: Mutex::new((shard_idx, lane)),
+            dirty: AtomicBool::new(false),
+            pushing: AtomicBool::new(false),
+            released: AtomicBool::new(false),
+        });
+        let mut reg = self.bindings.lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        reg.push(Arc::downgrade(&b));
+        Some(b)
+    }
+
+    /// Return the binding's lane to its home shard's free list
+    /// (idempotent). Serializes with migration on the home lock, so a
+    /// lane is never released mid-move.
+    pub fn release_binding(&self, b: &Arc<LaneBinding>) {
+        let home = b.home.lock().unwrap();
+        if b.released.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let (shard, lane) = *home;
+        self.shards[shard].release_lane(lane);
+    }
+
+    /// Every live (upgradeable, unreleased) binding; prunes dead weak
+    /// entries as a side effect.
+    pub fn live_bindings(&self) -> Vec<Arc<LaneBinding>> {
+        let mut reg = self.bindings.lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        reg.iter()
+            .filter_map(Weak::upgrade)
+            .filter(|b| !b.released())
+            .collect()
+    }
+
+    /// Run `f` against the binding's CURRENT home `(front, lane)` under
+    /// the binding lock — every lane op for a bound connection goes
+    /// through here, so submissions serialize with migration: an op
+    /// submitted before a move lands on the source lane (FIFO queue, the
+    /// migration checkpoint drains after it), an op after lands on the
+    /// target. Holding the lock across a blocking sync op is fine: only
+    /// migration and other ops on the SAME binding wait, and sweepers
+    /// never take binding locks.
+    pub fn with_binding<R>(
+        &self,
+        b: &LaneBinding,
+        f: impl FnOnce(&BatchFront, usize) -> R,
+    ) -> R {
+        let home = b.home.lock().unwrap();
+        let (shard, lane) = *home;
+        f(&self.shards[shard], lane)
+    }
+
+    /// Synchronous checkpoint of a binding's lane under its home lock
+    /// (the standby pusher's and drain spill's snapshot source).
+    pub fn checkpoint_binding(
+        &self,
+        b: &LaneBinding,
+    ) -> std::result::Result<LaneSnapshot, &'static str> {
+        let home = b.home.lock().unwrap();
+        if b.released() {
+            return Err("no_lane");
+        }
+        let (shard, lane) = *home;
+        Self::sync_checkpoint(&self.shards[shard], lane)
+    }
+
+    fn sync_checkpoint(
+        front: &BatchFront,
+        lane: usize,
+    ) -> std::result::Result<LaneSnapshot, &'static str> {
+        let (tx, rx) = mpsc::channel();
+        if !front.submit_checkpoint(lane, ReplySender::Chan(tx)) {
+            return Err("unavailable");
+        }
+        match rx.recv() {
+            Ok(Reply::Snap(s)) => Ok(*s),
+            Ok(Reply::Err(code)) => Err(code),
+            _ => Err("unavailable"),
+        }
+    }
+
+    /// Live lane migration: checkpoint the binding's lane on its source
+    /// shard, restore it onto a fresh lane of `target` (coldest shard
+    /// when `None`), atomically re-home the binding, and free the source
+    /// lane. The home lock is held for the whole sequence, so concurrent
+    /// ops on this binding simply queue behind the move and continue on
+    /// the target — mid-stream migration is bit-invisible (the snapshot
+    /// round-trip is exact, and a refused restore leaves the old home
+    /// fully intact). Returns `(target shard, target lane, active
+    /// version)` or the typed error code.
+    pub fn migrate_binding(
+        &self,
+        b: &Arc<LaneBinding>,
+        target: Option<usize>,
+    ) -> std::result::Result<(usize, usize, u64), &'static str> {
+        let mut home = b.home.lock().unwrap();
+        if b.released() {
+            return Err("no_lane");
+        }
+        let (src, src_lane) = *home;
+        let dst = match target {
+            Some(d) if d < self.shards.len() => d,
+            Some(_) => return Err("unknown_lane"),
+            None => self.coldest_shard_except(src),
+        };
+        let snap = Self::sync_checkpoint(&self.shards[src], src_lane)?;
+        let dst_front = &self.shards[dst];
+        let dst_lane = dst_front.acquire_lane().ok_or("hub_full")?;
+        let (tx, rx) = mpsc::channel();
+        if !dst_front.submit_restore(dst_lane, Box::new(snap), ReplySender::Chan(tx))
+        {
+            dst_front.release_lane(dst_lane);
+            return Err("unavailable");
+        }
+        let version = match rx.recv() {
+            Ok(Reply::Vals(v)) => v.first().copied().unwrap_or(0.0) as u64,
+            Ok(Reply::Err(code)) => {
+                dst_front.release_lane(dst_lane);
+                return Err(code);
+            }
+            _ => {
+                dst_front.release_lane(dst_lane);
+                return Err("unavailable");
+            }
+        };
+        // the move is committed: free the source lane, re-home, count
+        self.shards[src].release_lane(src_lane);
+        *home = (dst, dst_lane);
+        b.mark_dirty();
+        self.lanes_migrated.fetch_add(1, Ordering::Relaxed);
+        Ok((dst, dst_lane, version))
+    }
+
+    /// The least-occupied shard (fewest lanes in use, queue depth as the
+    /// tie-break), preferring any shard over `except` when there is a
+    /// choice — the migration target policy.
+    fn coldest_shard_except(&self, except: usize) -> usize {
+        let mut best = except;
+        let mut best_key = (usize::MAX, usize::MAX);
+        for (i, s) in self.shards.iter().enumerate() {
+            if i == except {
+                continue;
+            }
+            let key = (s.lanes_in_use(), s.queue_depth());
+            if key < best_key {
+                best = i;
+                best_key = key;
+            }
+        }
+        best
+    }
+
+    /// One rebalance round: refresh the occupancy EWMAs, and when the
+    /// hottest shard holds at least `REBALANCE_MIN_SKEW` more lanes than
+    /// the coldest, migrate half the skew from hottest to coldest.
+    /// Returns the number of lanes moved. Driven by the `--rebalance`
+    /// policy thread; callable directly for deterministic tests.
+    pub fn rebalance_once(&self) -> usize {
+        self.update_occupancy_ewma();
+        if self.shards.len() < 2 {
+            return 0;
+        }
+        let occ: Vec<usize> =
+            self.shards.iter().map(|s| s.lanes_in_use()).collect();
+        let hot = (0..occ.len()).max_by_key(|&i| occ[i]).unwrap();
+        let cold = (0..occ.len()).min_by_key(|&i| occ[i]).unwrap();
+        let skew = occ[hot].saturating_sub(occ[cold]);
+        if skew < REBALANCE_MIN_SKEW {
+            return 0;
+        }
+        let quota = skew / 2;
+        let mut moved = 0;
+        for b in self.live_bindings() {
+            if moved >= quota {
+                break;
+            }
+            if b.home_shard() == hot
+                && self.migrate_binding(&b, Some(cold)).is_ok()
+            {
+                moved += 1;
+            }
+        }
+        moved
+    }
+
+    /// Fold the instantaneous per-shard lane occupancy into the EWMAs
+    /// and return them (called by the rebalancer tick and by `info`).
+    pub fn update_occupancy_ewma(&self) -> Vec<f64> {
+        self.shards
+            .iter()
+            .zip(&self.occ_ewma)
+            .map(|(s, cell)| {
+                let occ = s.lanes_in_use() as f64;
+                let old = f64::from_bits(cell.load(Ordering::Relaxed));
+                let new = EWMA_ALPHA * occ + (1.0 - EWMA_ALPHA) * old;
+                cell.store(new.to_bits(), Ordering::Relaxed);
+                new
+            })
+            .collect()
+    }
+
+    /// Lanes moved by migration since start (metrics; `info`).
+    pub fn lanes_migrated(&self) -> u64 {
+        self.lanes_migrated.load(Ordering::Relaxed)
+    }
+
+    /// Jobs shed with `overloaded` across shards (metrics; `info`).
+    pub fn jobs_shed_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.jobs_shed()).sum()
+    }
+
+    /// Jobs refused with `deadline_exceeded` across shards.
+    pub fn deadline_misses_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.deadline_misses()).sum()
+    }
+
+    /// Live bindings whose latest state the standby replica does not
+    /// yet hold (dirty or mid-push) — `info`'s `standby_lag_lanes`.
+    pub fn standby_lag_lanes(&self) -> usize {
+        self.live_bindings().iter().filter(|b| b.lagging()).count()
+    }
+
+    /// Park a pushed lane snapshot under the primary's lane id (replaces
+    /// any previous delta for the id — the delta stream is
+    /// last-write-wins by construction). `false` when the bounded
+    /// parking lot is full.
+    pub fn park(&self, id: u64, snap: LaneSnapshot) -> bool {
+        let mut p = self.parked.lock().unwrap();
+        if p.len() >= PARKED_MAX && !p.contains_key(&id) {
+            return false;
+        }
+        p.insert(id, snap);
+        true
+    }
+
+    /// A clone of the parked snapshot for `id`, if any (adoption peeks
+    /// first and unparks only after the restore succeeds).
+    pub fn parked_snapshot(&self, id: u64) -> Option<LaneSnapshot> {
+        self.parked.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Drop the parked snapshot for `id` (after a successful adoption).
+    pub fn unpark(&self, id: u64) {
+        self.parked.lock().unwrap().remove(&id);
+    }
+
+    /// Parked (pushed, unadopted) lane snapshots held (metrics; `info`).
+    pub fn parked_lanes(&self) -> usize {
+        self.parked.lock().unwrap().len()
+    }
+
+    /// Checkpoint each binding and write it to `dir/lane-<id>.json`
+    /// (creating `dir`), one compact snapshot per file — the
+    /// `--drain-checkpoint` spill. Failures are reported per lane and
+    /// skipped: a poisoned lane must not abort the drain of healthy
+    /// ones. Returns the number of lanes spilled.
+    pub fn spill_bindings(
+        &self,
+        bindings: &[Arc<LaneBinding>],
+        dir: &std::path::Path,
+    ) -> usize {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("drain-checkpoint: cannot create {}: {e}", dir.display());
+            return 0;
+        }
+        let mut spilled = 0;
+        for b in bindings {
+            match self.checkpoint_binding(b) {
+                Ok(snap) => {
+                    let path = dir.join(format!("lane-{}.json", b.id()));
+                    let text = format!(
+                        "{}\n",
+                        super::wire::snapshot_to_json(&snap).to_string_compact()
+                    );
+                    match std::fs::write(&path, text) {
+                        Ok(()) => spilled += 1,
+                        Err(e) => eprintln!(
+                            "drain-checkpoint: write {} failed: {e}",
+                            path.display()
+                        ),
+                    }
+                }
+                Err(code) => eprintln!(
+                    "drain-checkpoint: lane {} not spilled ({code})",
+                    b.id()
+                ),
+            }
+        }
+        spilled
     }
 
     /// Per-shard queue depths (metrics; `info`).
@@ -337,6 +776,153 @@ mod tests {
         }
         assert_eq!(front.queue_depth_total(), 0, "queues drained");
         front.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn migrate_binding_is_bit_invisible_mid_stream_at_both_precisions() {
+        // the tentpole contract, in-process: stream half, migrate the
+        // lane to the other shard, stream the rest — bit-identical to
+        // an unmigrated twin, with trainer and committed readout along
+        for model in [Arc::new(make_model()), Arc::new(make_model_f32())] {
+            let front = ShardedFront::start(Arc::clone(&model), 2);
+            let task = MsoTask::new(1);
+            let input = &task.input[..60];
+            let target: Vec<f64> =
+                input.iter().map(|x| 0.5 - 2.0 * x).collect();
+            // unmigrated twin: train 60 rows, commit, stream 40 more
+            let t = front.acquire_binding(0).unwrap();
+            assert_eq!(
+                front
+                    .with_binding(&t, |s, l| s.train(
+                        l,
+                        input.to_vec(),
+                        target.clone()
+                    ))
+                    .unwrap(),
+                60
+            );
+            assert_eq!(
+                front.with_binding(&t, |s, l| s.commit(l, 1e-2)).unwrap(),
+                1
+            );
+            let reference = front
+                .with_binding(&t, |s, l| s.stream(l, task.input[60..100].to_vec()))
+                .unwrap();
+            // migrating lane: same history split around a live move
+            let b = front.acquire_binding(0).unwrap();
+            assert_eq!(
+                front
+                    .with_binding(&b, |s, l| s.train(
+                        l,
+                        input[..30].to_vec(),
+                        target[..30].to_vec()
+                    ))
+                    .unwrap(),
+                30
+            );
+            let (dst, _, v) = front.migrate_binding(&b, Some(1)).unwrap();
+            assert_eq!(dst, 1);
+            assert_eq!(v, 0, "no committed version yet");
+            assert_eq!(b.home_shard(), 1);
+            assert_eq!(front.lanes_migrated(), 1);
+            assert_eq!(
+                front
+                    .with_binding(&b, |s, l| s.train(
+                        l,
+                        input[30..].to_vec(),
+                        target[30..].to_vec()
+                    ))
+                    .unwrap(),
+                60,
+                "trainer rows must survive the move"
+            );
+            assert_eq!(
+                front.with_binding(&b, |s, l| s.commit(l, 1e-2)).unwrap(),
+                1
+            );
+            let got = front
+                .with_binding(&b, |s, l| s.stream(l, task.input[60..100].to_vec()))
+                .unwrap();
+            assert_eq!(
+                got, reference,
+                "migrated lane diverged from the unmigrated twin"
+            );
+            // the source lane was freed: shard 0 is back to one lane
+            assert_eq!(front.shard(0).lanes_in_use(), 1);
+            assert_eq!(front.shard(1).lanes_in_use(), 1);
+            // a migrate to an out-of-range shard is a typed refusal
+            assert_eq!(
+                front.migrate_binding(&b, Some(9)).unwrap_err(),
+                "unknown_lane"
+            );
+            front.release_binding(&b);
+            front.release_binding(&t);
+            // released bindings refuse further moves, typed
+            assert_eq!(front.migrate_binding(&b, None).unwrap_err(), "no_lane");
+            assert_eq!(front.shard(0).lanes_in_use(), 0);
+            assert_eq!(front.shard(1).lanes_in_use(), 0);
+            front.shutdown();
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_half_the_skew_to_the_cold_shard() {
+        let model = Arc::new(make_model());
+        let front = ShardedFront::start(Arc::clone(&model), 2);
+        let task = MsoTask::new(1);
+        // skewed population: 6 streaming lanes homed on shard 0
+        let bindings: Vec<_> = (0..6)
+            .map(|_| front.acquire_binding(0).unwrap())
+            .collect();
+        // give each lane distinct state so the moves carry real values
+        for (i, b) in bindings.iter().enumerate() {
+            let chunk = task.input[i * 5..i * 5 + 10].to_vec();
+            front.with_binding(b, |s, l| s.stream(l, chunk)).unwrap();
+        }
+        assert_eq!(front.shard(0).lanes_in_use(), 6);
+        assert_eq!(front.shard(1).lanes_in_use(), 0);
+        let moved = front.rebalance_once();
+        assert_eq!(moved, 3, "half the skew migrates");
+        assert_eq!(front.shard(0).lanes_in_use(), 3);
+        assert_eq!(front.shard(1).lanes_in_use(), 3);
+        assert_eq!(front.lanes_migrated(), 3);
+        // balanced: the next round must not churn
+        assert_eq!(front.rebalance_once(), 0);
+        // the moved lanes still continue their exact streams
+        for (i, b) in bindings.iter().enumerate() {
+            let chunk = task.input[i * 5 + 10..i * 5 + 20].to_vec();
+            let got = front.with_binding(b, |s, l| s.stream(l, chunk)).unwrap();
+            let want = model.predict(&task.input[i * 5..i * 5 + 20]);
+            assert_eq!(got, want[10..], "lane {i} diverged after rebalance");
+        }
+        for b in &bindings {
+            front.release_binding(b);
+        }
+        front.shutdown();
+    }
+
+    #[test]
+    fn parked_snapshots_are_bounded_and_last_write_wins() {
+        let model = Arc::new(make_model());
+        let front = ShardedFront::start(Arc::clone(&model), 1);
+        let b = front.acquire_binding(0).unwrap();
+        front
+            .with_binding(&b, |s, l| s.stream(l, vec![0.1; 8]))
+            .unwrap();
+        let snap1 = front.checkpoint_binding(&b).unwrap();
+        front
+            .with_binding(&b, |s, l| s.stream(l, vec![0.2; 8]))
+            .unwrap();
+        let snap2 = front.checkpoint_binding(&b).unwrap();
+        assert!(front.park(7, snap1.clone()));
+        assert!(front.park(7, snap2.clone()), "re-push replaces in place");
+        assert_eq!(front.parked_lanes(), 1);
+        assert_eq!(front.parked_snapshot(7), Some(snap2));
+        front.unpark(7);
+        assert_eq!(front.parked_lanes(), 0);
+        assert_eq!(front.parked_snapshot(7), None);
+        front.release_binding(&b);
+        front.shutdown();
     }
 
     #[test]

@@ -121,10 +121,13 @@
 //! a connection-local state with the same arithmetic
 //! (precision-matched, bit-identical to a hub lane).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
-use std::time::Duration;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -134,7 +137,7 @@ use crate::util::json::{parse, Json};
 use crate::util::Timer;
 
 use super::front::LaneSnapshot;
-use super::shard::ShardedFront;
+use super::shard::{LaneBinding, ShardedFront};
 use super::{Model, Precision};
 
 /// Default shard count: one sweeper per available core.
@@ -250,15 +253,14 @@ pub fn serve_on(
             holdoff_us,
             shards,
             threaded,
-            idle_timeout: None,
-            trainer_budget: None,
+            ..Default::default()
         },
     )
 }
 
 /// Knobs of [`serve_on_opts`] — the positional `serve_on` parameters
 /// plus the options that arrived later.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct ServeOpts {
     /// Sweeper coalescing window in µs (0 = drain immediately).
     pub holdoff_us: u64,
@@ -280,6 +282,57 @@ pub struct ServeOpts {
     /// reconnecting (or hostile) client population can't grow sweeper
     /// memory without bound. `--trainer-budget-mb` on the CLI.
     pub trainer_budget: Option<usize>,
+    /// Run the occupancy rebalancer: a policy thread that periodically
+    /// migrates lanes off the hottest shard when the occupancy skew
+    /// exceeds the threshold (`ShardedFront::rebalance_once`). Off by
+    /// default — `--rebalance` on the CLI.
+    pub rebalance: bool,
+    /// Warm-standby address: stream per-lane checkpoint deltas to this
+    /// replica over the wire protocol's `migrate_in` op. Only lanes
+    /// whose state changed since the last push are shipped (dirty-bit
+    /// tracking), so idle lanes cost nothing. `--standby` on the CLI.
+    pub standby: Option<String>,
+    /// Standby push interval in ms (0 = the 200 ms default).
+    pub standby_interval_ms: u64,
+    /// On graceful drain, spill every live lane's checkpoint to
+    /// `dir/lane-<id>.json` before exit — `--drain-checkpoint` on the
+    /// CLI. The spilled files feed `migrate_in` on a successor server.
+    pub drain_checkpoint: Option<PathBuf>,
+    /// Treat SIGTERM as a `shutdown_drain` request (the CLI serve path
+    /// enables this; embedded/test servers default off so test harness
+    /// signals can't stop them).
+    pub drain_on_sigterm: bool,
+}
+
+/// Set by the SIGTERM handler; polled by both transports' accept loops
+/// when [`ServeOpts::drain_on_sigterm`] is on.
+pub(crate) static SIGTERM_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Install the SIGTERM → drain-flag handler (an async-signal-safe
+/// atomic store; the accept loops poll the flag).
+#[cfg(unix)]
+fn install_sigterm_handler() {
+    extern "C" fn on_sigterm(_signum: i32) {
+        SIGTERM_DRAIN.store(true, Ordering::SeqCst);
+    }
+    const SIGTERM: i32 = 15;
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    unsafe {
+        signal(SIGTERM, on_sigterm);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigterm_handler() {}
+
+/// Graceful-drain configuration threaded into both transports.
+pub(crate) struct DrainCfg {
+    /// Spill live lanes here on drain (`--drain-checkpoint`).
+    pub(crate) spill_dir: Option<PathBuf>,
+    /// Poll [`SIGTERM_DRAIN`] in the accept loop.
+    pub(crate) watch_sigterm: bool,
 }
 
 /// [`serve_on`] with the full option set.
@@ -297,14 +350,133 @@ pub fn serve_on_opts(
         opts.holdoff_us,
         opts.trainer_budget.unwrap_or(usize::MAX),
     );
+    if opts.drain_on_sigterm {
+        install_sigterm_handler();
+    }
+    // sidecar threads (rebalancer / standby pusher) stop on this flag
+    // and are joined BEFORE the sweepers wind down, so neither ever
+    // observes a dead front
+    let stop = Arc::new(AtomicBool::new(false));
+    let rebalancer = opts.rebalance.then(|| {
+        let f = Arc::clone(&front);
+        let s = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("lr-rebalancer".into())
+            .spawn(move || {
+                while !s.load(Ordering::SeqCst) {
+                    f.rebalance_once();
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            })
+            .expect("spawn rebalancer thread")
+    });
+    let pusher = opts.standby.clone().map(|standby_addr| {
+        let f = Arc::clone(&front);
+        let s = Arc::clone(&stop);
+        let interval = Duration::from_millis(match opts.standby_interval_ms {
+            0 => 200,
+            ms => ms,
+        });
+        std::thread::Builder::new()
+            .name("lr-standby-pusher".into())
+            .spawn(move || standby_push_loop(f, s, standby_addr, interval))
+            .expect("spawn standby pusher thread")
+    });
+    let drain = DrainCfg {
+        spill_dir: opts.drain_checkpoint.clone(),
+        watch_sigterm: opts.drain_on_sigterm,
+    };
     let use_event = !opts.threaded && cfg!(target_os = "linux");
     let res = if use_event {
-        serve_event(listener, Arc::clone(&front), max_requests, opts.idle_timeout)
+        serve_event(
+            listener,
+            Arc::clone(&front),
+            max_requests,
+            opts.idle_timeout,
+            &drain,
+        )
     } else {
-        serve_threaded(&listener, &front, max_requests)
+        serve_threaded(&listener, &front, max_requests, &drain)
     };
+    stop.store(true, Ordering::SeqCst);
+    if let Some(h) = rebalancer {
+        let _ = h.join();
+    }
+    if let Some(h) = pusher {
+        let _ = h.join();
+    }
     front.shutdown();
     res.map(|()| addr)
+}
+
+/// The warm-standby delta pusher: every `interval`, checkpoint each lane
+/// whose state changed since the last push (the binding's dirty bit) and
+/// ship it to the replica as `{"op": "migrate_in", "lane_id", "checkpoint"}`
+/// over ONE lazily-connected wire client. A failed push re-marks the
+/// lane dirty and drops the connection, so a dead or restarted standby
+/// costs retries, never lost deltas; IO timeouts bound every hang.
+fn standby_push_loop(
+    front: Arc<ShardedFront>,
+    stop: Arc<AtomicBool>,
+    standby_addr: String,
+    interval: Duration,
+) {
+    let mut client: Option<Client> = None;
+    'push: loop {
+        // sleep in short slices so serve_on_opts joins promptly
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::SeqCst) {
+                break 'push;
+            }
+            let slice = Duration::from_millis(10).min(interval - slept);
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        for b in front.live_bindings() {
+            if stop.load(Ordering::SeqCst) {
+                break 'push;
+            }
+            if !b.begin_push() {
+                continue; // clean since the last push: ship nothing
+            }
+            let ok = push_standby_delta(&front, &standby_addr, &mut client, &b);
+            b.end_push(ok);
+            if !ok {
+                client = None; // reconnect on the next dirty lane
+            }
+        }
+    }
+}
+
+/// One lane's standby push. `false` re-queues the delta (see caller).
+fn push_standby_delta(
+    front: &ShardedFront,
+    standby_addr: &str,
+    client: &mut Option<Client>,
+    b: &LaneBinding,
+) -> bool {
+    let snap = match front.checkpoint_binding(b) {
+        Ok(s) => s,
+        Err(_) => return false, // lane released/poisoned mid-push
+    };
+    if client.is_none() {
+        match Client::connect(standby_addr) {
+            Ok(mut c) => {
+                // a wedged replica must not hang the pusher forever
+                let _ = c.set_io_timeout(Some(Duration::from_secs(5)));
+                *client = Some(c);
+            }
+            Err(_) => return false,
+        }
+    }
+    let c = client.as_mut().expect("connected above");
+    let req = Json::obj(vec![
+        ("op", Json::Str("migrate_in".into())),
+        ("lane_id", Json::Num(b.id() as f64)),
+        ("checkpoint", snapshot_to_json(&snap)),
+    ]);
+    matches!(c.request(&req), Ok(resp) if resp.get("ok") == Some(&Json::Bool(true)))
 }
 
 #[cfg(target_os = "linux")]
@@ -313,8 +485,9 @@ fn serve_event(
     front: Arc<ShardedFront>,
     max_conns: Option<usize>,
     idle_timeout: Option<Duration>,
+    drain: &DrainCfg,
 ) -> Result<()> {
-    super::poll::serve_event_loop(listener, front, max_conns, idle_timeout)
+    super::poll::serve_event_loop(listener, front, max_conns, idle_timeout, drain)
 }
 
 #[cfg(not(target_os = "linux"))]
@@ -323,55 +496,114 @@ fn serve_event(
     _front: Arc<ShardedFront>,
     _max_conns: Option<usize>,
     _idle_timeout: Option<Duration>,
+    _drain: &DrainCfg,
 ) -> Result<()> {
     unreachable!("event loop is Linux-only; serve_on routes non-Linux to the threaded path")
+}
+
+/// Shared drain state of the threaded transport: the accept loop and
+/// every handler thread coordinate a graceful stop through it.
+struct DrainCtl {
+    /// Set by a `shutdown_drain` op (any handler) or the SIGTERM poll.
+    draining: AtomicBool,
+    /// Read-half handles of parked connections, keyed by accept id: on
+    /// drain the accept loop shuts each one down so `read_line` wakes
+    /// with EOF and the handler exits AFTER flushing its last reply —
+    /// never a mid-reply RST.
+    streams: Mutex<HashMap<u64, TcpStream>>,
+    /// Lane bindings retained (NOT released) by handlers that exited
+    /// while draining, so their lanes survive to be spilled.
+    keep: Mutex<Vec<Arc<LaneBinding>>>,
 }
 
 /// The thread-per-connection transport: one lightweight handler thread
 /// per accepted connection, parked in `read_line` between requests.
 /// Kept as the `--threaded` A/B twin of the event loop (and the
-/// non-Linux default).
+/// non-Linux default). The listener runs non-blocking with a short
+/// accept poll so a drain request (op or SIGTERM) can stop the loop
+/// even while no connection is arriving.
 fn serve_threaded(
     listener: &TcpListener,
     front: &Arc<ShardedFront>,
     max_requests: Option<usize>,
+    drain: &DrainCfg,
 ) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let ctl = Arc::new(DrainCtl {
+        draining: AtomicBool::new(false),
+        streams: Mutex::new(HashMap::new()),
+        keep: Mutex::new(Vec::new()),
+    });
     let mut served = 0usize;
-    let mut handles = Vec::new();
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let mut accept_err: Option<anyhow::Error> = None;
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
+    loop {
+        if drain.watch_sigterm && SIGTERM_DRAIN.load(Ordering::SeqCst) {
+            ctl.draining.store(true, Ordering::SeqCst);
+        }
+        if ctl.draining.load(Ordering::SeqCst) {
+            break; // stop accepting; drain below
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                // accepted sockets must block: handlers park in read_line
+                let _ = stream.set_nonblocking(false);
+                // key by peer IP so the same client re-hashes to the
+                // same home shard across reconnects
+                let conn_key = ip_key(&peer.ip());
+                let id = served as u64;
+                served += 1;
+                if let Ok(dup) = stream.try_clone() {
+                    ctl.streams.lock().unwrap().insert(id, dup);
+                }
+                let front2 = Arc::clone(front);
+                let ctl2 = Arc::clone(&ctl);
+                handles.push(std::thread::spawn(move || {
+                    let _ = handle_connection(front2, conn_key, stream, &ctl2, id);
+                }));
+                if let Some(max) = max_requests {
+                    if served >= max {
+                        break;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // idle: reap finished handlers so the vec stays bounded
+                handles.retain(|h| !h.is_finished());
+                std::thread::sleep(Duration::from_millis(5));
+            }
             Err(e) => {
                 // don't early-return: any live handlers must still be
                 // joined below (and the caller winds the sweepers down)
                 accept_err = Some(e.into());
                 break;
             }
-        };
-        let front2 = Arc::clone(front);
-        // key by peer IP so the same client re-hashes to the same home
-        // shard across reconnects; an unreadable peer address gets a
-        // tagged counter key outside the IPv4 key space
-        let conn_key = stream
-            .peer_addr()
-            .map(|a| ip_key(&a.ip()))
-            .unwrap_or_else(|_| fallback_key(served));
-        let handle = std::thread::spawn(move || {
-            let _ = handle_connection(front2, conn_key, stream);
-        });
-        served += 1;
-        if let Some(max) = max_requests {
-            handles.push(handle);
-            if served >= max {
-                break;
-            }
-        } else {
-            drop(handle); // detach
+        }
+    }
+    if ctl.draining.load(Ordering::SeqCst) {
+        // wake every parked handler with EOF; in-flight requests finish
+        // and flush first (the handler checks the drain flag only
+        // BETWEEN requests)
+        for s in ctl.streams.lock().unwrap().values() {
+            let _ = s.shutdown(std::net::Shutdown::Read);
         }
     }
     for h in handles {
         let _ = h.join();
+    }
+    // spill the lanes retained by draining handlers, then free them
+    let keep = std::mem::take(&mut *ctl.keep.lock().unwrap());
+    if let Some(dir) = &drain.spill_dir {
+        if !keep.is_empty() {
+            let n = front.spill_bindings(&keep, dir);
+            eprintln!(
+                "drain-checkpoint: spilled {n} lane(s) to {}",
+                dir.display()
+            );
+        }
+    }
+    for b in &keep {
+        front.release_binding(b);
     }
     match accept_err {
         Some(e) => Err(e),
@@ -402,13 +634,14 @@ enum LocalFallback {
 /// Per-connection streaming identity, shared by both transports: the
 /// home shard is fixed at accept time (hash of the connection key); a
 /// hub lane on that shard is acquired LAZILY on the first `stream` op
-/// (predict-only connections never occupy one) and kept for the
-/// connection's lifetime; once the hub was full for this connection, it
-/// sticks to the local fallback so its state never jumps between hub
-/// and local.
+/// (predict-only connections never occupy one) — wrapped in a mobile
+/// [`LaneBinding`], so a live migration re-homes the lane under the
+/// connection without it noticing — and kept for the connection's
+/// lifetime; once the hub was full for this connection, it sticks to
+/// the local fallback so its state never jumps between hub and local.
 pub(crate) struct ConnState {
     pub(crate) shard_idx: usize,
-    pub(crate) lane: Option<usize>,
+    pub(crate) binding: Option<Arc<LaneBinding>>,
     hub_denied: bool,
     /// Built lazily on the first hub-denied `stream` op — predict-only
     /// connections (and connections that win a hub lane) never pay for it.
@@ -419,7 +652,7 @@ impl ConnState {
     pub(crate) fn new(shard_idx: usize) -> Self {
         Self {
             shard_idx,
-            lane: None,
+            binding: None,
             hub_denied: false,
             local: None,
         }
@@ -453,9 +686,9 @@ fn local_fallback(model: &Model) -> LocalFallback {
 /// is sticky so the connection's state never migrates between hub and
 /// local fallback.
 pub(crate) fn try_acquire_lane(front: &ShardedFront, conn: &mut ConnState) {
-    if conn.lane.is_none() && !conn.hub_denied {
-        conn.lane = front.shard(conn.shard_idx).acquire_lane();
-        if conn.lane.is_none() {
+    if conn.binding.is_none() && !conn.hub_denied {
+        conn.binding = front.acquire_binding(conn.shard_idx);
+        if conn.binding.is_none() {
             conn.hub_denied = true;
         }
     }
@@ -526,6 +759,24 @@ pub(crate) fn coded(code: &'static str, msg: impl Into<String>) -> anyhow::Error
     })
 }
 
+/// Every stable error-code slug of the one-table contract (DESIGN.md
+/// §10/§11) — the list [`coded_error`] maps. The retryable subset
+/// ([`RETRYABLE_CODES`]) is pinned to this table by a unit test.
+pub(crate) const ERROR_CODES: &[&str] = &[
+    "commit_empty",
+    "commit_singular",
+    "trainer_budget",
+    "lane_poisoned",
+    "restore_mismatch",
+    "rollback_unknown_version",
+    "hub_full",
+    "no_lane",
+    "unavailable",
+    "overloaded",
+    "deadline_exceeded",
+    "unknown_lane",
+];
+
 /// Resolve a sweeper-side error-code slug into the shared typed wire
 /// error — the single source of each failure mode's `(code, message)`
 /// pair for both transports.
@@ -558,6 +809,16 @@ pub(crate) fn coded_error(code: &'static str) -> anyhow::Error {
         }
         "no_lane" => "this op requires an active streaming lane",
         "unavailable" => "service unavailable: sweeper not running",
+        "overloaded" => {
+            "server overloaded: request shed at admission; \
+             retry with backoff"
+        }
+        "deadline_exceeded" => {
+            "deadline exceeded before the request ran; nothing was applied"
+        }
+        "unknown_lane" => {
+            "unknown lane: no such parked lane id or migration target"
+        }
         other => {
             debug_assert!(false, "unmapped wire error code {other:?}");
             "internal serving error"
@@ -645,18 +906,71 @@ pub(crate) enum Op {
     Checkpoint,
     Restore(Box<LaneSnapshot>),
     Reset,
+    /// Live lane migration to another shard of THIS server (`None` =
+    /// server picks the coldest shard).
+    Migrate { shard: Option<usize> },
+    /// The receiving half of cross-server mobility. `lane_id` + `snap`
+    /// parks a standby delta; `lane_id` alone adopts a parked lane onto
+    /// this connection (promotion); `snap` alone restores a foreign
+    /// checkpoint onto this connection (cross-server migration).
+    MigrateIn {
+        lane_id: Option<u64>,
+        snap: Option<Box<LaneSnapshot>>,
+    },
+    /// Graceful drain: stop accepting, finish in-flight work, flush,
+    /// spill live lanes (with `--drain-checkpoint`), exit.
+    ShutdownDrain,
 }
 
-pub(crate) fn parse_op(line: &str) -> Result<Op> {
+/// Parse an optional non-negative integer field (`None` when absent or
+/// JSON null).
+fn parse_opt_uint(req: &Json, field: &str) -> Result<Option<u64>> {
+    match req.get(field) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("non-numeric '{field}'"))?;
+            anyhow::ensure!(
+                x.is_finite() && x >= 0.0 && x.fract() == 0.0,
+                "'{field}' must be a non-negative integer"
+            );
+            Ok(Some(x as u64))
+        }
+    }
+}
+
+/// Classify one request line into `(op, deadline budget)`. Every op
+/// accepts an optional `"deadline_ms"`: the client's end-to-end budget
+/// for this request, honored at queue admission AND when the sweeper
+/// picks the job up — an expired job answers the typed
+/// `deadline_exceeded` error without touching lane state.
+pub(crate) fn parse_op(line: &str) -> Result<(Op, Option<Duration>)> {
     let req = parse(line.trim())?;
+    let deadline = match req.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .ok_or_else(|| anyhow!("non-numeric 'deadline_ms'"))?;
+            anyhow::ensure!(
+                ms.is_finite() && ms >= 0.0,
+                "'deadline_ms' must be a finite non-negative number"
+            );
+            Some(
+                Duration::try_from_secs_f64(ms / 1000.0)
+                    .map_err(|_| anyhow!("'deadline_ms' out of range"))?,
+            )
+        }
+    };
     let op = req
         .get("op")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("missing 'op'"))?;
-    match op {
-        "info" => Ok(Op::Info),
-        "predict" => Ok(Op::Predict(parse_input(&req)?)),
-        "stream" => Ok(Op::Stream(parse_input(&req)?)),
+    let op = match op {
+        "info" => Op::Info,
+        "predict" => Op::Predict(parse_input(&req)?),
+        "stream" => Op::Stream(parse_input(&req)?),
         "train" => {
             let input = parse_input(&req)?;
             let target = parse_vec(&req, "target")?;
@@ -672,7 +986,7 @@ pub(crate) fn parse_op(line: &str) -> Result<Op> {
                  per op — split the stream across multiple ops)",
                 input.len()
             );
-            Ok(Op::Train { input, target })
+            Op::Train { input, target }
         }
         "commit" => {
             let alpha = match req.get("alpha") {
@@ -685,35 +999,40 @@ pub(crate) fn parse_op(line: &str) -> Result<Op> {
                 alpha.is_finite() && alpha >= 0.0,
                 "'alpha' must be a finite non-negative number"
             );
-            Ok(Op::Commit { alpha })
+            Op::Commit { alpha }
         }
         "rollback" => {
             // default 0 = the base model readout
-            let version = match req.get("version") {
-                None => 0u64,
-                Some(v) => {
-                    let x = v
-                        .as_f64()
-                        .ok_or_else(|| anyhow!("non-numeric 'version'"))?;
-                    anyhow::ensure!(
-                        x.is_finite() && x >= 0.0 && x.fract() == 0.0,
-                        "'version' must be a non-negative integer"
-                    );
-                    x as u64
-                }
-            };
-            Ok(Op::Rollback { version })
+            let version = parse_opt_uint(&req, "version")?.unwrap_or(0);
+            Op::Rollback { version }
         }
-        "checkpoint" => Ok(Op::Checkpoint),
+        "checkpoint" => Op::Checkpoint,
         "restore" => {
             let snap = req
                 .get("checkpoint")
                 .ok_or_else(|| anyhow!("missing 'checkpoint' object"))?;
-            Ok(Op::Restore(Box::new(snapshot_from_json(snap)?)))
+            Op::Restore(Box::new(snapshot_from_json(snap)?))
         }
-        "reset" => Ok(Op::Reset),
-        other => Err(anyhow!("unknown op {other:?}")),
-    }
+        "reset" => Op::Reset,
+        "migrate" => Op::Migrate {
+            shard: parse_opt_uint(&req, "shard")?.map(|s| s as usize),
+        },
+        "migrate_in" => {
+            let lane_id = parse_opt_uint(&req, "lane_id")?;
+            let snap = match req.get("checkpoint") {
+                None | Some(Json::Null) => None,
+                Some(j) => Some(Box::new(snapshot_from_json(j)?)),
+            };
+            anyhow::ensure!(
+                lane_id.is_some() || snap.is_some(),
+                "migrate_in requires 'lane_id' and/or 'checkpoint'"
+            );
+            Op::MigrateIn { lane_id, snap }
+        }
+        "shutdown_drain" => Op::ShutdownDrain,
+        other => return Err(anyhow!("unknown op {other:?}")),
+    };
+    Ok((op, deadline))
 }
 
 // ---------------------------------------------------------------------------
@@ -902,8 +1221,42 @@ pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
             Json::Arr(sweeps.iter().map(|&s| Json::Num(s as f64)).collect()),
         ),
         ("holdoff_us", Json::Num(home.holdoff_us() as f64)),
-        ("stream_lane", match conn.lane {
-            Some(l) => Json::Num(l as f64),
+        ("stream_lane", match &conn.binding {
+            Some(b) => Json::Num(b.home_lane() as f64),
+            None => Json::Null,
+        }),
+        // self-healing metrics (PR 7): identical on both transports
+        ("lanes_migrated", Json::Num(front.lanes_migrated() as f64)),
+        ("jobs_shed", Json::Num(front.jobs_shed_total() as f64)),
+        (
+            "deadline_misses",
+            Json::Num(front.deadline_misses_total() as f64),
+        ),
+        (
+            "standby_lag_lanes",
+            Json::Num(front.standby_lag_lanes() as f64),
+        ),
+        ("parked_lanes", Json::Num(front.parked_lanes() as f64)),
+        (
+            "shard_occupancy_ewma",
+            Json::Arr(
+                front
+                    .update_occupancy_ewma()
+                    .into_iter()
+                    .map(Json::Num)
+                    .collect(),
+            ),
+        ),
+        // the connection's mobile lane identity: `lane_id` names the
+        // lane in standby pushes and drain spills; `lane_shard` is the
+        // CURRENT home (it changes when the lane migrates — `shard`
+        // above stays the dispatch home for this connection's key)
+        ("lane_id", match &conn.binding {
+            Some(b) => Json::Num(b.id() as f64),
+            None => Json::Null,
+        }),
+        ("lane_shard", match &conn.binding {
+            Some(b) => Json::Num(b.home_shard() as f64),
             None => Json::Null,
         }),
     ])
@@ -950,6 +1303,16 @@ pub(crate) fn version_response(version: u64) -> Json {
     ])
 }
 
+/// `migrate` reply: the lane's new home and its active readout version.
+pub(crate) fn migrate_response(shard: usize, lane: usize, version: u64) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("shard", Json::Num(shard as f64)),
+        ("lane", Json::Num(lane as f64)),
+        ("version", Json::Num(version as f64)),
+    ])
+}
+
 /// `checkpoint` reply: the encoded lane snapshot.
 pub(crate) fn checkpoint_response(snap: &LaneSnapshot) -> Json {
     Json::obj(vec![
@@ -980,11 +1343,19 @@ fn handle_connection(
     front: Arc<ShardedFront>,
     conn_key: u64,
     stream: TcpStream,
+    ctl: &DrainCtl,
+    id: u64,
 ) -> Result<()> {
     let mut conn = ConnState::new(front.shard_for_key(conn_key));
-    let result = serve_lines(&front, &mut conn, stream);
-    if let Some(l) = conn.lane {
-        front.shard(conn.shard_idx).release_lane(l);
+    let result = serve_lines(&front, &mut conn, stream, ctl);
+    ctl.streams.lock().unwrap().remove(&id);
+    if let Some(b) = conn.binding.take() {
+        if ctl.draining.load(Ordering::SeqCst) {
+            // drain keeps the lane alive so the accept loop can spill it
+            ctl.keep.lock().unwrap().push(b);
+        } else {
+            front.release_binding(&b);
+        }
     }
     result
 }
@@ -993,6 +1364,7 @@ fn serve_lines(
     front: &ShardedFront,
     conn: &mut ConnState,
     stream: TcpStream,
+    ctl: &DrainCtl,
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -1000,35 +1372,49 @@ fn serve_lines(
     loop {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+            return Ok(()); // client closed (or the drain woke us with EOF)
         }
-        let response = match handle_request(front, conn, &line) {
+        let mut drain_req = false;
+        let response = match handle_request(front, conn, &line, &mut drain_req) {
             Ok(json) => json,
             Err(e) => error_response(&e),
         };
         out.write_all(response.to_string_compact().as_bytes())?;
         out.write_all(b"\n")?;
+        if drain_req {
+            ctl.draining.store(true, Ordering::SeqCst);
+        }
+        if ctl.draining.load(Ordering::SeqCst) {
+            // the reply above flushed; exit between requests, cleanly
+            return Ok(());
+        }
     }
 }
 
 /// One request → one response, blocking on the shard queues. The event
 /// loop mirrors this decision tree with event replies in
 /// `server/poll.rs::dispatch` — the two must stay semantically aligned
-/// (enforced by the bit-identity tests below).
+/// (enforced by the bit-identity tests below). A `shutdown_drain` op
+/// sets `drain_out` AFTER its ok-reply is built; the transport flushes
+/// the reply and then begins the drain.
 fn handle_request(
     front: &ShardedFront,
     conn: &mut ConnState,
     line: &str,
+    drain_out: &mut bool,
 ) -> Result<Json> {
     let model = front.model();
-    let home = front.shard(conn.shard_idx);
-    match parse_op(line)? {
+    let (op, budget) = parse_op(line)?;
+    // the budget starts when the request is UNDERSTOOD; Instant addition
+    // saturates via checked_add (an astronomically large budget = none)
+    let deadline = budget.and_then(|d| Instant::now().checked_add(d));
+    match op {
         Op::Info => Ok(info_response(front, conn)),
         Op::Predict(input) => {
             let steps = input.len();
             let t = Timer::start();
             // stateless: dealt to the least-loaded shard, not the home
-            let output = front.predict(input);
+            let output = front.predict_deadline(input, deadline)?;
             Ok(predict_response(output, steps, t.elapsed_s()))
         }
         Op::Stream(input) => {
@@ -1037,8 +1423,13 @@ fn handle_request(
             // hub (and never switch engines once this connection's
             // streaming has started)
             try_acquire_lane(front, conn);
-            let outs = match conn.lane {
-                Some(l) => home.stream(l, input)?,
+            let outs = match &conn.binding {
+                Some(b) => {
+                    let outs = front
+                        .with_binding(b, |s, l| s.stream_deadline(l, input, deadline))?;
+                    b.mark_dirty();
+                    outs
+                }
                 None => stream_fallback(model, conn, &input),
             };
             Ok(stream_response(outs))
@@ -1049,31 +1440,39 @@ fn handle_request(
             // training is lane-resident: the Gram accumulator lives next
             // to the lane state on the home shard's sweeper
             try_acquire_lane(front, conn);
-            match conn.lane {
-                Some(l) => {
-                    let rows = home.train(l, input, target)?;
+            match &conn.binding {
+                Some(b) => {
+                    let rows = front.with_binding(b, |s, l| {
+                        s.train_deadline(l, input, target, deadline)
+                    })?;
+                    b.mark_dirty();
                     Ok(train_response(rows))
                 }
                 None => Err(hub_full_train_error()),
             }
         }
-        Op::Commit { alpha } => match conn.lane {
-            Some(l) => {
-                let version = home.commit(l, alpha)?;
+        Op::Commit { alpha } => match &conn.binding {
+            Some(b) => {
+                let version = front
+                    .with_binding(b, |s, l| s.commit_deadline(l, alpha, deadline))?;
+                b.mark_dirty();
                 Ok(version_response(version))
             }
             None => Err(nothing_to_commit_error()),
         },
-        Op::Rollback { version } => match conn.lane {
-            Some(l) => {
-                let active = home.rollback(l, version)?;
+        Op::Rollback { version } => match &conn.binding {
+            Some(b) => {
+                let active = front
+                    .with_binding(b, |s, l| s.rollback_deadline(l, version, deadline))?;
+                b.mark_dirty();
                 Ok(version_response(active))
             }
             None => Err(no_lane_error("rollback")),
         },
-        Op::Checkpoint => match conn.lane {
-            Some(l) => {
-                let snap = home.checkpoint(l)?;
+        Op::Checkpoint => match &conn.binding {
+            Some(b) => {
+                let snap = front
+                    .with_binding(b, |s, l| s.checkpoint_deadline(l, deadline))?;
                 Ok(checkpoint_response(&snap))
             }
             None => Err(no_lane_error("checkpoint")),
@@ -1083,9 +1482,11 @@ fn handle_request(
             // restore targets a hub lane (acquiring one on first use,
             // like stream); it also supersedes any local-fallback state
             try_acquire_lane(front, conn);
-            match conn.lane {
-                Some(l) => {
-                    let active = home.restore(l, *snap)?;
+            match &conn.binding {
+                Some(b) => {
+                    let active = front
+                        .with_binding(b, |s, l| s.restore_deadline(l, *snap, deadline))?;
+                    b.mark_dirty();
                     conn.clear_local();
                     Ok(version_response(active))
                 }
@@ -1093,12 +1494,111 @@ fn handle_request(
             }
         }
         Op::Reset => {
-            if let Some(l) = conn.lane {
-                home.reset(l)?;
+            if let Some(b) = &conn.binding {
+                front.with_binding(b, |s, l| s.reset_deadline(l, deadline))?;
+                b.mark_dirty();
             }
             conn.clear_local();
             Ok(ok_response())
         }
+        Op::Migrate { shard } => handle_migrate(front, conn, shard),
+        Op::MigrateIn { lane_id, snap } => {
+            handle_migrate_in(front, conn, lane_id, snap, deadline)
+        }
+        Op::ShutdownDrain => {
+            *drain_out = true;
+            Ok(ok_response())
+        }
+    }
+}
+
+/// `migrate`: move this connection's live lane to another shard
+/// (coldest when unspecified), mid-stream, bit-invisibly. Shared by
+/// both transports.
+pub(crate) fn handle_migrate(
+    front: &ShardedFront,
+    conn: &mut ConnState,
+    shard: Option<usize>,
+) -> Result<Json> {
+    match &conn.binding {
+        Some(b) => {
+            let (dst, lane, version) =
+                front.migrate_binding(b, shard).map_err(coded_error)?;
+            Ok(migrate_response(dst, lane, version))
+        }
+        None => Err(no_lane_error("migrate")),
+    }
+}
+
+/// `migrate_in`: the receiving half of cross-server lane mobility,
+/// shared by both transports. Three forms (see [`Op::MigrateIn`]):
+/// a standby delta push (`lane_id` + `checkpoint`, parked without
+/// occupying a hub lane), a promotion adopt (`lane_id` alone), and a
+/// cross-server restore (`checkpoint` alone).
+pub(crate) fn handle_migrate_in(
+    front: &ShardedFront,
+    conn: &mut ConnState,
+    lane_id: Option<u64>,
+    snap: Option<Box<LaneSnapshot>>,
+    deadline: Option<Instant>,
+) -> Result<Json> {
+    let model = front.model();
+    match (lane_id, snap) {
+        (Some(id), Some(snap)) => {
+            // push: validate against OUR model up front so a primary
+            // pointed at the wrong replica fails its push loudly
+            // instead of parking garbage that can never be adopted
+            if snap.n != model.esn.n() || snap.precision != model.precision {
+                return Err(coded_error("restore_mismatch"));
+            }
+            if front.park(id, *snap) {
+                Ok(ok_response())
+            } else {
+                Err(coded_error("hub_full"))
+            }
+        }
+        (Some(id), None) => {
+            // adopt: restore the parked delta onto THIS connection's
+            // lane; the snapshot is only unparked once the restore
+            // succeeded, so a failed adopt can be retried
+            guard_streamable(model)?;
+            let parked = front
+                .parked_snapshot(id)
+                .ok_or_else(|| coded_error("unknown_lane"))?;
+            try_acquire_lane(front, conn);
+            match &conn.binding {
+                Some(b) => {
+                    let active = front.with_binding(b, |s, l| {
+                        s.restore_deadline(l, parked, deadline)
+                    })?;
+                    b.mark_dirty();
+                    front.unpark(id);
+                    conn.clear_local();
+                    Ok(version_response(active))
+                }
+                None => Err(hub_full_train_error()),
+            }
+        }
+        (None, Some(snap)) => {
+            // cross-server migrate: restore semantics on a fresh lane
+            guard_streamable(model)?;
+            try_acquire_lane(front, conn);
+            match &conn.binding {
+                Some(b) => {
+                    let active = front.with_binding(b, |s, l| {
+                        s.restore_deadline(l, *snap, deadline)
+                    })?;
+                    b.mark_dirty();
+                    conn.clear_local();
+                    Ok(version_response(active))
+                }
+                None => Err(hub_full_train_error()),
+            }
+        }
+        // parse_op guarantees at least one field; keep the refusal typed
+        (None, None) => Err(anyhow!(
+            "migrate_in requires 'lane_id' and/or 'checkpoint'"
+        )),
     }
 }
 
@@ -1130,6 +1630,17 @@ fn parse_input(req: &Json) -> Result<Vec<f64>> {
     parse_vec(req, "input")
 }
 
+/// The transient error codes [`Client::with_retry`] retries. Everything
+/// else in the [`ERROR_CODES`] table is DETERMINISTIC — retrying a
+/// `restore_mismatch` or `commit_singular` can only fail identically,
+/// so those surface immediately. Pinned to the table by a unit test.
+pub const RETRYABLE_CODES: &[&str] = &["unavailable", "overloaded"];
+
+/// Is this error-code slug in the transient, retry-worthy set?
+pub fn is_retryable_code(code: &str) -> bool {
+    RETRYABLE_CODES.contains(&code)
+}
+
 /// Minimal client for the examples/tests.
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -1143,6 +1654,16 @@ impl Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
         })
+    }
+
+    /// Bound every read AND write on this connection (`None` = block
+    /// forever). Deadline-bounded reads are what turn a hung server
+    /// into a visible error instead of a stuck client — the chaos suite
+    /// drives all its assertions through timed clients.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_write_timeout(timeout)?;
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
     }
 
     pub fn request(&mut self, req: &Json) -> Result<Json> {
@@ -1272,6 +1793,98 @@ impl Client {
             ("checkpoint", checkpoint.clone()),
         ]);
         self.version_op(&req)
+    }
+
+    /// Ask the server to migrate this connection's live lane to another
+    /// shard (`None` = the server picks the coldest), mid-stream and
+    /// bit-invisibly. Returns the new home shard index.
+    pub fn migrate(&mut self, shard: Option<usize>) -> Result<u64> {
+        let mut fields = vec![("op", Json::Str("migrate".into()))];
+        if let Some(s) = shard {
+            fields.push(("shard", Json::Num(s as f64)));
+        }
+        let resp = self.request(&Json::obj(fields))?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        resp.get("shard")
+            .and_then(Json::as_f64)
+            .map(|s| s as u64)
+            .ok_or_else(|| anyhow!("missing shard"))
+    }
+
+    /// Install a checkpoint object on this connection's lane of ANOTHER
+    /// server over the same model — the receiving half of cross-server
+    /// migration. Returns the restored active version id.
+    pub fn migrate_in(&mut self, checkpoint: &Json) -> Result<u64> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("migrate_in".into())),
+            ("checkpoint", checkpoint.clone()),
+        ]);
+        self.version_op(&req)
+    }
+
+    /// Adopt a standby-pushed (parked) lane by its primary-side lane id
+    /// — the promotion op after a primary failure. Returns the adopted
+    /// lane's active version id.
+    pub fn adopt(&mut self, lane_id: u64) -> Result<u64> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("migrate_in".into())),
+            ("lane_id", Json::Num(lane_id as f64)),
+        ]);
+        self.version_op(&req)
+    }
+
+    /// Ask the server to drain gracefully: stop accepting, finish
+    /// in-flight work, flush, spill live lanes (if configured), exit.
+    pub fn shutdown_drain(&mut self) -> Result<()> {
+        let req = Json::obj(vec![("op", Json::Str("shutdown_drain".into()))]);
+        let resp = self.request(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        Ok(())
+    }
+
+    /// [`Self::request`] with bounded retries and decorrelated-jitter
+    /// backoff on the TRANSIENT error codes only ([`RETRYABLE_CODES`]):
+    /// an `overloaded` shed or an `unavailable` blip is retried up to
+    /// `attempts` times; every deterministic refusal (`restore_mismatch`,
+    /// `commit_singular`, …) and every success returns immediately. IO
+    /// errors propagate — a dead socket can't be retried in place.
+    pub fn with_retry(&mut self, req: &Json, attempts: usize) -> Result<Json> {
+        const BASE_MS: f64 = 5.0;
+        const CAP_MS: f64 = 500.0;
+        // deterministic per-client jitter stream (no global RNG): seed
+        // from the client's address, which is stable for its lifetime
+        let mut rng =
+            crate::rng::Pcg64::new(0x7769_7265_5f72_6574, self as *const Self as u64);
+        let mut prev_ms = BASE_MS;
+        let attempts = attempts.max(1);
+        for attempt in 1..=attempts {
+            let resp = self.request(req)?;
+            let ok = resp
+                .get("ok")
+                .map(|j| *j == Json::Bool(true))
+                .unwrap_or(false);
+            let retryable = !ok
+                && resp
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .map(is_retryable_code)
+                    .unwrap_or(false);
+            if ok || !retryable || attempt == attempts {
+                return Ok(resp);
+            }
+            // decorrelated jitter: sleep ~U[base, 3·prev], capped
+            let span = (prev_ms * 3.0 - BASE_MS).max(0.0);
+            let ms = (BASE_MS + rng.next_f64() * span).min(CAP_MS);
+            prev_ms = ms;
+            std::thread::sleep(Duration::from_micros((ms * 1000.0) as u64));
+        }
+        unreachable!("the final attempt returns above")
     }
 
     /// Shared request → `{"ok": true, "version": v}` decode.
@@ -1882,5 +2495,475 @@ mod tests {
             drop(b);
             handle.join().unwrap();
         }
+    }
+
+    #[test]
+    fn migrate_is_bit_invisible_on_the_wire_at_both_precisions() {
+        // mid-stream shard→shard migration must be unobservable: the
+        // migrated lane's continuation is bit-identical to an
+        // unmigrated twin's, on both transports at both precisions
+        let task = MsoTask::new(1);
+        let input = &task.input[..60];
+        for model in [Arc::new(make_model()), Arc::new(make_model_f32())] {
+            for threaded in [false, true] {
+                let (addr, handle) =
+                    spawn_server(Arc::clone(&model), 2, Some(2), threaded);
+                let mut r = Client::connect(&addr).unwrap();
+                let reference = r.stream(input).unwrap();
+                let mut a = Client::connect(&addr).unwrap();
+                let first = a.stream(&input[..30]).unwrap();
+                assert_eq!(first, reference[..30], "pre-migration diverged");
+                let info = |c: &mut Client| {
+                    c.request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+                        .unwrap()
+                };
+                let before = info(&mut a);
+                let cur =
+                    before.get("lane_shard").and_then(Json::as_f64).unwrap();
+                let target = 1 - cur as usize;
+                let new_home = a.migrate(Some(target)).unwrap();
+                assert_eq!(new_home, target as u64, "lane re-homed elsewhere");
+                let rest = a.stream(&input[30..]).unwrap();
+                assert_eq!(
+                    rest,
+                    reference[30..],
+                    "threaded={threaded}: migrated lane diverged from the \
+                     unmigrated twin"
+                );
+                let after = info(&mut a);
+                assert_eq!(
+                    after.get("lane_shard").and_then(Json::as_f64),
+                    Some(target as f64),
+                    "info must report the new home shard"
+                );
+                assert_eq!(
+                    after.get("shard").and_then(Json::as_f64),
+                    before.get("shard").and_then(Json::as_f64),
+                    "the dispatch home (peer-IP hash) must not move"
+                );
+                assert!(
+                    after.get("lanes_migrated").and_then(Json::as_f64).unwrap()
+                        >= 1.0
+                );
+                assert_eq!(
+                    after
+                        .get("shard_occupancy_ewma")
+                        .and_then(Json::as_arr)
+                        .unwrap()
+                        .len(),
+                    2
+                );
+                drop(a);
+                drop(r);
+                handle.join().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn migrate_in_restores_parks_and_adopts_across_servers() {
+        // the receiving half of cross-server mobility: a checkpoint
+        // restores onto ANOTHER server bit-identically via migrate_in;
+        // a standby delta parks without a lane and a later connection
+        // adopts it; an unknown lane id is a typed refusal
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let input = &task.input[..60];
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 2, Some(1), threaded);
+            let mut r = Client::connect(&addr).unwrap();
+            let reference = r.stream(input).unwrap();
+            let mut a = Client::connect(&addr).unwrap();
+            assert_eq!(a.stream(&input[..30]).unwrap(), reference[..30]);
+            let cp = a.checkpoint().unwrap();
+            drop(a);
+            drop(r);
+            handle.join().unwrap();
+            // successor server over the same model
+            let (addr2, handle2) =
+                spawn_server(Arc::clone(&model), 3, Some(2), threaded);
+            let mut m = Client::connect(&addr2).unwrap();
+            m.migrate_in(&cp).unwrap();
+            assert_eq!(
+                m.stream(&input[30..]).unwrap(),
+                reference[30..],
+                "threaded={threaded}: cross-server migrate_in diverged"
+            );
+            // park a standby delta (no lane held), then adopt it
+            let mut p = Client::connect(&addr2).unwrap();
+            let resp = p
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("migrate_in".into())),
+                    ("lane_id", Json::Num(42.0)),
+                    ("checkpoint", cp.clone()),
+                ]))
+                .unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            let mut q = Client::connect(&addr2).unwrap();
+            let resp = q
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("migrate_in".into())),
+                    ("lane_id", Json::Num(999.0)),
+                ]))
+                .unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code"),
+                Some(&Json::Str("unknown_lane".into())),
+                "adopting an unparked lane id must be a typed refusal"
+            );
+            q.adopt(42).unwrap();
+            assert_eq!(
+                q.stream(&input[30..]).unwrap(),
+                reference[30..],
+                "threaded={threaded}: adopted standby lane diverged"
+            );
+            drop(m);
+            drop(p);
+            drop(q);
+            handle2.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn expired_deadlines_are_typed_refusals_that_never_advance_state() {
+        // `deadline_ms: 0` is already expired at admission: the request
+        // answers the typed `deadline_exceeded` code, lane state does
+        // not advance, and the continuation stays bit-identical
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let input = &task.input[..60];
+        let stream_req = |input: &[f64], deadline_ms: f64| {
+            Json::obj(vec![
+                ("op", Json::Str("stream".into())),
+                (
+                    "input",
+                    Json::Arr(input.iter().map(|x| Json::Num(*x)).collect()),
+                ),
+                ("deadline_ms", Json::Num(deadline_ms)),
+            ])
+        };
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 2, Some(1), threaded);
+            let mut r = Client::connect(&addr).unwrap();
+            let reference = r.stream(input).unwrap();
+            let mut a = Client::connect(&addr).unwrap();
+            assert_eq!(a.stream(&input[..20]).unwrap(), reference[..20]);
+            // expired stream: typed refusal, nothing applied
+            let resp = a.request(&stream_req(&input[20..], 0.0)).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code"),
+                Some(&Json::Str("deadline_exceeded".into())),
+                "threaded={threaded}: expired deadline must carry its code"
+            );
+            // expired predict: same typed refusal on the dealt path
+            let resp = a
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("predict".into())),
+                    (
+                        "input",
+                        Json::Arr(
+                            input.iter().map(|x| Json::Num(*x)).collect(),
+                        ),
+                    ),
+                    ("deadline_ms", Json::Num(0.0)),
+                ]))
+                .unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code"),
+                Some(&Json::Str("deadline_exceeded".into()))
+            );
+            // a generous deadline succeeds, and the refused stream above
+            // must NOT have advanced the lane
+            let resp = a.request(&stream_req(&input[20..], 30_000.0)).unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            let rest: Vec<f64> = resp
+                .get("output")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|j| j.as_f64().unwrap())
+                .collect();
+            assert_eq!(
+                rest,
+                reference[20..],
+                "threaded={threaded}: a refused request advanced lane state"
+            );
+            let info = a
+                .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+                .unwrap();
+            assert!(
+                info.get("deadline_misses").and_then(Json::as_f64).unwrap()
+                    >= 2.0,
+                "both refusals must count as deadline misses"
+            );
+            assert!(info.get("jobs_shed").and_then(Json::as_f64).is_some());
+            drop(a);
+            drop(r);
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn with_retry_backs_off_on_transient_codes_only() {
+        // a scripted fake server: two `overloaded` sheds, then success,
+        // then a deterministic `restore_mismatch`. with_retry must eat
+        // the sheds (with backoff sleeps) and return the success, then
+        // surface the deterministic refusal WITHOUT consuming a retry —
+        // a retry would block on the exhausted script and hang the test
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let script = [
+            r#"{"ok":false,"code":"overloaded","error":"shed"}"#,
+            r#"{"ok":false,"code":"overloaded","error":"shed"}"#,
+            r#"{"ok":true,"version":7}"#,
+            r#"{"ok":false,"code":"restore_mismatch","error":"nope"}"#,
+        ];
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            for resp in script {
+                let mut line = String::new();
+                if reader.read_line(&mut line).unwrap() == 0 {
+                    break;
+                }
+                writeln!(writer, "{resp}").unwrap();
+                writer.flush().unwrap();
+            }
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let req = Json::obj(vec![
+            ("op", Json::Str("commit".into())),
+            ("alpha", Json::Num(1e-8)),
+        ]);
+        let t0 = Instant::now();
+        let resp = c.with_retry(&req, 5).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("version").and_then(Json::as_f64), Some(7.0));
+        assert!(
+            t0.elapsed() >= Duration::from_millis(10),
+            "two retries must each back off at least the base delay"
+        );
+        let resp = c.with_retry(&req, 5).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            resp.get("code"),
+            Some(&Json::Str("restore_mismatch".into())),
+            "deterministic refusals must surface immediately, unretried"
+        );
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn retryable_codes_are_pinned_to_the_error_table() {
+        // the retryable subset is a subset of the one-table contract …
+        for code in RETRYABLE_CODES {
+            assert!(
+                ERROR_CODES.contains(code),
+                "retryable code {code:?} is not in the coded_error table"
+            );
+        }
+        // … and is EXACTLY the transient pair: everything else in the
+        // table is deterministic and must never be retried
+        for code in ERROR_CODES {
+            let transient = matches!(*code, "unavailable" | "overloaded");
+            assert_eq!(
+                is_retryable_code(code),
+                transient,
+                "retryability of {code:?} drifted from the contract"
+            );
+            // every table entry resolves to a mapped (code, message)
+            // pair — the debug_assert fallback means a table/constructor
+            // mismatch
+            let e = coded_error(code);
+            let we = e.downcast_ref::<WireError>().unwrap();
+            assert_eq!(we.code, *code);
+            assert_ne!(
+                we.message(),
+                "internal serving error",
+                "{code:?} is in ERROR_CODES but unmapped in coded_error"
+            );
+        }
+        for code in ["restore_mismatch", "commit_singular", "rollback_unknown_version"]
+        {
+            assert!(!is_retryable_code(code));
+        }
+    }
+
+    #[test]
+    fn shutdown_drain_op_stops_the_server_cleanly_on_both_transports() {
+        // a drain request stops the accept loop and exits the server
+        // even with the connection budget unspent — the reply flushes
+        // first (shutdown_drain returns Ok), and join does not hang
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 64, Some(1), threaded);
+            let mut a = Client::connect(&addr).unwrap();
+            let out = a.stream(&task.input[..10]).unwrap();
+            assert_eq!(out.len(), 10);
+            a.shutdown_drain().unwrap();
+            drop(a);
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn drain_checkpoint_spills_live_lanes_for_a_successor_server() {
+        // --drain-checkpoint: a drained server spills every live lane to
+        // dir/lane-<id>.json, and the spilled snapshot migrates into a
+        // successor server bit-identically
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let input = &task.input[..60];
+        for threaded in [false, true] {
+            let dir = std::env::temp_dir().join(format!(
+                "lr-pr7-spill-{}-{threaded}",
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap().to_string();
+            let server_model = Arc::clone(&model);
+            let spill = dir.clone();
+            let handle = std::thread::spawn(move || {
+                serve_on_opts(
+                    listener,
+                    server_model,
+                    Some(64),
+                    ServeOpts {
+                        shards: Some(1),
+                        threaded,
+                        drain_checkpoint: Some(spill),
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            });
+            let mut r = Client::connect(&addr).unwrap();
+            let reference = r.stream(input).unwrap();
+            drop(r); // released before the drain: must NOT be spilled
+            let mut a = Client::connect(&addr).unwrap();
+            assert_eq!(a.stream(&input[..20]).unwrap(), reference[..20]);
+            let info = a
+                .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+                .unwrap();
+            let lane_id =
+                info.get("lane_id").and_then(Json::as_f64).unwrap() as u64;
+            a.shutdown_drain().unwrap();
+            drop(a);
+            handle.join().unwrap();
+            let spilled = std::fs::read_dir(&dir)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().into_string().unwrap())
+                .collect::<Vec<_>>();
+            assert_eq!(
+                spilled,
+                vec![format!("lane-{lane_id}.json")],
+                "threaded={threaded}: exactly the live lane spills"
+            );
+            let text =
+                std::fs::read_to_string(dir.join(format!("lane-{lane_id}.json")))
+                    .unwrap();
+            let cp = parse(&text).unwrap();
+            // successor: the spilled lane migrates in and continues
+            let (addr2, handle2) =
+                spawn_server(Arc::clone(&model), 1, Some(1), threaded);
+            let mut b = Client::connect(&addr2).unwrap();
+            b.migrate_in(&cp).unwrap();
+            assert_eq!(
+                b.stream(&input[20..]).unwrap(),
+                reference[20..],
+                "threaded={threaded}: spilled lane diverged in the successor"
+            );
+            drop(b);
+            handle2.join().unwrap();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn standby_pusher_replicates_lanes_for_bitwise_promotion() {
+        // --standby: the primary pushes dirty-lane checkpoint deltas to
+        // the replica; once `standby_lag_lanes` drains to 0, adopting
+        // the lane on the standby continues the stream bit-identically
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let input = &task.input[..60];
+        let (standby_addr, standby_handle) =
+            spawn_server(Arc::clone(&model), 64, Some(1), true);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let primary_addr = listener.local_addr().unwrap().to_string();
+        let server_model = Arc::clone(&model);
+        let standby_for_primary = standby_addr.clone();
+        let primary_handle = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                server_model,
+                Some(64),
+                ServeOpts {
+                    shards: Some(1),
+                    threaded: true,
+                    standby: Some(standby_for_primary),
+                    standby_interval_ms: 20,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        });
+        let mut r = Client::connect(&primary_addr).unwrap();
+        let reference = r.stream(input).unwrap();
+        let mut a = Client::connect(&primary_addr).unwrap();
+        assert_eq!(a.stream(&input[..30]).unwrap(), reference[..30]);
+        let info_req = Json::obj(vec![("op", Json::Str("info".into()))]);
+        let lane_id = a
+            .request(&info_req)
+            .unwrap()
+            .get("lane_id")
+            .and_then(Json::as_f64)
+            .unwrap() as u64;
+        // wait (bounded) for the pusher to drain every dirty lane
+        let t0 = Instant::now();
+        loop {
+            let lag = a
+                .request(&info_req)
+                .unwrap()
+                .get("standby_lag_lanes")
+                .and_then(Json::as_f64)
+                .unwrap();
+            if lag == 0.0 {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "standby lag never drained (still {lag} lanes behind)"
+            );
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        // "promotion": a fresh client adopts the replicated lane on the
+        // standby and continues as if the primary never existed
+        let mut s = Client::connect(&standby_addr).unwrap();
+        s.adopt(lane_id).unwrap();
+        assert_eq!(
+            s.stream(&input[30..]).unwrap(),
+            reference[30..],
+            "promoted standby lane diverged from the primary's twin"
+        );
+        // orderly teardown: drain the primary first (stops the pusher),
+        // then the standby
+        a.shutdown_drain().unwrap();
+        drop(a);
+        drop(r);
+        primary_handle.join().unwrap();
+        s.shutdown_drain().unwrap();
+        drop(s);
+        standby_handle.join().unwrap();
     }
 }

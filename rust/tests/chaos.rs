@@ -194,6 +194,28 @@ impl CClient {
         );
         resp.get("checkpoint").cloned().expect("checkpoint object")
     }
+
+    fn info(&mut self) -> Json {
+        let resp = self.request(&op("info"));
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(true)),
+            "info failed: {resp:?}"
+        );
+        resp
+    }
+
+    /// `shutdown_drain` and assert the ok — every PR 7 test exits its
+    /// server this way so a variable connection count never wedges the
+    /// accept loop's join.
+    fn drain(&mut self) {
+        let resp = self.request(&op("shutdown_drain"));
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(true)),
+            "shutdown_drain failed: {resp:?}"
+        );
+    }
 }
 
 fn jnums(v: &[f64]) -> Json {
@@ -245,6 +267,51 @@ fn restore_req(checkpoint: &Json) -> Json {
         ("op", Json::Str("restore".into())),
         ("checkpoint", checkpoint.clone()),
     ])
+}
+
+fn migrate_req(shard: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("migrate".into())),
+        ("shard", Json::Num(shard as f64)),
+    ])
+}
+
+/// Promotion adopt: bind a lane the standby parked from pushed deltas.
+fn adopt_req(lane_id: u64) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("migrate_in".into())),
+        ("lane_id", Json::Num(lane_id as f64)),
+    ])
+}
+
+/// Stamp a per-request deadline onto any wire request.
+fn with_deadline(req: Json, ms: u64) -> Json {
+    match req {
+        Json::Obj(mut m) => {
+            m.insert("deadline_ms".into(), Json::Num(ms as f64));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// The exact model `repro serve --k K --n N` constructs (golden
+/// spectrum, seed 0, stream 70). The standby-promotion test pairs an
+/// in-test replica with a real subprocess primary, and promotion is
+/// only bit-identical if the weights on both sides are.
+fn make_cli_model(k: usize, n: usize) -> Arc<Model> {
+    use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
+    let config = EsnConfig::default().with_n(n).with_sr(0.9).with_seed(0);
+    let mut rng = Pcg64::new(0, 70);
+    let spec = golden_spectrum(n, GoldenParams { sr: 0.9, sigma: 0.2 }, &mut rng);
+    let esn = DiagonalEsn::from_dpg(spec, &config, &mut rng);
+    let task = MsoTask::new(k);
+    let splits = MsoTask::splits();
+    let feats = esn.run(&task.input_mat());
+    let x = slice_rows(&feats, splits.train.clone());
+    let y = task.target_mat(splits.train.clone());
+    let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity).unwrap();
+    Arc::new(Model::with_precision(esn, readout, Precision::F64))
 }
 
 // ---------------------------------------------------------------------------
@@ -669,4 +736,361 @@ fn emfile_accept_storm_in_a_tiny_fd_table_does_not_kill_the_listener() {
         served,
         "listener never recovered from the EMFILE storm within the retry budget"
     );
+}
+
+// ---------------------------------------------------------------------------
+// PR 7: live migration, standby promotion, deadline-bounded overload
+// ---------------------------------------------------------------------------
+
+/// Migration moves a lane OUT of a failure domain, mid-stream. The mover
+/// streams half its run, migrates off its home shard, and then the OLD
+/// home's sweeper is panicked. The migrated lane continues bit-identical
+/// on the target shard (beyond the blast radius of its former home), a
+/// bystander still homed on the panicked shard survives the contained
+/// restart bit-identically, and only the sacrificial lane that absorbed
+/// the panic is quarantined — with a typed code, never a hang.
+#[test]
+fn migrated_lane_survives_a_source_shard_sweeper_panic() {
+    let (_lock, _disarm) = fault_guard();
+    let task = MsoTask::new(1);
+    let input = &task.input[..60];
+    for threaded in [false, true] {
+        let model = make_model(Precision::F64);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                model,
+                Some(16),
+                ServeOpts {
+                    shards: Some(2),
+                    threaded,
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+            .unwrap();
+        });
+
+        // the uninterrupted reference run
+        let mut reference = CClient::connect(&addr);
+        let want = reference.output_of(&stream_req(input));
+
+        // mover: half the run on its home shard, then migrate away
+        let mut mover = CClient::connect(&addr);
+        assert_eq!(mover.output_of(&stream_req(&input[..30])), want[..30]);
+        let src = mover
+            .info()
+            .get("lane_shard")
+            .and_then(Json::as_f64)
+            .expect("lane_shard") as usize;
+        let dst = 1 - src;
+        let resp = mover.request(&migrate_req(dst));
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(true)),
+            "migrate failed: {resp:?}"
+        );
+        assert_eq!(resp.get("shard").and_then(Json::as_f64), Some(dst as f64));
+
+        // find a bystander and a sacrifice still homed on the SOURCE
+        // shard (connections round-robin across the two shards, so a
+        // handful of probes is guaranteed to land two there)
+        let mut on_src = Vec::new();
+        let mut others = Vec::new();
+        while on_src.len() < 2 {
+            assert!(
+                on_src.len() + others.len() < 6,
+                "round-robin never landed two lanes on shard {src}"
+            );
+            let mut c = CClient::connect(&addr);
+            assert_eq!(c.output_of(&stream_req(&input[..30])), want[..30]);
+            let home = c
+                .info()
+                .get("lane_shard")
+                .and_then(Json::as_f64)
+                .expect("lane_shard") as usize;
+            if home == src {
+                on_src.push(c);
+            } else {
+                others.push(c);
+            }
+        }
+        let mut sacrifice = on_src.pop().unwrap();
+        let mut bystander = on_src.pop().unwrap();
+
+        // panic the source shard's sweeper: the sacrifice absorbs it and
+        // is quarantined with typed refusals
+        fault::target_sweeper_thread(&format!("lr-shard-{src}-sweeper"));
+        fault::arm_sweeper_panic(1);
+        sacrifice.expect_code(&stream_req(&input[30..45]), "unavailable");
+        sacrifice.expect_code(&stream_req(&input[30..45]), "lane_poisoned");
+        fault::disarm();
+
+        // the bystander (still on src) survives the contained restart …
+        assert_eq!(
+            bystander.output_of(&stream_req(&input[30..])),
+            want[30..],
+            "bystander on the panicked shard diverged (threaded={threaded})"
+        );
+        // … and the migrated mover never felt the panic at all
+        assert_eq!(
+            mover.output_of(&stream_req(&input[30..])),
+            want[30..],
+            "migrated lane diverged after its old home panicked \
+             (threaded={threaded})"
+        );
+        let info = mover.info();
+        assert_eq!(
+            info.get("lane_shard").and_then(Json::as_f64),
+            Some(dst as f64),
+            "migrated lane is not homed on the target shard"
+        );
+        assert!(
+            info.get("lanes_migrated").and_then(Json::as_f64).unwrap() >= 1.0
+        );
+
+        mover.drain();
+        drop(reference);
+        drop(mover);
+        drop(bystander);
+        drop(sacrifice);
+        drop(others);
+        handle.join().unwrap();
+    }
+}
+
+/// The acceptance-criteria failover proof: a real subprocess primary
+/// streams per-lane checkpoint deltas to a warm in-test standby; the
+/// primary is hard-killed (SIGKILL — no drain, no goodbye); adopting the
+/// victim lane on the standby continues bit-identically to the
+/// uninterrupted primary run.
+#[test]
+fn standby_promotion_after_primary_sigkill_is_bit_identical() {
+    use std::process::Stdio;
+
+    struct ChildGuard(std::process::Child);
+    impl Drop for ChildGuard {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    let (_lock, _disarm) = fault_guard();
+
+    // warm standby: an in-test replica serving the SAME model the CLI
+    // builds (promotion is only bit-identical if the weights are)
+    let standby_model = make_cli_model(1, 30);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let standby_addr = listener.local_addr().unwrap().to_string();
+    let standby = std::thread::spawn(move || {
+        serve_on_opts(
+            listener,
+            standby_model,
+            Some(64),
+            ServeOpts {
+                shards: Some(1),
+                threaded: true,
+                ..Default::default()
+            },
+        )
+        .map(|_| ())
+        .unwrap();
+    });
+
+    // primary: a real subprocess pushing 20 ms delta rounds at the replica
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_repro"));
+    cmd.args([
+        "serve",
+        "--addr",
+        "127.0.0.1:0",
+        "--k",
+        "1",
+        "--n",
+        "30",
+        "--shards",
+        "1",
+        "--standby",
+        &standby_addr,
+        "--standby-interval-ms",
+        "20",
+    ])
+    .stdin(Stdio::null())
+    .stdout(Stdio::piped())
+    .stderr(Stdio::null());
+    let mut child = ChildGuard(cmd.spawn().expect("spawn repro serve"));
+    let stdout = child.0.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        assert!(
+            lines.read_line(&mut line).unwrap() > 0,
+            "primary exited before announcing its address"
+        );
+        if line.contains(" on ") {
+            break line
+                .rsplit(" on ")
+                .next()
+                .unwrap()
+                .split_whitespace()
+                .next()
+                .unwrap()
+                .to_string();
+        }
+    };
+
+    let task = MsoTask::new(1);
+    let input = &task.input[..60];
+
+    // the uninterrupted reference run, on the primary
+    let mut reference = CClient::connect(&addr);
+    let want = reference.output_of(&stream_req(input));
+
+    // victim: half the run, then wait for the pusher to drain its delta
+    let mut victim = CClient::connect(&addr);
+    assert_eq!(victim.output_of(&stream_req(&input[..30])), want[..30]);
+    let lane_id = victim
+        .info()
+        .get("lane_id")
+        .and_then(Json::as_f64)
+        .expect("lane_id") as u64;
+    let patience = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        let lag = victim
+            .info()
+            .get("standby_lag_lanes")
+            .and_then(Json::as_f64)
+            .expect("standby_lag_lanes");
+        if lag == 0.0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < patience,
+            "standby pusher never drained ({lag} lane(s) still lagging)"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // hard kill — SIGKILL, so nothing on the primary gets to flush
+    child.0.kill().expect("SIGKILL the primary");
+    let _ = child.0.wait();
+
+    // promote: adopt the victim's lane on the replica and continue
+    let mut promoted = CClient::connect(&standby_addr);
+    let resp = promoted.request(&adopt_req(lane_id));
+    assert_eq!(
+        resp.get("ok"),
+        Some(&Json::Bool(true)),
+        "promotion adopt failed: {resp:?}"
+    );
+    assert_eq!(
+        promoted.output_of(&stream_req(&input[30..])),
+        want[30..],
+        "promoted standby diverged from the uninterrupted primary run"
+    );
+
+    promoted.drain();
+    drop(promoted);
+    drop(reference);
+    drop(victim);
+    standby.join().unwrap();
+}
+
+/// Overload protection under degraded I/O, on the epoll transport: with
+/// socket writes shaped slow and the sweeper coalescing jobs for 80 ms,
+/// a 5 ms deadline is deterministically dead by sweep time and answers
+/// the typed `deadline_exceeded`; a forced zero admission depth answers
+/// the typed `overloaded`; and neither refusal advances lane state — the
+/// continuation stream is bit-identical to the uninterrupted reference.
+/// Every read is bounded by the client timeout, so a hang FAILS.
+#[cfg(target_os = "linux")]
+#[test]
+fn deadline_and_admission_refusals_are_typed_under_slow_writes() {
+    let (_lock, _disarm) = fault_guard();
+    let task = MsoTask::new(1);
+    let input = &task.input[..60];
+    let big: Vec<f64> = (0..3000).map(|t| (0.13 * t as f64).sin()).collect();
+
+    let model = make_model(Precision::F64);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        serve_on_opts(
+            listener,
+            model,
+            Some(8),
+            ServeOpts {
+                // coalescing window: every job waits ~80 ms before its
+                // sweep, so a 5 ms deadline expires before execution —
+                // no timing race
+                holdoff_us: 80_000,
+                shards: Some(1),
+                ..Default::default()
+            },
+        )
+        .map(|_| ())
+        .unwrap();
+    });
+
+    // unshaped reference outputs first
+    let mut reference = CClient::connect(&addr);
+    let want = reference.output_of(&stream_req(input));
+    let want_big = reference.output_of(&stream_req(&big));
+
+    let mut c = CClient::connect(&addr);
+    assert_eq!(
+        c.output_of(&with_deadline(stream_req(&input[..20]), 30_000)),
+        want[..20]
+    );
+
+    // shape every poll-loop write from here on — 1 KiB per write(2) with
+    // a 5 ms pre-write sleep; even the typed refusals below must flush
+    // through this without tripping the client's hang bound
+    fault::set_short_writes(1024, Duration::from_millis(5));
+
+    // 5 ms << the 80 ms holdoff: expired by sweep time, typed refusal
+    c.expect_code(
+        &with_deadline(stream_req(&input[20..40]), 5),
+        "deadline_exceeded",
+    );
+    c.expect_code(&with_deadline(predict_req(&input[..10]), 5), "deadline_exceeded");
+
+    // forced zero-depth admission: shed with a type, immediately
+    fault::force_admit_depth(0);
+    c.expect_code(&stream_req(&input[20..40]), "overloaded");
+    c.expect_code(&predict_req(&input[..10]), "overloaded");
+    // clear the admission override but keep the write shaping armed
+    fault::disarm();
+    fault::set_short_writes(1024, Duration::from_millis(5));
+
+    // none of the refusals advanced the lane: bit-identical continuation
+    assert_eq!(
+        c.output_of(&with_deadline(stream_req(&input[20..]), 30_000)),
+        want[20..],
+        "a typed refusal advanced lane state"
+    );
+
+    // a ~60 KiB reply through 1 KiB shaped writes: slow, bounded, correct
+    let mut b = CClient::connect(&addr);
+    assert_eq!(b.output_of(&stream_req(&big)), want_big);
+    fault::disarm();
+
+    // the typed-refusal accounting reached the info counters
+    let info = c.info();
+    assert!(
+        info.get("deadline_misses").and_then(Json::as_f64).unwrap() >= 2.0,
+        "deadline_misses not counted: {info:?}"
+    );
+    assert!(
+        info.get("jobs_shed").and_then(Json::as_f64).unwrap() >= 2.0,
+        "jobs_shed not counted: {info:?}"
+    );
+
+    c.drain();
+    drop(reference);
+    drop(c);
+    drop(b);
+    handle.join().unwrap();
 }
