@@ -815,6 +815,200 @@ fn main() {
         ]));
     }
 
+    // --- PR8: cluster failover — kill, detect, promote, redirect --------
+    // `failover_cluster_N1000` drives the whole resilience pipeline as
+    // one storm: movers stream warm N=1000 lanes on an unclustered
+    // primary whose standby fan-out parks deltas on two peered
+    // survivors; the primary then vanishes; the survivors' failure
+    // detectors reassign the hash ring; every mover reconnects to the
+    // WRONG survivor, follows the `moved` redirect, adopts its lane on
+    // the promoted owner, and finishes its rounds there. The row
+    // reports sustained steps/sec across the storm (detection gap
+    // included) plus the measured outage window. Runs in quick mode —
+    // it is the acceptance artifact for the cluster-failover work.
+    {
+        let n = 1000;
+        println!("cluster failover, N = {n}, T = {t_len}");
+        let config = EsnConfig::default().with_n(n).with_seed(3);
+        let mut gen_rng = Pcg64::new(23, 142);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let model = Arc::new(Model::new(diag, readout));
+        let input: Vec<f64> = Mat::randn(t_len, 1, &mut rng).data().to_vec();
+
+        let movers = 4usize;
+        let chunk_len = 250usize;
+        let rounds = if quick { 4usize } else { 8 };
+        let pre_rounds = rounds / 2;
+
+        let l1 = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let l2 = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let s1_addr = l1.local_addr().unwrap().to_string();
+        let s2_addr = l2.local_addr().unwrap().to_string();
+        let p_listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let p_addr = p_listener.local_addr().unwrap().to_string();
+        let mut survivors = Vec::new();
+        for (listener, advertise, peers) in [
+            (l1, s1_addr.clone(), format!("{p_addr},{s2_addr}")),
+            (l2, s2_addr.clone(), format!("{p_addr},{s1_addr}")),
+        ] {
+            let m = Arc::clone(&model);
+            survivors.push(std::thread::spawn(move || {
+                serve_on_opts(
+                    listener,
+                    m,
+                    Some(movers + 16),
+                    ServeOpts {
+                        shards: Some(1),
+                        peers: Some(peers),
+                        advertise: Some(advertise),
+                        ping_interval_ms: 25,
+                        ..Default::default()
+                    },
+                )
+                .map(|_| ())
+                .unwrap();
+            }));
+        }
+        let p_model = Arc::clone(&model);
+        let standby = format!("{s1_addr},{s2_addr}");
+        let primary = std::thread::spawn(move || {
+            // budget: the movers plus the two survivors' gossip probes
+            serve_on_opts(
+                p_listener,
+                p_model,
+                Some(movers + 8),
+                ServeOpts {
+                    shards: Some(1),
+                    standby: Some(standby),
+                    standby_interval_ms: 20,
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+            .unwrap();
+        });
+
+        let stream_round = |clients: &mut [Client], round: usize| {
+            let off = (round * chunk_len) % (t_len - chunk_len);
+            let req = Json::obj(vec![
+                ("op", Json::Str("stream".into())),
+                (
+                    "input",
+                    Json::Arr(
+                        input[off..off + chunk_len]
+                            .iter()
+                            .map(|&x| Json::Num(x))
+                            .collect(),
+                    ),
+                ),
+            ]);
+            for c in clients.iter_mut() {
+                c.send(&req).unwrap();
+            }
+            for c in clients.iter_mut() {
+                std::hint::black_box(c.recv().unwrap());
+            }
+        };
+        let info_req = Json::obj(vec![("op", Json::Str("info".into()))]);
+
+        let storm_t0 = std::time::Instant::now();
+        let mut streamed = 0usize;
+        // phase 1: warm lanes on the primary, fan-out replicating
+        let mut clients: Vec<Client> = (0..movers)
+            .map(|_| Client::connect(&p_addr).unwrap())
+            .collect();
+        for round in 0..pre_rounds {
+            stream_round(&mut clients, round);
+            streamed += movers * chunk_len;
+        }
+        let lane_ids: Vec<u64> = clients
+            .iter_mut()
+            .map(|c| {
+                c.request(&info_req)
+                    .expect("info")
+                    .get("lane_id")
+                    .and_then(Json::as_f64)
+                    .expect("lane_id") as u64
+            })
+            .collect();
+        loop {
+            let lag = clients[0]
+                .request(&info_req)
+                .expect("info")
+                .get("standby_lag_lanes")
+                .and_then(Json::as_f64)
+                .expect("standby_lag_lanes");
+            if lag == 0.0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        // phase 2: the primary vanishes; survivors must detect and
+        // reassign
+        let outage_t0 = std::time::Instant::now();
+        clients[0].shutdown_drain().expect("stop the primary");
+        drop(clients);
+        primary.join().unwrap();
+        let mut probe = Client::connect(&s1_addr).unwrap();
+        let owner = loop {
+            let info = probe.request(&info_req).expect("info");
+            if info.get("cluster_live").and_then(Json::as_f64) == Some(2.0) {
+                break info
+                    .get("cluster_owner")
+                    .and_then(Json::as_str)
+                    .expect("cluster_owner")
+                    .to_string();
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        };
+        drop(probe);
+        let loser = if owner == s1_addr { &s2_addr } else { &s1_addr };
+        // phase 3: every mover reconnects to the WRONG survivor and is
+        // redirected to the promoted owner, adopts, and resumes
+        let mut clients: Vec<Client> = lane_ids
+            .iter()
+            .map(|&lane| {
+                let mut c = Client::connect(loser).unwrap();
+                c.adopt(lane).expect("promotion adopt via redirect");
+                c
+            })
+            .collect();
+        let outage_ms = outage_t0.elapsed().as_secs_f64() * 1e3;
+        for round in pre_rounds..rounds {
+            stream_round(&mut clients, round);
+            streamed += movers * chunk_len;
+        }
+        let storm_secs = storm_t0.elapsed().as_secs_f64();
+        let storm_sps = streamed as f64 / storm_secs;
+        drop(clients);
+        for addr in [&s1_addr, &s2_addr] {
+            let mut d = Client::connect(addr).unwrap();
+            d.shutdown_drain().expect("drain survivor");
+        }
+        for h in survivors {
+            h.join().unwrap();
+        }
+        println!(
+            "  failover storm: {streamed} steps, {movers} lane(s) promoted, \
+             outage {outage_ms:.1}ms → {storm_sps:.3e} steps/s\n"
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("failover_cluster_N{n}"))),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("movers", Json::Num(movers as f64)),
+            ("rounds", Json::Num(rounds as f64)),
+            ("chunk", Json::Num(chunk_len as f64)),
+            ("lanes_promoted", Json::Num(movers as f64)),
+            ("outage_ms", Json::Num(outage_ms)),
+            ("storm_steps_per_sec", Json::Num(storm_sps)),
+        ]));
+    }
+
     if let Some(path) = json_path {
         let doc = Json::obj(vec![
             ("bench", Json::Str("reservoir_run".into())),

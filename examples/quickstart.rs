@@ -180,5 +180,39 @@ fn main() -> anyhow::Result<()> {
     //     drains gracefully — in-flight replies flush, and
     //     `--drain-checkpoint DIR` spills live lanes as `lane-<id>.json`
     //     for a successor to adopt. DESIGN.md §11 has the protocol.
+
+    // 13. CLUSTER: three-node kill-one-node demo. Every node gets the
+    //     full peer list (`--peers`) and its own address as the others
+    //     spell it (`--advertise`); connection keys are consistent-
+    //     hashed across the live members, each node answers `moved
+    //     {addr}` for keys it does not own, and a gossiped ping
+    //     detector (5 missed probes) reassigns a dead node's ring range
+    //     automatically. `--standby` fans deltas out to BOTH peers so
+    //     either survivor can promote:
+    //
+    //       A$ repro serve --addr 127.0.0.1:7878 --advertise 127.0.0.1:7878 \
+    //            --peers 127.0.0.1:7879,127.0.0.1:7880 \
+    //            --standby 127.0.0.1:7879,127.0.0.1:7880
+    //       B$ repro serve --addr 127.0.0.1:7879 --advertise 127.0.0.1:7879 \
+    //            --peers 127.0.0.1:7878,127.0.0.1:7880 \
+    //            --standby 127.0.0.1:7878,127.0.0.1:7880
+    //       C$ repro serve --addr 127.0.0.1:7880 --advertise 127.0.0.1:7880 \
+    //            --peers 127.0.0.1:7878,127.0.0.1:7879 \
+    //            --standby 127.0.0.1:7878,127.0.0.1:7879
+    //
+    //     Stream against your key's owner (any node's `{"op":"info"}`
+    //     names it in `cluster_owner`), then `kill -9` that node. Within
+    //     ~250 ms the survivors' `info` shows `cluster_live` drop and a
+    //     new `cluster_owner`; reconnect to ANY survivor and adopt:
+    //
+    //       {"op":"migrate_in","lane_id":7}
+    //         ← {"ok":false,"code":"moved","addr":"127.0.0.1:7880"}
+    //       (reconnect there — `Client::request` follows automatically,
+    //        bounded at 4 hops, then types out as `redirect_loop`)
+    //         ← {"ok":true,"version":v}
+    //       {"op":"stream","input":[u…]}  ← bit-identical continuation
+    //
+    //     DESIGN.md §12 has the ring, the detector thresholds, and the
+    //     failover sequence.
     Ok(())
 }

@@ -21,10 +21,16 @@
 //!                                       # memory (absent = unlimited)
 //!              [--rebalance]  # migrate hot lanes between shards when
 //!                             # sweep-occupancy skew crosses threshold
-//!              [--standby host:port]        # stream per-lane checkpoint
-//!              [--standby-interval-ms 200]  # deltas to a warm replica
+//!              [--standby a:p,b:p,…]        # stream per-lane checkpoint
+//!              [--standby-interval-ms 200]  # deltas to warm replicas
 //!              [--drain-checkpoint DIR] # on SIGTERM/shutdown_drain,
 //!                                       # spill live lanes to DIR
+//!              [--peers a:p,b:p,…]   # cluster mode: consistent-hash
+//!                                    # the key space across the group
+//!              [--advertise host:port]  # own address as peers spell it
+//!              [--ping-interval-ms 50]  # gossip liveness cadence
+//!              [--holdoff-auto]  # derive the coalescing window from
+//!                                # arrival EWMA (cap = --holdoff-us)
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -289,6 +295,15 @@ fn dispatch(args: &Args) -> Result<()> {
             // --drain-checkpoint: where graceful drain spills live lanes
             // so a successor process can adopt them
             let drain_checkpoint = args.get_path("drain-checkpoint");
+            // --peers: static membership list; enables the gossip
+            // failure detector, the consistent-hash ownership guard
+            // (`moved` redirects), and automatic failover
+            let peers = args.get("peers").map(String::from);
+            let advertise = args.get("advertise").map(String::from);
+            let ping_interval_ms = args.get_u64("ping-interval-ms", 0)?;
+            // --holdoff-auto: autotune each shard's coalescing window
+            // from its inter-arrival EWMA (idle shards pay zero)
+            let holdoff_auto = args.flag("holdoff-auto");
             let listener = std::net::TcpListener::bind(addr)?;
             let bound = listener.local_addr()?;
             // the timer wheel lives in the event loop; on the threaded
@@ -296,8 +311,9 @@ fn dispatch(args: &Args) -> Result<()> {
             // say so instead of printing it as active
             let event_loop = !threaded && cfg!(target_os = "linux");
             println!(
-                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs, shards {}, idle-timeout {}, trainer-budget {}, rebalance {}, standby {}, drain-checkpoint {}, {}) on {bound} …",
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs{}, shards {}, idle-timeout {}, trainer-budget {}, rebalance {}, standby {}, drain-checkpoint {}, peers {}, {}) on {bound} …",
                 precision.name(),
+                if holdoff_auto { " (auto)" } else { "" },
                 match shards {
                     Some(s) => s.to_string(),
                     None => "auto".into(),
@@ -321,6 +337,10 @@ fn dispatch(args: &Args) -> Result<()> {
                     Some(d) => d.display().to_string(),
                     None => "off".into(),
                 },
+                match &peers {
+                    Some(p) => p.clone(),
+                    None => "none".into(),
+                },
                 if event_loop {
                     "epoll event loop"
                 } else {
@@ -341,6 +361,10 @@ fn dispatch(args: &Args) -> Result<()> {
                     standby,
                     standby_interval_ms,
                     drain_checkpoint,
+                    peers,
+                    advertise,
+                    ping_interval_ms,
+                    holdoff_auto,
                     // operator-facing binary: SIGTERM means "drain, don't
                     // drop" (library embedders opt in via ServeOpts)
                     drain_on_sigterm: true,

@@ -1,0 +1,498 @@
+//! Cluster membership: consistent hashing, liveness gossip, and the
+//! failure detector — the layer that turns N independent `repro serve`
+//! processes into one self-healing group (DESIGN.md §12).
+//!
+//! The design is deliberately minimal and crate-free:
+//!
+//! * **Static membership** — the full node set is the `--peers` list
+//!   plus this node's own `--advertise` address. Nodes never join or
+//!   leave the SET at runtime; they only transition between *alive* and
+//!   *dead*, which is what reassigns ring ranges. Addresses are compared
+//!   as byte strings, so every node of a group must be configured with
+//!   the IDENTICAL address spelling for each member.
+//! * **Consistent hashing** — connection keys (the wire layer's peer-IP
+//!   key) map to owning nodes through a hash ring with
+//!   [`VNODES_PER_NODE`] virtual nodes per member, hashed with the same
+//!   SplitMix64 finalizer as the intra-process shard map. Ownership is a
+//!   pure function of `(key, live node set)`: every live node computes
+//!   the same ring, so any node can answer `moved {addr}` for a key it
+//!   does not own and the redirect converges. When a node dies, only the
+//!   ranges it owned move (~1/n of the key space — tested below);
+//!   everyone else's clients are untouched.
+//! * **Liveness gossip** — each node pings every peer once per interval
+//!   over the ordinary wire protocol (`{"op": "ping"}` — one line, no
+//!   lane state touched) with IO-timeout-bounded reads, smoothing the
+//!   observed RTT with an EWMA and counting consecutive misses. A peer
+//!   at [`MISS_THRESHOLD`] consecutive misses is declared dead and the
+//!   ring is rebuilt without it; a later successful ping resurrects it
+//!   (and rebuilds again) — a restarted node re-enters the group with no
+//!   operator action.
+//!
+//! Failover then needs no coordinator: the primary's standby fan-out
+//! already parked its lane deltas on the surviving replicas, the
+//! detector reassigns its ring range to a survivor, every survivor's
+//! `moved` responses point clients at that new owner, and the client's
+//! `migrate_in` adopt promotes the parked lane there — chaos-proven
+//! bit-identical against a SIGKILLed real process in
+//! `rust/tests/chaos.rs`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::rng::splitmix64_mix;
+use crate::util::json::Json;
+
+/// Virtual nodes per member: enough points that each member's share of
+/// the key space concentrates near 1/n (balance bound tested below)
+/// while keeping ring rebuilds trivially cheap (n·64 hashes + a sort).
+pub(crate) const VNODES_PER_NODE: usize = 64;
+
+/// Consecutive ping misses before a peer is declared dead. With the
+/// default interval this bounds detection at ~`MISS_THRESHOLD ×
+/// interval` plus one IO timeout.
+pub(crate) const MISS_THRESHOLD: u32 = 5;
+
+/// Default gossip ping interval (ms) when `--ping-interval-ms` is 0.
+pub(crate) const DEFAULT_PING_INTERVAL_MS: u64 = 50;
+
+/// EWMA smoothing factor for the per-peer RTT signal.
+const RTT_EWMA_ALPHA: f64 = 0.2;
+
+/// FNV-1a 64-bit over raw bytes — the crate's string/content hash
+/// (node addresses here; drain-spill checksums in `shard.rs`). One copy
+/// of the magic constants.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Ring point of virtual node `replica` of member `addr`: FNV-1a folds
+/// the address bytes, SplitMix64 decorrelates the replica index, and a
+/// final mix spreads the points uniformly over the u64 circle.
+fn vnode_point(addr: &str, replica: usize) -> u64 {
+    splitmix64_mix(fnv1a(addr.as_bytes()) ^ splitmix64_mix(replica as u64 | 1 << 62))
+}
+
+/// A consistent-hash ring over the LIVE members: sorted virtual-node
+/// points, each naming its owner. Ownership of a key is the first point
+/// clockwise of the key's hash (wrapping).
+pub(crate) struct HashRing {
+    /// `(point, node index)` sorted by point.
+    points: Vec<(u64, usize)>,
+    nodes: Vec<String>,
+}
+
+impl HashRing {
+    /// Build the ring over `nodes` (order-independent: placement is a
+    /// pure function of each address string).
+    pub(crate) fn build(nodes: &[String]) -> Self {
+        let nodes: Vec<String> = nodes.to_vec();
+        let mut points = Vec::with_capacity(nodes.len() * VNODES_PER_NODE);
+        for (i, addr) in nodes.iter().enumerate() {
+            for r in 0..VNODES_PER_NODE {
+                points.push((vnode_point(addr, r), i));
+            }
+        }
+        points.sort_unstable();
+        Self { points, nodes }
+    }
+
+    /// The owning member for a connection key (`None` on an empty ring).
+    pub(crate) fn owner(&self, key: u64) -> Option<&str> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = splitmix64_mix(key);
+        let idx = match self.points.binary_search_by(|p| p.0.cmp(&h)) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        let (_, node) = self.points[idx % self.points.len()];
+        Some(&self.nodes[node])
+    }
+
+    /// Member count.
+    pub(crate) fn len(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Health record of one peer, updated only by the gossip thread (the
+/// mutex is uncontended; readers are `info` and ring rebuilds).
+struct PeerHealth {
+    rtt_ewma_us: f64,
+    misses: u32,
+    alive: bool,
+}
+
+struct PeerSlot {
+    addr: String,
+    health: Mutex<PeerHealth>,
+}
+
+/// One node's view of the group: the static member set, per-peer health,
+/// and the current ring over the live members. Shared between the gossip
+/// thread (writes) and both transports' ownership guards (reads).
+pub struct ClusterState {
+    /// This node's own address as the group knows it (`--advertise`).
+    advertise: String,
+    peers: Vec<PeerSlot>,
+    /// Ring over the LIVE members; swapped wholesale on a liveness
+    /// transition so readers always see a consistent ring.
+    ring: Mutex<Arc<HashRing>>,
+    /// Monotonic rebuild counter (starts at 1) — `ring_epoch` in `info`,
+    /// so an operator can see failovers happen.
+    epoch: AtomicU64,
+}
+
+impl ClusterState {
+    /// Build the group view: everyone starts ALIVE (optimistic boot —
+    /// a cold group must not bounce redirects off nodes that merely
+    /// haven't pinged yet; a genuinely absent peer is declared dead
+    /// within `MISS_THRESHOLD` intervals). `advertise` is removed from
+    /// `peers` if listed, so self-pings never happen.
+    pub fn new(advertise: String, peers: Vec<String>) -> Arc<Self> {
+        let peers: Vec<PeerSlot> = peers
+            .into_iter()
+            .filter(|p| !p.is_empty() && *p != advertise)
+            .map(|addr| PeerSlot {
+                addr,
+                health: Mutex::new(PeerHealth {
+                    rtt_ewma_us: 0.0,
+                    misses: 0,
+                    alive: true,
+                }),
+            })
+            .collect();
+        let state = Self {
+            advertise,
+            ring: Mutex::new(Arc::new(HashRing::build(&[]))),
+            peers,
+            epoch: AtomicU64::new(0),
+        };
+        state.rebuild_ring();
+        Arc::new(state)
+    }
+
+    /// This node's advertised address.
+    pub fn advertise(&self) -> &str {
+        &self.advertise
+    }
+
+    /// Total member count (self + peers, dead or alive).
+    pub fn members(&self) -> usize {
+        self.peers.len() + 1
+    }
+
+    /// Currently-live member count (self counts).
+    pub fn live_members(&self) -> usize {
+        1 + self
+            .peers
+            .iter()
+            .filter(|p| p.health.lock().unwrap().alive)
+            .count()
+    }
+
+    /// Ring rebuild count so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Rebuild the ring over self + the live peers (called on every
+    /// liveness transition; cheap enough that calling it spuriously is
+    /// harmless).
+    fn rebuild_ring(&self) {
+        let mut nodes = vec![self.advertise.clone()];
+        nodes.extend(
+            self.peers
+                .iter()
+                .filter(|p| p.health.lock().unwrap().alive)
+                .map(|p| p.addr.clone()),
+        );
+        *self.ring.lock().unwrap() = Arc::new(HashRing::build(&nodes));
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The live member owning `key` under the current ring.
+    pub fn owner_for_key(&self, key: u64) -> String {
+        let ring = Arc::clone(&self.ring.lock().unwrap());
+        ring.owner(key).unwrap_or(&self.advertise).to_string()
+    }
+
+    /// `Some(owner)` when `key` is owned by ANOTHER live member — the
+    /// ownership guard both transports answer `moved {addr}` from.
+    pub fn owned_elsewhere(&self, key: u64) -> Option<String> {
+        let owner = self.owner_for_key(key);
+        (owner != self.advertise).then_some(owner)
+    }
+
+    /// Number of peers (gossip targets).
+    pub(crate) fn peer_count(&self) -> usize {
+        self.peers.len()
+    }
+
+    /// Peer `idx`'s address.
+    pub(crate) fn peer_addr(&self, idx: usize) -> &str {
+        &self.peers[idx].addr
+    }
+
+    /// Record a successful ping of peer `idx`: reset the miss counter,
+    /// fold the RTT into the EWMA, and resurrect (ring rebuild) if the
+    /// peer was dead.
+    pub(crate) fn record_pong(&self, idx: usize, rtt: Duration) {
+        let resurrected = {
+            let mut h = self.peers[idx].health.lock().unwrap();
+            h.misses = 0;
+            let rtt_us = rtt.as_micros() as f64;
+            h.rtt_ewma_us = if h.rtt_ewma_us == 0.0 {
+                rtt_us
+            } else {
+                RTT_EWMA_ALPHA * rtt_us + (1.0 - RTT_EWMA_ALPHA) * h.rtt_ewma_us
+            };
+            !std::mem::replace(&mut h.alive, true)
+        };
+        if resurrected {
+            self.rebuild_ring();
+        }
+    }
+
+    /// Record a missed ping of peer `idx`; at [`MISS_THRESHOLD`]
+    /// consecutive misses the peer is declared dead and its ring range
+    /// reassigned. Returns `true` on the alive→dead transition.
+    pub(crate) fn record_miss(&self, idx: usize) -> bool {
+        let died = {
+            let mut h = self.peers[idx].health.lock().unwrap();
+            h.misses = h.misses.saturating_add(1);
+            h.alive && h.misses >= MISS_THRESHOLD && {
+                h.alive = false;
+                true
+            }
+        };
+        if died {
+            self.rebuild_ring();
+        }
+        died
+    }
+
+    /// Per-peer `(addr, alive, rtt_ewma_us)` snapshot for `info`.
+    pub fn peer_status(&self) -> Vec<(String, bool, f64)> {
+        self.peers
+            .iter()
+            .map(|p| {
+                let h = p.health.lock().unwrap();
+                (p.addr.clone(), h.alive, h.rtt_ewma_us)
+            })
+            .collect()
+    }
+}
+
+/// The gossip sidecar (one thread per clustered node, spawned by
+/// `serve_on_opts` next to the rebalancer/pusher): every `interval`,
+/// ping each peer over a lazily-(re)connected wire client with
+/// IO-timeout-bounded reads, and feed the detector. Connection attempts
+/// are timeout-bounded too — a black-holed peer costs one bounded miss
+/// per round, never a hang.
+pub(crate) fn gossip_loop(
+    cluster: Arc<ClusterState>,
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+) {
+    let mut clients: Vec<Option<super::wire::Client>> =
+        (0..cluster.peer_count()).map(|_| None).collect();
+    let ping = Json::obj(vec![("op", Json::Str("ping".into()))]);
+    // every ping (connect, write, read) is bounded by this, so one round
+    // can't stall past peers × timeout even with every peer black-holed
+    let io_timeout = (interval * 2).max(Duration::from_millis(50));
+    'gossip: loop {
+        // sleep in short slices so serve_on_opts joins promptly
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if stop.load(Ordering::SeqCst) {
+                break 'gossip;
+            }
+            let slice = Duration::from_millis(10).min(interval - slept);
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        for idx in 0..cluster.peer_count() {
+            if stop.load(Ordering::SeqCst) {
+                break 'gossip;
+            }
+            let slot = &mut clients[idx];
+            if slot.is_none() {
+                match super::wire::Client::connect_timeout(
+                    cluster.peer_addr(idx),
+                    io_timeout,
+                ) {
+                    Ok(mut c) => {
+                        let _ = c.set_io_timeout(Some(io_timeout));
+                        *slot = Some(c);
+                    }
+                    Err(_) => {
+                        cluster.record_miss(idx);
+                        continue;
+                    }
+                }
+            }
+            let c = slot.as_mut().expect("connected above");
+            let t = Instant::now();
+            match c.request(&ping) {
+                Ok(resp)
+                    if resp.get("ok") == Some(&Json::Bool(true)) =>
+                {
+                    cluster.record_pong(idx, t.elapsed());
+                }
+                _ => {
+                    *slot = None; // reconnect next round
+                    cluster.record_miss(idx);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn nodes(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7878")).collect()
+    }
+
+    #[test]
+    fn ring_ownership_is_deterministic_and_total() {
+        let ring = HashRing::build(&nodes(5));
+        let twin = HashRing::build(&nodes(5));
+        for key in 0..512u64 {
+            let a = ring.owner(key).expect("non-empty ring owns every key");
+            // pure function of (key, node set): a rebuilt ring agrees
+            assert_eq!(Some(a), twin.owner(key));
+            assert_eq!(Some(a), ring.owner(key));
+        }
+        assert!(HashRing::build(&[]).owner(7).is_none());
+    }
+
+    #[test]
+    fn ring_virtual_nodes_balance_within_bound() {
+        // with 64 vnodes each, no member of a 4-node ring should own
+        // more than ~2× its fair share of a large key population
+        let ring = HashRing::build(&nodes(4));
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        const KEYS: u64 = 20_000;
+        for key in 0..KEYS {
+            *counts
+                .entry(ring.owner(key).unwrap().to_string())
+                .or_default() += 1;
+        }
+        assert_eq!(counts.len(), 4, "every member owns some keys");
+        let fair = KEYS as usize / 4;
+        for (addr, c) in &counts {
+            assert!(
+                *c > fair / 2 && *c < fair * 2,
+                "vnode balance bound violated: {addr} owns {c} of {KEYS} \
+                 (fair share {fair})"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_node_leave_moves_only_its_own_keys() {
+        // consistent hashing's defining property: removing one of n
+        // members re-homes ONLY the keys that member owned (~1/n); every
+        // other key keeps its owner — so a node death never reshuffles
+        // the survivors' clients
+        let full = HashRing::build(&nodes(5));
+        let mut reduced_nodes = nodes(5);
+        let dead = reduced_nodes.remove(2);
+        let reduced = HashRing::build(&reduced_nodes);
+        const KEYS: u64 = 10_000;
+        let mut moved = 0usize;
+        for key in 0..KEYS {
+            let before = full.owner(key).unwrap();
+            let after = reduced.owner(key).unwrap();
+            if before == dead {
+                assert_ne!(after, dead, "dead node's keys must re-home");
+                moved += 1;
+            } else {
+                assert_eq!(
+                    before, after,
+                    "key {key} moved although its owner survived"
+                );
+            }
+        }
+        // the departed member owned roughly 1/5 of the space
+        let fair = KEYS as usize / 5;
+        assert!(
+            moved > fair / 2 && moved < fair * 2,
+            "expected ~{fair} keys to move, got {moved}"
+        );
+        // join is the same statement in reverse: re-adding the member
+        // restores the original assignment exactly
+        let rejoined = HashRing::build(&nodes(5));
+        for key in 0..KEYS {
+            assert_eq!(rejoined.owner(key), full.owner(key));
+        }
+    }
+
+    #[test]
+    fn detector_declares_death_at_threshold_and_resurrects() {
+        let c = ClusterState::new(
+            "10.0.0.0:7878".into(),
+            vec!["10.0.0.1:7878".into(), "10.0.0.2:7878".into()],
+        );
+        assert_eq!(c.members(), 3);
+        assert_eq!(c.live_members(), 3, "optimistic boot: all alive");
+        let epoch0 = c.epoch();
+        // misses below the threshold change nothing
+        for _ in 0..MISS_THRESHOLD - 1 {
+            assert!(!c.record_miss(0));
+        }
+        assert_eq!(c.live_members(), 3);
+        assert_eq!(c.epoch(), epoch0);
+        // the threshold-th consecutive miss kills it and rebuilds
+        assert!(c.record_miss(0));
+        assert_eq!(c.live_members(), 2);
+        assert_eq!(c.epoch(), epoch0 + 1);
+        // dead peers own nothing: every key resolves to a live member
+        for key in 0..256u64 {
+            assert_ne!(c.owner_for_key(key), "10.0.0.1:7878");
+        }
+        // a successful ping resurrects it (restarted node re-enters)
+        c.record_pong(0, Duration::from_micros(250));
+        assert_eq!(c.live_members(), 3);
+        assert_eq!(c.epoch(), epoch0 + 2);
+        let status = c.peer_status();
+        assert!(status[0].1 && status[0].2 > 0.0, "RTT EWMA recorded");
+    }
+
+    #[test]
+    fn owned_elsewhere_is_none_for_own_range() {
+        let c = ClusterState::new(
+            "10.0.0.0:7878".into(),
+            vec!["10.0.0.1:7878".into()],
+        );
+        let mut own = 0usize;
+        let mut other = 0usize;
+        for key in 0..512u64 {
+            match c.owned_elsewhere(key) {
+                None => own += 1,
+                Some(addr) => {
+                    assert_eq!(addr, "10.0.0.1:7878");
+                    other += 1;
+                }
+            }
+        }
+        assert!(own > 0 && other > 0, "a 2-node ring splits the space");
+        // a single-node "cluster" owns everything
+        let solo = ClusterState::new("10.0.0.0:7878".into(), vec![]);
+        for key in 0..256u64 {
+            assert!(solo.owned_elsewhere(key).is_none());
+        }
+    }
+}

@@ -15,7 +15,7 @@
 //! bit-identical to the sequential engine, so batching is invisible to
 //! clients.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -43,6 +43,9 @@ const HOLDOFF_DRAIN_DEPTH: usize = 4;
 /// leaves queued (it drains whole batches per round), so only a stuck
 /// or saturated shard ever sheds; fault injection can force it lower.
 const ADMIT_MAX_DEPTH: usize = 4096;
+/// Smoothing factor for the job inter-arrival EWMA the hold-off
+/// autotuner reads (`--holdoff-auto`).
+const ARRIVAL_EWMA_ALPHA: f64 = 0.2;
 
 // ---------------------------------------------------------------------------
 // precision-dispatched lane engine
@@ -820,7 +823,21 @@ pub struct BatchFront {
     sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
     /// Coalescing window: with a shallow queue the sweeper waits up to
     /// this long for more jobs before draining; zero = drain immediately.
+    /// In autotuned mode this is the CAP the derived window never
+    /// exceeds.
     holdoff: Duration,
+    /// Opt-in hold-off autotuning (`--holdoff-auto`): the sweeper sizes
+    /// its coalescing window from the arrival EWMA below instead of
+    /// using `holdoff` verbatim.
+    holdoff_auto: AtomicBool,
+    /// EWMA of observed job inter-arrival gaps (µs; f64 bit pattern) —
+    /// the feed-rate signal the autotuner reads.
+    arrival_ewma_us: AtomicU64,
+    /// Instant of the most recent job arrival, as µs since `epoch`
+    /// (`u64::MAX` = no job has ever arrived).
+    last_arrival_us: AtomicU64,
+    /// Time origin for the lock-free arrival clock.
+    epoch: Instant,
     /// Total sweep rounds drained (metrics; exported via `info`).
     sweeps: AtomicU64,
     /// Distinct predict engines constructed by the sweeper's pool so far
@@ -884,6 +901,10 @@ impl BatchFront {
             free_lanes: Mutex::new((0..STREAM_LANES).rev().collect()),
             sweeper: Mutex::new(None),
             holdoff: Duration::from_micros(holdoff_us),
+            holdoff_auto: AtomicBool::new(false),
+            arrival_ewma_us: AtomicU64::new(0),
+            last_arrival_us: AtomicU64::new(u64::MAX),
+            epoch: Instant::now(),
             sweeps: AtomicU64::new(0),
             engines_built: AtomicU64::new(0),
             depth: AtomicUsize::new(0),
@@ -953,6 +974,9 @@ impl BatchFront {
         deadline: Option<Instant>,
     ) -> bool {
         let recycle = matches!(&job, FrontJob::Reset { reply: None, .. });
+        if !recycle && self.holdoff_auto.load(Ordering::Relaxed) {
+            self.record_arrival();
+        }
         {
             let mut st = self.state.lock().unwrap();
             if st.shutdown {
@@ -1054,6 +1078,71 @@ impl BatchFront {
     /// The configured hold-off window in µs (metrics; `info`).
     pub fn holdoff_us(&self) -> u64 {
         self.holdoff.as_micros() as u64
+    }
+
+    /// Switch this front between the fixed window (`false`, default)
+    /// and autotuned mode (`true`). Flipped once at server start by
+    /// `serve_on_opts`; safe to flip live (the sweeper re-reads the
+    /// mode every drain round).
+    pub fn set_holdoff_auto(&self, on: bool) {
+        self.holdoff_auto.store(on, Ordering::Relaxed);
+    }
+
+    /// Fold one job arrival into the inter-arrival EWMA (autotuned mode
+    /// only — the fixed-window hot path never takes this branch).
+    fn record_arrival(&self) {
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        let last = self.last_arrival_us.swap(now_us, Ordering::Relaxed);
+        if last == u64::MAX {
+            return; // first arrival ever: no gap to observe yet
+        }
+        let gap = now_us.saturating_sub(last) as f64;
+        let old = f64::from_bits(self.arrival_ewma_us.load(Ordering::Relaxed));
+        let new = if old == 0.0 {
+            gap
+        } else {
+            ARRIVAL_EWMA_ALPHA * gap + (1.0 - ARRIVAL_EWMA_ALPHA) * old
+        };
+        self.arrival_ewma_us.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The coalescing window the sweeper will use for its NEXT shallow-
+    /// queue wait. Fixed mode: the configured window, verbatim.
+    /// Autotuned mode sizes the window to the observed feed rate —
+    /// roughly four expected inter-arrival gaps (enough to coalesce a
+    /// small batch), never above the configured `--holdoff-us` cap, and
+    /// ZERO when the shard looks idle (no arrival yet, or the time
+    /// since the last arrival already exceeds the cap), so light
+    /// traffic converges to zero added latency.
+    fn effective_holdoff(&self) -> Duration {
+        if !self.holdoff_auto.load(Ordering::Relaxed) {
+            return self.holdoff;
+        }
+        let last = self.last_arrival_us.load(Ordering::Relaxed);
+        if last == u64::MAX {
+            return Duration::ZERO;
+        }
+        let cap_us = self.holdoff.as_micros() as u64;
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        let since = now_us.saturating_sub(last);
+        if since >= cap_us {
+            return Duration::ZERO; // gone idle: drain immediately
+        }
+        let ewma = f64::from_bits(self.arrival_ewma_us.load(Ordering::Relaxed));
+        if ewma == 0.0 {
+            // a single arrival, no gap observed: keep the full cap
+            return self.holdoff;
+        }
+        if ewma >= cap_us as f64 {
+            return Duration::ZERO; // arrivals sparser than the cap
+        }
+        Duration::from_micros(((4.0 * ewma) as u64).min(cap_us))
+    }
+
+    /// [`Self::effective_holdoff`] in µs (metrics; `info`'s
+    /// `holdoff_effective_us`). Equals `holdoff_us` in fixed mode.
+    pub fn holdoff_effective_us(&self) -> u64 {
+        self.effective_holdoff().as_micros() as u64
     }
 
     /// The model this front serves.
@@ -1564,8 +1653,11 @@ impl BatchFront {
                     if !st.jobs.is_empty() {
                         // shallow queue: hold off briefly so concurrent
                         // requests coalesce into one sweep; deep queue or
-                        // shutdown: drain now
-                        if !self.holdoff.is_zero()
+                        // shutdown: drain now (in autotuned mode the
+                        // window tracks the observed feed rate — read
+                        // once per round so one wait uses one window)
+                        let holdoff = self.effective_holdoff();
+                        if !holdoff.is_zero()
                             && st.jobs.len() < HOLDOFF_DRAIN_DEPTH
                             && !st.shutdown
                         {
@@ -1573,8 +1665,7 @@ impl BatchFront {
                             while st.jobs.len() < HOLDOFF_DRAIN_DEPTH
                                 && !st.shutdown
                             {
-                                match self.holdoff.checked_sub(start.elapsed())
-                                {
+                                match holdoff.checked_sub(start.elapsed()) {
                                     None => break,
                                     Some(left) => {
                                         let (guard, _) = self

@@ -94,6 +94,7 @@
 //! and lane recycling drop all training state. See DESIGN.md §9 and
 //! `wire.rs` for the protocol and invariants.
 
+mod cluster;
 pub mod fault;
 mod front;
 #[cfg(target_os = "linux")]
@@ -102,6 +103,7 @@ mod pool;
 mod shard;
 mod wire;
 
+pub use cluster::ClusterState;
 pub use front::{BatchFront, LaneSnapshot, Reply};
 pub use shard::{LaneBinding, ShardedFront};
 pub use wire::{

@@ -71,10 +71,10 @@ use super::wire::{
     checkpoint_response, coded_error, error_response, fallback_key,
     guard_streamable, guard_train_rows, handle_migrate, handle_migrate_in,
     hub_full_train_error, info_response, ip_key, no_lane_error,
-    nothing_to_commit_error, ok_response, parse_op, predict_response,
-    stream_fallback, stream_response, train_response, try_acquire_lane,
-    unavailable_error, version_response, ConnState, DrainCfg, Op,
-    SIGTERM_DRAIN,
+    nothing_to_commit_error, ok_response, ownership_guard, parse_op,
+    pong_response, predict_response, stream_fallback, stream_response,
+    train_response, try_acquire_lane, unavailable_error, version_response,
+    ConnState, DrainCfg, Op, SIGTERM_DRAIN,
 };
 
 // ---------------------------------------------------------------------------
@@ -664,7 +664,7 @@ impl EventLoop {
             id,
             Conn {
                 sock,
-                state: ConnState::new(self.front.shard_for_key(key)),
+                state: ConnState::new(key, self.front.shard_for_key(key)),
                 rbuf: Vec::new(),
                 wbuf: Vec::new(),
                 wpos: 0,
@@ -807,6 +807,12 @@ impl EventLoop {
                 return;
             }
         };
+        // cluster ownership: answered synchronously (like the threaded
+        // path's early return) so a redirected client never queues work
+        if let Some(e) = ownership_guard(&front, conn.state.key, &op) {
+            conn.slots.push_back(Slot::Ready(error_response(&e)));
+            return;
+        }
         // the budget starts when the request is UNDERSTOOD (same point
         // as the threaded path); saturating via checked_add
         let deadline = budget.and_then(|d| Instant::now().checked_add(d));
@@ -814,6 +820,11 @@ impl EventLoop {
             Op::Info => conn
                 .slots
                 .push_back(Slot::Ready(info_response(&front, &conn.state))),
+            // liveness probe: answered inline, never queued behind
+            // sweeps, so gossip RTTs measure the wire, not the workload
+            Op::Ping => conn
+                .slots
+                .push_back(Slot::Ready(pong_response(&front))),
             Op::Predict(input) => {
                 let input = Arc::new(input);
                 let (token, reply) = self.event_reply(id);

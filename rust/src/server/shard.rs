@@ -28,11 +28,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex, Weak};
+use std::sync::{mpsc, Arc, Mutex, OnceLock, Weak};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use super::cluster::{fnv1a, ClusterState};
 use super::front::{BatchFront, LaneSnapshot, Reply, ReplySender};
 use super::Model;
 
@@ -63,14 +64,17 @@ pub struct LaneBinding {
     /// Current `(shard index, lane index)` home. Locked for the full
     /// duration of a migration.
     home: Mutex<(usize, usize)>,
-    /// Set by every state-mutating op; the standby pusher swaps it off
-    /// and ships a checkpoint delta. Idle lanes stay clean and cost the
-    /// pusher nothing.
-    dirty: AtomicBool,
-    /// A standby push for this lane is in flight (swapped-off dirty bit
-    /// not yet confirmed by the replica) — counted in `standby_lag_lanes`
-    /// so "lag 0" really means the replica has everything.
-    pushing: AtomicBool,
+    /// Per-replica dirty bits (bit `i` = standby replica `i` has not yet
+    /// been shipped the latest state). Every state-mutating op sets ALL
+    /// bits at once; each replica's pusher clears only its own, so the
+    /// fan-out replicas lag independently. Idle lanes stay clean and
+    /// cost the pushers nothing. Replica count is therefore capped at 64
+    /// — far past any sane fan-out.
+    dirty: AtomicU64,
+    /// Per-replica in-flight bits (swapped-off dirty bit not yet
+    /// confirmed by that replica) — counted in `standby_lag_lanes` so
+    /// "lag 0" really means the replica has everything.
+    pushing: AtomicU64,
     /// The binding's lane has been returned to its shard's free list;
     /// late ops answer `no_lane`.
     released: AtomicBool,
@@ -92,9 +96,10 @@ impl LaneBinding {
         self.home.lock().unwrap().1
     }
 
-    /// Record a state mutation for the standby delta stream.
+    /// Record a state mutation for the standby delta streams: every
+    /// configured replica now lags this lane.
     pub fn mark_dirty(&self) {
-        self.dirty.store(true, Ordering::SeqCst);
+        self.dirty.fetch_or(u64::MAX, Ordering::SeqCst);
     }
 
     /// Lane already returned to the free list (connection gone)?
@@ -102,30 +107,35 @@ impl LaneBinding {
         self.released.load(Ordering::SeqCst)
     }
 
-    /// Claim the dirty bit for a standby push. `true` = there is new
-    /// state to ship (and the lane is now counted as mid-push); `false`
-    /// = clean since the last push, ship nothing.
-    pub(crate) fn begin_push(&self) -> bool {
-        if !self.dirty.swap(false, Ordering::SeqCst) {
+    /// Claim replica `replica`'s dirty bit for a standby push. `true` =
+    /// there is new state to ship to THAT replica (and the lane is now
+    /// counted as mid-push for it); `false` = clean since its last
+    /// push, ship nothing. Other replicas' bits are untouched.
+    pub(crate) fn begin_push(&self, replica: usize) -> bool {
+        let bit = 1u64 << (replica % 64);
+        if self.dirty.fetch_and(!bit, Ordering::SeqCst) & bit == 0 {
             return false;
         }
-        self.pushing.store(true, Ordering::SeqCst);
+        self.pushing.fetch_or(bit, Ordering::SeqCst);
         true
     }
 
-    /// Finish a push; a FAILED push re-marks the lane dirty so the
-    /// delta is retried instead of lost.
-    pub(crate) fn end_push(&self, ok: bool) {
+    /// Finish replica `replica`'s push; a FAILED push re-marks the lane
+    /// dirty for that replica so the delta is retried instead of lost.
+    pub(crate) fn end_push(&self, replica: usize, ok: bool) {
+        let bit = 1u64 << (replica % 64);
         if !ok {
-            self.dirty.store(true, Ordering::SeqCst);
+            self.dirty.fetch_or(bit, Ordering::SeqCst);
         }
-        self.pushing.store(false, Ordering::SeqCst);
+        self.pushing.fetch_and(!bit, Ordering::SeqCst);
     }
 
-    /// Dirty or mid-push — the replica does not yet hold this lane's
-    /// latest state.
-    fn lagging(&self) -> bool {
-        self.dirty.load(Ordering::SeqCst) || self.pushing.load(Ordering::SeqCst)
+    /// Dirty or mid-push under `mask` — some replica in the mask does
+    /// not yet hold this lane's latest state.
+    fn lagging_under(&self, mask: u64) -> bool {
+        (self.dirty.load(Ordering::SeqCst) | self.pushing.load(Ordering::SeqCst))
+            & mask
+            != 0
     }
 }
 
@@ -150,6 +160,17 @@ pub struct ShardedFront {
     /// Parked lanes occupy NO hub lane: a replica can hold state for
     /// more primaries than it has lanes, paying a lane only on adopt.
     parked: Mutex<HashMap<u64, LaneSnapshot>>,
+    /// Standby replica count (0 = no fan-out configured).
+    replicas: AtomicUsize,
+    /// Dirty-bit mask covering the configured replicas. Defaults to ALL
+    /// bits so a server without a pusher keeps the legacy semantics
+    /// (`standby_lag_lanes` counts every dirty lane); `set_replicas`
+    /// narrows it to the low N bits so lag only measures real replicas.
+    replica_mask: AtomicU64,
+    /// Cluster membership view (consistent-hash ring + failure
+    /// detector), set once by `serve_on_opts` when `--peers` is given —
+    /// both transports' ownership guards read it from here.
+    cluster: OnceLock<Arc<ClusterState>>,
 }
 
 impl ShardedFront {
@@ -196,7 +217,42 @@ impl ShardedFront {
             lanes_migrated: AtomicU64::new(0),
             occ_ewma: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             parked: Mutex::new(HashMap::new()),
+            replicas: AtomicUsize::new(0),
+            replica_mask: AtomicU64::new(u64::MAX),
+            cluster: OnceLock::new(),
         })
+    }
+
+    /// Declare the standby fan-out width (N replicas, capped at 64).
+    /// Called once by `serve_on_opts` before the pusher starts.
+    pub fn set_replicas(&self, n: usize) {
+        let n = n.min(64);
+        self.replicas.store(n, Ordering::SeqCst);
+        let mask = if n >= 64 { u64::MAX } else { (1u64 << n) - 1 };
+        self.replica_mask.store(mask, Ordering::SeqCst);
+    }
+
+    /// Configured standby replica count.
+    pub fn standby_replicas(&self) -> usize {
+        self.replicas.load(Ordering::SeqCst)
+    }
+
+    /// Switch every shard between the fixed hold-off window and
+    /// autotuned mode (`--holdoff-auto`).
+    pub fn set_holdoff_auto(&self, on: bool) {
+        for s in &self.shards {
+            s.set_holdoff_auto(on);
+        }
+    }
+
+    /// Attach the cluster membership view (once; later calls ignored).
+    pub fn set_cluster(&self, c: Arc<ClusterState>) {
+        let _ = self.cluster.set(c);
+    }
+
+    /// The cluster membership view, when this node runs clustered.
+    pub fn cluster(&self) -> Option<&Arc<ClusterState>> {
+        self.cluster.get()
     }
 
     /// Number of shards.
@@ -325,8 +381,8 @@ impl ShardedFront {
         let b = Arc::new(LaneBinding {
             id: self.next_binding_id.fetch_add(1, Ordering::Relaxed),
             home: Mutex::new((shard_idx, lane)),
-            dirty: AtomicBool::new(false),
-            pushing: AtomicBool::new(false),
+            dirty: AtomicU64::new(0),
+            pushing: AtomicU64::new(0),
             released: AtomicBool::new(false),
         });
         let mut reg = self.bindings.lock().unwrap();
@@ -540,10 +596,26 @@ impl ShardedFront {
         self.shards.iter().map(|s| s.deadline_misses()).sum()
     }
 
-    /// Live bindings whose latest state the standby replica does not
+    /// Live bindings whose latest state SOME standby replica does not
     /// yet hold (dirty or mid-push) — `info`'s `standby_lag_lanes`.
+    /// With fan-out configured this is the worst case over replicas:
+    /// `0` means EVERY replica holds every lane's latest state.
     pub fn standby_lag_lanes(&self) -> usize {
-        self.live_bindings().iter().filter(|b| b.lagging()).count()
+        let mask = self.replica_mask.load(Ordering::SeqCst);
+        self.live_bindings()
+            .iter()
+            .filter(|b| b.lagging_under(mask))
+            .count()
+    }
+
+    /// [`Self::standby_lag_lanes`] for ONE replica of the fan-out —
+    /// `info`'s `standby_lag_per_replica` array.
+    pub fn standby_lag_lanes_for(&self, replica: usize) -> usize {
+        let bit = 1u64 << (replica % 64);
+        self.live_bindings()
+            .iter()
+            .filter(|b| b.lagging_under(bit))
+            .count()
     }
 
     /// Park a pushed lane snapshot under the primary's lane id (replaces
@@ -576,10 +648,15 @@ impl ShardedFront {
     }
 
     /// Checkpoint each binding and write it to `dir/lane-<id>.json`
-    /// (creating `dir`), one compact snapshot per file — the
-    /// `--drain-checkpoint` spill. Failures are reported per lane and
-    /// skipped: a poisoned lane must not abort the drain of healthy
-    /// ones. Returns the number of lanes spilled.
+    /// (creating `dir`) — the `--drain-checkpoint` spill. Each file is
+    /// two lines — the compact snapshot JSON, then an FNV-1a checksum of
+    /// the JSON bytes (`fnv1a:<16 hex>`) — written to a `.tmp` sibling
+    /// and atomically renamed into place, so a successor adopting the
+    /// spill can NEVER observe a torn half-written snapshot: it sees the
+    /// old file, the new file, or (checksum mismatch / missing line) a
+    /// detectably corrupt one it must refuse. Failures are reported per
+    /// lane and skipped: a poisoned lane must not abort the drain of
+    /// healthy ones. Returns the number of lanes spilled.
     pub fn spill_bindings(
         &self,
         bindings: &[Arc<LaneBinding>],
@@ -594,16 +671,24 @@ impl ShardedFront {
             match self.checkpoint_binding(b) {
                 Ok(snap) => {
                     let path = dir.join(format!("lane-{}.json", b.id()));
+                    let json = super::wire::snapshot_to_json(&snap)
+                        .to_string_compact();
                     let text = format!(
-                        "{}\n",
-                        super::wire::snapshot_to_json(&snap).to_string_compact()
+                        "{json}\nfnv1a:{:016x}\n",
+                        fnv1a(json.as_bytes())
                     );
-                    match std::fs::write(&path, text) {
+                    let tmp = dir.join(format!("lane-{}.json.tmp", b.id()));
+                    let wrote = std::fs::write(&tmp, text)
+                        .and_then(|()| std::fs::rename(&tmp, &path));
+                    match wrote {
                         Ok(()) => spilled += 1,
-                        Err(e) => eprintln!(
-                            "drain-checkpoint: write {} failed: {e}",
-                            path.display()
-                        ),
+                        Err(e) => {
+                            let _ = std::fs::remove_file(&tmp);
+                            eprintln!(
+                                "drain-checkpoint: write {} failed: {e}",
+                                path.display()
+                            );
+                        }
                     }
                 }
                 Err(code) => eprintln!(
@@ -613,6 +698,33 @@ impl ShardedFront {
             }
         }
         spilled
+    }
+
+    /// Read one spilled lane file back, verifying its checksum line, and
+    /// return the snapshot JSON text (first line). A truncated,
+    /// tampered, or checksum-less file is a typed error — the successor
+    /// tooling's integrity gate before it replays the snapshot through
+    /// `restore`/`migrate_in`.
+    pub fn read_spilled_lane(path: &std::path::Path) -> Result<String> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let json = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("spill file is empty"))?;
+        let sum_line = lines.next().ok_or_else(|| {
+            anyhow::anyhow!("spill file has no checksum line (truncated?)")
+        })?;
+        let want = sum_line.strip_prefix("fnv1a:").ok_or_else(|| {
+            anyhow::anyhow!("spill checksum line is malformed: {sum_line:?}")
+        })?;
+        let got = format!("{:016x}", fnv1a(json.as_bytes()));
+        if got != want {
+            anyhow::bail!(
+                "spill checksum mismatch: file says fnv1a:{want}, \
+                 content hashes to fnv1a:{got}"
+            );
+        }
+        Ok(json.to_string())
     }
 
     /// Per-shard queue depths (metrics; `info`).

@@ -287,13 +287,34 @@ pub struct ServeOpts {
     /// exceeds the threshold (`ShardedFront::rebalance_once`). Off by
     /// default — `--rebalance` on the CLI.
     pub rebalance: bool,
-    /// Warm-standby address: stream per-lane checkpoint deltas to this
-    /// replica over the wire protocol's `migrate_in` op. Only lanes
-    /// whose state changed since the last push are shipped (dirty-bit
-    /// tracking), so idle lanes cost nothing. `--standby` on the CLI.
+    /// Warm-standby fan-out: a comma-separated list of replica
+    /// addresses (up to 64). Per-lane checkpoint deltas stream to EVERY
+    /// replica over the wire protocol's `migrate_in` op; each replica
+    /// has its own dirty set, so a slow or dead replica only delays its
+    /// own copy. Only lanes whose state changed since that replica's
+    /// last push are shipped, and each round's deltas are batched
+    /// (pipelined) on one connection. `--standby` on the CLI.
     pub standby: Option<String>,
     /// Standby push interval in ms (0 = the 200 ms default).
     pub standby_interval_ms: u64,
+    /// Cluster peers: a comma-separated list of the OTHER members'
+    /// advertised addresses. Enables the membership layer — gossip
+    /// pings with the failure detector, the consistent-hash ring over
+    /// live members, and `moved` redirects for keys this node does not
+    /// own. `--peers` on the CLI.
+    pub peers: Option<String>,
+    /// This node's own address as the rest of the group spells it in
+    /// their `--peers` lists (ring placement compares address strings
+    /// byte-for-byte). `None` = the listener's local address.
+    /// `--advertise` on the CLI.
+    pub advertise: Option<String>,
+    /// Gossip ping interval in ms (0 = the 50 ms default).
+    pub ping_interval_ms: u64,
+    /// Autotune each shard's hold-off window from its observed
+    /// inter-arrival EWMA, capped by `holdoff_us` (`--holdoff-auto`):
+    /// idle shards converge to zero added latency, busy shards coalesce
+    /// up to the cap.
+    pub holdoff_auto: bool,
     /// On graceful drain, spill every live lane's checkpoint to
     /// `dir/lane-<id>.json` before exit — `--drain-checkpoint` on the
     /// CLI. The spilled files feed `migrate_in` on a successor server.
@@ -353,10 +374,35 @@ pub fn serve_on_opts(
     if opts.drain_on_sigterm {
         install_sigterm_handler();
     }
-    // sidecar threads (rebalancer / standby pusher) stop on this flag
-    // and are joined BEFORE the sweepers wind down, so neither ever
-    // observes a dead front
+    if opts.holdoff_auto {
+        front.set_holdoff_auto(true);
+    }
+    // sidecar threads (rebalancer / standby pusher / gossip) stop on
+    // this flag and are joined BEFORE the sweepers wind down, so none
+    // ever observes a dead front
     let stop = Arc::new(AtomicBool::new(false));
+    let gossip = opts.peers.clone().map(|peers_csv| {
+        let advertise = opts
+            .advertise
+            .clone()
+            .unwrap_or_else(|| addr.to_string());
+        let peers: Vec<String> = peers_csv
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let cluster = super::cluster::ClusterState::new(advertise, peers);
+        front.set_cluster(Arc::clone(&cluster));
+        let s = Arc::clone(&stop);
+        let interval = Duration::from_millis(match opts.ping_interval_ms {
+            0 => super::cluster::DEFAULT_PING_INTERVAL_MS,
+            ms => ms,
+        });
+        std::thread::Builder::new()
+            .name("lr-gossip".into())
+            .spawn(move || super::cluster::gossip_loop(cluster, s, interval))
+            .expect("spawn gossip thread")
+    });
     let rebalancer = opts.rebalance.then(|| {
         let f = Arc::clone(&front);
         let s = Arc::clone(&stop);
@@ -370,17 +416,29 @@ pub fn serve_on_opts(
             })
             .expect("spawn rebalancer thread")
     });
-    let pusher = opts.standby.clone().map(|standby_addr| {
+    let pusher = opts.standby.clone().and_then(|standby_csv| {
+        let replicas: Vec<String> = standby_csv
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .take(64)
+            .collect();
+        if replicas.is_empty() {
+            return None;
+        }
+        front.set_replicas(replicas.len());
         let f = Arc::clone(&front);
         let s = Arc::clone(&stop);
         let interval = Duration::from_millis(match opts.standby_interval_ms {
             0 => 200,
             ms => ms,
         });
-        std::thread::Builder::new()
-            .name("lr-standby-pusher".into())
-            .spawn(move || standby_push_loop(f, s, standby_addr, interval))
-            .expect("spawn standby pusher thread")
+        Some(
+            std::thread::Builder::new()
+                .name("lr-standby-pusher".into())
+                .spawn(move || standby_push_loop(f, s, replicas, interval))
+                .expect("spawn standby pusher thread"),
+        )
     });
     let drain = DrainCfg {
         spill_dir: opts.drain_checkpoint.clone(),
@@ -405,23 +463,33 @@ pub fn serve_on_opts(
     if let Some(h) = pusher {
         let _ = h.join();
     }
+    if let Some(h) = gossip {
+        let _ = h.join();
+    }
     front.shutdown();
     res.map(|()| addr)
 }
 
-/// The warm-standby delta pusher: every `interval`, checkpoint each lane
-/// whose state changed since the last push (the binding's dirty bit) and
-/// ship it to the replica as `{"op": "migrate_in", "lane_id", "checkpoint"}`
-/// over ONE lazily-connected wire client. A failed push re-marks the
-/// lane dirty and drops the connection, so a dead or restarted standby
-/// costs retries, never lost deltas; IO timeouts bound every hang.
+/// The warm-standby delta pusher, fan-out form: every `interval`, for
+/// EACH replica, checkpoint each lane whose state changed since that
+/// replica's last push (the binding's per-replica dirty bit) and ship
+/// the round's deltas as a PIPELINED batch of
+/// `{"op": "migrate_in", "lane_id", "checkpoint"}` frames on one
+/// lazily-connected wire client per replica — all frames written, then
+/// all acks read, so a round costs one round-trip instead of one per
+/// lane. Any frame not positively acked re-marks its lane dirty for
+/// that replica and drops that replica's connection, so a dead,
+/// restarted, or mid-frame-severed standby costs retries, never lost or
+/// torn deltas (the replica parses whole lines only — a partial frame
+/// is never applied); IO timeouts bound every hang.
 fn standby_push_loop(
     front: Arc<ShardedFront>,
     stop: Arc<AtomicBool>,
-    standby_addr: String,
+    replicas: Vec<String>,
     interval: Duration,
 ) {
-    let mut client: Option<Client> = None;
+    let mut clients: Vec<Option<Client>> =
+        (0..replicas.len()).map(|_| None).collect();
     'push: loop {
         // sleep in short slices so serve_on_opts joins promptly
         let mut slept = Duration::ZERO;
@@ -433,50 +501,104 @@ fn standby_push_loop(
             std::thread::sleep(slice);
             slept += slice;
         }
-        for b in front.live_bindings() {
+        for (idx, addr) in replicas.iter().enumerate() {
             if stop.load(Ordering::SeqCst) {
                 break 'push;
             }
-            if !b.begin_push() {
-                continue; // clean since the last push: ship nothing
-            }
-            let ok = push_standby_delta(&front, &standby_addr, &mut client, &b);
-            b.end_push(ok);
-            if !ok {
-                client = None; // reconnect on the next dirty lane
-            }
+            push_replica_deltas(&front, idx, addr, &mut clients[idx]);
         }
     }
 }
 
-/// One lane's standby push. `false` re-queues the delta (see caller).
-fn push_standby_delta(
+/// One replica's batched delta round (see [`standby_push_loop`]).
+fn push_replica_deltas(
     front: &ShardedFront,
-    standby_addr: &str,
+    idx: usize,
+    addr: &str,
     client: &mut Option<Client>,
-    b: &LaneBinding,
-) -> bool {
-    let snap = match front.checkpoint_binding(b) {
-        Ok(s) => s,
-        Err(_) => return false, // lane released/poisoned mid-push
-    };
+) {
+    // claim this replica's dirty lanes and snapshot them first, so the
+    // wire phase ships a consistent batch
+    let mut claimed: Vec<(Arc<LaneBinding>, Json)> = Vec::new();
+    for b in front.live_bindings() {
+        if !b.begin_push(idx) {
+            continue; // clean since this replica's last push
+        }
+        match front.checkpoint_binding(&b) {
+            Ok(snap) => {
+                let req = Json::obj(vec![
+                    ("op", Json::Str("migrate_in".into())),
+                    ("lane_id", Json::Num(b.id() as f64)),
+                    ("checkpoint", snapshot_to_json(&snap)),
+                ]);
+                claimed.push((b, req));
+            }
+            // lane released/poisoned mid-push: retry next round
+            Err(_) => b.end_push(idx, false),
+        }
+    }
+    if claimed.is_empty() {
+        return;
+    }
     if client.is_none() {
-        match Client::connect(standby_addr) {
+        match Client::connect(addr) {
             Ok(mut c) => {
                 // a wedged replica must not hang the pusher forever
                 let _ = c.set_io_timeout(Some(Duration::from_secs(5)));
                 *client = Some(c);
             }
-            Err(_) => return false,
+            Err(_) => {
+                for (b, _) in &claimed {
+                    b.end_push(idx, false);
+                }
+                return;
+            }
         }
     }
     let c = client.as_mut().expect("connected above");
-    let req = Json::obj(vec![
-        ("op", Json::Str("migrate_in".into())),
-        ("lane_id", Json::Num(b.id() as f64)),
-        ("checkpoint", snapshot_to_json(&snap)),
-    ]);
-    matches!(c.request(&req), Ok(resp) if resp.get("ok") == Some(&Json::Bool(true)))
+    // pipeline: write every frame, then collect the acks in order
+    let mut sent = 0;
+    for (_, req) in &claimed {
+        if send_delta_frame(c, req).is_err() {
+            break;
+        }
+        sent += 1;
+    }
+    let mut acked = 0;
+    while acked < sent {
+        match c.recv() {
+            Ok(resp) if resp.get("ok") == Some(&Json::Bool(true)) => {
+                claimed[acked].0.end_push(idx, true);
+                acked += 1;
+            }
+            _ => break,
+        }
+    }
+    // everything past the last positive ack — refused, torn mid-frame,
+    // or timed out — stays owed to this replica
+    for (b, _) in &claimed[acked..] {
+        b.end_push(idx, false);
+    }
+    if acked < claimed.len() {
+        *client = None; // reconnect next round
+    }
+}
+
+/// Write one delta frame. Under the chaos suite's short-write shaping
+/// this deliberately severs the frame mid-line — bytes on the wire but
+/// no terminating newline — and reports failure, reproducing a
+/// connection cut at the worst possible instant: the caller must
+/// re-dirty the lane, and the replica (which only ever parses complete
+/// lines) must never count the partial delta as applied.
+fn send_delta_frame(c: &mut Client, req: &Json) -> Result<()> {
+    if let Some((chunk, delay)) = super::fault::short_write_chunk() {
+        std::thread::sleep(delay);
+        let line = format!("{}\n", req.to_string_compact());
+        let take = chunk.min(line.len().saturating_sub(1));
+        c.send_raw(&line.as_bytes()[..take])?;
+        anyhow::bail!("fault-inject: standby delta frame torn mid-write");
+    }
+    c.send(req)
 }
 
 #[cfg(target_os = "linux")]
@@ -640,6 +762,9 @@ enum LocalFallback {
 /// lifetime; once the hub was full for this connection, it sticks to
 /// the local fallback so its state never jumps between hub and local.
 pub(crate) struct ConnState {
+    /// The connection key (peer-IP hash) — what the cluster ring hashes
+    /// to decide which NODE owns this connection's lane state.
+    pub(crate) key: u64,
     pub(crate) shard_idx: usize,
     pub(crate) binding: Option<Arc<LaneBinding>>,
     hub_denied: bool,
@@ -649,8 +774,9 @@ pub(crate) struct ConnState {
 }
 
 impl ConnState {
-    pub(crate) fn new(shard_idx: usize) -> Self {
+    pub(crate) fn new(key: u64, shard_idx: usize) -> Self {
         Self {
+            key,
             shard_idx,
             binding: None,
             hub_denied: false,
@@ -733,6 +859,10 @@ pub struct WireError {
     /// `"lane_poisoned"`, `"trainer_budget"`.
     pub code: &'static str,
     msg: String,
+    /// For `moved` only: the owning node's advertised address, emitted
+    /// as the response's `addr` field so clients can follow the
+    /// redirect without parsing the message text.
+    pub addr: Option<String>,
 }
 
 impl WireError {
@@ -756,6 +886,18 @@ pub(crate) fn coded(code: &'static str, msg: impl Into<String>) -> anyhow::Error
     anyhow::Error::new(WireError {
         code,
         msg: msg.into(),
+        addr: None,
+    })
+}
+
+/// The cluster redirect: this node does not own the request's
+/// connection key; the response carries the owner's address for the
+/// client to follow.
+pub(crate) fn moved_error(addr: String) -> anyhow::Error {
+    anyhow::Error::new(WireError {
+        code: "moved",
+        msg: format!("key is owned by {addr}; reconnect there"),
+        addr: Some(addr),
     })
 }
 
@@ -775,6 +917,9 @@ pub(crate) const ERROR_CODES: &[&str] = &[
     "overloaded",
     "deadline_exceeded",
     "unknown_lane",
+    "moved",
+    "restore_corrupt",
+    "redirect_loop",
 ];
 
 /// Resolve a sweeper-side error-code slug into the shared typed wire
@@ -819,6 +964,17 @@ pub(crate) fn coded_error(code: &'static str) -> anyhow::Error {
         "unknown_lane" => {
             "unknown lane: no such parked lane id or migration target"
         }
+        "moved" => {
+            "key is owned by another cluster node; follow the addr field"
+        }
+        "restore_corrupt" => {
+            "restore rejected: snapshot failed its integrity check \
+             (corrupt or truncated); nothing was applied"
+        }
+        "redirect_loop" => {
+            "redirect loop: moved-hop limit exceeded without reaching \
+             an owning node"
+        }
         other => {
             debug_assert!(false, "unmapped wire error code {other:?}");
             "internal serving error"
@@ -850,6 +1006,43 @@ pub(crate) fn no_lane_error(op: &str) -> anyhow::Error {
         "no_lane",
         format!("{op} requires an active streaming lane on this connection"),
     )
+}
+
+/// The cluster ownership guard, shared by both transports: on a
+/// clustered node, a KEY-HOMED op (anything that reads or mutates this
+/// connection's lane state, including adopting a parked lane) whose
+/// connection key hashes to ANOTHER live node answers `moved {addr}`
+/// instead of executing. Exempt: `info`/`ping` (introspection must work
+/// anywhere), stateless `predict` (any node computes the identical
+/// answer), standby delta pushes (`migrate_in` with id + checkpoint —
+/// the primary targets a specific replica deliberately), and
+/// `shutdown_drain`. Returns the error to answer, or `None` to proceed.
+pub(crate) fn ownership_guard(
+    front: &ShardedFront,
+    key: u64,
+    op: &Op,
+) -> Option<anyhow::Error> {
+    let key_homed = match op {
+        Op::Stream(_)
+        | Op::Train { .. }
+        | Op::Commit { .. }
+        | Op::Rollback { .. }
+        | Op::Checkpoint
+        | Op::Restore(_)
+        | Op::Reset
+        | Op::Migrate { .. } => true,
+        // adopt (id only) and cross-server restore (snapshot only) home
+        // with the key; the push form (both) is replica-targeted
+        Op::MigrateIn { lane_id, snap } => {
+            !(lane_id.is_some() && snap.is_some())
+        }
+        _ => false,
+    };
+    if !key_homed {
+        return None;
+    }
+    let addr = front.cluster()?.owned_elsewhere(key)?;
+    Some(moved_error(addr))
 }
 
 // ---------------------------------------------------------------------------
@@ -898,6 +1091,10 @@ pub(crate) fn guard_train_rows(model: &Model, rows: usize) -> Result<()> {
 /// transports differ only in how they wait for the shard queues.
 pub(crate) enum Op {
     Info,
+    /// Cluster liveness probe: answered inline by both transports
+    /// (never queued behind sweeps), so gossip RTTs measure the wire,
+    /// not the workload.
+    Ping,
     Predict(Vec<f64>),
     Stream(Vec<f64>),
     Train { input: Vec<f64>, target: Vec<f64> },
@@ -920,6 +1117,17 @@ pub(crate) enum Op {
     /// Graceful drain: stop accepting, finish in-flight work, flush,
     /// spill live lanes (with `--drain-checkpoint`), exit.
     ShutdownDrain,
+}
+
+/// Wrap a snapshot-decode failure as the typed `restore_corrupt` error:
+/// a corrupt or truncated checkpoint (a torn spill file, a tampered
+/// snapshot, a cut-off frame) is a first-class refusal on BOTH
+/// transports — never a parse panic, and nothing is applied.
+fn restore_corrupt_error(e: anyhow::Error) -> anyhow::Error {
+    coded(
+        "restore_corrupt",
+        format!("snapshot failed its integrity check ({e}); nothing applied"),
+    )
 }
 
 /// Parse an optional non-negative integer field (`None` when absent or
@@ -969,6 +1177,7 @@ pub(crate) fn parse_op(line: &str) -> Result<(Op, Option<Duration>)> {
         .ok_or_else(|| anyhow!("missing 'op'"))?;
     let op = match op {
         "info" => Op::Info,
+        "ping" => Op::Ping,
         "predict" => Op::Predict(parse_input(&req)?),
         "stream" => Op::Stream(parse_input(&req)?),
         "train" => {
@@ -1011,7 +1220,9 @@ pub(crate) fn parse_op(line: &str) -> Result<(Op, Option<Duration>)> {
             let snap = req
                 .get("checkpoint")
                 .ok_or_else(|| anyhow!("missing 'checkpoint' object"))?;
-            Op::Restore(Box::new(snapshot_from_json(snap)?))
+            Op::Restore(Box::new(
+                snapshot_from_json(snap).map_err(restore_corrupt_error)?,
+            ))
         }
         "reset" => Op::Reset,
         "migrate" => Op::Migrate {
@@ -1021,7 +1232,9 @@ pub(crate) fn parse_op(line: &str) -> Result<(Op, Option<Duration>)> {
             let lane_id = parse_opt_uint(&req, "lane_id")?;
             let snap = match req.get("checkpoint") {
                 None | Some(Json::Null) => None,
-                Some(j) => Some(Box::new(snapshot_from_json(j)?)),
+                Some(j) => Some(Box::new(
+                    snapshot_from_json(j).map_err(restore_corrupt_error)?,
+                )),
             };
             anyhow::ensure!(
                 lane_id.is_some() || snap.is_some(),
@@ -1198,7 +1411,7 @@ pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
     let home = front.shard(conn.shard_idx);
     let depths = front.queue_depths();
     let sweeps = front.sweep_counts();
-    Json::obj(vec![
+    let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("n", Json::Num(model.esn.n() as f64)),
         ("slots", Json::Num(model.esn.spec.slots() as f64)),
@@ -1221,6 +1434,13 @@ pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
             Json::Arr(sweeps.iter().map(|&s| Json::Num(s as f64)).collect()),
         ),
         ("holdoff_us", Json::Num(home.holdoff_us() as f64)),
+        // the window the home shard's sweeper will actually use next —
+        // equals holdoff_us in fixed mode; tracks the arrival EWMA
+        // (zero when idle) under --holdoff-auto
+        (
+            "holdoff_effective_us",
+            Json::Num(home.holdoff_effective_us() as f64),
+        ),
         ("stream_lane", match &conn.binding {
             Some(b) => Json::Num(b.home_lane() as f64),
             None => Json::Null,
@@ -1259,7 +1479,63 @@ pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
             Some(b) => Json::Num(b.home_shard() as f64),
             None => Json::Null,
         }),
-    ])
+    ];
+    // standby fan-out (PR 8): per-replica lag alongside the worst-case
+    // scalar above, so an operator sees WHICH replica is behind
+    let replicas = front.standby_replicas();
+    if replicas > 0 {
+        fields.push(("standby_replicas", Json::Num(replicas as f64)));
+        fields.push((
+            "standby_lag_per_replica",
+            Json::Arr(
+                (0..replicas)
+                    .map(|i| Json::Num(front.standby_lag_lanes_for(i) as f64))
+                    .collect(),
+            ),
+        ));
+    }
+    // cluster membership (PR 8): only on clustered nodes. cluster_owner
+    // is the live node owning THIS connection's key — after a failover,
+    // reading it from any member names where the client should be.
+    if let Some(c) = front.cluster() {
+        fields.push(("advertise", Json::Str(c.advertise().into())));
+        fields.push(("cluster_nodes", Json::Num(c.members() as f64)));
+        fields.push(("cluster_live", Json::Num(c.live_members() as f64)));
+        fields.push(("ring_epoch", Json::Num(c.epoch() as f64)));
+        fields.push((
+            "cluster_owner",
+            Json::Str(c.owner_for_key(conn.key)),
+        ));
+        let status = c.peer_status();
+        fields.push((
+            "peer_alive",
+            Json::Arr(
+                status.iter().map(|(_, a, _)| Json::Bool(*a)).collect(),
+            ),
+        ));
+        fields.push((
+            "peer_rtt_us",
+            Json::Arr(
+                status.iter().map(|(_, _, rtt)| Json::Num(*rtt)).collect(),
+            ),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// `ping` reply — the gossip probe's answer, also useful to operators
+/// as a cheap liveness check. Carries the node's cluster identity when
+/// clustered so a misconfigured peer list is visible on the wire.
+pub(crate) fn pong_response(front: &ShardedFront) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("pong", Json::Bool(true)),
+    ];
+    if let Some(c) = front.cluster() {
+        fields.push(("advertise", Json::Str(c.advertise().into())));
+        fields.push(("ring_epoch", Json::Num(c.epoch() as f64)));
+    }
+    Json::obj(fields)
 }
 
 pub(crate) fn predict_response(output: Vec<f64>, steps: usize, dt_s: f64) -> Json {
@@ -1331,6 +1607,10 @@ pub(crate) fn error_response(e: &anyhow::Error) -> Json {
     // constructor per code)
     if let Some(we) = e.downcast_ref::<WireError>() {
         fields.push(("code", Json::Str(we.code.into())));
+        // `moved` carries the owning node's address for the client
+        if let Some(addr) = &we.addr {
+            fields.push(("addr", Json::Str(addr.clone())));
+        }
     }
     Json::obj(fields)
 }
@@ -1346,7 +1626,7 @@ fn handle_connection(
     ctl: &DrainCtl,
     id: u64,
 ) -> Result<()> {
-    let mut conn = ConnState::new(front.shard_for_key(conn_key));
+    let mut conn = ConnState::new(conn_key, front.shard_for_key(conn_key));
     let result = serve_lines(&front, &mut conn, stream, ctl);
     ctl.streams.lock().unwrap().remove(&id);
     if let Some(b) = conn.binding.take() {
@@ -1405,11 +1685,17 @@ fn handle_request(
 ) -> Result<Json> {
     let model = front.model();
     let (op, budget) = parse_op(line)?;
+    // cluster ownership: key-homed ops on a key another live node owns
+    // answer `moved {addr}` before touching any lane state
+    if let Some(e) = ownership_guard(front, conn.key, &op) {
+        return Err(e);
+    }
     // the budget starts when the request is UNDERSTOOD; Instant addition
     // saturates via checked_add (an astronomically large budget = none)
     let deadline = budget.and_then(|d| Instant::now().checked_add(d));
     match op {
         Op::Info => Ok(info_response(front, conn)),
+        Op::Ping => Ok(pong_response(front)),
         Op::Predict(input) => {
             let steps = input.len();
             let t = Timer::start();
@@ -1633,18 +1919,33 @@ fn parse_input(req: &Json) -> Result<Vec<f64>> {
 /// The transient error codes [`Client::with_retry`] retries. Everything
 /// else in the [`ERROR_CODES`] table is DETERMINISTIC — retrying a
 /// `restore_mismatch` or `commit_singular` can only fail identically,
-/// so those surface immediately. Pinned to the table by a unit test.
-pub const RETRYABLE_CODES: &[&str] = &["unavailable", "overloaded"];
+/// so those surface immediately. `moved` is transient BY DEFINITION:
+/// [`Client::request`] normally follows it transparently, so a `moved`
+/// that reaches the retry layer means ownership was mid-transition
+/// (ring rebuild racing the request) — exactly the case a backoff
+/// retry resolves. Pinned to the table by a unit test.
+pub const RETRYABLE_CODES: &[&str] = &["unavailable", "overloaded", "moved"];
 
 /// Is this error-code slug in the transient, retry-worthy set?
 pub fn is_retryable_code(code: &str) -> bool {
     RETRYABLE_CODES.contains(&code)
 }
 
+/// Most `moved` hops [`Client::request`] follows before giving up with
+/// the typed `redirect_loop` error. A healthy cluster resolves in ONE
+/// hop (every node knows the full ring); a few more tolerate a ring
+/// transition racing the request. Anything deeper is a configuration
+/// cycle (nodes disagreeing about ownership forever), which must
+/// surface as an error, never as an infinite client loop.
+const MAX_REDIRECT_HOPS: usize = 4;
+
 /// Minimal client for the examples/tests.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// The configured IO timeout, remembered so redirect-follow
+    /// reconnects keep the caller's deadline bounds.
+    io_timeout: Option<Duration>,
 }
 
 impl Client {
@@ -1653,6 +1954,24 @@ impl Client {
         Ok(Self {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            io_timeout: None,
+        })
+    }
+
+    /// [`Self::connect`] with a bound on the connection attempt itself —
+    /// the gossip prober and failover-aware tooling use this so a
+    /// black-holed peer costs a timeout, never a hang.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<Self> {
+        use std::net::ToSocketAddrs;
+        let sa = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("unresolvable address {addr:?}"))?;
+        let stream = TcpStream::connect_timeout(&sa, timeout)?;
+        Ok(Self {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            io_timeout: None,
         })
     }
 
@@ -1663,12 +1982,48 @@ impl Client {
     pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
         self.writer.set_write_timeout(timeout)?;
         self.reader.get_ref().set_read_timeout(timeout)?;
+        self.io_timeout = timeout;
         Ok(())
     }
 
+    /// One request → one response — transparently following cluster
+    /// redirects: a `moved {addr}` reply reconnects this client to the
+    /// named owner (keeping the IO timeout) and resends the SAME
+    /// request, up to [`MAX_REDIRECT_HOPS`] hops; past that the typed
+    /// `redirect_loop` error surfaces instead of looping forever. After
+    /// a successful follow the client STAYS on the owning node, so a
+    /// session's later requests pay zero extra hops. Pipelined callers
+    /// using raw [`Self::send`]/[`Self::recv`] see `moved` verbatim and
+    /// handle placement themselves.
     pub fn request(&mut self, req: &Json) -> Result<Json> {
         self.send(req)?;
-        self.recv()
+        let mut resp = self.recv()?;
+        let mut hops = 0usize;
+        while resp.get("code").and_then(Json::as_str) == Some("moved") {
+            let Some(addr) = resp
+                .get("addr")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+            else {
+                break; // moved without an address: nothing to follow
+            };
+            hops += 1;
+            if hops > MAX_REDIRECT_HOPS {
+                return Err(coded(
+                    "redirect_loop",
+                    format!(
+                        "redirect loop: {hops} moved hops without reaching \
+                         an owner (last claimed owner: {addr})"
+                    ),
+                ));
+            }
+            let mut next = Client::connect(&addr)?;
+            next.set_io_timeout(self.io_timeout)?;
+            *self = next;
+            self.send(req)?;
+            resp = self.recv()?;
+        }
+        Ok(resp)
     }
 
     /// Write one request line without waiting for the reply — pair with
@@ -1678,6 +2033,14 @@ impl Client {
         self.writer
             .write_all(req.to_string_compact().as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Write raw bytes with no framing — the fault-injection hook for
+    /// deliberately torn frames (tests only take this path).
+    pub(crate) fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.writer.write_all(bytes)?;
+        self.writer.flush()?;
         Ok(())
     }
 
@@ -2769,10 +3132,14 @@ mod tests {
                 "retryable code {code:?} is not in the coded_error table"
             );
         }
-        // … and is EXACTLY the transient pair: everything else in the
-        // table is deterministic and must never be retried
+        // … and is EXACTLY the transient set: everything else in the
+        // table is deterministic and must never be retried. `moved` is
+        // transient because a redirect that reaches the retry layer
+        // means the ring was mid-transition — the next attempt lands
+        // on the settled owner
         for code in ERROR_CODES {
-            let transient = matches!(*code, "unavailable" | "overloaded");
+            let transient =
+                matches!(*code, "unavailable" | "overloaded" | "moved");
             assert_eq!(
                 is_retryable_code(code),
                 transient,
@@ -2869,10 +3236,13 @@ mod tests {
                 vec![format!("lane-{lane_id}.json")],
                 "threaded={threaded}: exactly the live lane spills"
             );
-            let text =
-                std::fs::read_to_string(dir.join(format!("lane-{lane_id}.json")))
-                    .unwrap();
-            let cp = parse(&text).unwrap();
+            // spills carry a trailing fnv1a checksum line; the loader
+            // verifies it and hands back the snapshot json
+            let json = super::super::ShardedFront::read_spilled_lane(
+                &dir.join(format!("lane-{lane_id}.json")),
+            )
+            .unwrap();
+            let cp = parse(&json).unwrap();
             // successor: the spilled lane migrates in and continues
             let (addr2, handle2) =
                 spawn_server(Arc::clone(&model), 1, Some(1), threaded);
@@ -2965,5 +3335,348 @@ mod tests {
         s.shutdown_drain().unwrap();
         drop(s);
         standby_handle.join().unwrap();
+    }
+
+    #[test]
+    fn ping_op_answers_pong_on_both_transports() {
+        let model = Arc::new(make_model());
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 2, Some(1), threaded);
+            let mut c = Client::connect(&addr).unwrap();
+            let resp = c
+                .request(&Json::obj(vec![("op", Json::Str("ping".into()))]))
+                .unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            assert_eq!(
+                resp.get("pong"),
+                Some(&Json::Bool(true)),
+                "threaded={threaded}: ping must answer pong"
+            );
+            c.shutdown_drain().unwrap();
+            drop(c);
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn corrupt_snapshots_are_rejected_typed_on_both_transports() {
+        // a tampered or truncated checkpoint surfaces as the typed
+        // `restore_corrupt` refusal — never a parse panic — and leaves
+        // the lane untouched, on restore AND on migrate_in
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let input = &task.input[..40];
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&model), 2, Some(1), threaded);
+            let mut r = Client::connect(&addr).unwrap();
+            let reference = r.stream(input).unwrap();
+            let mut a = Client::connect(&addr).unwrap();
+            assert_eq!(a.stream(&input[..20]).unwrap(), reference[..20]);
+            let cp = a.checkpoint().unwrap();
+            // tamper: flip the precision tag to an unknown value
+            let text = cp.to_string_compact();
+            assert!(text.contains("f64"), "checkpoint lost its precision tag");
+            let corrupt = parse(&text.replace("f64", "f16")).unwrap();
+            for op in ["restore", "migrate_in"] {
+                let resp = a
+                    .request(&Json::obj(vec![
+                        ("op", Json::Str(op.into())),
+                        ("checkpoint", corrupt.clone()),
+                    ]))
+                    .unwrap();
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+                assert_eq!(
+                    resp.get("code"),
+                    Some(&Json::Str("restore_corrupt".into())),
+                    "threaded={threaded}: corrupt {op} must carry its code"
+                );
+            }
+            // a truncated snapshot (missing required fields) is the
+            // same typed refusal
+            let resp = a
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("restore".into())),
+                    (
+                        "checkpoint",
+                        Json::obj(vec![("precision", Json::Str("f64".into()))]),
+                    ),
+                ]))
+                .unwrap();
+            assert_eq!(
+                resp.get("code"),
+                Some(&Json::Str("restore_corrupt".into())),
+                "threaded={threaded}: truncated snapshot must be typed"
+            );
+            // nothing was applied: the lane continues bit-identically
+            assert_eq!(
+                a.stream(&input[20..]).unwrap(),
+                reference[20..],
+                "threaded={threaded}: a refused restore touched the lane"
+            );
+            drop(a);
+            drop(r);
+            handle.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn spilled_lane_checksum_rejects_corruption_and_truncation() {
+        // the spill loader verifies the fnv1a trailer: intact files
+        // round-trip, flipped bytes and truncations are refused
+        let dir = std::env::temp_dir()
+            .join(format!("lr-pr8-spillck-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = r#"{"precision":"f64","versions":[]}"#;
+        let sum = super::super::cluster::fnv1a(json.as_bytes());
+        let good = dir.join("good.json");
+        std::fs::write(&good, format!("{json}\nfnv1a:{sum:016x}\n")).unwrap();
+        assert_eq!(
+            super::super::ShardedFront::read_spilled_lane(&good).unwrap(),
+            json
+        );
+        // one flipped byte in the payload: checksum mismatch
+        let bad = dir.join("bad.json");
+        let tampered = json.replace("f64", "f65");
+        std::fs::write(&bad, format!("{tampered}\nfnv1a:{sum:016x}\n"))
+            .unwrap();
+        assert!(super::super::ShardedFront::read_spilled_lane(&bad).is_err());
+        // truncated: payload with no checksum line
+        let cut = dir.join("cut.json");
+        std::fs::write(&cut, json).unwrap();
+        assert!(super::super::ShardedFront::read_spilled_lane(&cut).is_err());
+        // empty file
+        let empty = dir.join("empty.json");
+        std::fs::write(&empty, "").unwrap();
+        assert!(
+            super::super::ShardedFront::read_spilled_lane(&empty).is_err()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn client_surfaces_redirect_loop_after_bounded_moved_hops() {
+        // a scripted server that always answers `moved` pointing at
+        // itself: the client must follow a bounded number of hops and
+        // then surface the typed `redirect_loop` error — never spin
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let resp_addr = addr.clone();
+        let server = std::thread::spawn(move || {
+            // initial connection + one reconnect per followed hop
+            for _ in 0..=MAX_REDIRECT_HOPS {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                let mut line = String::new();
+                if reader.read_line(&mut line).unwrap() == 0 {
+                    continue;
+                }
+                writeln!(
+                    writer,
+                    r#"{{"ok":false,"code":"moved","addr":"{resp_addr}","error":"not here"}}"#
+                )
+                .unwrap();
+                writer.flush().unwrap();
+            }
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let err = c
+            .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+            .unwrap_err();
+        let we = err
+            .downcast_ref::<WireError>()
+            .expect("redirect loop must be a typed wire error");
+        assert_eq!(we.code, "redirect_loop");
+        drop(c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn cluster_peers_redirect_nonowned_keys_and_clients_follow() {
+        // two live nodes split the ring; every loopback client shares
+        // one connection key, so exactly one node owns it. The other
+        // node refuses key-homed ops with `moved {addr}`, and
+        // Client::request follows the redirect transparently
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let input = &task.input[..40];
+        let l_a = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l_b = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr_a = l_a.local_addr().unwrap().to_string();
+        let addr_b = l_b.local_addr().unwrap().to_string();
+        let mut handles = Vec::new();
+        for (listener, advertise, peer) in [
+            (l_a, addr_a.clone(), addr_b.clone()),
+            (l_b, addr_b.clone(), addr_a.clone()),
+        ] {
+            let m = Arc::clone(&model);
+            handles.push(std::thread::spawn(move || {
+                serve_on_opts(
+                    listener,
+                    m,
+                    Some(64),
+                    ServeOpts {
+                        shards: Some(1),
+                        threaded: true,
+                        peers: Some(peer),
+                        advertise: Some(advertise),
+                        ping_interval_ms: 25,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+            }));
+        }
+        // discover the owner of the loopback key from either node
+        let info_req = Json::obj(vec![("op", Json::Str("info".into()))]);
+        let mut probe = Client::connect(&addr_a).unwrap();
+        let info = probe.request(&info_req).unwrap();
+        assert_eq!(info.get("cluster_nodes").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(info.get("cluster_live").and_then(Json::as_f64), Some(2.0));
+        let owner = info
+            .get("cluster_owner")
+            .and_then(Json::as_str)
+            .unwrap()
+            .to_string();
+        assert!(owner == addr_a || owner == addr_b);
+        let other = if owner == addr_a {
+            addr_b.clone()
+        } else {
+            addr_a.clone()
+        };
+        drop(probe);
+        // reference lane lives on the owner
+        let mut r = Client::connect(&owner).unwrap();
+        let reference = r.stream(input).unwrap();
+        // raw protocol view from the non-owner: key-homed ops answer
+        // `moved` carrying the owner's address …
+        let mut raw = Client::connect(&other).unwrap();
+        raw.send(&Json::obj(vec![
+            ("op", Json::Str("stream".into())),
+            ("input", Json::Arr(vec![Json::Num(task.input[0])])),
+        ]))
+        .unwrap();
+        let resp = raw.recv().unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("code"), Some(&Json::Str("moved".into())));
+        assert_eq!(
+            resp.get("addr").and_then(Json::as_str),
+            Some(owner.as_str()),
+            "moved must name the owning node"
+        );
+        // … while exempt ops (info, ping) answer locally
+        let local = raw.request(&info_req).unwrap();
+        assert_eq!(local.get("ok"), Some(&Json::Bool(true)));
+        drop(raw);
+        // a redirect-following client connected to the WRONG node lands
+        // on the owner and streams bit-identically
+        let mut c = Client::connect(&other).unwrap();
+        assert_eq!(
+            c.stream(input).unwrap(),
+            reference,
+            "redirected stream diverged from the owner-local twin"
+        );
+        // teardown: drain both nodes (drain is exempt from the guard)
+        drop(r);
+        c.shutdown_drain().unwrap();
+        drop(c);
+        let mut d = Client::connect(&other).unwrap();
+        d.shutdown_drain().unwrap();
+        drop(d);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn holdoff_autotune_idles_to_zero_and_fixed_mode_stays_pinned() {
+        let model = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let cap_us = 120_000u64;
+        let info_req = Json::obj(vec![("op", Json::Str("info".into()))]);
+        // fixed mode: the effective window IS the configured window
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let m = Arc::clone(&model);
+        let fixed = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                m,
+                Some(4),
+                ServeOpts {
+                    shards: Some(1),
+                    threaded: true,
+                    holdoff_us: cap_us,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let info = c.request(&info_req).unwrap();
+        assert_eq!(
+            info.get("holdoff_effective_us").and_then(Json::as_f64),
+            Some(cap_us as f64),
+            "fixed mode must report the configured window"
+        );
+        c.shutdown_drain().unwrap();
+        drop(c);
+        fixed.join().unwrap();
+        // autotuned mode: zero before any traffic, bounded by the cap
+        // under traffic, and back to zero once the shard goes idle
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let m = Arc::clone(&model);
+        let auto = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                m,
+                Some(4),
+                ServeOpts {
+                    shards: Some(1),
+                    threaded: true,
+                    holdoff_us: cap_us,
+                    holdoff_auto: true,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        });
+        let mut c = Client::connect(&addr).unwrap();
+        let info = c.request(&info_req).unwrap();
+        assert_eq!(
+            info.get("holdoff_us").and_then(Json::as_f64),
+            Some(cap_us as f64)
+        );
+        assert_eq!(
+            info.get("holdoff_effective_us").and_then(Json::as_f64),
+            Some(0.0),
+            "an untouched shard must add zero latency"
+        );
+        let out = c.stream(&task.input[..20]).unwrap();
+        assert_eq!(out.len(), 20, "autotuned stream must still answer");
+        let eff = c
+            .request(&info_req)
+            .unwrap()
+            .get("holdoff_effective_us")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(
+            eff <= cap_us as f64,
+            "effective window {eff} exceeded the --holdoff-us cap"
+        );
+        // idle longer than the cap: the window must collapse to zero
+        std::thread::sleep(Duration::from_micros(cap_us + 40_000));
+        let info = c.request(&info_req).unwrap();
+        assert_eq!(
+            info.get("holdoff_effective_us").and_then(Json::as_f64),
+            Some(0.0),
+            "an idle shard must converge back to zero added latency"
+        );
+        c.shutdown_drain().unwrap();
+        drop(c);
+        auto.join().unwrap();
     }
 }

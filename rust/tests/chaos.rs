@@ -21,7 +21,7 @@ use linear_reservoir::readout::{fit, Regularizer};
 use linear_reservoir::reservoir::{DiagonalEsn, EsnConfig};
 use linear_reservoir::rng::Pcg64;
 use linear_reservoir::server::{
-    fault, serve_on_opts, Model, Precision, ServeOpts,
+    fault, serve_on_opts, Client, Model, Precision, ServeOpts,
 };
 use linear_reservoir::spectral::uniform::uniform_spectrum;
 use linear_reservoir::tasks::mso::{slice_rows, MsoTask};
@@ -299,7 +299,7 @@ fn with_deadline(req: Json, ms: u64) -> Json {
 /// spectrum, seed 0, stream 70). The standby-promotion test pairs an
 /// in-test replica with a real subprocess primary, and promotion is
 /// only bit-identical if the weights on both sides are.
-fn make_cli_model(k: usize, n: usize) -> Arc<Model> {
+fn make_cli_model(k: usize, n: usize, precision: Precision) -> Arc<Model> {
     use linear_reservoir::spectral::golden::{golden_spectrum, GoldenParams};
     let config = EsnConfig::default().with_n(n).with_sr(0.9).with_seed(0);
     let mut rng = Pcg64::new(0, 70);
@@ -311,7 +311,7 @@ fn make_cli_model(k: usize, n: usize) -> Arc<Model> {
     let x = slice_rows(&feats, splits.train.clone());
     let y = task.target_mat(splits.train.clone());
     let readout = fit(&x, &y, 1e-8, true, Regularizer::Identity).unwrap();
-    Arc::new(Model::with_precision(esn, readout, Precision::F64))
+    Arc::new(Model::with_precision(esn, readout, precision))
 }
 
 // ---------------------------------------------------------------------------
@@ -882,7 +882,7 @@ fn standby_promotion_after_primary_sigkill_is_bit_identical() {
 
     // warm standby: an in-test replica serving the SAME model the CLI
     // builds (promotion is only bit-identical if the weights are)
-    let standby_model = make_cli_model(1, 30);
+    let standby_model = make_cli_model(1, 30, Precision::F64);
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let standby_addr = listener.local_addr().unwrap().to_string();
     let standby = std::thread::spawn(move || {
@@ -1093,4 +1093,384 @@ fn deadline_and_admission_refusals_are_typed_under_slow_writes() {
     drop(c);
     drop(b);
     handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// PR 8 tentpole proof: cluster failover after a real SIGKILL, with redirects
+// ---------------------------------------------------------------------------
+
+/// The acceptance-criteria cluster proof, on both transports and both
+/// precisions: a three-node group (two in-test survivors running the
+/// full membership config, one real subprocess primary that answers
+/// their gossip pings) streams lanes on the primary while the standby
+/// fan-out parks per-lane deltas on BOTH survivors. The primary is
+/// SIGKILLed mid-stream. The survivors' failure detectors declare it
+/// dead, the hash ring reassigns its range, and a client connected to
+/// the WRONG survivor follows the `moved` redirect to the new owner,
+/// adopts every affected lane there, and continues bit-identically to
+/// the uninterrupted run. Every read is timeout-bounded: a hang FAILS.
+#[test]
+fn cluster_failover_after_primary_sigkill_redirects_and_resumes() {
+    use std::process::Stdio;
+
+    struct ChildGuard(std::process::Child);
+    impl Drop for ChildGuard {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    let (_lock, _disarm) = fault_guard();
+    let task = MsoTask::new(1);
+    let input = &task.input[..60];
+
+    for precision in [Precision::F64, Precision::F32] {
+        for threaded in [false, true] {
+            // epoll is the Linux-only transport; elsewhere the flag is
+            // inert and the combos would duplicate each other
+            if !threaded && !cfg!(target_os = "linux") {
+                continue;
+            }
+            // survivors: in-test nodes serving the CLI's exact model
+            // (promotion is only bit-identical if the weights are)
+            let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+            let l2 = TcpListener::bind("127.0.0.1:0").unwrap();
+            let s1_addr = l1.local_addr().unwrap().to_string();
+            let s2_addr = l2.local_addr().unwrap().to_string();
+            // pre-reserve the primary's port so the survivors can name
+            // it in --peers before the subprocess exists
+            let primary_addr = {
+                let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+                let a = probe.local_addr().unwrap().to_string();
+                drop(probe);
+                a
+            };
+            let mut survivors = Vec::new();
+            for (listener, advertise, peers) in [
+                (
+                    l1,
+                    s1_addr.clone(),
+                    format!("{primary_addr},{s2_addr}"),
+                ),
+                (
+                    l2,
+                    s2_addr.clone(),
+                    format!("{primary_addr},{s1_addr}"),
+                ),
+            ] {
+                let model = make_cli_model(1, 30, precision);
+                survivors.push(std::thread::spawn(move || {
+                    serve_on_opts(
+                        listener,
+                        model,
+                        Some(64),
+                        ServeOpts {
+                            shards: Some(1),
+                            threaded,
+                            peers: Some(peers),
+                            advertise: Some(advertise),
+                            ping_interval_ms: 25,
+                            ..Default::default()
+                        },
+                    )
+                    .map(|_| ())
+                    .unwrap();
+                }));
+            }
+
+            // primary: a real subprocess, standby fan-out to BOTH
+            // survivors. It runs unguarded (no --peers) so it owns
+            // every key, but it answers the survivors' gossip pings —
+            // to their detectors it is a live group member.
+            let mut cmd =
+                std::process::Command::new(env!("CARGO_BIN_EXE_repro"));
+            cmd.args([
+                "serve",
+                "--addr",
+                &primary_addr,
+                "--k",
+                "1",
+                "--n",
+                "30",
+                "--shards",
+                "1",
+                "--standby",
+                &format!("{s1_addr},{s2_addr}"),
+                "--standby-interval-ms",
+                "20",
+            ]);
+            if threaded {
+                cmd.arg("--threaded");
+            }
+            if precision == Precision::F32 {
+                cmd.arg("--f32");
+            }
+            cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::null());
+            let mut child = ChildGuard(cmd.spawn().expect("spawn repro serve"));
+            let stdout = child.0.stdout.take().unwrap();
+            let mut lines = BufReader::new(stdout);
+            loop {
+                let mut line = String::new();
+                assert!(
+                    lines.read_line(&mut line).unwrap() > 0,
+                    "primary exited before announcing its address"
+                );
+                if line.contains(" on ") {
+                    break;
+                }
+            }
+
+            // uninterrupted reference, then two victim lanes cut at
+            // different offsets — "every affected lane" means both
+            let mut reference = CClient::connect(&primary_addr);
+            let want = reference.output_of(&stream_req(input));
+            let mut v1 = CClient::connect(&primary_addr);
+            let mut v2 = CClient::connect(&primary_addr);
+            assert_eq!(v1.output_of(&stream_req(&input[..30])), want[..30]);
+            assert_eq!(v2.output_of(&stream_req(&input[..40])), want[..40]);
+            let lane1 = v1.info().get("lane_id").and_then(Json::as_f64).unwrap() as u64;
+            let lane2 = v2.info().get("lane_id").and_then(Json::as_f64).unwrap() as u64;
+            assert_ne!(lane1, lane2);
+            let info = v1.info();
+            assert_eq!(
+                info.get("standby_replicas").and_then(Json::as_f64),
+                Some(2.0),
+                "fan-out must report both replicas: {info:?}"
+            );
+            // wait until BOTH replicas hold every lane's latest delta
+            let patience = std::time::Instant::now() + Duration::from_secs(20);
+            loop {
+                let lag = v1
+                    .info()
+                    .get("standby_lag_lanes")
+                    .and_then(Json::as_f64)
+                    .expect("standby_lag_lanes");
+                if lag == 0.0 {
+                    break;
+                }
+                assert!(
+                    std::time::Instant::now() < patience,
+                    "standby fan-out never drained ({lag} lane-replicas behind)"
+                );
+                std::thread::sleep(Duration::from_millis(25));
+            }
+
+            // hard kill — SIGKILL, nothing on the primary flushes
+            child.0.kill().expect("SIGKILL the primary");
+            let _ = child.0.wait();
+
+            // both survivors must declare the primary dead (miss
+            // threshold x ping interval) and agree on the new owner
+            let mut owner = String::new();
+            for addr in [&s1_addr, &s2_addr] {
+                let mut probe = CClient::connect(addr);
+                let patience =
+                    std::time::Instant::now() + Duration::from_secs(20);
+                loop {
+                    let info = probe.info();
+                    let live = info
+                        .get("cluster_live")
+                        .and_then(Json::as_f64)
+                        .expect("cluster_live");
+                    if live == 2.0 {
+                        let o = info
+                            .get("cluster_owner")
+                            .and_then(Json::as_str)
+                            .expect("cluster_owner")
+                            .to_string();
+                        if owner.is_empty() {
+                            owner = o;
+                        } else {
+                            assert_eq!(
+                                owner, o,
+                                "survivors disagree on the failed-over owner"
+                            );
+                        }
+                        break;
+                    }
+                    assert!(
+                        std::time::Instant::now() < patience,
+                        "failure detector never declared the primary dead"
+                    );
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+            assert!(owner == s1_addr || owner == s2_addr);
+            let loser = if owner == s1_addr { &s2_addr } else { &s1_addr };
+
+            // raw protocol view on the non-owner: key-homed ops answer
+            // `moved` naming the owner
+            let mut raw = CClient::connect(loser);
+            let resp = raw.request(&adopt_req(lane1));
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code").and_then(Json::as_str),
+                Some("moved"),
+                "non-owner must redirect: {resp:?}"
+            );
+            assert_eq!(
+                resp.get("addr").and_then(Json::as_str),
+                Some(owner.as_str()),
+                "moved must name the promoted owner"
+            );
+            drop(raw);
+
+            // redirect-following clients connected to the WRONG node:
+            // adopt + continue every affected lane, bit-identically
+            for (lane, done) in [(lane1, 30usize), (lane2, 40usize)] {
+                let mut c = Client::connect(loser).unwrap();
+                c.set_io_timeout(Some(Duration::from_secs(30))).unwrap();
+                c.adopt(lane).expect("promotion adopt via redirect");
+                assert_eq!(
+                    c.stream(&input[done..]).unwrap(),
+                    want[done..],
+                    "lane {lane} diverged after failover \
+                     (threaded={threaded}, {:?})",
+                    precision
+                );
+            }
+
+            // teardown: drain both survivors (drain is guard-exempt)
+            drop(reference);
+            drop(v1);
+            drop(v2);
+            for addr in [&s1_addr, &s2_addr] {
+                let mut d = CClient::connect(addr);
+                d.drain();
+                drop(d);
+            }
+            for h in survivors {
+                h.join().unwrap();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// satellite proof: torn standby delta frames never apply partially
+// ---------------------------------------------------------------------------
+
+/// Deterministic torn-frame hardening: with short-write shaping armed,
+/// every standby delta frame is cut mid-line (the newline never leaves
+/// the primary), so the replica never sees a complete request and never
+/// applies a partial delta — the lane just stays lagging on the pusher.
+/// Disarming lets the next round replicate the full checkpoint, and the
+/// promoted lane is bit-identical. Threaded transport on both ends so
+/// the shaping hits ONLY the pusher's frames.
+#[test]
+fn torn_standby_delta_frames_never_apply_partially() {
+    let (_lock, _disarm) = fault_guard();
+    let task = MsoTask::new(1);
+    let input = &task.input[..60];
+
+    // tear every pusher frame 8 bytes in, before the servers even start
+    fault::set_short_writes(8, Duration::ZERO);
+
+    let replica_model = make_model(Precision::F64);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let replica_addr = listener.local_addr().unwrap().to_string();
+    let replica = std::thread::spawn(move || {
+        serve_on_opts(
+            listener,
+            replica_model,
+            Some(64),
+            ServeOpts {
+                shards: Some(1),
+                threaded: true,
+                ..Default::default()
+            },
+        )
+        .map(|_| ())
+        .unwrap();
+    });
+
+    let primary_model = make_model(Precision::F64);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let primary_addr = listener.local_addr().unwrap().to_string();
+    let replica_for_primary = replica_addr.clone();
+    let primary = std::thread::spawn(move || {
+        serve_on_opts(
+            listener,
+            primary_model,
+            Some(64),
+            ServeOpts {
+                shards: Some(1),
+                threaded: true,
+                standby: Some(replica_for_primary),
+                standby_interval_ms: 20,
+                ..Default::default()
+            },
+        )
+        .map(|_| ())
+        .unwrap();
+    });
+
+    let mut reference = CClient::connect(&primary_addr);
+    let want = reference.output_of(&stream_req(input));
+    let mut victim = CClient::connect(&primary_addr);
+    assert_eq!(victim.output_of(&stream_req(&input[..30])), want[..30]);
+    let lane_id =
+        victim.info().get("lane_id").and_then(Json::as_f64).unwrap() as u64;
+
+    // ≥10 torn push rounds: the lag never drains and the replica never
+    // parks the lane (a partial frame that applied would park it)
+    let mut adopt_probe = CClient::connect(&replica_addr);
+    for _ in 0..3 {
+        std::thread::sleep(Duration::from_millis(70));
+        let lag = victim
+            .info()
+            .get("standby_lag_lanes")
+            .and_then(Json::as_f64)
+            .expect("standby_lag_lanes");
+        assert!(
+            lag >= 1.0,
+            "a torn delta frame was counted as replicated"
+        );
+        adopt_probe.expect_code(&adopt_req(lane_id), "unknown_lane");
+    }
+    drop(adopt_probe);
+
+    // heal the link: the next rounds push the full checkpoint
+    fault::disarm();
+    let patience = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        let lag = victim
+            .info()
+            .get("standby_lag_lanes")
+            .and_then(Json::as_f64)
+            .expect("standby_lag_lanes");
+        if lag == 0.0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < patience,
+            "standby lag never drained after disarm ({lag} behind)"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // promote on the replica: bit-identical continuation
+    let mut promoted = CClient::connect(&replica_addr);
+    let resp = promoted.request(&adopt_req(lane_id));
+    assert_eq!(
+        resp.get("ok"),
+        Some(&Json::Bool(true)),
+        "promotion adopt failed: {resp:?}"
+    );
+    assert_eq!(
+        promoted.output_of(&stream_req(&input[30..])),
+        want[30..],
+        "replica state diverged after torn-frame rounds"
+    );
+
+    // teardown: drain the primary first (stops the pusher), then the
+    // replica
+    victim.drain();
+    drop(victim);
+    drop(reference);
+    primary.join().unwrap();
+    promoted.drain();
+    drop(promoted);
+    replica.join().unwrap();
 }

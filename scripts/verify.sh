@@ -6,14 +6,15 @@
 # kernels must stay bit-identical), the chaos suite under
 # `--features fault-inject` (deterministic sweeper panics, forced short
 # writes, budget exhaustion, EMFILE accept storms, live-migration
-# panics, standby promotion after a primary SIGKILL, and forced
-# deadline/admission refusals — every degradation must be a typed
-# error, never a hang), and the quick reservoir bench (precision-
-# ladder, sharded-serving, event-loop wire, fused/online training, the
-# PR6 checkpoint/restore + failover-storm rows, and the PR7 lane-
-# mobility rows: migration latency, standby delta round trips, and the
-# skewed-load rebalance storm), persisting the machine-readable perf
-# snapshot as BENCH_pr7.json at the repo root — the committed
+# panics, standby promotion after a primary SIGKILL, cluster failover
+# with SIGKILLed group members and `moved` redirects, torn standby
+# delta frames, and forced deadline/admission refusals — every
+# degradation must be a typed error, never a hang), and the quick
+# reservoir bench (precision-ladder, sharded-serving, event-loop wire,
+# fused/online training, the PR6 checkpoint/restore + failover-storm
+# rows, the PR7 lane-mobility rows, and the PR8 cluster-failover storm:
+# kill → detect → promote → redirect), persisting the machine-readable
+# perf snapshot as BENCH_pr8.json at the repo root — the committed
 # perf-trajectory artifact (BENCH_reservoir_run.json is kept as an
 # uncommitted working copy for tooling that greps the legacy name).
 # Fails if the precision, sharding, event-loop, training,
@@ -34,18 +35,18 @@ cargo test -q --features plain-kernel --lib reservoir::batch
 echo "== cargo test -q --features fault-inject --test chaos (chaos suite) =="
 cargo test -q --features fault-inject --test chaos
 
-echo "== cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr7.json =="
+echo "== cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr8.json =="
 # fault-inject makes the failover-storm row use REAL contained sweeper
 # panics (without it the row still exists via teardown/reconnect cycles)
-cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr7.json
-cp BENCH_pr7.json BENCH_reservoir_run.json
+cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr8.json
+cp BENCH_pr8.json BENCH_reservoir_run.json
 
 echo "== bench sanity: precision/sharded/evloop/training/failover rows present, finite, non-zero =="
 if command -v python3 >/dev/null 2>&1; then
   python3 - <<'EOF'
 import json, math, sys
 
-doc = json.load(open("BENCH_pr7.json"))
+doc = json.load(open("BENCH_pr8.json"))
 rows = {r.get("name"): r for r in doc.get("results", [])}
 required = [
     "f32_batch8_N1000", "f64_batch8_N1000",
@@ -60,6 +61,7 @@ required = [
     "train_online_wire_N1000", "derived_train_N1000",
     "checkpoint_restore_N1000", "derived_failover_N1000",
     "migrate_lane_N1000", "standby_delta_N1000", "derived_rebalance_N1000",
+    "failover_cluster_N1000",
 ]
 for name in required:
     if name not in rows:
@@ -102,6 +104,10 @@ print(f"  mobility: migrate {mig['median_s']:.3e}s, "
       f"standby delta {delta['median_s']:.3e}s, "
       f"rebalance storm {d['storm_steps_per_sec']:.3e} steps/s "
       f"({int(d['lanes_migrated'])} lane move(s))")
+d = rows["failover_cluster_N1000"]
+print(f"  cluster: failover storm {d['storm_steps_per_sec']:.3e} steps/s, "
+      f"outage {d['outage_ms']:.1f}ms "
+      f"({int(d['lanes_promoted'])} lane(s) promoted via redirects)")
 print("bench rows OK")
 EOF
 else
@@ -116,17 +122,17 @@ else
              train_online_wire_N1000 derived_train_N1000 \
              checkpoint_restore_N1000 derived_failover_N1000 \
              migrate_lane_N1000 standby_delta_N1000 \
-             derived_rebalance_N1000; do
-    grep -q "\"$row\"" BENCH_pr7.json \
+             derived_rebalance_N1000 failover_cluster_N1000; do
+    grep -q "\"$row\"" BENCH_pr8.json \
       || { echo "FAIL: missing bench row $row"; exit 1; }
   done
-  if grep -qiE '(nan|inf)' BENCH_pr7.json; then
-    echo "FAIL: non-finite value in BENCH_pr7.json"; exit 1
+  if grep -qiE '(nan|inf)' BENCH_pr8.json; then
+    echo "FAIL: non-finite value in BENCH_pr8.json"; exit 1
   fi
   # the JSON writer prints integral values without decimals, so a zero
   # throughput is exactly `0` before the comma/EOL (0.97 must NOT match)
-  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr7.json; then
-    echo "FAIL: zero throughput row in BENCH_pr7.json"; exit 1
+  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr8.json; then
+    echo "FAIL: zero throughput row in BENCH_pr8.json"; exit 1
   fi
   echo "bench rows OK (grep fallback)"
 fi
