@@ -29,7 +29,8 @@ use linear_reservoir::reservoir::{
 };
 use linear_reservoir::rng::Pcg64;
 use linear_reservoir::server::{
-    serve_on, serve_on_opts, Client, Model, ServeOpts, ShardedFront,
+    serve_on, serve_on_opts, Client, Model, ModelRecipe, ModelRegistry,
+    ServeOpts, ShardedFront,
 };
 use linear_reservoir::spectral::uniform::uniform_spectrum;
 use linear_reservoir::util::json::Json;
@@ -212,6 +213,7 @@ fn main() {
     // single-core by design, so aggregate steps/sec should scale with
     // shard count until the cores (or memory bandwidth) run out; on a
     // 1-vCPU container the rows still exist but the scaling is ≈1x.
+    let mut sharded1_sps = f64::NAN;
     {
         let n = 1000;
         let bsz = 64usize;
@@ -252,6 +254,7 @@ fn main() {
             sps.push(shard_sps);
         }
         let base = sps[0];
+        sharded1_sps = base;
         println!(
             "  scaling: 2 shards {:.2}x, 4 shards {:.2}x (vs 1 shard)\n",
             sps[1] / base,
@@ -270,6 +273,121 @@ fn main() {
             ("sharded4_steps_per_sec", Json::Num(sps[2])),
             ("speedup_2_shards", Json::Num(sps[1] / base)),
             ("speedup_4_shards", Json::Num(sps[2] / base)),
+        ]));
+    }
+
+    // --- multi-tenant registry serving ----------------------------------
+    // `create_model_N1000`: registry mint throughput (models/sec). One
+    // iteration mints a batch of DISTINCT N=1000 recipes through the
+    // registry and deletes them again, so the table never grows across
+    // iterations (a delete is a map remove; the DPG mint dominates).
+    // `tenant128_batch64_N1000`: 128 distinct registered models served
+    // by ONE sweeper — bursts of 64 concurrent `predict_async_model`
+    // requests fan out over the whole tenant set, so every sweep is a
+    // per-model-grouped masked sweep. The derived ratio against
+    // `sharded1_batch64_N1000` (same B, same N, one model) prices model
+    // diversity itself: lost coalescing, per-model engine checkout.
+    {
+        let n = 1000;
+        println!("multi-tenant registry, N = {n}");
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(11, 113);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let base_model = Arc::new(Model::new(diag, readout));
+
+        let registry = ModelRegistry::new(Arc::clone(&base_model), usize::MAX);
+        let mint_batch = 32usize;
+        let r = bench(&format!("create_model_N{n}"), cfg, || {
+            let ids: Vec<_> = (0..mint_batch)
+                .map(|i| {
+                    let recipe =
+                        ModelRecipe::new(1000 + i as u64, n, 0.9, "uniform")
+                            .unwrap();
+                    registry.create(&recipe).expect("unlimited budget").0
+                })
+                .collect();
+            for id in ids {
+                registry.delete(id).unwrap();
+            }
+        });
+        push(&mut rows, &r);
+        let models_per_sec = mint_batch as f64 / r.per_iter.median;
+        println!("  create_model: {models_per_sec:.3e} models/s");
+
+        let tenants = 128usize;
+        let bsz = 64usize;
+        let registry =
+            Arc::new(ModelRegistry::new(Arc::clone(&base_model), tenants));
+        let ids: Vec<_> = (0..tenants)
+            .map(|i| {
+                let recipe =
+                    ModelRecipe::new(2000 + i as u64, n, 0.9, "uniform")
+                        .unwrap();
+                registry.create(&recipe).unwrap().0
+            })
+            .collect();
+        let front = ShardedFront::start_registry(
+            Arc::clone(&base_model),
+            Some(registry),
+            1,
+            0,
+            usize::MAX,
+            false,
+        );
+        let inputs: Vec<Vec<f64>> = (0..bsz)
+            .map(|_| Mat::randn(t_len, 1, &mut rng).data().to_vec())
+            .collect();
+        let r = bench(&format!("tenant{tenants}_batch{bsz}_N{n}"), cfg, || {
+            // two waves of B=64 cover all 128 tenants per iteration;
+            // every request names a different model, so each sweep is
+            // maximally mixed
+            for wave in 0..2 {
+                let replies: Vec<_> = inputs
+                    .iter()
+                    .enumerate()
+                    .map(|(j, i)| {
+                        front
+                            .shard(0)
+                            .predict_async_model(
+                                ids[wave * bsz + j],
+                                i.clone(),
+                            )
+                            .expect("sweeper alive")
+                    })
+                    .collect();
+                for rx in replies {
+                    std::hint::black_box(rx.recv().unwrap());
+                }
+            }
+        });
+        front.shutdown();
+        push(&mut rows, &r);
+        let steps = (tenants * t_len) as f64;
+        let tenant_sps = steps / r.per_iter.median;
+        println!(
+            "  tenant{tenants}: {:.3e} aggregate steps/s — {:.2}x of the \
+             single-model shard\n",
+            tenant_sps,
+            tenant_sps / sharded1_sps
+        );
+        rows.push(Json::obj(vec![
+            (
+                "name",
+                Json::Str(format!("derived_tenant{tenants}_batch{bsz}_N{n}")),
+            ),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("tenants", Json::Num(tenants as f64)),
+            ("batch", Json::Num(bsz as f64)),
+            ("t", Json::Num(t_len as f64)),
+            ("create_models_per_sec", Json::Num(models_per_sec)),
+            ("tenant_steps_per_sec", Json::Num(tenant_sps)),
+            ("single_model_steps_per_sec", Json::Num(sharded1_sps)),
+            ("ratio_vs_single_model", Json::Num(tenant_sps / sharded1_sps)),
         ]));
     }
 

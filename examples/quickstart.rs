@@ -214,5 +214,35 @@ fn main() -> anyhow::Result<()> {
     //
     //     DESIGN.md §12 has the ring, the detector thresholds, and the
     //     failover sequence.
+
+    // 14. MULTI-TENANT: mint private reservoirs over the wire. Because
+    //     DPG samples the spectrum directly, a model IS its recipe —
+    //     `create_model` re-mints bit-identical planes from four numbers
+    //     on any node (same seed ⇒ same model; the returned id is the
+    //     content hash of the recipe, so re-creating is idempotent).
+    //     Against a running `repro serve [--max-models K] [--pin-cores]`:
+    //
+    //       T1: {"op":"create_model","seed":7,"n":200}
+    //             ← {"ok":true,"model":A,"created":true}
+    //       T2: {"op":"create_model","seed":8,"n":200,
+    //            "lambda_prior":"ring"}
+    //             ← {"ok":true,"model":B,"created":true}
+    //       T1: {"op":"stream","model":A,"input":[u…]} ← tenant-A lanes
+    //       T2: {"op":"stream","model":B,"input":[u…]} ← tenant-B lanes
+    //         (first model-bearing op binds the connection — sticky;
+    //          untrained tenants answer exact zeros until you
+    //          `train`+`commit` them online, §10-style, against their
+    //          OWN planes)
+    //       {"op":"info"} ← …,"model":A,"models":2,
+    //                       "model_lanes":{"A":1,"B":1},…
+    //
+    //     Both tenants (and the base model) ride ONE masked diagonal
+    //     sweep per shard — the sweeper groups lanes by model, so 128
+    //     tenants cost one pass, not 128 (bench row
+    //     `tenant128_batch64_N1000`). `delete_model` expires the lease:
+    //     bound lanes finish, new binds answer typed `unknown_model`;
+    //     over-budget creates answer `model_budget` with nothing
+    //     allocated. In-process: `Client::create_model`/`delete_model`.
+    //     DESIGN.md §13 has the recipe/identity/grouping contract.
     Ok(())
 }

@@ -159,6 +159,22 @@ mod tests {
     }
 
     #[test]
+    fn registry_serve_flags_parse() {
+        // the PR-9 serving surface: --max-models caps the tenant
+        // registry, --pin-cores is a bare flag
+        let a = parse("serve --max-models 64 --pin-cores").unwrap();
+        assert_eq!(a.get_opt_u64("max-models").unwrap(), Some(64));
+        assert!(a.flag("pin-cores"));
+        let b = parse("serve").unwrap();
+        assert_eq!(b.get_opt_u64("max-models").unwrap(), None);
+        assert!(!b.flag("pin-cores"));
+        // 0 is legal (registry disabled, base model only) and distinct
+        // from absent (server default budget)
+        let c = parse("serve --max-models 0").unwrap();
+        assert_eq!(c.get_opt_u64("max-models").unwrap(), Some(0));
+    }
+
+    #[test]
     fn optional_u64_distinguishes_absent_from_zero() {
         let a = parse("serve --trainer-budget-mb 0").unwrap();
         assert_eq!(a.get_opt_u64("trainer-budget-mb").unwrap(), Some(0));

@@ -31,6 +31,10 @@
 //!              [--ping-interval-ms 50]  # gossip liveness cadence
 //!              [--holdoff-auto]  # derive the coalescing window from
 //!                                # arrival EWMA (cap = --holdoff-us)
+//!              [--max-models 256]  # per-tenant model registry budget
+//!                                  # (0 = base model only)
+//!              [--pin-cores]  # pin each shard's sweeper thread to a
+//!                             # core (round-robin sched_setaffinity)
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -304,6 +308,15 @@ fn dispatch(args: &Args) -> Result<()> {
             // --holdoff-auto: autotune each shard's coalescing window
             // from its inter-arrival EWMA (idle shards pay zero)
             let holdoff_auto = args.flag("holdoff-auto");
+            // --max-models: tenant registry budget for wire-minted
+            // models (absent = server default; 0 = base model only,
+            // every create_model answers `model_budget`)
+            let max_models =
+                args.get_opt_u64("max-models")?.map(|m| m as usize);
+            // --pin-cores: pin each shard's sweeper to core (i mod
+            // cores) so NUMA-local planes stay local; reported per
+            // shard as `pinned_cores` in `info`
+            let pin_cores = args.flag("pin-cores");
             let listener = std::net::TcpListener::bind(addr)?;
             let bound = listener.local_addr()?;
             // the timer wheel lives in the event loop; on the threaded
@@ -311,7 +324,7 @@ fn dispatch(args: &Args) -> Result<()> {
             // say so instead of printing it as active
             let event_loop = !threaded && cfg!(target_os = "linux");
             println!(
-                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs{}, shards {}, idle-timeout {}, trainer-budget {}, rebalance {}, standby {}, drain-checkpoint {}, peers {}, {}) on {bound} …",
+                "serving MSO{k} model (N={n}, {}, holdoff {holdoff_us}µs{}, shards {}, idle-timeout {}, trainer-budget {}, rebalance {}, standby {}, drain-checkpoint {}, peers {}, max-models {}, pin-cores {}, {}) on {bound} …",
                 precision.name(),
                 if holdoff_auto { " (auto)" } else { "" },
                 match shards {
@@ -341,6 +354,11 @@ fn dispatch(args: &Args) -> Result<()> {
                     Some(p) => p.clone(),
                     None => "none".into(),
                 },
+                match max_models {
+                    Some(m) => m.to_string(),
+                    None => "default".into(),
+                },
+                if pin_cores { "on" } else { "off" },
                 if event_loop {
                     "epoll event loop"
                 } else {
@@ -365,6 +383,8 @@ fn dispatch(args: &Args) -> Result<()> {
                     advertise,
                     ping_interval_ms,
                     holdoff_auto,
+                    max_models,
+                    pin_cores,
                     // operator-facing binary: SIGTERM means "drain, don't
                     // drop" (library embedders opt in via ServeOpts)
                     drain_on_sigterm: true,

@@ -503,6 +503,25 @@ impl<S: Scalar> BatchEsn<S> {
         (&self.re, &self.im)
     }
 
+    /// Resident bytes of this engine's parameter, state, and scratch
+    /// planes — the marginal cost one more engine adds to a shard. The
+    /// multi-tenant registry sizes per-model hubs with this (DESIGN.md
+    /// §13): parameter planes scale with `N`, state planes with
+    /// `N × bpad`, so a thousand single-lane tenants cost far less than
+    /// a thousand full-width hubs would.
+    pub fn plane_bytes(&self) -> usize {
+        let s = std::mem::size_of::<S>();
+        (self.lam_re.len()
+            + self.lam_im.len()
+            + self.win_re.len()
+            + self.win_im.len()
+            + self.re.len()
+            + self.im.len()
+            + self.u_pad.len())
+            * s
+            + self.mask_pad.len()
+    }
+
     /// Zero every lane.
     pub fn reset(&mut self) {
         self.re.fill(S::ZERO);
@@ -964,6 +983,22 @@ mod tests {
                 "lane {lane} diverged from its sequential run"
             );
         }
+    }
+
+    #[test]
+    fn plane_bytes_tracks_width_and_precision() {
+        let q = qbasis(30, 1, 9);
+        // one slot-block of lanes: the smallest engine
+        let one = BatchEsn::new(q.clone(), 1).plane_bytes();
+        assert!(one > 0);
+        // same padded width ⇒ same planes ⇒ same bytes
+        assert_eq!(BatchEsn::new(q.clone(), 8).plane_bytes(), one);
+        // a wider engine grows only its state/scratch planes
+        let wide = BatchEsn::new(q.clone(), 64).plane_bytes();
+        assert!(wide > one);
+        // f32 lanes halve every scalar plane, so the engine must shrink
+        let one_f32 = BatchEsn::<f32>::with_precision(q, 1).plane_bytes();
+        assert!(one_f32 < one);
     }
 
     #[test]

@@ -35,6 +35,18 @@
 //! `migrate_in` adopt promotes the parked lane there — chaos-proven
 //! bit-identical against a SIGKILLed real process in
 //! `rust/tests/chaos.rs`.
+//!
+//! **Tenant models need no transfer at all.** A registry entry
+//! (`server/registry.rs`) is a pure function of its recipe —
+//! `(seed, n, spectral_radius, lambda_prior)` drive a dedicated PCG
+//! stream, so `create_model` mints bit-identical `(Λ, [W_in]_Q)` planes
+//! on every node, and the model id is itself a hash of the recipe. A
+//! client redirected by `moved` (or failing over after a node death)
+//! simply re-issues the same `create_model` at the new owner: the
+//! idempotent create re-mints the identical model in microseconds, and
+//! the lane STATE — the only per-tenant bytes the recipe cannot
+//! regenerate — rides the existing checkpoint/standby machinery
+//! unchanged.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};

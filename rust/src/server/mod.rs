@@ -100,11 +100,16 @@ mod front;
 #[cfg(target_os = "linux")]
 mod poll;
 mod pool;
+mod registry;
 mod shard;
 mod wire;
 
 pub use cluster::ClusterState;
 pub use front::{BatchFront, LaneSnapshot, Reply};
+pub use registry::{
+    mint_esn, mint_model, LambdaPrior, ModelId, ModelRecipe, ModelRegistry,
+    RegistryError, BASE_MODEL, MAX_TENANT_N,
+};
 pub use shard::{LaneBinding, ShardedFront};
 pub use wire::{
     is_retryable_code, serve, serve_on, serve_on_opts, serve_sharded,

@@ -66,10 +66,12 @@ use anyhow::{anyhow, Result};
 use crate::util::json::Json;
 
 use super::front::{Completion, CompletionQueue, EventReply, Reply, ReplySender};
+use super::registry::{ModelId, BASE_MODEL};
 use super::shard::{LaneBinding, ShardedFront};
 use super::wire::{
-    checkpoint_response, coded_error, error_response, fallback_key,
-    guard_streamable, guard_train_rows, handle_migrate, handle_migrate_in,
+    bind_conn_model, checkpoint_response, coded_error, error_response,
+    fallback_key, guard_streamable, guard_train_rows, handle_create_model,
+    handle_delete_model, handle_migrate, handle_migrate_in,
     hub_full_train_error, info_response, ip_key, no_lane_error,
     nothing_to_commit_error, ok_response, ownership_guard, parse_op,
     pong_response, predict_response, stream_fallback, stream_response,
@@ -297,6 +299,10 @@ enum PendingKind {
     /// the direct same-precision `Model::predict`, exactly like
     /// `BatchFront::predict` does on the threaded path.
     Predict {
+        /// Model the request was stamped with at submit — the dropped-
+        /// completion fallback must compute with THIS model's planes,
+        /// not the base model's.
+        model: ModelId,
         input: Arc<Vec<f64>>,
         queued_at: Instant,
     },
@@ -790,17 +796,19 @@ impl EventLoop {
     /// op for op, with event replies instead of blocking channels. Takes
     /// the already-parsed `Result<(Op, deadline budget)>` so the caller
     /// can parse while the read buffer is still borrowed (no per-line
-    /// copy). Lane ops resolve the binding's CURRENT home under its lock
+    /// copy); the third tuple slot is the optional wire `"model"` field,
+    /// applied to the connection's sticky binding before dispatch. Lane
+    /// ops resolve the binding's CURRENT home under its lock
     /// ([`ShardedFront::with_binding`]), so a submission serializes with
     /// live migration exactly like the threaded path's sync calls.
     fn dispatch(
         &mut self,
         conn: &mut Conn,
         id: u64,
-        op: Result<(Op, Option<Duration>)>,
+        op: Result<(Op, Option<Duration>, Option<ModelId>)>,
     ) {
         let front = Arc::clone(&self.front);
-        let (op, budget) = match op {
+        let (op, budget, wire_model) = match op {
             Ok(parsed) => parsed,
             Err(e) => {
                 conn.slots.push_back(Slot::Ready(error_response(&e)));
@@ -810,6 +818,13 @@ impl EventLoop {
         // cluster ownership: answered synchronously (like the threaded
         // path's early return) so a redirected client never queues work
         if let Some(e) = ownership_guard(&front, conn.state.key, &op) {
+            conn.slots.push_back(Slot::Ready(error_response(&e)));
+            return;
+        }
+        // sticky model binding: same contract as the threaded path —
+        // first model-bearing op binds the connection, conflicts and
+        // unknown ids are refused before any work queues
+        if let Err(e) = bind_conn_model(&front, &mut conn.state, wire_model) {
             conn.slots.push_back(Slot::Ready(error_response(&e)));
             return;
         }
@@ -831,18 +846,28 @@ impl EventLoop {
                 conn.slots.push_back(Slot::Waiting {
                     token,
                     kind: PendingKind::Predict {
+                        model: conn.state.model,
                         input: Arc::clone(&input),
                         queued_at: Instant::now(),
                     },
                 });
                 // stateless: dealt to the least-loaded shard; a refused
                 // job still resolves through its Dropped completion
-                front.submit_predict_dealt_deadline(input, reply, deadline);
+                front.submit_predict_dealt_model(
+                    conn.state.model,
+                    input,
+                    reply,
+                    deadline,
+                );
             }
             Op::Stream(input) => {
-                if let Err(e) = guard_streamable(front.model()) {
-                    conn.slots.push_back(Slot::Ready(error_response(&e)));
-                    return;
+                // minted tenants are always single-output reservoirs;
+                // the multi-output guard applies to the base model only
+                if conn.state.model == BASE_MODEL {
+                    if let Err(e) = guard_streamable(front.model()) {
+                        conn.slots.push_back(Slot::Ready(error_response(&e)));
+                        return;
+                    }
                 }
                 try_acquire_lane(&front, &mut conn.state);
                 match conn.state.binding.clone() {
@@ -857,6 +882,16 @@ impl EventLoop {
                         });
                         b.mark_dirty();
                     }
+                    None if conn.state.model != BASE_MODEL => {
+                        // the local fallback is built from the BASE
+                        // model's planes — serving a tenant from it
+                        // would silently answer with the wrong model.
+                        // Typed refusal instead (same as the threaded
+                        // path).
+                        conn.slots.push_back(Slot::Ready(error_response(
+                            &coded_error("hub_full"),
+                        )));
+                    }
                     None => {
                         // hub full: connection-local fallback, inline on
                         // the poll thread (same bits as a hub lane)
@@ -867,9 +902,29 @@ impl EventLoop {
                 }
             }
             Op::Train { input, target } => {
-                if let Err(e) = guard_streamable(front.model())
-                    .and_then(|()| guard_train_rows(front.model(), input.len()))
-                {
+                // the row cap is a property of the model being trained:
+                // resolve the tenant's own reservoir for the check
+                let cap_model = if conn.state.model == BASE_MODEL {
+                    if let Err(e) = guard_streamable(front.model()) {
+                        conn.slots.push_back(Slot::Ready(error_response(&e)));
+                        return;
+                    }
+                    Arc::clone(front.model())
+                } else {
+                    match front
+                        .registry()
+                        .and_then(|r| r.get(conn.state.model))
+                    {
+                        Some(m) => m,
+                        None => {
+                            conn.slots.push_back(Slot::Ready(error_response(
+                                &coded_error("unknown_model"),
+                            )));
+                            return;
+                        }
+                    }
+                };
+                if let Err(e) = guard_train_rows(&cap_model, input.len()) {
                     conn.slots.push_back(Slot::Ready(error_response(&e)));
                     return;
                 }
@@ -942,9 +997,11 @@ impl EventLoop {
                 ))),
             },
             Op::Restore(snap) => {
-                if let Err(e) = guard_streamable(front.model()) {
-                    conn.slots.push_back(Slot::Ready(error_response(&e)));
-                    return;
+                if conn.state.model == BASE_MODEL {
+                    if let Err(e) = guard_streamable(front.model()) {
+                        conn.slots.push_back(Slot::Ready(error_response(&e)));
+                        return;
+                    }
                 }
                 // a restore adopts (or acquires) this connection's hub
                 // lane — the migration / failover entry point, so it may
@@ -1003,6 +1060,23 @@ impl EventLoop {
                     snap,
                     deadline,
                 ) {
+                    Ok(j) => j,
+                    Err(e) => error_response(&e),
+                };
+                conn.slots.push_back(Slot::Ready(json));
+            }
+            // registry ops are process-global and lock-bounded (a mint
+            // is one DPG sample, microseconds at serving sizes):
+            // answered synchronously like migration
+            Op::CreateModel { recipe } => {
+                let json = match handle_create_model(&front, &recipe) {
+                    Ok(j) => j,
+                    Err(e) => error_response(&e),
+                };
+                conn.slots.push_back(Slot::Ready(json));
+            }
+            Op::DeleteModel { model } => {
+                let json = match handle_delete_model(&front, model) {
                     Ok(j) => j,
                     Err(e) => error_response(&e),
                 };
@@ -1273,7 +1347,7 @@ fn resolve_slot(
     }
     let json = match (kind, completion) {
         (
-            PendingKind::Predict { input, queued_at },
+            PendingKind::Predict { input, queued_at, .. },
             Completion::Done(Reply::Vals(out)),
         ) => predict_response(out, input.len(), queued_at.elapsed().as_secs_f64()),
         // typed sweeper refusal (lane_poisoned, trainer_budget,
@@ -1286,13 +1360,25 @@ fn resolve_slot(
         (_, Completion::Done(Reply::Err(code))) => {
             error_response(&coded_error(code))
         }
-        (PendingKind::Predict { input, queued_at }, _) => {
+        (PendingKind::Predict { model, input, queued_at }, _) => {
             // sweeper gone (job dropped): direct same-precision
             // computation, just like BatchFront::predict's fallback —
-            // still identical bits on the wire
-            let steps = input.len();
-            let out = front.model().predict(input);
-            predict_response(out, steps, queued_at.elapsed().as_secs_f64())
+            // still identical bits on the wire. The stamped model picks
+            // the planes; a tenant deleted mid-flight gets the typed
+            // refusal, never the base model's answer
+            let resolved = if model == BASE_MODEL {
+                Some(Arc::clone(front.model()))
+            } else {
+                front.registry().and_then(|r| r.get(model))
+            };
+            match resolved {
+                Some(m) => {
+                    let steps = input.len();
+                    let out = m.predict(input);
+                    predict_response(out, steps, queued_at.elapsed().as_secs_f64())
+                }
+                None => error_response(&coded_error("unknown_model")),
+            }
         }
         (PendingKind::Stream, Completion::Done(Reply::Vals(outs))) => {
             stream_response(outs)

@@ -1,4 +1,4 @@
-//! Pooled stateless predict engines, keyed by chunk size.
+//! Pooled stateless predict engines, keyed by `(model, chunk width)`.
 //!
 //! Every coalesced predict chunk used to construct a fresh precision-
 //! matched [`super::front::Hub`] — a clone of the `(Λ, [W_in]_Q)`
@@ -6,9 +6,15 @@
 //! allocations, paid per chunk on the hot path. Chunk sizes repeat
 //! heavily in steady state (bounded by `MAX_PREDICT_BATCH`, and under
 //! load almost always exactly `MAX_PREDICT_BATCH` or the queue
-//! remainder), so the sweeper keeps one engine per chunk size it has
-//! seen and re-issues it after a lane reset — `O(slots × B⁺)` zeroing
-//! instead of construction.
+//! remainder), so the sweeper keeps one engine per `(model, width)` it
+//! has seen and re-issues it after a lane reset — `O(slots × B⁺)`
+//! zeroing instead of construction.
+//!
+//! **Model keying is a correctness requirement, not a cache policy**:
+//! a width-only key would hand tenant B's coalesced predicts an engine
+//! carrying tenant A's `(Λ, [W_in]_Q)` planes the moment two models'
+//! chunks share a width. The key's model half routes every chunk to an
+//! engine built from ITS model's planes (regression-tested below).
 //!
 //! The pool is owned by the sweeper thread (one per shard): no locks,
 //! no sharing. Statelessness is preserved by construction: an engine is
@@ -16,14 +22,15 @@
 //! freshly built engine (tested in `front.rs` and implied by every
 //! bit-identity test that routes predicts through the front).
 //!
-//! Keys are **bucketed to the padded lane width**: `BatchEsn` pads its
-//! lane count up to `Scalar::LANES` anyway (8 at f64, 16 at f32), so an
-//! engine built for `k` lanes and one built for `⌈k/LANES⌉·LANES` lanes
-//! have byte-identical planes and do byte-identical work — and lane
-//! results are independent of batch size and position (a tested engine
-//! property), so serving a k-request chunk from the bucket-width engine
-//! is bit-identical to a k-width engine. One engine per bucket (4 at
-//! f64, 2 at f32 with the 32-predict cap) instead of one per chunk size.
+//! Width keys are **bucketed to the padded lane width**: `BatchEsn` pads
+//! its lane count up to `Scalar::LANES` anyway (8 at f64, 16 at f32), so
+//! an engine built for `k` lanes and one built for `⌈k/LANES⌉·LANES`
+//! lanes have byte-identical planes and do byte-identical work — and
+//! lane results are independent of batch size and position (a tested
+//! engine property), so serving a k-request chunk from the bucket-width
+//! engine is bit-identical to a k-width engine. One engine per
+//! `(model, bucket)` (≤ 4 buckets at f64, ≤ 2 at f32 with the
+//! 32-predict cap) instead of one per chunk size.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -31,20 +38,30 @@ use std::sync::Arc;
 use crate::num::Scalar;
 
 use super::front::Hub;
+use super::registry::{ModelId, ModelRegistry, BASE_MODEL};
 use super::{Model, Precision};
 
-/// Per-sweeper cache of stateless predict engines, keyed by the padded
-/// lane-width bucket.
+/// Per-sweeper cache of stateless predict engines, keyed by
+/// `(model, padded lane-width bucket)`.
 pub(crate) struct EnginePool {
-    model: Arc<Model>,
-    engines: HashMap<usize, Hub>,
+    base: Arc<Model>,
+    registry: Option<Arc<ModelRegistry>>,
+    /// Per-model `Arc<Model>` resolved from the registry once, so
+    /// repeated chunks for a warm model skip the registry lock.
+    models: HashMap<ModelId, Arc<Model>>,
+    engines: HashMap<(ModelId, usize), Hub>,
     built: u64,
 }
 
 impl EnginePool {
-    pub(crate) fn new(model: Arc<Model>) -> Self {
+    pub(crate) fn new(
+        base: Arc<Model>,
+        registry: Option<Arc<ModelRegistry>>,
+    ) -> Self {
         Self {
-            model,
+            base,
+            registry,
+            models: HashMap::new(),
             engines: HashMap::new(),
             built: 0,
         }
@@ -52,31 +69,72 @@ impl EnginePool {
 
     /// `lanes` rounded up to the model precision's padded lane width —
     /// the engine size `BatchEsn` would pad to internally anyway.
-    fn bucket(&self, lanes: usize) -> usize {
-        let w = match self.model.precision {
+    fn bucket(precision: Precision, lanes: usize) -> usize {
+        let w = match precision {
             Precision::F64 => <f64 as Scalar>::LANES,
             Precision::F32 => <f32 as Scalar>::LANES,
         };
         lanes.div_ceil(w) * w
     }
 
-    /// Check out a pooled engine with at least `lanes` lanes (exactly the
-    /// bucket width), building it on first use. The engine comes back
-    /// zeroed, so callers see fresh-construction semantics either way;
-    /// lanes beyond the caller's chunk stay zero and unobservable.
-    pub(crate) fn get(&mut self, lanes: usize) -> &mut Hub {
+    /// The model behind an id: the base model for [`BASE_MODEL`], else
+    /// the pool's cached resolution of the registry entry. `None` =
+    /// unknown model (never minted, or deleted since submission).
+    fn model_for(&mut self, model: ModelId) -> Option<Arc<Model>> {
+        if model == BASE_MODEL {
+            return Some(Arc::clone(&self.base));
+        }
+        if let Some(m) = self.models.get(&model) {
+            return Some(Arc::clone(m));
+        }
+        let m = self.registry.as_ref()?.get(model)?;
+        self.models.insert(model, Arc::clone(&m));
+        Some(m)
+    }
+
+    /// Check out a pooled engine for `model` with at least `lanes` lanes
+    /// (exactly the bucket width), building it from that model's planes
+    /// on first use. The engine comes back zeroed, so callers see
+    /// fresh-construction semantics either way; lanes beyond the
+    /// caller's chunk stay zero and unobservable. `None` when the model
+    /// is not (or no longer) in the registry — the caller answers the
+    /// typed `unknown_model`.
+    pub(crate) fn get(
+        &mut self,
+        model: ModelId,
+        lanes: usize,
+    ) -> Option<&mut Hub> {
         use std::collections::hash_map::Entry;
-        let bucket = self.bucket(lanes);
-        let hub = match self.engines.entry(bucket) {
+        let m = self.model_for(model)?;
+        let bucket = Self::bucket(m.precision, lanes);
+        let hub = match self.engines.entry((model, bucket)) {
             Entry::Occupied(e) => e.into_mut(),
             Entry::Vacant(v) => {
                 self.built += 1;
                 // pooled predict engines never train, so no budget
-                v.insert(Hub::new(&self.model, bucket, usize::MAX))
+                v.insert(Hub::new(&m, bucket, usize::MAX))
             }
         };
         hub.reset();
-        hub
+        Some(hub)
+    }
+
+    /// Drop cached engines (and model resolutions) for models deleted
+    /// from the registry — engines are stateless, so dropping one costs
+    /// only a rebuild if the id comes back. No-op with no tenant
+    /// entries: the zero-tenant path never takes the registry lock.
+    pub(crate) fn prune(&mut self) {
+        if self.models.is_empty() {
+            return;
+        }
+        let Some(reg) = self.registry.as_ref() else {
+            return;
+        };
+        let live = reg.ids();
+        self.models.retain(|id, _| live.binary_search(id).is_ok());
+        self.engines.retain(|(id, _), _| {
+            *id == BASE_MODEL || live.binary_search(id).is_ok()
+        });
     }
 
     /// Distinct engines constructed so far (metrics: flat once warm).
@@ -87,6 +145,7 @@ impl EnginePool {
 
 #[cfg(test)]
 mod tests {
+    use super::super::registry::ModelRecipe;
     use super::super::testutil::make_model;
     use super::*;
 
@@ -94,15 +153,25 @@ mod tests {
     fn pool_builds_once_per_bucket_and_resets_state() {
         // f64 model → bucket width 8: chunk sizes 1..=8 share one engine
         let model = Arc::new(make_model());
-        let mut pool = EnginePool::new(Arc::clone(&model));
+        let mut pool = EnginePool::new(Arc::clone(&model), None);
         let input: Vec<f64> = (0..20).map(|t| (t as f64 * 0.1).sin()).collect();
 
         let reqs: [(usize, &[f64]); 2] =
             [(0, input.as_slice()), (1, input.as_slice())];
-        let first = pool.get(2).sweep_streams(&reqs).pop().unwrap();
+        let first = pool
+            .get(BASE_MODEL, 2)
+            .unwrap()
+            .sweep_streams(&reqs)
+            .pop()
+            .unwrap();
         assert_eq!(pool.built(), 1);
         // same bucket → reused engine, zeroed on checkout: identical
-        let again = pool.get(2).sweep_streams(&reqs).pop().unwrap();
+        let again = pool
+            .get(BASE_MODEL, 2)
+            .unwrap()
+            .sweep_streams(&reqs)
+            .pop()
+            .unwrap();
         assert_eq!(pool.built(), 1, "chunk size 2 must not rebuild");
         assert_eq!(first, again, "pooled engine must be stateless");
         // bit-identity across bucket sharing: the engine is batch-size
@@ -111,13 +180,68 @@ mod tests {
         let direct = model.predict(&input);
         assert_eq!(first, direct, "bucketed sweep must match Model::predict");
         // chunk size 5 lands in the same 8-wide bucket: no rebuild
-        let _ = pool.get(5);
+        let _ = pool.get(BASE_MODEL, 5);
         assert_eq!(pool.built(), 1, "sizes 1..=8 share the f64 bucket");
         // size 9 crosses into the next bucket
-        let _ = pool.get(9);
+        let _ = pool.get(BASE_MODEL, 9);
         assert_eq!(pool.built(), 2);
         // and the original bucket is still cached
-        let _ = pool.get(8);
+        let _ = pool.get(BASE_MODEL, 8);
         assert_eq!(pool.built(), 2);
+    }
+
+    #[test]
+    fn two_tenants_never_share_an_engine() {
+        // the model-blindness regression: same chunk width, different
+        // models — a width-only key would serve tenant B from tenant A's
+        // planes. Two single-tenant pools are the ground truth.
+        let base = Arc::new(make_model());
+        let registry = Arc::new(ModelRegistry::new(Arc::clone(&base), 8));
+        let ra = ModelRecipe::new(11, 40, 0.8, "uniform").unwrap();
+        let rb = ModelRecipe::new(22, 40, 0.8, "uniform").unwrap();
+        let (a, _) = registry.create(&ra).unwrap();
+        let (b, _) = registry.create(&rb).unwrap();
+        assert_ne!(a, b);
+
+        let input: Vec<f64> = (0..30).map(|t| (t as f64 * 0.07).sin()).collect();
+        let reqs: [(usize, &[f64]); 1] = [(0, input.as_slice())];
+
+        let mut pool =
+            EnginePool::new(Arc::clone(&base), Some(Arc::clone(&registry)));
+        // same width bucket, interleaved checkouts
+        let out_a = pool.get(a, 1).unwrap().sweep_streams(&reqs).pop().unwrap();
+        let out_b = pool.get(b, 1).unwrap().sweep_streams(&reqs).pop().unwrap();
+        let out_a2 = pool.get(a, 1).unwrap().sweep_streams(&reqs).pop().unwrap();
+        assert_eq!(
+            pool.built(),
+            2,
+            "one engine per (model, bucket): A and B must not share"
+        );
+        assert_eq!(out_a, out_a2, "A's engine must be stable across B's use");
+
+        // ground truth: each tenant alone in a fresh pool
+        let mut solo =
+            EnginePool::new(Arc::clone(&base), Some(Arc::clone(&registry)));
+        let solo_a = solo.get(a, 1).unwrap().sweep_streams(&reqs).pop().unwrap();
+        let mut solo =
+            EnginePool::new(Arc::clone(&base), Some(Arc::clone(&registry)));
+        let solo_b = solo.get(b, 1).unwrap().sweep_streams(&reqs).pop().unwrap();
+        assert_eq!(out_a, solo_a, "tenant A must see its own planes");
+        assert_eq!(out_b, solo_b, "tenant B must see its own planes");
+        assert_ne!(solo_a, solo_b, "distinct seeds ⇒ distinct predictions");
+
+        // unknown model → None (typed refusal upstream), nothing built
+        let built = pool.built();
+        assert!(pool.get(12345, 1).is_none());
+        assert_eq!(pool.built(), built);
+
+        // delete + prune drops B's engine but keeps A's and the base's
+        registry.delete(b).unwrap();
+        let _ = pool.get(BASE_MODEL, 1);
+        let n_before = pool.engines.len();
+        pool.prune();
+        assert_eq!(pool.engines.len(), n_before - 1);
+        assert!(pool.get(b, 1).is_none(), "deleted model must stay gone");
+        assert!(pool.get(a, 1).is_some());
     }
 }

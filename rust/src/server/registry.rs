@@ -1,0 +1,569 @@
+//! Multi-tenant model registry: DPG-minted per-tenant reservoirs.
+//!
+//! The paper's Direct Parameter Generation (§4.4) samples eigenvalues and
+//! input weights directly, skipping the O(N³) eig step — operationally
+//! that means a brand-new tenant model is minted in **O(N·d)** at request
+//! time. The registry leans on a stronger form of the same idea: tenant
+//! planes are sampled **directly in the eigenbasis** (`[W_in]_P`, not
+//! `W_in` followed by a projection), so minting never touches an O(N²)
+//! object at all — no `Q`, no dense anything. A 1000-mode tenant is three
+//! O(N)-sized vectors.
+//!
+//! ## Determinism is the replication protocol
+//!
+//! A [`ModelRecipe`] is `{seed, n, spectral_radius, lambda_prior}` and
+//! minting is a pure function of it: one freshly keyed [`Pcg64`] stream
+//! drives the spectrum generator and the plane sampler in a fixed draw
+//! order, so the same recipe produces **bit-identical planes on every
+//! node**. Cluster failover therefore needs no model transfer — any owner
+//! re-mints a tenant from its recipe (see `cluster.rs`); checkpoints and
+//! standby deltas keep carrying only lane state, never parameters.
+//!
+//! ## Identity and sharing
+//!
+//! [`ModelId`] is FNV-1a over the canonical recipe bytes masked to 53
+//! bits (wire ids travel as JSON numbers = f64; 2⁵³ is the exact-integer
+//! ceiling), with id 0 reserved for the base (deployed) model. `create`
+//! is idempotent: re-creating an existing recipe hands back an
+//! `Arc`-clone of the already-minted model, so tenants sharing a template
+//! share one copy of the λ/input/readout planes — copy-on-write at the
+//! model granularity (a future `train`+`commit` on a lane clones only
+//! that lane's readout, never the shared planes).
+//!
+//! ## Budget
+//!
+//! `max_models` bounds registry size. The check runs **before** any
+//! allocation: a refused `create_model` (typed `model_budget` on the
+//! wire) has minted nothing — chaos-tested in `rust/tests/chaos.rs`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::linalg::Mat;
+use crate::readout::Readout;
+use crate::reservoir::DiagonalEsn;
+use crate::rng::{Distributions, Pcg64};
+use crate::spectral::uniform::{ring_spectrum, uniform_spectrum};
+
+use super::cluster::fnv1a;
+use super::{Model, Precision};
+
+/// Per-tenant model identity. 0 is the base (deployed) model; minted ids
+/// are nonzero and fit exactly in an f64 (≤ 53 bits) so they round-trip
+/// JSON without loss.
+pub type ModelId = u64;
+
+/// The base model's reserved id.
+pub const BASE_MODEL: ModelId = 0;
+
+/// Largest tenant reservoir the wire accepts — a sanity bound, not a
+/// memory budget (that's `--max-models`): N=65536 f64 planes are ~1.5 MB,
+/// well under any realistic per-tenant budget, while a fat-fingered
+/// `"n": 1e12` is refused before allocation.
+pub const MAX_TENANT_N: usize = 65_536;
+
+/// Upper sanity bound on a tenant's requested spectral radius (serving a
+/// wildly unstable reservoir helps nobody; the paper's grids top out well
+/// below this).
+pub const MAX_TENANT_SR: f64 = 2.0;
+
+/// Stream constant keying the mint RNG — distinct from every other Pcg64
+/// stream in the crate so recipe seeds can't collide with experiment
+/// seeds.
+const MINT_STREAM: u64 = 0x4d4f_4445_4c52_4547; // "MODELREG"
+
+/// Eigenvalue prior for the DPG sampler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LambdaPrior {
+    /// Disk-uniform placement (the paper's Algorithm 1) — mixed
+    /// timescales, the default.
+    Uniform,
+    /// Every mode on the circle `|λ| = sr` — the long-memory placement
+    /// (arXiv 1707.02469): maximal uniform timescale.
+    Ring,
+}
+
+impl LambdaPrior {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "uniform" => Some(LambdaPrior::Uniform),
+            "ring" => Some(LambdaPrior::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LambdaPrior::Uniform => "uniform",
+            LambdaPrior::Ring => "ring",
+        }
+    }
+}
+
+/// Everything needed to mint a tenant model, anywhere, bit-identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelRecipe {
+    pub seed: u64,
+    pub n: usize,
+    pub spectral_radius: f64,
+    pub lambda_prior: LambdaPrior,
+}
+
+impl ModelRecipe {
+    /// Build and validate a recipe in one step — the wire layer's (and
+    /// tests') entry point. `prior` is the wire-level name (`"uniform"` /
+    /// `"ring"`); errors are human-readable refusal reasons (wire code
+    /// `bad_request`).
+    pub fn new(
+        seed: u64,
+        n: usize,
+        spectral_radius: f64,
+        prior: &str,
+    ) -> Result<Self, String> {
+        let lambda_prior = LambdaPrior::parse(prior)
+            .ok_or_else(|| format!("unknown lambda_prior {prior:?}"))?;
+        let recipe = Self {
+            seed,
+            n,
+            spectral_radius,
+            lambda_prior,
+        };
+        recipe.validate()?;
+        Ok(recipe)
+    }
+
+    /// Validate the sanity bounds shared by both transports. Returns a
+    /// human-readable refusal reason (wire code `bad_request`).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 || self.n > MAX_TENANT_N {
+            return Err(format!(
+                "n must be in 1..={MAX_TENANT_N}, got {}",
+                self.n
+            ));
+        }
+        if !(self.spectral_radius > 0.0)
+            || !(self.spectral_radius <= MAX_TENANT_SR)
+        {
+            return Err(format!(
+                "spectral_radius must be in (0, {MAX_TENANT_SR}], got {}",
+                self.spectral_radius
+            ));
+        }
+        Ok(())
+    }
+
+    /// Canonical byte encoding — the hash input for [`Self::id`]. Field
+    /// order is part of the wire contract (ids must agree across nodes
+    /// and releases).
+    fn canonical_bytes(&self) -> [u8; 25] {
+        let mut out = [0u8; 25];
+        out[..8].copy_from_slice(&self.seed.to_le_bytes());
+        out[8..16].copy_from_slice(&(self.n as u64).to_le_bytes());
+        out[16..24].copy_from_slice(&self.spectral_radius.to_bits().to_le_bytes());
+        out[24] = match self.lambda_prior {
+            LambdaPrior::Uniform => 0,
+            LambdaPrior::Ring => 1,
+        };
+        out
+    }
+
+    /// Deterministic model id: FNV-1a of the canonical bytes masked to 53
+    /// bits (exact in f64 / JSON), nudged off the reserved base id.
+    pub fn id(&self) -> ModelId {
+        let h = fnv1a(&self.canonical_bytes()) & ((1u64 << 53) - 1);
+        if h == BASE_MODEL {
+            1
+        } else {
+            h
+        }
+    }
+}
+
+/// Mint the tenant reservoir for a recipe — pure, deterministic, O(N·d).
+///
+/// Draw order (fixed forever; ids and failover re-mints depend on it):
+///  1. spectrum from the prior's generator,
+///  2. `[W_in]_P` row-major: per slot one real draw, plus one imaginary
+///     draw for complex slots only.
+///
+/// Real slots keep `win_im = 0` — the slot-layout invariant every engine
+/// relies on (a real mode's state never grows an imaginary part).
+pub fn mint_esn(recipe: &ModelRecipe, d_in: usize) -> DiagonalEsn {
+    let mut rng = Pcg64::new(recipe.seed, MINT_STREAM);
+    let spec = match recipe.lambda_prior {
+        LambdaPrior::Uniform => {
+            uniform_spectrum(recipe.n, recipe.spectral_radius, &mut rng)
+        }
+        LambdaPrior::Ring => {
+            ring_spectrum(recipe.n, recipe.spectral_radius, &mut rng)
+        }
+    };
+    let slots = spec.slots();
+    let n_real = spec.n_real;
+    let mut win_re = Mat::zeros(d_in, slots);
+    let mut win_im = Mat::zeros(d_in, slots);
+    for d in 0..d_in {
+        for j in 0..slots {
+            win_re[(d, j)] = rng.uniform(-1.0, 1.0);
+            if j >= n_real {
+                win_im[(d, j)] = rng.uniform(-1.0, 1.0);
+            }
+        }
+    }
+    DiagonalEsn::from_parts(spec, win_re, win_im, None)
+}
+
+/// Mint the full servable bundle: reservoir + zeroed readout (tenants
+/// train in-band via `train`/`commit`) at the given serving precision.
+pub fn mint_model(
+    recipe: &ModelRecipe,
+    d_in: usize,
+    precision: Precision,
+) -> Model {
+    let esn = mint_esn(recipe, d_in);
+    let n = esn.n();
+    let readout = Readout {
+        w: Mat::zeros(n, 1),
+        b: vec![0.0],
+    };
+    Model::with_precision(esn, readout, precision)
+}
+
+struct Entry {
+    model: Arc<Model>,
+    recipe: ModelRecipe,
+}
+
+/// Why a registry operation was refused — mapped to typed wire errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RegistryError {
+    /// `create_model` would exceed `max_models`; nothing was allocated.
+    Budget { max_models: usize },
+    /// The referenced model id is not registered (and not the base).
+    UnknownModel(ModelId),
+}
+
+/// Process-wide tenant model table. One instance is shared (Arc) by every
+/// shard's sweeper, the wire layer, and the predict-engine pools; the
+/// inner lock is taken only on create/delete/lookup — never inside a
+/// sweep (sweepers cache `Arc<Model>` clones per hub).
+pub struct ModelRegistry {
+    base: Arc<Model>,
+    max_models: usize,
+    inner: Mutex<HashMap<ModelId, Entry>>,
+}
+
+impl ModelRegistry {
+    /// `max_models` = 0 disables tenant creation entirely (every
+    /// `create_model` refuses with `model_budget`); the base model always
+    /// serves regardless.
+    pub fn new(base: Arc<Model>, max_models: usize) -> Self {
+        Self {
+            base,
+            max_models,
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn base(&self) -> &Arc<Model> {
+        &self.base
+    }
+
+    pub fn max_models(&self) -> usize {
+        self.max_models
+    }
+
+    /// Registered tenant count (excludes the base model).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Idempotent create. Returns `(id, created)` — `created == false`
+    /// means the recipe was already registered and the caller got the
+    /// shared instance (no new planes). The budget check precedes the
+    /// mint, so a refusal allocates nothing.
+    pub fn create(
+        &self,
+        recipe: &ModelRecipe,
+    ) -> Result<(ModelId, bool), RegistryError> {
+        let id = recipe.id();
+        {
+            let inner = self.inner.lock().unwrap();
+            if inner.contains_key(&id) {
+                return Ok((id, false));
+            }
+            if inner.len() >= self.max_models {
+                return Err(RegistryError::Budget {
+                    max_models: self.max_models,
+                });
+            }
+        }
+        // Mint outside the lock — O(N·d) but no reason to serialize
+        // against lookups. Concurrent same-recipe creates race benignly:
+        // both mint bit-identical models, one insert wins.
+        let model = Arc::new(mint_model(
+            recipe,
+            self.base.esn.d_in,
+            self.base.precision,
+        ));
+        let mut inner = self.inner.lock().unwrap();
+        if inner.contains_key(&id) {
+            return Ok((id, false));
+        }
+        if inner.len() >= self.max_models {
+            return Err(RegistryError::Budget {
+                max_models: self.max_models,
+            });
+        }
+        inner.insert(
+            id,
+            Entry {
+                model,
+                recipe: *recipe,
+            },
+        );
+        Ok((id, true))
+    }
+
+    /// Resolve an id to its servable model. Id 0 is always the base.
+    pub fn get(&self, id: ModelId) -> Option<Arc<Model>> {
+        if id == BASE_MODEL {
+            return Some(Arc::clone(&self.base));
+        }
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|e| Arc::clone(&e.model))
+    }
+
+    /// The recipe an id was minted from (None for base/unknown) — what a
+    /// failed-over owner needs to re-mint the tenant locally.
+    pub fn recipe(&self, id: ModelId) -> Option<ModelRecipe> {
+        self.inner.lock().unwrap().get(&id).map(|e| e.recipe)
+    }
+
+    /// Evict a tenant. Lanes still bound to it keep serving off their
+    /// hub's cached `Arc` until released; new bindings and predicts get
+    /// `unknown_model`. Deleting the base is refused.
+    pub fn delete(&self, id: ModelId) -> Result<(), RegistryError> {
+        if id == BASE_MODEL {
+            return Err(RegistryError::UnknownModel(id));
+        }
+        match self.inner.lock().unwrap().remove(&id) {
+            Some(_) => Ok(()),
+            None => Err(RegistryError::UnknownModel(id)),
+        }
+    }
+
+    /// Registered ids in ascending order (deterministic `info` output).
+    pub fn ids(&self) -> Vec<ModelId> {
+        let mut v: Vec<ModelId> =
+            self.inner.lock().unwrap().keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::make_model;
+    use super::*;
+
+    fn recipe(seed: u64) -> ModelRecipe {
+        ModelRecipe {
+            seed,
+            n: 40,
+            spectral_radius: 0.9,
+            lambda_prior: LambdaPrior::Uniform,
+        }
+    }
+
+    #[test]
+    fn ids_are_deterministic_distinct_and_53_bit() {
+        let a = recipe(1).id();
+        let b = recipe(1).id();
+        let c = recipe(2).id();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, BASE_MODEL);
+        assert!(a < (1u64 << 53));
+        // id changes with every recipe field
+        let mut r = recipe(1);
+        r.n = 41;
+        assert_ne!(r.id(), a);
+        let mut r = recipe(1);
+        r.spectral_radius = 0.95;
+        assert_ne!(r.id(), a);
+        let mut r = recipe(1);
+        r.lambda_prior = LambdaPrior::Ring;
+        assert_ne!(r.id(), a);
+    }
+
+    #[test]
+    fn mint_is_bit_reproducible_across_instances() {
+        // same recipe ⇒ bit-identical planes, minted twice from scratch —
+        // the property cluster failover's re-mint path rests on.
+        for prior in [LambdaPrior::Uniform, LambdaPrior::Ring] {
+            let r = ModelRecipe {
+                seed: 7,
+                n: 64,
+                spectral_radius: 0.8,
+                lambda_prior: prior,
+            };
+            let a = mint_esn(&r, 1);
+            let b = mint_esn(&r, 1);
+            assert_eq!(a.spec.n, b.spec.n);
+            assert_eq!(a.spec.n_real, b.spec.n_real);
+            for (x, y) in a.spec.lam.iter().zip(&b.spec.lam) {
+                assert_eq!(x.re.to_bits(), y.re.to_bits());
+                assert_eq!(x.im.to_bits(), y.im.to_bits());
+            }
+            for j in 0..a.spec.slots() {
+                assert_eq!(
+                    a.win_re[(0, j)].to_bits(),
+                    b.win_re[(0, j)].to_bits()
+                );
+                assert_eq!(
+                    a.win_im[(0, j)].to_bits(),
+                    b.win_im[(0, j)].to_bits()
+                );
+            }
+            // real slots never carry imaginary input weight
+            for j in 0..a.spec.n_real {
+                assert_eq!(a.win_im[(0, j)], 0.0);
+            }
+            // different seed ⇒ different planes
+            let c = mint_esn(&recipe(8), 1);
+            assert!(c.spec.lam[0] != a.spec.lam[0] || c.win_re[(0, 0)] != a.win_re[(0, 0)]);
+        }
+    }
+
+    #[test]
+    fn minted_planes_are_o_n_d() {
+        // DPG-direct minting must not materialize Q or any N×N object.
+        let r = ModelRecipe {
+            seed: 3,
+            n: 1000,
+            spectral_radius: 0.9,
+            lambda_prior: LambdaPrior::Uniform,
+        };
+        let esn = mint_esn(&r, 1);
+        assert!(esn.q.is_none(), "mint must not build the O(N²) basis");
+        assert_eq!(esn.win_re.rows(), 1);
+        assert_eq!(esn.win_re.cols(), esn.spec.slots());
+        assert_eq!(esn.n(), 1000);
+    }
+
+    #[test]
+    fn create_is_idempotent_and_shares_planes() {
+        let reg = ModelRegistry::new(Arc::new(make_model()), 4);
+        let (id1, created1) = reg.create(&recipe(1)).unwrap();
+        let (id2, created2) = reg.create(&recipe(1)).unwrap();
+        assert_eq!(id1, id2);
+        assert!(created1);
+        assert!(!created2, "re-create must reuse the minted instance");
+        assert_eq!(reg.len(), 1);
+        // copy-on-write sharing: both handles are the same allocation
+        let a = reg.get(id1).unwrap();
+        let b = reg.get(id2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.recipe(id1), Some(recipe(1)));
+    }
+
+    #[test]
+    fn budget_refusal_allocates_nothing() {
+        let reg = ModelRegistry::new(Arc::new(make_model()), 2);
+        reg.create(&recipe(1)).unwrap();
+        reg.create(&recipe(2)).unwrap();
+        let err = reg.create(&recipe(3)).unwrap_err();
+        assert_eq!(err, RegistryError::Budget { max_models: 2 });
+        assert_eq!(reg.len(), 2, "refused create must not allocate");
+        assert!(reg.get(recipe(3).id()).is_none());
+        // but re-creating a registered recipe still succeeds at budget
+        let (_, created) = reg.create(&recipe(1)).unwrap();
+        assert!(!created);
+        // and deleting frees the slot
+        reg.delete(recipe(1).id()).unwrap();
+        let (_, created) = reg.create(&recipe(3)).unwrap();
+        assert!(created);
+    }
+
+    #[test]
+    fn lifecycle_base_and_unknown() {
+        let reg = ModelRegistry::new(Arc::new(make_model()), 4);
+        // base always resolves, is never listed, can't be deleted
+        assert!(reg.get(BASE_MODEL).is_some());
+        assert!(reg.ids().is_empty());
+        assert!(reg.delete(BASE_MODEL).is_err());
+        assert_eq!(
+            reg.delete(12345),
+            Err(RegistryError::UnknownModel(12345))
+        );
+        assert!(reg.get(12345).is_none());
+        let (id, _) = reg.create(&recipe(9)).unwrap();
+        assert_eq!(reg.ids(), vec![id]);
+        reg.delete(id).unwrap();
+        assert!(reg.get(id).is_none());
+        assert!(reg.ids().is_empty());
+    }
+
+    #[test]
+    fn recipe_validation_bounds() {
+        let mut r = recipe(1);
+        r.n = 0;
+        assert!(r.validate().is_err());
+        r.n = MAX_TENANT_N + 1;
+        assert!(r.validate().is_err());
+        r.n = MAX_TENANT_N;
+        assert!(r.validate().is_ok());
+        r.spectral_radius = 0.0;
+        assert!(r.validate().is_err());
+        r.spectral_radius = f64::NAN;
+        assert!(r.validate().is_err());
+        r.spectral_radius = MAX_TENANT_SR + 0.1;
+        assert!(r.validate().is_err());
+        r.spectral_radius = 1.0;
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn minted_model_serves_at_both_precisions() {
+        // a fresh tenant's readout is zero ⇒ predict returns zeros, but
+        // the sweep itself must run at either precision without panic
+        let r = recipe(5);
+        for precision in [Precision::F64, Precision::F32] {
+            let m = mint_model(&r, 1, precision);
+            let input: Vec<f64> =
+                (0..16).map(|t| (t as f64 * 0.3).sin()).collect();
+            let y = m.predict(&input);
+            assert_eq!(y.len(), input.len());
+            assert!(y.iter().all(|v| *v == 0.0));
+        }
+    }
+
+    #[test]
+    fn f32_tenant_planes_inherit_f64_mint_bits() {
+        // DPG determinism across precisions: the mint always samples in
+        // f64; an f32 tenant downcasts the same bit-pattern planes, so
+        // two registries at different precisions agree on the recipe's
+        // f64 master planes.
+        let r = recipe(6);
+        let a = mint_model(&r, 1, Precision::F64);
+        let b = mint_model(&r, 1, Precision::F32);
+        for (x, y) in a.esn.spec.lam.iter().zip(&b.esn.spec.lam) {
+            assert_eq!(x.re.to_bits(), y.re.to_bits());
+            assert_eq!(x.im.to_bits(), y.im.to_bits());
+        }
+        for j in 0..a.esn.spec.slots() {
+            assert_eq!(
+                a.esn.win_re[(0, j)].to_bits(),
+                b.esn.win_re[(0, j)].to_bits()
+            );
+        }
+    }
+}

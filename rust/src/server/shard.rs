@@ -35,6 +35,7 @@ use anyhow::Result;
 
 use super::cluster::{fnv1a, ClusterState};
 use super::front::{BatchFront, LaneSnapshot, Reply, ReplySender};
+use super::registry::{ModelId, ModelRegistry};
 use super::Model;
 
 /// Minimum occupancy skew (hottest minus coldest shard, in lanes) at
@@ -142,6 +143,9 @@ impl LaneBinding {
 /// `S` independent micro-batching fronts plus the dispatch policy.
 pub struct ShardedFront {
     shards: Vec<Arc<BatchFront>>,
+    /// The multi-tenant model registry, shared by every shard's sweeper
+    /// (`None` = classic single-model serving; the zero-tenant path).
+    registry: Option<Arc<ModelRegistry>>,
     /// Rotating offset for the least-loaded predict deal's tie-break.
     rr: AtomicUsize,
     /// Every live lane binding (weak: a dropped connection's binding
@@ -198,19 +202,43 @@ impl ShardedFront {
         holdoff_us: u64,
         trainer_budget: usize,
     ) -> Arc<Self> {
+        Self::start_registry(model, None, shards, holdoff_us, trainer_budget, false)
+    }
+
+    /// The full constructor: [`Self::start_configured`] plus the
+    /// multi-tenant model registry (shared by every shard — tenants are
+    /// process-wide, lanes are per-shard) and opt-in sweeper core
+    /// pinning. With `pin_cores`, shard `i`'s sweeper thread pins itself
+    /// to core `i mod cores` before its first sweep, so each sweeper's
+    /// working set (hub planes + pooled engines) stays resident in one
+    /// core's cache hierarchy instead of bouncing on scheduler whims.
+    pub fn start_registry(
+        model: Arc<Model>,
+        registry: Option<Arc<ModelRegistry>>,
+        shards: usize,
+        holdoff_us: u64,
+        trainer_budget: usize,
+        pin_cores: bool,
+    ) -> Arc<Self> {
         let shards = shards.max(1);
+        let cores = std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1);
         let fronts = (0..shards)
             .map(|i| {
-                BatchFront::start_configured(
+                BatchFront::start_full(
                     Arc::clone(&model),
+                    registry.clone(),
                     holdoff_us,
                     format!("lr-shard-{i}-sweeper"),
                     trainer_budget,
+                    pin_cores.then_some(i % cores),
                 )
             })
             .collect();
         Arc::new(Self {
             shards: fronts,
+            registry,
             rr: AtomicUsize::new(0),
             bindings: Mutex::new(Vec::new()),
             next_binding_id: AtomicU64::new(1),
@@ -268,6 +296,35 @@ impl ShardedFront {
     /// The model every shard serves.
     pub fn model(&self) -> &Arc<Model> {
         self.shards[0].model()
+    }
+
+    /// The multi-tenant model registry, when one is configured.
+    pub fn registry(&self) -> Option<&Arc<ModelRegistry>> {
+        self.registry.as_ref()
+    }
+
+    /// Bound-lane counts per model, aggregated across shards (sorted by
+    /// model id; `info`'s per-tenant occupancy view). Free lanes are not
+    /// counted, so a tenant-free server reports only the base model's
+    /// in-use lanes.
+    pub fn lane_counts_by_model(&self) -> Vec<(ModelId, usize)> {
+        let mut agg: Vec<(ModelId, usize)> = Vec::new();
+        for s in &self.shards {
+            for (model, n) in s.lane_counts_by_model() {
+                match agg.iter_mut().find(|(m, _)| *m == model) {
+                    Some((_, total)) => *total += n,
+                    None => agg.push((model, n)),
+                }
+            }
+        }
+        agg.sort_unstable_by_key(|&(m, _)| m);
+        agg
+    }
+
+    /// Per-shard sweeper core pins (`None` = unpinned) — all `None`
+    /// unless `--pin-cores` was given and `sched_setaffinity` succeeded.
+    pub fn pinned_cores(&self) -> Vec<Option<usize>> {
+        self.shards.iter().map(|s| s.pinned_core()).collect()
     }
 
     /// Home shard for a connection key: a pure function of the key
@@ -356,6 +413,31 @@ impl ShardedFront {
         deadline: Option<Instant>,
     ) -> bool {
         self.pick_shard().submit_predict_deadline(input, reply, deadline)
+    }
+
+    /// Model-addressed [`Self::predict_deadline`]: still dealt to the
+    /// least-loaded shard — the registry is process-wide, so any shard
+    /// serves any tenant's stateless predicts.
+    pub fn predict_deadline_model(
+        &self,
+        model: ModelId,
+        input: Vec<f64>,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<f64>> {
+        self.pick_shard().predict_deadline_model(model, input, deadline)
+    }
+
+    /// Model-addressed [`Self::submit_predict_dealt_deadline`] — the
+    /// event loop's tenant predict path.
+    pub(crate) fn submit_predict_dealt_model(
+        &self,
+        model: ModelId,
+        input: Arc<Vec<f64>>,
+        reply: super::front::ReplySender,
+        deadline: Option<Instant>,
+    ) -> bool {
+        self.pick_shard()
+            .submit_predict_model(model, input, reply, deadline)
     }
 
     /// Streaming step(s) on a lane of shard `shard_idx`.
@@ -488,6 +570,12 @@ impl ShardedFront {
         let snap = Self::sync_checkpoint(&self.shards[src], src_lane)?;
         let dst_front = &self.shards[dst];
         let dst_lane = dst_front.acquire_lane().ok_or("hub_full")?;
+        // carry the tenant binding with the lane BEFORE submitting the
+        // restore, so the restore (and everything after it) routes to
+        // the same model's hub on the target shard; the failure paths
+        // below go through `release_lane`, which clears the binding.
+        dst_front
+            .bind_lane_model(dst_lane, self.shards[src].lane_model_of(src_lane));
         let (tx, rx) = mpsc::channel();
         if !dst_front.submit_restore(dst_lane, Box::new(snap), ReplySender::Chan(tx))
         {
@@ -975,6 +1063,69 @@ mod tests {
             assert_eq!(front.shard(1).lanes_in_use(), 0);
             front.shutdown();
         }
+    }
+
+    #[test]
+    fn migration_carries_the_tenant_binding_with_the_lane() {
+        // a lane bound to a registry tenant must keep serving THAT
+        // tenant's model after a cross-shard move, and the aggregated
+        // per-model lane counts must follow it
+        use super::super::registry::{ModelRecipe, ModelRegistry, BASE_MODEL};
+        let model = Arc::new(make_model());
+        let registry = Arc::new(ModelRegistry::new(Arc::clone(&model), 4));
+        let recipe = ModelRecipe::new(77, 40, 0.8, "uniform").unwrap();
+        let (tenant, _) = registry.create(&recipe).unwrap();
+        let tenant_model = registry.get(tenant).unwrap();
+        let front = ShardedFront::start_registry(
+            Arc::clone(&model),
+            Some(Arc::clone(&registry)),
+            2,
+            0,
+            usize::MAX,
+            false,
+        );
+        let task = MsoTask::new(1);
+        let input = &task.input[..60];
+
+        // one tenant lane on shard 0, one base lane on shard 1
+        let b = front.acquire_binding(0).unwrap();
+        front.with_binding(&b, |s, l| s.bind_lane_model(l, tenant));
+        let base = front.acquire_binding(1).unwrap();
+        assert_eq!(
+            front.lane_counts_by_model(),
+            vec![(BASE_MODEL, 1), (tenant, 1)],
+            "aggregated counts must see both shards' bindings"
+        );
+
+        let mut got = front
+            .with_binding(&b, |s, l| s.stream(l, input[..25].to_vec()))
+            .unwrap();
+        let (dst, dst_lane, _) = front.migrate_binding(&b, Some(1)).unwrap();
+        assert_eq!(dst, 1);
+        assert_eq!(
+            front.shard(1).lane_model_of(dst_lane),
+            tenant,
+            "the moved lane must stay bound to its tenant"
+        );
+        got.extend(
+            front
+                .with_binding(&b, |s, l| s.stream(l, input[25..].to_vec()))
+                .unwrap(),
+        );
+        let want = tenant_model.predict(input);
+        assert_eq!(
+            got, want,
+            "tenant stream must be bit-identical across the move"
+        );
+        // both bound lanes now live on shard 1; counts follow
+        assert_eq!(
+            front.lane_counts_by_model(),
+            vec![(BASE_MODEL, 1), (tenant, 1)]
+        );
+        front.release_binding(&b);
+        front.release_binding(&base);
+        assert!(front.lane_counts_by_model().is_empty());
+        front.shutdown();
     }
 
     #[test]

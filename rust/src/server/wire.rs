@@ -137,8 +137,20 @@ use crate::util::json::{parse, Json};
 use crate::util::Timer;
 
 use super::front::LaneSnapshot;
+use super::registry::{
+    ModelId, ModelRecipe, ModelRegistry, RegistryError, BASE_MODEL,
+};
 use super::shard::{LaneBinding, ShardedFront};
 use super::{Model, Precision};
+
+/// Default registry capacity when `--max-models` is not given: enough
+/// for serious multi-tenancy, small enough that a runaway minting loop
+/// hits the typed `model_budget` refusal before memory does.
+pub(crate) const DEFAULT_MAX_MODELS: usize = 256;
+
+/// Default spectral radius for a `create_model` without an explicit
+/// `"spectral_radius"` — the paper's workhorse operating point.
+pub(crate) const DEFAULT_TENANT_SR: f64 = 0.9;
 
 /// Default shard count: one sweeper per available core.
 pub(crate) fn default_shards() -> usize {
@@ -323,6 +335,15 @@ pub struct ServeOpts {
     /// enables this; embedded/test servers default off so test harness
     /// signals can't stop them).
     pub drain_on_sigterm: bool,
+    /// Tenant-model registry capacity (`None` = [`DEFAULT_MAX_MODELS`]):
+    /// `create_model` past this answers the typed `model_budget` error
+    /// without allocating. `--max-models` on the CLI.
+    pub max_models: Option<usize>,
+    /// Pin each shard's sweeper thread to core `shard mod cores`
+    /// (`sched_setaffinity`; silently unpinned where unsupported — the
+    /// pinned core, if any, is reported per shard in `info`).
+    /// `--pin-cores` on the CLI.
+    pub pin_cores: bool,
 }
 
 /// Set by the SIGTERM handler; polled by both transports' accept loops
@@ -365,11 +386,21 @@ pub fn serve_on_opts(
 ) -> Result<SocketAddr> {
     let addr = listener.local_addr()?;
     let shards = opts.shards.unwrap_or_else(default_shards);
-    let front = ShardedFront::start_configured(
+    // every served front carries a registry: with zero tenants the
+    // serving paths never consult it (bit-identical to pre-registry
+    // serving — the A/B tests below), and `create_model` can mint
+    // tenants at any time without a restart
+    let registry = Arc::new(ModelRegistry::new(
+        Arc::clone(&model),
+        opts.max_models.unwrap_or(DEFAULT_MAX_MODELS),
+    ));
+    let front = ShardedFront::start_registry(
         model,
+        Some(registry),
         shards,
         opts.holdoff_us,
         opts.trainer_budget.unwrap_or(usize::MAX),
+        opts.pin_cores,
     );
     if opts.drain_on_sigterm {
         install_sigterm_handler();
@@ -767,6 +798,11 @@ pub(crate) struct ConnState {
     pub(crate) key: u64,
     pub(crate) shard_idx: usize,
     pub(crate) binding: Option<Arc<LaneBinding>>,
+    /// The registry model this connection serves ([`BASE_MODEL`] unless
+    /// a model-bearing op bound it to a tenant). Sticky for the
+    /// connection's lifetime, like the home shard: per-connection lane
+    /// state never switches models mid-stream.
+    pub(crate) model: ModelId,
     hub_denied: bool,
     /// Built lazily on the first hub-denied `stream` op — predict-only
     /// connections (and connections that win a hub lane) never pay for it.
@@ -779,6 +815,7 @@ impl ConnState {
             key,
             shard_idx,
             binding: None,
+            model: BASE_MODEL,
             hub_denied: false,
             local: None,
         }
@@ -814,9 +851,53 @@ fn local_fallback(model: &Model) -> LocalFallback {
 pub(crate) fn try_acquire_lane(front: &ShardedFront, conn: &mut ConnState) {
     if conn.binding.is_none() && !conn.hub_denied {
         conn.binding = front.acquire_binding(conn.shard_idx);
-        if conn.binding.is_none() {
-            conn.hub_denied = true;
+        match &conn.binding {
+            // a tenant connection carries its model onto the hub lane,
+            // so the sweeper routes every job for this lane to the
+            // tenant's hub (captured per job at submit time)
+            Some(b) if conn.model != BASE_MODEL => {
+                front.with_binding(b, |s, l| s.bind_lane_model(l, conn.model));
+            }
+            Some(_) => {}
+            None => conn.hub_denied = true,
         }
+    }
+}
+
+/// Resolve a request's optional `"model"` field against the connection:
+/// the FIRST model-bearing op binds the connection to that tenant (it
+/// must precede any streaming state — a lane never switches models);
+/// later ops must name the same model or omit the field. Shared by both
+/// transports.
+pub(crate) fn bind_conn_model(
+    front: &ShardedFront,
+    conn: &mut ConnState,
+    wire_model: Option<ModelId>,
+) -> Result<()> {
+    let Some(m) = wire_model else {
+        return Ok(());
+    };
+    if m == conn.model {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        conn.model == BASE_MODEL,
+        "connection is bound to model {}; open a new connection for \
+         model {m}",
+        conn.model
+    );
+    anyhow::ensure!(
+        conn.binding.is_none() && conn.local.is_none(),
+        "model binding must precede streaming on a connection"
+    );
+    // the binding must name a live registry entry; a deleted or
+    // never-minted id is the typed refusal
+    match front.registry().and_then(|r| r.get(m)) {
+        Some(_) => {
+            conn.model = m;
+            Ok(())
+        }
+        None => Err(coded_error("unknown_model")),
     }
 }
 
@@ -920,6 +1001,8 @@ pub(crate) const ERROR_CODES: &[&str] = &[
     "moved",
     "restore_corrupt",
     "redirect_loop",
+    "unknown_model",
+    "model_budget",
 ];
 
 /// Resolve a sweeper-side error-code slug into the shared typed wire
@@ -975,6 +1058,13 @@ pub(crate) fn coded_error(code: &'static str) -> anyhow::Error {
             "redirect loop: moved-hop limit exceeded without reaching \
              an owning node"
         }
+        "unknown_model" => {
+            "unknown model: not registered on this server \
+             (never minted, or deleted)"
+        }
+        "model_budget" => {
+            "model budget exhausted; delete a model or raise --max-models"
+        }
         other => {
             debug_assert!(false, "unmapped wire error code {other:?}");
             "internal serving error"
@@ -1006,6 +1096,25 @@ pub(crate) fn no_lane_error(op: &str) -> anyhow::Error {
         "no_lane",
         format!("{op} requires an active streaming lane on this connection"),
     )
+}
+
+/// Map a registry refusal onto its typed wire error — one mapping for
+/// both transports, so `create_model`/`delete_model` failures are
+/// byte-identical on the wire.
+pub(crate) fn registry_error(e: RegistryError) -> anyhow::Error {
+    match e {
+        RegistryError::Budget { max_models } => coded(
+            "model_budget",
+            format!(
+                "model budget exhausted ({max_models} models registered); \
+                 delete one or raise --max-models"
+            ),
+        ),
+        RegistryError::UnknownModel(id) => coded(
+            "unknown_model",
+            format!("model {id} is not registered on this server"),
+        ),
+    }
 }
 
 /// The cluster ownership guard, shared by both transports: on a
@@ -1117,6 +1226,14 @@ pub(crate) enum Op {
     /// Graceful drain: stop accepting, finish in-flight work, flush,
     /// spill live lanes (with `--drain-checkpoint`), exit.
     ShutdownDrain,
+    /// Mint (or idempotently re-reference) a per-tenant reservoir from a
+    /// deterministic DPG recipe — same recipe ⇒ same id and the same
+    /// planes, on every node, so failover needs no model transfer.
+    CreateModel { recipe: ModelRecipe },
+    /// Evict a tenant model. Lanes still bound to it keep serving off
+    /// their hub's cached `Arc` until released; everything new answers
+    /// `unknown_model`.
+    DeleteModel { model: ModelId },
 }
 
 /// Wrap a snapshot-decode failure as the typed `restore_corrupt` error:
@@ -1148,12 +1265,18 @@ fn parse_opt_uint(req: &Json, field: &str) -> Result<Option<u64>> {
     }
 }
 
-/// Classify one request line into `(op, deadline budget)`. Every op
-/// accepts an optional `"deadline_ms"`: the client's end-to-end budget
-/// for this request, honored at queue admission AND when the sweeper
-/// picks the job up — an expired job answers the typed
-/// `deadline_exceeded` error without touching lane state.
-pub(crate) fn parse_op(line: &str) -> Result<(Op, Option<Duration>)> {
+/// Classify one request line into `(op, deadline budget, model)`. Every
+/// op accepts an optional `"deadline_ms"`: the client's end-to-end
+/// budget for this request, honored at queue admission AND when the
+/// sweeper picks the job up — an expired job answers the typed
+/// `deadline_exceeded` error without touching lane state. Every
+/// SERVING op additionally accepts an optional `"model"` naming a
+/// registry tenant; the first such op binds the connection
+/// ([`bind_conn_model`]). `create_model`/`delete_model` operate ON the
+/// registry, so their fields are operands, not a connection binding.
+pub(crate) fn parse_op(
+    line: &str,
+) -> Result<(Op, Option<Duration>, Option<ModelId>)> {
     let req = parse(line.trim())?;
     let deadline = match req.get("deadline_ms") {
         None | Some(Json::Null) => None,
@@ -1243,9 +1366,42 @@ pub(crate) fn parse_op(line: &str) -> Result<(Op, Option<Duration>)> {
             Op::MigrateIn { lane_id, snap }
         }
         "shutdown_drain" => Op::ShutdownDrain,
+        "create_model" => {
+            let seed = parse_opt_uint(&req, "seed")?
+                .ok_or_else(|| anyhow!("create_model requires integer 'seed'"))?;
+            let n = parse_opt_uint(&req, "n")?
+                .ok_or_else(|| anyhow!("create_model requires integer 'n'"))?
+                as usize;
+            let sr = match req.get("spectral_radius") {
+                None | Some(Json::Null) => DEFAULT_TENANT_SR,
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("non-numeric 'spectral_radius'"))?,
+            };
+            let prior = match req.get("lambda_prior") {
+                None | Some(Json::Null) => "uniform",
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("non-string 'lambda_prior'"))?,
+            };
+            let recipe =
+                ModelRecipe::new(seed, n, sr, prior).map_err(|e| anyhow!(e))?;
+            Op::CreateModel { recipe }
+        }
+        "delete_model" => Op::DeleteModel {
+            model: parse_opt_uint(&req, "model")?.ok_or_else(|| {
+                anyhow!("delete_model requires integer 'model'")
+            })?,
+        },
         other => return Err(anyhow!("unknown op {other:?}")),
     };
-    Ok((op, deadline))
+    // the sticky connection binding — registry ops carry no binding
+    // (their "model" field, if any, is the operand)
+    let model = match &op {
+        Op::CreateModel { .. } | Op::DeleteModel { .. } => None,
+        _ => parse_opt_uint(&req, "model")?,
+    };
+    Ok((op, deadline, model))
 }
 
 // ---------------------------------------------------------------------------
@@ -1480,6 +1636,40 @@ pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
             None => Json::Null,
         }),
     ];
+    // multi-tenant registry (PR 9): tenant count, budget, which model
+    // THIS connection serves, and bound-lane counts per model — the
+    // per-tenant occupancy view an operator reads to see who holds lanes
+    if let Some(reg) = front.registry() {
+        fields.push(("models", Json::Num(reg.len() as f64)));
+        fields.push(("max_models", Json::Num(reg.max_models() as f64)));
+        fields.push(("model", Json::Num(conn.model as f64)));
+        fields.push((
+            "model_lanes",
+            Json::Obj(
+                front
+                    .lane_counts_by_model()
+                    .into_iter()
+                    .map(|(m, c)| (m.to_string(), Json::Num(c as f64)))
+                    .collect(),
+            ),
+        ));
+    }
+    // sweeper core pinning (PR 9): per-shard pinned core, null where
+    // unpinned — only reported when at least one shard pinned
+    let pins = front.pinned_cores();
+    if pins.iter().any(Option::is_some) {
+        fields.push((
+            "pinned_cores",
+            Json::Arr(
+                pins.into_iter()
+                    .map(|p| match p {
+                        Some(c) => Json::Num(c as f64),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        ));
+    }
     // standby fan-out (PR 8): per-replica lag alongside the worst-case
     // scalar above, so an operator sees WHICH replica is behind
     let replicas = front.standby_replicas();
@@ -1684,12 +1874,14 @@ fn handle_request(
     drain_out: &mut bool,
 ) -> Result<Json> {
     let model = front.model();
-    let (op, budget) = parse_op(line)?;
+    let (op, budget, wire_model) = parse_op(line)?;
     // cluster ownership: key-homed ops on a key another live node owns
     // answer `moved {addr}` before touching any lane state
     if let Some(e) = ownership_guard(front, conn.key, &op) {
         return Err(e);
     }
+    // the sticky model binding (no-op unless the line names a model)
+    bind_conn_model(front, conn, wire_model)?;
     // the budget starts when the request is UNDERSTOOD; Instant addition
     // saturates via checked_add (an astronomically large budget = none)
     let deadline = budget.and_then(|d| Instant::now().checked_add(d));
@@ -1700,11 +1892,16 @@ fn handle_request(
             let steps = input.len();
             let t = Timer::start();
             // stateless: dealt to the least-loaded shard, not the home
-            let output = front.predict_deadline(input, deadline)?;
+            let output =
+                front.predict_deadline_model(conn.model, input, deadline)?;
             Ok(predict_response(output, steps, t.elapsed_s()))
         }
         Op::Stream(input) => {
-            guard_streamable(model)?;
+            // minted tenants are single-output by construction; the
+            // guard is the BASE model's multi-output refusal
+            if conn.model == BASE_MODEL {
+                guard_streamable(model)?;
+            }
             // first stream op: try to claim a lane on the home shard's
             // hub (and never switch engines once this connection's
             // streaming has started)
@@ -1716,13 +1913,31 @@ fn handle_request(
                     b.mark_dirty();
                     outs
                 }
+                // the local fallback serves only the base model (its
+                // state is built from the base planes); a tenant
+                // connection denied a hub lane gets the typed refusal
+                None if conn.model != BASE_MODEL => {
+                    return Err(coded_error("hub_full"))
+                }
                 None => stream_fallback(model, conn, &input),
             };
             Ok(stream_response(outs))
         }
         Op::Train { input, target } => {
-            guard_streamable(model)?;
-            guard_train_rows(model, input.len())?;
+            if conn.model == BASE_MODEL {
+                guard_streamable(model)?;
+            }
+            // the per-op work cap scales with the model the rows land
+            // on — the connection's tenant, not necessarily the base
+            let cap_model = if conn.model == BASE_MODEL {
+                Arc::clone(model)
+            } else {
+                front
+                    .registry()
+                    .and_then(|r| r.get(conn.model))
+                    .ok_or_else(|| coded_error("unknown_model"))?
+            };
+            guard_train_rows(&cap_model, input.len())?;
             // training is lane-resident: the Gram accumulator lives next
             // to the lane state on the home shard's sweeper
             try_acquire_lane(front, conn);
@@ -1764,7 +1979,9 @@ fn handle_request(
             None => Err(no_lane_error("checkpoint")),
         },
         Op::Restore(snap) => {
-            guard_streamable(model)?;
+            if conn.model == BASE_MODEL {
+                guard_streamable(model)?;
+            }
             // restore targets a hub lane (acquiring one on first use,
             // like stream); it also supersedes any local-fallback state
             try_acquire_lane(front, conn);
@@ -1795,7 +2012,39 @@ fn handle_request(
             *drain_out = true;
             Ok(ok_response())
         }
+        Op::CreateModel { recipe } => handle_create_model(front, &recipe),
+        Op::DeleteModel { model } => handle_delete_model(front, model),
     }
+}
+
+/// `create_model`: mint (or idempotently re-reference) a tenant model
+/// from its deterministic recipe. Shared by both transports.
+pub(crate) fn handle_create_model(
+    front: &ShardedFront,
+    recipe: &ModelRecipe,
+) -> Result<Json> {
+    let reg = front
+        .registry()
+        .ok_or_else(|| anyhow!("this server has no model registry"))?;
+    let (id, created) = reg.create(recipe).map_err(registry_error)?;
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", Json::Num(id as f64)),
+        ("created", Json::Bool(created)),
+    ]))
+}
+
+/// `delete_model`: evict a tenant from the registry. Shared by both
+/// transports.
+pub(crate) fn handle_delete_model(
+    front: &ShardedFront,
+    model: ModelId,
+) -> Result<Json> {
+    let reg = front
+        .registry()
+        .ok_or_else(|| anyhow!("this server has no model registry"))?;
+    reg.delete(model).map_err(registry_error)?;
+    Ok(ok_response())
 }
 
 /// `migrate`: move this connection's live lane to another shard
@@ -2197,6 +2446,55 @@ impl Client {
             ("lane_id", Json::Num(lane_id as f64)),
         ]);
         self.version_op(&req)
+    }
+
+    /// Mint (or idempotently re-reference) a per-tenant reservoir from
+    /// a deterministic recipe. `spectral_radius`/`lambda_prior` default
+    /// server-side (0.9, `"uniform"`). Returns the model id — stable
+    /// across servers and restarts (it is a pure function of the
+    /// recipe), so a client can reconnect anywhere and name the same
+    /// model.
+    pub fn create_model(
+        &mut self,
+        seed: u64,
+        n: usize,
+        spectral_radius: Option<f64>,
+        lambda_prior: Option<&str>,
+    ) -> Result<u64> {
+        let mut fields = vec![
+            ("op", Json::Str("create_model".into())),
+            ("seed", Json::Num(seed as f64)),
+            ("n", Json::Num(n as f64)),
+        ];
+        if let Some(sr) = spectral_radius {
+            fields.push(("spectral_radius", Json::Num(sr)));
+        }
+        if let Some(p) = lambda_prior {
+            fields.push(("lambda_prior", Json::Str(p.into())));
+        }
+        let resp = self.request(&Json::obj(fields))?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        resp.get("model")
+            .and_then(Json::as_f64)
+            .map(|m| m as u64)
+            .ok_or_else(|| anyhow!("missing model"))
+    }
+
+    /// Evict a tenant model from the server's registry.
+    pub fn delete_model(&mut self, model: u64) -> Result<()> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("delete_model".into())),
+            ("model", Json::Num(model as f64)),
+        ]);
+        let resp = self.request(&req)?;
+        anyhow::ensure!(
+            resp.get("ok").map(|j| *j == Json::Bool(true)).unwrap_or(false),
+            "server error: {resp:?}"
+        );
+        Ok(())
     }
 
     /// Ask the server to drain gracefully: stop accepting, finish
@@ -2645,6 +2943,182 @@ mod tests {
         assert_eq!(again, got);
         drop(client);
         handle.join().unwrap();
+    }
+
+    /// Bind a connection to a tenant model via a model-bearing ping.
+    fn bind_model(c: &mut Client, model: u64) -> Json {
+        c.request(&Json::obj(vec![
+            ("op", Json::Str("ping".into())),
+            ("model", Json::Num(model as f64)),
+        ]))
+        .unwrap()
+    }
+
+    #[test]
+    fn minted_tenants_serve_bitwise_and_refuse_typed_on_both_transports() {
+        // the PR-9 acceptance contract, end to end on the wire: two
+        // tenants minted over `create_model` serve bit-identically to
+        // models minted locally from the same recipes, interleaved with
+        // each other AND base traffic through ONE sweeper — while every
+        // registry misuse answers a typed error, never a wrong model
+        use crate::linalg::Mat;
+        use crate::readout::GramAcc;
+        use super::super::registry::mint_model;
+
+        let base = Arc::new(make_model());
+        let task = MsoTask::new(1);
+        let train_in = &task.input[..120];
+        let target: Vec<f64> =
+            train_in.iter().map(|x| 0.3 + 1.5 * x).collect();
+        let stream_in = &task.input[120..160];
+        let alpha = 1e-8;
+
+        let ra = ModelRecipe::new(101, 48, 0.85, "uniform").unwrap();
+        let rb = ModelRecipe::new(202, 48, 0.85, "ring").unwrap();
+
+        // local twin of tenant A, minted from the recipe alone — the
+        // determinism failover leans on: same recipe, same planes, on
+        // any node, with no model transfer
+        let twin = mint_model(&ra, base.esn.d_in, base.precision);
+        let u = Mat::from_rows(train_in.len(), 1, train_in);
+        let x = twin.qesn.run(&u);
+        let y = Mat::from_rows(target.len(), 1, &target);
+        let mut acc = GramAcc::<f64>::new(twin.esn.n(), 1);
+        acc.push_rows(&x, &y);
+        let want_ro = acc.solve_scaled(alpha, 1.0).unwrap();
+        let all: Vec<f64> =
+            train_in.iter().chain(stream_in).copied().collect();
+        let u_all = Mat::from_rows(all.len(), 1, &all);
+        let x_all = twin.qesn.run(&u_all);
+        let want: Vec<f64> = (120..160)
+            .map(|t| want_ro.apply_row(x_all.row(t), 0))
+            .collect();
+
+        for threaded in [false, true] {
+            let (addr, handle) =
+                spawn_server(Arc::clone(&base), 8, Some(1), threaded);
+            let mut admin = Client::connect(&addr).unwrap();
+            let a = admin.create_model(101, 48, Some(0.85), None).unwrap();
+            let b = admin
+                .create_model(202, 48, Some(0.85), Some("ring"))
+                .unwrap();
+            assert_eq!(a, ra.id(), "wire id must equal the recipe id");
+            assert_eq!(b, rb.id());
+            assert_ne!(a, b);
+            // idempotent re-create: same id, nothing minted
+            let resp = admin
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("create_model".into())),
+                    ("seed", Json::Num(101.0)),
+                    ("n", Json::Num(48.0)),
+                    ("spectral_radius", Json::Num(0.85)),
+                ]))
+                .unwrap();
+            assert_eq!(resp.get("created"), Some(&Json::Bool(false)));
+            assert_eq!(resp.get("model").and_then(Json::as_f64), Some(a as f64));
+
+            // three live connections: tenant A, tenant B, base
+            let mut ca = Client::connect(&addr).unwrap();
+            let mut cb = Client::connect(&addr).unwrap();
+            let mut cbase = Client::connect(&addr).unwrap();
+            let bound = bind_model(&mut ca, a);
+            assert_eq!(bound.get("ok"), Some(&Json::Bool(true)));
+            assert_eq!(bind_model(&mut cb, b).get("ok"), Some(&Json::Bool(true)));
+
+            // untrained tenant readout is all-zero by construction
+            let zb = cb.stream(&task.input[..10]).unwrap();
+            assert!(
+                zb.iter().all(|&v| v == 0.0),
+                "threaded={threaded}: untrained tenant must answer zeros"
+            );
+            // stateless tenant predict routes through the pooled engines
+            let zp = ca.predict(&task.input[..12]).unwrap();
+            assert_eq!(zp.len(), 12);
+            assert!(zp.iter().all(|&v| v == 0.0));
+
+            // A trains → commits → streams, interleaved with base
+            // predicts and B streams through the same mixed sweep
+            assert_eq!(ca.train(&train_in[..50], &target[..50]).unwrap(), 50);
+            let base_out = cbase.predict(&task.input[..30]).unwrap();
+            assert_eq!(
+                base_out,
+                base.predict(&task.input[..30]),
+                "threaded={threaded}: base traffic lost bit-identity"
+            );
+            assert_eq!(ca.train(&train_in[50..], &target[50..]).unwrap(), 120);
+            let _ = cb.stream(&task.input[10..20]).unwrap();
+            ca.commit(alpha).unwrap();
+            let got = ca.stream(stream_in).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (t, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() == 0.0,
+                    "threaded={threaded} t={t}: tenant diverged from its \
+                     minted twin: {g} vs {w}"
+                );
+            }
+
+            // per-model accounting on `info`
+            let info = ca
+                .request(&Json::obj(vec![("op", Json::Str("info".into()))]))
+                .unwrap();
+            assert_eq!(info.get("models").and_then(Json::as_f64), Some(2.0));
+            assert_eq!(info.get("model").and_then(Json::as_f64), Some(a as f64));
+            let lanes = info.get("model_lanes").unwrap();
+            assert!(
+                lanes.get(&a.to_string()).and_then(Json::as_f64).unwrap_or(0.0)
+                    >= 1.0,
+                "threaded={threaded}: tenant A's lane missing from \
+                 model_lanes: {lanes:?}"
+            );
+
+            // typed refusals — unknown id …
+            let mut cx = Client::connect(&addr).unwrap();
+            let resp = bind_model(&mut cx, 424_242);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            assert_eq!(
+                resp.get("code").and_then(Json::as_str),
+                Some("unknown_model")
+            );
+            // … cross-model conflict on a bound connection …
+            let resp = bind_model(&mut ca, b);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+            // … and binding after streaming state exists
+            let _ = cx.stream(&task.input[..5]).unwrap();
+            let resp = bind_model(&mut cx, a);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+
+            // delete: B's bound lane keeps serving off its cached planes;
+            // NEW references to the id refuse typed
+            admin.delete_model(b).unwrap();
+            let still = cb.stream(&task.input[20..25]).unwrap();
+            assert_eq!(still.len(), 5, "bound lane must survive delete");
+            let mut cy = Client::connect(&addr).unwrap();
+            let resp = bind_model(&mut cy, b);
+            assert_eq!(
+                resp.get("code").and_then(Json::as_str),
+                Some("unknown_model")
+            );
+            let resp = admin
+                .request(&Json::obj(vec![
+                    ("op", Json::Str("delete_model".into())),
+                    ("model", Json::Num(b as f64)),
+                ]))
+                .unwrap();
+            assert_eq!(
+                resp.get("code").and_then(Json::as_str),
+                Some("unknown_model"),
+                "double delete must answer the typed code"
+            );
+
+            drop(admin);
+            drop(ca);
+            drop(cb);
+            drop(cbase);
+            drop(cx);
+            drop(cy);
+            handle.join().unwrap();
+        }
     }
 
     #[test]

@@ -31,6 +31,32 @@ pub fn uniform_spectrum(n: usize, sr: f64, rng: &mut Pcg64) -> Spectrum {
     Spectrum::new(n, n_real, lam)
 }
 
+/// Ring prior: every eigenvalue sits ON the circle `|λ| = sr` instead of
+/// filling the disk — reals are `±sr` (random sign), complex slots get a
+/// uniform angle in `(0, π)`. Placing all moduli at the radius maximizes
+/// memory timescales (`τ = −1/ln|λ|` is the same for every mode), the
+/// long-memory placement suggested by the eigenvalue-timescale analysis
+/// in *Tailoring RNNs for Optimal Learning* (arXiv 1707.02469). Used by
+/// the model registry's `lambda_prior: "ring"` recipes.
+pub fn ring_spectrum(n: usize, sr: f64, rng: &mut Pcg64) -> Spectrum {
+    assert!(sr > 0.0, "ring prior needs a positive spectral radius");
+    let n_real = real_count_with_parity(n);
+    let n_cpx = (n - n_real) / 2;
+    let mut lam = Vec::with_capacity(n_real + n_cpx);
+    for _ in 0..n_real {
+        let sign = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+        lam.push(c64::real(sign * sr));
+    }
+    for _ in 0..n_cpx {
+        let mut theta = rng.uniform(0.0, std::f64::consts::PI);
+        if theta == 0.0 {
+            theta = f64::EPSILON;
+        }
+        lam.push(c64::from_polar(sr, theta));
+    }
+    Spectrum::new(n, n_real, lam)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +123,40 @@ mod tests {
             assert_eq!(s.n, n);
             assert_eq!(s.full().len(), n);
         }
+    }
+
+    #[test]
+    fn ring_places_every_mode_on_the_circle() {
+        let mut rng = Pcg64::seeded(5);
+        let sr = 0.85;
+        let s = ring_spectrum(100, sr, &mut rng);
+        assert_eq!(s.n, 100);
+        for z in &s.lam {
+            assert!(
+                (z.abs() - sr).abs() < 1e-15,
+                "|λ|={} off the ring {sr}",
+                z.abs()
+            );
+        }
+        for z in &s.lam[s.n_real..] {
+            assert!(z.im > 0.0);
+        }
+        // conjugate-closed like every slot-form spectrum
+        let sum_im: f64 = s.full().iter().map(|z| z.im).sum();
+        assert!(sum_im.abs() < 1e-12);
+        // both real signs appear over a few draws
+        let mut saw = (false, false);
+        for seed in 0..8 {
+            let mut r = Pcg64::seeded(seed);
+            let s = ring_spectrum(100, sr, &mut r);
+            for z in &s.lam[..s.n_real] {
+                if z.re > 0.0 {
+                    saw.0 = true;
+                } else {
+                    saw.1 = true;
+                }
+            }
+        }
+        assert!(saw.0 && saw.1, "ring reals must use both signs");
     }
 }

@@ -1474,3 +1474,97 @@ fn torn_standby_delta_frames_never_apply_partially() {
     drop(promoted);
     replica.join().unwrap();
 }
+
+// ---------------------------------------------------------------------------
+// PR 9: registry budget exhaustion — typed refusal, nothing allocated
+// ---------------------------------------------------------------------------
+
+fn create_model_req(seed: u64, n: usize, sr: f64) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("create_model".into())),
+        ("seed", Json::Num(seed as f64)),
+        ("n", Json::Num(n as f64)),
+        ("spectral_radius", Json::Num(sr)),
+    ])
+}
+
+fn bind_model_req(model: u64) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("ping".into())),
+        ("model", Json::Num(model as f64)),
+    ])
+}
+
+/// `create_model` past `--max-models` must answer the typed
+/// `model_budget` error BEFORE minting anything: the registry count is
+/// unchanged, the refused recipe's (deterministic) id stays unknown, the
+/// already-registered tenant keeps serving, and the idempotent re-create
+/// of an existing recipe still succeeds inside the exhausted budget —
+/// on both transports.
+#[test]
+fn model_budget_exhaustion_refuses_typed_and_allocates_nothing() {
+    use linear_reservoir::server::ModelRecipe;
+    let model = make_model(Precision::F64);
+    let task = MsoTask::new(1);
+    for threaded in [false, true] {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let m = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                m,
+                Some(8),
+                ServeOpts {
+                    shards: Some(1),
+                    threaded,
+                    max_models: Some(1),
+                    ..Default::default()
+                },
+            )
+            .map(|_| ())
+            .unwrap();
+        });
+        let mut c = CClient::connect(&addr);
+        // fill the single budget slot
+        let resp = c.request(&create_model_req(7, 40, 0.8));
+        assert_eq!(
+            resp.get("ok"),
+            Some(&Json::Bool(true)),
+            "first create must fit the budget: {resp:?}"
+        );
+        let a = resp.get("model").and_then(Json::as_f64).unwrap() as u64;
+        // the wall: a second DISTINCT recipe refuses typed
+        c.expect_code(&create_model_req(8, 40, 0.8), "model_budget");
+        // nothing was allocated: exactly one tenant registered
+        let info = c.info();
+        assert_eq!(
+            info.get("models").and_then(Json::as_f64),
+            Some(1.0),
+            "threaded={threaded}: a refused create left registry residue"
+        );
+        assert_eq!(info.get("max_models").and_then(Json::as_f64), Some(1.0));
+        // the refused recipe's id (a pure function of the recipe) does
+        // not exist — no half-created tenant to bind to
+        let refused = ModelRecipe::new(8, 40, 0.8, "uniform").unwrap().id();
+        let mut c2 = CClient::connect(&addr);
+        c2.expect_code(&bind_model_req(refused), "unknown_model");
+        // idempotent re-create of the EXISTING recipe still succeeds
+        // against the exhausted budget (nothing new to allocate)
+        let resp = c.request(&create_model_req(7, 40, 0.8));
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("created"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("model").and_then(Json::as_f64), Some(a as f64));
+        // and the registered tenant still serves
+        let mut ct = CClient::connect(&addr);
+        let bound = ct.request(&bind_model_req(a));
+        assert_eq!(bound.get("ok"), Some(&Json::Bool(true)));
+        let out = ct.output_of(&stream_req(&task.input[..10]));
+        assert_eq!(out.len(), 10);
+        c.drain();
+        drop(c);
+        drop(c2);
+        drop(ct);
+        handle.join().unwrap();
+    }
+}

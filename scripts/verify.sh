@@ -12,14 +12,16 @@
 # degradation must be a typed error, never a hang), and the quick
 # reservoir bench (precision-ladder, sharded-serving, event-loop wire,
 # fused/online training, the PR6 checkpoint/restore + failover-storm
-# rows, the PR7 lane-mobility rows, and the PR8 cluster-failover storm:
-# kill → detect → promote → redirect), persisting the machine-readable
-# perf snapshot as BENCH_pr8.json at the repo root — the committed
-# perf-trajectory artifact (BENCH_reservoir_run.json is kept as an
-# uncommitted working copy for tooling that greps the legacy name).
+# rows, the PR7 lane-mobility rows, the PR8 cluster-failover storm:
+# kill → detect → promote → redirect, and the PR9 multi-tenant rows:
+# registry mint throughput + 128 distinct models through one sweeper),
+# persisting the machine-readable perf snapshot as BENCH_pr9.json at
+# the repo root — the committed perf-trajectory artifact
+# (BENCH_reservoir_run.json is kept as an uncommitted working copy for
+# tooling that greps the legacy name).
 # Fails if the precision, sharding, event-loop, training,
-# fault-tolerance, or lane-mobility rows are missing, non-finite, or
-# report zero throughput.
+# fault-tolerance, lane-mobility, or multi-tenant rows are missing,
+# non-finite, or report zero throughput.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -35,18 +37,18 @@ cargo test -q --features plain-kernel --lib reservoir::batch
 echo "== cargo test -q --features fault-inject --test chaos (chaos suite) =="
 cargo test -q --features fault-inject --test chaos
 
-echo "== cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr8.json =="
+echo "== cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr9.json =="
 # fault-inject makes the failover-storm row use REAL contained sweeper
 # panics (without it the row still exists via teardown/reconnect cycles)
-cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr8.json
-cp BENCH_pr8.json BENCH_reservoir_run.json
+cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr9.json
+cp BENCH_pr9.json BENCH_reservoir_run.json
 
 echo "== bench sanity: precision/sharded/evloop/training/failover rows present, finite, non-zero =="
 if command -v python3 >/dev/null 2>&1; then
   python3 - <<'EOF'
 import json, math, sys
 
-doc = json.load(open("BENCH_pr8.json"))
+doc = json.load(open("BENCH_pr9.json"))
 rows = {r.get("name"): r for r in doc.get("results", [])}
 required = [
     "f32_batch8_N1000", "f64_batch8_N1000",
@@ -62,6 +64,8 @@ required = [
     "checkpoint_restore_N1000", "derived_failover_N1000",
     "migrate_lane_N1000", "standby_delta_N1000", "derived_rebalance_N1000",
     "failover_cluster_N1000",
+    "create_model_N1000", "tenant128_batch64_N1000",
+    "derived_tenant128_batch64_N1000",
 ]
 for name in required:
     if name not in rows:
@@ -108,6 +112,12 @@ d = rows["failover_cluster_N1000"]
 print(f"  cluster: failover storm {d['storm_steps_per_sec']:.3e} steps/s, "
       f"outage {d['outage_ms']:.1f}ms "
       f"({int(d['lanes_promoted'])} lane(s) promoted via redirects)")
+d = rows["derived_tenant128_batch64_N1000"]
+if d["create_models_per_sec"] <= 0:
+    sys.exit("FAIL: zero create_model throughput in derived_tenant128_batch64_N1000")
+print(f"  tenants: mint {d['create_models_per_sec']:.3e} models/s, "
+      f"128-model sweep {d['tenant_steps_per_sec']:.3e} steps/s "
+      f"({d['ratio_vs_single_model']:.2f}x of single-model)")
 print("bench rows OK")
 EOF
 else
@@ -122,17 +132,19 @@ else
              train_online_wire_N1000 derived_train_N1000 \
              checkpoint_restore_N1000 derived_failover_N1000 \
              migrate_lane_N1000 standby_delta_N1000 \
-             derived_rebalance_N1000 failover_cluster_N1000; do
-    grep -q "\"$row\"" BENCH_pr8.json \
+             derived_rebalance_N1000 failover_cluster_N1000 \
+             create_model_N1000 tenant128_batch64_N1000 \
+             derived_tenant128_batch64_N1000; do
+    grep -q "\"$row\"" BENCH_pr9.json \
       || { echo "FAIL: missing bench row $row"; exit 1; }
   done
-  if grep -qiE '(nan|inf)' BENCH_pr8.json; then
-    echo "FAIL: non-finite value in BENCH_pr8.json"; exit 1
+  if grep -qiE '(nan|inf)' BENCH_pr9.json; then
+    echo "FAIL: non-finite value in BENCH_pr9.json"; exit 1
   fi
   # the JSON writer prints integral values without decimals, so a zero
   # throughput is exactly `0` before the comma/EOL (0.97 must NOT match)
-  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr8.json; then
-    echo "FAIL: zero throughput row in BENCH_pr8.json"; exit 1
+  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr9.json; then
+    echo "FAIL: zero throughput row in BENCH_pr9.json"; exit 1
   fi
   echo "bench rows OK (grep fallback)"
 fi
