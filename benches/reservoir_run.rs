@@ -1127,6 +1127,145 @@ fn main() {
         ]));
     }
 
+    // --- PR10: wire-path scale-out — poll threads × frame codec ---------
+    // Requests/sec (NOT steps/sec) at pipelined saturation: C client
+    // threads each keep `depth` predicts in flight over one connection,
+    // against the event-loop transport at P ∈ {1, 2, 4} poll threads,
+    // once over JSON lines and once over binary frames. The predict is
+    // deliberately wire-heavy (256 floats each way): at P=1 the single
+    // poll thread's parse/format work is the bottleneck, so the binary
+    // codec (raw LE bits, no float formatting) must beat JSON on rps,
+    // and spreading the codec work across P=4 poll threads must add rps
+    // on top. Two shards keep the sweep itself off the critical path.
+    // Rows run in quick mode too — they are the acceptance artifact for
+    // the wire-path scale-out.
+    {
+        let n = 1000;
+        let conns = 8usize;
+        let depth = if quick { 8usize } else { 16 };
+        let steps = 256usize;
+        println!(
+            "wire-path scale-out, N = {n}, conns = {conns}, depth = {depth}, \
+             steps/predict = {steps}"
+        );
+        let config = EsnConfig::default().with_n(n).with_seed(2);
+        let mut gen_rng = Pcg64::new(29, 117);
+        let spec = uniform_spectrum(n, 0.9, &mut gen_rng);
+        let diag = DiagonalEsn::from_dpg(spec, &config, &mut gen_rng);
+        let readout = Readout {
+            w: Mat::randn(n, 1, &mut gen_rng),
+            b: vec![0.1],
+        };
+        let model = Arc::new(Model::new(diag, readout));
+        let input: Vec<f64> = Mat::randn(steps, 1, &mut rng).data().to_vec();
+        let predict_req = Json::obj(vec![
+            ("op", Json::Str("predict".into())),
+            (
+                "input",
+                Json::Arr(input.iter().map(|&x| Json::Num(x)).collect()),
+            ),
+        ]);
+        let mut json_rps = Vec::new();
+        let mut bin_rps = Vec::new();
+        for &p in &[1usize, 2, 4] {
+            for binary in [false, true] {
+                let listener =
+                    std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+                let addr = listener.local_addr().unwrap().to_string();
+                let server_model = Arc::clone(&model);
+                let server = std::thread::spawn(move || {
+                    serve_on_opts(
+                        listener,
+                        server_model,
+                        Some(conns),
+                        ServeOpts {
+                            shards: Some(2),
+                            poll_threads: p,
+                            ..Default::default()
+                        },
+                    )
+                    .map(|_| ())
+                    .unwrap();
+                });
+                let mut cs: Vec<Client> = (0..conns)
+                    .map(|_| {
+                        let mut c = Client::connect(&addr).unwrap();
+                        if binary {
+                            c.upgrade_binary().unwrap();
+                        }
+                        c
+                    })
+                    .collect();
+                let codec = if binary { "binary" } else { "json" };
+                let r = bench(
+                    &format!("wirepath_rps_p{p}_N{n}_{codec}"),
+                    cfg,
+                    || {
+                        // one saturation wave: every connection keeps
+                        // `depth` requests pipelined, driven from its own
+                        // client thread so the (single-threaded) bench
+                        // client can't hide server-side scaling
+                        std::thread::scope(|scope| {
+                            for c in cs.iter_mut() {
+                                let req = &predict_req;
+                                scope.spawn(move || {
+                                    for _ in 0..depth {
+                                        c.send(req).unwrap();
+                                    }
+                                    for _ in 0..depth {
+                                        std::hint::black_box(
+                                            c.recv().unwrap(),
+                                        );
+                                    }
+                                });
+                            }
+                        });
+                    },
+                );
+                push(&mut rows, &r);
+                let rps = (conns * depth) as f64 / r.per_iter.median;
+                println!("  P={p} {codec}: {rps:.3e} req/s");
+                if binary {
+                    bin_rps.push(rps);
+                } else {
+                    json_rps.push(rps);
+                }
+                drop(cs);
+                server.join().unwrap();
+            }
+        }
+        println!(
+            "  binary vs json @P=1: {:.2}x | scaling P=4/P=1: json {:.2}x, \
+             binary {:.2}x\n",
+            bin_rps[0] / json_rps[0],
+            json_rps[2] / json_rps[0],
+            bin_rps[2] / bin_rps[0]
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::Str(format!("derived_wirepath_N{n}"))),
+            ("n_reservoir", Json::Num(n as f64)),
+            ("conns", Json::Num(conns as f64)),
+            ("depth", Json::Num(depth as f64)),
+            ("steps_per_predict", Json::Num(steps as f64)),
+            ("json_rps_p1", Json::Num(json_rps[0])),
+            ("json_rps_p2", Json::Num(json_rps[1])),
+            ("json_rps_p4", Json::Num(json_rps[2])),
+            ("binary_rps_p1", Json::Num(bin_rps[0])),
+            ("binary_rps_p2", Json::Num(bin_rps[1])),
+            ("binary_rps_p4", Json::Num(bin_rps[2])),
+            (
+                "binary_over_json_p1",
+                Json::Num(bin_rps[0] / json_rps[0]),
+            ),
+            (
+                "binary_over_json_p4",
+                Json::Num(bin_rps[2] / json_rps[2]),
+            ),
+            ("json_scaling_p4", Json::Num(json_rps[2] / json_rps[0])),
+            ("binary_scaling_p4", Json::Num(bin_rps[2] / bin_rps[0])),
+        ]));
+    }
+
     if let Some(path) = json_path {
         let doc = Json::obj(vec![
             ("bench", Json::Str("reservoir_run".into())),

@@ -244,5 +244,29 @@ fn main() -> anyhow::Result<()> {
     //     over-budget creates answer `model_budget` with nothing
     //     allocated. In-process: `Client::create_model`/`delete_model`.
     //     DESIGN.md §13 has the recipe/identity/grouping contract.
+
+    // 15. WIRE-PATH SCALE-OUT: when request RATE (not connection count)
+    //     is the ceiling, shard the event loop and drop the text codec:
+    //
+    //       $ repro serve --poll-threads 4
+    //
+    //     Accepted connections are dealt round-robin across 4 epoll
+    //     loops, each owning its conns' buffers, idle wheel, and
+    //     completions — sweepers/shards/cluster/registry unchanged, and
+    //     `--poll-threads 1` (the default) is bit-identical to before.
+    //     Any client can then upgrade its OWN connection to length-
+    //     prefixed binary frames — raw little-endian float bits, no
+    //     float formatting on either side, same typed error codes —
+    //     by sending the 8-byte hello as its first bytes
+    //     (`Client::upgrade_binary()`; the demo client is
+    //     `cargo run --release --example serve_demo -- --binary`).
+    //     JSON connections on the same port are untouched: the server
+    //     sniffs the first bytes, and '{' is not 'L'. Responses are
+    //     bit-identical across codecs (A/B-enforced); `{"op":"info"}`
+    //     shows `poll_threads`, your `poll_thread`, `binary_conns`,
+    //     and per-thread `poll_rounds`. Bench rows
+    //     `wirepath_rps_p{1,2,4}_N1000_{json,binary}` gate the win in
+    //     requests/sec. DESIGN.md §14 has the frame layout and the
+    //     negotiation state machine.
     Ok(())
 }

@@ -39,8 +39,15 @@ fn main() -> anyhow::Result<()> {
     let server_model = Arc::clone(&model);
     let handle =
         std::thread::spawn(move || serve_on(listener, server_model, Some(1), 0, None, false));
-    // client: batch of requests
+    // client: batch of requests; --binary upgrades the connection to
+    // the length-prefixed frame protocol (raw LE floats, no float
+    // formatting either side) — responses are bit-identical to JSON
+    let binary = std::env::args().any(|a| a == "--binary");
     let mut client = Client::connect(&addr)?;
+    if binary {
+        client.upgrade_binary()?;
+        println!("client upgraded to binary frames");
+    }
     let requests = 50;
     let t = Timer::start();
     let mut last = Vec::new();

@@ -175,6 +175,21 @@ mod tests {
     }
 
     #[test]
+    fn wirepath_flags_parse() {
+        // the PR-10 wire-path surface: --poll-threads shards the event
+        // loop, --binary is the client-side frame-protocol opt-in (a
+        // bare flag, used by the demo/bench client drivers)
+        let a = parse("serve --poll-threads 4 --binary").unwrap();
+        assert_eq!(a.get_usize("poll-threads", 1).unwrap(), 4);
+        assert!(a.flag("binary"));
+        let b = parse("serve").unwrap();
+        assert_eq!(b.get_usize("poll-threads", 1).unwrap(), 1);
+        assert!(!b.flag("binary"));
+        let c = parse("serve --poll-threads many").unwrap();
+        assert!(c.get_usize("poll-threads", 1).is_err());
+    }
+
+    #[test]
     fn optional_u64_distinguishes_absent_from_zero() {
         let a = parse("serve --trainer-budget-mb 0").unwrap();
         assert_eq!(a.get_opt_u64("trainer-budget-mb").unwrap(), Some(0));

@@ -35,6 +35,8 @@
 //!                                  # (0 = base model only)
 //!              [--pin-cores]  # pin each shard's sweeper thread to a
 //!                             # core (round-robin sched_setaffinity)
+//!              [--poll-threads P]  # shard connections across P epoll
+//!                                  # threads (1 = classic single loop)
 //! repro all    [--quick]       # every driver with small budgets
 //! ```
 
@@ -317,6 +319,10 @@ fn dispatch(args: &Args) -> Result<()> {
             // cores) so NUMA-local planes stay local; reported per
             // shard as `pinned_cores` in `info`
             let pin_cores = args.flag("pin-cores");
+            // --poll-threads: shard connections across P epoll threads
+            // (event-loop transport only; 1 = the classic single poll
+            // thread, bit-identical)
+            let poll_threads = args.get_usize("poll-threads", 1)?.max(1);
             let listener = std::net::TcpListener::bind(addr)?;
             let bound = listener.local_addr()?;
             // the timer wheel lives in the event loop; on the threaded
@@ -360,9 +366,9 @@ fn dispatch(args: &Args) -> Result<()> {
                 },
                 if pin_cores { "on" } else { "off" },
                 if event_loop {
-                    "epoll event loop"
+                    format!("epoll event loop × {poll_threads} poll thread(s)")
                 } else {
-                    "thread-per-connection"
+                    "thread-per-connection".into()
                 }
             );
             serve_on_opts(
@@ -385,6 +391,7 @@ fn dispatch(args: &Args) -> Result<()> {
                     holdoff_auto,
                     max_models,
                     pin_cores,
+                    poll_threads,
                     // operator-facing binary: SIGTERM means "drain, don't
                     // drop" (library embedders opt in via ServeOpts)
                     drain_on_sigterm: true,

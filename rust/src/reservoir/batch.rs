@@ -484,6 +484,49 @@ impl<S: Scalar> BatchEsn<S> {
         self.batch
     }
 
+    /// Fault every plane's pages in from the CALLING thread. `vec![ZERO;
+    /// n]` goes through `alloc_zeroed`, so the planes arrive as untouched
+    /// copy-on-write zero pages — and Linux's default first-touch NUMA
+    /// policy homes each page on the node of the thread that first
+    /// WRITES it, which for lazily-faulted planes would be whichever
+    /// thread ran the first sweep. A pinned sweeper calls this right
+    /// after construction so every state/parameter plane is stamped onto
+    /// its own core's node. One volatile rewrite of the resident value
+    /// per page (plus the last element), so contents are untouched and
+    /// the pass costs one page fault per page — the faults construction
+    /// deferred.
+    pub fn first_touch(&mut self) {
+        fn touch<T: Copy>(v: &mut [T]) {
+            if v.is_empty() {
+                return;
+            }
+            let stride = (4096 / std::mem::size_of::<T>()).max(1);
+            let mut i = 0;
+            while i < v.len() {
+                // SAFETY: i < v.len(); volatile keeps the write from
+                // being elided as a no-op store of the value just read
+                unsafe {
+                    let p = v.as_mut_ptr().add(i);
+                    std::ptr::write_volatile(p, std::ptr::read_volatile(p));
+                }
+                i += stride;
+            }
+            let last = v.len() - 1;
+            unsafe {
+                let p = v.as_mut_ptr().add(last);
+                std::ptr::write_volatile(p, std::ptr::read_volatile(p));
+            }
+        }
+        touch(&mut self.lam_re);
+        touch(&mut self.lam_im);
+        touch(&mut self.win_re);
+        touch(&mut self.win_im);
+        touch(&mut self.re);
+        touch(&mut self.im);
+        touch(&mut self.u_pad);
+        touch(&mut self.mask_pad);
+    }
+
     pub fn n(&self) -> usize {
         self.engine.n()
     }

@@ -1,0 +1,1006 @@
+//! Negotiated length-prefixed binary frame protocol — the wire-path
+//! fast lane next to the line-delimited JSON protocol.
+//!
+//! Motivation: at high REQUEST rates the serving ceiling is not the
+//! O(N) sweep but the per-request `f64` Display/parse on the poll
+//! thread — formatting a predict-sized float array costs more cycles
+//! than computing it. Binary frames carry raw little-endian IEEE-754
+//! bits in both directions, so the hot path stops paying for float
+//! formatting entirely.
+//!
+//! Negotiation (first bytes of a fresh connection, server side):
+//!
+//! ```text
+//!   first byte != 'L' ──────────────► JSON (today's protocol, default)
+//!   "LRBF" + version + 3 reserved ──► server acks 8 bytes, conn is
+//!                                     binary-framed from then on
+//!   "L..." that diverges from magic ► JSON (bytes are the line start)
+//!   "LRBF" + wrong version ─────────► typed `bad_frame` error, close
+//! ```
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//!   request:  [u32 body_len] [u8 op] [u8 flags]
+//!             [f64 deadline_ms]?   (flags bit 0)
+//!             [f64 model]?         (flags bit 1)
+//!             [payload…]           (f32 wide when flags bit 2)
+//!   response: [u32 body_len] [u8 status] [payload…]
+//! ```
+//!
+//! Compact ops (ping/info/predict/stream/train/commit/rollback/reset)
+//! carry raw float arrays; every other op tunnels its compact JSON
+//! request text in an `OP_JSON` frame and is parsed by the SAME
+//! [`parse_op`] as the JSON transport — dispatch is shared op-for-op,
+//! so the two protocols cannot drift. Responses are shape-matched from
+//! the SAME [`Json`] the JSON transport would serialize: float-shaped
+//! responses go out as raw `f64` bits, everything else as compact JSON
+//! text (`OK_JSON`), so a binary client reconstructs a `Json` value
+//! structurally identical to what a JSON client parses — bit-exact
+//! floats included (the JSON path prints shortest-round-trip).
+//!
+//! Error parity: decode failures that keep the stream framed (the body
+//! length was consumed exactly) answer the typed `bad_frame` error and
+//! the connection lives on; failures that LOSE framing (oversized
+//! length prefix, a frame torn by EOF) answer `bad_frame` and close —
+//! the length field can no longer be trusted. Semantic validation
+//! (deadline range, row caps, alpha sign) raises the same error text as
+//! the JSON parser, answered as an ordinary error response.
+
+use std::io::{ErrorKind, Read};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{parse, Json};
+
+use super::registry::ModelId;
+use super::wire::{
+    coded_error, error_response, parse_op, Op, DEFAULT_COMMIT_ALPHA,
+    MAX_TRAIN_ROWS_PER_OP,
+};
+
+// ---------------------------------------------------------------------------
+// hello
+// ---------------------------------------------------------------------------
+
+pub(crate) const MAGIC: [u8; 4] = *b"LRBF";
+pub(crate) const VERSION: u8 = 1;
+pub(crate) const HELLO_LEN: usize = 8;
+
+/// Client → server upgrade hello: magic, version, 3 reserved zeros.
+pub(crate) fn client_hello() -> [u8; HELLO_LEN] {
+    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], VERSION, 0, 0, 0]
+}
+
+/// Server → client upgrade ack. Byte 5 distinguishes the ack from an
+/// echoed hello so a cross-wired client can't mistake its own bytes.
+pub(crate) fn server_hello() -> [u8; HELLO_LEN] {
+    [MAGIC[0], MAGIC[1], MAGIC[2], MAGIC[3], VERSION, 0xAC, 0, 0]
+}
+
+/// One frame body longer than this is not protocol traffic — the same
+/// bound as the JSON transport's `MAX_LINE_BYTES`, so neither codec
+/// buffers unboundedly.
+pub(crate) const MAX_FRAME_BYTES: usize = 64 << 20;
+
+// request op bytes
+const OP_PING: u8 = 1;
+const OP_INFO: u8 = 2;
+const OP_PREDICT: u8 = 3;
+const OP_STREAM: u8 = 4;
+const OP_TRAIN: u8 = 5;
+const OP_COMMIT: u8 = 6;
+const OP_ROLLBACK: u8 = 7;
+const OP_RESET: u8 = 8;
+/// Tunnel: the body is the compact JSON request text, parsed by
+/// [`parse_op`] — covers checkpoint/restore/migrate/registry/drain ops
+/// whose payloads are structured, not float arrays.
+const OP_JSON: u8 = 9;
+
+// request flags
+const FLAG_DEADLINE: u8 = 1 << 0;
+const FLAG_MODEL: u8 = 1 << 1;
+/// Payload floats are `f32` little-endian (half the wire bytes); the
+/// server widens exactly (`f32 as f64` is value-preserving).
+const FLAG_F32: u8 = 1 << 2;
+/// A scalar operand follows the header (`commit` alpha / `rollback`
+/// version); absent means the op's documented default.
+const FLAG_SCALAR: u8 = 1 << 3;
+const FLAG_KNOWN: u8 = FLAG_DEADLINE | FLAG_MODEL | FLAG_F32 | FLAG_SCALAR;
+
+// response status bytes
+const ST_OK_VALUES: u8 = 0;
+const ST_ERR: u8 = 1;
+const ST_OK_JSON: u8 = 2;
+const ST_OK_SCALAR: u8 = 3;
+const ST_OK_PREDICT: u8 = 4;
+const ST_OK_EMPTY: u8 = 5;
+
+// scalar response kinds
+const SC_ROWS: u8 = 0;
+const SC_VERSION: u8 = 1;
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Result of scanning a read buffer for the next complete frame.
+pub(crate) enum Framing {
+    /// The buffer holds no complete frame yet — keep reading.
+    NeedMore,
+    /// `rbuf[start..end]` is the next frame body; the following frame
+    /// begins at `next` (== `end`).
+    Frame { start: usize, end: usize, next: usize },
+    /// The length prefix exceeds [`MAX_FRAME_BYTES`]: framing is lost
+    /// (the field can't be trusted as a skip distance) — answer
+    /// `bad_frame`, close.
+    Oversized,
+}
+
+/// Bounds of the next complete frame at/after `from` — the binary twin
+/// of the JSON transport's `next_line_bounds`. Pure scan; the caller
+/// compacts the buffer once per readiness round.
+pub(crate) fn split_frame(rbuf: &[u8], from: usize) -> Framing {
+    let avail = rbuf.len().saturating_sub(from);
+    if avail < 4 {
+        return Framing::NeedMore;
+    }
+    let len = u32::from_le_bytes([
+        rbuf[from],
+        rbuf[from + 1],
+        rbuf[from + 2],
+        rbuf[from + 3],
+    ]) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Framing::Oversized;
+    }
+    if avail < 4 + len {
+        return Framing::NeedMore;
+    }
+    Framing::Frame {
+        start: from + 4,
+        end: from + 4 + len,
+        next: from + 4 + len,
+    }
+}
+
+/// Outcome of a blocking frame read (threaded transport + client side).
+pub(crate) enum ReadFrame {
+    /// Clean EOF between frames.
+    Eof,
+    /// EOF tore a frame mid-prefix or mid-body — `bad_frame`, close.
+    TornEof,
+    /// Length prefix exceeds the cap — `bad_frame`, close.
+    Oversized,
+    /// One complete frame body.
+    Frame(Vec<u8>),
+}
+
+/// Read exactly one length-prefixed frame from a blocking stream.
+pub(crate) fn read_frame(r: &mut impl Read) -> std::io::Result<ReadFrame> {
+    let mut len4 = [0u8; 4];
+    match read_full(r, &mut len4)? {
+        0 => return Ok(ReadFrame::Eof),
+        4 => {}
+        _ => return Ok(ReadFrame::TornEof),
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Ok(ReadFrame::Oversized);
+    }
+    let mut body = vec![0u8; len];
+    if read_full(r, &mut body)? < len {
+        return Ok(ReadFrame::TornEof);
+    }
+    Ok(ReadFrame::Frame(body))
+}
+
+/// Fill `buf` as far as the stream allows; returns bytes read (short on
+/// EOF). Interrupted reads retry in place.
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<usize> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// The typed refusal a transport writes before closing a connection
+/// whose binary framing is lost (torn or oversized frame).
+pub(crate) fn bad_frame_close_frame() -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_response(&error_response(&coded_error("bad_frame")), &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// request codec
+// ---------------------------------------------------------------------------
+
+/// Encode a request `Json` (the same object a JSON client would print)
+/// as one binary frame. Float-array ops go out compact — raw `f64`
+/// bits, no formatting; anything that doesn't fit the compact form
+/// (structured payloads, or fields the compact header can't carry)
+/// tunnels its compact JSON text in an [`OP_JSON`] frame, so the server
+/// applies literally the same parse — identical errors included.
+pub(crate) fn encode_request(req: &Json) -> Vec<u8> {
+    match compact_request(req) {
+        Some(frame) => frame,
+        None => {
+            let text = req.to_string_compact();
+            let mut out = Vec::with_capacity(4 + 2 + text.len());
+            out.extend_from_slice(&((text.len() + 2) as u32).to_le_bytes());
+            out.push(OP_JSON);
+            out.push(0); // flags
+            out.extend_from_slice(text.as_bytes());
+            out
+        }
+    }
+}
+
+/// Try the compact encoding; `None` falls back to the JSON tunnel.
+fn compact_request(req: &Json) -> Option<Vec<u8>> {
+    let op_name = req.get("op").and_then(Json::as_str)?;
+    // header floats: absent (None in the Option) or the raw value; a
+    // non-numeric field can't ride the header — tunnel it so the
+    // server's JSON parser produces the identical type error
+    let deadline = match req.get("deadline_ms") {
+        None | Some(Json::Null) => None,
+        Some(Json::Num(x)) => Some(*x),
+        Some(_) => return None,
+    };
+    let model = match req.get("model") {
+        None | Some(Json::Null) => None,
+        Some(Json::Num(x)) => Some(*x),
+        Some(_) => return None,
+    };
+    let (op_byte, scalar, payload): (u8, Option<f64>, Vec<f64>) = match op_name {
+        "ping" => (OP_PING, None, Vec::new()),
+        "info" => (OP_INFO, None, Vec::new()),
+        "reset" => (OP_RESET, None, Vec::new()),
+        "predict" => (OP_PREDICT, None, nums(req.get("input")?)?),
+        "stream" => (OP_STREAM, None, nums(req.get("input")?)?),
+        "train" => {
+            let input = nums(req.get("input")?)?;
+            let target = nums(req.get("target")?)?;
+            if input.len() != target.len() {
+                // the compact frame shares one count for both arrays;
+                // let the JSON parser issue its mismatch error
+                return None;
+            }
+            let mut both = input;
+            both.extend_from_slice(&target);
+            (OP_TRAIN, None, both)
+        }
+        "commit" => match req.get("alpha") {
+            None => (OP_COMMIT, None, Vec::new()),
+            Some(Json::Num(a)) => (OP_COMMIT, Some(*a), Vec::new()),
+            // alpha:null errors "non-numeric" in the JSON parser —
+            // tunnel so the refusal is identical
+            Some(_) => return None,
+        },
+        "rollback" => match req.get("version") {
+            None | Some(Json::Null) => (OP_ROLLBACK, None, Vec::new()),
+            Some(Json::Num(v)) => (OP_ROLLBACK, Some(*v), Vec::new()),
+            Some(_) => return None,
+        },
+        _ => return None,
+    };
+    let mut flags = 0u8;
+    let mut body_len = 2usize;
+    if deadline.is_some() {
+        flags |= FLAG_DEADLINE;
+        body_len += 8;
+    }
+    if model.is_some() {
+        flags |= FLAG_MODEL;
+        body_len += 8;
+    }
+    if scalar.is_some() {
+        flags |= FLAG_SCALAR;
+        body_len += 8;
+    }
+    if !payload.is_empty() || matches!(op_byte, OP_PREDICT | OP_STREAM | OP_TRAIN)
+    {
+        body_len += 4 + 8 * payload.len();
+    }
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(op_byte);
+    out.push(flags);
+    if let Some(ms) = deadline {
+        out.extend_from_slice(&ms.to_le_bytes());
+    }
+    if let Some(m) = model {
+        out.extend_from_slice(&m.to_le_bytes());
+    }
+    if let Some(s) = scalar {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    if matches!(op_byte, OP_PREDICT | OP_STREAM) {
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        for v in &payload {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    } else if op_byte == OP_TRAIN {
+        out.extend_from_slice(&((payload.len() / 2) as u32).to_le_bytes());
+        for v in &payload {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    Some(out)
+}
+
+/// All-numeric JSON array → raw values (`None` → tunnel).
+fn nums(v: &Json) -> Option<Vec<f64>> {
+    let arr = v.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        out.push(e.as_f64()?);
+    }
+    Some(out)
+}
+
+/// Frame-shape violation: the typed `bad_frame` refusal (the stream
+/// stays framed — the body length was consumed exactly — so the
+/// connection survives; only torn/oversized framing closes it).
+fn bad_frame(what: &str) -> anyhow::Error {
+    coded_error("bad_frame").context(format!("binary frame: {what}"))
+}
+
+/// Decode one request frame body into the SAME `(op, deadline, model)`
+/// tuple [`parse_op`] produces — semantic validation mirrors the JSON
+/// parser clause for clause (same error text), and tunnel frames go
+/// through `parse_op` itself.
+pub(crate) fn decode_request(
+    body: &[u8],
+) -> Result<(Op, Option<Duration>, Option<ModelId>)> {
+    let mut c = Cur { buf: body, pos: 0 };
+    let op_byte = c.u8()?;
+    let flags = c.u8()?;
+    if flags & !FLAG_KNOWN != 0 {
+        return Err(bad_frame("unknown flag bits"));
+    }
+    if op_byte == OP_JSON {
+        if flags != 0 {
+            return Err(bad_frame("tunnel frame carries header flags"));
+        }
+        let text = std::str::from_utf8(&body[c.pos..])
+            .map_err(|_| bad_frame("tunnel body is not UTF-8"))?;
+        return parse_op(text);
+    }
+    // header fields first (fixed order), mirroring parse_op's
+    // validation messages exactly
+    let deadline = if flags & FLAG_DEADLINE != 0 {
+        let ms = c.f64()?;
+        anyhow::ensure!(
+            ms.is_finite() && ms >= 0.0,
+            "'deadline_ms' must be a finite non-negative number"
+        );
+        Some(
+            Duration::try_from_secs_f64(ms / 1000.0)
+                .map_err(|_| anyhow!("'deadline_ms' out of range"))?,
+        )
+    } else {
+        None
+    };
+    let model = if flags & FLAG_MODEL != 0 {
+        let x = c.f64()?;
+        anyhow::ensure!(
+            x.is_finite() && x >= 0.0 && x.fract() == 0.0,
+            "'model' must be a non-negative integer"
+        );
+        Some(x as u64)
+    } else {
+        None
+    };
+    let scalar = if flags & FLAG_SCALAR != 0 {
+        Some(c.f64()?)
+    } else {
+        None
+    };
+    let wide = flags & FLAG_F32 == 0;
+    let op = match op_byte {
+        OP_PING => Op::Ping,
+        OP_INFO => Op::Info,
+        OP_RESET => Op::Reset,
+        OP_PREDICT => Op::Predict(c.floats(c.u32()? as usize, wide)?),
+        OP_STREAM => Op::Stream(c.floats(c.u32()? as usize, wide)?),
+        OP_TRAIN => {
+            let n = c.u32()? as usize;
+            anyhow::ensure!(
+                n <= MAX_TRAIN_ROWS_PER_OP,
+                "train op too large ({} rows; max {MAX_TRAIN_ROWS_PER_OP} \
+                 per op — split the stream across multiple ops)",
+                n
+            );
+            let input = c.floats(n, wide)?;
+            let target = c.floats(n, wide)?;
+            Op::Train { input, target }
+        }
+        OP_COMMIT => {
+            let alpha = scalar.unwrap_or(DEFAULT_COMMIT_ALPHA);
+            anyhow::ensure!(
+                alpha.is_finite() && alpha >= 0.0,
+                "'alpha' must be a finite non-negative number"
+            );
+            Op::Commit { alpha }
+        }
+        OP_ROLLBACK => {
+            let version = match scalar {
+                None => 0,
+                Some(v) => {
+                    anyhow::ensure!(
+                        v.is_finite() && v >= 0.0 && v.fract() == 0.0,
+                        "'version' must be a non-negative integer"
+                    );
+                    v as u64
+                }
+            };
+            Op::Rollback { version }
+        }
+        other => return Err(bad_frame(&format!("unknown op byte {other}"))),
+    };
+    if c.pos != body.len() {
+        return Err(bad_frame("trailing bytes after the payload"));
+    }
+    // commit/rollback took their scalar; a scalar on any other op is a
+    // shape violation
+    if scalar.is_some() && !matches!(op, Op::Commit { .. } | Op::Rollback { .. })
+    {
+        return Err(bad_frame("scalar operand on a non-scalar op"));
+    }
+    Ok((op, deadline, model))
+}
+
+/// Bounds-checked little-endian reader over one frame body.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Cur<'_> {
+    fn need(&self, n: usize) -> Result<()> {
+        if self.buf.len() - self.pos < n {
+            return Err(bad_frame("truncated body"));
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(
+            self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+        );
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        self.need(8)?;
+        let v = f64::from_le_bytes(
+            self.buf[self.pos..self.pos + 8].try_into().unwrap(),
+        );
+        self.pos += 8;
+        Ok(v)
+    }
+
+    /// `n` floats at the frame's declared width; `f32` payloads widen
+    /// exactly (every `f32` — NaN payloads aside — has one `f64` value).
+    fn floats(&mut self, n: usize, wide: bool) -> Result<Vec<f64>> {
+        let sz = if wide { 8 } else { 4 };
+        self.need(n.checked_mul(sz).ok_or_else(|| bad_frame("count overflow"))?)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if wide {
+                out.push(f64::from_le_bytes(
+                    self.buf[self.pos..self.pos + 8].try_into().unwrap(),
+                ));
+                self.pos += 8;
+            } else {
+                out.push(f32::from_le_bytes(
+                    self.buf[self.pos..self.pos + 4].try_into().unwrap(),
+                ) as f64);
+                self.pos += 4;
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// response codec
+// ---------------------------------------------------------------------------
+
+/// Encode the SAME response `Json` the JSON transport would print as a
+/// binary frame, appended to `out`. Float-shaped responses (predict /
+/// stream / scalar acks / errors) go compact — raw `f64` bits;
+/// everything else (`info`, `pong`, `checkpoint`, registry acks, …)
+/// carries its compact JSON text, so EVERY response a server can build
+/// has a frame and parity is total by construction.
+pub(crate) fn encode_response(resp: &Json, out: &mut Vec<u8>) {
+    let at = out.len();
+    out.extend_from_slice(&[0, 0, 0, 0]); // length back-patched below
+    compact_response(resp, out);
+    let body_len = (out.len() - at - 4) as u32;
+    out[at..at + 4].copy_from_slice(&body_len.to_le_bytes());
+}
+
+fn compact_response(resp: &Json, out: &mut Vec<u8>) {
+    if let Json::Obj(m) = resp {
+        match m.get("ok") {
+            Some(Json::Bool(true)) => {
+                if m.len() == 1 {
+                    out.push(ST_OK_EMPTY);
+                    return;
+                }
+                if m.len() == 3 {
+                    if let (Some(vals), Some(Json::Num(sps))) =
+                        (m.get("output").and_then(num_arr), m.get("steps_per_sec"))
+                    {
+                        out.push(ST_OK_PREDICT);
+                        push_vals(&vals, out);
+                        out.extend_from_slice(&sps.to_le_bytes());
+                        return;
+                    }
+                }
+                if m.len() == 2 {
+                    if let Some(vals) = m.get("output").and_then(num_arr) {
+                        out.push(ST_OK_VALUES);
+                        push_vals(&vals, out);
+                        return;
+                    }
+                    if let Some(Json::Num(rows)) = m.get("rows") {
+                        out.push(ST_OK_SCALAR);
+                        out.push(SC_ROWS);
+                        out.extend_from_slice(&rows.to_le_bytes());
+                        return;
+                    }
+                    if let Some(Json::Num(v)) = m.get("version") {
+                        out.push(ST_OK_SCALAR);
+                        out.push(SC_VERSION);
+                        out.extend_from_slice(&v.to_le_bytes());
+                        return;
+                    }
+                }
+            }
+            Some(Json::Bool(false)) => {
+                // the error_response shape: error + optional code/addr
+                // strings and nothing else
+                let err = m.get("error").and_then(Json::as_str);
+                let extras_ok = m
+                    .keys()
+                    .all(|k| matches!(k.as_str(), "ok" | "error" | "code" | "addr"));
+                let code = m.get("code").map(|c| c.as_str());
+                let addr = m.get("addr").map(|a| a.as_str());
+                if let (Some(err), true, None | Some(Some(_)), None | Some(Some(_))) =
+                    (err, extras_ok, code, addr)
+                {
+                    out.push(ST_ERR);
+                    push_str(err, out);
+                    push_str(code.flatten().unwrap_or(""), out);
+                    push_str(addr.flatten().unwrap_or(""), out);
+                    return;
+                }
+            }
+            _ => {}
+        }
+    }
+    // universal fallback: the compact JSON text (still no float
+    // formatting on the hot ops — only structured responses land here)
+    out.push(ST_OK_JSON);
+    out.extend_from_slice(resp.to_string_compact().as_bytes());
+}
+
+fn num_arr(v: &Json) -> Option<Vec<f64>> {
+    nums(v)
+}
+
+fn push_vals(vals: &[f64], out: &mut Vec<u8>) {
+    out.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn push_str(s: &str, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Decode one response frame body back into the `Json` a JSON-transport
+/// client would have parsed — structurally identical (object keys are
+/// canonical BTreeMap order on both paths), floats bit-exact.
+pub(crate) fn decode_response(body: &[u8]) -> Result<Json> {
+    let mut c = Cur { buf: body, pos: 0 };
+    let status = c.u8()?;
+    let json = match status {
+        ST_OK_EMPTY => Json::obj(vec![("ok", Json::Bool(true))]),
+        ST_OK_VALUES => {
+            let n = c.u32()? as usize;
+            let vals = c.floats(n, true)?;
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("output", Json::Arr(vals.into_iter().map(Json::Num).collect())),
+            ])
+        }
+        ST_OK_PREDICT => {
+            let n = c.u32()? as usize;
+            let vals = c.floats(n, true)?;
+            let sps = c.f64()?;
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("output", Json::Arr(vals.into_iter().map(Json::Num).collect())),
+                ("steps_per_sec", Json::Num(sps)),
+            ])
+        }
+        ST_OK_SCALAR => {
+            let kind = c.u8()?;
+            let v = c.f64()?;
+            let key = match kind {
+                SC_ROWS => "rows",
+                SC_VERSION => "version",
+                other => {
+                    return Err(bad_frame(&format!("unknown scalar kind {other}")))
+                }
+            };
+            Json::obj(vec![("ok", Json::Bool(true)), (key, Json::Num(v))])
+        }
+        ST_ERR => {
+            let err = c.str()?;
+            let code = c.str()?;
+            let addr = c.str()?;
+            let mut pairs = vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(err)),
+            ];
+            if !code.is_empty() {
+                pairs.push(("code", Json::Str(code)));
+            }
+            if !addr.is_empty() {
+                pairs.push(("addr", Json::Str(addr)));
+            }
+            Json::obj(pairs)
+        }
+        ST_OK_JSON => {
+            let text = std::str::from_utf8(&body[c.pos..])
+                .map_err(|_| bad_frame("response text is not UTF-8"))?;
+            return parse(text);
+        }
+        other => return Err(bad_frame(&format!("unknown status byte {other}"))),
+    };
+    if c.pos != body.len() {
+        return Err(bad_frame("trailing bytes after the payload"));
+    }
+    Ok(json)
+}
+
+impl Cur<'_> {
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        self.need(n)?;
+        let s = std::str::from_utf8(&self.buf[self.pos..self.pos + n])
+            .map_err(|_| bad_frame("string field is not UTF-8"))?
+            .to_string();
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::wire::WireError;
+
+    /// Exact-bits signature of a parsed op tuple, so JSON-parsed and
+    /// binary-decoded requests can be compared without `Op: PartialEq`.
+    fn sig(t: &(Op, Option<Duration>, Option<ModelId>)) -> String {
+        let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+        let body = match &t.0 {
+            Op::Info => "info".to_string(),
+            Op::Ping => "ping".to_string(),
+            Op::Predict(v) => format!("predict {:?}", bits(v)),
+            Op::Stream(v) => format!("stream {:?}", bits(v)),
+            Op::Train { input, target } => {
+                format!("train {:?} {:?}", bits(input), bits(target))
+            }
+            Op::Commit { alpha } => format!("commit {}", alpha.to_bits()),
+            Op::Rollback { version } => format!("rollback {version}"),
+            Op::Checkpoint => "checkpoint".to_string(),
+            Op::Restore(_) => "restore".to_string(),
+            Op::Reset => "reset".to_string(),
+            Op::Migrate { shard } => format!("migrate {shard:?}"),
+            Op::MigrateIn { lane_id, snap } => {
+                format!("migrate_in {lane_id:?} snap={}", snap.is_some())
+            }
+            Op::ShutdownDrain => "shutdown_drain".to_string(),
+            Op::CreateModel { recipe } => format!("create_model {:?}", recipe),
+            Op::DeleteModel { model } => format!("delete_model {model}"),
+        };
+        format!("{body} deadline={:?} model={:?}", t.1, t.2)
+    }
+
+    /// encode → frame-split → decode must reproduce exactly what
+    /// `parse_op` yields for the same JSON request text.
+    fn assert_parity(line: &str) {
+        let req = parse(line).unwrap();
+        let frame = encode_request(&req);
+        let Framing::Frame { start, end, next } = split_frame(&frame, 0) else {
+            panic!("encode produced an incomplete frame for {line}");
+        };
+        assert_eq!(next, frame.len(), "frame must consume all bytes");
+        let bin = decode_request(&frame[start..end]).unwrap();
+        let json = parse_op(line).unwrap();
+        assert_eq!(sig(&bin), sig(&json), "parity breach for {line}");
+    }
+
+    #[test]
+    fn every_compact_op_round_trips_bit_exactly() {
+        assert_parity(r#"{"op":"ping"}"#);
+        assert_parity(r#"{"op":"info"}"#);
+        assert_parity(r#"{"op":"reset"}"#);
+        assert_parity(r#"{"op":"predict","input":[0.1,-0.25,3e-300]}"#);
+        assert_parity(r#"{"op":"predict","input":[]}"#);
+        assert_parity(r#"{"op":"stream","input":[1,2,3],"model":7}"#);
+        assert_parity(r#"{"op":"train","input":[1,2],"target":[3,4]}"#);
+        assert_parity(r#"{"op":"commit"}"#);
+        assert_parity(r#"{"op":"commit","alpha":1e-6}"#);
+        assert_parity(r#"{"op":"rollback"}"#);
+        assert_parity(r#"{"op":"rollback","version":3}"#);
+        assert_parity(r#"{"op":"predict","input":[0.5],"deadline_ms":125.5}"#);
+        // negative zero must survive the header and payload paths
+        assert_parity(r#"{"op":"predict","input":[-0.0,0.0]}"#);
+        // subnormals: smallest positive f64
+        assert_parity(r#"{"op":"predict","input":[5e-324,-5e-324]}"#);
+    }
+
+    #[test]
+    fn structured_ops_tunnel_through_parse_op() {
+        assert_parity(r#"{"op":"checkpoint"}"#);
+        assert_parity(r#"{"op":"migrate"}"#);
+        assert_parity(r#"{"op":"migrate","shard":1}"#);
+        assert_parity(r#"{"op":"shutdown_drain"}"#);
+        assert_parity(r#"{"op":"delete_model","model":42}"#);
+        assert_parity(r#"{"op":"create_model","seed":7,"n":16}"#);
+        // non-numeric deadline can't ride the header: tunnel must
+        // produce the same type error as the JSON parser
+        let req = parse(r#"{"op":"predict","input":[1],"deadline_ms":"x"}"#).unwrap();
+        let frame = encode_request(&req);
+        assert_eq!(frame[4], OP_JSON, "non-numeric field must tunnel");
+        let Framing::Frame { start, end, .. } = split_frame(&frame, 0) else {
+            panic!("incomplete tunnel frame");
+        };
+        let err = decode_request(&frame[start..end]).unwrap_err();
+        let jerr = parse_op(r#"{"op":"predict","input":[1],"deadline_ms":"x"}"#)
+            .unwrap_err();
+        assert_eq!(format!("{err:#}"), format!("{jerr:#}"));
+    }
+
+    /// Build a compact predict frame by hand at either float width.
+    fn raw_predict_frame(vals_f64: &[f64], f32_wide: bool) -> Vec<u8> {
+        let mut body = vec![OP_PREDICT, if f32_wide { FLAG_F32 } else { 0 }];
+        body.extend_from_slice(&(vals_f64.len() as u32).to_le_bytes());
+        for v in vals_f64 {
+            if f32_wide {
+                body.extend_from_slice(&(*v as f32).to_le_bytes());
+            } else {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&body);
+        frame
+    }
+
+    #[test]
+    fn special_floats_round_trip_at_both_widths() {
+        let specials = [
+            f64::NAN,
+            0.0,
+            -0.0,
+            5e-324,                          // smallest f64 subnormal
+            f64::MIN_POSITIVE,               // smallest f64 normal
+            f32::from_bits(1) as f64,        // smallest f32 subnormal
+            f32::MIN_POSITIVE as f64,
+            1.0 + f64::EPSILON,
+            -1.7976931348623157e308,
+        ];
+        // f64 width: bits preserved exactly, NaN payload included
+        let frame = raw_predict_frame(&specials, false);
+        let Framing::Frame { start, end, .. } = split_frame(&frame, 0) else {
+            panic!("incomplete frame");
+        };
+        let (op, _, _) = decode_request(&frame[start..end]).unwrap();
+        let Op::Predict(got) = op else { panic!("wrong op") };
+        for (g, w) in got.iter().zip(&specials) {
+            assert_eq!(g.to_bits(), w.to_bits(), "f64 bits must survive");
+        }
+        // f32 width: widening is exact for every representable f32
+        let f32_specials = [0.0f32, -0.0, f32::from_bits(1), f32::MIN_POSITIVE,
+                            f32::NAN, 1.5, -3.25e-40];
+        let as64: Vec<f64> = f32_specials.iter().map(|v| *v as f64).collect();
+        let frame = raw_predict_frame(&as64, true);
+        let Framing::Frame { start, end, .. } = split_frame(&frame, 0) else {
+            panic!("incomplete frame");
+        };
+        let (op, _, _) = decode_request(&frame[start..end]).unwrap();
+        let Op::Predict(got) = op else { panic!("wrong op") };
+        for (g, w) in got.iter().zip(&f32_specials) {
+            if w.is_nan() {
+                assert!(g.is_nan());
+            } else {
+                assert_eq!(g.to_bits(), (*w as f64).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn torn_and_oversized_frames_are_refused() {
+        // torn: a length prefix promising more than the buffer holds
+        let mut torn = Vec::new();
+        torn.extend_from_slice(&100u32.to_le_bytes());
+        torn.push(OP_PING);
+        assert!(matches!(split_frame(&torn, 0), Framing::NeedMore));
+        // under 4 bytes: not even a length yet
+        assert!(matches!(split_frame(&[0x12], 0), Framing::NeedMore));
+        // oversized: the length field exceeds the cap — framing lost
+        let mut big = Vec::new();
+        big.extend_from_slice(&(u32::MAX).to_le_bytes());
+        big.push(OP_PING);
+        assert!(matches!(split_frame(&big, 0), Framing::Oversized));
+        // the blocking reader agrees on all three
+        let mut r: &[u8] = &torn;
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadFrame::TornEof));
+        let mut r: &[u8] = &big;
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadFrame::Oversized));
+        let mut r: &[u8] = &[];
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadFrame::Eof));
+        let mut r: &[u8] = &[1, 0];
+        assert!(matches!(read_frame(&mut r).unwrap(), ReadFrame::TornEof));
+        // and the close-out refusal is the typed bad_frame error
+        let refusal = bad_frame_close_frame();
+        let Framing::Frame { start, end, .. } = split_frame(&refusal, 0) else {
+            panic!("refusal frame incomplete");
+        };
+        let json = decode_response(&refusal[start..end]).unwrap();
+        assert_eq!(json.get("code").and_then(Json::as_str), Some("bad_frame"));
+        assert_eq!(json.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn in_body_shape_violations_are_typed_and_survivable() {
+        // unknown op byte
+        let body = [0xEEu8, 0];
+        let e = decode_request(&body).unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<WireError>().map(|w| w.code),
+            Some("bad_frame")
+        );
+        // truncated payload inside a well-lengthed body
+        let mut body = vec![OP_PREDICT, 0];
+        body.extend_from_slice(&4u32.to_le_bytes()); // promises 4 floats
+        body.extend_from_slice(&1.0f64.to_le_bytes()); // delivers 1
+        let e = decode_request(&body).unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<WireError>().map(|w| w.code),
+            Some("bad_frame")
+        );
+        // trailing junk after the payload
+        let mut frame = raw_predict_frame(&[1.0], false);
+        let body_start = 4;
+        let mut body = frame.split_off(body_start);
+        body.push(0xAB);
+        let e = decode_request(&body).unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<WireError>().map(|w| w.code),
+            Some("bad_frame")
+        );
+        // semantic violation keeps the JSON parser's message verbatim
+        let mut body = vec![OP_TRAIN, 0];
+        body.extend_from_slice(&((MAX_TRAIN_ROWS_PER_OP + 1) as u32).to_le_bytes());
+        let e = decode_request(&body).unwrap_err();
+        assert!(
+            format!("{e}").contains("train op too large"),
+            "row-cap message must match the JSON parser: {e}"
+        );
+    }
+
+    #[test]
+    fn responses_round_trip_structurally() {
+        let cases = [
+            Json::obj(vec![("ok", Json::Bool(true))]),
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("output", Json::Arr(vec![Json::Num(0.1), Json::Num(-0.0)])),
+            ]),
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("output", Json::Arr(vec![Json::Num(5e-324)])),
+                ("steps_per_sec", Json::Num(123456.789)),
+            ]),
+            Json::obj(vec![("ok", Json::Bool(true)), ("rows", Json::Num(42.0))]),
+            Json::obj(vec![("ok", Json::Bool(true)), ("version", Json::Num(7.0))]),
+            Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str("no lane".into())),
+                ("code", Json::Str("no_lane".into())),
+            ]),
+            Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str("moved".into())),
+                ("code", Json::Str("moved".into())),
+                ("addr", Json::Str("10.0.0.2:4100".into())),
+            ]),
+            // structured fallback: an info-shaped response
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("n", Json::Num(30.0)),
+                ("shards", Json::Num(2.0)),
+                ("precision", Json::Str("f64".into())),
+            ]),
+        ];
+        for resp in &cases {
+            let mut frame = Vec::new();
+            encode_response(resp, &mut frame);
+            let Framing::Frame { start, end, next } = split_frame(&frame, 0) else {
+                panic!("incomplete response frame");
+            };
+            assert_eq!(next, frame.len());
+            let back = decode_response(&frame[start..end]).unwrap();
+            assert_eq!(&back, resp, "response must survive structurally");
+        }
+    }
+
+    #[test]
+    fn response_floats_are_bit_exact_not_formatted() {
+        // a value whose shortest decimal round-trip is long — the binary
+        // path must carry the BITS, no Display involved
+        let v = 0.1f64 + 0.2f64;
+        let resp = Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("output", Json::Arr(vec![Json::Num(v)])),
+        ]);
+        let mut frame = Vec::new();
+        encode_response(&resp, &mut frame);
+        // the raw bits must appear verbatim in the frame
+        let needle = v.to_le_bytes();
+        assert!(
+            frame.windows(8).any(|w| w == needle),
+            "payload must carry raw LE bits"
+        );
+        let Framing::Frame { start, end, .. } = split_frame(&frame, 0) else {
+            panic!("incomplete frame");
+        };
+        let back = decode_response(&frame[start..end]).unwrap();
+        let Some(Json::Num(got)) =
+            back.get("output").and_then(Json::as_arr).and_then(|a| a.first()).cloned()
+        else {
+            panic!("output missing");
+        };
+        assert_eq!(got.to_bits(), v.to_bits());
+    }
+
+    #[test]
+    fn hello_shapes_are_fixed() {
+        assert_eq!(client_hello().len(), HELLO_LEN);
+        assert_eq!(server_hello().len(), HELLO_LEN);
+        assert_eq!(&client_hello()[..4], &MAGIC);
+        assert_eq!(&server_hello()[..4], &MAGIC);
+        assert_eq!(client_hello()[4], VERSION);
+        assert_ne!(client_hello(), server_hello(), "ack must be distinguishable");
+    }
+}

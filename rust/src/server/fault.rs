@@ -16,6 +16,7 @@
 //! | [`set_short_writes`] | short socket writes in the poll loop: at most `chunk` bytes per `write(2)`, optionally sleeping first — a deterministically slow reader |
 //! | [`force_trainer_budget`] | overrides the hub trainer budget to a chosen byte count — allocation exhaustion without gigabytes of traffic |
 //! | [`force_admit_depth`] | overrides the per-shard queue admission depth — typed `overloaded` shedding without a real request storm |
+//! | [`arm_poll_thread_kill`] | death of ONE poll thread of the multi-thread event loop — its connections answer typed `unavailable` and close; sibling poll threads and every sweeper keep serving |
 
 #[cfg(any(test, feature = "fault-inject"))]
 mod armed {
@@ -43,6 +44,8 @@ mod armed {
     static BUDGET: AtomicU64 = AtomicU64::new(u64::MAX);
     /// Queue-admission depth override; u64::MAX = no override.
     static ADMIT_DEPTH: AtomicU64 = AtomicU64::new(u64::MAX);
+    /// Poll-thread index armed to die (+1, so 0 = disarmed).
+    static POLL_KILL: AtomicU64 = AtomicU64::new(0);
     /// When set, an armed sweeper fuse only ticks down on the named
     /// sweeper thread. Unit tests share one process and run in
     /// parallel, so an unscoped fuse could fire on an UNRELATED test's
@@ -89,6 +92,15 @@ mod armed {
         ADMIT_DEPTH.store(depth as u64, Ordering::SeqCst);
     }
 
+    /// Arm the death of poll thread `idx` (of the event-loop transport):
+    /// at its next readiness round it answers every owned connection
+    /// with the typed `unavailable` error and exits, leaving its sibling
+    /// poll threads (and every sweeper) serving. One-shot: consumed by
+    /// the first matching thread.
+    pub fn arm_poll_thread_kill(idx: usize) {
+        POLL_KILL.store(idx as u64 + 1, Ordering::SeqCst);
+    }
+
     /// Clear every armed fault.
     pub fn disarm() {
         SWEEP_FUSE.store(0, Ordering::SeqCst);
@@ -97,6 +109,7 @@ mod armed {
         WRITE_DELAY_US.store(0, Ordering::SeqCst);
         BUDGET.store(u64::MAX, Ordering::SeqCst);
         ADMIT_DEPTH.store(u64::MAX, Ordering::SeqCst);
+        POLL_KILL.store(0, Ordering::SeqCst);
         *TARGET_THREAD.lock().unwrap() = None;
     }
 
@@ -148,6 +161,15 @@ mod armed {
         }
     }
 
+    /// Consume an armed kill for poll thread `idx`, if one is armed.
+    /// Compare-and-swap so exactly ONE loop round observes it.
+    pub(crate) fn poll_thread_kill(idx: usize) -> bool {
+        let armed = idx as u64 + 1;
+        POLL_KILL
+            .compare_exchange(armed, 0, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+    }
+
     /// Current queue-admission depth override for the front whose
     /// sweeper thread has this name, if armed. Scoped exactly like the
     /// sweeper fuse: with a [`target_sweeper_thread`] set, only that
@@ -168,13 +190,14 @@ mod armed {
 
 #[cfg(any(test, feature = "fault-inject"))]
 pub use armed::{
-    arm_sweeper_kill, arm_sweeper_panic, disarm, force_admit_depth,
-    force_trainer_budget, set_short_writes, target_sweeper_thread, SweeperKill,
+    arm_poll_thread_kill, arm_sweeper_kill, arm_sweeper_panic, disarm,
+    force_admit_depth, force_trainer_budget, set_short_writes,
+    target_sweeper_thread, SweeperKill,
 };
 #[cfg(any(test, feature = "fault-inject"))]
 pub(crate) use armed::{
-    admit_depth_override_for, budget_override, short_write_chunk,
-    sweeper_job_tick,
+    admit_depth_override_for, budget_override, poll_thread_kill,
+    short_write_chunk, sweeper_job_tick,
 };
 
 /// No-op twin (nothing armed, nothing armable) — the production build.
@@ -197,9 +220,14 @@ mod disarmed {
     pub(crate) fn admit_depth_override_for(_sweeper: &str) -> Option<usize> {
         None
     }
+
+    #[inline(always)]
+    pub(crate) fn poll_thread_kill(_idx: usize) -> bool {
+        false
+    }
 }
 #[cfg(not(any(test, feature = "fault-inject")))]
 pub(crate) use disarmed::{
-    admit_depth_override_for, budget_override, short_write_chunk,
-    sweeper_job_tick,
+    admit_depth_override_for, budget_override, poll_thread_kill,
+    short_write_chunk, sweeper_job_tick,
 };

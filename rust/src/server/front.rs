@@ -492,6 +492,17 @@ impl Hub {
         }
     }
 
+    /// NUMA first-touch: fault the engine planes in from the calling
+    /// thread (see [`BatchEsn::first_touch`]). Called at hub mint time on
+    /// a core-pinned sweeper so the planes it will sweep forever are
+    /// homed on its own node.
+    pub(crate) fn first_touch(&mut self) {
+        match self {
+            Hub::F64(h) => h.engine.first_touch(),
+            Hub::F32(h) => h.engine.first_touch(),
+        }
+    }
+
     pub(crate) fn sweep_streams(&mut self, reqs: &[(usize, &[f64])]) -> Vec<Vec<f64>> {
         match self {
             Hub::F64(h) => h.sweep_streams(reqs),
@@ -866,6 +877,11 @@ struct HubSet {
     tenants: HashMap<ModelId, Hub>,
     registry: Option<Arc<ModelRegistry>>,
     trainer_budget: usize,
+    /// NUMA first-touch at mint time: set when this sweeper is pinned to
+    /// a core, so every hub's planes are page-faulted in FROM the pinned
+    /// thread (first-touch policy homes them on its node) instead of
+    /// whichever thread's sweep happens to write them first.
+    first_touch: bool,
 }
 
 impl HubSet {
@@ -873,12 +889,18 @@ impl HubSet {
         base_model: &Model,
         registry: Option<Arc<ModelRegistry>>,
         trainer_budget: usize,
+        first_touch: bool,
     ) -> Self {
+        let mut base = Hub::new(base_model, STREAM_LANES, trainer_budget);
+        if first_touch {
+            base.first_touch();
+        }
         Self {
-            base: Hub::new(base_model, STREAM_LANES, trainer_budget),
+            base,
             tenants: HashMap::new(),
             registry,
             trainer_budget,
+            first_touch,
         }
     }
 
@@ -892,8 +914,13 @@ impl HubSet {
         }
         if !self.tenants.contains_key(&model) {
             let m = self.registry.as_ref()?.get(model)?;
-            self.tenants
-                .insert(model, Hub::new(&m, STREAM_LANES, self.trainer_budget));
+            let mut hub = Hub::new(&m, STREAM_LANES, self.trainer_budget);
+            if self.first_touch {
+                // tenant hubs mint lazily ON the sweeper thread, so the
+                // same first-touch pass homes them correctly too
+                hub.first_touch();
+            }
+            self.tenants.insert(model, hub);
         }
         self.tenants.get_mut(&model)
     }
@@ -1987,6 +2014,10 @@ impl BatchFront {
             &self.model,
             self.registry.clone(),
             self.trainer_budget,
+            // --pin-cores: this thread is affined to one core for good;
+            // fault the planes in from here so first-touch homes them on
+            // this core's NUMA node
+            self.pinned_core().is_some(),
         );
         let mut pool =
             EnginePool::new(Arc::clone(&self.model), self.registry.clone());

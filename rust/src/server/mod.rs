@@ -94,6 +94,7 @@
 //! and lane recycling drop all training state. See DESIGN.md §9 and
 //! `wire.rs` for the protocol and invariants.
 
+mod binframe;
 mod cluster;
 pub mod fault;
 mod front;

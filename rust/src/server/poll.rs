@@ -4,7 +4,18 @@
 //! just to park in `read_line` — at 10k idle streaming connections that
 //! is 10k stacks and 10k scheduler entries doing nothing. The paper's
 //! O(N) step makes the arithmetic cheap enough that those threads ARE
-//! the serving cost. This module replaces them with ONE poll thread:
+//! the serving cost. This module replaces them with P poll threads
+//! (`--poll-threads`, default 1 — bit-identical to the historical
+//! single-thread loop). Thread 0 owns the listener and deals accepted
+//! sockets round-robin through per-worker hand-off rings; each thread
+//! then owns its dealt connections outright — read/write buffers, slot
+//! queue, idle wheel, completion eventfd — so no per-connection state is
+//! ever shared. Per-connection wire format is negotiated on the first
+//! bytes: anything that diverges from the `LRBF` magic is the unchanged
+//! line-delimited JSON protocol; a completed 8-byte hello upgrades the
+//! connection to length-prefixed binary frames (`binframe`) with raw LE
+//! float payloads — same ops, same typed error codes, no float
+//! formatting on either side. One thread's loop:
 //!
 //! ```text
 //!             ┌─────────────────────────────────────────────────────┐
@@ -57,17 +68,18 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::raw::{c_int, c_void};
 use std::os::unix::io::AsRawFd;
-use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::util::json::Json;
 
+use super::binframe;
 use super::front::{Completion, CompletionQueue, EventReply, Reply, ReplySender};
 use super::registry::{ModelId, BASE_MODEL};
-use super::shard::{LaneBinding, ShardedFront};
+use super::shard::{LaneBinding, PollStats, ShardedFront};
 use super::wire::{
     bind_conn_model, checkpoint_response, coded_error, error_response,
     fallback_key, guard_streamable, guard_train_rows, handle_create_model,
@@ -264,16 +276,25 @@ const WAKE_TOKEN: u64 = u64::MAX - 1;
 /// lines are framed out of the buffer every readiness round, so the
 /// buffer only approaches this bound when one LINE does.
 const MAX_LINE_BYTES: usize = 64 << 20;
-/// Max bytes read from one connection per readiness round: level-
-/// triggered epoll re-delivers whatever is left, so a firehose client
-/// yields the poll thread to its peers every `READ_BUDGET` bytes
-/// instead of monopolizing the loop until its socket runs dry.
+/// Max bytes read from one connection per readiness round, PROCESS-wide:
+/// level-triggered epoll re-delivers whatever is left, so a firehose
+/// client yields its poll thread to its peers every budget-slice bytes
+/// instead of monopolizing the loop until its socket runs dry. With P
+/// poll threads each thread's slice is `READ_BUDGET / P` (floored at
+/// 16 KiB) — P threads must not multiply the process read budget.
 const READ_BUDGET: usize = 256 << 10;
-/// Shared write-buffer budget for the whole poll loop: the per-
-/// connection backpressure high-water mark is this budget apportioned
-/// across the live connections (see [`wbuf_high_water`]), so worst-case
-/// unflushed-response memory is bounded per PROCESS, not per connection.
+/// Floor for one poll thread's per-round read slice.
+const READ_BUDGET_FLOOR: usize = 16 << 10;
+/// Shared write-buffer budget for the whole event-loop transport: the
+/// per-connection backpressure high-water mark is this budget
+/// apportioned across the live connections (see [`wbuf_high_water`]), so
+/// worst-case unflushed-response memory is bounded per PROCESS, not per
+/// connection. With P poll threads each thread apportions a
+/// `WBUF_TOTAL_BUDGET / P` slice (floored at 1 MiB) over ITS live
+/// connections — again so P threads don't multiply the process budget.
 const WBUF_TOTAL_BUDGET: usize = 64 << 20;
+/// Floor for one poll thread's write-buffer budget slice.
+const WBUF_BUDGET_FLOOR: usize = 1 << 20;
 /// Write-side backpressure threshold for one connection: while more than
 /// this many unflushed response bytes are pending, the loop stops
 /// reading from it (EPOLLIN dropped), so a client that pipelines
@@ -281,13 +302,15 @@ const WBUF_TOTAL_BUDGET: usize = 64 << 20;
 /// growing server memory — the event-loop analogue of the threaded path
 /// blocking in `write_all`.
 ///
-/// The mark adapts to load: `WBUF_TOTAL_BUDGET / live` clamped to
-/// [64 KiB, 1 MiB]. Up to 64 connections each get the old fixed 1 MiB;
-/// past that the shared budget divides down to a 64 KiB floor (≈ one
-/// max-size pipelined burst of replies), so 10k slow-draining clients
-/// pin ~640 MB in the old scheme but ≤ 64 MiB + one response each here.
-fn wbuf_high_water(live: usize) -> usize {
-    (WBUF_TOTAL_BUDGET / live.max(1)).clamp(64 << 10, 1 << 20)
+/// The mark adapts to load: `total_budget / live` clamped to
+/// [64 KiB, 1 MiB], where `total_budget` is the calling poll thread's
+/// slice of [`WBUF_TOTAL_BUDGET`]. At one poll thread (the default) up
+/// to 64 connections each get the old fixed 1 MiB; past that the shared
+/// budget divides down to a 64 KiB floor (≈ one max-size pipelined burst
+/// of replies), so 10k slow-draining clients pin ~640 MB in the old
+/// scheme but ≤ 64 MiB + one response each here.
+fn wbuf_high_water(total_budget: usize, live: usize) -> usize {
+    (total_budget / live.max(1)).clamp(64 << 10, 1 << 20)
 }
 /// Events drained per `epoll_wait` round.
 const EVENT_BATCH: usize = 128;
@@ -323,9 +346,24 @@ enum Slot {
     Waiting { token: u64, kind: PendingKind },
 }
 
+/// Per-connection wire codec, decided by the connection's first bytes
+/// (see `wire.rs` — the threaded transport negotiates identically).
+#[derive(Clone, Copy, PartialEq)]
+enum Codec {
+    /// Still sniffing: the bytes so far are a proper prefix of the
+    /// binary hello. No request is parsed in this state.
+    Probe,
+    /// Line-delimited JSON (the default — first byte diverged from the
+    /// magic, which any JSON request's `{` does immediately).
+    Json,
+    /// Negotiated length-prefixed binary frames.
+    Binary,
+}
+
 struct Conn {
     sock: TcpStream,
     state: ConnState,
+    codec: Codec,
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
     /// Bytes of `wbuf` already written to the socket.
@@ -440,6 +478,43 @@ impl IdleWheel {
 // the loop
 // ---------------------------------------------------------------------------
 
+/// State shared by the P poll threads of one event-loop transport.
+/// Thread 0 owns the listener and deals accepted sockets; workers own
+/// everything about their dealt connections (buffers, slots, wheel,
+/// completion eventfd) — nothing per-connection is ever shared, so the
+/// P-thread loop preserves every single-owner invariant of the P=1 loop.
+struct PollShared {
+    /// No more connections will EVER be dealt (max reached, drain, or
+    /// accept death): a worker whose table empties may exit.
+    accept_done: AtomicBool,
+    /// Graceful drain requested anywhere (op on any thread's conn, or
+    /// SIGTERM): every thread flips its own conns to serve-out mode.
+    draining: AtomicBool,
+    /// Per-thread liveness; the dealer skips dead threads.
+    alive: Vec<AtomicBool>,
+    /// `info` observability: per-thread rounds + binary upgrades.
+    stats: Arc<PollStats>,
+    /// Hand-off rings: thread 0 pushes `(socket, key)`, the owning
+    /// worker drains at its next wake (ring `0` stays empty — thread 0
+    /// registers its own share directly).
+    rings: Vec<Mutex<VecDeque<(TcpStream, u64)>>>,
+    /// Every thread's wake eventfd (same fd its CompletionQueue
+    /// signals): ring hand-offs and cross-thread flag flips wake
+    /// through here.
+    wakes: Vec<Arc<EventFd>>,
+    /// Lane bindings retained by connections that closed while
+    /// draining, merged from every thread, spilled once after join.
+    drain_keep: Mutex<Vec<Arc<LaneBinding>>>,
+}
+
+impl PollShared {
+    fn wake_all(&self) {
+        for w in &self.wakes {
+            w.signal();
+        }
+    }
+}
+
 struct EventLoop {
     ep: Epoll,
     wake: Arc<EventFd>,
@@ -464,31 +539,155 @@ struct EventLoop {
     /// Lane bindings retained (NOT released) by connections that closed
     /// while draining, so their lanes survive to be spilled.
     drain_keep: Vec<Arc<LaneBinding>>,
+    /// This thread's index in the poll-thread group (0 = the acceptor).
+    thread_idx: usize,
+    /// Poll-thread count P (1 = the classic single-owner loop).
+    threads: usize,
+    /// This thread's slice of the process per-round read budget.
+    read_budget: usize,
+    /// This thread's slice of the process write-buffer budget.
+    wbuf_budget: usize,
+    shared: Arc<PollShared>,
 }
 
-/// Serve every connection of `listener` from this thread with an epoll
-/// readiness loop. Returns once `max_conns` connections have been
-/// accepted AND have all closed (`None`: runs forever), or after a
-/// graceful drain (`shutdown_drain` op, or SIGTERM when
-/// `drain.watch_sigterm`) has served out every in-flight request.
-/// Connections silent for `idle_timeout` are reaped by a coarse timer
-/// wheel (`None` = never). Called by [`super::wire::serve_on_opts`],
-/// which owns the sweeper lifecycle.
+/// Serve every connection of `listener` across `poll_threads` epoll
+/// threads. Returns once `max_conns` connections have been accepted AND
+/// have all closed (`None`: runs forever), or after a graceful drain
+/// (`shutdown_drain` op, or SIGTERM when `drain.watch_sigterm`) has
+/// served out every in-flight request. Connections silent for
+/// `idle_timeout` are reaped by a coarse per-thread timer wheel (`None`
+/// = never). Called by [`super::wire::serve_on_opts`], which owns the
+/// sweeper lifecycle.
+///
+/// `poll_threads == 1` runs the whole loop on the calling thread,
+/// bit-identically to the historical single-owner transport. With P > 1
+/// the calling thread (thread 0) owns the listener and deals accepted
+/// sockets round-robin — its own share registered directly, the rest
+/// handed off through per-worker rings — while every other aspect of a
+/// connection's life stays single-owner on its dealt thread.
 pub(crate) fn serve_event_loop(
     listener: TcpListener,
     front: Arc<ShardedFront>,
     max_conns: Option<usize>,
     idle_timeout: Option<Duration>,
     drain: &DrainCfg,
+    poll_threads: usize,
 ) -> Result<()> {
     listener.set_nonblocking(true)?;
+    let threads = poll_threads.max(1);
+    let wakes = (0..threads)
+        .map(|_| EventFd::new().map(Arc::new))
+        .collect::<Result<Vec<_>>>()?;
+    let shared = Arc::new(PollShared {
+        accept_done: AtomicBool::new(false),
+        draining: AtomicBool::new(false),
+        alive: (0..threads).map(|_| AtomicBool::new(true)).collect(),
+        stats: Arc::new(PollStats::new(threads)),
+        rings: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+        wakes: wakes.clone(),
+        drain_keep: Mutex::new(Vec::new()),
+    });
+    front.set_poll_stats(Arc::clone(&shared.stats));
+    let mut workers = Vec::new();
+    for t in 1..threads {
+        let front = Arc::clone(&front);
+        let shared = Arc::clone(&shared);
+        let wake = Arc::clone(&wakes[t]);
+        let watch_sigterm = drain.watch_sigterm;
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("lr-poll-{t}"))
+                .spawn(move || {
+                    let r = run_poll_thread(
+                        t,
+                        threads,
+                        None,
+                        front,
+                        None,
+                        idle_timeout,
+                        watch_sigterm,
+                        Arc::clone(&shared),
+                        wake,
+                    );
+                    if let Err(e) = &r {
+                        eprintln!("poll thread {t} died: {e:#}");
+                    }
+                    shared.alive[t].store(false, Ordering::SeqCst);
+                    r
+                })?,
+        );
+    }
+    let result = run_poll_thread(
+        0,
+        threads,
+        Some(&listener),
+        Arc::clone(&front),
+        max_conns,
+        idle_timeout,
+        drain.watch_sigterm,
+        Arc::clone(&shared),
+        Arc::clone(&wakes[0]),
+    );
+    // thread 0 is done accepting forever; release the workers
+    shared.accept_done.store(true, Ordering::SeqCst);
+    shared.alive[0].store(false, Ordering::SeqCst);
+    shared.wake_all();
+    let mut worker_err: Option<anyhow::Error> = None;
+    for w in workers {
+        match w.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => worker_err = worker_err.or(Some(e)),
+            Err(_) => {
+                worker_err =
+                    worker_err.or_else(|| Some(anyhow!("poll thread panicked")));
+            }
+        }
+    }
+    // spill the lanes retained by drained connections, then free them
+    let keep = std::mem::take(&mut *shared.drain_keep.lock().unwrap());
+    if let Some(dir) = &drain.spill_dir {
+        if !keep.is_empty() {
+            let n = front.spill_bindings(&keep, dir);
+            eprintln!(
+                "drain-checkpoint: spilled {n} lane(s) to {}",
+                dir.display()
+            );
+        }
+    }
+    for b in &keep {
+        front.release_binding(b);
+    }
+    result.and(match worker_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    })
+}
+
+/// One poll thread's readiness loop — thread 0 runs it with the
+/// listener, workers without. Structurally identical to the historical
+/// single-thread loop; the multi-thread additions are the shared-flag
+/// observation at the loop head, the hand-off ring drain on wake, and
+/// the budget slices.
+#[allow(clippy::too_many_arguments)]
+fn run_poll_thread(
+    thread_idx: usize,
+    threads: usize,
+    listener: Option<&TcpListener>,
+    front: Arc<ShardedFront>,
+    max_conns: Option<usize>,
+    idle_timeout: Option<Duration>,
+    watch_sigterm: bool,
+    shared: Arc<PollShared>,
+    wake: Arc<EventFd>,
+) -> Result<()> {
     let ep = Epoll::new()?;
-    let wake = Arc::new(EventFd::new()?);
     let completions = {
         let w = Arc::clone(&wake);
         CompletionQueue::new(Box::new(move || w.signal()))
     };
-    ep.add(listener.as_raw_fd(), EPOLLIN, LISTENER_TOKEN)?;
+    if let Some(l) = listener {
+        ep.add(l.as_raw_fd(), EPOLLIN, LISTENER_TOKEN)?;
+    }
     ep.add(wake.fd, EPOLLIN, WAKE_TOKEN)?;
     let mut lp = EventLoop {
         ep,
@@ -500,29 +699,57 @@ pub(crate) fn serve_event_loop(
         next_conn_id: 0,
         next_token: 0,
         accepted: 0,
-        accepting: true,
+        accepting: listener.is_some(),
         max_conns,
         wheel: idle_timeout.map(|t| IdleWheel::new(t, Instant::now())),
         draining: false,
         drain_closed: false,
         drain_keep: Vec::new(),
+        thread_idx,
+        threads,
+        read_budget: (READ_BUDGET / threads).max(READ_BUDGET_FLOOR),
+        wbuf_budget: (WBUF_TOTAL_BUDGET / threads).max(WBUF_BUDGET_FLOOR),
+        shared,
     };
     let mut events = vec![EpollEvent { events: 0, data: 0 }; EVENT_BATCH];
     let mut accept_err: Option<anyhow::Error> = None;
     loop {
-        if drain.watch_sigterm && SIGTERM_DRAIN.load(Ordering::SeqCst) {
+        if super::fault::poll_thread_kill(lp.thread_idx) {
+            lp.kill_self(listener);
+            return Ok(());
+        }
+        if watch_sigterm && SIGTERM_DRAIN.load(Ordering::SeqCst) {
+            lp.draining = true;
+        }
+        if lp.shared.draining.load(Ordering::SeqCst) {
             lp.draining = true;
         }
         if lp.draining {
-            lp.stop_accepting(&listener);
+            // first observer publishes the drain and wakes the group so
+            // a worker parked in epoll_wait sees it promptly
+            if !lp.shared.draining.swap(true, Ordering::SeqCst) {
+                lp.shared.wake_all();
+            }
+            if let Some(l) = listener {
+                lp.stop_accepting(l);
+            }
             lp.drain_conns();
         }
         if let Some(max) = lp.max_conns {
             if lp.accepting && lp.accepted >= max {
-                lp.stop_accepting(&listener);
+                lp.stop_accepting(listener.expect("max_conns on acceptor"));
             }
         }
-        if !lp.accepting && lp.conns.is_empty() {
+        // ring hand-offs are drained at the loop head as well as on
+        // wake: a worker must adopt every dealt socket before it can
+        // decide its table is empty
+        lp.drain_handoff();
+        let done_feeding = if lp.thread_idx == 0 {
+            !lp.accepting
+        } else {
+            lp.shared.accept_done.load(Ordering::SeqCst)
+        };
+        if done_feeding && lp.conns.is_empty() {
             break;
         }
         // with a wheel, wake at the next tick boundary so idle reaping
@@ -533,26 +760,29 @@ pub(crate) fn serve_event_loop(
             .wheel
             .as_ref()
             .map_or(-1, |w| w.timeout_ms(Instant::now()));
-        if drain.watch_sigterm {
+        if watch_sigterm {
             timeout_ms = if timeout_ms < 0 { 250 } else { timeout_ms.min(250) };
         }
         let n = lp.ep.wait(&mut events, timeout_ms)?;
+        lp.shared.stats.bump_round(lp.thread_idx);
         for ev in &events[..n] {
             // copy packed fields by value (references into a packed
             // struct would be UB)
             let (token, mask) = (ev.data, ev.events);
             match token {
                 LISTENER_TOKEN => {
-                    if let Err(e) = lp.accept_ready(&listener) {
+                    let l = listener.expect("listener event on acceptor");
+                    if let Err(e) = lp.accept_ready(l) {
                         // like the threaded path: stop accepting, serve
                         // the live connections out, then surface the
                         // accept error
-                        lp.stop_accepting(&listener);
+                        lp.stop_accepting(l);
                         accept_err = Some(e);
                     }
                 }
                 WAKE_TOKEN => {
                     lp.wake.drain_counter();
+                    lp.drain_handoff();
                     lp.deliver_completions();
                 }
                 id => lp.conn_event(id, mask),
@@ -560,18 +790,13 @@ pub(crate) fn serve_event_loop(
         }
         lp.reap_idle();
     }
-    // spill the lanes retained by drained connections, then free them
-    if let Some(dir) = &drain.spill_dir {
-        if !lp.drain_keep.is_empty() {
-            let n = lp.front.spill_bindings(&lp.drain_keep, dir);
-            eprintln!(
-                "drain-checkpoint: spilled {n} lane(s) to {}",
-                dir.display()
-            );
-        }
-    }
-    for b in &lp.drain_keep {
-        lp.front.release_binding(b);
+    // merge this thread's drain-retained lanes for the post-join spill
+    if !lp.drain_keep.is_empty() {
+        lp.shared
+            .drain_keep
+            .lock()
+            .unwrap()
+            .append(&mut lp.drain_keep);
     }
     match accept_err {
         Some(e) => Err(e),
@@ -584,7 +809,64 @@ impl EventLoop {
         if self.accepting {
             self.accepting = false;
             self.ep.del(listener.as_raw_fd());
+            // no socket will ever be dealt again: workers whose tables
+            // empty may exit, and any idle ones should notice now
+            self.shared.accept_done.store(true, Ordering::SeqCst);
+            self.shared.wake_all();
         }
+    }
+
+    /// Adopt every connection dealt to this thread's hand-off ring.
+    fn drain_handoff(&mut self) {
+        loop {
+            let next = self.shared.rings[self.thread_idx]
+                .lock()
+                .unwrap()
+                .pop_front();
+            let Some((sock, key)) = next else {
+                return;
+            };
+            // a connection that can't be registered is dropped (closed),
+            // never fatal to the serving loop
+            let _ = self.register_conn(sock, key);
+        }
+    }
+
+    /// Fault-injected death of this poll thread: every owned connection
+    /// is answered with the typed `unavailable` refusal (pending slots
+    /// included — their sweeper completions will find no owner) and
+    /// closed, then the thread exits. Sibling poll threads, sweepers,
+    /// and the other threads' connections are untouched.
+    fn kill_self(&mut self, listener: Option<&TcpListener>) {
+        if let Some(l) = listener {
+            self.stop_accepting(l);
+        }
+        self.shared.alive[self.thread_idx].store(false, Ordering::SeqCst);
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            let Some(mut conn) = self.conns.remove(&id) else {
+                continue;
+            };
+            for s in conn.slots.iter_mut() {
+                if matches!(s, Slot::Waiting { .. }) {
+                    *s = Slot::Ready(error_response(&unavailable_error()));
+                }
+            }
+            conn.slots
+                .push_back(Slot::Ready(error_response(&unavailable_error())));
+            conn.eof = true;
+            self.pump(&mut conn, id);
+            // best-effort single flush; close regardless (the thread is
+            // dying — a slow reader doesn't get to keep it alive)
+            conn.dead = true;
+            self.finish_or_keep(id, conn);
+        }
+        eprintln!(
+            "fault-inject: poll thread {} killed ({} sibling thread(s) \
+             keep serving)",
+            self.thread_idx,
+            self.threads - 1
+        );
     }
 
     /// One-shot drain propagation: flip every live connection to EOF
@@ -629,10 +911,19 @@ impl EventLoop {
                     let key = peer
                         .map(|ip| ip_key(&ip))
                         .unwrap_or_else(|| fallback_key(self.accepted));
+                    let t = self.pick_thread();
                     self.accepted += 1;
-                    // a connection that can't be registered is dropped
-                    // (closed), never fatal to the serving loop
-                    let _ = self.register_conn(sock, key);
+                    if t == self.thread_idx {
+                        // a connection that can't be registered is
+                        // dropped (closed), never fatal to the serving
+                        // loop
+                        let _ = self.register_conn(sock, key);
+                    } else {
+                        // deal to a sibling poll thread: push + wake; it
+                        // adopts the socket in drain_handoff
+                        self.shared.rings[t].lock().unwrap().push_back((sock, key));
+                        self.shared.wakes[t].signal();
+                    }
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
@@ -655,6 +946,19 @@ impl EventLoop {
         }
     }
 
+    /// Round-robin deal target for the next accepted socket, skipping
+    /// dead poll threads (falls back to this thread — the acceptor never
+    /// marks itself dead while accepting).
+    fn pick_thread(&self) -> usize {
+        for off in 0..self.threads {
+            let t = (self.accepted + off) % self.threads;
+            if self.shared.alive[t].load(Ordering::SeqCst) {
+                return t;
+            }
+        }
+        self.thread_idx
+    }
+
     /// Register an accepted, ALREADY-non-blocking socket (the accept path
     /// flips it via `accept4(SOCK_NONBLOCK)` or the fallback `fcntl`).
     fn register_conn(&mut self, sock: TcpStream, key: u64) -> Result<()> {
@@ -666,11 +970,14 @@ impl EventLoop {
         if let Some(wheel) = &mut self.wheel {
             wheel.schedule(id, wheel.timeout);
         }
+        let mut state = ConnState::new(key, self.front.shard_for_key(key));
+        state.poll_thread = Some(self.thread_idx);
         self.conns.insert(
             id,
             Conn {
                 sock,
-                state: ConnState::new(key, self.front.shard_for_key(key)),
+                state,
+                codec: Codec::Probe,
                 rbuf: Vec::new(),
                 wbuf: Vec::new(),
                 wpos: 0,
@@ -716,8 +1023,9 @@ impl EventLoop {
         self.wheel = Some(wheel);
     }
 
-    /// Readiness on a connection fd: read what's there, dispatch every
-    /// complete line, flush what's writable, close if done.
+    /// Readiness on a connection fd: read what's there, resolve the
+    /// codec if still probing, dispatch every complete line (JSON) or
+    /// frame (binary), flush what's writable, close if done.
     fn conn_event(&mut self, id: u64, mask: u32) {
         let Some(mut conn) = self.conns.remove(&id) else {
             return;
@@ -726,56 +1034,143 @@ impl EventLoop {
             conn.dead = true;
         }
         if !conn.dead && !conn.eof && mask & (EPOLLIN | EPOLLRDHUP | EPOLLHUP) != 0 {
-            if read_ready(&mut conn) > 0 {
+            if read_ready(&mut conn, self.read_budget) > 0 {
                 // incoming bytes = the peer is alive; stamp for the
                 // idle-timeout wheel
                 conn.last_active = Instant::now();
             }
-            // frame + dispatch every complete line, compacting the read
-            // buffer ONCE per round (a per-line drain would memmove the
-            // whole remainder per request under pipelined bursts)
-            let mut consumed = 0usize;
-            while !conn.dead {
-                let Some((end, next)) = next_line_bounds(&conn.rbuf, consumed)
-                else {
-                    break;
-                };
-                // parse in place while the buffer is borrowed (`Op` owns
-                // its data, so no per-line String copy on the poll
-                // thread's hot path); invalid UTF-8 closes the
-                // connection with no response — the same observable
-                // behavior as the threaded path, whose `read_line` fails
-                // with InvalidData there
-                let op = match std::str::from_utf8(&conn.rbuf[consumed..end]) {
-                    Ok(line) => parse_op(line),
-                    Err(_) => {
-                        conn.dead = true;
-                        break;
-                    }
-                };
-                consumed = next;
-                self.dispatch(&mut conn, id, op);
-            }
-            if consumed > 0 {
-                conn.rbuf.drain(..consumed);
-            }
-            if conn.eof && !conn.dead && !conn.rbuf.is_empty() {
-                // the peer half-closed with an unterminated final line:
-                // serve it, exactly like the threaded path's
-                // BufReader::read_line returning the partial line at EOF
-                // (invalid UTF-8 closes unanswered there too)
-                let tail = std::mem::take(&mut conn.rbuf);
-                match std::str::from_utf8(&tail) {
-                    Ok(line) => {
-                        let op = parse_op(line);
-                        self.dispatch(&mut conn, id, op);
-                    }
-                    Err(_) => conn.dead = true,
-                }
+        }
+        if conn.codec == Codec::Probe && !conn.dead {
+            self.resolve_codec(&mut conn);
+        }
+        if !conn.dead {
+            match conn.codec {
+                Codec::Json => self.dispatch_lines(&mut conn, id),
+                Codec::Binary => self.dispatch_frames(&mut conn, id),
+                Codec::Probe => {} // still ambiguous: wait for bytes
             }
         }
         self.pump(&mut conn, id);
         self.finish_or_keep(id, conn);
+    }
+
+    /// Decide a probing connection's codec from its buffered head. The
+    /// first bytes either diverge from the `LRBF` magic (→ JSON, buffer
+    /// untouched — it is the head of the first line) or complete the
+    /// 8-byte client hello (→ ack + binary). A magic-matched hello with
+    /// the wrong version/reserved bytes is refused with the close frame:
+    /// the peer speaks OUR framing but a dialect we don't — answering in
+    /// JSON would be garbage to it.
+    fn resolve_codec(&mut self, conn: &mut Conn) {
+        let hello = binframe::client_hello();
+        let n = conn.rbuf.len().min(binframe::HELLO_LEN);
+        let magic_n = n.min(binframe::MAGIC.len());
+        if conn.rbuf[..magic_n] != hello[..magic_n] {
+            conn.codec = Codec::Json;
+        } else if n == binframe::HELLO_LEN {
+            if conn.rbuf[..binframe::HELLO_LEN] == hello[..] {
+                conn.rbuf.drain(..binframe::HELLO_LEN);
+                conn.wbuf.extend_from_slice(&binframe::server_hello());
+                conn.codec = Codec::Binary;
+                self.front.note_binary_conn();
+            } else {
+                conn.rbuf.clear(); // the refused hello is not a frame
+                conn.wbuf
+                    .extend_from_slice(&binframe::bad_frame_close_frame());
+                conn.eof = true; // flush the refusal, then close
+                conn.codec = Codec::Binary;
+            }
+        } else if conn.eof {
+            // half-closed mid-probe with a strict magic prefix buffered:
+            // treat it as the partial final JSON line, exactly like the
+            // threaded path's byte-at-a-time probe hitting EOF
+            conn.codec = Codec::Json;
+        }
+        // else: a strict prefix of the hello — keep probing
+    }
+
+    /// Frame + dispatch every complete JSON line, compacting the read
+    /// buffer ONCE per round (a per-line drain would memmove the whole
+    /// remainder per request under pipelined bursts).
+    fn dispatch_lines(&mut self, conn: &mut Conn, id: u64) {
+        let mut consumed = 0usize;
+        while !conn.dead {
+            let Some((end, next)) = next_line_bounds(&conn.rbuf, consumed)
+            else {
+                break;
+            };
+            // parse in place while the buffer is borrowed (`Op` owns
+            // its data, so no per-line String copy on the poll
+            // thread's hot path); invalid UTF-8 closes the
+            // connection with no response — the same observable
+            // behavior as the threaded path, whose `read_line` fails
+            // with InvalidData there
+            let op = match std::str::from_utf8(&conn.rbuf[consumed..end]) {
+                Ok(line) => parse_op(line),
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            };
+            consumed = next;
+            self.dispatch(conn, id, op);
+        }
+        if consumed > 0 {
+            conn.rbuf.drain(..consumed);
+        }
+        if conn.eof && !conn.dead && !conn.rbuf.is_empty() {
+            // the peer half-closed with an unterminated final line:
+            // serve it, exactly like the threaded path's
+            // BufReader::read_line returning the partial line at EOF
+            // (invalid UTF-8 closes unanswered there too)
+            let tail = std::mem::take(&mut conn.rbuf);
+            match std::str::from_utf8(&tail) {
+                Ok(line) => {
+                    let op = parse_op(line);
+                    self.dispatch(conn, id, op);
+                }
+                Err(_) => conn.dead = true,
+            }
+        }
+    }
+
+    /// Frame + dispatch every complete binary frame. Framing violations
+    /// split by severity exactly like the threaded path: an oversized
+    /// length prefix or a torn frame at EOF means the byte stream can no
+    /// longer be trusted — answer the typed `bad_frame` error and close;
+    /// an in-body shape violation surfaces from `decode_request` as a
+    /// typed error on a connection that stays framed and alive.
+    fn dispatch_frames(&mut self, conn: &mut Conn, id: u64) {
+        let mut consumed = 0usize;
+        while !conn.dead {
+            match binframe::split_frame(&conn.rbuf, consumed) {
+                binframe::Framing::NeedMore => break,
+                binframe::Framing::Oversized => {
+                    conn.slots.push_back(Slot::Ready(error_response(
+                        &coded_error("bad_frame"),
+                    )));
+                    conn.eof = true;
+                    consumed = conn.rbuf.len();
+                    break;
+                }
+                binframe::Framing::Frame { start, end, next } => {
+                    let op =
+                        binframe::decode_request(&conn.rbuf[start..end]);
+                    consumed = next;
+                    self.dispatch(conn, id, op);
+                }
+            }
+        }
+        if consumed > 0 {
+            conn.rbuf.drain(..consumed);
+        }
+        if conn.eof && !conn.dead && !conn.rbuf.is_empty() {
+            // torn frame at EOF: the typed refusal, then close
+            conn.rbuf.clear();
+            conn.slots.push_back(Slot::Ready(error_response(
+                &coded_error("bad_frame"),
+            )));
+        }
     }
 
     fn alloc_token(&mut self, conn_id: u64) -> u64 {
@@ -1119,9 +1514,15 @@ impl EventLoop {
             let Some(Slot::Ready(json)) = conn.slots.pop_front() else {
                 unreachable!("front() said Ready");
             };
-            conn.wbuf
-                .extend_from_slice(json.to_string_compact().as_bytes());
-            conn.wbuf.push(b'\n');
+            if conn.codec == Codec::Binary {
+                // length-prefixed frame, raw LE floats — no float
+                // formatting on the reply path
+                binframe::encode_response(&json, &mut conn.wbuf);
+            } else {
+                conn.wbuf
+                    .extend_from_slice(json.to_string_compact().as_bytes());
+                conn.wbuf.push(b'\n');
+            }
         }
         let flushed_from = conn.wpos;
         flush(conn);
@@ -1145,9 +1546,11 @@ impl EventLoop {
         // backpressure: stop reading while the peer isn't draining its
         // responses (resumes automatically — EPOLLOUT flushes call back
         // into pump, which re-adds EPOLLIN once below the mark). The
-        // mark is the shared budget over the live population: `conn` is
-        // temporarily out of `self.conns`, hence the +1.
-        if !conn.eof && pending <= wbuf_high_water(self.conns.len() + 1) {
+        // mark is this thread's budget slice over its live population:
+        // `conn` is temporarily out of `self.conns`, hence the +1.
+        if !conn.eof
+            && pending <= wbuf_high_water(self.wbuf_budget, self.conns.len() + 1)
+        {
             want |= EPOLLIN | EPOLLRDHUP;
         }
         if pending > 0 {
@@ -1276,10 +1679,16 @@ fn parse_peer_sockaddr(buf: &[u8], len: usize) -> Option<std::net::IpAddr> {
 /// (the remainder stays readable — level-triggered — and is picked up
 /// next round, after other connections get their turn). Returns the
 /// bytes taken this round (the idle-timeout activity signal).
-fn read_ready(conn: &mut Conn) -> usize {
+fn read_ready(conn: &mut Conn, budget: usize) -> usize {
+    // one binary frame may legitimately reach MAX_FRAME_BYTES plus its
+    // 4-byte prefix; JSON lines keep the historical line bound
+    let cap = match conn.codec {
+        Codec::Binary => binframe::MAX_FRAME_BYTES + 4,
+        _ => MAX_LINE_BYTES,
+    };
     let mut buf = [0u8; 4096];
     let mut taken = 0usize;
-    while taken < READ_BUDGET {
+    while taken < budget {
         match conn.sock.read(&mut buf) {
             Ok(0) => {
                 conn.eof = true;
@@ -1288,7 +1697,7 @@ fn read_ready(conn: &mut Conn) -> usize {
             Ok(n) => {
                 taken += n;
                 conn.rbuf.extend_from_slice(&buf[..n]);
-                if conn.rbuf.len() > MAX_LINE_BYTES {
+                if conn.rbuf.len() > cap {
                     conn.dead = true;
                     break;
                 }
@@ -1549,16 +1958,22 @@ mod tests {
 
     #[test]
     fn wbuf_high_water_apportions_the_shared_budget() {
+        let b = WBUF_TOTAL_BUDGET;
         // up to 64 live connections each keep the full 1 MiB ceiling
-        assert_eq!(wbuf_high_water(1), 1 << 20);
-        assert_eq!(wbuf_high_water(64), 1 << 20);
+        assert_eq!(wbuf_high_water(b, 1), 1 << 20);
+        assert_eq!(wbuf_high_water(b, 64), 1 << 20);
         // past that the 64 MiB process budget divides down
-        assert_eq!(wbuf_high_water(128), 512 << 10);
-        assert_eq!(wbuf_high_water(1024), 64 << 10);
+        assert_eq!(wbuf_high_water(b, 128), 512 << 10);
+        assert_eq!(wbuf_high_water(b, 1024), 64 << 10);
         // the floor keeps a huge fleet from starving each connection
-        assert_eq!(wbuf_high_water(100_000), 64 << 10);
+        assert_eq!(wbuf_high_water(b, 100_000), 64 << 10);
         // degenerate zero-live input must not divide by zero
-        assert_eq!(wbuf_high_water(0), 1 << 20);
+        assert_eq!(wbuf_high_water(b, 0), 1 << 20);
+        // a poll thread's slice divides ITS budget, not the process's:
+        // at P=4 the per-thread 16 MiB slice halves the 128-conn mark
+        assert_eq!(wbuf_high_water((b / 4).max(WBUF_BUDGET_FLOOR), 128), 128 << 10);
+        // the per-thread floor still guarantees a sane mark at huge P
+        assert_eq!(wbuf_high_water(WBUF_BUDGET_FLOOR, 8), 128 << 10);
     }
 
     #[test]

@@ -175,6 +175,55 @@ pub struct ShardedFront {
     /// detector), set once by `serve_on_opts` when `--peers` is given —
     /// both transports' ownership guards read it from here.
     cluster: OnceLock<Arc<ClusterState>>,
+    /// Wire-path observability, set once by the event-loop transport
+    /// (`--poll-threads`); `None` on the threaded transport, so `info`
+    /// omits the poll fields there.
+    poll_stats: OnceLock<Arc<PollStats>>,
+}
+
+/// Counters the event-loop transport publishes through `info`: the
+/// poll-thread count, per-thread readiness-round totals (a stuck thread
+/// shows as a frozen counter while its siblings advance), and how many
+/// connections negotiated the binary frame protocol.
+pub struct PollStats {
+    rounds: Vec<AtomicU64>,
+    binary_conns: AtomicU64,
+}
+
+impl PollStats {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            rounds: (0..threads.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            binary_conns: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured poll-thread count.
+    pub fn threads(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// One epoll readiness round completed on thread `i`.
+    pub fn bump_round(&self, i: usize) {
+        if let Some(r) = self.rounds.get(i) {
+            r.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Per-thread readiness-round totals.
+    pub fn rounds(&self) -> Vec<u64> {
+        self.rounds.iter().map(|r| r.load(Ordering::Relaxed)).collect()
+    }
+
+    /// A connection upgraded to binary frames.
+    pub fn note_binary_conn(&self) {
+        self.binary_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total binary-upgraded connections since start.
+    pub fn binary_conns(&self) -> u64 {
+        self.binary_conns.load(Ordering::Relaxed)
+    }
 }
 
 impl ShardedFront {
@@ -248,7 +297,27 @@ impl ShardedFront {
             replicas: AtomicUsize::new(0),
             replica_mask: AtomicU64::new(u64::MAX),
             cluster: OnceLock::new(),
+            poll_stats: OnceLock::new(),
         })
+    }
+
+    /// Attach the event-loop transport's poll stats (once; later calls
+    /// ignored — one transport serves a front for its lifetime).
+    pub fn set_poll_stats(&self, s: Arc<PollStats>) {
+        let _ = self.poll_stats.set(s);
+    }
+
+    /// The event-loop poll stats, when that transport serves this front.
+    pub fn poll_stats(&self) -> Option<&Arc<PollStats>> {
+        self.poll_stats.get()
+    }
+
+    /// A connection negotiated the binary frame protocol (no-op on the
+    /// threaded transport, which publishes no poll stats).
+    pub fn note_binary_conn(&self) {
+        if let Some(s) = self.poll_stats.get() {
+            s.note_binary_conn();
+        }
     }
 
     /// Declare the standby fan-out width (N replicas, capped at 64).

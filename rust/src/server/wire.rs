@@ -122,7 +122,7 @@
 //! (precision-matched, bit-identical to a hub lane).
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -136,6 +136,7 @@ use crate::reservoir::{BatchEsn, LaneReadout};
 use crate::util::json::{parse, Json};
 use crate::util::Timer;
 
+use super::binframe;
 use super::front::LaneSnapshot;
 use super::registry::{
     ModelId, ModelRecipe, ModelRegistry, RegistryError, BASE_MODEL,
@@ -344,6 +345,14 @@ pub struct ServeOpts {
     /// pinned core, if any, is reported per shard in `info`).
     /// `--pin-cores` on the CLI.
     pub pin_cores: bool,
+    /// Event-loop poll threads (0 or 1 = the single-poll-thread loop,
+    /// bit-identical to the pre-scale-out transport). With P > 1,
+    /// accepted connections are dealt round-robin across P epoll loops,
+    /// each owning its conns' buffers, idle wheel, and completion
+    /// eventfd; sweepers/shards/cluster/registry are untouched. Ignored
+    /// by the threaded transport (every conn owns a thread there
+    /// already). `--poll-threads` on the CLI.
+    pub poll_threads: usize,
 }
 
 /// Set by the SIGTERM handler; polled by both transports' accept loops
@@ -483,6 +492,7 @@ pub fn serve_on_opts(
             max_requests,
             opts.idle_timeout,
             &drain,
+            opts.poll_threads.max(1),
         )
     } else {
         serve_threaded(&listener, &front, max_requests, &drain)
@@ -639,8 +649,16 @@ fn serve_event(
     max_conns: Option<usize>,
     idle_timeout: Option<Duration>,
     drain: &DrainCfg,
+    poll_threads: usize,
 ) -> Result<()> {
-    super::poll::serve_event_loop(listener, front, max_conns, idle_timeout, drain)
+    super::poll::serve_event_loop(
+        listener,
+        front,
+        max_conns,
+        idle_timeout,
+        drain,
+        poll_threads,
+    )
 }
 
 #[cfg(not(target_os = "linux"))]
@@ -650,6 +668,7 @@ fn serve_event(
     _max_conns: Option<usize>,
     _idle_timeout: Option<Duration>,
     _drain: &DrainCfg,
+    _poll_threads: usize,
 ) -> Result<()> {
     unreachable!("event loop is Linux-only; serve_on routes non-Linux to the threaded path")
 }
@@ -803,6 +822,10 @@ pub(crate) struct ConnState {
     /// connection's lifetime, like the home shard: per-connection lane
     /// state never switches models mid-stream.
     pub(crate) model: ModelId,
+    /// Home poll thread (event transport only; `None` on the threaded
+    /// path) — surfaced as `poll_thread` in `info` so a client can see
+    /// which wire-path owner serves it.
+    pub(crate) poll_thread: Option<usize>,
     hub_denied: bool,
     /// Built lazily on the first hub-denied `stream` op — predict-only
     /// connections (and connections that win a hub lane) never pay for it.
@@ -816,6 +839,7 @@ impl ConnState {
             shard_idx,
             binding: None,
             model: BASE_MODEL,
+            poll_thread: None,
             hub_denied: false,
             local: None,
         }
@@ -1003,6 +1027,7 @@ pub(crate) const ERROR_CODES: &[&str] = &[
     "redirect_loop",
     "unknown_model",
     "model_budget",
+    "bad_frame",
 ];
 
 /// Resolve a sweeper-side error-code slug into the shared typed wire
@@ -1064,6 +1089,10 @@ pub(crate) fn coded_error(code: &'static str) -> anyhow::Error {
         }
         "model_budget" => {
             "model budget exhausted; delete a model or raise --max-models"
+        }
+        "bad_frame" => {
+            "malformed binary frame: the connection's framing cannot be \
+             trusted (torn, oversized, or shape-violating frame)"
         }
         other => {
             debug_assert!(false, "unmapped wire error code {other:?}");
@@ -1710,6 +1739,25 @@ pub(crate) fn info_response(front: &ShardedFront, conn: &ConnState) -> Json {
             ),
         ));
     }
+    // wire-path scale-out (PR 10): only the event-loop transport
+    // publishes poll stats — the poll-thread count, THIS connection's
+    // home poll thread, binary-upgraded connection count, and the
+    // per-thread readiness-round counters (a stuck thread reads as a
+    // frozen counter while its siblings advance)
+    if let Some(ps) = front.poll_stats() {
+        fields.push(("poll_threads", Json::Num(ps.threads() as f64)));
+        fields.push(("poll_thread", match conn.poll_thread {
+            Some(t) => Json::Num(t as f64),
+            None => Json::Null,
+        }));
+        fields.push(("binary_conns", Json::Num(ps.binary_conns() as f64)));
+        fields.push((
+            "poll_rounds",
+            Json::Arr(
+                ps.rounds().into_iter().map(|r| Json::Num(r as f64)).collect(),
+            ),
+        ));
+    }
     Json::obj(fields)
 }
 
@@ -1838,14 +1886,68 @@ fn serve_lines(
 ) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed (or the drain woke us with EOF)
+    // --- protocol negotiation ---------------------------------------
+    // The connection's first bytes pick its codec. A proper prefix of
+    // the binary magic keeps probing one byte at a time; the first
+    // divergence makes this a JSON connection with the probed bytes as
+    // the head of its first line ('{' and '\n' diverge at byte 0, so a
+    // probe never eats past the first line). A full magic match reads
+    // the rest of the 8-byte hello and upgrades to binary frames.
+    let mut probe: Vec<u8> = Vec::with_capacity(binframe::HELLO_LEN);
+    let binary = loop {
+        let mut b = [0u8; 1];
+        match reader.read(&mut b) {
+            Ok(0) => {
+                // EOF mid-probe: nothing arrived → clean close;
+                // otherwise the probed bytes are a final partial line,
+                // handled below exactly as read_line would have
+                if probe.is_empty() {
+                    return Ok(());
+                }
+                break false;
+            }
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
         }
+        probe.push(b[0]);
+        if probe.len() <= binframe::MAGIC.len() {
+            if probe[..] != binframe::MAGIC[..probe.len()] {
+                break false; // JSON: probe starts the first line
+            }
+        } else if probe.len() == binframe::HELLO_LEN {
+            break true; // full hello received, magic matched
+        }
+    };
+    if binary {
+        if probe[..] != binframe::client_hello()[..] {
+            // magic matched but version/reserved bytes did not — the
+            // peer speaks a framing we don't; refuse typed, close
+            out.write_all(&binframe::bad_frame_close_frame())?;
+            return Ok(());
+        }
+        out.write_all(&binframe::server_hello())?;
+        front.note_binary_conn();
+        return serve_frames(front, conn, reader, out, ctl);
+    }
+    // --- JSON codec -------------------------------------------------
+    // `carry` holds the probed head of the FIRST line (possibly already
+    // newline-terminated); later rounds start empty. `read_until` plus
+    // the UTF-8 check below is exactly `read_line`.
+    let mut carry = probe;
+    loop {
+        let mut bytes = std::mem::take(&mut carry);
+        if bytes.last() != Some(&b'\n') {
+            let had_head = !bytes.is_empty();
+            if reader.read_until(b'\n', &mut bytes)? == 0 && !had_head {
+                return Ok(()); // client closed (or the drain woke us with EOF)
+            }
+        }
+        let line = std::str::from_utf8(&bytes).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+        })?;
         let mut drain_req = false;
-        let response = match handle_request(front, conn, &line, &mut drain_req) {
+        let response = match handle_request(front, conn, line, &mut drain_req) {
             Ok(json) => json,
             Err(e) => error_response(&e),
         };
@@ -1856,6 +1958,53 @@ fn serve_lines(
         }
         if ctl.draining.load(Ordering::SeqCst) {
             // the reply above flushed; exit between requests, cleanly
+            return Ok(());
+        }
+    }
+}
+
+/// The binary-frame twin of the JSON loop above: one frame in, one
+/// frame out, the SAME request handler, the same drain semantics.
+/// Framing-lost conditions (a torn or oversized frame) answer the typed
+/// `bad_frame` refusal and close — the length prefix can no longer be
+/// trusted as a skip distance. In-body shape violations are ordinary
+/// typed errors (the frame was consumed exactly) and the connection
+/// survives them.
+fn serve_frames(
+    front: &ShardedFront,
+    conn: &mut ConnState,
+    mut reader: BufReader<TcpStream>,
+    mut out: TcpStream,
+    ctl: &DrainCtl,
+) -> Result<()> {
+    let mut frame = Vec::new();
+    loop {
+        let body = match binframe::read_frame(&mut reader)? {
+            binframe::ReadFrame::Eof => return Ok(()),
+            binframe::ReadFrame::TornEof | binframe::ReadFrame::Oversized => {
+                out.write_all(&binframe::bad_frame_close_frame())?;
+                return Ok(());
+            }
+            binframe::ReadFrame::Frame(body) => body,
+        };
+        let mut drain_req = false;
+        let response = match binframe::decode_request(&body).and_then(
+            |(op, budget, wire_model)| {
+                handle_parsed_request(
+                    front, conn, op, budget, wire_model, &mut drain_req,
+                )
+            },
+        ) {
+            Ok(json) => json,
+            Err(e) => error_response(&e),
+        };
+        frame.clear();
+        binframe::encode_response(&response, &mut frame);
+        out.write_all(&frame)?;
+        if drain_req {
+            ctl.draining.store(true, Ordering::SeqCst);
+        }
+        if ctl.draining.load(Ordering::SeqCst) {
             return Ok(());
         }
     }
@@ -1873,8 +2022,25 @@ fn handle_request(
     line: &str,
     drain_out: &mut bool,
 ) -> Result<Json> {
-    let model = front.model();
     let (op, budget, wire_model) = parse_op(line)?;
+    handle_parsed_request(front, conn, op, budget, wire_model, drain_out)
+}
+
+/// The transport-independent half of [`handle_request`]: op already
+/// parsed (by the JSON parser OR the binary frame decoder — both feed
+/// the SAME `Op`), response built as the SAME `Json` either way. This
+/// is the error-code parity contract's enforcement point: a binary
+/// connection cannot produce a different refusal because there is only
+/// one decision tree to refuse from.
+pub(crate) fn handle_parsed_request(
+    front: &ShardedFront,
+    conn: &mut ConnState,
+    op: Op,
+    budget: Option<Duration>,
+    wire_model: Option<ModelId>,
+    drain_out: &mut bool,
+) -> Result<Json> {
+    let model = front.model();
     // cluster ownership: key-homed ops on a key another live node owns
     // answer `moved {addr}` before touching any lane state
     if let Some(e) = ownership_guard(front, conn.key, &op) {
@@ -2195,6 +2361,10 @@ pub struct Client {
     /// The configured IO timeout, remembered so redirect-follow
     /// reconnects keep the caller's deadline bounds.
     io_timeout: Option<Duration>,
+    /// Binary-frame mode (after a successful [`Self::upgrade_binary`]).
+    /// Requests and replies carry raw LE float bits instead of JSON
+    /// text; the decoded `Json` is structurally identical either way.
+    binary: bool,
 }
 
 impl Client {
@@ -2204,6 +2374,7 @@ impl Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
             io_timeout: None,
+            binary: false,
         })
     }
 
@@ -2221,7 +2392,33 @@ impl Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
             io_timeout: None,
+            binary: false,
         })
+    }
+
+    /// Negotiate the binary frame protocol on this connection: send the
+    /// magic+version hello, require the server's ack. Must be the FIRST
+    /// bytes on the wire (the server sniffs them against the magic), so
+    /// call it straight after connecting, before any request. After the
+    /// upgrade every [`Self::request`]/[`Self::send`]/[`Self::recv`]
+    /// moves raw little-endian float bits — no float formatting on
+    /// either side — and redirect follows re-negotiate automatically.
+    pub fn upgrade_binary(&mut self) -> Result<()> {
+        self.writer.write_all(&binframe::client_hello())?;
+        let mut ack = [0u8; binframe::HELLO_LEN];
+        self.reader.read_exact(&mut ack)?;
+        anyhow::ensure!(
+            ack == binframe::server_hello(),
+            "server refused the binary upgrade (not a binary-capable \
+             endpoint?)"
+        );
+        self.binary = true;
+        Ok(())
+    }
+
+    /// Is this connection in binary-frame mode?
+    pub fn is_binary(&self) -> bool {
+        self.binary
     }
 
     /// Bound every read AND write on this connection (`None` = block
@@ -2268,6 +2465,10 @@ impl Client {
             }
             let mut next = Client::connect(&addr)?;
             next.set_io_timeout(self.io_timeout)?;
+            if self.binary {
+                // the session keeps its codec across redirects
+                next.upgrade_binary()?;
+            }
             *self = next;
             self.send(req)?;
             resp = self.recv()?;
@@ -2275,10 +2476,15 @@ impl Client {
         Ok(resp)
     }
 
-    /// Write one request line without waiting for the reply — pair with
-    /// [`Self::recv`] to pipeline requests across many connections (the
-    /// event-loop benches fan out this way).
+    /// Write one request line (or frame, in binary mode) without waiting
+    /// for the reply — pair with [`Self::recv`] to pipeline requests
+    /// across many connections (the event-loop benches fan out this
+    /// way).
     pub fn send(&mut self, req: &Json) -> Result<()> {
+        if self.binary {
+            self.writer.write_all(&binframe::encode_request(req))?;
+            return Ok(());
+        }
         self.writer
             .write_all(req.to_string_compact().as_bytes())?;
         self.writer.write_all(b"\n")?;
@@ -2293,9 +2499,22 @@ impl Client {
         Ok(())
     }
 
-    /// Read one reply line (FIFO with the requests sent on this
-    /// connection).
+    /// Read one reply line (or frame, in binary mode) — FIFO with the
+    /// requests sent on this connection.
     pub fn recv(&mut self) -> Result<Json> {
+        if self.binary {
+            return match binframe::read_frame(&mut self.reader)? {
+                binframe::ReadFrame::Frame(body) => {
+                    binframe::decode_response(&body)
+                }
+                binframe::ReadFrame::Eof => {
+                    Err(anyhow!("connection closed mid-reply"))
+                }
+                binframe::ReadFrame::TornEof | binframe::ReadFrame::Oversized => {
+                    Err(anyhow!("malformed reply frame from server"))
+                }
+            };
+        }
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         parse(line.trim())
@@ -4152,5 +4371,295 @@ mod tests {
         c.shutdown_drain().unwrap();
         drop(c);
         auto.join().unwrap();
+    }
+
+    // -----------------------------------------------------------------
+    // PR 10: wire-path A/B. The binary frame protocol must be
+    // BIT-identical to JSON on every op, on both transports, at both
+    // precisions. One fresh server per client (same deterministic
+    // model), the same op sequence, transcripts compared as compact
+    // JSON text — shortest-round-trip float formatting means equal
+    // text ⇔ equal bits.
+    // -----------------------------------------------------------------
+
+    /// The op sequence both clients drive: every serving op, version
+    /// control, a tunnelled structured op, deadline-tagged requests and
+    /// typed errors — plus float values (−0.0, the smallest subnormal)
+    /// that would expose any formatting shortcut on either side.
+    fn ab_ops() -> Vec<Json> {
+        let task = MsoTask::new(1);
+        let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        let op = |name: &str| ("op", Json::Str(name.into()));
+        vec![
+            Json::obj(vec![op("ping")]),
+            Json::obj(vec![op("predict"), ("input", arr(&task.input[..25]))]),
+            Json::obj(vec![
+                op("predict"),
+                ("input", arr(&[0.0, -0.0, 5e-324, 1.0e-300, -7.25e-12, 0.5])),
+            ]),
+            Json::obj(vec![op("stream"), ("input", arr(&task.input[..5]))]),
+            Json::obj(vec![op("stream"), ("input", arr(&task.input[5..10]))]),
+            Json::obj(vec![
+                op("train"),
+                ("input", arr(&task.input[10..50])),
+                ("target", arr(&task.input[11..51])),
+            ]),
+            Json::obj(vec![op("commit"), ("alpha", Json::Num(1e-8))]),
+            Json::obj(vec![op("stream"), ("input", arr(&task.input[10..15]))]),
+            Json::obj(vec![op("rollback"), ("version", Json::Num(0.0))]),
+            Json::obj(vec![op("stream"), ("input", arr(&task.input[15..20]))]),
+            // tunnelled op with a structured reply
+            Json::obj(vec![op("checkpoint")]),
+            Json::obj(vec![op("ping"), ("deadline_ms", Json::Num(30_000.0))]),
+            Json::obj(vec![op("reset")]),
+            Json::obj(vec![op("stream"), ("input", arr(&task.input[..5]))]),
+            // typed errors must match byte for byte too
+            Json::obj(vec![op("no_such_op")]),
+            Json::obj(vec![
+                op("train"),
+                ("input", arr(&[1.0])),
+                ("target", arr(&[1.0, 2.0])),
+            ]),
+            Json::obj(vec![op("rollback"), ("version", Json::Num(99.0))]),
+        ]
+    }
+
+    /// `steps_per_sec` is wall-clock timing — the only legitimately
+    /// nondeterministic response field. Everything else must match.
+    fn strip_timing(mut j: Json) -> Json {
+        if let Json::Obj(ref mut m) = j {
+            m.remove("steps_per_sec");
+        }
+        j
+    }
+
+    fn run_wire_ab(threaded: bool, model_fn: fn() -> Model) {
+        let seq = ab_ops();
+        let mut transcripts: Vec<Vec<String>> = Vec::new();
+        for binary in [false, true] {
+            let model = Arc::new(model_fn());
+            let (addr, handle) = spawn_server(model, 1, Some(1), threaded);
+            let mut c = Client::connect(&addr).unwrap();
+            if binary {
+                c.upgrade_binary().unwrap();
+            }
+            let mut out = Vec::with_capacity(seq.len());
+            for req in &seq {
+                let resp = c.request(req).unwrap();
+                out.push(strip_timing(resp).to_string_compact());
+            }
+            drop(c);
+            handle.join().unwrap();
+            transcripts.push(out);
+        }
+        let (json_t, bin_t) = (&transcripts[0], &transcripts[1]);
+        assert_eq!(json_t.len(), bin_t.len());
+        for (i, (a, b)) in json_t.iter().zip(bin_t.iter()).enumerate() {
+            assert_eq!(
+                a,
+                b,
+                "response to op #{i} ({}) diverged between JSON and binary",
+                seq[i].to_string_compact()
+            );
+        }
+    }
+
+    #[test]
+    fn binary_transcript_is_bit_identical_to_json_threaded_f64() {
+        run_wire_ab(true, make_model);
+    }
+
+    #[test]
+    fn binary_transcript_is_bit_identical_to_json_threaded_f32() {
+        run_wire_ab(true, make_model_f32);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn binary_transcript_is_bit_identical_to_json_event_loop_f64() {
+        run_wire_ab(false, make_model);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn binary_transcript_is_bit_identical_to_json_event_loop_f32() {
+        run_wire_ab(false, make_model_f32);
+    }
+
+    /// Drive a poisoned binary connection end to end: hello + ack, then
+    /// `poison` bytes, then write-shutdown. The server must answer ONE
+    /// typed `bad_frame` refusal frame and close the connection.
+    fn assert_bad_frame_then_eof(addr: &str, poison: &[u8]) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&binframe::client_hello()).unwrap();
+        let mut ack = [0u8; binframe::HELLO_LEN];
+        s.read_exact(&mut ack).unwrap();
+        assert_eq!(ack, binframe::server_hello(), "upgrade ack mismatch");
+        s.write_all(poison).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(s);
+        match binframe::read_frame(&mut reader).unwrap() {
+            binframe::ReadFrame::Frame(body) => {
+                let resp = binframe::decode_response(&body).unwrap();
+                assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+                assert_eq!(
+                    resp.get("code").and_then(Json::as_str),
+                    Some("bad_frame"),
+                    "refusal must carry the typed bad_frame code: {resp:?}"
+                );
+            }
+            _ => panic!("expected a typed bad_frame reply frame"),
+        }
+        match binframe::read_frame(&mut reader).unwrap() {
+            binframe::ReadFrame::Eof => {}
+            _ => panic!("expected EOF after the bad_frame refusal"),
+        }
+    }
+
+    fn run_framing_refusals(threaded: bool) {
+        let model = Arc::new(make_model());
+        let (addr, handle) = spawn_server(model, 3, Some(1), threaded);
+        // oversized length prefix: framing is lost from the first field
+        let over = ((binframe::MAX_FRAME_BYTES + 1) as u32).to_le_bytes();
+        assert_bad_frame_then_eof(&addr, &over);
+        // torn frame: the prefix promises 100 bytes, EOF after 10
+        let mut torn = 100u32.to_le_bytes().to_vec();
+        torn.extend_from_slice(&[0u8; 10]);
+        assert_bad_frame_then_eof(&addr, &torn);
+        // wrong-version hello: magic matches, version does not — the
+        // typed refusal comes back before any frame is exchanged
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut bad_hello = binframe::client_hello();
+        bad_hello[4] = binframe::VERSION + 1;
+        s.write_all(&bad_hello).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut reader = BufReader::new(s);
+        match binframe::read_frame(&mut reader).unwrap() {
+            binframe::ReadFrame::Frame(body) => {
+                let resp = binframe::decode_response(&body).unwrap();
+                assert_eq!(
+                    resp.get("code").and_then(Json::as_str),
+                    Some("bad_frame"),
+                    "wrong-version hello must be refused typed: {resp:?}"
+                );
+            }
+            _ => panic!("expected a typed refusal of the wrong-version hello"),
+        }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn torn_and_oversized_frames_refused_on_the_wire_threaded() {
+        run_framing_refusals(true);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn torn_and_oversized_frames_refused_on_the_wire_event_loop() {
+        run_framing_refusals(false);
+    }
+
+    /// A binary upgrade on one connection must not disturb JSON
+    /// connections on the same server — and both answer bit-identically.
+    fn run_upgrade_negotiation(threaded: bool) {
+        let model = Arc::new(make_model());
+        let (addr, handle) = spawn_server(Arc::clone(&model), 2, Some(1), threaded);
+        let task = MsoTask::new(1);
+        let mut bin = Client::connect(&addr).unwrap();
+        bin.upgrade_binary().unwrap();
+        assert!(bin.is_binary());
+        let mut json = Client::connect(&addr).unwrap();
+        assert!(!json.is_binary());
+        let want = model.predict(&task.input[..20]);
+        for c in [&mut bin, &mut json] {
+            let got = c.predict(&task.input[..20]).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+            }
+        }
+        drop(bin);
+        drop(json);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn binary_upgrade_coexists_with_json_threaded() {
+        run_upgrade_negotiation(true);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn binary_upgrade_coexists_with_json_event_loop() {
+        run_upgrade_negotiation(false);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn poll_threads_deal_connections_and_publish_stats() {
+        // P = 2 poll threads: connections are dealt round-robin, every
+        // connection serves bit-identically wherever it lands, and
+        // `info` publishes the new wire-path observability fields
+        let model = Arc::new(make_model());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server_model = Arc::clone(&model);
+        let handle = std::thread::spawn(move || {
+            serve_on_opts(
+                listener,
+                server_model,
+                Some(4),
+                ServeOpts {
+                    shards: Some(1),
+                    poll_threads: 2,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        });
+        let task = MsoTask::new(1);
+        let info_req = Json::obj(vec![("op", Json::Str("info".into()))]);
+        let mut conns: Vec<Client> = (0..4)
+            .map(|i| {
+                let mut c = Client::connect(&addr).unwrap();
+                if i == 3 {
+                    c.upgrade_binary().unwrap();
+                }
+                c
+            })
+            .collect();
+        let want = model.predict(&task.input[..15]);
+        let mut homes = Vec::new();
+        for c in conns.iter_mut() {
+            let info = c.request(&info_req).unwrap();
+            assert_eq!(
+                info.get("poll_threads").and_then(Json::as_f64),
+                Some(2.0)
+            );
+            homes.push(info.get("poll_thread").and_then(Json::as_f64).unwrap());
+            assert_eq!(
+                info.get("poll_rounds").and_then(Json::as_arr).map(|a| a.len()),
+                Some(2),
+                "one readiness-round counter per poll thread"
+            );
+            let got = c.predict(&task.input[..15]).unwrap();
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert!(
+            homes.contains(&0.0) && homes.contains(&1.0),
+            "round-robin dealing must spread connections across both \
+             poll threads, got homes {homes:?}"
+        );
+        let binary_conns = conns[3]
+            .request(&info_req)
+            .unwrap()
+            .get("binary_conns")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(binary_conns >= 1.0, "binary_conns = {binary_conns}");
+        drop(conns);
+        handle.join().unwrap();
     }
 }

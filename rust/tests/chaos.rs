@@ -1568,3 +1568,95 @@ fn model_budget_exhaustion_refuses_typed_and_allocates_nothing() {
         handle.join().unwrap();
     }
 }
+
+/// PR 10: killing ONE poll thread of a multi-thread event loop must not
+/// take the server down. The victim thread's connections each receive a
+/// final typed `unavailable` and a clean close; sibling threads' conns
+/// keep serving bit-identically; new connections are dealt around the
+/// dead thread; the per-thread observability stays readable.
+#[cfg(target_os = "linux")]
+#[test]
+fn poll_thread_kill_leaves_sibling_threads_serving() {
+    let (_g, _d) = fault_guard();
+    let model = make_model(Precision::F64);
+    let task = MsoTask::new(1);
+    // P = 2 poll threads on the event-loop transport, one shard
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server_model = Arc::clone(&model);
+    let handle = std::thread::spawn(move || {
+        serve_on_opts(
+            listener,
+            server_model,
+            Some(3),
+            ServeOpts {
+                shards: Some(1),
+                poll_threads: 2,
+                ..Default::default()
+            },
+        )
+        .map(|_| ())
+        .unwrap();
+    });
+    // round-robin dealing: conn 0 → poll thread 0, conn 1 → poll thread 1
+    let mut survivor = CClient::connect(&addr);
+    let mut victim = CClient::connect(&addr);
+    let home = |c: &mut CClient| {
+        c.info().get("poll_thread").and_then(Json::as_f64).unwrap() as usize
+    };
+    assert_eq!(home(&mut survivor), 0);
+    assert_eq!(home(&mut victim), 1);
+    // arm the kill; thread 1 consumes it at the head of its next
+    // readiness round — poke it awake with a ping (whose reply may or
+    // may not beat the kill, so read everything until EOF below)
+    fault::arm_poll_thread_kill(1);
+    victim
+        .writer
+        .write_all(op("ping").to_string_compact().as_bytes())
+        .unwrap();
+    victim.writer.write_all(b"\n").unwrap();
+    let mut saw_unavailable = false;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = victim
+            .reader
+            .read_line(&mut line)
+            .expect("typed goodbye then EOF, not a hang");
+        if n == 0 {
+            break; // clean close after the goodbye
+        }
+        let resp = parse(line.trim()).unwrap();
+        if resp.get("code").and_then(Json::as_str) == Some("unavailable") {
+            saw_unavailable = true;
+        }
+    }
+    assert!(
+        saw_unavailable,
+        "the victim connection must get a typed `unavailable` goodbye \
+         before the close"
+    );
+    // sibling thread 0's connection keeps serving, bit-identically
+    let want = model.predict(&task.input[..12]);
+    let out = survivor.output_of(&predict_req(&task.input[..12]));
+    for (a, b) in out.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // a NEW connection is dealt to a live thread and serves
+    let mut fresh = CClient::connect(&addr);
+    let out = fresh.output_of(&predict_req(&task.input[..12]));
+    for (a, b) in out.iter().zip(&want) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // observability survives the death: still two round counters
+    let info = fresh.info();
+    assert_eq!(info.get("poll_threads").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(
+        info.get("poll_rounds").and_then(Json::as_arr).map(|a| a.len()),
+        Some(2)
+    );
+    drop(victim);
+    drop(survivor);
+    drop(fresh);
+    handle.join().unwrap();
+}

@@ -13,15 +13,19 @@
 # reservoir bench (precision-ladder, sharded-serving, event-loop wire,
 # fused/online training, the PR6 checkpoint/restore + failover-storm
 # rows, the PR7 lane-mobility rows, the PR8 cluster-failover storm:
-# kill → detect → promote → redirect, and the PR9 multi-tenant rows:
-# registry mint throughput + 128 distinct models through one sweeper),
-# persisting the machine-readable perf snapshot as BENCH_pr9.json at
+# kill → detect → promote → redirect, the PR9 multi-tenant rows:
+# registry mint throughput + 128 distinct models through one sweeper,
+# and the PR10 wire-path rows: requests/sec at pipelined saturation
+# for JSON vs binary frames at P ∈ {1, 2, 4} poll threads),
+# persisting the machine-readable perf snapshot as BENCH_pr10.json at
 # the repo root — the committed perf-trajectory artifact
 # (BENCH_reservoir_run.json is kept as an uncommitted working copy for
 # tooling that greps the legacy name).
 # Fails if the precision, sharding, event-loop, training,
-# fault-tolerance, lane-mobility, or multi-tenant rows are missing,
-# non-finite, or report zero throughput.
+# fault-tolerance, lane-mobility, multi-tenant, or wire-path rows are
+# missing, non-finite, or report zero throughput — or if the PR10
+# acceptance gates fail: binary frames must beat JSON on requests/sec
+# at P=1, and P=4 poll threads must add rps over P=1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -37,18 +41,18 @@ cargo test -q --features plain-kernel --lib reservoir::batch
 echo "== cargo test -q --features fault-inject --test chaos (chaos suite) =="
 cargo test -q --features fault-inject --test chaos
 
-echo "== cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr9.json =="
+echo "== cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr10.json =="
 # fault-inject makes the failover-storm row use REAL contained sweeper
 # panics (without it the row still exists via teardown/reconnect cycles)
-cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr9.json
-cp BENCH_pr9.json BENCH_reservoir_run.json
+cargo bench --bench reservoir_run --features fault-inject -- --quick --json BENCH_pr10.json
+cp BENCH_pr10.json BENCH_reservoir_run.json
 
 echo "== bench sanity: precision/sharded/evloop/training/failover rows present, finite, non-zero =="
 if command -v python3 >/dev/null 2>&1; then
   python3 - <<'EOF'
 import json, math, sys
 
-doc = json.load(open("BENCH_pr9.json"))
+doc = json.load(open("BENCH_pr10.json"))
 rows = {r.get("name"): r for r in doc.get("results", [])}
 required = [
     "f32_batch8_N1000", "f64_batch8_N1000",
@@ -66,6 +70,10 @@ required = [
     "failover_cluster_N1000",
     "create_model_N1000", "tenant128_batch64_N1000",
     "derived_tenant128_batch64_N1000",
+    "wirepath_rps_p1_N1000_json", "wirepath_rps_p1_N1000_binary",
+    "wirepath_rps_p2_N1000_json", "wirepath_rps_p2_N1000_binary",
+    "wirepath_rps_p4_N1000_json", "wirepath_rps_p4_N1000_binary",
+    "derived_wirepath_N1000",
 ]
 for name in required:
     if name not in rows:
@@ -118,6 +126,22 @@ if d["create_models_per_sec"] <= 0:
 print(f"  tenants: mint {d['create_models_per_sec']:.3e} models/s, "
       f"128-model sweep {d['tenant_steps_per_sec']:.3e} steps/s "
       f"({d['ratio_vs_single_model']:.2f}x of single-model)")
+d = rows["derived_wirepath_N1000"]
+print(f"  wirepath: json {d['json_rps_p1']:.3e} req/s, "
+      f"binary {d['binary_rps_p1']:.3e} req/s at P=1 "
+      f"({d['binary_over_json_p1']:.2f}x) | scaling P=4/P=1: "
+      f"json {d['json_scaling_p4']:.2f}x, binary {d['binary_scaling_p4']:.2f}x")
+for key in ("json_rps_p1", "json_rps_p2", "json_rps_p4",
+            "binary_rps_p1", "binary_rps_p2", "binary_rps_p4"):
+    if d[key] <= 0:
+        sys.exit(f"FAIL: zero rps in derived_wirepath_N1000: {key}")
+if d["binary_rps_p1"] <= d["json_rps_p1"]:
+    sys.exit("FAIL: binary framing must beat JSON on requests/sec at P=1 "
+             f"(binary {d['binary_rps_p1']:.3e} <= json {d['json_rps_p1']:.3e})")
+if max(d["json_scaling_p4"], d["binary_scaling_p4"]) <= 1.0:
+    sys.exit("FAIL: P=4 poll threads must add rps over P=1 "
+             f"(json {d['json_scaling_p4']:.2f}x, "
+             f"binary {d['binary_scaling_p4']:.2f}x)")
 print("bench rows OK")
 EOF
 else
@@ -134,17 +158,21 @@ else
              migrate_lane_N1000 standby_delta_N1000 \
              derived_rebalance_N1000 failover_cluster_N1000 \
              create_model_N1000 tenant128_batch64_N1000 \
-             derived_tenant128_batch64_N1000; do
-    grep -q "\"$row\"" BENCH_pr9.json \
+             derived_tenant128_batch64_N1000 \
+             wirepath_rps_p1_N1000_json wirepath_rps_p1_N1000_binary \
+             wirepath_rps_p2_N1000_json wirepath_rps_p2_N1000_binary \
+             wirepath_rps_p4_N1000_json wirepath_rps_p4_N1000_binary \
+             derived_wirepath_N1000; do
+    grep -q "\"$row\"" BENCH_pr10.json \
       || { echo "FAIL: missing bench row $row"; exit 1; }
   done
-  if grep -qiE '(nan|inf)' BENCH_pr9.json; then
-    echo "FAIL: non-finite value in BENCH_pr9.json"; exit 1
+  if grep -qiE '(nan|inf)' BENCH_pr10.json; then
+    echo "FAIL: non-finite value in BENCH_pr10.json"; exit 1
   fi
   # the JSON writer prints integral values without decimals, so a zero
   # throughput is exactly `0` before the comma/EOL (0.97 must NOT match)
-  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr9.json; then
-    echo "FAIL: zero throughput row in BENCH_pr9.json"; exit 1
+  if grep -qE '(steps|rows)_per_sec": *(0(,|$)|-)' BENCH_pr10.json; then
+    echo "FAIL: zero throughput row in BENCH_pr10.json"; exit 1
   fi
   echo "bench rows OK (grep fallback)"
 fi
